@@ -1,0 +1,66 @@
+//! Hand-Gesture pipeline: the 4096-input model that exceeds the widest CAM
+//! word (2048 cells) and therefore exercises split-row segmentation with
+//! per-segment majority aggregation plus the weight-reload scheduler
+//! (6 loads per batch; DESIGN.md §4).
+//!
+//! Run: `cargo run --release --example hand_gesture [-- --limit N]`
+
+use picbnn::accel::{evaluate, Pipeline, PipelineOptions};
+use picbnn::bnn::model::MappedModel;
+use picbnn::cam::NoiseMode;
+use picbnn::data::{ModelMeta, TestSet};
+use picbnn::energy;
+use picbnn::util::cli::Args;
+
+fn main() {
+    let args = Args::parse(&[]);
+    let dir = picbnn::artifacts_dir();
+    let model = MappedModel::load(dir.join("hg_weights.bin")).expect("run `make artifacts`");
+    let test = TestSet::load(dir.join("hg_test.bin")).expect("test set");
+    let meta = ModelMeta::load(dir.join("hg_meta.json")).expect("meta");
+    let n = args.get_parse("limit", test.len()).min(test.len());
+
+    let l1 = &model.layers[0];
+    println!(
+        "HG model: {} -> {} -> {}; input layer split into {} segments of {} cells",
+        model.n_in(),
+        l1.n_out(),
+        model.n_classes(),
+        l1.n_seg(),
+        l1.seg_width
+    );
+    println!(
+        "capacity: {} rows of 2048 needed vs 64 available -> {} weight loads per batch\n",
+        l1.n_out() * l1.n_seg(),
+        (l1.n_out() * l1.n_seg()).div_ceil(64)
+    );
+
+    for (label, noise) in [("nominal", NoiseMode::Nominal), ("analog", NoiseMode::Analog)] {
+        let mut pipe = Pipeline::new(
+            &model,
+            PipelineOptions {
+                noise,
+                ..Default::default()
+            },
+        );
+        let mut votes = Vec::with_capacity(n);
+        for chunk in test.images[..n].chunks(256) {
+            votes.extend(pipe.classify_batch(chunk).into_iter().map(|(v, _)| v));
+        }
+        let acc = evaluate(&votes, &test.labels[..n]);
+        let stats = pipe.take_stats(n as u64);
+        let r = energy::report(&stats);
+        println!(
+            "{label:<8} top1 {:.4}  top2 {:.4}  |  {:.1} cycles/inf, {:.0} inf/s, {:.3} mW",
+            acc.top1,
+            acc.top2,
+            r.cycles_per_inference,
+            r.inf_per_s,
+            r.power_w * 1e3
+        );
+    }
+    println!(
+        "\npaper: CAM top1 0.935 vs software 0.99 (gap from binary-only input\nlayer); ours: CAM ~{:.3} vs software {:.3} — the same qualitative gap\nfrom split-row majority aggregation.",
+        meta.cam_nominal_top1, meta.software_top1
+    );
+}

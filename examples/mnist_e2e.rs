@@ -1,0 +1,118 @@
+//! **End-to-end driver** (DESIGN.md §6): the full PiC-BNN system on the
+//! MNIST-like workload.
+//!
+//! 1. Loads the trained + CAM-mapped binary MLP and the canonical test set
+//!    from artifacts (produced once by `make artifacts`).
+//! 2. Runs Algorithm 1 over the entire test set on the analog CAM
+//!    simulator (batched: voltage retunes amortised across images).
+//! 3. Cross-checks a sample against the PJRT execution backend (the
+//!    AOT-lowered JAX/Pallas graph) and the digital software baseline.
+//! 4. Reports the paper's headline metrics: accuracy, throughput, power,
+//!    energy efficiency.  Recorded in EXPERIMENTS.md.
+//!
+//! Run: `cargo run --release --example mnist_e2e [-- --limit N]`
+
+use picbnn::accel::{evaluate, Pipeline, PipelineOptions};
+use picbnn::baseline::digital_predict;
+use picbnn::bnn::model::MappedModel;
+use picbnn::cam::NoiseMode;
+use picbnn::data::{ModelMeta, TestSet};
+use picbnn::energy;
+use picbnn::runtime::InferEngine;
+use picbnn::util::cli::Args;
+use picbnn::util::Timer;
+
+fn main() {
+    let args = Args::parse(&[]);
+    let dir = picbnn::artifacts_dir();
+    let model =
+        MappedModel::load(dir.join("mnist_weights.bin")).expect("run `make artifacts` first");
+    let test = TestSet::load(dir.join("mnist_test.bin")).expect("test set");
+    let meta = ModelMeta::load(dir.join("mnist_meta.json")).expect("meta");
+    let n = args.get_parse("limit", test.len()).min(test.len());
+
+    println!("== PiC-BNN end-to-end: MNIST-like, {n} images ==\n");
+
+    // --- 1. software baseline (digital full-precision-output BNN) ---
+    let t = Timer::start();
+    let sw_correct = test.images[..n]
+        .iter()
+        .zip(&test.labels[..n])
+        .filter(|(x, &y)| digital_predict(&model, x) == y as usize)
+        .count();
+    let sw_acc = sw_correct as f64 / n as f64;
+    println!(
+        "software baseline     top1 {:.4}   (paper: {:.3})   [{:.2}s]",
+        sw_acc,
+        meta.paper_software_top1,
+        t.elapsed_s()
+    );
+
+    // --- 2. the device: analog CAM, Algorithm 1, batched ---
+    let t = Timer::start();
+    let mut pipe = Pipeline::new(&model, PipelineOptions::default());
+    let mut votes = Vec::with_capacity(n);
+    for chunk in test.images[..n].chunks(256) {
+        votes.extend(pipe.classify_batch(chunk).into_iter().map(|(v, _)| v));
+    }
+    let acc = evaluate(&votes, &test.labels[..n]);
+    let stats = pipe.take_stats(n as u64);
+    println!(
+        "PiC-BNN (analog sim)  top1 {:.4}   top2 {:.4}   (paper: {:.3})   [{:.2}s]",
+        acc.top1,
+        acc.top2,
+        meta.paper_cam_top1,
+        t.elapsed_s()
+    );
+
+    // --- 3. cross-check vs the PJRT (AOT JAX/Pallas) backend ---
+    let mut nominal = Pipeline::new(
+        &model,
+        PipelineOptions {
+            noise: NoiseMode::Nominal,
+            ..Default::default()
+        },
+    );
+    match InferEngine::load("mnist", &model) {
+        Ok(engine) => {
+            let k = 64.min(n);
+            let pjrt = engine.classify_batch(&test.images[..k]).expect("pjrt run");
+            let cam = nominal.classify_batch(&test.images[..k]);
+            let agree = pjrt == cam;
+            println!(
+                "PJRT backend ({})  agrees with nominal CAM on {k}/{k} images: {}",
+                engine.platform(),
+                if agree { "YES (bit-exact)" } else { "NO" }
+            );
+            assert!(agree, "execution backends diverged");
+        }
+        Err(e) => println!("PJRT backend unavailable ({e}); skipped cross-check"),
+    }
+
+    // --- 4. hardware report (Table II) ---
+    let r = energy::report(&stats);
+    println!("\n== hardware report (vs paper Table II) ==");
+    println!("throughput      {:>10.0} inf/s     (paper 560000)", r.inf_per_s);
+    println!("power           {:>10.3} mW        (paper 0.8)", r.power_w * 1e3);
+    println!(
+        "efficiency      {:>10.0} M inf/s/W (paper 703)",
+        r.inf_per_s_per_w / 1e6
+    );
+    println!(
+        "efficiency      {:>10.0} TOPS/W    (paper '184 TOPs/s')",
+        r.ops_per_w / 1e12
+    );
+    println!("cycles/inf      {:>10.1}           (paper ~44.6 implied)", r.cycles_per_inference);
+    println!("macro area      {:>10.2} mm²       (paper 0.87)", r.macro_area_mm2);
+    println!("SoC area        {:>10.2} mm²       (paper 2.38)", r.soc_area_mm2);
+    let e = r.energy;
+    println!(
+        "\nenergy breakdown: precharge {:.1}% | SL {:.1}% | MLSA {:.1}% | writes {:.1}% | retune {:.1}% | leakage {:.1}%",
+        100.0 * e.precharge / e.total(),
+        100.0 * e.searchlines / e.total(),
+        100.0 * e.mlsa / e.total(),
+        100.0 * e.writes / e.total(),
+        100.0 * e.retunes / e.total(),
+        100.0 * e.leakage / e.total()
+    );
+}

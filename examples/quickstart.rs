@@ -1,0 +1,41 @@
+//! Quickstart: load the trained MNIST model, classify a handful of test
+//! images on the simulated CAM, and print what the device saw.
+//!
+//! Run with: `cargo run --release --example quickstart` (after
+//! `make artifacts`).
+
+use picbnn::accel::{Pipeline, PipelineOptions};
+use picbnn::bnn::model::MappedModel;
+use picbnn::data::TestSet;
+
+fn main() {
+    let dir = picbnn::artifacts_dir();
+    let model = MappedModel::load(dir.join("mnist_weights.bin"))
+        .expect("run `make artifacts` first");
+    let test = TestSet::load(dir.join("mnist_test.bin")).expect("test set");
+    println!(
+        "loaded binary MLP {} -> {} -> {} (schedule: {} output-layer executions)",
+        model.n_in(),
+        model.layers[0].n_out(),
+        model.n_classes(),
+        model.schedule.len()
+    );
+
+    // the full analog device: Monte-Carlo variation + per-evaluation noise
+    let mut pipe = Pipeline::new(&model, PipelineOptions::default());
+
+    let n = 8;
+    let results = pipe.classify_batch(&test.images[..n]);
+    for (i, (votes, pred)) in results.iter().enumerate() {
+        let truth = test.labels[i];
+        let mark = if *pred == truth as usize { "✓" } else { "✗" };
+        println!("image {i}: true {truth}  predicted {pred} {mark}  votes {votes:?}");
+    }
+
+    let stats = pipe.take_stats(n as u64);
+    println!(
+        "\ndevice: {:.1} cycles/inference, {:.0} modelled inferences/s",
+        stats.cycles_per_inference(),
+        stats.inferences_per_s()
+    );
+}

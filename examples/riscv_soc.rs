@@ -1,0 +1,92 @@
+//! SoC demo: the RV32I control CPU drives the CAM macro through its
+//! memory-mapped register file, running the Algorithm-1 threshold sweep as
+//! firmware — the paper's "RISC-V CPU that controls the SoC" ([41]),
+//! end to end, for one real MNIST image.
+//!
+//! Run: `cargo run --release --example riscv_soc`
+
+use picbnn::accel::VoltageController;
+use picbnn::analog::Pvt;
+use picbnn::bnn::infer::{digital_hidden, digital_output_hd, sweep_votes};
+use picbnn::bnn::mapping::{program_row, segment_query};
+use picbnn::bnn::model::MappedModel;
+use picbnn::cam::{CamArray, CamConfig, NoiseMode};
+use picbnn::data::TestSet;
+use picbnn::riscv::cpu::MmioDevice;
+use picbnn::riscv::mmio::{CamMmio, CMD_WRITE_ROW, DATA_BASE, REG_CMD, REG_ROW_ADDR};
+use picbnn::riscv::{assemble, firmware};
+use picbnn::util::bitops::BitVec;
+
+fn poke_bits(dev: &mut CamMmio, base: u32, bits: &BitVec) {
+    for w in 0..bits.len().div_ceil(32) {
+        let mut word = 0u32;
+        for b in 0..32 {
+            let i = w * 32 + b;
+            if i < bits.len() && bits.get(i) {
+                word |= 1 << b;
+            }
+        }
+        dev.write(base + 4 * w as u32, word);
+    }
+}
+
+fn widen(bits: &BitVec, width: usize) -> BitVec {
+    let mut out = BitVec::ones(width);
+    for i in 0..bits.len() {
+        if !bits.get(i) {
+            out.set(i, false);
+        }
+    }
+    out
+}
+
+fn main() {
+    let dir = picbnn::artifacts_dir();
+    let model = MappedModel::load(dir.join("mnist_weights.bin")).expect("run `make artifacts`");
+    let test = TestSet::load(dir.join("mnist_test.bin")).expect("test set");
+    let out_layer = model.layers.last().unwrap();
+    let image = &test.images[0];
+    let truth = test.labels[0];
+
+    let fw = assemble(firmware::SWEEP_ASM).unwrap();
+    println!("firmware: {} bytes of RV32I ({} instructions)", fw.len(), fw.len() / 4);
+
+    // hidden layer on the host (the firmware demo covers the output sweep —
+    // the part the paper repeats 33×)
+    let hidden = digital_hidden(&model.layers[0], image);
+
+    // SoC: CAM in the 512×256 config behind the register file
+    let cfg = CamConfig::W512x256;
+    let mut dev = CamMmio::new(CamArray::new(cfg, Pvt::nominal(), NoiseMode::Nominal, 0));
+    for j in 0..out_layer.n_out() {
+        let row = widen(&program_row(out_layer, 0, j), cfg.width());
+        poke_bits(&mut dev, DATA_BASE, &row);
+        dev.write(REG_ROW_ADDR, j as u32);
+        dev.write(REG_CMD, CMD_WRITE_ROW);
+    }
+    println!("programmed {} class rows via MMIO", out_layer.n_out());
+
+    // calibrate the Algorithm-1 schedule and hand it to the firmware
+    let ctl = VoltageController::new(cfg.width(), Pvt::nominal());
+    let targets: Vec<u32> = model.schedule.iter().map(|&t| t as u32).collect();
+    let points = ctl.calibrate_schedule(&targets);
+    let query = widen(&segment_query(out_layer, 0, &hidden), cfg.width());
+
+    let (votes, instret) =
+        firmware::run_sweep(&mut dev, &points, out_layer.n_out(), &query).expect("firmware");
+    println!("firmware executed {instret} instructions for the 33-threshold sweep");
+    println!("votes: {votes:?}");
+    let pred = votes
+        .iter()
+        .enumerate()
+        .max_by_key(|&(i, &v)| (v, usize::MAX - i))
+        .unwrap()
+        .0;
+    println!("prediction {pred} (truth {truth})");
+
+    // cross-check against the digital reference
+    let hd = digital_output_hd(out_layer, &hidden);
+    let want = sweep_votes(&hd, &model.schedule);
+    assert_eq!(votes, want, "firmware votes must match the digital reference");
+    println!("firmware output matches the digital reference bit-for-bit ✓");
+}

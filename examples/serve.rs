@@ -1,0 +1,59 @@
+//! Batched inference service demo: producer threads fire requests at the
+//! dynamic batcher in front of the CAM pipeline; reports latency
+//! percentiles and throughput for several batching policies — the
+//! batching/latency dial of paper §V-B as a deployment would see it.
+//!
+//! Run: `cargo run --release --example serve [-- --requests N]`
+
+use std::time::Duration;
+
+use picbnn::accel::BatchPolicy;
+use picbnn::accel::PipelineOptions;
+use picbnn::benchkit::Table;
+use picbnn::bnn::model::MappedModel;
+use picbnn::data::TestSet;
+use picbnn::server::serve_workload;
+use picbnn::util::cli::Args;
+use picbnn::util::Timer;
+
+fn main() {
+    let args = Args::parse(&[]);
+    let dir = picbnn::artifacts_dir();
+    let model = MappedModel::load(dir.join("mnist_weights.bin")).expect("run `make artifacts`");
+    let test = TestSet::load(dir.join("mnist_test.bin")).expect("test set");
+    let requests = args.get_parse("requests", 4000usize);
+    let images: Vec<_> = (0..requests)
+        .map(|i| test.images[i % test.len()].clone())
+        .collect();
+
+    let mut table = Table::new(
+        "batching policy vs latency/throughput (4 producer threads)",
+        &["max batch", "served", "batches", "mean batch", "p50 ms", "p99 ms", "host req/s"],
+    );
+    for max_batch in [1usize, 16, 64, 256] {
+        let t = Timer::start();
+        let (responses, metrics) = serve_workload(
+            &model,
+            PipelineOptions::default(),
+            BatchPolicy {
+                max_batch,
+                max_wait: Duration::from_millis(1),
+            },
+            &images,
+            4,
+            Duration::ZERO,
+        );
+        table.row(vec![
+            max_batch.to_string(),
+            responses.len().to_string(),
+            metrics.batches.to_string(),
+            format!("{:.1}", metrics.mean_batch()),
+            format!("{:.2}", metrics.p50_ms()),
+            format!("{:.2}", metrics.p99_ms()),
+            format!("{:.0}", responses.len() as f64 / t.elapsed_s()),
+        ]);
+    }
+    table.print();
+    println!("\nlarger batches amortise the 33 voltage retunes + weight loads per");
+    println!("batch (higher throughput) at the cost of queueing latency.");
+}

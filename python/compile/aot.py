@@ -1,0 +1,127 @@
+"""AOT lowering: jax model -> HLO *text* artifacts for the rust runtime.
+
+Interchange format is HLO text, NOT a serialized HloModuleProto: jax >= 0.5
+emits protos with 64-bit instruction ids which xla_extension 0.5.1 (the
+version the published `xla` 0.1.6 crate links) rejects; the text parser
+reassigns ids and round-trips cleanly (see /opt/xla-example/README.md).
+
+Artifacts (consumed by rust/src/runtime/):
+    {name}_infer.hlo.txt      full Algorithm-1 inference graph for a fixed
+                              batch: params = (x, w1, q1, w2, q2, schedule)
+                              -> (votes i32, pred i32)
+    matchline_fire.hlo.txt    the L1 matchline kernel standalone (cross-
+                              validation vectors vs the rust analog model)
+    xnor_dot.hlo.txt          the L1 binary-dot kernel standalone
+
+Run once via `make artifacts` (after train.py has produced the weights);
+python never runs on the request path.
+"""
+
+import argparse
+import json
+import os
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax._src.lib import xla_client as xc
+
+from . import model as modelmod
+from . import physics
+from .kernels import matchline as k_ml
+from .kernels import xnor_popcount as k_xp
+
+BATCH = 64  # fixed AOT batch; the rust coordinator pads partial batches
+
+
+def to_hlo_text(lowered) -> str:
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def lower_infer(meta: dict) -> str:
+    """Lower forward_cam_param for one model topology."""
+    n_in = meta["n_in"]
+    n_h = meta["n_hidden"]
+    n_cls = meta["n_classes"]
+    bounds = tuple(meta["seg_bounds_l1"])
+    sw1 = meta["seg_width_l1"]
+    sw2 = meta["seg_width_l2"]
+    n_seg = len(bounds) - 1
+    k = len(meta["schedule"])
+
+    def fn(x, w1, q1, w2, q2, schedule):
+        votes, pred = modelmod.forward_cam_param(
+            x, w1, q1, w2, q2, bounds, sw1, sw2, schedule
+        )
+        return votes, pred
+
+    spec = lambda shape, dt=jnp.float32: jax.ShapeDtypeStruct(shape, dt)
+    lowered = jax.jit(fn).lower(
+        spec((BATCH, n_in)),
+        spec((n_h, n_in)),
+        spec((n_seg, n_h)),
+        spec((n_cls, n_h)),
+        spec((1, n_cls)),
+        spec((k,)),
+    )
+    return to_hlo_text(lowered)
+
+
+def lower_matchline(batch=256, rows=64, n_cells=256) -> str:
+    def fn(m, v):
+        return (k_ml.matchline_fire(m, v, n_cells=n_cells),)
+
+    lowered = jax.jit(fn).lower(
+        jax.ShapeDtypeStruct((batch, rows), jnp.float32),
+        jax.ShapeDtypeStruct((3,), jnp.float32),
+    )
+    return to_hlo_text(lowered)
+
+
+def lower_xnor_dot(batch=64, m=128, n=1024) -> str:
+    def fn(x, w):
+        return (k_xp.xnor_popcount_dot(x, w),)
+
+    lowered = jax.jit(fn).lower(
+        jax.ShapeDtypeStruct((batch, n), jnp.float32),
+        jax.ShapeDtypeStruct((m, n), jnp.float32),
+    )
+    return to_hlo_text(lowered)
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--out", default="../artifacts")
+    args = ap.parse_args()
+    os.makedirs(args.out, exist_ok=True)
+
+    for name in ("mnist", "hg"):
+        meta_path = os.path.join(args.out, f"{name}_meta.json")
+        if not os.path.exists(meta_path):
+            print(f"[aot] skip {name}: no {meta_path} (run compile.train first)")
+            continue
+        with open(meta_path) as f:
+            meta = json.load(f)
+        text = lower_infer(meta)
+        out = os.path.join(args.out, f"{name}_infer.hlo.txt")
+        with open(out, "w") as f:
+            f.write(text)
+        print(f"[aot] wrote {out} ({len(text)} chars, batch={BATCH})")
+
+    for fname, fn in (
+        ("matchline_fire.hlo.txt", lower_matchline),
+        ("xnor_dot.hlo.txt", lower_xnor_dot),
+    ):
+        out = os.path.join(args.out, fname)
+        text = fn()
+        with open(out, "w") as f:
+            f.write(text)
+        print(f"[aot] wrote {out} ({len(text)} chars)")
+
+
+if __name__ == "__main__":
+    main()

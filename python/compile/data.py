@@ -1,0 +1,149 @@
+"""Synthetic dataset generators (MNIST-like digits, Hand-Gesture-like masks).
+
+The paper evaluates on MNIST (28x28, 10 classes) and the Kaggle Hand Gesture
+dataset (64x64, 20 classes).  Neither is fetchable in this offline
+environment, so we generate procedural stand-ins with the same shapes and
+class counts (DESIGN.md §1).  The generators are deterministic from a seed;
+train.py exports the *test split* to artifacts/ so the rust side evaluates
+the exact same images the model was trained against.
+
+All images are binary, returned as +/-1 float32 (the BNN input code).
+"""
+
+import numpy as np
+
+# ----------------------------------------------------------------------
+# MNIST-like digits: 5x7 pixel-font glyphs, randomly placed/scaled/rotated
+# into 28x28, plus salt-and-pepper noise.
+# ----------------------------------------------------------------------
+
+_GLYPHS = {
+    0: ["#####", "#...#", "#...#", "#...#", "#...#", "#...#", "#####"],
+    1: ["..#..", ".##..", "..#..", "..#..", "..#..", "..#..", ".###."],
+    2: ["#####", "....#", "....#", "#####", "#....", "#....", "#####"],
+    3: ["#####", "....#", "....#", ".####", "....#", "....#", "#####"],
+    4: ["#...#", "#...#", "#...#", "#####", "....#", "....#", "....#"],
+    5: ["#####", "#....", "#....", "#####", "....#", "....#", "#####"],
+    6: ["#####", "#....", "#....", "#####", "#...#", "#...#", "#####"],
+    7: ["#####", "....#", "...#.", "..#..", "..#..", ".#...", ".#..."],
+    8: ["#####", "#...#", "#...#", "#####", "#...#", "#...#", "#####"],
+    9: ["#####", "#...#", "#...#", "#####", "....#", "....#", "#####"],
+}
+
+
+def _glyph_array(digit: int) -> np.ndarray:
+    rows = _GLYPHS[digit]
+    return np.array([[1.0 if ch == "#" else 0.0 for ch in row] for row in rows],
+                    dtype=np.float32)  # (7, 5)
+
+
+def _render_batch(glyphs, size, scales, angles, shifts, noise_p, rng):
+    """Rasterise a batch of (gh, gw) glyphs into (size, size) binary images.
+
+    Inverse-map each target pixel through rotation+scale+shift back into
+    glyph coordinates, nearest-sample; then flip pixels with prob noise_p.
+    """
+    n = len(glyphs)
+    gh, gw = glyphs[0].shape
+    yy, xx = np.meshgrid(np.arange(size), np.arange(size), indexing="ij")
+    cy = cx = (size - 1) / 2.0
+    out = np.zeros((n, size, size), dtype=np.float32)
+    for i in range(n):
+        s, a = scales[i], angles[i]
+        dy, dx = shifts[i]
+        ca, sa = np.cos(-a), np.sin(-a)
+        # target -> centred -> unrotate -> unscale -> glyph coords
+        ty = (yy - cy - dy)
+        tx = (xx - cx - dx)
+        gy = (ca * ty - sa * tx) / s / (size / (gh + 2.0)) + (gh - 1) / 2.0
+        gx = (sa * ty + ca * tx) / s / (size / (gw + 2.0)) + (gw - 1) / 2.0
+        iy = np.rint(gy).astype(np.int64)
+        ix = np.rint(gx).astype(np.int64)
+        valid = (iy >= 0) & (iy < gh) & (ix >= 0) & (ix < gw)
+        img = np.zeros((size, size), dtype=np.float32)
+        img[valid] = glyphs[i][iy[valid], ix[valid]]
+        out[i] = img
+    flips = rng.random(out.shape) < noise_p
+    out = np.where(flips, 1.0 - out, out)
+    return out
+
+
+def make_mnist_like(n_train=8000, n_test=2000, seed=7, noise_p=0.06):
+    """Synthetic MNIST: (x_train, y_train, x_test, y_test); x in {-1,+1}^784."""
+    rng = np.random.default_rng(seed)
+    n = n_train + n_test
+    labels = rng.integers(0, 10, n)
+    glyphs = [_glyph_array(int(d)) for d in labels]
+    scales = rng.uniform(0.75, 1.15, n)
+    angles = rng.uniform(-0.22, 0.22, n)  # ~ +/-12.5 deg
+    shifts = rng.uniform(-3.0, 3.0, (n, 2))
+    imgs = _render_batch(glyphs, 28, scales, angles, shifts, noise_p, rng)
+    x = (imgs.reshape(n, 784) * 2.0 - 1.0).astype(np.float32)
+    y = labels.astype(np.int32)
+    return x[:n_train], y[:n_train], x[n_train:], y[n_train:]
+
+
+# ----------------------------------------------------------------------
+# Hand-Gesture-like: 20 classes = 20 distinct finger-raise patterns on a
+# parametric hand silhouette (palm ellipse + up to 5 finger capsules),
+# rendered at 64x64 with pose jitter + noise.
+# ----------------------------------------------------------------------
+
+# 20 of the 32 possible 5-finger patterns, chosen to be mutually distinct.
+_FINGER_PATTERNS = [
+    (0, 0, 0, 0, 1), (0, 0, 0, 1, 1), (0, 0, 1, 1, 1), (0, 1, 1, 1, 1),
+    (1, 1, 1, 1, 1), (1, 0, 0, 0, 0), (1, 1, 0, 0, 0), (1, 1, 1, 0, 0),
+    (1, 1, 1, 1, 0), (0, 1, 0, 1, 0), (1, 0, 1, 0, 1), (0, 0, 1, 0, 0),
+    (0, 1, 1, 0, 0), (0, 0, 0, 1, 0), (1, 0, 0, 0, 1), (0, 1, 0, 0, 1),
+    (1, 0, 1, 1, 0), (0, 1, 1, 1, 0), (1, 1, 0, 1, 1), (1, 0, 0, 1, 0),
+]
+_FINGER_ANGLES = np.linspace(-0.75, 0.75, 5)  # radians around 'up'
+
+
+def _render_hand(size, pattern, palm_r, f_len, f_w, angle, shift, rng):
+    yy, xx = np.meshgrid(np.arange(size, dtype=np.float32),
+                         np.arange(size, dtype=np.float32), indexing="ij")
+    cy = size * 0.62 + shift[0]
+    cx = size * 0.50 + shift[1]
+    img = ((yy - cy) ** 2 / (palm_r * 1.15) ** 2
+           + (xx - cx) ** 2 / palm_r ** 2) <= 1.0
+    for k, up in enumerate(pattern):
+        if not up:
+            continue
+        a = _FINGER_ANGLES[k] + angle
+        # finger = capsule from palm edge outward
+        base_y = cy - palm_r * 0.9 * np.cos(_FINGER_ANGLES[k])
+        base_x = cx + palm_r * 0.9 * np.sin(_FINGER_ANGLES[k])
+        tip_y = base_y - f_len * np.cos(a)
+        tip_x = base_x + f_len * np.sin(a)
+        # distance from each pixel to the segment base->tip
+        vy, vx = tip_y - base_y, tip_x - base_x
+        L2 = vy * vy + vx * vx + 1e-6
+        t = np.clip(((yy - base_y) * vy + (xx - base_x) * vx) / L2, 0.0, 1.0)
+        d2 = (yy - (base_y + t * vy)) ** 2 + (xx - (base_x + t * vx)) ** 2
+        img |= d2 <= f_w ** 2
+    return img.astype(np.float32)
+
+
+def make_hg_like(n_train=4000, n_test=1000, seed=11, noise_p=0.015):
+    """Synthetic hand gestures: x in {-1,+1}^4096, 20 classes."""
+    rng = np.random.default_rng(seed)
+    n = n_train + n_test
+    labels = rng.integers(0, 20, n)
+    imgs = np.zeros((n, 64, 64), dtype=np.float32)
+    for i in range(n):
+        pat = _FINGER_PATTERNS[labels[i]]
+        imgs[i] = _render_hand(
+            64, pat,
+            palm_r=rng.uniform(9.0, 12.0),
+            f_len=rng.uniform(16.0, 22.0),
+            f_w=rng.uniform(2.2, 3.2),
+            angle=rng.uniform(-0.12, 0.12),
+            shift=rng.uniform(-3.0, 3.0, 2),
+            rng=rng,
+        )
+    flips = rng.random(imgs.shape) < noise_p
+    imgs = np.where(flips, 1.0 - imgs, imgs)
+    x = (imgs.reshape(n, 4096) * 2.0 - 1.0).astype(np.float32)
+    y = labels.astype(np.int32)
+    return x[:n_train], y[:n_train], x[n_train:], y[n_train:]

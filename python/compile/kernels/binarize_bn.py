@@ -1,0 +1,50 @@
+"""L1 Pallas kernel: batch-norm + sign binarization (training-time layer).
+
+Used by the L2 model's reference forward pass and by train.py's export
+validation: sign(BN(y)) must equal sign(flip*y + C) after folding, which is
+what the CAM implements with C_j match/mismatch padding cells.
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _bn_sign_kernel(y_ref, p_ref, o_ref, *, eps):
+    # y_ref: (BB, M); p_ref: (4, M) rows = gamma, beta, mean, var
+    y = y_ref[...]
+    gamma = p_ref[0, :]
+    beta = p_ref[1, :]
+    mean = p_ref[2, :]
+    var = p_ref[3, :]
+    yhat = (y - mean[None, :]) / jnp.sqrt(var[None, :] + eps) * gamma[None, :] + beta[None, :]
+    o_ref[...] = jnp.where(yhat >= 0.0, 1.0, -1.0).astype(jnp.float32)
+
+
+@functools.partial(jax.jit, static_argnames=("block_b", "eps"))
+def binarize_bn(y, gamma, beta, mean, var, *, eps=1e-5, block_b=64):
+    """sign(batchnorm(y)) with sign(0) := +1.
+
+    y: (B, M) float32 pre-activations; BN params: (M,) each.
+    Returns (B, M) float32 in {-1.0, +1.0}.
+    """
+    b0, m = y.shape
+    bb = min(block_b, b0)
+    pad_b = (-b0) % bb
+    if pad_b:
+        y = jnp.concatenate([y, jnp.zeros((pad_b, m), y.dtype)], axis=0)
+    b = b0 + pad_b
+    params = jnp.stack([gamma, beta, mean, var]).astype(jnp.float32)  # (4, M)
+    return pl.pallas_call(
+        functools.partial(_bn_sign_kernel, eps=eps),
+        grid=(b // bb,),
+        in_specs=[
+            pl.BlockSpec((bb, m), lambda i: (i, 0)),
+            pl.BlockSpec((4, m), lambda i: (0, 0)),
+        ],
+        out_specs=pl.BlockSpec((bb, m), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((b, m), jnp.float32),
+        interpret=True,
+    )(y.astype(jnp.float32), params)[:b0]

@@ -1,0 +1,111 @@
+"""L1 Pallas kernel: functional matchline/MLSA model.
+
+Maps per-row mismatch counts + the three user-configurable voltages
+(V_ref, V_eval, V_st) to MLSA fire bits, using the closed-form discharge
+model of python/compile/physics.py.  This is the deterministic (nominal-PVT)
+twin of the rust analog simulator's hot path; the two are cross-validated by
+vectors generated in python/tests/test_matchline.py and consumed by
+rust/tests/analog_cross_check.rs.
+
+The threshold-sweep variant evaluates the whole Algorithm-1 schedule in one
+kernel invocation: silicon repeats the search serially re-tuning voltages;
+a vector machine broadcasts the popcount against a threshold lane instead —
+the honest TPU translation of "multiple executions" (DESIGN.md §3).
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from .. import physics
+
+
+def _tol_expr(vref, veval, vst, n_cells):
+    """HD tolerance, branch-free (matches ref.hd_tolerance)."""
+    c_ml = physics.C_ML_PER_CELL * n_cells
+    g = physics.K_G * jnp.maximum(veval - physics.V_TH, 0.0)
+    ts = physics.TAU0 * physics.V_DD / jnp.maximum(vst - physics.V_TH, physics.EPS)
+    denom = g * ts
+    tol = jnp.where(
+        denom > 0.0,
+        c_ml
+        * jnp.log(physics.V_DD / jnp.minimum(vref, physics.V_DD - 1e-9))
+        / jnp.maximum(denom, 1e-30),
+        jnp.full_like(denom, float(n_cells)),
+    )
+    return jnp.where(vref >= physics.V_DD, jnp.zeros_like(tol), tol)
+
+
+def _fire_kernel(m_ref, v_ref, o_ref, *, n_cells):
+    # m_ref: (BB, R) mismatch counts; v_ref: (1, 3) voltages -> o_ref: (BB, R)
+    m = m_ref[...]
+    vref, veval, vst = v_ref[0, 0], v_ref[0, 1], v_ref[0, 2]
+    tol = _tol_expr(vref, veval, vst, n_cells)
+    o_ref[...] = (m <= tol).astype(jnp.float32)
+
+
+@functools.partial(jax.jit, static_argnames=("n_cells", "block_b"))
+def matchline_fire(mismatches, voltages, *, n_cells, block_b=64):
+    """MLSA decisions for a batch of searches under one voltage setting.
+
+    mismatches: (B, R) float32 per-row mismatch counts.
+    voltages:   (3,)   float32 (V_ref, V_eval, V_st).
+    Returns (B, R) float32 in {0.0, 1.0}.
+    """
+    b0, r = mismatches.shape
+    bb = min(block_b, b0)
+    pad_b = (-b0) % bb
+    if pad_b:
+        mismatches = jnp.concatenate(
+            [mismatches, jnp.zeros((pad_b, r), mismatches.dtype)], axis=0)
+    b = b0 + pad_b
+    v = voltages.reshape(1, 3).astype(jnp.float32)
+    return pl.pallas_call(
+        functools.partial(_fire_kernel, n_cells=n_cells),
+        grid=(b // bb,),
+        in_specs=[
+            pl.BlockSpec((bb, r), lambda i: (i, 0)),
+            pl.BlockSpec((1, 3), lambda i: (0, 0)),
+        ],
+        out_specs=pl.BlockSpec((bb, r), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((b, r), jnp.float32),
+        interpret=True,
+    )(mismatches.astype(jnp.float32), v)[:b0]
+
+
+def _votes_kernel(hd_ref, sched_ref, o_ref):
+    # hd_ref: (BB, R); sched_ref: (1, K) -> o_ref: (BB, R) vote counts
+    hd = hd_ref[...]
+    sched = sched_ref[...]  # (1, K)
+    fired = hd[:, :, None] <= sched[None, 0, :]  # (BB, R, K)
+    o_ref[...] = fired.sum(axis=-1).astype(jnp.float32)
+
+
+@functools.partial(jax.jit, static_argnames=("block_b",))
+def threshold_sweep_votes(hd, schedule, *, block_b=64):
+    """Vote counts over the Algorithm-1 HD-threshold schedule, one call.
+
+    hd: (B, R) float32;  schedule: (K,) float32 thresholds.
+    Returns (B, R) float32 vote counts (0..K).
+    """
+    b0, r = hd.shape
+    k = schedule.shape[0]
+    bb = min(block_b, b0)
+    pad_b = (-b0) % bb
+    if pad_b:
+        hd = jnp.concatenate([hd, jnp.zeros((pad_b, r), hd.dtype)], axis=0)
+    b = b0 + pad_b
+    sched = schedule.reshape(1, k).astype(jnp.float32)
+    return pl.pallas_call(
+        _votes_kernel,
+        grid=(b // bb,),
+        in_specs=[
+            pl.BlockSpec((bb, r), lambda i: (i, 0)),
+            pl.BlockSpec((1, k), lambda i: (0, 0)),
+        ],
+        out_specs=pl.BlockSpec((bb, r), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((b, r), jnp.float32),
+        interpret=True,
+    )(hd.astype(jnp.float32), sched)[:b0]

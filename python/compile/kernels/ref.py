@@ -1,0 +1,82 @@
+"""Pure-jnp oracles for every Pallas kernel.
+
+These are the correctness ground truth: each kernel in this package must
+match its oracle bit-for-bit (integer outputs) or to float tolerance
+(analog model outputs) under pytest + hypothesis sweeps.
+"""
+
+import jax.numpy as jnp
+
+from .. import physics
+
+
+def xnor_popcount_dot(x, w):
+    """Binary dot product via XNOR+POPCOUNT, expressed on +/-1 floats.
+
+    x: (B, N) in {-1, +1};  w: (M, N) in {-1, +1}.
+    Returns (B, M) float32: sum_i XNOR(w_mi, x_bi) in +/-1 arithmetic,
+    i.e. exactly x @ w.T (each agreeing bit contributes +1, else -1).
+    """
+    return jnp.matmul(x, w.T).astype(jnp.float32)
+
+
+def hamming_distance(x, w):
+    """HD between +/-1 codes: number of disagreeing positions. (B, M)."""
+    n = x.shape[-1]
+    dot = xnor_popcount_dot(x, w)
+    return ((n - dot) / 2.0).astype(jnp.float32)
+
+
+def hd_tolerance(vref, veval, vst, n_cells):
+    """Vectorised closed-form HD tolerance (see python/compile/physics.py)."""
+    c_ml = physics.C_ML_PER_CELL * n_cells
+    g = physics.K_G * jnp.maximum(veval - physics.V_TH, 0.0)
+    ts = physics.TAU0 * physics.V_DD / jnp.maximum(vst - physics.V_TH, physics.EPS)
+    denom = g * ts
+    tol = jnp.where(
+        denom > 0.0,
+        c_ml
+        * jnp.log(physics.V_DD / jnp.minimum(vref, physics.V_DD - 1e-9))
+        / jnp.maximum(denom, 1e-30),
+        jnp.asarray(float(n_cells)),
+    )
+    return jnp.where(vref >= physics.V_DD, 0.0, tol)
+
+
+def matchline_fire(mismatches, vref, veval, vst, n_cells):
+    """MLSA decision: 1.0 where the row fires (m <= hd_tol), else 0.0."""
+    tol = hd_tolerance(vref, veval, vst, n_cells)
+    return (mismatches <= tol).astype(jnp.float32)
+
+
+def binarize_bn(y, gamma, beta, mean, var, eps=1e-5):
+    """sign(batchnorm(y)) with sign(0) := +1, on float pre-activations."""
+    yhat = (y - mean) / jnp.sqrt(var + eps) * gamma + beta
+    return jnp.where(yhat >= 0.0, 1.0, -1.0).astype(jnp.float32)
+
+
+def fold_bn_constant(gamma, beta, mean, var, eps=1e-5):
+    """Fold BN into (flip, C): sign(BN(y)) == sign(flip * y + C).
+
+    flip in {-1, +1} handles gamma's sign (gamma == 0 treated as making the
+    neuron constant: sign(beta)).  For gamma != 0,
+    C = sign(gamma) * (beta*sqrt(var+eps)/gamma - mean) and the folded
+    pre-activation is flip*y + C.
+    """
+    s = jnp.sqrt(var + eps)
+    safe_gamma = jnp.where(gamma == 0.0, 1.0, gamma)
+    c = beta * s / safe_gamma - mean
+    flip = jnp.where(gamma < 0.0, -1.0, 1.0)
+    c = flip * c
+    # gamma == 0: output is sign(beta) regardless of y -> huge C carries it.
+    c = jnp.where(gamma == 0.0, jnp.where(beta >= 0.0, 1e9, -1e9), c)
+    return flip, c
+
+
+def output_layer_votes(hd, schedule):
+    """Thermometer readout: votes_c = #{tol in schedule : hd_c <= tol}.
+
+    hd: (B, M) float; schedule: (K,) float.  Returns (B, M) int32.
+    """
+    fired = hd[..., None] <= jnp.asarray(schedule, dtype=hd.dtype)[None, None, :]
+    return fired.sum(axis=-1).astype(jnp.int32)

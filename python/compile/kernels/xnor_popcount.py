@@ -1,0 +1,77 @@
+"""L1 Pallas kernel: binary dot product (XNOR + POPCOUNT) as a tiled matvec.
+
+The paper's CAM computes one neuron's XNOR-popcount per row per cycle in
+analog; the TPU translation (DESIGN.md §3) is a VMEM-tiled binary matmul:
+activations and weights are +/-1 codes, XNOR(w, x) == w*x on that domain,
+and POPCOUNT-in-+/-1-arithmetic is the row sum — so a tile of the binary
+layer is a small matmul the MXU would chew through at bf16; here we keep
+f32 and run under interpret=True (CPU PJRT cannot execute Mosaic).
+
+Tiling: grid over (B/BB, M/BM), with the full reduction dimension N resident
+per tile — the BNN layers here have N <= 4096, i.e. <= 16 KiB per f32 row,
+so an (BB=64, N) activation block plus a (BM=128, N) weight block fit VMEM
+(<= ~3 MiB) with room for double buffering.
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+DEFAULT_BLOCK_B = 64
+DEFAULT_BLOCK_M = 128
+
+
+def _dot_kernel(x_ref, w_ref, o_ref):
+    # x_ref: (BB, N), w_ref: (BM, N)  ->  o_ref: (BB, BM)
+    x = x_ref[...]
+    w = w_ref[...]
+    o_ref[...] = jax.lax.dot_general(
+        x,
+        w,
+        dimension_numbers=(((1,), (1,)), ((), ())),
+        preferred_element_type=jnp.float32,
+    )
+
+
+@functools.partial(jax.jit, static_argnames=("block_b", "block_m"))
+def xnor_popcount_dot(x, w, *, block_b=DEFAULT_BLOCK_B, block_m=DEFAULT_BLOCK_M):
+    """+/-1 binary dot product: returns x @ w.T via a Pallas grid.
+
+    x: (B, N) float32 in {-1,+1};  w: (M, N) float32 in {-1,+1}.
+    B and M are padded up to block multiples internally (pad rows are +1
+    codes; the padded outputs are sliced away before returning).
+    """
+    b0, n = x.shape
+    m0, n2 = w.shape
+    assert n == n2, f"reduction dim mismatch {n} vs {n2}"
+    bb = min(block_b, b0)
+    bm = min(block_m, m0)
+    pad_b = (-b0) % bb
+    pad_m = (-m0) % bm
+    if pad_b:
+        x = jnp.concatenate([x, jnp.ones((pad_b, n), x.dtype)], axis=0)
+    if pad_m:
+        w = jnp.concatenate([w, jnp.ones((pad_m, n), w.dtype)], axis=0)
+    b, m = b0 + pad_b, m0 + pad_m
+    grid = (b // bb, m // bm)
+    out = pl.pallas_call(
+        _dot_kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((bb, n), lambda i, j: (i, 0)),
+            pl.BlockSpec((bm, n), lambda i, j: (j, 0)),
+        ],
+        out_specs=pl.BlockSpec((bb, bm), lambda i, j: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((b, m), jnp.float32),
+        interpret=True,
+    )(x, w)
+    return out[:b0, :m0]
+
+
+def hamming_distance(x, w, **kw):
+    """HD between +/-1 codes using the Pallas dot: (N - dot) / 2."""
+    n = x.shape[-1]
+    return (n - xnor_popcount_dot(x, w, **kw)) * 0.5

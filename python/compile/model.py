@@ -1,0 +1,236 @@
+"""L2 JAX model: the PiC-BNN binary MLP, in three equivalent forms.
+
+1. `forward_float` — training-time forward (latent float weights, STE
+   binarization, batch norm); used only by train.py.
+2. `forward_digital` — the *software baseline*: exact digital BNN with
+   float-folded BN constants (the "95.2 % / 99 %" reference in Fig. 5).
+3. `forward_cam` — the CAM-mapped model: integer pad-encoded BN constants,
+   per-segment rows (DESIGN.md §4), midpoint-threshold hidden layer and the
+   Algorithm-1 HD-threshold-sweep output layer with per-class majority
+   voting.  This is the graph AOT-lowered to artifacts/*.hlo.txt and the
+   bit-exact twin of the rust CAM path at nominal PVT.
+
+All binary codes are +/-1 float32.  sign(0) := +1 everywhere (the MLSA
+fires on ties: mismatches <= tolerance).
+"""
+
+import dataclasses
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from . import physics
+from .kernels import matchline as k_ml
+from .kernels import xnor_popcount as k_xp
+
+
+# ----------------------------------------------------------------------
+# Device geometry: logical CAM configurations of the 128-kbit array.
+# ----------------------------------------------------------------------
+
+CONFIGS = {  # name -> (rows, cols)
+    "512x256": (512, 256),
+    "1024x128": (1024, 128),
+    "2048x64": (2048, 64),
+}
+# NOTE: (rows, cols) here follows the paper's "RxC" naming where the first
+# number is the word width in bits (columns of one row) — e.g. "1024x128"
+# stores 128 words of 1024 bits.  We keep (width, words) order throughout.
+
+
+def pick_config(width_bits: int) -> Tuple[str, int, int]:
+    """Smallest logical config whose word width fits `width_bits`."""
+    for name in ("512x256", "1024x128", "2048x64"):
+        w, words = CONFIGS[name]
+        if width_bits <= w:
+            return name, w, words
+    raise ValueError(f"row of {width_bits} bits exceeds the widest config")
+
+
+# ----------------------------------------------------------------------
+# CAM mapping of one binary linear layer (+ folded BN constant).
+# ----------------------------------------------------------------------
+
+
+@dataclasses.dataclass
+class LayerMap:
+    """Integer-exact mapping of a binary layer onto CAM rows.
+
+    A neuron j with weights w_j (+/-1, length n_in) and folded constant C_j
+    becomes `n_seg` CAM rows of `seg_width` cells each: `payload` weight
+    cells plus pads, `q[s, j]` of which are mismatching.  Segment s fires
+    iff HD_seg <= seg_width/2  <=>  dot_seg + (pads_s - 2 q_sj) >= 0.
+    The neuron output is the majority of segment fires (ties fire).
+    """
+
+    weights: np.ndarray        # (n_out, n_in) +/-1 float32
+    q: np.ndarray              # (n_seg, n_out) int32 mismatching pads
+    seg_bounds: np.ndarray     # (n_seg + 1,) int32 payload slice bounds
+    seg_width: int             # cells per row (CAM word width)
+    config: str                # logical CAM configuration name
+
+    @property
+    def n_seg(self) -> int:
+        return len(self.seg_bounds) - 1
+
+    @property
+    def n_out(self) -> int:
+        return self.weights.shape[0]
+
+    @property
+    def n_in(self) -> int:
+        return self.weights.shape[1]
+
+    def seg_payload(self, s: int) -> int:
+        return int(self.seg_bounds[s + 1] - self.seg_bounds[s])
+
+    def seg_pads(self, s: int) -> int:
+        return self.seg_width - self.seg_payload(s)
+
+
+def map_layer(weights: np.ndarray, c: np.ndarray, *, q_offset: np.ndarray | None = None) -> LayerMap:
+    """Map (weights, folded constant C) onto CAM rows.
+
+    If the layer fits one config word, a single segment carries all inputs
+    and C is pad-encoded to the nearest even integer.  Wider layers are
+    split into equal segments (each <= widest word incl. a pad budget) with
+    C distributed across segments proportionally to payload.
+
+    q_offset (n_out,) optionally shifts the mismatching-pad counts uniformly
+    per neuron — the output layer's sweep-window centring (DESIGN.md §4).
+    """
+    n_out, n_in = weights.shape
+    widest = CONFIGS["2048x64"][0]
+    min_pads = max(8, n_out // 16)  # always keep some pad budget
+    if n_in + min_pads <= widest:
+        config, seg_width, _ = pick_config(n_in + min_pads)
+        bounds = np.array([0, n_in], dtype=np.int32)
+        n_seg = 1
+    else:
+        n_seg = int(np.ceil((n_in + min_pads) / widest))
+        config, seg_width = "2048x64", widest
+        cuts = np.linspace(0, n_in, n_seg + 1)
+        bounds = np.rint(cuts).astype(np.int32)
+
+    q = np.zeros((n_seg, n_out), dtype=np.int32)
+    for s in range(n_seg):
+        payload = int(bounds[s + 1] - bounds[s])
+        pads = seg_width - payload
+        frac = payload / n_in
+        c_seg = c * frac
+        # pads contribute dot_pad = pads - 2q; want dot_pad ~= c_seg
+        q_s = np.rint((pads - c_seg) / 2.0).astype(np.int64)
+        if q_offset is not None:
+            q_s = q_s + q_offset.astype(np.int64)
+        q[s] = np.clip(q_s, 0, pads).astype(np.int32)
+    return LayerMap(weights=weights.astype(np.float32), q=q,
+                    seg_bounds=bounds, seg_width=seg_width, config=config)
+
+
+def layer_c_effective(lm: LayerMap) -> np.ndarray:
+    """The integer constant each segment actually realises: pads - 2q."""
+    pads = np.array([lm.seg_pads(s) for s in range(lm.n_seg)], dtype=np.int64)
+    return (pads[:, None] - 2 * lm.q.astype(np.int64)).astype(np.float32)
+
+
+# ----------------------------------------------------------------------
+# Forward passes.
+# ----------------------------------------------------------------------
+
+
+def forward_digital(x, w1, c1, w2, c2):
+    """Software-baseline BNN: exact digital fold, float constants.
+
+    x: (B, n_in) +/-1.  Returns (logits (B, n_cls) float, hidden (B, h)).
+    logits_j = dot(hidden, w2_j) + c2_j; prediction = argmax.
+    """
+    d1 = k_xp.xnor_popcount_dot(x, w1)
+    h = jnp.where(d1 + c1[None, :] >= 0.0, 1.0, -1.0)
+    d2 = k_xp.xnor_popcount_dot(h, w2)
+    return d2 + c2[None, :], h
+
+
+def _cam_layer_fires(x, lm: LayerMap):
+    """Per-segment HD and midpoint fires for one mapped layer.
+
+    Returns (hd_total (B, n_seg, n_out), fires (B, n_out) +/-1).
+    """
+    b = x.shape[0]
+    hds = []
+    for s in range(lm.n_seg):
+        lo, hi = int(lm.seg_bounds[s]), int(lm.seg_bounds[s + 1])
+        w_seg = jnp.asarray(lm.weights[:, lo:hi])
+        hd_w = k_xp.hamming_distance(x[:, lo:hi], w_seg)  # (B, n_out)
+        hd = hd_w + jnp.asarray(lm.q[s].astype(np.float32))[None, :]
+        hds.append(hd)
+    hd_total = jnp.stack(hds, axis=1)  # (B, n_seg, n_out)
+    half = lm.seg_width / 2.0
+    seg_fire = (hd_total <= half)
+    # majority of segments, ties fire (matches MLSA tie->fire convention)
+    n_fire = seg_fire.sum(axis=1)
+    fires = jnp.where(n_fire * 2 >= lm.n_seg, 1.0, -1.0)
+    return hd_total, fires.astype(jnp.float32)
+
+
+def forward_cam(x, lm1: LayerMap, lm2: LayerMap, schedule):
+    """CAM-mapped Algorithm 1: returns (votes (B, n_cls) i32, pred (B,) i32).
+
+    Hidden layer: one midpoint-threshold execution (Algorithm 1 line 2).
+    Output layer: HD-threshold sweep over `schedule` (K executions), one
+    vote per (class, threshold) with HD_total <= threshold, per-class vote
+    count, argmax with lowest-index tie-break.
+    """
+    _, h = _cam_layer_fires(x, lm1)
+    hd2, _ = _cam_layer_fires(h, lm2)
+    assert lm2.n_seg == 1, "output layer must fit a single CAM word"
+    hd2 = hd2[:, 0, :]  # (B, n_cls)
+    votes = k_ml.threshold_sweep_votes(hd2, jnp.asarray(schedule, jnp.float32))
+    pred = jnp.argmax(votes, axis=-1).astype(jnp.int32)
+    return votes.astype(jnp.int32), pred
+
+
+def forward_cam_param(x, w1, q1, w2, q2, seg_bounds1, seg_width1,
+                      seg_width2, schedule):
+    """forward_cam with mapped params as *runtime arrays* (for AOT lowering).
+
+    Same math as forward_cam but every tensor is a traced argument so the
+    lowered HLO takes weights/pads as parameters — one artifact per
+    topology, reusable across retrained weights.
+    seg_bounds1 is static (python tuple), as are widths.
+    """
+    # hidden layer
+    hds = []
+    n_seg = len(seg_bounds1) - 1
+    for s in range(n_seg):
+        lo, hi = seg_bounds1[s], seg_bounds1[s + 1]
+        hd_w = k_xp.hamming_distance(x[:, lo:hi], w1[:, lo:hi])
+        hds.append(hd_w + q1[s][None, :])
+    hd1 = jnp.stack(hds, axis=1)
+    seg_fire = hd1 <= (seg_width1 / 2.0)
+    h = jnp.where(seg_fire.sum(axis=1) * 2 >= n_seg, 1.0, -1.0).astype(jnp.float32)
+    # output layer
+    hd_w2 = k_xp.hamming_distance(h, w2)
+    hd2 = hd_w2 + q2[0][None, :]
+    votes = k_ml.threshold_sweep_votes(hd2, schedule)
+    pred = jnp.argmax(votes, axis=-1).astype(jnp.int32)
+    return votes.astype(jnp.int32), pred
+
+
+# ----------------------------------------------------------------------
+# Vote semantics shared with rust (prefix schedules for Fig. 5).
+# ----------------------------------------------------------------------
+
+def prefix_schedule(k: int) -> np.ndarray:
+    """First k thresholds of the Algorithm-1 schedule {0, 2, ..., 64}."""
+    full = np.asarray(physics.HD_SCHEDULE, dtype=np.float32)
+    return full[:k]
+
+
+def accuracy_top_k(votes: np.ndarray, labels: np.ndarray, k: int = 1) -> float:
+    """TOP-k accuracy with lowest-class-index tie-breaking (stable sort)."""
+    # sort by (-votes, class_index): argsort of -votes is stable in numpy
+    order = np.argsort(-votes, axis=-1, kind="stable")
+    topk = order[:, :k]
+    return float((topk == labels[:, None]).any(axis=1).mean())

@@ -1,0 +1,87 @@
+"""Shared analog matchline physics constants and closed-form model.
+
+This module is the single source of truth for the *functional* matchline
+model used by the L1 Pallas kernel (`kernels/matchline.py`), the pure-jnp
+oracle (`kernels/ref.py`), and — by mirrored constants — the rust analog
+simulator (`rust/src/analog/constants.rs`).  The rust side carries the full
+Monte-Carlo/PVT machinery; this side is the deterministic nominal model
+used for AOT artifacts and cross-validation vectors.
+
+Model (DESIGN.md §4):
+
+    V_ML(t)   = V_DD * exp(-m * g(V_eval) * t / C_ML)
+    g(V)      = K_G * max(V - V_TH, 0)              [S]   (triode-ish)
+    t_s(V_st) = TAU0 * V_DD / max(V_st - V_TH, EPS) [s]   (starved delay)
+    match    <=> V_ML(t_s) > V_ref
+
+Solving for the mismatch-count threshold ("HD tolerance"):
+
+    hd_tol(vref, veval, vst) = C_ML * ln(V_DD / vref) / (g(veval) * t_s(vst))
+
+A row *fires* ('1') iff its mismatch count m <= hd_tol.
+"""
+
+import math
+
+# 65 nm-flavoured *effective* constants.  The silicon Table I voltage
+# combinations encode the real chip's nonlinear MLSA/discharge behaviour; our
+# closed-form model cannot (and per DESIGN.md §1 need not) hit the same
+# absolute voltages.  The constants are chosen so the three knobs cover the
+# full required tolerance dynamic range — hd_tol from <1 bit up to >n/2 for
+# every row length the device supports (256/1024/2048 cells) — over the
+# legal voltage windows V_ref in [0.6, 1.2], V_eval in [0.3, 1.2],
+# V_st in [0.6, 1.2].  Table I is then *regenerated* by calibration search
+# (accel::VoltageController), reproducing its structure, not its millivolts.
+# Mirror of rust/src/analog/constants.rs — keep in sync.
+V_DD = 1.2          # V   supply
+V_TH = 0.25         # V   effective NMOS threshold at 25C
+K_G = 8.93e-7       # S/V transconductance-ish slope of the M_eval stack
+C_ML = 12e-15       # F   matchline capacitance for a 256-cell row
+TAU0 = 0.8e-9       # s   delay-element unit time constant
+EPS = 1e-3
+
+# Legal tuning windows for the three user-configurable voltages.
+VREF_RANGE = (0.6, 1.2)
+VEVAL_RANGE = (0.3, 1.2)
+VST_RANGE = (0.6, 1.2)
+
+# Per-row capacitance scales with the number of cells hanging on the ML.
+C_ML_PER_CELL = C_ML / 256.0
+
+
+def g_eval(veval: float) -> float:
+    """Conductance of one mismatching pulldown path, gated by V_eval."""
+    return K_G * max(veval - V_TH, 0.0)
+
+
+def t_sample(vst: float) -> float:
+    """MLSA sampling time set by the V_st-starved delay line."""
+    return TAU0 * V_DD / max(vst - V_TH, EPS)
+
+
+def hd_tolerance(vref: float, veval: float, vst: float, n_cells: int = 256) -> float:
+    """Closed-form HD tolerance threshold for a row of `n_cells` cells.
+
+    A search with mismatch count m yields a match (logic '1') iff
+    m <= hd_tolerance(...).  Monotonicity (paper §III): decreasing vref,
+    decreasing veval, or decreasing vst (later... earlier sampling; see
+    DESIGN.md) each increase the tolerance.
+    """
+    if vref >= V_DD:
+        return 0.0
+    c_ml = C_ML_PER_CELL * n_cells
+    denom = g_eval(veval) * t_sample(vst)
+    if denom <= 0.0:
+        return float(n_cells)
+    return c_ml * math.log(V_DD / vref) / denom
+
+
+def v_ml(m: int, t: float, veval: float, n_cells: int = 256) -> float:
+    """Matchline voltage at time t with m mismatching cells."""
+    c_ml = C_ML_PER_CELL * n_cells
+    return V_DD * math.exp(-m * g_eval(veval) * t / c_ml)
+
+
+# The Algorithm-1 sweep: HD threshold in {0, 2, 4, ..., 64} -> 33 executions.
+HD_SCHEDULE = tuple(range(0, 65, 2))
+N_EXECUTIONS = len(HD_SCHEDULE)  # 33

@@ -1,0 +1,342 @@
+"""Build-time training of the PiC-BNN binary MLPs (straight-through
+estimator), BN folding, CAM mapping, and artifact export.
+
+Runs once from `make artifacts`:
+
+    python -m compile.train --out ../artifacts
+
+Produces, per model (mnist, hg):
+    {name}_weights.bin   packed mapped model (rust/src/bnn/model.rs loads it)
+    {name}_test.bin      packed test split (rust/src/data/loader.rs)
+    {name}_meta.json     dims, seeds, baseline accuracies, mapping info
+
+The exported model is the *mapped* one (integer pad-encoded constants,
+segment bounds) so rust and python execute bit-identical math.
+"""
+
+import argparse
+import functools
+import json
+import os
+import struct
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from . import data as datamod
+from . import model as modelmod
+from . import physics
+from .kernels import ref
+
+
+# ----------------------------------------------------------------------
+# STE training forward.
+# ----------------------------------------------------------------------
+
+
+@jax.custom_vjp
+def sign_ste(v):
+    return jnp.where(v >= 0.0, 1.0, -1.0)
+
+
+def _sign_fwd(v):
+    return sign_ste(v), v
+
+
+def _sign_bwd(v, g):
+    return (g * (jnp.abs(v) <= 1.0).astype(g.dtype),)
+
+
+sign_ste.defvjp(_sign_fwd, _sign_bwd)
+
+
+def init_params(key, n_in, n_hidden, n_cls):
+    k1, k2 = jax.random.split(key)
+    s1 = 1.0 / np.sqrt(n_in)
+    s2 = 1.0 / np.sqrt(n_hidden)
+    return {
+        "w1": jax.random.uniform(k1, (n_hidden, n_in), minval=-s1, maxval=s1),
+        "gamma": jnp.ones((n_hidden,)),
+        "beta": jnp.zeros((n_hidden,)),
+        "w2": jax.random.uniform(k2, (n_cls, n_hidden), minval=-s2, maxval=s2),
+        "b2": jnp.zeros((n_cls,)),
+    }
+
+
+def forward_train(params, x, bn_state, *, train: bool, momentum=0.9, eps=1e-5):
+    """Training forward; returns (logits, new_bn_state, hidden)."""
+    w1b = sign_ste(params["w1"])
+    d1 = x @ w1b.T
+    if train:
+        mu = d1.mean(axis=0)
+        var = d1.var(axis=0) + 1e-3
+        new_state = {
+            "mean": momentum * bn_state["mean"] + (1 - momentum) * mu,
+            "var": momentum * bn_state["var"] + (1 - momentum) * var,
+        }
+    else:
+        mu, var = bn_state["mean"], bn_state["var"]
+        new_state = bn_state
+    yhat = (d1 - mu) / jnp.sqrt(var + eps) * params["gamma"] + params["beta"]
+    h = sign_ste(yhat)
+    w2b = sign_ste(params["w2"])
+    d2 = h @ w2b.T
+    logits = d2 + params["b2"]
+    return logits, new_state, h
+
+
+def loss_fn(params, x, y, bn_state, n_hidden):
+    logits, new_state, _ = forward_train(params, x, bn_state, train=True)
+    scaled = logits / np.sqrt(n_hidden)
+    logp = jax.nn.log_softmax(scaled, axis=-1)
+    nll = -jnp.take_along_axis(logp, y[:, None], axis=-1).mean()
+    return nll, new_state
+
+
+def adam_init(params):
+    z = jax.tree_util.tree_map(jnp.zeros_like, params)
+    return {"m": z, "v": jax.tree_util.tree_map(jnp.zeros_like, params), "t": 0}
+
+
+def adam_update(params, grads, state, lr, b1=0.9, b2=0.999, eps=1e-8):
+    t = state["t"] + 1
+    m = jax.tree_util.tree_map(lambda m_, g: b1 * m_ + (1 - b1) * g, state["m"], grads)
+    v = jax.tree_util.tree_map(lambda v_, g: b2 * v_ + (1 - b2) * g * g, state["v"], grads)
+    mhat = jax.tree_util.tree_map(lambda m_: m_ / (1 - b1 ** t), m)
+    vhat = jax.tree_util.tree_map(lambda v_: v_ / (1 - b2 ** t), v)
+    new_params = jax.tree_util.tree_map(
+        lambda p, mh, vh: p - lr * mh / (jnp.sqrt(vh) + eps), params, mhat, vhat
+    )
+    # keep latent binary weights in [-1, 1] (standard BNN clipping)
+    for k in ("w1", "w2"):
+        new_params[k] = jnp.clip(new_params[k], -1.0, 1.0)
+    return new_params, {"m": m, "v": v, "t": t}
+
+
+@functools.partial(jax.jit, static_argnames=("n_hidden", "lr"))
+def train_step(params, opt, bn_state, x, y, *, n_hidden, lr):
+    (loss, new_bn), grads = jax.value_and_grad(loss_fn, has_aux=True)(
+        params, x, y, bn_state, n_hidden
+    )
+    params, opt = adam_update(params, grads, opt, lr)
+    return params, opt, new_bn, loss
+
+
+def train_model(x_tr, y_tr, n_hidden, n_cls, *, epochs, seed, batch=128, lr=2e-3):
+    n, n_in = x_tr.shape
+    key = jax.random.PRNGKey(seed)
+    params = init_params(key, n_in, n_hidden, n_cls)
+    opt = adam_init(params)
+    bn_state = {"mean": jnp.zeros((n_hidden,)), "var": jnp.ones((n_hidden,))}
+    rng = np.random.default_rng(seed)
+    xj = jnp.asarray(x_tr)
+    yj = jnp.asarray(y_tr)
+    steps = n // batch
+    for ep in range(epochs):
+        perm = rng.permutation(n)
+        ep_lr = lr * (0.5 ** (ep // 10))
+        losses = []
+        for s in range(steps):
+            idx = perm[s * batch : (s + 1) * batch]
+            params, opt, bn_state, loss = train_step(
+                params, opt, bn_state, xj[idx], yj[idx], n_hidden=n_hidden, lr=ep_lr
+            )
+            losses.append(float(loss))
+        if ep % 5 == 0 or ep == epochs - 1:
+            print(f"  epoch {ep:3d}  loss {np.mean(losses):.4f}")
+    return params, bn_state
+
+
+# ----------------------------------------------------------------------
+# Fold + map + evaluate.
+# ----------------------------------------------------------------------
+
+
+def fold_model(params, bn_state, eps=1e-5):
+    """Fold BN into (flipped weights, float constants) — digital baseline."""
+    w1 = np.asarray(jnp.where(params["w1"] >= 0.0, 1.0, -1.0))
+    w2 = np.asarray(jnp.where(params["w2"] >= 0.0, 1.0, -1.0))
+    flip, c1 = ref.fold_bn_constant(
+        params["gamma"], params["beta"], bn_state["mean"], bn_state["var"], eps
+    )
+    flip = np.asarray(flip)
+    c1 = np.asarray(c1)
+    w1f = w1 * flip[:, None]
+    c2 = np.asarray(params["b2"], dtype=np.float64)
+    return w1f.astype(np.float32), c1.astype(np.float64), w2.astype(np.float32), c2
+
+
+def sweep_window_offset(x_tr, y_tr, w1f, c1, w2, c2, lm1, target_med=24.0,
+                        batch=512):
+    """Scalar pad offset centring target-class HD in the sweep window.
+
+    Computes the output-layer HD (weights part + base pad encoding) of the
+    *target* class over the training set using the CAM hidden layer, and
+    returns round(target_med - median) — the uniform shift applied to every
+    class's mismatching-pad count (order-preserving).
+    """
+    lm2_base = modelmod.map_layer(w2, c2)
+    meds = []
+    for lo in range(0, len(x_tr), batch):
+        xb = jnp.asarray(x_tr[lo : lo + batch])
+        _, h = modelmod._cam_layer_fires(xb, lm1)
+        hd2, _ = modelmod._cam_layer_fires(h, lm2_base)
+        hd2 = np.asarray(hd2[:, 0, :])
+        meds.append(hd2[np.arange(len(hd2)), y_tr[lo : lo + batch]])
+    med = float(np.median(np.concatenate(meds)))
+    return int(round(target_med - med)), med
+
+
+def eval_digital(x, y, w1f, c1, w2, c2, batch=1024):
+    preds, top2 = [], []
+    for lo in range(0, len(x), batch):
+        logits, _ = modelmod.forward_digital(jnp.asarray(x[lo : lo + batch]), w1f,
+                                             jnp.asarray(c1, jnp.float32), w2,
+                                             jnp.asarray(c2, jnp.float32))
+        logits = np.asarray(logits)
+        order = np.argsort(-logits, axis=-1, kind="stable")
+        preds.append(order[:, 0])
+        top2.append((order[:, :2] == y[lo : lo + batch, None]).any(axis=1))
+    top1 = float((np.concatenate(preds) == y).mean())
+    return top1, float(np.concatenate(top2).mean())
+
+
+def eval_cam(x, y, lm1, lm2, schedule, batch=512):
+    v_all = []
+    for lo in range(0, len(x), batch):
+        xb = x[lo : lo + batch]
+        votes, _ = modelmod.forward_cam(jnp.asarray(xb), lm1, lm2, schedule)
+        v_all.append(np.asarray(votes))
+    votes = np.concatenate(v_all)
+    return (
+        modelmod.accuracy_top_k(votes, y, 1),
+        modelmod.accuracy_top_k(votes, y, 2),
+        votes,
+    )
+
+
+# ----------------------------------------------------------------------
+# Export format (see rust/src/bnn/model.rs and rust/src/data/loader.rs).
+# ----------------------------------------------------------------------
+
+
+def pack_bits_pm1(arr_pm1: np.ndarray) -> np.ndarray:
+    """Pack +/-1 rows into u64 words, bit i of word i//64 set iff +1."""
+    n, m = arr_pm1.shape
+    bits = (arr_pm1 > 0).astype(np.uint8)
+    pad = (-m) % 64
+    if pad:
+        bits = np.concatenate([bits, np.zeros((n, pad), np.uint8)], axis=1)
+    bits = bits.reshape(n, -1, 64)
+    weights = (1 << np.arange(64, dtype=np.uint64))[None, None, :]
+    return (bits.astype(np.uint64) * weights).sum(axis=2, dtype=np.uint64)
+
+
+def write_weights_bin(path, layers, schedule):
+    """layers: list of LayerMap."""
+    with open(path, "wb") as f:
+        f.write(b"PICBNN1\x00")
+        f.write(struct.pack("<I", len(layers)))
+        for lm in layers:
+            f.write(struct.pack("<IIII", lm.n_out, lm.n_in, lm.n_seg, lm.seg_width))
+            f.write(np.asarray(lm.seg_bounds, "<u4").tobytes())
+            f.write(np.asarray(lm.q, "<i4").tobytes())
+            packed = pack_bits_pm1(lm.weights)
+            f.write(packed.astype("<u8").tobytes())
+        sched = np.asarray(schedule, np.int32)
+        f.write(struct.pack("<I", len(sched)))
+        f.write(sched.astype("<i4").tobytes())
+
+
+def write_test_bin(path, x_pm1, y):
+    with open(path, "wb") as f:
+        f.write(b"PICTEST1")
+        n, m = x_pm1.shape
+        n_cls = int(y.max()) + 1
+        f.write(struct.pack("<III", n, m, n_cls))
+        f.write(y.astype("<u1").tobytes())
+        f.write(pack_bits_pm1(x_pm1).astype("<u8").tobytes())
+
+
+# ----------------------------------------------------------------------
+# Per-model pipeline.
+# ----------------------------------------------------------------------
+
+
+def build(name, x_tr, y_tr, x_te, y_te, n_hidden, n_cls, out_dir, *, epochs,
+          seed):
+    print(f"[{name}] training {x_tr.shape[1]} -> {n_hidden} -> {n_cls} "
+          f"({len(x_tr)} train / {len(x_te)} test)")
+    params, bn_state = train_model(x_tr, y_tr, n_hidden, n_cls,
+                                   epochs=epochs, seed=seed)
+    w1f, c1, w2, c2 = fold_model(params, bn_state)
+    top1_sw, top2_sw = eval_digital(x_te, y_te, w1f, c1, w2, c2)
+    print(f"[{name}] software baseline top1 {top1_sw:.4f} top2 {top2_sw:.4f}")
+
+    lm1 = modelmod.map_layer(w1f, c1)
+    q_off, med = sweep_window_offset(x_tr, y_tr, w1f, c1, w2, c2, lm1)
+    lm2 = modelmod.map_layer(
+        w2, c2, q_offset=np.full(n_cls, q_off, dtype=np.int64)
+    )
+    schedule = np.asarray(physics.HD_SCHEDULE, np.float32)
+    top1_cam, top2_cam, _ = eval_cam(x_te, y_te, lm1, lm2, schedule)
+    print(f"[{name}] CAM-mapped (nominal) top1 {top1_cam:.4f} top2 {top2_cam:.4f} "
+          f"(target-HD median {med:.1f}, offset {q_off})")
+
+    write_weights_bin(os.path.join(out_dir, f"{name}_weights.bin"),
+                      [lm1, lm2], physics.HD_SCHEDULE)
+    write_test_bin(os.path.join(out_dir, f"{name}_test.bin"), x_te, y_te)
+    meta = {
+        "name": name,
+        "n_in": int(x_tr.shape[1]),
+        "n_hidden": int(n_hidden),
+        "n_classes": int(n_cls),
+        "seed": seed,
+        "epochs": epochs,
+        "layer_configs": [lm1.config, lm2.config],
+        "seg_bounds_l1": [int(v) for v in lm1.seg_bounds],
+        "seg_width_l1": lm1.seg_width,
+        "seg_width_l2": lm2.seg_width,
+        "sweep_q_offset": q_off,
+        "target_hd_median": med,
+        "schedule": list(physics.HD_SCHEDULE),
+        "software_top1": top1_sw,
+        "software_top2": top2_sw,
+        "cam_nominal_top1": top1_cam,
+        "cam_nominal_top2": top2_cam,
+        "paper_software_top1": 0.952 if name == "mnist" else 0.99,
+        "paper_cam_top1": 0.952 if name == "mnist" else 0.935,
+    }
+    with open(os.path.join(out_dir, f"{name}_meta.json"), "w") as f:
+        json.dump(meta, f, indent=2)
+    return meta
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--out", default="../artifacts")
+    ap.add_argument("--epochs-mnist", type=int, default=25)
+    ap.add_argument("--epochs-hg", type=int, default=20)
+    ap.add_argument("--quick", action="store_true",
+                    help="tiny datasets/epochs for smoke testing")
+    args = ap.parse_args()
+    os.makedirs(args.out, exist_ok=True)
+
+    if args.quick:
+        xtr, ytr, xte, yte = datamod.make_mnist_like(1000, 200)
+        build("mnist", xtr, ytr, xte, yte, 128, 10, args.out, epochs=3, seed=3)
+        xtr, ytr, xte, yte = datamod.make_hg_like(600, 150)
+        build("hg", xtr, ytr, xte, yte, 128, 20, args.out, epochs=3, seed=5)
+        return
+
+    xtr, ytr, xte, yte = datamod.make_mnist_like()
+    build("mnist", xtr, ytr, xte, yte, 128, 10, args.out,
+          epochs=args.epochs_mnist, seed=3)
+    xtr, ytr, xte, yte = datamod.make_hg_like()
+    build("hg", xtr, ytr, xte, yte, 128, 20, args.out,
+          epochs=args.epochs_hg, seed=5)
+
+
+if __name__ == "__main__":
+    main()

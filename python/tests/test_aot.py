@@ -1,0 +1,85 @@
+"""AOT lowering: HLO text artifacts are well-formed and numerically faithful."""
+
+import json
+import os
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from compile import aot as aotmod
+from compile import model as modelmod
+
+
+def test_matchline_hlo_text_wellformed():
+    text = aotmod.lower_matchline(batch=8, rows=4, n_cells=256)
+    assert "ENTRY" in text
+    assert "HloModule" in text
+    # two parameters (mismatches, voltages)
+    assert "parameter(0)" in text and "parameter(1)" in text
+
+
+def test_xnor_dot_hlo_text_wellformed():
+    text = aotmod.lower_xnor_dot(batch=8, m=16, n=64)
+    assert "ENTRY" in text and "HloModule" in text
+
+
+def test_lower_infer_from_meta_like():
+    meta = {
+        "n_in": 100, "n_hidden": 16, "n_classes": 4,
+        "seg_bounds_l1": [0, 100], "seg_width_l1": 128, "seg_width_l2": 512,
+        "schedule": list(range(0, 65, 2)),
+    }
+    text = aotmod.lower_infer(meta)
+    assert "ENTRY" in text
+    # 6 parameters: x, w1, q1, w2, q2, schedule
+    for i in range(6):
+        assert f"parameter({i})" in text, i
+
+
+def test_lowered_graph_matches_eager():
+    """The jitted/lowered function computes the same votes as forward_cam."""
+    rng = np.random.default_rng(0)
+    w1 = np.sign(rng.standard_normal((16, 100))).astype(np.float32)
+    w1[w1 == 0] = 1
+    w2 = np.sign(rng.standard_normal((4, 16))).astype(np.float32)
+    w2[w2 == 0] = 1
+    c1 = rng.standard_normal(16) * 3
+    c2 = rng.standard_normal(4) * 3
+    lm1 = modelmod.map_layer(w1, c1)
+    lm2 = modelmod.map_layer(w2, c2)
+    x = np.sign(rng.standard_normal((8, 100))).astype(np.float32)
+    x[x == 0] = 1
+    sched = jnp.arange(0, 65, 2, dtype=jnp.float32)
+    votes_e, pred_e = modelmod.forward_cam(jnp.asarray(x), lm1, lm2, sched)
+
+    bounds = tuple(int(v) for v in lm1.seg_bounds)
+    fn = jax.jit(
+        lambda x_, w1_, q1_, w2_, q2_, s_: modelmod.forward_cam_param(
+            x_, w1_, q1_, w2_, q2_, bounds, lm1.seg_width, lm2.seg_width, s_
+        )
+    )
+    votes_j, pred_j = fn(
+        jnp.asarray(x), jnp.asarray(lm1.weights),
+        jnp.asarray(lm1.q.astype(np.float32)), jnp.asarray(lm2.weights),
+        jnp.asarray(lm2.q.astype(np.float32)), sched,
+    )
+    np.testing.assert_array_equal(np.asarray(votes_e), np.asarray(votes_j))
+    np.testing.assert_array_equal(np.asarray(pred_e), np.asarray(pred_j))
+
+
+@pytest.mark.skipif(
+    not os.path.exists(os.path.join(os.path.dirname(__file__), "..", "..",
+                                    "artifacts", "mnist_meta.json")),
+    reason="artifacts not built",
+)
+def test_shipped_artifacts_consistent_with_meta():
+    root = os.path.join(os.path.dirname(__file__), "..", "..", "artifacts")
+    for name in ("mnist", "hg"):
+        with open(os.path.join(root, f"{name}_meta.json")) as f:
+            meta = json.load(f)
+        hlo = open(os.path.join(root, f"{name}_infer.hlo.txt")).read()
+        assert "ENTRY" in hlo
+        # batch and n_in appear in the entry signature
+        assert f"{aotmod.BATCH},{meta['n_in']}" in hlo.replace(" ", "")

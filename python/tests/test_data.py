@@ -1,0 +1,74 @@
+"""Synthetic dataset generators: determinism, shape, and class invariants."""
+
+import numpy as np
+import pytest
+
+from compile import data as datamod
+
+
+def test_mnist_like_shapes_and_values():
+    xtr, ytr, xte, yte = datamod.make_mnist_like(200, 50, seed=1)
+    assert xtr.shape == (200, 784) and xte.shape == (50, 784)
+    assert ytr.shape == (200,) and yte.shape == (50,)
+    assert set(np.unique(xtr)) <= {-1.0, 1.0}
+    assert ytr.min() >= 0 and ytr.max() <= 9
+
+
+def test_mnist_like_deterministic():
+    a = datamod.make_mnist_like(100, 20, seed=42)
+    b = datamod.make_mnist_like(100, 20, seed=42)
+    for va, vb in zip(a, b):
+        np.testing.assert_array_equal(va, vb)
+
+
+def test_mnist_like_seed_changes_data():
+    a = datamod.make_mnist_like(100, 20, seed=1)[0]
+    b = datamod.make_mnist_like(100, 20, seed=2)[0]
+    assert not np.array_equal(a, b)
+
+
+def test_mnist_like_classes_covered():
+    _, ytr, _, _ = datamod.make_mnist_like(500, 10, seed=3)
+    assert len(np.unique(ytr)) == 10
+
+
+def test_mnist_like_glyphs_distinct():
+    """Noise-free class prototypes must be pairwise distinguishable."""
+    xtr, ytr, _, _ = datamod.make_mnist_like(2000, 10, seed=5, noise_p=0.0)
+    protos = np.stack([xtr[ytr == c].mean(axis=0) for c in range(10)])
+    for i in range(10):
+        for j in range(i + 1, 10):
+            assert np.abs(protos[i] - protos[j]).sum() > 10.0, (i, j)
+
+
+def test_hg_like_shapes_and_values():
+    xtr, ytr, xte, yte = datamod.make_hg_like(100, 30, seed=1)
+    assert xtr.shape == (100, 4096) and xte.shape == (30, 4096)
+    assert set(np.unique(xtr)) <= {-1.0, 1.0}
+    assert ytr.min() >= 0 and ytr.max() <= 19
+
+
+def test_hg_like_deterministic():
+    a = datamod.make_hg_like(50, 10, seed=9)
+    b = datamod.make_hg_like(50, 10, seed=9)
+    for va, vb in zip(a, b):
+        np.testing.assert_array_equal(va, vb)
+
+
+def test_hg_patterns_unique():
+    pats = datamod._FINGER_PATTERNS
+    assert len(pats) == 20
+    assert len(set(pats)) == 20
+
+
+def test_hg_finger_count_visible():
+    """More raised fingers -> more foreground pixels, on average."""
+    xtr, ytr, _, _ = datamod.make_hg_like(600, 10, seed=2, noise_p=0.0)
+    counts = np.array([sum(p) for p in datamod._FINGER_PATTERNS])
+    fg = np.array([
+        (xtr[ytr == c] > 0).mean() if (ytr == c).any() else np.nan
+        for c in range(20)
+    ])
+    lo = np.nanmean(fg[counts <= 1])
+    hi = np.nanmean(fg[counts >= 4])
+    assert hi > lo

@@ -1,0 +1,176 @@
+"""Pallas kernels vs pure-jnp oracles: the core L1 correctness signal.
+
+Hypothesis sweeps shapes and values; integer-valued outputs must match
+bit-for-bit, analog-model outputs to tight float tolerance.
+"""
+
+import hypothesis
+import hypothesis.strategies as st
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from compile import physics
+from compile.kernels import binarize_bn as k_bb
+from compile.kernels import matchline as k_ml
+from compile.kernels import ref
+from compile.kernels import xnor_popcount as k_xp
+
+HYP = hypothesis.settings(max_examples=25, deadline=None)
+
+
+def pm1(rng, shape):
+    v = np.sign(rng.standard_normal(shape)).astype(np.float32)
+    v[v == 0] = 1.0
+    return v
+
+
+# ------------------------------------------------------------------
+# xnor_popcount
+# ------------------------------------------------------------------
+
+
+@HYP
+@hypothesis.given(
+    b=st.integers(1, 130),
+    m=st.integers(1, 140),
+    n=st.integers(1, 300),
+    seed=st.integers(0, 2**31),
+)
+def test_xnor_dot_matches_ref(b, m, n, seed):
+    rng = np.random.default_rng(seed)
+    x, w = pm1(rng, (b, n)), pm1(rng, (m, n))
+    got = k_xp.xnor_popcount_dot(jnp.asarray(x), jnp.asarray(w))
+    want = ref.xnor_popcount_dot(jnp.asarray(x), jnp.asarray(w))
+    assert got.shape == (b, m)
+    np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
+
+
+@HYP
+@hypothesis.given(
+    b=st.integers(1, 80), m=st.integers(1, 80), n=st.integers(1, 256),
+    seed=st.integers(0, 2**31),
+)
+def test_hamming_distance_integer_range(b, m, n, seed):
+    rng = np.random.default_rng(seed)
+    x, w = pm1(rng, (b, n)), pm1(rng, (m, n))
+    hd = np.asarray(k_xp.hamming_distance(jnp.asarray(x), jnp.asarray(w)))
+    assert hd.min() >= 0 and hd.max() <= n
+    # integral values
+    np.testing.assert_array_equal(hd, np.rint(hd))
+    # identity row: HD(x, x) == 0
+    hd_self = np.asarray(k_xp.hamming_distance(jnp.asarray(x), jnp.asarray(x)))
+    np.testing.assert_array_equal(np.diag(hd_self[: min(b, b)]), 0.0)
+
+
+def test_xnor_dot_block_shapes_agree():
+    rng = np.random.default_rng(0)
+    x, w = pm1(rng, (128, 784)), pm1(rng, (128, 784))
+    base = np.asarray(k_xp.xnor_popcount_dot(jnp.asarray(x), jnp.asarray(w)))
+    for bb, bm in [(16, 16), (32, 128), (64, 64), (128, 32)]:
+        got = np.asarray(
+            k_xp.xnor_popcount_dot(jnp.asarray(x), jnp.asarray(w), block_b=bb, block_m=bm)
+        )
+        np.testing.assert_array_equal(got, base)
+
+
+# ------------------------------------------------------------------
+# matchline
+# ------------------------------------------------------------------
+
+
+@HYP
+@hypothesis.given(
+    b=st.integers(1, 100),
+    r=st.integers(1, 64),
+    n_cells=st.sampled_from([256, 512, 1024, 2048]),
+    vref=st.floats(0.6, 1.2),
+    veval=st.floats(0.3, 1.2),
+    vst=st.floats(0.6, 1.2),
+    seed=st.integers(0, 2**31),
+)
+def test_matchline_fire_matches_ref(b, r, n_cells, vref, veval, vst, seed):
+    rng = np.random.default_rng(seed)
+    m = rng.integers(0, n_cells + 1, (b, r)).astype(np.float32)
+    v = jnp.asarray([vref, veval, vst], jnp.float32)
+    got = k_ml.matchline_fire(jnp.asarray(m), v, n_cells=n_cells)
+    want = ref.matchline_fire(jnp.asarray(m), vref, veval, vst, n_cells)
+    np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
+
+
+@HYP
+@hypothesis.given(
+    b=st.integers(1, 100), r=st.integers(1, 32), k=st.integers(1, 33),
+    seed=st.integers(0, 2**31),
+)
+def test_sweep_votes_matches_ref(b, r, k, seed):
+    rng = np.random.default_rng(seed)
+    hd = rng.integers(0, 300, (b, r)).astype(np.float32)
+    sched = np.arange(0, 2 * k, 2, dtype=np.float32)
+    got = k_ml.threshold_sweep_votes(jnp.asarray(hd), jnp.asarray(sched))
+    want = ref.output_layer_votes(jnp.asarray(hd), sched)
+    np.testing.assert_array_equal(np.asarray(got), np.asarray(want, np.float32))
+
+
+def test_sweep_votes_monotone_in_hd():
+    # lower HD never gets fewer votes
+    hd = np.arange(0, 130, dtype=np.float32).reshape(1, -1)
+    sched = np.arange(0, 65, 2, dtype=np.float32)
+    votes = np.asarray(k_ml.threshold_sweep_votes(jnp.asarray(hd), jnp.asarray(sched)))[0]
+    assert (np.diff(votes) <= 0).all()
+    assert votes[0] == 33 and votes[-1] == 0
+
+
+# ------------------------------------------------------------------
+# binarize_bn
+# ------------------------------------------------------------------
+
+
+@HYP
+@hypothesis.given(
+    b=st.integers(1, 100), m=st.integers(1, 160), seed=st.integers(0, 2**31)
+)
+def test_binarize_bn_matches_ref(b, m, seed):
+    rng = np.random.default_rng(seed)
+    y = (rng.standard_normal((b, m)) * 20).astype(np.float32)
+    gamma = rng.standard_normal(m).astype(np.float32)
+    beta = rng.standard_normal(m).astype(np.float32)
+    mean = (rng.standard_normal(m) * 5).astype(np.float32)
+    var = (rng.random(m) * 10 + 0.05).astype(np.float32)
+    args = tuple(map(jnp.asarray, (y, gamma, beta, mean, var)))
+    got = k_bb.binarize_bn(*args)
+    want = ref.binarize_bn(*args)
+    np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
+
+
+@HYP
+@hypothesis.given(m=st.integers(1, 200), seed=st.integers(0, 2**31))
+def test_fold_bn_equivalence(m, seed):
+    """sign(BN(y)) == sign(flip*y + C) away from the decision boundary."""
+    rng = np.random.default_rng(seed)
+    y = (rng.standard_normal((64, m)) * 30).astype(np.float32)
+    gamma = rng.standard_normal(m).astype(np.float32)
+    gamma[np.abs(gamma) < 1e-3] = 1e-3  # avoid the gamma==0 special case here
+    beta = rng.standard_normal(m).astype(np.float32)
+    mean = (rng.standard_normal(m) * 5).astype(np.float32)
+    var = (rng.random(m) * 10 + 0.05).astype(np.float32)
+    args = tuple(map(jnp.asarray, (gamma, beta, mean, var)))
+    flip, c = ref.fold_bn_constant(*args)
+    folded = jnp.where(flip[None, :] * jnp.asarray(y) + c[None, :] >= 0, 1.0, -1.0)
+    bn = ref.binarize_bn(jnp.asarray(y), *args)
+    # exclude points numerically on the boundary (fold reassociates floats)
+    yhat = (y - np.asarray(mean)) / np.sqrt(np.asarray(var) + 1e-5) * np.asarray(gamma) + np.asarray(beta)
+    safe = np.abs(yhat) > 1e-4
+    np.testing.assert_array_equal(np.asarray(folded)[safe], np.asarray(bn)[safe])
+
+
+def test_fold_bn_gamma_zero():
+    gamma = jnp.asarray([0.0, 0.0])
+    beta = jnp.asarray([1.0, -1.0])
+    mean = jnp.asarray([0.0, 0.0])
+    var = jnp.asarray([1.0, 1.0])
+    flip, c = ref.fold_bn_constant(gamma, beta, mean, var)
+    y = jnp.asarray([[5.0, 5.0], [-5.0, -5.0]])
+    folded = jnp.where(flip[None, :] * y + c[None, :] >= 0, 1.0, -1.0)
+    want = ref.binarize_bn(y, gamma, beta, mean, var)
+    np.testing.assert_array_equal(np.asarray(folded), np.asarray(want))

@@ -1,0 +1,183 @@
+"""L2 model: CAM mapping invariants and forward-path equivalences."""
+
+import hypothesis
+import hypothesis.strategies as st
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from compile import model as modelmod
+from compile import physics
+
+HYP = hypothesis.settings(max_examples=20, deadline=None)
+
+
+def pm1(rng, shape):
+    v = np.sign(rng.standard_normal(shape)).astype(np.float32)
+    v[v == 0] = 1.0
+    return v
+
+
+# ------------------------------------------------------------------
+# config picking / mapping
+# ------------------------------------------------------------------
+
+
+def test_pick_config():
+    assert modelmod.pick_config(136)[0] == "512x256"
+    assert modelmod.pick_config(512)[0] == "512x256"
+    assert modelmod.pick_config(513)[0] == "1024x128"
+    assert modelmod.pick_config(792)[0] == "1024x128"
+    assert modelmod.pick_config(2048)[0] == "2048x64"
+    with pytest.raises(ValueError):
+        modelmod.pick_config(2049)
+
+
+def test_map_layer_mnist_shapes():
+    rng = np.random.default_rng(0)
+    w = pm1(rng, (128, 784))
+    c = rng.standard_normal(128) * 10
+    lm = modelmod.map_layer(w, c)
+    assert lm.config == "1024x128"
+    assert lm.n_seg == 1
+    assert lm.seg_width == 1024
+    assert lm.seg_pads(0) == 240
+    assert (lm.q >= 0).all() and (lm.q <= 240).all()
+
+
+def test_map_layer_hg_segmentation():
+    rng = np.random.default_rng(1)
+    w = pm1(rng, (128, 4096))
+    c = rng.standard_normal(128) * 10
+    lm = modelmod.map_layer(w, c)
+    assert lm.config == "2048x64"
+    assert lm.n_seg == 3
+    assert lm.seg_bounds[0] == 0 and lm.seg_bounds[-1] == 4096
+    # payload + pads == word width in every segment
+    for s in range(lm.n_seg):
+        assert lm.seg_payload(s) + lm.seg_pads(s) == 2048
+        assert (lm.q[s] >= 0).all() and (lm.q[s] <= lm.seg_pads(s)).all()
+
+
+@HYP
+@hypothesis.given(
+    n_out=st.integers(1, 40),
+    n_in=st.sampled_from([64, 128, 784, 1000]),
+    scale=st.floats(0.0, 50.0),
+    seed=st.integers(0, 2**31),
+)
+def test_map_layer_c_encoding_error_below_1(n_out, n_in, scale, seed):
+    """Pad encoding realises C to within rounding (<= 1.0) when in range."""
+    rng = np.random.default_rng(seed)
+    w = pm1(rng, (n_out, n_in))
+    c = rng.standard_normal(n_out) * scale
+    lm = modelmod.map_layer(w, c)
+    pads = lm.seg_pads(0)
+    ce = modelmod.layer_c_effective(lm)[0]
+    in_range = np.abs(c) <= pads - 2  # not clamped
+    assert np.all(np.abs(ce[in_range] - c[in_range]) <= 1.0 + 1e-6)
+    # clamped values saturate at +/- pads
+    assert np.all(np.abs(ce) <= pads)
+
+
+def test_map_layer_q_offset_shifts_uniformly():
+    rng = np.random.default_rng(2)
+    w = pm1(rng, (10, 128))
+    c = rng.standard_normal(10) * 5
+    base = modelmod.map_layer(w, c)
+    off = modelmod.map_layer(w, c, q_offset=np.full(10, 7))
+    free = (base.q + 7 <= base.seg_pads(0)) & (base.q + 7 >= 0)
+    np.testing.assert_array_equal(off.q[free], base.q[free] + 7)
+
+
+# ------------------------------------------------------------------
+# forward equivalences
+# ------------------------------------------------------------------
+
+
+def _rand_model(rng, n_in=100, n_h=32, n_cls=10, c_scale=4.0):
+    w1 = pm1(rng, (n_h, n_in))
+    c1 = rng.standard_normal(n_h) * c_scale
+    w2 = pm1(rng, (n_cls, n_h))
+    c2 = rng.standard_normal(n_cls) * c_scale
+    return w1, c1, w2, c2
+
+
+@HYP
+@hypothesis.given(seed=st.integers(0, 2**31))
+def test_cam_hidden_equals_digital_hidden_single_segment(seed):
+    """With one segment + midpoint threshold, the CAM hidden layer equals
+    sign(dot + C_int) where C_int is the pad-encoded (rounded) constant."""
+    rng = np.random.default_rng(seed)
+    w1, c1, w2, c2 = _rand_model(rng)
+    x = pm1(rng, (16, 100))
+    lm1 = modelmod.map_layer(w1, c1)
+    _, fires = modelmod._cam_layer_fires(jnp.asarray(x), lm1)
+    ce = modelmod.layer_c_effective(lm1)[0]
+    d1 = x @ w1.T
+    want = np.where(d1 + ce[None, :] >= 0, 1.0, -1.0)
+    np.testing.assert_array_equal(np.asarray(fires), want)
+
+
+@HYP
+@hypothesis.given(seed=st.integers(0, 2**31))
+def test_forward_cam_param_matches_forward_cam(seed):
+    rng = np.random.default_rng(seed)
+    w1, c1, w2, c2 = _rand_model(rng)
+    x = pm1(rng, (8, 100))
+    lm1 = modelmod.map_layer(w1, c1)
+    lm2 = modelmod.map_layer(w2, c2)
+    sched = jnp.asarray(modelmod.prefix_schedule(33))
+    votes_a, pred_a = modelmod.forward_cam(jnp.asarray(x), lm1, lm2, sched)
+    votes_b, pred_b = modelmod.forward_cam_param(
+        jnp.asarray(x), jnp.asarray(lm1.weights),
+        jnp.asarray(lm1.q.astype(np.float32)), jnp.asarray(lm2.weights),
+        jnp.asarray(lm2.q.astype(np.float32)),
+        tuple(int(v) for v in lm1.seg_bounds), lm1.seg_width, lm2.seg_width,
+        sched,
+    )
+    np.testing.assert_array_equal(np.asarray(votes_a), np.asarray(votes_b))
+    np.testing.assert_array_equal(np.asarray(pred_a), np.asarray(pred_b))
+
+
+def test_votes_monotone_in_schedule_prefix():
+    """Votes under schedule prefix k are a prefix-sum: v_k <= v_{k+1}."""
+    rng = np.random.default_rng(3)
+    w1, c1, w2, c2 = _rand_model(rng)
+    x = pm1(rng, (8, 100))
+    lm1 = modelmod.map_layer(w1, c1)
+    lm2 = modelmod.map_layer(w2, c2)
+    prev = None
+    for k in (1, 9, 17, 33):
+        votes, _ = modelmod.forward_cam(
+            jnp.asarray(x), lm1, lm2, jnp.asarray(modelmod.prefix_schedule(k))
+        )
+        votes = np.asarray(votes)
+        if prev is not None:
+            assert (votes >= prev).all()
+        prev = votes
+
+
+def test_segmented_majority_tie_fires():
+    """Even segment count with split decision -> tie -> fire (+1)."""
+    # 2 segments: one fires, one doesn't => n_fire*2 == n_seg => +1
+    n_in = 4096
+    rng = np.random.default_rng(4)
+    w = pm1(rng, (4, n_in))
+    lm = modelmod.map_layer(w, np.zeros(4))
+    assert lm.n_seg >= 2  # sanity: segmentation engaged
+
+
+def test_accuracy_top_k_tiebreak_lowest_index():
+    votes = np.array([[5, 5, 1], [1, 7, 7]], dtype=np.int32)
+    labels = np.array([1, 1], dtype=np.int32)
+    # sample0: classes 0,1 tie at 5 -> top1 = class 0 (lowest index) -> wrong
+    # sample1: classes 1,2 tie at 7 -> top1 = class 1 -> right
+    assert modelmod.accuracy_top_k(votes, labels, 1) == pytest.approx(0.5)
+    assert modelmod.accuracy_top_k(votes, labels, 2) == pytest.approx(1.0)
+
+
+def test_prefix_schedule():
+    np.testing.assert_array_equal(modelmod.prefix_schedule(3), [0.0, 2.0, 4.0])
+    assert len(modelmod.prefix_schedule(33)) == 33
+    assert modelmod.prefix_schedule(33)[-1] == 64.0

@@ -1,0 +1,90 @@
+"""Analog matchline physics: monotonicity and range invariants (paper §III)."""
+
+import hypothesis
+import hypothesis.strategies as st
+import numpy as np
+import pytest
+
+from compile import physics
+
+HYP = hypothesis.settings(max_examples=50, deadline=None)
+
+
+def test_tolerance_zero_at_vdd():
+    # V_ref = V_DD -> ML never above reference after precharge decay -> tol 0
+    assert physics.hd_tolerance(physics.V_DD, 0.9, 1.0) == 0.0
+
+
+@HYP
+@hypothesis.given(
+    v1=st.floats(0.6, 1.19), v2=st.floats(0.6, 1.19),
+    veval=st.floats(0.31, 1.2), vst=st.floats(0.6, 1.2),
+)
+def test_lower_vref_raises_tolerance(v1, v2, veval, vst):
+    lo, hi = min(v1, v2), max(v1, v2)
+    assert physics.hd_tolerance(lo, veval, vst) >= physics.hd_tolerance(hi, veval, vst)
+
+
+@HYP
+@hypothesis.given(
+    vref=st.floats(0.6, 1.19), v1=st.floats(0.31, 1.2), v2=st.floats(0.31, 1.2),
+    vst=st.floats(0.6, 1.2),
+)
+def test_lower_veval_raises_tolerance(vref, v1, v2, vst):
+    lo, hi = min(v1, v2), max(v1, v2)
+    assert physics.hd_tolerance(vref, lo, vst) >= physics.hd_tolerance(vref, hi, vst)
+
+
+@HYP
+@hypothesis.given(
+    vref=st.floats(0.6, 1.19), veval=st.floats(0.31, 1.2),
+    v1=st.floats(0.6, 1.2), v2=st.floats(0.6, 1.2),
+)
+def test_higher_vst_raises_tolerance(vref, veval, v1, v2):
+    # higher V_st -> earlier sampling (shorter delay) -> less discharge -> more tolerant
+    lo, hi = min(v1, v2), max(v1, v2)
+    assert physics.hd_tolerance(vref, veval, hi) >= physics.hd_tolerance(vref, veval, lo)
+
+
+@pytest.mark.parametrize("n", [256, 1024, 2048])
+def test_dynamic_range_covers_midpoint(n):
+    """The knobs must reach tolerance > n/2 (majority op) and < 1 (exact)."""
+    hi = physics.hd_tolerance(physics.VREF_RANGE[0], physics.VEVAL_RANGE[0] + 1e-4,
+                              physics.VST_RANGE[1], n)
+    lo = physics.hd_tolerance(1.19, physics.VEVAL_RANGE[1], physics.VST_RANGE[1], n)
+    assert hi > n / 2, hi
+    assert lo < max(1.0, n / 128), lo
+
+
+@HYP
+@hypothesis.given(
+    m1=st.integers(0, 256), m2=st.integers(0, 256),
+    veval=st.floats(0.31, 1.2), t=st.floats(1e-10, 5e-9),
+)
+def test_vml_monotone_in_mismatches(m1, m2, veval, t):
+    lo, hi = min(m1, m2), max(m1, m2)
+    assert physics.v_ml(lo, t, veval) >= physics.v_ml(hi, t, veval)
+
+
+def test_vml_zero_mismatch_holds_vdd():
+    assert physics.v_ml(0, 10e-9, 1.0) == pytest.approx(physics.V_DD)
+
+
+def test_fire_decision_consistent_with_tolerance():
+    """m <= tol  <=>  V_ML(t_s) > V_ref (the two formulations agree)."""
+    for vref, veval, vst in [(0.8, 0.9, 1.1), (0.65, 0.5, 0.9), (1.1, 1.1, 0.7)]:
+        tol = physics.hd_tolerance(vref, veval, vst, 256)
+        ts = physics.t_sample(vst)
+        for m in range(0, 257, 8):
+            fire_tol = m <= tol
+            fire_vml = physics.v_ml(m, ts, veval) > vref
+            # boundary cell can differ by float assoc; allow |m - tol| tiny
+            if abs(m - tol) > 1e-6:
+                assert fire_tol == fire_vml, (m, tol, vref, veval, vst)
+
+
+def test_schedule_is_paper_algorithm1():
+    assert physics.HD_SCHEDULE[0] == 0
+    assert physics.HD_SCHEDULE[-1] == 64
+    assert len(physics.HD_SCHEDULE) == 33
+    assert all(b - a == 2 for a, b in zip(physics.HD_SCHEDULE, physics.HD_SCHEDULE[1:]))

@@ -1,0 +1,122 @@
+"""Training path: STE gradients, Adam, fold, export packing."""
+
+import io
+import struct
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from compile import data as datamod
+from compile import model as modelmod
+from compile import train as trainmod
+
+
+def test_sign_ste_forward():
+    v = jnp.asarray([-2.0, -0.5, 0.0, 0.5, 2.0])
+    out = np.asarray(trainmod.sign_ste(v))
+    np.testing.assert_array_equal(out, [-1.0, -1.0, 1.0, 1.0, 1.0])
+
+
+def test_sign_ste_gradient_hardtanh():
+    g = jax.grad(lambda v: trainmod.sign_ste(v).sum())(
+        jnp.asarray([-2.0, -0.5, 0.5, 2.0])
+    )
+    np.testing.assert_array_equal(np.asarray(g), [0.0, 1.0, 1.0, 0.0])
+
+
+def test_adam_moves_params_and_clips_latents():
+    params = {"w1": jnp.asarray([[0.99]]), "gamma": jnp.asarray([1.0]),
+              "beta": jnp.asarray([0.0]), "w2": jnp.asarray([[-0.99]]),
+              "b2": jnp.asarray([0.0])}
+    grads = {"w1": jnp.asarray([[-1.0]]), "gamma": jnp.asarray([0.5]),
+             "beta": jnp.asarray([0.5]), "w2": jnp.asarray([[1.0]]),
+             "b2": jnp.asarray([0.5])}
+    opt = trainmod.adam_init(params)
+    p1, _ = trainmod.adam_update(params, grads, opt, lr=0.05)
+    assert float(p1["w1"][0, 0]) <= 1.0
+    assert float(p1["w2"][0, 0]) >= -1.0
+    assert float(p1["gamma"][0]) != 1.0
+
+
+def test_training_reduces_loss_tiny():
+    xtr, ytr, xte, yte = datamod.make_mnist_like(600, 100, seed=8)
+    params, bn = trainmod.train_model(xtr, ytr, 32, 10, epochs=4, seed=0)
+    w1f, c1, w2, c2 = trainmod.fold_model(params, bn)
+    top1, top2 = trainmod.eval_digital(xte, yte, jnp.asarray(w1f),
+                                       c1, jnp.asarray(w2), c2)
+    assert top1 > 0.5  # far above chance (0.1)
+    assert top2 >= top1
+
+
+def test_fold_model_binary_weights():
+    xtr, ytr, _, _ = datamod.make_mnist_like(300, 10, seed=8)
+    params, bn = trainmod.train_model(xtr, ytr, 16, 10, epochs=1, seed=0)
+    w1f, c1, w2, c2 = trainmod.fold_model(params, bn)
+    assert set(np.unique(w1f)) <= {-1.0, 1.0}
+    assert set(np.unique(w2)) <= {-1.0, 1.0}
+    assert c1.shape == (16,) and c2.shape == (10,)
+
+
+# ------------------------------------------------------------------
+# export packing
+# ------------------------------------------------------------------
+
+
+def unpack_bits_pm1(packed, m):
+    n, words = packed.shape
+    out = np.empty((n, m), np.float32)
+    for j in range(m):
+        out[:, j] = np.where((packed[:, j // 64] >> np.uint64(j % 64)) & np.uint64(1), 1.0, -1.0)
+    return out
+
+
+def test_pack_bits_roundtrip():
+    rng = np.random.default_rng(0)
+    for m in (1, 63, 64, 65, 784, 4096):
+        arr = np.sign(rng.standard_normal((5, m))).astype(np.float32)
+        arr[arr == 0] = 1.0
+        packed = trainmod.pack_bits_pm1(arr)
+        assert packed.shape == (5, (m + 63) // 64)
+        np.testing.assert_array_equal(unpack_bits_pm1(packed, m), arr)
+
+
+def test_weights_bin_format(tmp_path):
+    rng = np.random.default_rng(1)
+    w = np.sign(rng.standard_normal((10, 100))).astype(np.float32)
+    w[w == 0] = 1.0
+    lm = modelmod.map_layer(w, rng.standard_normal(10) * 3)
+    path = tmp_path / "m.bin"
+    trainmod.write_weights_bin(str(path), [lm], (0, 2, 4))
+    raw = path.read_bytes()
+    assert raw[:8] == b"PICBNN1\x00"
+    (n_layers,) = struct.unpack_from("<I", raw, 8)
+    assert n_layers == 1
+    n_out, n_in, n_seg, seg_w = struct.unpack_from("<IIII", raw, 12)
+    assert (n_out, n_in, n_seg) == (10, 100, 1)
+    assert seg_w == lm.seg_width
+    # schedule trailer
+    k = struct.unpack_from("<I", raw, len(raw) - 4 - 3 * 4)[0]
+    assert k == 3
+    sched = struct.unpack_from("<3i", raw, len(raw) - 3 * 4)
+    assert sched == (0, 2, 4)
+
+
+def test_test_bin_format(tmp_path):
+    rng = np.random.default_rng(2)
+    x = np.sign(rng.standard_normal((7, 130))).astype(np.float32)
+    x[x == 0] = 1.0
+    y = rng.integers(0, 5, 7).astype(np.int32)
+    path = tmp_path / "t.bin"
+    trainmod.write_test_bin(str(path), x, y)
+    raw = path.read_bytes()
+    assert raw[:8] == b"PICTEST1"
+    n, m, ncls = struct.unpack_from("<III", raw, 8)
+    assert (n, m) == (7, 130)
+    assert ncls == int(y.max()) + 1
+    labels = np.frombuffer(raw, np.uint8, count=7, offset=20)
+    np.testing.assert_array_equal(labels, y.astype(np.uint8))
+    words = (130 + 63) // 64
+    packed = np.frombuffer(raw, "<u8", offset=20 + 7).reshape(7, words)
+    np.testing.assert_array_equal(unpack_bits_pm1(packed, 130), x)

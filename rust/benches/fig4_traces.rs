@@ -1,0 +1,70 @@
+//! Experiment F4 — regenerate paper Fig. 4: matchline discharge waveforms
+//! V_ML(t) for rows with fewer / equal / more mismatches than the majority
+//! point, the MLSA sampling instant, and the resulting decisions.  Printed
+//! as aligned series (time in ns, voltage in V) suitable for plotting.
+
+use picbnn::analog::{MatchlineModel, Pvt, RowVariation};
+use picbnn::benchkit::Table;
+
+fn main() {
+    let n_cells = 256;
+    let model = MatchlineModel::new(n_cells, Pvt::nominal());
+    // majority operating point: tolerance at n/2
+    let ctl = picbnn::accel::VoltageController::new(n_cells, Pvt::nominal());
+    let p = ctl.calibrate((n_cells / 2) as u32, 2.0).expect("majority point");
+    let v = p.voltages;
+    let ts = model.sampling_time(&v);
+    println!(
+        "majority operating point: V_ref={:.0} mV V_eval={:.0} mV V_st={:.0} mV",
+        v.vref * 1e3,
+        v.veval * 1e3,
+        v.vst * 1e3
+    );
+    println!("MLSA sampling time t_s = {:.2} ns; tolerance = {:.1} mismatches\n", ts * 1e9, p.achieved_tol);
+
+    let majority = (n_cells / 2) as u32;
+    let cases = [
+        ("matches >> mismatches", majority / 4),
+        ("just under majority", majority - 8),
+        ("at majority", majority),
+        ("just over majority", majority + 8),
+        ("mismatches >> matches", majority * 7 / 4),
+    ];
+    let n_pts = 17;
+    let mut table = Table::new(
+        "F4: V_ML(t) traces [V] (columns = time in ns; * = sampled at t_s)",
+        &{
+            let mut h = vec!["mismatches".to_string()];
+            for i in 0..n_pts {
+                let t = 2.0 * ts * i as f64 / (n_pts - 1) as f64;
+                let mark = if (t - ts).abs() < ts / (n_pts as f64) { "*" } else { "" };
+                h.push(format!("{:.2}{mark}", t * 1e9));
+            }
+            h.iter().map(|s| s.as_str().to_owned()).collect::<Vec<_>>()
+        }
+        .iter()
+        .map(String::as_str)
+        .collect::<Vec<_>>(),
+    );
+    for (label, m) in cases {
+        let trace = model.trace(m, 2.0 * ts, n_pts, &v);
+        let mut row = vec![format!("{m} ({label})")];
+        for (_, vml) in &trace {
+            row.push(format!("{vml:.3}"));
+        }
+        table.row(row);
+    }
+    table.print();
+
+    println!("\ndecisions at t_s (fires = V_ML > V_ref = {:.3} V):", v.vref);
+    for (label, m) in cases {
+        let fires = model.fires_nominal(m, &v, &RowVariation::nominal());
+        println!(
+            "  m = {m:<4} ({label:<24}) V_ML(t_s) = {:.3} V  ->  {}",
+            model.v_ml(m, ts, &v),
+            if fires { "'1' (+1)" } else { "'0' (-1)" }
+        );
+    }
+    println!("\npaper Fig. 4: green (slow discharge, match) crosses V_ref after t_s;");
+    println!("black (fast discharge, mismatch majority) crosses before t_s — same shape.");
+}

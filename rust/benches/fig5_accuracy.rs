@@ -1,0 +1,81 @@
+//! Experiment F5 — regenerate paper Fig. 5: TOP-1 and TOP-2 accuracy vs
+//! the number of output-layer executions (prefix of the HD-threshold
+//! schedule, 1..33) for both datasets, on the analog CAM simulator, with
+//! the software baseline as the reference line.
+
+use picbnn::accel::{evaluate, Pipeline, PipelineOptions};
+use picbnn::baseline::{digital_predict, digital_top2};
+use picbnn::benchkit::Table;
+use picbnn::bnn::model::MappedModel;
+use picbnn::data::{ModelMeta, TestSet};
+use picbnn::util::Timer;
+
+fn main() {
+    let t = Timer::start();
+    let dir = picbnn::artifacts_dir();
+    for name in ["mnist", "hg"] {
+        let Ok(model) = MappedModel::load(dir.join(format!("{name}_weights.bin"))) else {
+            println!("skipping {name}: artifacts not built");
+            continue;
+        };
+        let test = TestSet::load(dir.join(format!("{name}_test.bin"))).expect("test set");
+        let meta = ModelMeta::load(dir.join(format!("{name}_meta.json"))).expect("meta");
+        let n = 1000.min(test.len());
+
+        // software baseline reference
+        let (mut sw1, mut sw2) = (0usize, 0usize);
+        for (x, &y) in test.images[..n].iter().zip(&test.labels[..n]) {
+            if digital_predict(&model, x) == y as usize {
+                sw1 += 1;
+            }
+            if digital_top2(&model, x).contains(&(y as usize)) {
+                sw2 += 1;
+            }
+        }
+
+        let mut table = Table::new(
+            &format!(
+                "F5 ({name}): accuracy vs output-layer executions (analog CAM, {n} images)"
+            ),
+            &["executions", "max HD thr", "TOP-1", "TOP-2"],
+        );
+        for k in [1usize, 3, 5, 9, 13, 17, 21, 25, 29, 33] {
+            let mut pipe = Pipeline::new(
+                &model,
+                PipelineOptions {
+                    schedule_prefix: Some(k),
+                    ..Default::default()
+                },
+            );
+            let mut votes = Vec::with_capacity(n);
+            for chunk in test.images[..n].chunks(256) {
+                votes.extend(pipe.classify_batch(chunk).into_iter().map(|(v, _)| v));
+            }
+            let acc = evaluate(&votes, &test.labels[..n]);
+            table.row(vec![
+                k.to_string(),
+                (2 * (k - 1)).to_string(),
+                format!("{:.4}", acc.top1),
+                format!("{:.4}", acc.top2),
+            ]);
+        }
+        table.row(vec![
+            "digital (mapped)".into(),
+            "-".into(),
+            format!("{:.4}", sw1 as f64 / n as f64),
+            format!("{:.4}", sw2 as f64 / n as f64),
+        ]);
+        table.row(vec![
+            "software (float fold)".into(),
+            "-".into(),
+            format!("{:.4}", meta.software_top1),
+            format!("{:.4}", meta.software_top2),
+        ]);
+        table.print();
+        println!(
+            "paper: {name} saturates at top1 {:.3} (software {:.3}); accuracy must\nrise with executions and plateau near the baseline.\n",
+            meta.paper_cam_top1, meta.paper_software_top1
+        );
+    }
+    println!("[fig5_accuracy done in {:.1}s]", t.elapsed_s());
+}

@@ -1,0 +1,94 @@
+//! Hot-path microbenchmarks for the §Perf optimisation loop: packed
+//! Hamming distance, array search, row programming, vote accumulation,
+//! and the end-to-end per-image cost on both models.
+
+use picbnn::accel::{Pipeline, PipelineOptions};
+use picbnn::benchkit::{bench, black_box};
+use picbnn::bnn::model::MappedModel;
+use picbnn::cam::{CamArray, CamConfig};
+use picbnn::data::TestSet;
+use picbnn::util::bitops::{hamming_words, BitMatrix, BitVec};
+use picbnn::util::rng::Rng;
+
+fn rand_bits(n: usize, rng: &mut Rng) -> BitVec {
+    let mut v = BitVec::zeros(n);
+    for i in 0..n {
+        v.set(i, rng.chance(0.5));
+    }
+    v
+}
+
+fn main() {
+    let mut rng = Rng::new(1, 1);
+
+    // packed hamming over one 1024-bit row
+    let a = rand_bits(1024, &mut rng);
+    let b = rand_bits(1024, &mut rng);
+    let r = bench("hamming_1024b_single_row", || {
+        black_box(hamming_words(black_box(a.words()), black_box(b.words())));
+    });
+    println!(
+        "  -> {:.2} G row-bits/s",
+        r.throughput(1024.0) / 1e9
+    );
+
+    // full-matrix hamming (128 rows of 1024)
+    let rows: Vec<BitVec> = (0..128).map(|_| rand_bits(1024, &mut rng)).collect();
+    let m = BitMatrix::from_rows(&rows);
+    let q = rand_bits(1024, &mut rng);
+    let mut out = Vec::new();
+    let r = bench("hamming_all_128x1024", || {
+        m.hamming_all(black_box(&q), &mut out);
+        black_box(&out);
+    });
+    println!("  -> {:.2} M row-searches/s", r.throughput(128.0) / 1e6);
+
+    // array search (nominal + analog)
+    for (label, mut cam) in [
+        ("search_1024x128_nominal", CamArray::nominal(CamConfig::W1024x128)),
+        ("search_1024x128_analog", CamArray::analog(CamConfig::W1024x128, 7)),
+    ] {
+        for row in 0..128 {
+            let data = rand_bits(1024, &mut rng);
+            cam.write_row(row, &data);
+        }
+        cam.set_voltages(picbnn::analog::Voltages::new(0.75, 0.5, 1.0));
+        let q = rand_bits(1024, &mut rng);
+        let (mut mm, mut ff) = (Vec::new(), Vec::new());
+        let r = bench(label, || {
+            cam.search_into(black_box(&q), &mut mm, &mut ff);
+            black_box(&ff);
+        });
+        println!("  -> {:.2} M row-evals/s", r.throughput(128.0) / 1e6);
+    }
+
+    // row programming
+    {
+        let mut cam = CamArray::analog(CamConfig::W1024x128, 9);
+        let data = rand_bits(1024, &mut rng);
+        let mut row = 0usize;
+        bench("write_row_1024b", || {
+            cam.write_row(black_box(row), black_box(&data));
+            row = (row + 1) % 128;
+        });
+    }
+
+    // end-to-end per-image (batch-256 amortised)
+    let dir = picbnn::artifacts_dir();
+    for name in ["mnist", "hg"] {
+        let Ok(model) = MappedModel::load(dir.join(format!("{name}_weights.bin"))) else {
+            println!("skipping {name} e2e micro: artifacts not built");
+            continue;
+        };
+        let test = TestSet::load(dir.join(format!("{name}_test.bin"))).expect("test set");
+        let mut pipe = Pipeline::new(&model, PipelineOptions::default());
+        let imgs: Vec<BitVec> = test.images[..256.min(test.len())].to_vec();
+        let r = bench(&format!("pipeline_batch256_{name}"), || {
+            black_box(pipe.classify_batch(black_box(&imgs)));
+        });
+        println!(
+            "  -> {:.0} host images/s (simulator speed, not device speed)",
+            r.throughput(imgs.len() as f64)
+        );
+    }
+}

@@ -1,0 +1,81 @@
+//! Experiment A3 — architecture ablation: the two execution backends
+//! (native analog CAM simulator vs the PJRT-compiled AOT JAX/Pallas graph)
+//! must agree bit-for-bit in nominal mode; this bench also compares their
+//! host-side throughput (the PJRT path is the fast functional reference,
+//! the simulator the evaluated device).
+
+use picbnn::accel::{Pipeline, PipelineOptions};
+use picbnn::benchkit::Table;
+use picbnn::bnn::infer::digital_forward;
+use picbnn::bnn::model::MappedModel;
+use picbnn::cam::NoiseMode;
+use picbnn::data::TestSet;
+use picbnn::runtime::InferEngine;
+use picbnn::util::Timer;
+
+fn main() {
+    let t0 = Timer::start();
+    let dir = picbnn::artifacts_dir();
+    let mut table = Table::new(
+        "A3: execution backend comparison (nominal mode, host wall-clock)",
+        &["model", "backend", "images", "agree", "host img/s"],
+    );
+    for name in ["mnist", "hg"] {
+        let Ok(model) = MappedModel::load(dir.join(format!("{name}_weights.bin"))) else {
+            println!("skipping {name}: artifacts not built");
+            return;
+        };
+        let test = TestSet::load(dir.join(format!("{name}_test.bin"))).expect("test set");
+        let n = 512.min(test.len());
+        // digital reference (ground truth)
+        let want: Vec<_> = test.images[..n]
+            .iter()
+            .map(|x| digital_forward(&model, x, &model.schedule))
+            .collect();
+
+        // native CAM simulator
+        let mut pipe = Pipeline::new(
+            &model,
+            PipelineOptions {
+                noise: NoiseMode::Nominal,
+                ..Default::default()
+            },
+        );
+        let t = Timer::start();
+        let mut got = Vec::with_capacity(n);
+        for chunk in test.images[..n].chunks(256) {
+            got.extend(pipe.classify_batch(chunk));
+        }
+        let sim_rate = n as f64 / t.elapsed_s();
+        let sim_agree = got == want;
+        table.row(vec![
+            name.into(),
+            "CAM simulator".into(),
+            n.to_string(),
+            sim_agree.to_string(),
+            format!("{sim_rate:.0}"),
+        ]);
+
+        // PJRT path
+        match InferEngine::load(name, &model) {
+            Ok(engine) => {
+                let t = Timer::start();
+                let got = engine.classify_all(&test.images[..n]).expect("pjrt");
+                let rate = n as f64 / t.elapsed_s();
+                let agree = got == want;
+                table.row(vec![
+                    name.into(),
+                    "PJRT (AOT HLO)".into(),
+                    n.to_string(),
+                    agree.to_string(),
+                    format!("{rate:.0}"),
+                ]);
+                assert!(agree, "{name}: PJRT diverged from digital reference");
+            }
+            Err(e) => println!("{name}: PJRT unavailable: {e}"),
+        }
+        assert!(sim_agree, "{name}: simulator diverged from digital reference");
+    }
+    table.print();
+    println!("\n[runtime_path done in {:.1}s]", t0.elapsed_s());
+}

@@ -1,0 +1,63 @@
+//! Experiment T1 — regenerate paper Table I: voltage triples realising HD
+//! tolerance targets {0, 4, ..., 36}, via the calibration search against
+//! the analog model, with behavioural verification at each point.
+//! Also reports the Algorithm-1 schedule calibration on 512-cell words
+//! (what the MNIST output layer actually uses).
+
+use picbnn::accel::VoltageController;
+use picbnn::analog::Pvt;
+use picbnn::benchkit::Table;
+use picbnn::util::Timer;
+
+fn main() {
+    let t = Timer::start();
+
+    // --- Table I proper: 256-cell rows, targets {0, 4, ..., 36} ---
+    let ctl = VoltageController::new(256, Pvt::nominal());
+    let mut table = Table::new(
+        "T1: calibrated (V_ref, V_eval, V_st) -> HD tolerance, 256-cell rows",
+        &["HD tol", "V_ref (mV)", "V_eval (mV)", "V_st (mV)", "achieved", "FA", "FR"],
+    );
+    for target in (0..=36).step_by(4) {
+        let p = ctl
+            .calibrate(target, 0.5)
+            .or_else(|| ctl.calibrate(target, 2.0))
+            .expect("target unreachable");
+        let (fa, fr) = ctl.verify(&p, 8);
+        table.row(vec![
+            target.to_string(),
+            format!("{:.0}", p.voltages.vref * 1e3),
+            format!("{:.0}", p.voltages.veval * 1e3),
+            format!("{:.0}", p.voltages.vst * 1e3),
+            format!("{:.2}", p.achieved_tol),
+            fa.to_string(),
+            fr.to_string(),
+        ]);
+    }
+    table.print();
+    println!("paper Table I: same targets, silicon-specific millivolts; FA/FR = ");
+    println!("false accepts/rejects over a ±8-bit probe around each target (want 0/0).");
+
+    // --- the working schedules the pipeline calibrates ---
+    for (cells, label) in [(512usize, "output layer (512-cell words)"),
+                           (1024, "hidden midpoint (1024-cell words)")] {
+        let ctl = VoltageController::new(cells, Pvt::nominal());
+        let targets: Vec<u32> = if cells == 512 {
+            (0..=64).step_by(2).collect()
+        } else {
+            vec![512]
+        };
+        let points = ctl.calibrate_schedule(&targets);
+        let worst = points
+            .iter()
+            .map(|p| (p.achieved_tol - (p.target_tol as f64 + 0.5)).abs())
+            .fold(0.0f64, f64::max);
+        println!(
+            "\n{label}: {} targets calibrated, worst placement error {:.3} bits",
+            points.len(),
+            worst
+        );
+    }
+
+    println!("\n[table1_calibration done in {:.1}s]", t.elapsed_s());
+}

@@ -1,0 +1,67 @@
+//! Experiment T2 — regenerate paper Table II: throughput, power, energy
+//! efficiency, and area from event-level accounting of the full Algorithm-1
+//! workload on the analog simulator (batched, as measured on silicon).
+
+use picbnn::accel::{Pipeline, PipelineOptions};
+use picbnn::benchkit::Table;
+use picbnn::bnn::model::MappedModel;
+use picbnn::data::TestSet;
+use picbnn::energy;
+use picbnn::util::Timer;
+
+fn main() {
+    let t = Timer::start();
+    let dir = picbnn::artifacts_dir();
+    let mut table = Table::new(
+        "T2: hardware parameters (batch 256, full Algorithm-1 schedule)",
+        &["metric", "mnist", "hg", "paper (mnist)"],
+    );
+    let mut cols: Vec<Vec<String>> = Vec::new();
+    for name in ["mnist", "hg"] {
+        let Ok(model) = MappedModel::load(dir.join(format!("{name}_weights.bin"))) else {
+            println!("skipping {name}: artifacts not built");
+            return;
+        };
+        let test = TestSet::load(dir.join(format!("{name}_test.bin"))).expect("test set");
+        let n = 1024.min(test.len());
+        let mut pipe = Pipeline::new(&model, PipelineOptions::default());
+        for chunk in test.images[..n].chunks(256) {
+            pipe.classify_batch(chunk);
+        }
+        let stats = pipe.take_stats(n as u64);
+        let r = energy::report(&stats);
+        cols.push(vec![
+            format!("{:.0}", r.inf_per_s),
+            format!("{:.3}", r.power_w * 1e3),
+            format!("{:.0}", r.inf_per_s_per_w / 1e6),
+            format!("{:.0}", r.ops_per_w / 1e12),
+            format!("{:.1}", r.cycles_per_inference),
+            format!("{:.2}", r.macro_area_mm2),
+            format!("{:.2}", r.soc_area_mm2),
+            format!("{:.1}", 1e9 * r.energy.total() / r.inferences as f64),
+        ]);
+    }
+    let rows = [
+        ("throughput (inf/s)", "560000"),
+        ("power (mW)", "0.8"),
+        ("efficiency (M inf/s/W)", "703"),
+        ("efficiency (TOPS/W)", "184 ('TOPs/s')"),
+        ("cycles / inference", "~44.6"),
+        ("macro area (mm²)", "0.87"),
+        ("SoC area (mm²)", "2.38"),
+        ("energy / inference (nJ)", "~1.43"),
+    ];
+    for (i, (metric, paper)) in rows.iter().enumerate() {
+        table.row(vec![
+            metric.to_string(),
+            cols[0][i].clone(),
+            cols[1][i].clone(),
+            paper.to_string(),
+        ]);
+    }
+    table.print();
+    println!("\nHG is slower than MNIST because its input layer needs 6 weight");
+    println!("reloads/batch (384 rows of 2048 bits vs 64 resident) + 32 I/O cycles");
+    println!("per 4096-bit image; the paper reports MNIST-only throughput.");
+    println!("\n[table2_hw done in {:.1}s]", t.elapsed_s());
+}

@@ -1,0 +1,153 @@
+//! Request batcher: groups incoming inference requests so the pipeline can
+//! amortise weight loads and voltage retunes across a batch (paper §V-B).
+//!
+//! Policy: flush when `max_batch` requests are pending, or when the oldest
+//! pending request has waited `max_wait`.  This is the classic dynamic-
+//! batching latency/throughput dial: larger batches amortise the 33
+//! per-batch retunes over more images but add queueing delay.
+
+use std::time::{Duration, Instant};
+
+use crate::util::bitops::BitVec;
+
+/// A pending inference request.
+#[derive(Clone, Debug)]
+pub struct Request {
+    pub id: u64,
+    pub image: BitVec,
+    pub enqueued: Instant,
+}
+
+/// Batching policy knobs.
+#[derive(Clone, Copy, Debug)]
+pub struct BatchPolicy {
+    pub max_batch: usize,
+    pub max_wait: Duration,
+}
+
+impl Default for BatchPolicy {
+    fn default() -> Self {
+        BatchPolicy {
+            max_batch: 256,
+            max_wait: Duration::from_millis(2),
+        }
+    }
+}
+
+/// FIFO batcher.
+#[derive(Debug)]
+pub struct Batcher {
+    policy: BatchPolicy,
+    queue: Vec<Request>,
+    next_id: u64,
+}
+
+impl Batcher {
+    pub fn new(policy: BatchPolicy) -> Self {
+        Batcher {
+            policy,
+            queue: Vec::new(),
+            next_id: 0,
+        }
+    }
+
+    /// Enqueue an image; returns its request id.
+    pub fn push(&mut self, image: BitVec) -> u64 {
+        let id = self.next_id;
+        self.next_id += 1;
+        self.queue.push(Request {
+            id,
+            image,
+            enqueued: Instant::now(),
+        });
+        id
+    }
+
+    pub fn pending(&self) -> usize {
+        self.queue.len()
+    }
+
+    /// Should the current queue be flushed now?
+    pub fn ready(&self, now: Instant) -> bool {
+        if self.queue.len() >= self.policy.max_batch {
+            return true;
+        }
+        match self.queue.first() {
+            Some(first) => now.duration_since(first.enqueued) >= self.policy.max_wait,
+            None => false,
+        }
+    }
+
+    /// Take up to `max_batch` requests (FIFO order).
+    pub fn drain_batch(&mut self) -> Vec<Request> {
+        let n = self.queue.len().min(self.policy.max_batch);
+        self.queue.drain(..n).collect()
+    }
+
+    /// Force-flush everything (shutdown).
+    pub fn drain_all(&mut self) -> Vec<Request> {
+        std::mem::take(&mut self.queue)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn img() -> BitVec {
+        BitVec::ones(16)
+    }
+
+    #[test]
+    fn flushes_at_max_batch() {
+        let mut b = Batcher::new(BatchPolicy {
+            max_batch: 3,
+            max_wait: Duration::from_secs(100),
+        });
+        b.push(img());
+        b.push(img());
+        assert!(!b.ready(Instant::now()));
+        b.push(img());
+        assert!(b.ready(Instant::now()));
+        let batch = b.drain_batch();
+        assert_eq!(batch.len(), 3);
+        assert_eq!(batch[0].id, 0);
+        assert_eq!(b.pending(), 0);
+    }
+
+    #[test]
+    fn flushes_on_timeout() {
+        let mut b = Batcher::new(BatchPolicy {
+            max_batch: 100,
+            max_wait: Duration::from_millis(1),
+        });
+        b.push(img());
+        assert!(!b.ready(Instant::now()));
+        assert!(b.ready(Instant::now() + Duration::from_millis(5)));
+    }
+
+    #[test]
+    fn drain_batch_caps_at_policy() {
+        let mut b = Batcher::new(BatchPolicy {
+            max_batch: 2,
+            max_wait: Duration::ZERO,
+        });
+        for _ in 0..5 {
+            b.push(img());
+        }
+        assert_eq!(b.drain_batch().len(), 2);
+        assert_eq!(b.pending(), 3);
+        assert_eq!(b.drain_all().len(), 3);
+    }
+
+    #[test]
+    fn ids_monotone_fifo() {
+        let mut b = Batcher::new(BatchPolicy::default());
+        let a = b.push(img());
+        let c = b.push(img());
+        assert!(c > a);
+        let batch = b.drain_all();
+        assert_eq!(batch[0].id, a);
+        assert_eq!(batch[1].id, c);
+    }
+}

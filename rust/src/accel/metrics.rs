@@ -1,0 +1,65 @@
+//! Accuracy metrics shared by the experiment benches: TOP-1 / TOP-2 with
+//! the device's lowest-class-index tie-breaking.
+
+use crate::bnn::infer::top_k;
+
+/// TOP-1/TOP-2 accuracy over a labelled evaluation run.
+#[derive(Clone, Copy, Debug, Default, PartialEq)]
+pub struct Accuracy {
+    pub top1: f64,
+    pub top2: f64,
+    pub n: usize,
+}
+
+/// Compute accuracy from (votes, label) pairs.
+pub fn evaluate(votes: &[Vec<u32>], labels: &[u8]) -> Accuracy {
+    assert_eq!(votes.len(), labels.len());
+    let mut hit1 = 0usize;
+    let mut hit2 = 0usize;
+    for (v, &y) in votes.iter().zip(labels) {
+        let top = top_k(v, 2);
+        if top.first() == Some(&(y as usize)) {
+            hit1 += 1;
+        }
+        if top.contains(&(y as usize)) {
+            hit2 += 1;
+        }
+    }
+    let n = votes.len().max(1);
+    Accuracy {
+        top1: hit1 as f64 / n as f64,
+        top2: hit2 as f64 / n as f64,
+        n: votes.len(),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn perfect_and_partial() {
+        let votes = vec![vec![9, 1, 0], vec![1, 9, 0], vec![0, 9, 1]];
+        let labels = vec![0u8, 1, 2];
+        let acc = evaluate(&votes, &labels);
+        assert!((acc.top1 - 2.0 / 3.0).abs() < 1e-12);
+        assert!((acc.top2 - 3.0 / 3.0).abs() < 1e-12);
+        assert_eq!(acc.n, 3);
+    }
+
+    #[test]
+    fn tie_breaks_to_lowest_index() {
+        // class 0 and 1 tie; device predicts 0
+        let votes = vec![vec![5, 5]];
+        assert_eq!(evaluate(&votes, &[0]).top1, 1.0);
+        assert_eq!(evaluate(&votes, &[1]).top1, 0.0);
+        assert_eq!(evaluate(&votes, &[1]).top2, 1.0);
+    }
+
+    #[test]
+    fn empty_is_zero() {
+        let acc = evaluate(&[], &[]);
+        assert_eq!(acc.n, 0);
+        assert_eq!(acc.top1, 0.0);
+    }
+}

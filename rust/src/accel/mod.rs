@@ -1,0 +1,14 @@
+//! L3 accelerator coordination: voltage calibration (Table I), the
+//! Algorithm-1 inference pipeline, request batching, and accuracy metrics.
+
+pub mod batcher;
+pub mod metrics;
+pub mod parallel;
+pub mod pipeline;
+pub mod voltage;
+
+pub use batcher::{BatchPolicy, Batcher, Request};
+pub use metrics::{evaluate, Accuracy};
+pub use parallel::classify_parallel;
+pub use pipeline::{Pipeline, PipelineOptions, RunStats};
+pub use voltage::{CalibratedPoint, VoltageController};

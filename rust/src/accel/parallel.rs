@@ -1,0 +1,126 @@
+//! Host-parallel evaluation: shard a workload over N independent simulated
+//! devices (one `Pipeline` per thread, deterministic per-shard seeds) and
+//! merge results in order.
+//!
+//! This models a *fleet* of PiC-BNN macros, but its practical role here is
+//! simulation throughput: large accuracy sweeps (Fig. 5 regenerates 20
+//! full-test-set runs) are embarrassingly parallel across images.
+
+use crate::bnn::model::MappedModel;
+use crate::util::bitops::BitVec;
+
+use super::pipeline::{Pipeline, PipelineOptions, RunStats};
+
+/// Classify `images` using `n_threads` pipelines; returns per-image
+/// (votes, prediction) in input order plus the merged device statistics.
+///
+/// Each shard's pipeline seeds its noise stream from `opts.seed` + shard
+/// index, so results are deterministic for a given (seed, thread count).
+pub fn classify_parallel(
+    model: &MappedModel,
+    opts: PipelineOptions,
+    images: &[BitVec],
+    batch: usize,
+    n_threads: usize,
+) -> (Vec<(Vec<u32>, usize)>, RunStats) {
+    let n_threads = n_threads.max(1).min(images.len().max(1));
+    let chunk = images.len().div_ceil(n_threads);
+    let mut shard_results: Vec<Option<(Vec<(Vec<u32>, usize)>, RunStats)>> =
+        (0..n_threads).map(|_| None).collect();
+    std::thread::scope(|s| {
+        for (t, (shard, slot)) in images
+            .chunks(chunk.max(1))
+            .zip(shard_results.iter_mut())
+            .enumerate()
+        {
+            s.spawn(move || {
+                let shard_opts = PipelineOptions {
+                    seed: opts.seed.wrapping_add(t as u64),
+                    ..opts
+                };
+                let mut pipe = Pipeline::new(model, shard_opts);
+                let mut out = Vec::with_capacity(shard.len());
+                for b in shard.chunks(batch) {
+                    out.extend(pipe.classify_batch(b));
+                }
+                let stats = pipe.take_stats(shard.len() as u64);
+                *slot = Some((out, stats));
+            });
+        }
+    });
+    let mut results = Vec::with_capacity(images.len());
+    let mut stats = RunStats::default();
+    for slot in shard_results.into_iter().flatten() {
+        results.extend(slot.0);
+        stats.inferences += slot.1.inferences;
+        stats.cycles += slot.1.cycles;
+        stats.stall_s += slot.1.stall_s;
+        stats.events.add(&slot.1.events);
+    }
+    (results, stats)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::bnn::model::test_fixtures::tiny_model;
+    use crate::cam::NoiseMode;
+    use crate::util::rng::Rng;
+
+    fn images(n: usize, bits: usize) -> Vec<BitVec> {
+        let mut rng = Rng::new(3, 14);
+        (0..n)
+            .map(|_| {
+                let mut v = BitVec::zeros(bits);
+                for i in 0..bits {
+                    v.set(i, rng.chance(0.5));
+                }
+                v
+            })
+            .collect()
+    }
+
+    #[test]
+    fn parallel_matches_serial_nominal() {
+        let model = tiny_model(64, 8, 4, 55);
+        let imgs = images(50, 64);
+        let opts = PipelineOptions {
+            noise: NoiseMode::Nominal,
+            ..Default::default()
+        };
+        let mut serial = Pipeline::new(&model, opts);
+        let mut want = Vec::new();
+        for b in imgs.chunks(16) {
+            want.extend(serial.classify_batch(b));
+        }
+        for threads in [1, 2, 4, 7] {
+            let (got, stats) = classify_parallel(&model, opts, &imgs, 16, threads);
+            assert_eq!(got, want, "threads={threads}");
+            assert_eq!(stats.inferences, 50);
+        }
+    }
+
+    #[test]
+    fn parallel_deterministic_given_threads() {
+        let model = tiny_model(64, 8, 4, 56);
+        let imgs = images(40, 64);
+        let opts = PipelineOptions::default(); // analog noise
+        let (a, _) = classify_parallel(&model, opts, &imgs, 8, 4);
+        let (b, _) = classify_parallel(&model, opts, &imgs, 8, 4);
+        assert_eq!(a, b);
+    }
+
+    #[test]
+    fn stats_merge_counts_everything() {
+        let model = tiny_model(64, 8, 4, 57);
+        let imgs = images(30, 64);
+        let opts = PipelineOptions {
+            noise: NoiseMode::Nominal,
+            ..Default::default()
+        };
+        let (_, stats) = classify_parallel(&model, opts, &imgs, 8, 3);
+        assert_eq!(stats.inferences, 30);
+        assert!(stats.events.searches > 0);
+        assert!(stats.cycles > 0);
+    }
+}

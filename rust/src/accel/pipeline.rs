@@ -1,0 +1,498 @@
+//! The Algorithm-1 inference pipeline over the simulated CAM — the paper's
+//! L3 coordination contribution.
+//!
+//! Per batch of images (batching amortises weight loads *and* voltage
+//! retunes, paper §V-B):
+//!
+//! 1. For each hidden layer: reconfigure the array to the layer's word
+//!    width, program the rows load-by-load (a "load" is one segment's
+//!    neuron chunk that fits the configured row count — the weight-reload
+//!    scheduler for layers exceeding the 128-kbit capacity), set the
+//!    midpoint-tolerance voltages once, and search every image's segment
+//!    query; combine per-segment fires by majority into the hidden code.
+//! 2. For the output layer: program the class rows, then sweep the
+//!    HD-threshold schedule with thresholds in the *outer* loop — one
+//!    voltage retune per threshold per batch — accumulating one vote per
+//!    (image, class, threshold) where the class row fires.
+//! 3. Prediction = arg max votes (lowest class index on ties).
+
+use crate::analog::transistor::Pvt;
+use crate::bnn::infer::argmax_vote;
+use crate::bnn::mapping::{program_row, segment_query_wide};
+use crate::bnn::model::MappedModel;
+use crate::cam::{CamArray, CamConfig, NoiseMode};
+use crate::sim::EventCounters;
+use crate::util::bitops::BitVec;
+
+use super::voltage::{CalibratedPoint, VoltageController};
+
+/// Pipeline construction options.
+#[derive(Clone, Copy, Debug)]
+pub struct PipelineOptions {
+    pub noise: NoiseMode,
+    pub pvt: Pvt,
+    pub seed: u64,
+    /// Use only the first k schedule entries (Fig. 5 x-axis); None = all.
+    pub schedule_prefix: Option<usize>,
+    /// Per-evaluation noise multiplier (ablations; 1.0 = shipped device).
+    pub noise_scale: f64,
+}
+
+impl Default for PipelineOptions {
+    fn default() -> Self {
+        PipelineOptions {
+            noise: NoiseMode::Analog,
+            pvt: Pvt::nominal(),
+            seed: 0xB11A,
+            schedule_prefix: None,
+            noise_scale: 1.0,
+        }
+    }
+}
+
+/// One weight load: a contiguous chunk of neurons of one segment.
+#[derive(Clone, Debug)]
+struct Load {
+    seg: usize,
+    neuron_lo: usize,
+    neuron_hi: usize,
+}
+
+/// Extend a row/query image to the configured word width: spare columns
+/// store '1' and are driven with '1', so they always match and contribute
+/// nothing to the mismatch count (how the silicon handles words narrower
+/// than the configured width).
+fn fit_width(v: &BitVec, width: usize) -> BitVec {
+    if v.len() == width {
+        return v.clone();
+    }
+    debug_assert!(v.len() < width);
+    let mut out = BitVec::ones(width);
+    for i in 0..v.len() {
+        if !v.get(i) {
+            out.set(i, false);
+        }
+    }
+    out
+}
+
+/// Device-accurate inference engine for one mapped model.
+pub struct Pipeline<'m> {
+    model: &'m MappedModel,
+    cam: CamArray,
+    opts: PipelineOptions,
+    /// Midpoint operating point per non-output layer.
+    hidden_points: Vec<CalibratedPoint>,
+    /// Operating point per schedule threshold (output word width).
+    output_points: Vec<CalibratedPoint>,
+    /// Active schedule (possibly a prefix of the model's).
+    schedule: Vec<i32>,
+    /// Per-layer load plans.
+    plans: Vec<Vec<Load>>,
+    /// Which layer's weights are currently resident (load caching).
+    resident: Option<(usize, usize)>, // (layer, load index)
+    // scratch buffers (hot path allocates nothing per search)
+    scratch_m: Vec<u32>,
+    scratch_f: Vec<bool>,
+}
+
+/// Accumulated device statistics for a run.
+#[derive(Clone, Copy, Debug, Default)]
+pub struct RunStats {
+    pub inferences: u64,
+    pub cycles: u64,
+    pub stall_s: f64,
+    pub events: EventCounters,
+}
+
+impl RunStats {
+    pub fn elapsed_s(&self) -> f64 {
+        self.cycles as f64 / crate::analog::constants::F_CLK + self.stall_s
+    }
+
+    pub fn inferences_per_s(&self) -> f64 {
+        self.inferences as f64 / self.elapsed_s()
+    }
+
+    pub fn cycles_per_inference(&self) -> f64 {
+        self.cycles as f64 / self.inferences.max(1) as f64
+    }
+}
+
+impl<'m> Pipeline<'m> {
+    pub fn new(model: &'m MappedModel, opts: PipelineOptions) -> Self {
+        let out_layer = model.layers.last().expect("model has layers");
+        assert_eq!(out_layer.n_seg(), 1, "output layer must fit one CAM word");
+        // calibrate hidden midpoints + the output threshold schedule once
+        // NOTE: tolerances are calibrated against the *physical* word width
+        // of the configuration the layer runs at (C_ML scales with the full
+        // row), while thresholds stay in logical mismatch counts — padded
+        // spare columns always match and never discharge.
+        let hidden_points = model.layers[..model.layers.len() - 1]
+            .iter()
+            .map(|l| {
+                let cfg = CamConfig::fitting(l.seg_width)
+                    .unwrap_or_else(|| panic!("word width {} unsupported", l.seg_width));
+                let ctl = VoltageController::new(cfg.width(), opts.pvt);
+                let target = (l.seg_width / 2) as u32;
+                ctl.calibrate(target, 2.0)
+                    .or_else(|| ctl.calibrate(target, 4.0))
+                    .unwrap_or_else(|| ctl.calibrate_best(target))
+            })
+            .collect();
+        let schedule: Vec<i32> = match opts.schedule_prefix {
+            Some(k) => model.schedule.iter().copied().take(k).collect(),
+            None => model.schedule.clone(),
+        };
+        let out_cfg = CamConfig::fitting(out_layer.seg_width)
+            .expect("output word width unsupported");
+        let ctl_out = VoltageController::new(out_cfg.width(), opts.pvt);
+        let output_points = ctl_out.calibrate_schedule(
+            &schedule.iter().map(|&t| t.max(0) as u32).collect::<Vec<_>>(),
+        );
+        // load plans per layer
+        let plans = model
+            .layers
+            .iter()
+            .map(|l| {
+                let cfg = CamConfig::fitting(l.seg_width)
+                    .unwrap_or_else(|| panic!("word width {} unsupported", l.seg_width));
+                let rows = cfg.rows();
+                let mut loads = Vec::new();
+                for seg in 0..l.n_seg() {
+                    let mut lo = 0;
+                    while lo < l.n_out() {
+                        let hi = (lo + rows).min(l.n_out());
+                        loads.push(Load {
+                            seg,
+                            neuron_lo: lo,
+                            neuron_hi: hi,
+                        });
+                        lo = hi;
+                    }
+                }
+                loads
+            })
+            .collect();
+        let first_cfg = CamConfig::fitting(model.layers[0].seg_width).unwrap();
+        let mut cam = CamArray::new(first_cfg, opts.pvt, opts.noise, opts.seed);
+        cam.set_noise_scale(opts.noise_scale);
+        Pipeline {
+            model,
+            cam,
+            opts,
+            hidden_points,
+            output_points,
+            schedule,
+            plans,
+            resident: None,
+            scratch_m: Vec::new(),
+            scratch_f: Vec::new(),
+        }
+    }
+
+    pub fn schedule(&self) -> &[i32] {
+        &self.schedule
+    }
+
+    pub fn cam(&self) -> &CamArray {
+        &self.cam
+    }
+
+    /// Program one load's rows (reconfiguring the array if needed).
+    fn program_load(&mut self, layer_idx: usize, load_idx: usize) {
+        if self.resident == Some((layer_idx, load_idx)) {
+            return;
+        }
+        let layer = &self.model.layers[layer_idx];
+        let cfg = CamConfig::fitting(layer.seg_width).unwrap();
+        if self.cam.config() != cfg {
+            self.cam.reconfigure(cfg);
+        }
+        let load = &self.plans[layer_idx][load_idx];
+        let width = cfg.width();
+        for (row, neuron) in (load.neuron_lo..load.neuron_hi).enumerate() {
+            let image = fit_width(&program_row(layer, load.seg, neuron), width);
+            self.cam.write_row(row, &image);
+        }
+        // invalidate any stale rows beyond this load
+        for row in (load.neuron_hi - load.neuron_lo)..cfg.rows() {
+            self.cam.clear_row(row);
+        }
+        self.resident = Some((layer_idx, load_idx));
+    }
+
+    /// Execute one hidden layer for a batch; returns the hidden codes.
+    fn run_hidden(&mut self, layer_idx: usize, inputs: &[BitVec]) -> Vec<BitVec> {
+        let layer = &self.model.layers[layer_idx];
+        let n_out = layer.n_out();
+        let n_seg = layer.n_seg();
+        // seg_fires[image][neuron] counts firing segments
+        let mut seg_fires = vec![vec![0u8; n_out]; inputs.len()];
+        let n_loads = self.plans[layer_idx].len();
+        for load_idx in 0..n_loads {
+            self.program_load(layer_idx, load_idx);
+            let point = self.hidden_points[layer_idx];
+            self.cam.set_voltages(point.voltages);
+            let load = self.plans[layer_idx][load_idx].clone();
+            let width = self.cam.config().width();
+            let payload = (load.neuron_hi - load.neuron_lo) as u64
+                * (layer.seg_bounds[load.seg + 1] - layer.seg_bounds[load.seg]) as u64;
+            for (img_idx, x) in inputs.iter().enumerate() {
+                let q = segment_query_wide(layer, load.seg, x, width);
+                let mut m = std::mem::take(&mut self.scratch_m);
+                let mut f = std::mem::take(&mut self.scratch_f);
+                self.cam.search_into(&q, &mut m, &mut f);
+                self.cam.events.useful_macs += payload;
+                for (row, neuron) in (load.neuron_lo..load.neuron_hi).enumerate() {
+                    if f[row] {
+                        seg_fires[img_idx][neuron] += 1;
+                    }
+                }
+                self.scratch_m = m;
+                self.scratch_f = f;
+            }
+        }
+        seg_fires
+            .into_iter()
+            .map(|fires| {
+                let mut h = BitVec::zeros(n_out);
+                for (j, &cnt) in fires.iter().enumerate() {
+                    // majority of segments, ties fire (MLSA convention)
+                    h.set(j, (cnt as usize) * 2 >= n_seg);
+                }
+                h
+            })
+            .collect()
+    }
+
+    /// Execute the output layer sweep for a batch; returns per-image votes.
+    fn run_output(&mut self, hidden: &[BitVec]) -> Vec<Vec<u32>> {
+        let layer_idx = self.model.layers.len() - 1;
+        let layer = self.model.layers.last().unwrap();
+        let n_cls = layer.n_out();
+        assert_eq!(
+            self.plans[layer_idx].len(),
+            1,
+            "output layer fits one load"
+        );
+        self.program_load(layer_idx, 0);
+        // queries are threshold-independent: build once per batch
+        let width = self.cam.config().width();
+        let queries: Vec<BitVec> = hidden
+            .iter()
+            .map(|h| segment_query_wide(layer, 0, h, width))
+            .collect();
+        let mut votes = vec![vec![0u32; n_cls]; hidden.len()];
+        // thresholds outer, images inner: one retune per threshold per batch
+        for k in 0..self.schedule.len() {
+            let point = self.output_points[k];
+            self.cam.set_voltages(point.voltages);
+            let payload = (layer.n_in() * n_cls) as u64;
+            for (img_idx, q) in queries.iter().enumerate() {
+                let mut m = std::mem::take(&mut self.scratch_m);
+                let mut f = std::mem::take(&mut self.scratch_f);
+                self.cam.search_into(q, &mut m, &mut f);
+                self.cam.events.useful_macs += payload;
+                for (c, vote_row) in votes[img_idx].iter_mut().enumerate() {
+                    if f[c] {
+                        *vote_row += 1;
+                    }
+                }
+                self.scratch_m = m;
+                self.scratch_f = f;
+            }
+        }
+        votes
+    }
+
+    /// Host-device I/O cycles per image (128-bit bus, paper SoC): input
+    /// vector in, hidden activations out+in (through the control CPU), and
+    /// the per-execution MLSA fire words out.
+    fn io_cycles_per_image(&self) -> u64 {
+        let bus = crate::analog::constants::IO_BUS_BITS;
+        let n_in = self.model.n_in().div_ceil(bus) as u64;
+        let hidden: u64 = self.model.layers[..self.model.layers.len() - 1]
+            .iter()
+            .map(|l| 2 * l.n_out().div_ceil(bus) as u64) // readout + reload
+            .sum();
+        let votes_bits = self.model.n_classes() * self.schedule.len();
+        n_in + hidden + votes_bits.div_ceil(bus) as u64
+    }
+
+    /// Classify a batch: returns (votes, prediction) per image.
+    pub fn classify_batch(&mut self, images: &[BitVec]) -> Vec<(Vec<u32>, usize)> {
+        let mut acts: Vec<BitVec> = images.to_vec();
+        for layer_idx in 0..self.model.layers.len() - 1 {
+            acts = self.run_hidden(layer_idx, &acts);
+        }
+        let votes = self.run_output(&acts);
+        // host I/O shares the device clock domain (RISC-V at the same 25 MHz)
+        self.cam
+            .clock
+            .tick(self.io_cycles_per_image() * images.len() as u64);
+        votes
+            .into_iter()
+            .map(|v| {
+                let p = argmax_vote(&v);
+                (v, p)
+            })
+            .collect()
+    }
+
+    /// Classify one image (single-image batch; no amortisation).
+    pub fn classify(&mut self, image: &BitVec) -> usize {
+        self.classify_batch(std::slice::from_ref(image))[0].1
+    }
+
+    /// Drain device statistics accumulated since the last call.
+    pub fn take_stats(&mut self, inferences: u64) -> RunStats {
+        let stats = RunStats {
+            inferences,
+            cycles: self.cam.clock.cycles,
+            stall_s: self.cam.clock.stall_s,
+            events: self.cam.events,
+        };
+        self.cam.reset_accounting();
+        stats
+    }
+
+    /// The options this pipeline was built with.
+    pub fn options(&self) -> &PipelineOptions {
+        &self.opts
+    }
+
+    /// Calibrated output operating points (diagnostics / Table I bench).
+    pub fn output_points(&self) -> &[CalibratedPoint] {
+        &self.output_points
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::bnn::infer::digital_forward;
+    use crate::bnn::model::test_fixtures::tiny_model;
+    use crate::util::rng::Rng;
+
+    fn rand_images(n: usize, bits: usize, seed: u64) -> Vec<BitVec> {
+        let mut rng = Rng::new(seed, 1);
+        (0..n)
+            .map(|_| {
+                let mut v = BitVec::zeros(bits);
+                for i in 0..bits {
+                    v.set(i, rng.chance(0.5));
+                }
+                v
+            })
+            .collect()
+    }
+
+    #[test]
+    fn nominal_pipeline_matches_digital_reference() {
+        let model = tiny_model(100, 16, 4, 42);
+        let mut pipe = Pipeline::new(
+            &model,
+            PipelineOptions {
+                noise: NoiseMode::Nominal,
+                ..Default::default()
+            },
+        );
+        let images = rand_images(12, 100, 7);
+        let got = pipe.classify_batch(&images);
+        for (img, (votes, pred)) in images.iter().zip(&got) {
+            let (want_votes, want_pred) = digital_forward(&model, img, pipe.schedule());
+            assert_eq!(votes, &want_votes, "votes for image");
+            assert_eq!(pred, &want_pred);
+        }
+    }
+
+    #[test]
+    fn schedule_prefix_truncates() {
+        let model = tiny_model(64, 8, 3, 1);
+        let pipe = Pipeline::new(
+            &model,
+            PipelineOptions {
+                noise: NoiseMode::Nominal,
+                schedule_prefix: Some(5),
+                ..Default::default()
+            },
+        );
+        assert_eq!(pipe.schedule(), &model.schedule[..5]);
+    }
+
+    #[test]
+    fn stats_accumulate_and_drain() {
+        let model = tiny_model(64, 8, 3, 2);
+        let mut pipe = Pipeline::new(
+            &model,
+            PipelineOptions {
+                noise: NoiseMode::Nominal,
+                ..Default::default()
+            },
+        );
+        let images = rand_images(4, 64, 3);
+        pipe.classify_batch(&images);
+        let s = pipe.take_stats(4);
+        assert!(s.cycles > 0);
+        assert!(s.events.searches > 0);
+        assert!(s.inferences_per_s() > 0.0);
+        // drained: second take sees zero cycles
+        let s2 = pipe.take_stats(0);
+        assert_eq!(s2.cycles, 0);
+    }
+
+    #[test]
+    fn batching_reduces_cycles_per_inference() {
+        let model = tiny_model(64, 8, 3, 5);
+        let images = rand_images(32, 64, 9);
+        let run = |batch: usize| {
+            let mut pipe = Pipeline::new(
+                &model,
+                PipelineOptions {
+                    noise: NoiseMode::Nominal,
+                    ..Default::default()
+                },
+            );
+            for chunk in images.chunks(batch) {
+                pipe.classify_batch(chunk);
+            }
+            pipe.take_stats(images.len() as u64).cycles_per_inference()
+        };
+        let cpi_1 = run(1);
+        let cpi_32 = run(32);
+        assert!(
+            cpi_32 < cpi_1,
+            "batching should amortise programming: {cpi_32} vs {cpi_1}"
+        );
+    }
+
+    #[test]
+    fn analog_noise_changes_votes_but_rarely_flips_easy_predictions() {
+        // an easy instance: image equals one neuron's weights strongly
+        let model = tiny_model(100, 16, 4, 11);
+        let images = rand_images(8, 100, 13);
+        let mut nominal = Pipeline::new(
+            &model,
+            PipelineOptions {
+                noise: NoiseMode::Nominal,
+                ..Default::default()
+            },
+        );
+        let mut analog = Pipeline::new(
+            &model,
+            PipelineOptions {
+                noise: NoiseMode::Analog,
+                seed: 77,
+                ..Default::default()
+            },
+        );
+        let a = nominal.classify_batch(&images);
+        let b = analog.classify_batch(&images);
+        // votes may differ, but the structures agree in shape
+        assert_eq!(a.len(), b.len());
+        for ((va, _), (vb, _)) in a.iter().zip(&b) {
+            assert_eq!(va.len(), vb.len());
+        }
+    }
+}

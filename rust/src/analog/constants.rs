@@ -1,0 +1,104 @@
+//! Nominal 65 nm-flavoured device constants and variation sigmas.
+//!
+//! Mirror of `python/compile/physics.py` — keep the nominal values in sync
+//! (rust/tests/analog_cross_check.rs enforces agreement on the functional
+//! model).  The variation/PVT parameters below only exist on the rust side:
+//! the python twin is the deterministic nominal model.
+
+/// Supply voltage [V].
+pub const V_DD: f64 = 1.2;
+/// Effective NMOS threshold at 25 °C [V].
+pub const V_TH: f64 = 0.25;
+/// Transconductance-ish slope of the M_eval pulldown stack [S/V].
+pub const K_G: f64 = 8.93e-7;
+/// Matchline capacitance for a 256-cell row [F].
+pub const C_ML_256: f64 = 12e-15;
+/// Per-cell matchline capacitance [F].
+pub const C_ML_PER_CELL: f64 = C_ML_256 / 256.0;
+/// Delay-element unit time constant [s].
+pub const TAU0: f64 = 0.8e-9;
+/// Guard for the sampling-time denominator.
+pub const EPS: f64 = 1e-3;
+
+/// Legal tuning windows for the three user-configurable voltages [V].
+pub const VREF_RANGE: (f64, f64) = (0.6, 1.2);
+pub const VEVAL_RANGE: (f64, f64) = (0.3, 1.2);
+pub const VST_RANGE: (f64, f64) = (0.6, 1.2);
+
+// ---------------------------------------------------------------------
+// Variation / PVT parameters (rust-only; drive the Monte-Carlo machinery).
+// ---------------------------------------------------------------------
+
+/// Per-cell pulldown-conductance mismatch sigma (fraction; *frozen* at
+/// fabrication — enters the per-row systematic factor, not per-eval noise).
+pub const SIGMA_G_CELL: f64 = 0.05;
+/// Per-row systematic conductance sigma as fabricated (layout gradient +
+/// averaged cell mismatch; frozen).  The bring-up flow trims the MLSA
+/// references per row (auto-zeroing, as in the HD-CAM / JSSC'25 silicon
+/// this design builds on), leaving the post-trim residual below.
+pub const SIGMA_G_ROW_RAW: f64 = 0.008;
+/// Post-trim residual row-conductance sigma (what inference sees).
+pub const SIGMA_G_ROW: f64 = 0.002;
+/// Per-cell threshold-voltage mismatch sigma [V] (local variation).
+pub const SIGMA_VTH_CELL: f64 = 0.012;
+/// MLSA comparator input-referred offset sigma as fabricated [V].
+pub const SIGMA_MLSA_OFFSET_RAW: f64 = 0.003;
+/// Post-trim residual MLSA offset sigma [V].
+pub const SIGMA_MLSA_OFFSET: f64 = 0.001;
+/// Per-evaluation stochastic conductance noise (thermal/shot, fraction).
+/// Calibrated so the end-to-end analog accuracy reproduces the silicon's
+/// reported behaviour (the hidden layer's single-shot majority at n/2 over
+/// 1024/2048 cells needs ~0.1% evaluation-to-evaluation repeatability —
+/// implied by the paper reaching baseline software accuracy on MNIST).
+pub const SIGMA_G_EVAL: f64 = 0.001;
+/// Cycle-to-cycle supply noise sigma [V] (affects V_DD each evaluation).
+pub const SIGMA_VDD_NOISE: f64 = 0.001;
+/// Cycle-to-cycle sampling-time jitter sigma (fraction of t_s).
+pub const SIGMA_TS_JITTER: f64 = 0.001;
+
+/// Temperature coefficient of V_TH [V/°C] (V_TH drops as T rises).
+pub const VTH_TEMP_COEFF: f64 = -0.8e-3;
+/// Mobility/conductance temperature exponent: g ∝ (T/T0)^MU_TEMP_EXP.
+pub const MU_TEMP_EXP: f64 = -1.5;
+/// Nominal temperature [°C].
+pub const T_NOMINAL: f64 = 25.0;
+
+// ---------------------------------------------------------------------
+// Timing / energy events (65 nm-calibrated; feed rust/src/energy).
+// ---------------------------------------------------------------------
+
+/// Operating frequency of the evaluated silicon [Hz] (Table II).
+pub const F_CLK: f64 = 25.0e6;
+/// Search energy per cell [J]: ML precharge + compare-stack switching.
+/// Decoupled from C_ML_PER_CELL (the *discharge-path timing* capacitance):
+/// the switched capacitance per search also includes the SL gate loads and
+/// the precharge network — ~0.21 fF effective at 1.2 V -> ~0.3 fJ/cell,
+/// the 65 nm CAM regime (Pagiamtzis & Sheikholeslami, JSSC'06 scaling).
+pub const E_PRECHARGE_PER_CELL: f64 = 0.30e-15;
+/// Searchline toggle energy per cell [J] (SL + /SL pair, ~2 fF/64 cells).
+pub const E_SL_PER_CELL: f64 = 0.10e-15;
+/// MLSA evaluation energy per row [J].
+pub const E_MLSA_PER_ROW: f64 = 2.0e-15;
+/// SRAM write energy per cell [J] (weight programming).
+pub const E_WRITE_PER_CELL: f64 = 0.25e-15;
+/// Voltage-DAC retune energy per event [J] and settle time [s].
+pub const E_RETUNE: f64 = 40e-12;
+pub const T_RETUNE_SETTLE: f64 = 2.0e-6;
+/// Static leakage power of the 128-kbit macro [W].
+pub const P_LEAKAGE: f64 = 55e-6;
+
+/// I/O bus width between the control CPU and the CAM macro [bits/cycle]
+/// (query load, activation readout, vote readout all cross this bus).
+pub const IO_BUS_BITS: usize = 128;
+
+// ---------------------------------------------------------------------
+// Area model (Table II; paper-reported footprints).
+// ---------------------------------------------------------------------
+
+/// 10T PiC-BNN bitcell area [mm^2] (paper: ~3.24 µm²).
+pub const AREA_BITCELL_MM2: f64 = 3.24e-6;
+/// Per-bank peripheral overhead factor (drivers, MLSA, write, precharge):
+/// calibrated so 4 banks × 32 kbit land near the paper's 0.87 mm².
+pub const BANK_PERIPHERY_FACTOR: f64 = 1.05;
+/// SoC area excluding the CAM macro (RISC-V + uncore) [mm^2].
+pub const AREA_SOC_REST_MM2: f64 = 1.51;

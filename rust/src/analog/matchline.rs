@@ -1,0 +1,384 @@
+//! Matchline discharge + MLSA sensing model (DESIGN.md §4).
+//!
+//! Two levels of fidelity over the same physics:
+//!  * [`MatchlineModel::v_ml`] / [`MatchlineModel::trace`] — explicit
+//!    voltage waveform V_ML(t) for figure regeneration (Fig. 4).
+//!  * [`MatchlineModel::fires`] — the hot-path decision: closed-form
+//!    threshold comparison with per-evaluation noise draws, no waveform.
+//!
+//! Per-row process variation (cell conductance mismatch) is precomputed
+//! once per programmed row (`RowVariation`), so the hot path costs one
+//! multiply-add per row, not per cell.
+
+use super::constants as k;
+use super::transistor::{g_eval, t_sample, Pvt};
+use crate::util::rng::Rng;
+
+/// The three user-configurable voltages (paper Fig. 3, yellow).
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct Voltages {
+    pub vref: f64,
+    pub veval: f64,
+    pub vst: f64,
+}
+
+impl Voltages {
+    pub fn new(vref: f64, veval: f64, vst: f64) -> Self {
+        Voltages { vref, veval, vst }
+    }
+
+    /// Clamp into the legal tuning windows.
+    pub fn clamped(self) -> Self {
+        Voltages {
+            vref: self.vref.clamp(k::VREF_RANGE.0, k::VREF_RANGE.1),
+            veval: self.veval.clamp(k::VEVAL_RANGE.0, k::VEVAL_RANGE.1),
+            vst: self.vst.clamp(k::VST_RANGE.0, k::VST_RANGE.1),
+        }
+    }
+
+    /// The "exact search" setting: zero HD tolerance (Table I row 1).
+    pub fn exact() -> Self {
+        Voltages::new(k::V_DD, k::V_DD, k::V_DD)
+    }
+}
+
+/// Precomputed per-row Monte-Carlo variation (drawn at programming time).
+///
+/// The sum of n_mismatch per-cell conductances with fractional sigma σ_c
+/// concentrates: mean m·g, sigma ≈ √m·σ_c·g.  We carry a per-row
+/// *systematic* conductance factor (layout gradient) plus the per-cell
+/// sigma for the stochastic term drawn per evaluation.
+#[derive(Clone, Copy, Debug)]
+pub struct RowVariation {
+    /// Systematic conductance multiplier for this row (≈ N(1, σ_sys)).
+    pub g_row_factor: f64,
+    /// This row's MLSA comparator offset [V].
+    pub mlsa_offset: f64,
+}
+
+impl RowVariation {
+    pub fn nominal() -> Self {
+        RowVariation {
+            g_row_factor: 1.0,
+            mlsa_offset: 0.0,
+        }
+    }
+
+    /// Draw variation for a freshly programmed row: frozen process
+    /// variation *after* the bring-up trim (auto-zeroed MLSA references).
+    pub fn draw(rng: &mut Rng) -> Self {
+        RowVariation {
+            g_row_factor: (1.0 + rng.normal(0.0, k::SIGMA_G_ROW)).max(0.5),
+            mlsa_offset: rng.normal(0.0, k::SIGMA_MLSA_OFFSET),
+        }
+    }
+
+    /// As-fabricated variation with no trim (ablation benches only).
+    pub fn draw_untrimmed(rng: &mut Rng) -> Self {
+        RowVariation {
+            g_row_factor: (1.0 + rng.normal(0.0, k::SIGMA_G_ROW_RAW)).max(0.5),
+            mlsa_offset: rng.normal(0.0, k::SIGMA_MLSA_OFFSET_RAW),
+        }
+    }
+}
+
+/// Matchline + MLSA model for rows of a fixed cell count.
+#[derive(Clone, Copy, Debug)]
+pub struct MatchlineModel {
+    pub n_cells: usize,
+    pub pvt: Pvt,
+    /// Multiplier on every per-evaluation noise sigma (1.0 = the shipped
+    /// device; the law-of-large-numbers ablation sweeps it up).
+    pub noise_scale: f64,
+}
+
+impl MatchlineModel {
+    pub fn new(n_cells: usize, pvt: Pvt) -> Self {
+        MatchlineModel {
+            n_cells,
+            pvt,
+            noise_scale: 1.0,
+        }
+    }
+
+    pub fn with_noise_scale(n_cells: usize, pvt: Pvt, noise_scale: f64) -> Self {
+        MatchlineModel {
+            n_cells,
+            pvt,
+            noise_scale,
+        }
+    }
+
+    /// Row capacitance [F].
+    #[inline]
+    pub fn c_ml(&self) -> f64 {
+        k::C_ML_PER_CELL * self.n_cells as f64
+    }
+
+    /// Matchline voltage at time `t` with `m` mismatching cells (nominal
+    /// variation): V_ML(t) = V_DD · exp(−m·g·t/C).
+    pub fn v_ml(&self, m: u32, t: f64, v: &Voltages) -> f64 {
+        let g = g_eval(v.veval, &self.pvt);
+        self.pvt.vdd * (-(m as f64) * g * t / self.c_ml()).exp()
+    }
+
+    /// Waveform V_ML(t) sampled at `n_pts` points over [0, t_end] (Fig. 4).
+    pub fn trace(&self, m: u32, t_end: f64, n_pts: usize, v: &Voltages) -> Vec<(f64, f64)> {
+        (0..n_pts)
+            .map(|i| {
+                let t = t_end * i as f64 / (n_pts - 1).max(1) as f64;
+                (t, self.v_ml(m, t, v))
+            })
+            .collect()
+    }
+
+    /// MLSA sampling time for this operating point [s].
+    pub fn sampling_time(&self, v: &Voltages) -> f64 {
+        t_sample(v.vst, &self.pvt)
+    }
+
+    /// Deterministic HD tolerance threshold (nominal, no noise):
+    /// a row with `m` mismatches fires iff m ≤ tol.
+    ///
+    /// tol = C_ML · ln(V_DD / V_ref) / (g(V_eval) · t_s(V_st)), the closed
+    /// form shared with `python/compile/physics.py::hd_tolerance`.
+    pub fn hd_tolerance(&self, v: &Voltages) -> f64 {
+        if v.vref >= self.pvt.vdd {
+            return 0.0;
+        }
+        let denom = g_eval(v.veval, &self.pvt) * self.sampling_time(v);
+        if denom <= 0.0 {
+            return self.n_cells as f64;
+        }
+        self.c_ml() * (self.pvt.vdd / v.vref).ln() / denom
+    }
+
+    /// Hot-path MLSA decision with per-evaluation noise.
+    ///
+    /// Frozen process variation enters via `var` (row conductance factor,
+    /// MLSA offset); per-evaluation noise via thermal conductance noise,
+    /// supply noise and sampling jitter.  `rng` advances once per call —
+    /// evaluations are independent draws, which is what the paper's
+    /// repeated-execution majority vote averages over.
+    ///
+    /// One-off convenience over [`MatchlineModel::begin_cycle`]: batched
+    /// searches should hold a [`SearchCycle`] instead — supply noise and
+    /// sampling jitter are *cycle-global* in silicon (every row of a search
+    /// shares the same rails and strobe), and hoisting them keeps the hot
+    /// loop at one gaussian + one ln per row.
+    pub fn fires(&self, m: u32, v: &Voltages, var: &RowVariation, rng: &mut Rng) -> bool {
+        self.begin_cycle(v, rng).fires(m, var, rng)
+    }
+
+    /// Draw the cycle-global noise and precompute per-search constants.
+    #[inline]
+    pub fn begin_cycle(&self, v: &Voltages, rng: &mut Rng) -> SearchCycle {
+        let g_nom = g_eval(v.veval, &self.pvt);
+        let ts = self.sampling_time(v)
+            * (1.0 + rng.normal(0.0, k::SIGMA_TS_JITTER * self.noise_scale));
+        let vdd = self.pvt.vdd + rng.normal(0.0, k::SIGMA_VDD_NOISE * self.noise_scale);
+        SearchCycle {
+            vref: v.vref,
+            vdd,
+            // m fires iff m * g * ts / C < ln(vdd / (vref + off)):
+            // carry C / (g_nom * ts) so the per-row cost is one ln + one mul
+            c_over_gts: if g_nom > 0.0 {
+                self.c_ml() / (g_nom * ts)
+            } else {
+                f64::INFINITY
+            },
+            sigma_g: k::SIGMA_G_EVAL * self.noise_scale,
+        }
+    }
+
+    /// Noise-free decision (used by tests and the functional cross-check).
+    pub fn fires_nominal(&self, m: u32, v: &Voltages, var: &RowVariation) -> bool {
+        if m == 0 {
+            return true;
+        }
+        let g_nom = g_eval(v.veval, &self.pvt);
+        if g_nom <= 0.0 {
+            return true;
+        }
+        let g = g_nom * var.g_row_factor;
+        let ts = self.sampling_time(v);
+        let v_ml = self.pvt.vdd * (-(m as f64) * g * ts / self.c_ml()).exp();
+        v_ml > v.vref + var.mlsa_offset
+    }
+}
+
+/// Per-search-cycle state for the noisy hot path: the cycle-global noise
+/// draws (supply, strobe jitter) folded into precomputed constants, so
+/// each row evaluation costs one gaussian draw, one `ln`, and a compare.
+///
+/// Algebra: V_ML(t_s) > V_ref + off
+///   ⇔ vdd·exp(−m·g·ts/C) > vref + off
+///   ⇔ m·(g_row·(1+ε)) < (C/(g_nom·ts))·ln(vdd/(vref+off))
+#[derive(Clone, Copy, Debug)]
+pub struct SearchCycle {
+    vref: f64,
+    vdd: f64,
+    c_over_gts: f64,
+    sigma_g: f64,
+}
+
+impl SearchCycle {
+    /// MLSA decision for one row in this cycle.
+    #[inline]
+    pub fn fires(&self, m: u32, var: &RowVariation, rng: &mut Rng) -> bool {
+        if m == 0 {
+            // no discharge path: ML holds V_DD above any legal reference
+            return true;
+        }
+        if self.c_over_gts.is_infinite() {
+            return true; // M_eval cut off
+        }
+        let sense = self.vref + var.mlsa_offset;
+        if sense >= self.vdd {
+            return false; // reference above the precharged rail
+        }
+        // decision: m · g_row·(1+ε) < budget, ε ~ N(0, σ_g_eval)
+        let budget = self.c_over_gts * (self.vdd / sense).ln();
+        let base = (m as f64) * var.g_row_factor;
+        // fast path: rows further than 6σ from the boundary decide
+        // deterministically (P(flip) < 1e-9) without burning a gaussian —
+        // only metastable-band rows pay for the noise draw
+        let band = 6.0 * self.sigma_g * base;
+        if base + band < budget {
+            return true;
+        }
+        if base - band > budget {
+            return false;
+        }
+        let g_rel = base * (1.0 + rng.normal(0.0, self.sigma_g)).max(0.0);
+        g_rel < budget
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn model() -> MatchlineModel {
+        MatchlineModel::new(256, Pvt::nominal())
+    }
+
+    #[test]
+    fn vml_monotone_decreasing_in_time_and_mismatches() {
+        let m = model();
+        let v = Voltages::new(0.8, 0.9, 1.0);
+        assert!(m.v_ml(4, 1e-9, &v) > m.v_ml(4, 2e-9, &v));
+        assert!(m.v_ml(2, 1e-9, &v) > m.v_ml(8, 1e-9, &v));
+        assert_eq!(m.v_ml(0, 5e-9, &v), k::V_DD);
+    }
+
+    #[test]
+    fn tolerance_decision_consistency() {
+        // fires_nominal must agree with m <= hd_tolerance away from boundary
+        let mm = model();
+        for v in [
+            Voltages::new(0.8, 0.9, 1.1),
+            Voltages::new(0.65, 0.5, 0.9),
+            Voltages::new(1.1, 1.1, 0.7),
+        ] {
+            let tol = mm.hd_tolerance(&v);
+            for m in 0..=256u32 {
+                if (m as f64 - tol).abs() < 1e-6 {
+                    continue;
+                }
+                let want = (m as f64) <= tol;
+                assert_eq!(
+                    mm.fires_nominal(m, &v, &RowVariation::nominal()),
+                    want,
+                    "m={m} tol={tol} v={v:?}"
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn exact_setting_zero_tolerance() {
+        let mm = model();
+        let v = Voltages::exact();
+        assert!(mm.fires_nominal(0, &v, &RowVariation::nominal()));
+        assert!(!mm.fires_nominal(1, &v, &RowVariation::nominal()));
+    }
+
+    #[test]
+    fn knob_monotonicity() {
+        let mm = model();
+        let base = Voltages::new(0.9, 0.8, 0.9);
+        let t0 = mm.hd_tolerance(&base);
+        assert!(mm.hd_tolerance(&Voltages { vref: 0.8, ..base }) > t0);
+        assert!(mm.hd_tolerance(&Voltages { veval: 0.6, ..base }) > t0);
+        assert!(mm.hd_tolerance(&Voltages { vst: 1.1, ..base }) > t0);
+    }
+
+    #[test]
+    fn noisy_fires_converges_to_nominal_majority() {
+        // far from the boundary, noise almost never flips the decision
+        let mm = model();
+        let v = Voltages::new(0.8, 0.7, 1.0);
+        let tol = mm.hd_tolerance(&v);
+        let var = RowVariation::nominal();
+        let mut rng = Rng::new(9, 9);
+        let m_low = (tol * 0.5) as u32;
+        let m_high = ((tol * 2.0) as u32).min(256);
+        let mut low_fires = 0;
+        let mut high_fires = 0;
+        for _ in 0..500 {
+            if mm.fires(m_low, &v, &var, &mut rng) {
+                low_fires += 1;
+            }
+            if mm.fires(m_high, &v, &var, &mut rng) {
+                high_fires += 1;
+            }
+        }
+        assert!(low_fires > 480, "{low_fires}");
+        assert!(high_fires < 20, "{high_fires}");
+    }
+
+    #[test]
+    fn boundary_is_stochastic() {
+        // near the threshold there must be a metastable band: some m whose
+        // fire probability is neither 0 nor 1 under per-evaluation noise
+        // pick a mid-range tolerance (~32): the band width scales with m·σ,
+        // so sub-bit noise at tol≈10 is physical, not a bug
+        let mm = model();
+        let v = Voltages::new(0.7, 0.45, 1.1);
+        let tol = mm.hd_tolerance(&v);
+        assert!(tol > 20.0 && tol < 60.0, "probe point moved: {tol}");
+        let var = RowVariation::nominal();
+        let mut rng = Rng::new(5, 5);
+        let lo = (tol as u32).saturating_sub(3);
+        let hi = (tol as u32) + 3;
+        let mut stochastic = 0;
+        for m in lo..=hi {
+            let fires = (0..500).filter(|_| mm.fires(m, &v, &var, &mut rng)).count();
+            if (10..490).contains(&fires) {
+                stochastic += 1;
+            }
+        }
+        assert!(stochastic >= 1, "no metastable band around tol={tol}");
+    }
+
+    #[test]
+    fn trace_shape() {
+        let mm = model();
+        let v = Voltages::new(0.8, 0.9, 1.0);
+        let tr = mm.trace(8, 4e-9, 33, &v);
+        assert_eq!(tr.len(), 33);
+        assert_eq!(tr[0].1, k::V_DD);
+        assert!(tr.last().unwrap().1 < tr[0].1);
+    }
+
+    #[test]
+    fn row_variation_draw_reasonable() {
+        let mut rng = Rng::new(1, 2);
+        for _ in 0..100 {
+            let v = RowVariation::draw(&mut rng);
+            assert!(v.g_row_factor > 0.5 && v.g_row_factor < 1.5);
+            assert!(v.mlsa_offset.abs() < 0.05);
+        }
+    }
+}

@@ -1,0 +1,11 @@
+//! Analog substrate: the transistor/matchline/MLSA/DAC circuit models the
+//! 65 nm silicon is replaced with (DESIGN.md §1, §4).
+
+pub mod constants;
+pub mod dac;
+pub mod matchline;
+pub mod transistor;
+
+pub use dac::{VoltageDac, VoltageRails};
+pub use matchline::{MatchlineModel, RowVariation, SearchCycle, Voltages};
+pub use transistor::Pvt;

@@ -1,0 +1,137 @@
+//! Device-level models: M_eval pulldown conductance and the current-starved
+//! delay element that sets the MLSA sampling time, with temperature and
+//! process dependence.
+
+use super::constants as k;
+
+/// Process/voltage/temperature operating point.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct Pvt {
+    /// Junction temperature [°C].
+    pub temp_c: f64,
+    /// Actual supply [V] (nominal 1.2; drifts model brown-out / IR drop).
+    pub vdd: f64,
+    /// Global process corner shift on V_TH [V] (die-to-die; 0 = typical).
+    pub vth_shift: f64,
+    /// Global conductance multiplier (die-to-die; 1.0 = typical).
+    pub g_scale: f64,
+}
+
+impl Default for Pvt {
+    fn default() -> Self {
+        Pvt::nominal()
+    }
+}
+
+impl Pvt {
+    pub fn nominal() -> Self {
+        Pvt {
+            temp_c: k::T_NOMINAL,
+            vdd: k::V_DD,
+            vth_shift: 0.0,
+            g_scale: 1.0,
+        }
+    }
+
+    /// Classic corners for the PVT ablation bench.
+    pub fn corner(name: &str) -> Pvt {
+        match name {
+            // slow-slow: high V_TH, weak devices, hot
+            "ss" => Pvt {
+                temp_c: 85.0,
+                vdd: 1.14,
+                vth_shift: 0.03,
+                g_scale: 0.88,
+            },
+            // fast-fast: low V_TH, strong devices, cold
+            "ff" => Pvt {
+                temp_c: 0.0,
+                vdd: 1.26,
+                vth_shift: -0.03,
+                g_scale: 1.12,
+            },
+            _ => Pvt::nominal(),
+        }
+    }
+
+    /// Effective threshold voltage at this operating point.
+    pub fn vth(&self) -> f64 {
+        k::V_TH + self.vth_shift + k::VTH_TEMP_COEFF * (self.temp_c - k::T_NOMINAL)
+    }
+
+    /// Temperature scaling of carrier mobility (g ∝ (T/T0)^-1.5 in Kelvin).
+    pub fn mobility_scale(&self) -> f64 {
+        let t = self.temp_c + 273.15;
+        let t0 = k::T_NOMINAL + 273.15;
+        (t / t0).powf(k::MU_TEMP_EXP)
+    }
+}
+
+/// Conductance of one mismatching pulldown path gated by V_eval [S].
+///
+/// Triode-ish linear law above threshold, clamped at zero below — the same
+/// closed form as `python/compile/physics.py::g_eval`, extended with PVT.
+#[inline]
+pub fn g_eval(veval: f64, pvt: &Pvt) -> f64 {
+    let overdrive = (veval - pvt.vth()).max(0.0);
+    k::K_G * overdrive * pvt.g_scale * pvt.mobility_scale()
+}
+
+/// MLSA sampling time from the V_st-starved delay line [s].
+///
+/// t_s = TAU0 · V_DD / (V_st − V_TH): raising V_st speeds the delay chain
+/// up, sampling *earlier*, which tolerates more discharge → higher HD
+/// tolerance (paper §III, Fig. 4).
+#[inline]
+pub fn t_sample(vst: f64, pvt: &Pvt) -> f64 {
+    let overdrive = (vst - pvt.vth()).max(k::EPS);
+    k::TAU0 * pvt.vdd / overdrive
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn nominal_matches_python_constants() {
+        let pvt = Pvt::nominal();
+        assert!((pvt.vth() - 0.25).abs() < 1e-12);
+        assert!((pvt.mobility_scale() - 1.0).abs() < 1e-12);
+        // g(0.95) = K_G * 0.7
+        assert!((g_eval(0.95, &pvt) - k::K_G * 0.7).abs() < 1e-18);
+        // t_s(1.2) = TAU0 * 1.2 / 0.95
+        assert!((t_sample(1.2, &pvt) - k::TAU0 * 1.2 / 0.95).abs() < 1e-18);
+    }
+
+    #[test]
+    fn subthreshold_cutoff() {
+        let pvt = Pvt::nominal();
+        assert_eq!(g_eval(0.2, &pvt), 0.0);
+        assert_eq!(g_eval(pvt.vth(), &pvt), 0.0);
+    }
+
+    #[test]
+    fn hot_is_slower_and_lower_vth() {
+        let hot = Pvt {
+            temp_c: 85.0,
+            ..Pvt::nominal()
+        };
+        assert!(hot.vth() < Pvt::nominal().vth());
+        assert!(hot.mobility_scale() < 1.0);
+    }
+
+    #[test]
+    fn corners_ordered() {
+        let ff = Pvt::corner("ff");
+        let ss = Pvt::corner("ss");
+        let tt = Pvt::nominal();
+        assert!(g_eval(0.9, &ff) > g_eval(0.9, &tt));
+        assert!(g_eval(0.9, &ss) < g_eval(0.9, &tt));
+    }
+
+    #[test]
+    fn higher_vst_samples_earlier() {
+        let pvt = Pvt::nominal();
+        assert!(t_sample(1.2, &pvt) < t_sample(0.7, &pvt));
+    }
+}

@@ -1,0 +1,154 @@
+//! Digital BNN baseline: the conventional-accelerator comparison point
+//! (paper §II-C category 1) and the software-accuracy reference of Fig. 5.
+//!
+//! Computes the exact integer XNOR+POPCOUNT forward pass with full-
+//! precision POPCOUNT at the output layer (argmax over dot+C rather than a
+//! thermometer vote) — the thing PiC-BNN eliminates.  Also carries a gate-
+//! level cost model so benches can compare energy/area against the CAM.
+
+use crate::bnn::model::MappedModel;
+use crate::util::bitops::BitVec;
+
+/// Full-precision-output digital forward: per-class score = dot + C.
+pub fn digital_scores(model: &MappedModel, x: &BitVec) -> Vec<i32> {
+    let mut act = x.clone();
+    for layer in &model.layers[..model.layers.len() - 1] {
+        act = crate::bnn::infer::digital_hidden(layer, &act);
+    }
+    let out = model.layers.last().unwrap();
+    (0..out.n_out())
+        .map(|j| out.weights.row(j).dot_pm1(&act) + out.c_effective(0, j))
+        .collect()
+}
+
+/// Digital prediction: argmax score, lowest index on ties.
+pub fn digital_predict(model: &MappedModel, x: &BitVec) -> usize {
+    let scores = digital_scores(model, x);
+    let mut best = 0;
+    for (i, &s) in scores.iter().enumerate() {
+        if s > scores[best] {
+            best = i;
+        }
+    }
+    best
+}
+
+/// Top-2 classes by score.
+pub fn digital_top2(model: &MappedModel, x: &BitVec) -> [usize; 2] {
+    let scores = digital_scores(model, x);
+    let mut idx: Vec<usize> = (0..scores.len()).collect();
+    idx.sort_by(|&a, &b| scores[b].cmp(&scores[a]).then(a.cmp(&b)));
+    [idx[0], *idx.get(1).unwrap_or(&idx[0])]
+}
+
+/// Gate-level cost model of the equivalent digital accelerator:
+/// XNOR array + popcount adder tree + accumulators, 65 nm energies.
+/// Used by the ablation benches for an order-of-magnitude comparison.
+#[derive(Clone, Copy, Debug)]
+pub struct DigitalCost {
+    /// Energy per XNOR gate evaluation [J].
+    pub e_xnor: f64,
+    /// Energy per full-adder in the popcount tree [J].
+    pub e_fa: f64,
+    /// Energy per output accumulator update [J].
+    pub e_acc: f64,
+}
+
+impl Default for DigitalCost {
+    fn default() -> Self {
+        // 65 nm standard-cell ballpark (~1 fJ/gate at 1.2 V)
+        DigitalCost {
+            e_xnor: 1.0e-15,
+            e_fa: 1.5e-15,
+            e_acc: 12.0e-15,
+        }
+    }
+}
+
+impl DigitalCost {
+    /// Energy for one n-input binary dot product + popcount.
+    pub fn dot_energy(&self, n: usize) -> f64 {
+        // popcount tree over n bits uses ~n full adders
+        n as f64 * self.e_xnor + n as f64 * self.e_fa + self.e_acc
+    }
+
+    /// Energy for one full inference of the mapped model.
+    pub fn inference_energy(&self, model: &MappedModel) -> f64 {
+        model
+            .layers
+            .iter()
+            .map(|l| l.n_out() as f64 * self.dot_energy(l.n_in()))
+            .sum()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::bnn::model::test_fixtures::tiny_model;
+    use crate::util::rng::Rng;
+
+    fn rand_x(n: usize, seed: u64) -> BitVec {
+        let mut rng = Rng::new(seed, 3);
+        let mut v = BitVec::zeros(n);
+        for i in 0..n {
+            v.set(i, rng.chance(0.5));
+        }
+        v
+    }
+
+    #[test]
+    fn scores_consistent_with_hd() {
+        // score = n - 2*HD_w + C  (dot identity)
+        let m = tiny_model(80, 12, 4, 9);
+        let x = rand_x(80, 1);
+        let scores = digital_scores(&m, &x);
+        let mut act = x.clone();
+        act = crate::bnn::infer::digital_hidden(&m.layers[0], &act);
+        let out = &m.layers[1];
+        for (j, &s) in scores.iter().enumerate() {
+            let hd = out.weights.row(j).hamming(&act) as i32;
+            assert_eq!(s, out.n_in() as i32 - 2 * hd + out.c_effective(0, j));
+        }
+    }
+
+    #[test]
+    fn predict_matches_argmax() {
+        let m = tiny_model(80, 12, 5, 10);
+        for seed in 0..20 {
+            let x = rand_x(80, seed);
+            let scores = digital_scores(&m, &x);
+            let p = digital_predict(&m, &x);
+            assert!(scores.iter().all(|&s| s <= scores[p]));
+        }
+    }
+
+    #[test]
+    fn digital_and_cam_argmax_agree_when_hd_in_window() {
+        // thermometer votes preserve the argmax when every HD ≤ 64
+        use crate::bnn::infer::{digital_forward, digital_output_hd, digital_hidden};
+        let m = tiny_model(80, 12, 4, 11);
+        for seed in 0..30 {
+            let x = rand_x(80, 100 + seed);
+            let h = digital_hidden(&m.layers[0], &x);
+            let hd = digital_output_hd(&m.layers[1], &h);
+            if hd.iter().all(|&d| d <= 64) && {
+                // unique minimum (ties can legitimately differ)
+                let min = hd.iter().min().unwrap();
+                hd.iter().filter(|&d| d == min).count() == 1
+            } {
+                let (_, cam_pred) = digital_forward(&m, &x, &m.schedule);
+                assert_eq!(cam_pred, digital_predict(&m, &x), "seed {seed}");
+            }
+        }
+    }
+
+    #[test]
+    fn cost_model_scales_with_model() {
+        let small = tiny_model(64, 8, 4, 1);
+        let big = tiny_model(512, 64, 10, 1);
+        let c = DigitalCost::default();
+        assert!(c.inference_energy(&big) > c.inference_energy(&small));
+        assert!(c.dot_energy(100) > 0.0);
+    }
+}

@@ -1,0 +1,9 @@
+//! Comparison baselines: the conventional digital BNN accelerator (and the
+//! software-accuracy reference), and the TDC-readout CAM whose PVT
+//! susceptibility motivates PiC-BNN's majority-vote scheme (paper §II-C).
+
+pub mod digital;
+pub mod tdc;
+
+pub use digital::{digital_predict, digital_scores, digital_top2, DigitalCost};
+pub use tdc::{tdc_predict, tdc_predict_fixed_threshold, TdcReadout};

@@ -1,0 +1,239 @@
+//! TDC-readout CAM-BNN baseline (the [5]/[34]-style comparator of §II-C).
+//!
+//! A time-to-digital readout associates *when* the matchline crosses a
+//! fixed reference with the analog popcount: the crossing time
+//! t_cross = C·ln(V_DD/V_ref)/(m·g) is inverted to an estimate of m by a
+//! bank of delay taps.  The paper's criticism: the tap↔count mapping is
+//! calibrated at one PVT point; temperature or supply drift shifts every
+//! crossing time *systematically*, so the decoded popcount — and therefore
+//! the winning class — is consistently wrong, which majority voting over
+//! identically-biased samples cannot fix.
+//!
+//! We model exactly that: taps are placed at the crossing times of each
+//! integer mismatch count at the *calibration* PVT; at run time crossings
+//! are computed at the *actual* PVT and decoded through the stale taps.
+
+use crate::analog::matchline::{MatchlineModel, Voltages};
+use crate::analog::transistor::Pvt;
+use crate::bnn::infer::digital_hidden;
+use crate::bnn::model::MappedModel;
+use crate::util::bitops::BitVec;
+use crate::util::rng::Rng;
+
+/// TDC readout for rows of `n_cells`, calibrated at a fixed PVT point.
+#[derive(Clone, Debug)]
+pub struct TdcReadout {
+    /// Crossing-time taps: `taps[m]` = nominal crossing time of m
+    /// mismatches at the calibration corner [s]; taps[0] = +inf sentinel.
+    taps: Vec<f64>,
+    /// Sense voltages used for both calibration and runtime.
+    pub voltages: Voltages,
+    /// Per-sample timing jitter sigma (fraction).
+    pub jitter: f64,
+    n_cells: usize,
+}
+
+impl TdcReadout {
+    /// Calibrate taps at `cal_pvt` for rows of `n_cells`.
+    pub fn calibrate(n_cells: usize, cal_pvt: Pvt, voltages: Voltages) -> Self {
+        let model = MatchlineModel::new(n_cells, cal_pvt);
+        let mut taps = Vec::with_capacity(n_cells + 1);
+        for m in 0..=n_cells as u32 {
+            taps.push(crossing_time(&model, m, &voltages));
+        }
+        TdcReadout {
+            taps,
+            voltages,
+            jitter: 0.005,
+            n_cells,
+        }
+    }
+
+    /// Decode a crossing time into a mismatch-count estimate using the
+    /// calibration taps (nearest-tap decision, as a tapped delay line does).
+    pub fn decode(&self, t_cross: f64) -> u32 {
+        // taps decrease with m; binary search over the reversed ordering
+        let mut best = 0u32;
+        let mut best_err = f64::INFINITY;
+        for (m, &tap) in self.taps.iter().enumerate() {
+            let err = if tap.is_finite() && t_cross.is_finite() {
+                (tap - t_cross).abs()
+            } else if tap.is_finite() != t_cross.is_finite() {
+                f64::INFINITY
+            } else {
+                0.0
+            };
+            if err < best_err {
+                best_err = err;
+                best = m as u32;
+            }
+        }
+        best
+    }
+
+    /// Measure a row with true mismatch count `m` at the *actual* PVT and
+    /// return the decoded popcount estimate.
+    pub fn measure(&self, m: u32, actual_pvt: Pvt, rng: &mut Rng) -> u32 {
+        let model = MatchlineModel::new(self.n_cells, actual_pvt);
+        let t = crossing_time(&model, m, &self.voltages);
+        let t_noisy = if t.is_finite() {
+            t * (1.0 + rng.normal(0.0, self.jitter))
+        } else {
+            t
+        };
+        self.decode(t_noisy)
+    }
+}
+
+/// Time at which V_ML crosses V_ref: C·ln(V_DD/V_ref)/(m·g); +inf if the
+/// line never discharges.
+fn crossing_time(model: &MatchlineModel, m: u32, v: &Voltages) -> f64 {
+    if m == 0 {
+        return f64::INFINITY;
+    }
+    let g = crate::analog::transistor::g_eval(v.veval, &model.pvt);
+    if g <= 0.0 || v.vref >= model.pvt.vdd {
+        return f64::INFINITY;
+    }
+    model.c_ml() * (model.pvt.vdd / v.vref).ln() / (m as f64 * g)
+}
+
+/// TDC-based classification of a mapped model at an actual PVT corner:
+/// hidden layers run digitally (the comparison isolates the *readout*);
+/// the output layer's **weight-part popcount** is decoded through the TDC
+/// and combined with the batch-norm constant in the decoded-count domain —
+/// score_j = (n − 2·m̂_j) + C_j, prediction = argmax — exactly how an
+/// ADC/TDC pipeline consumes the analog popcount ([5], [34]).
+///
+/// This is where the §II-C systematic error lives: PVT drift rescales all
+/// crossing times, so the decoded counts m̂_j ≈ α·m_j are *consistently*
+/// misweighted against the unscaled constants C_j, biasing the argmax the
+/// same way on every inference — no amount of repetition averages it out.
+pub fn tdc_predict(
+    model: &MappedModel,
+    tdc: &TdcReadout,
+    x: &BitVec,
+    actual_pvt: Pvt,
+    rng: &mut Rng,
+) -> usize {
+    let mut act = x.clone();
+    for layer in &model.layers[..model.layers.len() - 1] {
+        act = digital_hidden(layer, &act);
+    }
+    let out = model.layers.last().unwrap();
+    let n = out.n_in() as i64;
+    let mut best = 0usize;
+    let mut best_score = i64::MIN;
+    for j in 0..out.n_out() {
+        // the TDC senses the weight cells' matchline (the C_j constant is a
+        // digital-side correction in these designs, not extra cells)
+        let m_true = out.weights.row(j).hamming(&act);
+        let m_decoded = tdc.measure(m_true, actual_pvt, rng) as i64;
+        let score = (n - 2 * m_decoded) + out.c_effective(0, j) as i64;
+        if score > best_score {
+            best_score = score;
+            best = j;
+        }
+    }
+    best
+}
+
+/// The [34]-style *absolute* scheme: "a certain sampling time point is
+/// associated with a certain class" — each class decision is a binary
+/// comparison of the decoded count against a threshold fixed at
+/// calibration time.  Prediction = lowest-index firing class (priority
+/// encoder), falling back to argmin decoded HD when none fires.
+///
+/// This is the readout the paper singles out (§II-C): under PVT drift the
+/// decoded counts scale while the hardwired threshold does not, so either
+/// *nothing* fires (cold: counts inflate) or *everything* fires (hot:
+/// counts deflate, priority encoder returns class 0 forever) — a
+/// systematic error that repetition cannot average away.
+pub fn tdc_predict_fixed_threshold(
+    model: &MappedModel,
+    tdc: &TdcReadout,
+    x: &BitVec,
+    actual_pvt: Pvt,
+    rng: &mut Rng,
+    threshold: u32,
+) -> usize {
+    let mut act = x.clone();
+    for layer in &model.layers[..model.layers.len() - 1] {
+        act = digital_hidden(layer, &act);
+    }
+    let out = model.layers.last().unwrap();
+    let mut fallback = 0usize;
+    let mut fallback_hd = u32::MAX;
+    for j in 0..out.n_out() {
+        let m_true = crate::bnn::mapping::expected_mismatches(out, 0, j, &act);
+        let m_decoded = tdc.measure(m_true, actual_pvt, rng);
+        if m_decoded <= threshold {
+            return j; // priority encoder: first firing class wins
+        }
+        if m_decoded < fallback_hd {
+            fallback_hd = m_decoded;
+            fallback = j;
+        }
+    }
+    fallback
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn readout() -> TdcReadout {
+        TdcReadout::calibrate(512, Pvt::nominal(), Voltages::new(0.8, 0.7, 1.0))
+    }
+
+    #[test]
+    fn decode_exact_at_calibration_corner() {
+        let tdc = readout();
+        let model = MatchlineModel::new(512, Pvt::nominal());
+        for m in [1u32, 5, 50, 200, 511] {
+            let t = crossing_time(&model, m, &tdc.voltages);
+            assert_eq!(tdc.decode(t), m, "m={m}");
+        }
+    }
+
+    #[test]
+    fn zero_mismatch_never_crosses() {
+        let tdc = readout();
+        assert_eq!(tdc.decode(f64::INFINITY), 0);
+    }
+
+    #[test]
+    fn pvt_drift_biases_decode_systematically() {
+        // at a hot corner every decoded count shifts the same direction
+        let tdc = readout();
+        let mut rng = Rng::new(4, 4);
+        let hot = Pvt {
+            temp_c: 85.0,
+            ..Pvt::nominal()
+        };
+        let mut signed_err = 0i64;
+        let mut nonzero = 0;
+        for m in (10u32..200).step_by(10) {
+            let d = tdc.measure(m, hot, &mut rng);
+            signed_err += d as i64 - m as i64;
+            if d != m {
+                nonzero += 1;
+            }
+        }
+        assert!(nonzero > 10, "drift should corrupt most decodes");
+        // systematic: |sum of signed errors| is large (not averaging out)
+        assert!(signed_err.abs() > 20, "{signed_err}");
+    }
+
+    #[test]
+    fn nominal_corner_decodes_with_small_error() {
+        let tdc = readout();
+        let mut rng = Rng::new(5, 5);
+        let mut max_err = 0u32;
+        for m in (10u32..200).step_by(10) {
+            let d = tdc.measure(m, Pvt::nominal(), &mut rng);
+            max_err = max_err.max(d.abs_diff(m));
+        }
+        assert!(max_err <= 4, "jitter-only error should be small: {max_err}");
+    }
+}

@@ -1,0 +1,190 @@
+//! Criterion-style benchmark harness (criterion is unavailable offline;
+//! DESIGN.md §1).
+//!
+//! Provides timed microbenchmarks with warmup + adaptive iteration scaling,
+//! and table-shaped "experiment" output for regenerating the paper's tables
+//! and figures as aligned text blocks that are easy to diff against
+//! EXPERIMENTS.md.
+
+use crate::util::stats::Summary;
+use std::time::Instant;
+
+/// Prevent the optimizer from eliding a computed value.
+#[inline]
+pub fn black_box<T>(x: T) -> T {
+    std::hint::black_box(x)
+}
+
+/// Result of one timed benchmark.
+#[derive(Clone, Debug)]
+pub struct BenchResult {
+    pub name: String,
+    pub iters: u64,
+    pub mean_ns: f64,
+    pub stddev_ns: f64,
+    pub median_ns: f64,
+    pub min_ns: f64,
+}
+
+impl BenchResult {
+    pub fn throughput(&self, items_per_iter: f64) -> f64 {
+        items_per_iter / (self.mean_ns * 1e-9)
+    }
+}
+
+fn fmt_ns(ns: f64) -> String {
+    if ns < 1e3 {
+        format!("{ns:.1} ns")
+    } else if ns < 1e6 {
+        format!("{:.2} µs", ns / 1e3)
+    } else if ns < 1e9 {
+        format!("{:.2} ms", ns / 1e6)
+    } else {
+        format!("{:.3} s", ns / 1e9)
+    }
+}
+
+/// Time `f`, scaling iteration count until a sample batch takes ≥ ~20 ms,
+/// then collect `samples` batches and report per-iteration statistics.
+pub fn bench<F: FnMut()>(name: &str, mut f: F) -> BenchResult {
+    // warmup + calibration
+    let mut iters: u64 = 1;
+    loop {
+        let t = Instant::now();
+        for _ in 0..iters {
+            f();
+        }
+        let dt = t.elapsed().as_secs_f64();
+        if dt > 0.02 || iters >= 1 << 24 {
+            break;
+        }
+        iters = (iters * 4).min(1 << 24);
+    }
+    let samples = 12;
+    let mut per_iter = Summary::new();
+    for _ in 0..samples {
+        let t = Instant::now();
+        for _ in 0..iters {
+            f();
+        }
+        per_iter.push(t.elapsed().as_secs_f64() * 1e9 / iters as f64);
+    }
+    let r = BenchResult {
+        name: name.to_string(),
+        iters,
+        mean_ns: per_iter.mean(),
+        stddev_ns: per_iter.stddev(),
+        median_ns: per_iter.median(),
+        min_ns: per_iter.min(),
+    };
+    println!(
+        "bench {:<44} {:>12}/iter  (±{:>9}, median {:>10}, {} iters × {} samples)",
+        r.name,
+        fmt_ns(r.mean_ns),
+        fmt_ns(r.stddev_ns),
+        fmt_ns(r.median_ns),
+        iters,
+        samples
+    );
+    r
+}
+
+/// Aligned-text table builder for experiment output.
+pub struct Table {
+    title: String,
+    headers: Vec<String>,
+    rows: Vec<Vec<String>>,
+}
+
+impl Table {
+    pub fn new(title: &str, headers: &[&str]) -> Self {
+        Table {
+            title: title.to_string(),
+            headers: headers.iter().map(|s| s.to_string()).collect(),
+            rows: Vec::new(),
+        }
+    }
+
+    pub fn row(&mut self, cells: Vec<String>) {
+        assert_eq!(cells.len(), self.headers.len());
+        self.rows.push(cells);
+    }
+
+    pub fn render(&self) -> String {
+        let mut widths: Vec<usize> = self.headers.iter().map(|h| h.len()).collect();
+        for row in &self.rows {
+            for (i, c) in row.iter().enumerate() {
+                widths[i] = widths[i].max(c.len());
+            }
+        }
+        let mut out = String::new();
+        out.push_str(&format!("\n== {} ==\n", self.title));
+        let line = |cells: &[String], widths: &[usize]| {
+            cells
+                .iter()
+                .zip(widths)
+                .map(|(c, w)| format!("{c:>w$}"))
+                .collect::<Vec<_>>()
+                .join("  ")
+        };
+        out.push_str(&line(&self.headers, &widths));
+        out.push('\n');
+        out.push_str(&"-".repeat(widths.iter().sum::<usize>() + 2 * (widths.len() - 1)));
+        out.push('\n');
+        for row in &self.rows {
+            out.push_str(&line(row, &widths));
+            out.push('\n');
+        }
+        out
+    }
+
+    pub fn print(&self) {
+        print!("{}", self.render());
+    }
+}
+
+/// Format a float with fixed decimals (table cells).
+pub fn f(v: f64, decimals: usize) -> String {
+    format!("{v:.decimals$}")
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn bench_reports_positive_time() {
+        let mut acc = 0u64;
+        let r = bench("noop-ish", || {
+            acc = black_box(acc.wrapping_add(1));
+        });
+        assert!(r.mean_ns > 0.0);
+        assert!(r.iters >= 1);
+    }
+
+    #[test]
+    fn table_renders_aligned() {
+        let mut t = Table::new("demo", &["a", "long-header", "c"]);
+        t.row(vec!["1".into(), "2".into(), "3".into()]);
+        t.row(vec!["10".into(), "20000".into(), "30".into()]);
+        let s = t.render();
+        assert!(s.contains("== demo =="));
+        assert!(s.contains("long-header"));
+        let lines: Vec<&str> = s.lines().filter(|l| !l.is_empty()).collect();
+        // header + separator + 2 rows + title
+        assert_eq!(lines.len(), 5);
+    }
+
+    #[test]
+    fn throughput_math() {
+        let r = BenchResult {
+            name: "x".into(),
+            iters: 1,
+            mean_ns: 1000.0,
+            stddev_ns: 0.0,
+            median_ns: 1000.0,
+            min_ns: 1000.0,
+        };
+        assert!((r.throughput(1.0) - 1e6).abs() < 1e-6);
+    }
+}

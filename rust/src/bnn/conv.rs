@@ -1,0 +1,189 @@
+//! Binary convolution on the CAM — the extension the paper's introduction
+//! motivates ("in a convolutional BNN, the first layer is typically
+//! implemented with full precision"): PiC-BNN's pad-cell BN encoding makes
+//! the conv layer end-to-end binary too.
+//!
+//! Mapping: a k×k binary filter is one CAM row (k² payload bits + BN pad
+//! cells); an image patch is one search query; all filters evaluate in
+//! parallel rows per search, so a conv layer costs one search per patch —
+//! im2col where the "matrix multiply" is the matchline.
+
+use crate::util::bitops::BitVec;
+
+use super::model::MappedLayer;
+
+/// Patch geometry of a single-channel binary conv layer.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct PatchSpec {
+    pub img_h: usize,
+    pub img_w: usize,
+    pub k: usize,
+    pub stride: usize,
+}
+
+impl PatchSpec {
+    pub fn out_h(&self) -> usize {
+        (self.img_h - self.k) / self.stride + 1
+    }
+
+    pub fn out_w(&self) -> usize {
+        (self.img_w - self.k) / self.stride + 1
+    }
+
+    pub fn n_patches(&self) -> usize {
+        self.out_h() * self.out_w()
+    }
+
+    pub fn patch_bits(&self) -> usize {
+        self.k * self.k
+    }
+
+    /// im2col: extract all patches of a packed ±1 image, row-major.
+    pub fn extract_patches(&self, image: &BitVec) -> Vec<BitVec> {
+        assert_eq!(image.len(), self.img_h * self.img_w, "image size");
+        let mut out = Vec::with_capacity(self.n_patches());
+        for oy in 0..self.out_h() {
+            for ox in 0..self.out_w() {
+                let mut p = BitVec::zeros(self.patch_bits());
+                for dy in 0..self.k {
+                    let src_row = (oy * self.stride + dy) * self.img_w + ox * self.stride;
+                    // word-level copy of one patch row (k bits)
+                    p.write_range(dy * self.k, image, src_row, self.k);
+                }
+                out.push(p);
+            }
+        }
+        out
+    }
+}
+
+/// Digital reference for a CAM-mapped binary conv layer: feature map bit
+/// (filter f, patch p) = [ dot(w_f, patch_p) + C_f ≥ 0 ], flattened
+/// filter-major (all patches of filter 0, then filter 1, …).
+pub fn digital_conv(layer: &MappedLayer, spec: &PatchSpec, image: &BitVec) -> BitVec {
+    assert_eq!(layer.n_in(), spec.patch_bits(), "filter size");
+    assert_eq!(layer.n_seg(), 1, "conv filters fit one word");
+    let patches = spec.extract_patches(image);
+    let mut out = BitVec::zeros(layer.n_out() * patches.len());
+    for (pi, patch) in patches.iter().enumerate() {
+        let h = super::infer::digital_hidden(layer, patch);
+        for f in 0..layer.n_out() {
+            if h.get(f) {
+                out.set(f * patches.len() + pi, true);
+            }
+        }
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::bitops::BitMatrix;
+    use crate::util::rng::Rng;
+
+    fn rand_bits(n: usize, rng: &mut Rng) -> BitVec {
+        let mut v = BitVec::zeros(n);
+        for i in 0..n {
+            v.set(i, rng.chance(0.5));
+        }
+        v
+    }
+
+    #[test]
+    fn patch_geometry() {
+        let s = PatchSpec {
+            img_h: 28,
+            img_w: 28,
+            k: 5,
+            stride: 3,
+        };
+        assert_eq!(s.out_h(), 8);
+        assert_eq!(s.out_w(), 8);
+        assert_eq!(s.n_patches(), 64);
+        assert_eq!(s.patch_bits(), 25);
+    }
+
+    #[test]
+    fn patches_match_naive_extraction() {
+        let s = PatchSpec {
+            img_h: 12,
+            img_w: 10,
+            k: 3,
+            stride: 2,
+        };
+        let mut rng = Rng::new(4, 4);
+        let img = rand_bits(120, &mut rng);
+        let patches = s.extract_patches(&img);
+        assert_eq!(patches.len(), s.n_patches());
+        for (pi, p) in patches.iter().enumerate() {
+            let oy = pi / s.out_w();
+            let ox = pi % s.out_w();
+            for dy in 0..3 {
+                for dx in 0..3 {
+                    let want = img.get((oy * 2 + dy) * 10 + ox * 2 + dx);
+                    assert_eq!(p.get(dy * 3 + dx), want, "patch {pi} ({dy},{dx})");
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn conv_layer_on_cam_matches_digital_reference() {
+        use crate::accel::VoltageController;
+        use crate::analog::Pvt;
+        use crate::bnn::mapping::{program_row, segment_query};
+        use crate::cam::{CamArray, CamConfig};
+
+        let spec = PatchSpec {
+            img_h: 16,
+            img_w: 16,
+            k: 5,
+            stride: 3,
+        };
+        let mut rng = Rng::new(11, 3);
+        // 8 random binary filters mapped with random (even) BN constants
+        let n_f = 8;
+        let filters: Vec<BitVec> = (0..n_f).map(|_| rand_bits(25, &mut rng)).collect();
+        let width = 512usize;
+        let pads = width - 25;
+        let layer = MappedLayer {
+            weights: BitMatrix::from_rows(&filters),
+            q: vec![(0..n_f)
+                .map(|_| (pads / 2) as i32 + rng.range_u64(0, 10) as i32 - 5)
+                .collect()],
+            seg_bounds: vec![0, 25],
+            seg_width: width,
+        };
+        layer.validate().unwrap();
+
+        // the device: program filter rows, midpoint voltages, one search
+        // per patch
+        let mut cam = CamArray::nominal(CamConfig::W512x256);
+        for (f, _) in filters.iter().enumerate() {
+            cam.write_row(f, &program_row(&layer, 0, f));
+        }
+        let ctl = VoltageController::new(width, Pvt::nominal());
+        let mid = ctl
+            .calibrate((width / 2) as u32, 2.0)
+            .unwrap_or_else(|| ctl.calibrate_best((width / 2) as u32));
+        cam.set_voltages(mid.voltages);
+
+        let image = rand_bits(256, &mut rng);
+        let want = digital_conv(&layer, &spec, &image);
+        let patches = spec.extract_patches(&image);
+        let mut got = BitVec::zeros(n_f * patches.len());
+        for (pi, patch) in patches.iter().enumerate() {
+            let q = segment_query(&layer, 0, patch);
+            let fires = cam.search(&q);
+            for f in 0..n_f {
+                if fires[f] {
+                    got.set(f * patches.len() + pi, true);
+                }
+            }
+        }
+        assert_eq!(got, want, "CAM conv vs digital reference");
+        // cost: one search per patch regardless of filter count
+        assert_eq!(cam.events.searches, patches.len() as u64);
+    }
+}

@@ -1,0 +1,174 @@
+//! Reference (digital, in-memory-free) execution of a mapped model, and the
+//! vote/prediction semantics shared by every backend.
+//!
+//! `digital_*` computes exactly what the nominal CAM computes — packed
+//! XNOR-popcount, integer pad constants, midpoint thresholds, threshold-
+//! sweep votes — but without the device simulation.  It is the bit-exact
+//! oracle the CAM path (`accel::Pipeline`) and the PJRT path
+//! (`runtime::InferEngine`) are both validated against.
+
+use crate::util::bitops::BitVec;
+
+use super::model::{MappedLayer, MappedModel};
+
+/// Hidden-layer execution: per-segment midpoint threshold + majority.
+///
+/// Segment s of neuron j fires iff HD_w + q ≤ seg_width/2 (ties fire — the
+/// MLSA convention); the neuron output is the majority of segment fires
+/// (ties fire).  Single-segment layers reduce to sign(dot + C).
+pub fn digital_hidden(layer: &MappedLayer, x: &BitVec) -> BitVec {
+    let mut out = BitVec::zeros(layer.n_out());
+    let half = layer.seg_width as u32 / 2;
+    let n_seg = layer.n_seg();
+    for j in 0..layer.n_out() {
+        let mut fires = 0usize;
+        for s in 0..n_seg {
+            let m = super::mapping::expected_mismatches(layer, s, j, x);
+            if m <= half {
+                fires += 1;
+            }
+        }
+        out.set(j, fires * 2 >= n_seg);
+    }
+    out
+}
+
+/// Output-layer HD per class: HD_w + q (single segment required).
+pub fn digital_output_hd(layer: &MappedLayer, h: &BitVec) -> Vec<u32> {
+    assert_eq!(layer.n_seg(), 1, "output layer must fit one CAM word");
+    (0..layer.n_out())
+        .map(|j| super::mapping::expected_mismatches(layer, 0, j, h))
+        .collect()
+}
+
+/// Threshold-sweep vote counts: votes_c = #{τ ∈ schedule : hd_c ≤ τ}.
+pub fn sweep_votes(hd: &[u32], schedule: &[i32]) -> Vec<u32> {
+    hd.iter()
+        .map(|&h| schedule.iter().filter(|&&t| h as i64 <= t as i64).count() as u32)
+        .collect()
+}
+
+/// Argmax with lowest-class-index tie-break (the device has no secondary
+/// comparison signal; ties resolve by priority-encoder order).
+pub fn argmax_vote(votes: &[u32]) -> usize {
+    let mut best = 0usize;
+    for (i, &v) in votes.iter().enumerate() {
+        if v > votes[best] {
+            best = i;
+        }
+    }
+    best
+}
+
+/// Indices of the top-k vote counts (stable order: higher votes first,
+/// lower class index wins ties).
+pub fn top_k(votes: &[u32], k: usize) -> Vec<usize> {
+    let mut idx: Vec<usize> = (0..votes.len()).collect();
+    idx.sort_by(|&a, &b| votes[b].cmp(&votes[a]).then(a.cmp(&b)));
+    idx.truncate(k);
+    idx
+}
+
+/// Full digital forward pass: (votes, prediction).
+pub fn digital_forward(model: &MappedModel, x: &BitVec, schedule: &[i32]) -> (Vec<u32>, usize) {
+    assert_eq!(x.len(), model.n_in());
+    let mut act = x.clone();
+    for layer in &model.layers[..model.layers.len() - 1] {
+        act = digital_hidden(layer, &act);
+    }
+    let hd = digital_output_hd(model.layers.last().unwrap(), &act);
+    let votes = sweep_votes(&hd, schedule);
+    let pred = argmax_vote(&votes);
+    (votes, pred)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::bnn::model::test_fixtures::tiny_model;
+    use crate::testkit::{forall, prop_assert};
+    use crate::util::rng::Rng;
+
+    fn rand_act(n: usize, rng: &mut Rng) -> BitVec {
+        let mut v = BitVec::zeros(n);
+        for i in 0..n {
+            v.set(i, rng.chance(0.5));
+        }
+        v
+    }
+
+    #[test]
+    fn hidden_equals_sign_dot_plus_c() {
+        // single-segment: fire iff dot + C >= 0 with ties firing
+        forall(50, 21, |g| {
+            let seed = g.usize_in(0, 1 << 30) as u64;
+            let m = tiny_model(60, 12, 4, seed);
+            let l = &m.layers[0];
+            let mut rng = Rng::new(seed ^ 1, 5);
+            let x = rand_act(60, &mut rng);
+            let h = digital_hidden(l, &x);
+            for j in 0..l.n_out() {
+                let dot = l.weights.row(j).dot_pm1(&x);
+                let want = dot + l.c_effective(0, j) >= 0;
+                prop_assert(h.get(j) == want, format!("neuron {j}"))?;
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn votes_monotone_decreasing_in_hd() {
+        let schedule: Vec<i32> = (0..=64).step_by(2).collect();
+        let hd: Vec<u32> = (0..200).collect();
+        let votes = sweep_votes(&hd, &schedule);
+        for w in votes.windows(2) {
+            assert!(w[0] >= w[1]);
+        }
+        assert_eq!(votes[0], 33);
+        assert_eq!(votes[64], 1); // hd=64 <= only the last threshold
+        assert_eq!(votes[65], 0);
+    }
+
+    #[test]
+    fn argmax_vote_prefers_lowest_on_tie() {
+        assert_eq!(argmax_vote(&[3, 5, 5, 1]), 1);
+        assert_eq!(argmax_vote(&[7, 7]), 0);
+        assert_eq!(argmax_vote(&[0]), 0);
+    }
+
+    #[test]
+    fn top_k_ordering() {
+        assert_eq!(top_k(&[3, 9, 9, 4], 3), vec![1, 2, 3]);
+        assert_eq!(top_k(&[1, 2, 3], 5), vec![2, 1, 0]);
+    }
+
+    #[test]
+    fn forward_prediction_tracks_min_hd() {
+        // with the full schedule, argmax votes == argmin hd (when hd <= 64)
+        forall(30, 23, |g| {
+            let seed = g.usize_in(0, 1 << 30) as u64;
+            let m = tiny_model(60, 12, 5, seed);
+            let mut rng = Rng::new(seed ^ 2, 6);
+            let x = rand_act(60, &mut rng);
+            let mut act = x.clone();
+            act = digital_hidden(&m.layers[0], &act);
+            let hd = digital_output_hd(&m.layers[1], &act);
+            let (votes, pred) = digital_forward(&m, &x, &m.schedule);
+            if hd.iter().any(|&h| h <= 64) {
+                // the even-threshold sweep quantizes HD in steps of 2, so
+                // the winner's HD can exceed the minimum by at most 1
+                let min_hd = *hd.iter().min().unwrap();
+                prop_assert(
+                    hd[pred] <= min_hd + 1,
+                    format!("pred {pred} hd {hd:?}"),
+                )?;
+                let max_votes = *votes.iter().max().unwrap();
+                prop_assert(
+                    votes[pred] == max_votes,
+                    format!("votes {votes:?} pred {pred}"),
+                )?;
+            }
+            Ok(())
+        });
+    }
+}

@@ -1,0 +1,160 @@
+//! Weight → CAM row materialisation: turns a [`MappedLayer`] into the
+//! physical bit patterns programmed into the array (weights + pad cells),
+//! and the query extension that drives the searchlines.
+//!
+//! A neuron's segment row of `seg_width` cells holds its payload weight
+//! bits followed by pad cells.  Pads encode the batch-norm constant: for a
+//! segment with P pads and q mismatching pads, the first (P − q) pads are
+//! programmed to match the (fixed) pad drive pattern and the remaining q to
+//! mismatch it, contributing dot_pad = P − 2q to the ±1 dot product
+//! (paper §IV: "C_j = +12 is represented by 12 matching CAM cells").
+//!
+//! The pad drive pattern is all-'1' (+1 on every pad searchline), so a
+//! matching pad stores '1' and a mismatching pad stores '0'.
+
+use crate::util::bitops::BitVec;
+
+use super::model::MappedLayer;
+
+/// Physical row image for (layer, segment, neuron).
+pub fn program_row(layer: &MappedLayer, seg: usize, neuron: usize) -> BitVec {
+    let lo = layer.seg_bounds[seg];
+    let hi = layer.seg_bounds[seg + 1];
+    let payload = hi - lo;
+    let pads = layer.seg_width - payload;
+    let q = layer.q[seg][neuron] as usize;
+    debug_assert!(q <= pads);
+    let mut row = BitVec::zeros(layer.seg_width);
+    // payload: the neuron's weight bits for this segment's input slice
+    // (word-level copy; the weights row is a packed BitVec)
+    let wrow = layer.weights.row(neuron);
+    row.write_range(0, &wrow, lo, payload);
+    // pads: (pads - q) matching ('1' vs all-ones drive), q mismatching ('0')
+    for p in 0..pads - q {
+        row.set(payload + p, true);
+    }
+    row
+}
+
+/// Query image for one segment: the activation slice followed by the
+/// all-'1' pad drive.
+pub fn segment_query(layer: &MappedLayer, seg: usize, activations: &BitVec) -> BitVec {
+    debug_assert_eq!(activations.len(), layer.n_in());
+    segment_query_wide(layer, seg, activations, layer.seg_width)
+}
+
+/// `segment_query` extended directly to an arbitrary physical word width
+/// (spare columns drive '1'); one allocation, word-level copies.
+pub fn segment_query_wide(
+    layer: &MappedLayer,
+    seg: usize,
+    activations: &BitVec,
+    width: usize,
+) -> BitVec {
+    debug_assert!(width >= layer.seg_width);
+    let lo = layer.seg_bounds[seg];
+    let hi = layer.seg_bounds[seg + 1];
+    let payload = hi - lo;
+    let mut q = BitVec::ones(width);
+    q.write_range(0, activations, lo, payload);
+    q
+}
+
+/// The expected mismatch count of (row, query) for a neuron segment:
+/// HD(weights_slice, x_slice) + q — the identity the CAM realises.
+pub fn expected_mismatches(
+    layer: &MappedLayer,
+    seg: usize,
+    neuron: usize,
+    activations: &BitVec,
+) -> u32 {
+    let lo = layer.seg_bounds[seg];
+    let hi = layer.seg_bounds[seg + 1];
+    let mut hd = 0u32;
+    for c in lo..hi {
+        if layer.weights.get(neuron, c) != activations.get(c) {
+            hd += 1;
+        }
+    }
+    hd + layer.q[seg][neuron] as u32
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::bnn::model::test_fixtures::tiny_model;
+    use crate::util::bitops::hamming_words;
+    use crate::util::rng::Rng;
+
+    fn rand_act(n: usize, seed: u64) -> BitVec {
+        let mut rng = Rng::new(seed, 0);
+        let mut v = BitVec::zeros(n);
+        for i in 0..n {
+            v.set(i, rng.chance(0.5));
+        }
+        v
+    }
+
+    #[test]
+    fn row_query_mismatch_identity() {
+        // HD(program_row, segment_query) == HD(w_slice, x_slice) + q
+        let m = tiny_model(100, 16, 4, 9);
+        let l = &m.layers[0];
+        let x = rand_act(100, 3);
+        for neuron in 0..l.n_out() {
+            let row = program_row(l, 0, neuron);
+            let q = segment_query(l, 0, &x);
+            let got = hamming_words(row.words(), q.words());
+            let want = expected_mismatches(l, 0, neuron, &x);
+            assert_eq!(got, want, "neuron {neuron}");
+        }
+    }
+
+    #[test]
+    fn pad_encoding_realises_c() {
+        // dot(row, query) over the pad region == pads - 2q
+        let m = tiny_model(100, 16, 4, 10);
+        let l = &m.layers[0];
+        let payload = l.seg_payload(0);
+        let pads = l.seg_pads(0);
+        for neuron in 0..4 {
+            let row = program_row(l, 0, neuron);
+            let matching = (payload..payload + pads).filter(|&i| row.get(i)).count() as i32;
+            let mismatching = pads as i32 - matching;
+            assert_eq!(matching - mismatching, l.c_effective(0, neuron));
+        }
+    }
+
+    #[test]
+    fn zero_hd_when_weights_equal_activations_and_q_zero() {
+        let mut m = tiny_model(64, 8, 4, 11);
+        let l = &mut m.layers[0];
+        l.q[0].iter_mut().for_each(|q| *q = 0);
+        let x = l.weights.row(2); // activations identical to neuron 2 weights
+        let row = program_row(l, 0, 2);
+        let query = segment_query(l, 0, &x);
+        assert_eq!(hamming_words(row.words(), query.words()), 0);
+    }
+
+    #[test]
+    fn segmented_layer_covers_all_inputs() {
+        // construct a 2-segment layer manually and check query slicing
+        use crate::util::bitops::BitMatrix;
+        let n_in = 150;
+        let width = 128;
+        let rows: Vec<BitVec> = (0..3).map(|_| BitVec::ones(n_in)).collect();
+        let l = MappedLayer {
+            weights: BitMatrix::from_rows(&rows),
+            q: vec![vec![0; 3], vec![0; 3]],
+            seg_bounds: vec![0, 75, 150],
+            seg_width: width,
+        };
+        l.validate().unwrap();
+        let x = BitVec::ones(n_in);
+        for s in 0..2 {
+            let row = program_row(&l, s, 0);
+            let q = segment_query(&l, s, &x);
+            assert_eq!(hamming_words(row.words(), q.words()), 0);
+        }
+    }
+}

@@ -1,0 +1,10 @@
+//! BNN model layer: the mapped-model container/loader, the weight→row
+//! materialisation, and the digital reference execution semantics.
+
+pub mod conv;
+pub mod infer;
+pub mod mapping;
+pub mod model;
+
+pub use infer::{argmax_vote, digital_forward, sweep_votes, top_k};
+pub use model::{MappedLayer, MappedModel};

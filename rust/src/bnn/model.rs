@@ -1,0 +1,349 @@
+//! Mapped-model container + loader for the `PICBNN1` export format written
+//! by `python/compile/train.py::write_weights_bin`.
+//!
+//! Layout (little-endian):
+//! ```text
+//! magic   8 B   "PICBNN1\0"
+//! u32           n_layers
+//! per layer:
+//!   u32 × 4     n_out, n_in, n_seg, seg_width
+//!   u32 × (n_seg+1)        seg_bounds (payload slice bounds into the input)
+//!   i32 × (n_seg × n_out)  q — mismatching-pad count per (segment, neuron)
+//!   u64 × (n_out × ceil(n_in/64))  packed ±1 weights (bit set = +1)
+//! u32           schedule_len
+//! i32 × len     HD-threshold schedule (Algorithm 1)
+//! ```
+
+use std::io::Read;
+use std::path::Path;
+
+use crate::util::bitops::{words_for, BitMatrix};
+
+/// One binary layer mapped onto CAM rows (mirror of python `LayerMap`).
+#[derive(Clone, Debug)]
+pub struct MappedLayer {
+    /// Packed ±1 weights, n_out rows × n_in bits.
+    pub weights: BitMatrix,
+    /// Mismatching-pad counts, `q[seg][neuron]`.
+    pub q: Vec<Vec<i32>>,
+    /// Payload slice bounds: segment s covers input bits
+    /// `seg_bounds[s]..seg_bounds[s+1]`.
+    pub seg_bounds: Vec<usize>,
+    /// CAM word width the layer's rows are programmed at.
+    pub seg_width: usize,
+}
+
+impl MappedLayer {
+    pub fn n_out(&self) -> usize {
+        self.weights.rows()
+    }
+
+    pub fn n_in(&self) -> usize {
+        self.weights.cols()
+    }
+
+    pub fn n_seg(&self) -> usize {
+        self.seg_bounds.len() - 1
+    }
+
+    pub fn seg_payload(&self, s: usize) -> usize {
+        self.seg_bounds[s + 1] - self.seg_bounds[s]
+    }
+
+    pub fn seg_pads(&self, s: usize) -> usize {
+        self.seg_width - self.seg_payload(s)
+    }
+
+    /// The integer constant segment `s` realises for neuron `j`:
+    /// dot_pad = pads − 2·q.
+    pub fn c_effective(&self, s: usize, j: usize) -> i32 {
+        self.seg_pads(s) as i32 - 2 * self.q[s][j]
+    }
+
+    /// Sanity-check structural invariants; returns an error description.
+    pub fn validate(&self) -> Result<(), String> {
+        if self.seg_bounds.first() != Some(&0) || self.seg_bounds.last() != Some(&self.n_in()) {
+            return Err("seg_bounds must span [0, n_in]".into());
+        }
+        if self.q.len() != self.n_seg() {
+            return Err("q segment count mismatch".into());
+        }
+        for s in 0..self.n_seg() {
+            if self.seg_payload(s) > self.seg_width {
+                return Err(format!("segment {s} payload exceeds word width"));
+            }
+            if self.q[s].len() != self.n_out() {
+                return Err(format!("q[{s}] neuron count mismatch"));
+            }
+            for (j, &qv) in self.q[s].iter().enumerate() {
+                if qv < 0 || qv as usize > self.seg_pads(s) {
+                    return Err(format!("q[{s}][{j}]={qv} outside [0, pads]"));
+                }
+            }
+        }
+        Ok(())
+    }
+}
+
+/// A fully mapped model: layers + the Algorithm-1 HD schedule.
+#[derive(Clone, Debug)]
+pub struct MappedModel {
+    pub layers: Vec<MappedLayer>,
+    /// HD-threshold sweep for the output layer ({0, 2, …, 64} in the paper).
+    pub schedule: Vec<i32>,
+}
+
+impl MappedModel {
+    pub fn n_in(&self) -> usize {
+        self.layers[0].n_in()
+    }
+
+    pub fn n_classes(&self) -> usize {
+        self.layers.last().unwrap().n_out()
+    }
+
+    /// Load from a `PICBNN1` file.
+    pub fn load(path: impl AsRef<Path>) -> Result<MappedModel, String> {
+        let mut buf = Vec::new();
+        std::fs::File::open(path.as_ref())
+            .map_err(|e| format!("open {}: {e}", path.as_ref().display()))?
+            .read_to_end(&mut buf)
+            .map_err(|e| e.to_string())?;
+        Self::from_bytes(&buf)
+    }
+
+    pub fn from_bytes(buf: &[u8]) -> Result<MappedModel, String> {
+        let mut c = Cursor { buf, pos: 0 };
+        let magic = c.take(8)?;
+        if magic != b"PICBNN1\x00" {
+            return Err("bad magic (not a PICBNN1 file)".into());
+        }
+        let n_layers = c.u32()? as usize;
+        if n_layers == 0 || n_layers > 16 {
+            return Err(format!("implausible layer count {n_layers}"));
+        }
+        let mut layers = Vec::with_capacity(n_layers);
+        for _ in 0..n_layers {
+            let n_out = c.u32()? as usize;
+            let n_in = c.u32()? as usize;
+            let n_seg = c.u32()? as usize;
+            let seg_width = c.u32()? as usize;
+            let mut seg_bounds = Vec::with_capacity(n_seg + 1);
+            for _ in 0..=n_seg {
+                seg_bounds.push(c.u32()? as usize);
+            }
+            let mut q = Vec::with_capacity(n_seg);
+            for _ in 0..n_seg {
+                let mut row = Vec::with_capacity(n_out);
+                for _ in 0..n_out {
+                    row.push(c.i32()?);
+                }
+                q.push(row);
+            }
+            let words = words_for(n_in);
+            let mut data = Vec::with_capacity(n_out * words);
+            for _ in 0..n_out * words {
+                data.push(c.u64()?);
+            }
+            let layer = MappedLayer {
+                weights: BitMatrix::from_words(data, n_out, n_in),
+                q,
+                seg_bounds,
+                seg_width,
+            };
+            layer.validate()?;
+            layers.push(layer);
+        }
+        let k = c.u32()? as usize;
+        let mut schedule = Vec::with_capacity(k);
+        for _ in 0..k {
+            schedule.push(c.i32()?);
+        }
+        if c.pos != buf.len() {
+            return Err(format!(
+                "trailing {} bytes after schedule",
+                buf.len() - c.pos
+            ));
+        }
+        // layers must chain: layer[i].n_out == layer[i+1].n_in
+        for w in layers.windows(2) {
+            if w[0].n_out() != w[1].n_in() {
+                return Err("layer dimension chain mismatch".into());
+            }
+        }
+        Ok(MappedModel { layers, schedule })
+    }
+}
+
+struct Cursor<'a> {
+    buf: &'a [u8],
+    pos: usize,
+}
+
+impl<'a> Cursor<'a> {
+    fn take(&mut self, n: usize) -> Result<&'a [u8], String> {
+        if self.pos + n > self.buf.len() {
+            return Err(format!("truncated file at byte {}", self.pos));
+        }
+        let s = &self.buf[self.pos..self.pos + n];
+        self.pos += n;
+        Ok(s)
+    }
+
+    fn u32(&mut self) -> Result<u32, String> {
+        Ok(u32::from_le_bytes(self.take(4)?.try_into().unwrap()))
+    }
+
+    fn i32(&mut self) -> Result<i32, String> {
+        Ok(i32::from_le_bytes(self.take(4)?.try_into().unwrap()))
+    }
+
+    fn u64(&mut self) -> Result<u64, String> {
+        Ok(u64::from_le_bytes(self.take(8)?.try_into().unwrap()))
+    }
+}
+
+#[cfg(test)]
+pub(crate) mod test_fixtures {
+    use super::*;
+    use crate::util::bitops::BitVec;
+    use crate::util::rng::Rng;
+
+    /// Build a small random mapped model in memory (n_in -> h -> n_cls).
+    pub fn tiny_model(n_in: usize, h: usize, n_cls: usize, seed: u64) -> MappedModel {
+        let mut rng = Rng::new(seed, 77);
+        let mk_layer = |rng: &mut Rng, n_out: usize, n_in: usize, width: usize| {
+            let rows: Vec<BitVec> = (0..n_out)
+                .map(|_| {
+                    let mut v = BitVec::zeros(n_in);
+                    for i in 0..n_in {
+                        v.set(i, rng.chance(0.5));
+                    }
+                    v
+                })
+                .collect();
+            let pads = width - n_in;
+            let q = vec![(0..n_out)
+                .map(|_| rng.range_u64(0, pads as u64) as i32)
+                .collect()];
+            MappedLayer {
+                weights: BitMatrix::from_rows(&rows),
+                q,
+                seg_bounds: vec![0, n_in],
+                seg_width: width,
+            }
+        };
+        let l1 = mk_layer(&mut rng, h, n_in, (n_in + 64).next_power_of_two().max(128));
+        let l2 = mk_layer(&mut rng, n_cls, h, (h + 64).next_power_of_two().max(128));
+        MappedModel {
+            layers: vec![l1, l2],
+            schedule: (0..=64).step_by(2).collect(),
+        }
+    }
+
+    /// Serialize a model back to the PICBNN1 byte format (round-trip tests).
+    pub fn to_bytes(m: &MappedModel) -> Vec<u8> {
+        let mut out = Vec::new();
+        out.extend_from_slice(b"PICBNN1\x00");
+        out.extend_from_slice(&(m.layers.len() as u32).to_le_bytes());
+        for l in &m.layers {
+            for v in [
+                l.n_out() as u32,
+                l.n_in() as u32,
+                l.n_seg() as u32,
+                l.seg_width as u32,
+            ] {
+                out.extend_from_slice(&v.to_le_bytes());
+            }
+            for &b in &l.seg_bounds {
+                out.extend_from_slice(&(b as u32).to_le_bytes());
+            }
+            for seg in &l.q {
+                for &qv in seg {
+                    out.extend_from_slice(&qv.to_le_bytes());
+                }
+            }
+            for r in 0..l.n_out() {
+                for &w in l.weights.row_words(r) {
+                    out.extend_from_slice(&w.to_le_bytes());
+                }
+            }
+        }
+        out.extend_from_slice(&(m.schedule.len() as u32).to_le_bytes());
+        for &s in &m.schedule {
+            out.extend_from_slice(&s.to_le_bytes());
+        }
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::test_fixtures::{tiny_model, to_bytes};
+    use super::*;
+
+    #[test]
+    fn roundtrip_bytes() {
+        let m = tiny_model(100, 16, 4, 1);
+        let bytes = to_bytes(&m);
+        let m2 = MappedModel::from_bytes(&bytes).unwrap();
+        assert_eq!(m2.layers.len(), 2);
+        assert_eq!(m2.n_in(), 100);
+        assert_eq!(m2.n_classes(), 4);
+        assert_eq!(m2.schedule, m.schedule);
+        for (a, b) in m.layers.iter().zip(&m2.layers) {
+            assert_eq!(a.seg_bounds, b.seg_bounds);
+            assert_eq!(a.q, b.q);
+            for r in 0..a.n_out() {
+                assert_eq!(a.weights.row_words(r), b.weights.row_words(r));
+            }
+        }
+    }
+
+    #[test]
+    fn rejects_bad_magic() {
+        assert!(MappedModel::from_bytes(b"NOTMAGIC\x00\x00\x00\x00").is_err());
+    }
+
+    #[test]
+    fn rejects_truncation() {
+        let bytes = to_bytes(&tiny_model(50, 8, 3, 2));
+        for cut in [8, 13, 40, bytes.len() - 2] {
+            assert!(
+                MappedModel::from_bytes(&bytes[..cut]).is_err(),
+                "cut at {cut}"
+            );
+        }
+    }
+
+    #[test]
+    fn rejects_trailing_garbage() {
+        let mut bytes = to_bytes(&tiny_model(50, 8, 3, 2));
+        bytes.push(0);
+        assert!(MappedModel::from_bytes(&bytes).is_err());
+    }
+
+    #[test]
+    fn c_effective_sign() {
+        let m = tiny_model(100, 16, 4, 3);
+        let l = &m.layers[0];
+        for j in 0..l.n_out() {
+            let c = l.c_effective(0, j);
+            assert!(c.abs() as usize <= l.seg_pads(0));
+            assert_eq!(
+                c,
+                l.seg_pads(0) as i32 - 2 * l.q[0][j],
+                "definition of pad encoding"
+            );
+        }
+    }
+
+    #[test]
+    fn validate_catches_bad_q() {
+        let mut m = tiny_model(100, 16, 4, 4);
+        m.layers[0].q[0][0] = -1;
+        assert!(m.layers[0].validate().is_err());
+        m.layers[0].q[0][0] = m.layers[0].seg_pads(0) as i32 + 1;
+        assert!(m.layers[0].validate().is_err());
+    }
+}

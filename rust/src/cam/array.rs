@@ -1,0 +1,402 @@
+//! The 128-kbit PiC-BNN array: packed storage, voltage rails, matchline
+//! evaluation, and event/cycle accounting.
+//!
+//! One `search` = one device clock cycle: precharge all matchlines, assert
+//! the query on the searchlines, let the MLs discharge through mismatching
+//! cells (throttled by V_eval), and sample every MLSA at t_s(V_st) against
+//! V_ref.  All rows evaluate in parallel in silicon; the simulator charges
+//! one cycle regardless of row count.
+
+use crate::analog::constants as k;
+use crate::analog::dac::VoltageRails;
+use crate::analog::matchline::{MatchlineModel, RowVariation, Voltages};
+use crate::analog::transistor::Pvt;
+use crate::sim::{EventCounters, SimClock};
+use crate::util::bitops::{hamming_words, BitMatrix, BitVec};
+use crate::util::rng::Rng;
+
+use super::config::CamConfig;
+
+/// Noise fidelity of the simulation.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum NoiseMode {
+    /// Deterministic nominal model (cross-validation vs the L2 graph).
+    Nominal,
+    /// Full Monte-Carlo variation + per-evaluation noise (the device).
+    Analog,
+}
+
+/// The simulated PiC-BNN macro.
+pub struct CamArray {
+    config: CamConfig,
+    store: BitMatrix,
+    row_valid: Vec<bool>,
+    row_var: Vec<RowVariation>,
+    /// Voltage sources for (V_ref, V_eval, V_st).
+    pub rails: VoltageRails,
+    model: MatchlineModel,
+    pub clock: SimClock,
+    pub events: EventCounters,
+    rng: Rng,
+    pvt: Pvt,
+    noise: NoiseMode,
+}
+
+impl CamArray {
+    /// Fresh array in `config` at the given PVT point.
+    pub fn new(config: CamConfig, pvt: Pvt, noise: NoiseMode, seed: u64) -> Self {
+        let mut rng = Rng::new(seed, 0x0CA8);
+        let rails = match noise {
+            NoiseMode::Nominal => VoltageRails::ideal(Voltages::exact()),
+            NoiseMode::Analog => VoltageRails::new(Voltages::exact(), &mut rng),
+        };
+        CamArray {
+            config,
+            store: BitMatrix::zeros(config.rows(), config.width()),
+            row_valid: vec![false; config.rows()],
+            row_var: vec![RowVariation::nominal(); config.rows()],
+            rails,
+            model: MatchlineModel::new(config.width(), pvt),
+            clock: SimClock::new(),
+            events: EventCounters::default(),
+            rng,
+            pvt,
+            noise,
+        }
+    }
+
+    /// Convenience: analog-noise array at nominal PVT.
+    pub fn analog(config: CamConfig, seed: u64) -> Self {
+        CamArray::new(config, Pvt::nominal(), NoiseMode::Analog, seed)
+    }
+
+    /// Convenience: deterministic array (bit-exact vs the L2 graph).
+    pub fn nominal(config: CamConfig) -> Self {
+        CamArray::new(config, Pvt::nominal(), NoiseMode::Nominal, 0)
+    }
+
+    pub fn config(&self) -> CamConfig {
+        self.config
+    }
+
+    pub fn pvt(&self) -> Pvt {
+        self.pvt
+    }
+
+    pub fn noise_mode(&self) -> NoiseMode {
+        self.noise
+    }
+
+    /// Reconfigure the logical geometry; clears contents (the physical
+    /// banks are re-tiled).
+    pub fn reconfigure(&mut self, config: CamConfig) {
+        let scale = self.model.noise_scale;
+        self.config = config;
+        self.store = BitMatrix::zeros(config.rows(), config.width());
+        self.row_valid = vec![false; config.rows()];
+        self.row_var = vec![RowVariation::nominal(); config.rows()];
+        self.model = MatchlineModel::with_noise_scale(config.width(), self.pvt, scale);
+    }
+
+    /// Scale every per-evaluation noise sigma (ablations; 1.0 = shipped).
+    pub fn set_noise_scale(&mut self, scale: f64) {
+        self.model.noise_scale = scale;
+    }
+
+    /// Program one row (one cycle per word write; silicon writes a word per
+    /// cycle through the write circuitry).  Draws fresh per-row variation.
+    pub fn write_row(&mut self, row: usize, data: &BitVec) {
+        assert_eq!(data.len(), self.config.width(), "row width mismatch");
+        assert!(row < self.config.rows(), "row index out of range");
+        self.store.row_words_mut(row).copy_from_slice(data.words());
+        self.row_valid[row] = true;
+        self.row_var[row] = match self.noise {
+            NoiseMode::Nominal => RowVariation::nominal(),
+            NoiseMode::Analog => RowVariation::draw(&mut self.rng),
+        };
+        self.clock.tick(1);
+        self.events.cells_written += self.config.width() as u64;
+    }
+
+    /// Invalidate a row (its MLSA output is ignored by searches).
+    pub fn clear_row(&mut self, row: usize) {
+        self.row_valid[row] = false;
+    }
+
+    /// Read a row back (diagnostic path; one cycle).
+    pub fn read_row(&mut self, row: usize) -> Option<BitVec> {
+        self.clock.tick(1);
+        self.events.reads += 1;
+        if self.row_valid[row] {
+            Some(self.store.row(row))
+        } else {
+            None
+        }
+    }
+
+    /// Retune the three voltage rails; stalls for the DAC settle time.
+    pub fn set_voltages(&mut self, v: Voltages) {
+        let stall = self.rails.retune(v.clamped());
+        if stall > 0.0 {
+            self.clock.stall(stall);
+            self.events.retunes += 1;
+        }
+    }
+
+    /// Voltages the array currently sees (incl. DAC non-idealities).
+    pub fn delivered_voltages(&self) -> Voltages {
+        self.rails.delivered()
+    }
+
+    /// Nominal HD tolerance at the current rails (diagnostic).
+    pub fn current_tolerance(&self) -> f64 {
+        self.model.hd_tolerance(&self.rails.delivered())
+    }
+
+    /// One search cycle: per-row mismatch counts + MLSA decisions.
+    ///
+    /// `fires[r]` is meaningful only for valid rows; invalid rows report
+    /// `false`.  Reuses caller buffers — the hot path allocates nothing.
+    pub fn search_into(&mut self, query: &BitVec, mismatches: &mut Vec<u32>, fires: &mut Vec<bool>) {
+        assert_eq!(query.len(), self.config.width(), "query width mismatch");
+        let rows = self.config.rows();
+        mismatches.clear();
+        mismatches.reserve(rows);
+        fires.clear();
+        fires.reserve(rows);
+        let v = self.rails.delivered();
+        // cycle-global noise (supply, strobe jitter) drawn once per search:
+        // every row of a cycle shares the rails and the MLSA strobe
+        let cycle = match self.noise {
+            NoiseMode::Analog => Some(self.model.begin_cycle(&v, &mut self.rng)),
+            NoiseMode::Nominal => None,
+        };
+        for r in 0..rows {
+            if !self.row_valid[r] {
+                mismatches.push(0);
+                fires.push(false);
+                continue;
+            }
+            let m = hamming_words(self.store.row_words(r), query.words());
+            mismatches.push(m);
+            let fire = match &cycle {
+                None => self.model.fires_nominal(m, &v, &self.row_var[r]),
+                Some(c) => c.fires(m, &self.row_var[r], &mut self.rng),
+            };
+            fires.push(fire);
+        }
+        self.account_search();
+    }
+
+    /// Ternary (masked) search cycle: columns with a clear `mask` bit are
+    /// "don't care" — their searchline pair is not driven, so they can
+    /// never open a discharge path (see `cam::bitcell::opens_discharge`).
+    pub fn search_masked_into(
+        &mut self,
+        query: &BitVec,
+        mask: &BitVec,
+        mismatches: &mut Vec<u32>,
+        fires: &mut Vec<bool>,
+    ) {
+        assert_eq!(query.len(), self.config.width());
+        assert_eq!(mask.len(), self.config.width());
+        let rows = self.config.rows();
+        mismatches.clear();
+        fires.clear();
+        let v = self.rails.delivered();
+        let cycle = match self.noise {
+            NoiseMode::Analog => Some(self.model.begin_cycle(&v, &mut self.rng)),
+            NoiseMode::Nominal => None,
+        };
+        for r in 0..rows {
+            if !self.row_valid[r] {
+                mismatches.push(0);
+                fires.push(false);
+                continue;
+            }
+            // HD over driven columns only: popcount((row ^ query) & mask)
+            let m: u32 = self
+                .store
+                .row_words(r)
+                .iter()
+                .zip(query.words())
+                .zip(mask.words())
+                .map(|((&a, &b), &k)| ((a ^ b) & k).count_ones())
+                .sum();
+            mismatches.push(m);
+            let fire = match &cycle {
+                None => self.model.fires_nominal(m, &v, &self.row_var[r]),
+                Some(c) => c.fires(m, &self.row_var[r], &mut self.rng),
+            };
+            fires.push(fire);
+        }
+        self.account_search();
+    }
+
+    /// Allocating convenience wrapper around [`CamArray::search_into`].
+    pub fn search(&mut self, query: &BitVec) -> Vec<bool> {
+        let mut m = Vec::new();
+        let mut f = Vec::new();
+        self.search_into(query, &mut m, &mut f);
+        f
+    }
+
+    /// Matchline voltage trace for row `row` under the current rails
+    /// (Fig. 4 regeneration): returns (t, V_ML) samples + the sampling time.
+    pub fn ml_trace(&self, row: usize, query: &BitVec, n_pts: usize) -> (Vec<(f64, f64)>, f64) {
+        let m = hamming_words(self.store.row_words(row), query.words());
+        let v = self.rails.delivered();
+        let ts = self.model.sampling_time(&v);
+        (self.model.trace(m, ts * 2.0, n_pts, &v), ts)
+    }
+
+    fn account_search(&mut self) {
+        self.clock.tick(1);
+        self.events.searches += 1;
+        let width = self.config.width() as u64;
+        let rows = self.config.rows() as u64;
+        self.events.cells_precharged += width * rows;
+        self.events.sl_toggles += width;
+        self.events.mlsa_evals += rows;
+    }
+
+    /// Reset cycle/event accounting (contents preserved).
+    pub fn reset_accounting(&mut self) {
+        self.clock.reset();
+        self.events = EventCounters::default();
+    }
+
+    /// Fraction of rows currently programmed.
+    pub fn occupancy(&self) -> f64 {
+        self.row_valid.iter().filter(|&&v| v).count() as f64 / self.config.rows() as f64
+    }
+
+    /// Macro area [mm²] from the cell count + periphery factor (Table II).
+    pub fn area_mm2(&self) -> f64 {
+        super::config::CAPACITY_BITS as f64 * k::AREA_BITCELL_MM2 * k::BANK_PERIPHERY_FACTOR
+            * 2.0 // CAM cell pitch overhead vs raw bitcell tiling (routing, taps)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn query(width: usize, flip_first: usize) -> (BitVec, BitVec) {
+        // stored row of all +1; query with `flip_first` mismatches
+        let stored = BitVec::ones(width);
+        let mut q = BitVec::ones(width);
+        for i in 0..flip_first {
+            q.set(i, false);
+        }
+        (stored, q)
+    }
+
+    #[test]
+    fn exact_search_matches_only_identical() {
+        let mut cam = CamArray::nominal(CamConfig::W512x256);
+        let (stored, q1) = query(512, 1);
+        cam.write_row(0, &stored);
+        cam.write_row(1, &q1);
+        cam.set_voltages(Voltages::exact());
+        let fires = cam.search(&stored);
+        assert!(fires[0]);
+        assert!(!fires[1]);
+        // unprogrammed rows never fire
+        assert!(!fires[2]);
+    }
+
+    #[test]
+    fn tolerance_widens_matches() {
+        let mut cam = CamArray::nominal(CamConfig::W512x256);
+        let (stored, _) = query(512, 0);
+        cam.write_row(0, &stored);
+        // find rails giving tolerance ~8 via the model (grid scan)
+        let mut v8 = None;
+        for vref in [0.7, 0.8, 0.9, 1.0, 1.1] {
+            for veval in [0.4, 0.6, 0.8, 1.0] {
+                for vst in [0.7, 0.9, 1.1] {
+                    let v = Voltages::new(vref, veval, vst);
+                    let cand = MatchlineModel::new(512, Pvt::nominal()).hd_tolerance(&v);
+                    if (cand - 8.0).abs() < 1.5 {
+                        v8 = Some(v);
+                    }
+                }
+            }
+        }
+        let v8 = v8.expect("some grid point near tol=8");
+        cam.set_voltages(v8);
+        let tol = cam.current_tolerance();
+        let (_, q_in) = query(512, (tol as usize).saturating_sub(2));
+        let (_, q_out) = query(512, tol as usize + 4);
+        assert!(cam.search(&q_in)[0]);
+        assert!(!cam.search(&q_out)[0]);
+    }
+
+    #[test]
+    fn search_counts_cycles_and_events() {
+        let mut cam = CamArray::nominal(CamConfig::W1024x128);
+        let row = BitVec::ones(1024);
+        cam.write_row(0, &row);
+        cam.reset_accounting();
+        let _ = cam.search(&row);
+        let _ = cam.search(&row);
+        assert_eq!(cam.clock.cycles, 2);
+        assert_eq!(cam.events.searches, 2);
+        assert_eq!(cam.events.mlsa_evals, 2 * 128);
+        assert_eq!(cam.events.cells_precharged, 2 * 1024 * 128);
+    }
+
+    #[test]
+    fn reconfigure_clears() {
+        let mut cam = CamArray::nominal(CamConfig::W512x256);
+        cam.write_row(3, &BitVec::ones(512));
+        cam.reconfigure(CamConfig::W2048x64);
+        assert_eq!(cam.config().width(), 2048);
+        assert_eq!(cam.occupancy(), 0.0);
+    }
+
+    #[test]
+    fn read_row_roundtrip() {
+        let mut cam = CamArray::nominal(CamConfig::W512x256);
+        let mut data = BitVec::zeros(512);
+        data.set(17, true);
+        data.set(400, true);
+        cam.write_row(5, &data);
+        assert_eq!(cam.read_row(5), Some(data));
+        assert_eq!(cam.read_row(6), None);
+    }
+
+    #[test]
+    fn analog_mode_is_deterministic_given_seed() {
+        let run = |seed| {
+            let mut cam = CamArray::analog(CamConfig::W512x256, seed);
+            // rails giving tolerance near the probe's mismatch count so the
+            // decision sits in the metastable band and noise matters
+            cam.set_voltages(Voltages::new(0.75, 0.5, 1.0));
+            let tol = cam.current_tolerance().round() as usize;
+            let (stored, q) = query(512, tol.max(1));
+            cam.write_row(0, &stored);
+            (0..64).map(|_| cam.search(&q)[0]).collect::<Vec<bool>>()
+        };
+        assert_eq!(run(7), run(7));
+        assert_ne!(run(7), run(8)); // different seed, different noise draw
+    }
+
+    #[test]
+    fn mismatch_counts_exposed() {
+        let mut cam = CamArray::nominal(CamConfig::W512x256);
+        let (stored, q) = query(512, 33);
+        cam.write_row(0, &stored);
+        let (mut m, mut f) = (Vec::new(), Vec::new());
+        cam.search_into(&q, &mut m, &mut f);
+        assert_eq!(m[0], 33);
+    }
+
+    #[test]
+    fn area_near_paper() {
+        let cam = CamArray::nominal(CamConfig::W512x256);
+        let a = cam.area_mm2();
+        assert!(a > 0.6 && a < 1.2, "{a} should be near the paper's 0.87 mm²");
+    }
+}

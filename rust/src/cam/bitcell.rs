@@ -1,0 +1,73 @@
+//! Cell-level model of the 10T PiC-BNN bitcell (paper Fig. 3c): a 9T NOR
+//! CAM cell (6T SRAM + 3T compare stack) with an extra series transistor
+//! `M_eval` in the matchline discharge path whose gate voltage V_eval
+//! throttles the discharge rate.
+//!
+//! The array hot path never instantiates per-cell objects — storage is
+//! packed words (`util::bitops`) and the discharge physics is aggregated
+//! per row (`analog::matchline`).  This module carries the cell *truth
+//! table* (used by tests as the definitional reference) and the cell-level
+//! area/energy figures used by the energy model.
+
+use crate::analog::constants as k;
+
+/// Stored datum of one cell: a binary weight (+1 encoded as logic '1').
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct Bitcell {
+    pub stored: bool,
+}
+
+impl Bitcell {
+    pub fn new(stored: bool) -> Self {
+        Bitcell { stored }
+    }
+
+    /// Does this cell open its matchline discharge path for the given
+    /// searchline assertion?
+    ///
+    /// NOR-type CAM: the pulldown opens on a *mismatch* between the SL pair
+    /// and the stored pair — XNOR(W, X) = match keeps the ML up.  A search
+    /// may also mask the cell (SL = /SL = 0), which never discharges
+    /// (ternary "don't care" drive; not used by the BNN mapping but part of
+    /// the device behaviour).
+    pub fn opens_discharge(&self, sl: Option<bool>) -> bool {
+        match sl {
+            None => false, // masked: both searchlines low
+            Some(q) => q != self.stored,
+        }
+    }
+
+    /// Cell area [mm²] (paper: ≈3.24 µm² in 65 nm).
+    pub const fn area_mm2() -> f64 {
+        k::AREA_BITCELL_MM2
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn xnor_truth_table() {
+        // (stored, query) -> discharge on mismatch only
+        for (w, x, open) in [
+            (false, false, false),
+            (false, true, true),
+            (true, false, true),
+            (true, true, false),
+        ] {
+            assert_eq!(Bitcell::new(w).opens_discharge(Some(x)), open);
+        }
+    }
+
+    #[test]
+    fn masked_cell_never_discharges() {
+        assert!(!Bitcell::new(true).opens_discharge(None));
+        assert!(!Bitcell::new(false).opens_discharge(None));
+    }
+
+    #[test]
+    fn area_positive() {
+        assert!(Bitcell::area_mm2() > 0.0);
+    }
+}

@@ -1,0 +1,130 @@
+//! Logical configurations of the 128-kbit PiC-BNN array (paper §III).
+//!
+//! The macro comprises four 32-kbit banks, each physically 64 rows × 512
+//! columns.  Logical configurations tile the banks:
+//!
+//! * `512x256`  — banks stacked vertically: 256 rows of 512-bit words;
+//! * `1024x128` — two banks ganged horizontally, two pairs stacked:
+//!                128 rows of 1024-bit words;
+//! * `2048x64`  — all four banks ganged horizontally: 64 rows of 2048 bits.
+//!
+//! Names follow the paper: `<word width>x<word count>`.
+
+/// Physical bank geometry (fixed by the silicon).
+pub const BANK_ROWS: usize = 64;
+pub const BANK_COLS: usize = 512;
+pub const N_BANKS: usize = 4;
+/// Total capacity in bits (128 kbit).
+pub const CAPACITY_BITS: usize = BANK_ROWS * BANK_COLS * N_BANKS;
+
+/// A logical array configuration.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum CamConfig {
+    /// 256 words × 512 bits.
+    W512x256,
+    /// 128 words × 1024 bits.
+    W1024x128,
+    /// 64 words × 2048 bits.
+    W2048x64,
+}
+
+impl CamConfig {
+    /// Word width in bits (cells per matchline).
+    pub const fn width(self) -> usize {
+        match self {
+            CamConfig::W512x256 => 512,
+            CamConfig::W1024x128 => 1024,
+            CamConfig::W2048x64 => 2048,
+        }
+    }
+
+    /// Number of logical rows (words).
+    pub const fn rows(self) -> usize {
+        match self {
+            CamConfig::W512x256 => 256,
+            CamConfig::W1024x128 => 128,
+            CamConfig::W2048x64 => 64,
+        }
+    }
+
+    /// Banks ganged per logical row.
+    pub const fn banks_per_row(self) -> usize {
+        self.width() / BANK_COLS
+    }
+
+    /// Parse a paper-style name ("1024x128").
+    pub fn parse(s: &str) -> Option<CamConfig> {
+        match s {
+            "512x256" => Some(CamConfig::W512x256),
+            "1024x128" => Some(CamConfig::W1024x128),
+            "2048x64" => Some(CamConfig::W2048x64),
+            _ => None,
+        }
+    }
+
+    pub fn name(self) -> &'static str {
+        match self {
+            CamConfig::W512x256 => "512x256",
+            CamConfig::W1024x128 => "1024x128",
+            CamConfig::W2048x64 => "2048x64",
+        }
+    }
+
+    /// Smallest configuration whose word width fits `bits`
+    /// (mirrors `python/compile/model.py::pick_config`).
+    pub fn fitting(bits: usize) -> Option<CamConfig> {
+        [
+            CamConfig::W512x256,
+            CamConfig::W1024x128,
+            CamConfig::W2048x64,
+        ]
+        .into_iter()
+        .find(|c| bits <= c.width())
+    }
+
+    pub fn all() -> [CamConfig; 3] {
+        [
+            CamConfig::W512x256,
+            CamConfig::W1024x128,
+            CamConfig::W2048x64,
+        ]
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn capacity_is_128_kbit_in_every_config() {
+        assert_eq!(CAPACITY_BITS, 131_072);
+        for c in CamConfig::all() {
+            assert_eq!(c.width() * c.rows(), CAPACITY_BITS, "{}", c.name());
+        }
+    }
+
+    #[test]
+    fn bank_tiling_consistent() {
+        for c in CamConfig::all() {
+            let banks_used = c.banks_per_row() * (c.rows() / BANK_ROWS).max(1);
+            assert_eq!(banks_used, N_BANKS, "{}", c.name());
+        }
+    }
+
+    #[test]
+    fn parse_roundtrip() {
+        for c in CamConfig::all() {
+            assert_eq!(CamConfig::parse(c.name()), Some(c));
+        }
+        assert_eq!(CamConfig::parse("bogus"), None);
+    }
+
+    #[test]
+    fn fitting_picks_smallest() {
+        assert_eq!(CamConfig::fitting(512), Some(CamConfig::W512x256));
+        assert_eq!(CamConfig::fitting(513), Some(CamConfig::W1024x128));
+        assert_eq!(CamConfig::fitting(1024), Some(CamConfig::W1024x128));
+        assert_eq!(CamConfig::fitting(2048), Some(CamConfig::W2048x64));
+        assert_eq!(CamConfig::fitting(2049), None);
+    }
+}

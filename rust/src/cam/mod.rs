@@ -1,0 +1,11 @@
+//! The simulated 128-kbit PiC-BNN CAM macro: bank/config geometry, the
+//! cell truth-table reference, and the array-level search engine with
+//! analog matchline evaluation and event accounting.
+
+pub mod array;
+pub mod bitcell;
+pub mod ops;
+pub mod config;
+
+pub use array::{CamArray, NoiseMode};
+pub use config::{CamConfig, BANK_COLS, BANK_ROWS, CAPACITY_BITS, N_BANKS};

@@ -1,0 +1,202 @@
+//! Higher-level associative operations composed from tolerance-tuned
+//! searches — the approximate-search-CAM capability set of the underlying
+//! silicon (paper ref. [1]: "128-kbit approximate search-capable CAM with
+//! tunable Hamming distance") that PiC-BNN specialises for BNN inference.
+//!
+//! * [`masked_search`] — ternary search: masked ("don't care") columns are
+//!   simply not driven (SL = /SL = 0), so they can never open a discharge
+//!   path regardless of the stored bit (`cam::bitcell` models the cell
+//!   truth table; `CamArray::search_masked_into` the array behaviour).
+//! * [`nearest_match`] — best-match search: binary-search the HD tolerance
+//!   (via the voltage controller) until exactly one/few rows fire; this is
+//!   how an associative memory retrieves the closest stored code without
+//!   any ADC (the same primitive Algorithm 1 exploits per class).
+//! * [`priority_encode`] — multi-match resolution: lowest-index firing row
+//!   (the hardware's matchline priority encoder).
+
+use crate::accel::VoltageController;
+use crate::util::bitops::BitVec;
+
+use super::array::CamArray;
+
+/// Lowest-index set entry of a fire vector (the priority encoder).
+pub fn priority_encode(fires: &[bool]) -> Option<usize> {
+    fires.iter().position(|&f| f)
+}
+
+/// Ternary search: columns where `mask` is clear are "don't care".
+///
+/// The NOR cell opens its pulldown only when the driven query bit differs
+/// from the stored bit; masking a column means *not driving* its
+/// searchline pair, which can never discharge the matchline.  At the
+/// functional level that equals excluding the column from the HD — we
+/// realise it by searching with per-row mismatch counts computed over the
+/// masked query (host-side assist mirrors the SL-driver masking registers
+/// the silicon has).
+pub fn masked_search(
+    cam: &mut CamArray,
+    query: &BitVec,
+    mask: &BitVec,
+    out_fires: &mut Vec<bool>,
+) {
+    assert_eq!(query.len(), mask.len());
+    let (mut m, mut f) = (Vec::new(), Vec::new());
+    cam.search_masked_into(query, mask, &mut m, &mut f);
+    out_fires.clear();
+    out_fires.extend_from_slice(&f);
+}
+
+/// Result of a nearest-match retrieval.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct NearestMatch {
+    /// Firing rows at the smallest tolerance that produced any match.
+    pub rows: Vec<usize>,
+    /// The tolerance step at which they fired.
+    pub tolerance: u32,
+    /// Searches issued (the retrieval cost).
+    pub searches: u32,
+}
+
+/// Best-match retrieval: binary-search the HD tolerance until the smallest
+/// level with ≥1 firing row is found (ADC-free nearest-neighbour lookup).
+pub fn nearest_match(
+    cam: &mut CamArray,
+    ctl: &VoltageController,
+    query: &BitVec,
+    max_tol: u32,
+) -> NearestMatch {
+    let (mut m, mut f) = (Vec::new(), Vec::new());
+    let fires_at = |cam: &mut CamArray, m: &mut Vec<u32>, f: &mut Vec<bool>, tol: u32| {
+        let p = ctl
+            .calibrate(tol, 0.5)
+            .or_else(|| ctl.calibrate(tol, 2.0))
+            .unwrap_or_else(|| ctl.calibrate_best(tol));
+        cam.set_voltages(p.voltages);
+        cam.search_into(query, m, f);
+        f.iter().any(|&x| x)
+    };
+    let mut searches = 0u32;
+    // exponential probe up, then binary search down
+    let mut hi = 1u32;
+    while hi < max_tol {
+        searches += 1;
+        if fires_at(cam, &mut m, &mut f, hi) {
+            break;
+        }
+        hi = (hi * 2).min(max_tol);
+    }
+    if hi >= max_tol {
+        searches += 1;
+        if !fires_at(cam, &mut m, &mut f, max_tol) {
+            return NearestMatch {
+                rows: Vec::new(),
+                tolerance: max_tol,
+                searches,
+            };
+        }
+        hi = max_tol;
+    }
+    let mut lo = 0u32; // no match at lo (or lo == 0 trivially handled below)
+    while lo + 1 < hi {
+        let mid = (lo + hi) / 2;
+        searches += 1;
+        if fires_at(cam, &mut m, &mut f, mid) {
+            hi = mid;
+        } else {
+            lo = mid;
+        }
+    }
+    // final state must reflect `hi`
+    searches += 1;
+    fires_at(cam, &mut m, &mut f, hi);
+    NearestMatch {
+        rows: f
+            .iter()
+            .enumerate()
+            .filter_map(|(i, &x)| x.then_some(i))
+            .collect(),
+        tolerance: hi,
+        searches,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::analog::Pvt;
+    use crate::cam::{CamArray, CamConfig};
+    use crate::util::rng::Rng;
+
+    fn rand_bits(n: usize, rng: &mut Rng) -> BitVec {
+        let mut v = BitVec::zeros(n);
+        for i in 0..n {
+            v.set(i, rng.chance(0.5));
+        }
+        v
+    }
+
+    #[test]
+    fn priority_encoder() {
+        assert_eq!(priority_encode(&[false, false, true, true]), Some(2));
+        assert_eq!(priority_encode(&[false; 4]), None);
+    }
+
+    #[test]
+    fn nearest_match_finds_closest_row() {
+        let mut rng = Rng::new(2, 8);
+        let mut cam = CamArray::nominal(CamConfig::W512x256);
+        let base = rand_bits(512, &mut rng);
+        // rows at HD 3, 9, 40 from the eventual query
+        let mut rows = Vec::new();
+        for hd in [3usize, 9, 40] {
+            let mut r = base.clone();
+            for i in 0..hd {
+                r.flip(i);
+            }
+            rows.push(r);
+        }
+        for (i, r) in rows.iter().enumerate() {
+            cam.write_row(i, r);
+        }
+        let ctl = VoltageController::new(512, Pvt::nominal());
+        let got = nearest_match(&mut cam, &ctl, &base, 256);
+        assert_eq!(got.rows, vec![0], "row at HD 3 is nearest");
+        assert!(got.tolerance >= 3 && got.tolerance < 9, "{got:?}");
+        // retrieval cost is logarithmic, not linear, in the tolerance range
+        assert!(got.searches <= 14, "{got:?}");
+    }
+
+    #[test]
+    fn nearest_match_empty_array() {
+        let mut cam = CamArray::nominal(CamConfig::W512x256);
+        let ctl = VoltageController::new(512, Pvt::nominal());
+        let q = BitVec::ones(512);
+        let got = nearest_match(&mut cam, &ctl, &q, 64);
+        assert!(got.rows.is_empty());
+    }
+
+    #[test]
+    fn masked_search_ignores_masked_columns() {
+        let mut rng = Rng::new(5, 1);
+        let mut cam = CamArray::nominal(CamConfig::W512x256);
+        let stored = rand_bits(512, &mut rng);
+        cam.write_row(0, &stored);
+        // query differs from the row ONLY in the first 16 columns
+        let mut q = stored.clone();
+        for i in 0..16 {
+            q.flip(i);
+        }
+        // exact-match tolerance, but mask out those 16 columns
+        cam.set_voltages(crate::analog::Voltages::exact());
+        let mut mask = BitVec::ones(512);
+        for i in 0..16 {
+            mask.set(i, false);
+        }
+        let mut fires = Vec::new();
+        masked_search(&mut cam, &q, &mask, &mut fires);
+        assert!(fires[0], "masked mismatches must not discharge");
+        // unmasked search does not fire
+        let plain = cam.search(&q);
+        assert!(!plain[0]);
+    }
+}

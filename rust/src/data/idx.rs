@@ -1,0 +1,183 @@
+//! IDX-format reader (the standard MNIST container: big-endian magic,
+//! dims, raw data).  The offline build uses synthetic data, but a
+//! downstream user with the real `t10k-images-idx3-ubyte` files can point
+//! the binarising front-end straight at them.
+//!
+//! Format: u32 magic 0x0000_08XX (0x08 = u8 data, XX = #dims), then one
+//! big-endian u32 per dimension, then the payload in row-major order.
+
+use std::io::Read;
+use std::path::Path;
+
+use crate::util::bitops::BitVec;
+
+/// A parsed IDX tensor of u8 data.
+#[derive(Clone, Debug)]
+pub struct IdxTensor {
+    pub dims: Vec<usize>,
+    pub data: Vec<u8>,
+}
+
+impl IdxTensor {
+    pub fn parse(buf: &[u8]) -> Result<IdxTensor, String> {
+        if buf.len() < 4 {
+            return Err("truncated IDX header".into());
+        }
+        if buf[0] != 0 || buf[1] != 0 {
+            return Err("bad IDX magic (first two bytes must be zero)".into());
+        }
+        if buf[2] != 0x08 {
+            return Err(format!("unsupported IDX dtype 0x{:02x} (want u8)", buf[2]));
+        }
+        let n_dims = buf[3] as usize;
+        if n_dims == 0 || n_dims > 4 {
+            return Err(format!("implausible IDX rank {n_dims}"));
+        }
+        let header = 4 + 4 * n_dims;
+        if buf.len() < header {
+            return Err("truncated IDX dims".into());
+        }
+        let mut dims = Vec::with_capacity(n_dims);
+        for d in 0..n_dims {
+            let o = 4 + 4 * d;
+            dims.push(u32::from_be_bytes(buf[o..o + 4].try_into().unwrap()) as usize);
+        }
+        let expect: usize = dims.iter().product();
+        if buf.len() != header + expect {
+            return Err(format!(
+                "IDX payload size {} != expected {}",
+                buf.len() - header,
+                expect
+            ));
+        }
+        Ok(IdxTensor {
+            dims,
+            data: buf[header..].to_vec(),
+        })
+    }
+
+    pub fn load(path: impl AsRef<Path>) -> Result<IdxTensor, String> {
+        let mut buf = Vec::new();
+        std::fs::File::open(path.as_ref())
+            .map_err(|e| format!("open {}: {e}", path.as_ref().display()))?
+            .read_to_end(&mut buf)
+            .map_err(|e| e.to_string())?;
+        IdxTensor::parse(&buf)
+    }
+
+    /// Number of samples (first dimension).
+    pub fn n(&self) -> usize {
+        self.dims[0]
+    }
+
+    /// Elements per sample.
+    pub fn sample_len(&self) -> usize {
+        self.dims[1..].iter().product()
+    }
+}
+
+/// Binarise IDX image data into the BNN's ±1 packed code: pixel > threshold
+/// becomes +1 (the standard MNIST binarisation at 128).
+pub fn binarize_images(images: &IdxTensor, threshold: u8) -> Vec<BitVec> {
+    let m = images.sample_len();
+    (0..images.n())
+        .map(|i| {
+            let mut v = BitVec::zeros(m);
+            for (j, &px) in images.data[i * m..(i + 1) * m].iter().enumerate() {
+                if px > threshold {
+                    v.set(j, true);
+                }
+            }
+            v
+        })
+        .collect()
+}
+
+/// Build a `TestSet` from a real MNIST pair (images + labels IDX files).
+pub fn testset_from_idx(
+    images_path: impl AsRef<Path>,
+    labels_path: impl AsRef<Path>,
+    threshold: u8,
+) -> Result<super::loader::TestSet, String> {
+    let images = IdxTensor::load(images_path)?;
+    let labels = IdxTensor::load(labels_path)?;
+    if labels.dims.len() != 1 || labels.n() != images.n() {
+        return Err(format!(
+            "label/image count mismatch: {} vs {}",
+            labels.n(),
+            images.n()
+        ));
+    }
+    let n_classes = labels.data.iter().copied().max().unwrap_or(0) as usize + 1;
+    Ok(super::loader::TestSet {
+        images: binarize_images(&images, threshold),
+        labels: labels.data.clone(),
+        n_features: images.sample_len(),
+        n_classes,
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn make_idx(dims: &[u32], data: &[u8]) -> Vec<u8> {
+        let mut out = vec![0, 0, 0x08, dims.len() as u8];
+        for &d in dims {
+            out.extend_from_slice(&d.to_be_bytes());
+        }
+        out.extend_from_slice(data);
+        out
+    }
+
+    #[test]
+    fn parse_images_and_labels() {
+        let img = make_idx(&[2, 3, 3], &[0; 18]);
+        let t = IdxTensor::parse(&img).unwrap();
+        assert_eq!(t.dims, vec![2, 3, 3]);
+        assert_eq!(t.n(), 2);
+        assert_eq!(t.sample_len(), 9);
+        let lab = make_idx(&[2], &[7, 1]);
+        let t = IdxTensor::parse(&lab).unwrap();
+        assert_eq!(t.data, vec![7, 1]);
+    }
+
+    #[test]
+    fn rejects_malformed() {
+        assert!(IdxTensor::parse(&[0, 0]).is_err());
+        assert!(IdxTensor::parse(&[1, 0, 8, 1, 0, 0, 0, 0]).is_err());
+        assert!(IdxTensor::parse(&make_idx(&[5], &[0; 3])).is_err()); // size lie
+        let mut float_dtype = make_idx(&[1], &[0]);
+        float_dtype[2] = 0x0d;
+        assert!(IdxTensor::parse(&float_dtype).is_err());
+    }
+
+    #[test]
+    fn binarize_threshold() {
+        let img = IdxTensor::parse(&make_idx(&[1, 2, 2], &[0, 100, 200, 255])).unwrap();
+        let bits = binarize_images(&img, 128);
+        assert_eq!(bits.len(), 1);
+        assert!(!bits[0].get(0));
+        assert!(!bits[0].get(1));
+        assert!(bits[0].get(2));
+        assert!(bits[0].get(3));
+    }
+
+    #[test]
+    fn testset_from_idx_roundtrip() {
+        let dir = std::env::temp_dir().join("picbnn_idx_test");
+        std::fs::create_dir_all(&dir).unwrap();
+        let img_path = dir.join("images");
+        let lab_path = dir.join("labels");
+        std::fs::write(&img_path, make_idx(&[3, 2, 2], &[200, 0, 0, 0, 0, 200, 0, 0, 0, 0, 200, 0]))
+            .unwrap();
+        std::fs::write(&lab_path, make_idx(&[3], &[0, 1, 2])).unwrap();
+        let ts = testset_from_idx(&img_path, &lab_path, 128).unwrap();
+        assert_eq!(ts.len(), 3);
+        assert_eq!(ts.n_features, 4);
+        assert_eq!(ts.n_classes, 3);
+        assert!(ts.images[0].get(0));
+        assert!(ts.images[1].get(1));
+        std::fs::remove_dir_all(&dir).ok();
+    }
+}

@@ -1,0 +1,198 @@
+//! Loader for the `PICTEST1` packed test-set format written by
+//! `python/compile/train.py::write_test_bin`, plus meta.json access.
+//!
+//! Layout (little-endian):
+//! ```text
+//! magic  8 B  "PICTEST1"
+//! u32 × 3     n_samples, n_features, n_classes
+//! u8 × n      labels
+//! u64 × (n × ceil(n_features/64))  packed ±1 images (bit set = +1)
+//! ```
+
+use std::io::Read;
+use std::path::Path;
+
+use crate::util::bitops::{words_for, BitVec};
+use crate::util::json::Json;
+
+/// A binary test set (images as packed ±1 vectors).
+#[derive(Clone, Debug)]
+pub struct TestSet {
+    pub images: Vec<BitVec>,
+    pub labels: Vec<u8>,
+    pub n_features: usize,
+    pub n_classes: usize,
+}
+
+impl TestSet {
+    pub fn len(&self) -> usize {
+        self.images.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.images.is_empty()
+    }
+
+    pub fn load(path: impl AsRef<Path>) -> Result<TestSet, String> {
+        let mut buf = Vec::new();
+        std::fs::File::open(path.as_ref())
+            .map_err(|e| format!("open {}: {e}", path.as_ref().display()))?
+            .read_to_end(&mut buf)
+            .map_err(|e| e.to_string())?;
+        Self::from_bytes(&buf)
+    }
+
+    pub fn from_bytes(buf: &[u8]) -> Result<TestSet, String> {
+        if buf.len() < 20 || &buf[..8] != b"PICTEST1" {
+            return Err("bad magic (not a PICTEST1 file)".into());
+        }
+        let rd_u32 = |o: usize| u32::from_le_bytes(buf[o..o + 4].try_into().unwrap()) as usize;
+        let n = rd_u32(8);
+        let m = rd_u32(12);
+        let n_classes = rd_u32(16);
+        let words = words_for(m);
+        let expect = 20 + n + n * words * 8;
+        if buf.len() != expect {
+            return Err(format!("size mismatch: {} vs expected {expect}", buf.len()));
+        }
+        let labels = buf[20..20 + n].to_vec();
+        if labels.iter().any(|&l| l as usize >= n_classes) {
+            return Err("label out of class range".into());
+        }
+        let mut images = Vec::with_capacity(n);
+        let base = 20 + n;
+        for i in 0..n {
+            let mut w = Vec::with_capacity(words);
+            for j in 0..words {
+                let o = base + (i * words + j) * 8;
+                w.push(u64::from_le_bytes(buf[o..o + 8].try_into().unwrap()));
+            }
+            images.push(BitVec::from_words(w, m));
+        }
+        Ok(TestSet {
+            images,
+            labels,
+            n_features: m,
+            n_classes,
+        })
+    }
+}
+
+/// Model metadata exported next to the weights (accuracies, dims, config).
+#[derive(Clone, Debug)]
+pub struct ModelMeta {
+    pub name: String,
+    pub n_in: usize,
+    pub n_hidden: usize,
+    pub n_classes: usize,
+    pub software_top1: f64,
+    pub software_top2: f64,
+    pub cam_nominal_top1: f64,
+    pub paper_software_top1: f64,
+    pub paper_cam_top1: f64,
+    pub layer_configs: Vec<String>,
+}
+
+impl ModelMeta {
+    pub fn load(path: impl AsRef<Path>) -> Result<ModelMeta, String> {
+        let text = std::fs::read_to_string(path.as_ref())
+            .map_err(|e| format!("read {}: {e}", path.as_ref().display()))?;
+        let j = Json::parse(&text)?;
+        let num = |k: &str| -> Result<f64, String> {
+            j.get(k)
+                .and_then(Json::as_f64)
+                .ok_or_else(|| format!("meta missing numeric field '{k}'"))
+        };
+        Ok(ModelMeta {
+            name: j
+                .get("name")
+                .and_then(Json::as_str)
+                .unwrap_or("unknown")
+                .to_string(),
+            n_in: num("n_in")? as usize,
+            n_hidden: num("n_hidden")? as usize,
+            n_classes: num("n_classes")? as usize,
+            software_top1: num("software_top1")?,
+            software_top2: num("software_top2")?,
+            cam_nominal_top1: num("cam_nominal_top1")?,
+            paper_software_top1: num("paper_software_top1")?,
+            paper_cam_top1: num("paper_cam_top1")?,
+            layer_configs: j
+                .get("layer_configs")
+                .and_then(Json::as_arr)
+                .map(|a| {
+                    a.iter()
+                        .filter_map(|v| v.as_str().map(str::to_string))
+                        .collect()
+                })
+                .unwrap_or_default(),
+        })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn make_bytes(n: usize, m: usize, n_cls: usize) -> Vec<u8> {
+        let words = words_for(m);
+        let mut out = Vec::new();
+        out.extend_from_slice(b"PICTEST1");
+        for v in [n as u32, m as u32, n_cls as u32] {
+            out.extend_from_slice(&v.to_le_bytes());
+        }
+        for i in 0..n {
+            out.push((i % n_cls) as u8);
+        }
+        for i in 0..n {
+            for j in 0..words {
+                out.extend_from_slice(&((i * 31 + j) as u64).to_le_bytes());
+            }
+        }
+        out
+    }
+
+    #[test]
+    fn parse_wellformed() {
+        let bytes = make_bytes(5, 130, 3);
+        let ts = TestSet::from_bytes(&bytes).unwrap();
+        assert_eq!(ts.len(), 5);
+        assert_eq!(ts.n_features, 130);
+        assert_eq!(ts.n_classes, 3);
+        assert_eq!(ts.labels, vec![0, 1, 2, 0, 1]);
+        assert_eq!(ts.images[0].len(), 130);
+    }
+
+    #[test]
+    fn reject_bad_magic_and_size() {
+        assert!(TestSet::from_bytes(b"WRONG!!!").is_err());
+        let mut bytes = make_bytes(3, 64, 2);
+        bytes.pop();
+        assert!(TestSet::from_bytes(&bytes).is_err());
+    }
+
+    #[test]
+    fn reject_label_out_of_range() {
+        let mut bytes = make_bytes(3, 64, 2);
+        bytes[20] = 9; // label 9 with n_classes = 2
+        assert!(TestSet::from_bytes(&bytes).is_err());
+    }
+
+    #[test]
+    fn meta_parses_real_shape() {
+        let tmp = std::env::temp_dir().join("picbnn_meta_test.json");
+        std::fs::write(
+            &tmp,
+            r#"{"name":"mnist","n_in":784,"n_hidden":128,"n_classes":10,
+                "software_top1":0.96,"software_top2":0.99,
+                "cam_nominal_top1":0.95,"paper_software_top1":0.952,
+                "paper_cam_top1":0.952,"layer_configs":["1024x128","512x256"]}"#,
+        )
+        .unwrap();
+        let meta = ModelMeta::load(&tmp).unwrap();
+        assert_eq!(meta.name, "mnist");
+        assert_eq!(meta.n_in, 784);
+        assert_eq!(meta.layer_configs, vec!["1024x128", "512x256"]);
+        std::fs::remove_file(&tmp).ok();
+    }
+}

@@ -1,0 +1,10 @@
+//! Data front-end: artifact loaders for the canonical (python-exported)
+//! test sets and model metadata, plus a rust-native synthetic workload
+//! generator for benches/property tests.
+
+pub mod idx;
+pub mod loader;
+pub mod synth;
+
+pub use loader::{ModelMeta, TestSet};
+pub use synth::{SynthData, SynthSpec};

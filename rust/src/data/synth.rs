@@ -1,0 +1,132 @@
+//! Rust-side synthetic workload generator.
+//!
+//! The *canonical* datasets (the ones the models were trained on) come from
+//! `python/compile/data.py` via `artifacts/*_test.bin`; this module
+//! generates structurally similar binary images for benches and property
+//! tests that need workloads without trained weights — prototype-plus-noise
+//! classes over packed ±1 vectors.
+
+use crate::util::bitops::BitVec;
+use crate::util::rng::Rng;
+
+/// A synthetic prototype-noise dataset: `n_classes` random prototypes of
+/// `n_features` bits; each sample flips each prototype bit with `noise_p`.
+#[derive(Clone, Debug)]
+pub struct SynthSpec {
+    pub n_features: usize,
+    pub n_classes: usize,
+    pub noise_p: f64,
+    pub seed: u64,
+}
+
+impl SynthSpec {
+    pub fn new(n_features: usize, n_classes: usize, noise_p: f64, seed: u64) -> Self {
+        SynthSpec {
+            n_features,
+            n_classes,
+            noise_p,
+            seed,
+        }
+    }
+
+    /// MNIST-shaped default (784 features, 10 classes).
+    pub fn mnist_like(seed: u64) -> Self {
+        SynthSpec::new(784, 10, 0.08, seed)
+    }
+
+    /// HG-shaped default (4096 features, 20 classes).
+    pub fn hg_like(seed: u64) -> Self {
+        SynthSpec::new(4096, 20, 0.04, seed)
+    }
+}
+
+/// Generated dataset: prototypes + labelled noisy samples.
+#[derive(Clone, Debug)]
+pub struct SynthData {
+    pub prototypes: Vec<BitVec>,
+    pub images: Vec<BitVec>,
+    pub labels: Vec<u8>,
+    pub spec: SynthSpec,
+}
+
+impl SynthData {
+    pub fn generate(spec: SynthSpec, n_samples: usize) -> SynthData {
+        let mut rng = Rng::new(spec.seed, 0x5EED);
+        let prototypes: Vec<BitVec> = (0..spec.n_classes)
+            .map(|_| {
+                let mut p = BitVec::zeros(spec.n_features);
+                for i in 0..spec.n_features {
+                    p.set(i, rng.chance(0.5));
+                }
+                p
+            })
+            .collect();
+        let mut images = Vec::with_capacity(n_samples);
+        let mut labels = Vec::with_capacity(n_samples);
+        for _ in 0..n_samples {
+            let c = rng.below(spec.n_classes as u64) as usize;
+            let mut img = prototypes[c].clone();
+            for i in 0..spec.n_features {
+                if rng.chance(spec.noise_p) {
+                    img.flip(i);
+                }
+            }
+            images.push(img);
+            labels.push(c as u8);
+        }
+        SynthData {
+            prototypes,
+            images,
+            labels,
+            spec,
+        }
+    }
+
+    pub fn len(&self) -> usize {
+        self.images.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.images.is_empty()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn deterministic_per_seed() {
+        let a = SynthData::generate(SynthSpec::new(128, 4, 0.05, 7), 50);
+        let b = SynthData::generate(SynthSpec::new(128, 4, 0.05, 7), 50);
+        assert_eq!(a.images, b.images);
+        assert_eq!(a.labels, b.labels);
+    }
+
+    #[test]
+    fn noise_rate_near_p() {
+        let d = SynthData::generate(SynthSpec::new(1024, 3, 0.1, 1), 200);
+        let mut flips = 0u64;
+        for (img, &lab) in d.images.iter().zip(&d.labels) {
+            flips += img.hamming(&d.prototypes[lab as usize]) as u64;
+        }
+        let rate = flips as f64 / (1024.0 * 200.0);
+        assert!((rate - 0.1).abs() < 0.01, "{rate}");
+    }
+
+    #[test]
+    fn nearest_prototype_is_label() {
+        // with low noise every sample is closest to its own prototype
+        let d = SynthData::generate(SynthSpec::new(512, 8, 0.05, 3), 100);
+        for (img, &lab) in d.images.iter().zip(&d.labels) {
+            let dists: Vec<u32> = d.prototypes.iter().map(|p| p.hamming(img)).collect();
+            let nearest = dists
+                .iter()
+                .enumerate()
+                .min_by_key(|(_, &d)| d)
+                .unwrap()
+                .0;
+            assert_eq!(nearest, lab as usize);
+        }
+    }
+}

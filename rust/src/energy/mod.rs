@@ -1,0 +1,185 @@
+//! Energy / power / area model (Table II regeneration).
+//!
+//! Converts the primitive event counts tallied by the simulator
+//! (`sim::EventCounters`) into joules using 65 nm-calibrated per-event
+//! energies (`analog::constants`), and combines them with the cycle/stall
+//! clock into power, throughput, and efficiency figures.  Nothing here is
+//! hard-coded to the paper's headline numbers — they emerge (or don't)
+//! from the counted events; EXPERIMENTS.md records the comparison.
+
+use crate::accel::RunStats;
+use crate::analog::constants as k;
+use crate::cam::CAPACITY_BITS;
+use crate::sim::EventCounters;
+
+/// Energy breakdown for a workload [J].
+#[derive(Clone, Copy, Debug, Default)]
+pub struct EnergyBreakdown {
+    pub precharge: f64,
+    pub searchlines: f64,
+    pub mlsa: f64,
+    pub writes: f64,
+    pub retunes: f64,
+    pub leakage: f64,
+}
+
+impl EnergyBreakdown {
+    pub fn total(&self) -> f64 {
+        self.precharge + self.searchlines + self.mlsa + self.writes + self.retunes + self.leakage
+    }
+}
+
+/// Full hardware report for a run (the Table II row set).
+#[derive(Clone, Copy, Debug)]
+pub struct HwReport {
+    pub inferences: u64,
+    pub elapsed_s: f64,
+    pub cycles_per_inference: f64,
+    pub energy: EnergyBreakdown,
+    /// Average power over the run [W].
+    pub power_w: f64,
+    /// Throughput [inferences/s].
+    pub inf_per_s: f64,
+    /// Power efficiency [inferences/s/W].
+    pub inf_per_s_per_w: f64,
+    /// Binary-op throughput [OPS]: XNOR+accumulate pairs per second.
+    pub ops_per_s: f64,
+    /// Energy efficiency [OPS/W] (the paper's "TOPs/s" row is TOPS/W).
+    pub ops_per_w: f64,
+    /// CAM macro area [mm²].
+    pub macro_area_mm2: f64,
+    /// SoC area [mm²] (macro + RISC-V control plane).
+    pub soc_area_mm2: f64,
+}
+
+/// Convert event counts to an energy breakdown for a run of `elapsed_s`.
+pub fn energy_of(events: &EventCounters, elapsed_s: f64) -> EnergyBreakdown {
+    // Precharge energy scales with the *discharged* fraction; on average
+    // roughly half the cells on a searched row mismatch, but we charge the
+    // full precharge per search (conservative, matches CV² accounting).
+    EnergyBreakdown {
+        precharge: events.cells_precharged as f64 * k::E_PRECHARGE_PER_CELL,
+        searchlines: events.sl_toggles as f64 * k::E_SL_PER_CELL,
+        mlsa: events.mlsa_evals as f64 * k::E_MLSA_PER_ROW,
+        writes: events.cells_written as f64 * k::E_WRITE_PER_CELL,
+        retunes: events.retunes as f64 * k::E_RETUNE,
+        leakage: k::P_LEAKAGE * elapsed_s,
+    }
+}
+
+/// Binary operations: each logical MAC (payload XNOR + its wired-OR
+/// accumulation) counts as 2 ops — the convention BNN accelerator papers
+/// use.  Pad/spare cells burn energy but do no useful work, so they are
+/// excluded (the paper's 184 "TOPs/s" row divides model ops, not cell
+/// events, by power).
+pub fn ops_of(events: &EventCounters) -> f64 {
+    events.useful_macs as f64 * 2.0
+}
+
+/// Build the full report from run statistics.
+pub fn report(stats: &RunStats) -> HwReport {
+    let elapsed = stats.elapsed_s();
+    let energy = energy_of(&stats.events, elapsed);
+    let power = if elapsed > 0.0 {
+        energy.total() / elapsed
+    } else {
+        0.0
+    };
+    let ops = ops_of(&stats.events);
+    let macro_area =
+        CAPACITY_BITS as f64 * k::AREA_BITCELL_MM2 * k::BANK_PERIPHERY_FACTOR * 2.0;
+    HwReport {
+        inferences: stats.inferences,
+        elapsed_s: elapsed,
+        cycles_per_inference: stats.cycles_per_inference(),
+        energy,
+        power_w: power,
+        inf_per_s: stats.inferences_per_s(),
+        inf_per_s_per_w: if power > 0.0 {
+            stats.inferences_per_s() / power
+        } else {
+            0.0
+        },
+        ops_per_s: if elapsed > 0.0 { ops / elapsed } else { 0.0 },
+        ops_per_w: if energy.total() > 0.0 {
+            ops / energy.total()
+        } else {
+            0.0
+        },
+        macro_area_mm2: macro_area,
+        soc_area_mm2: macro_area + k::AREA_SOC_REST_MM2,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn fake_stats() -> RunStats {
+        // one MNIST-ish inference: 1 hidden search (1024×128) + 33 output
+        // searches (512×256) + programming amortised away
+        let mut ev = EventCounters::default();
+        ev.searches = 34;
+        ev.cells_precharged = 1024 * 128 + 33 * 512 * 256;
+        ev.sl_toggles = 1024 + 33 * 512;
+        ev.mlsa_evals = 128 + 33 * 256;
+        ev.useful_macs = 784 * 128 + 33 * 128 * 10;
+        RunStats {
+            inferences: 1,
+            cycles: 34,
+            stall_s: 0.0,
+            events: ev,
+        }
+    }
+
+    #[test]
+    fn energy_positive_and_dominated_by_precharge() {
+        let s = fake_stats();
+        let e = energy_of(&s.events, s.elapsed_s());
+        assert!(e.total() > 0.0);
+        assert!(e.precharge > e.mlsa);
+        assert!(e.precharge > e.searchlines);
+    }
+
+    #[test]
+    fn report_throughput_near_paper_regime() {
+        // 34 cycles/inference at 25 MHz ≈ 735 K inf/s: same order as the
+        // paper's 560 K (their extra cycles come from I/O + amortised
+        // programming, which the full pipeline bench measures).
+        let r = report(&fake_stats());
+        assert!(r.inf_per_s > 3e5 && r.inf_per_s < 1.2e6, "{}", r.inf_per_s);
+        assert!(r.cycles_per_inference > 30.0);
+    }
+
+    #[test]
+    fn power_in_milliwatt_regime() {
+        // sustained inference should land within ~10× of the paper's 0.8 mW
+        let r = report(&fake_stats());
+        assert!(
+            r.power_w > 5e-5 && r.power_w < 1e-2,
+            "power {} W",
+            r.power_w
+        );
+    }
+
+    #[test]
+    fn efficiency_units_consistent() {
+        let r = report(&fake_stats());
+        assert!((r.inf_per_s_per_w - r.inf_per_s / r.power_w).abs() / r.inf_per_s_per_w < 1e-9);
+        assert!(r.ops_per_w > 0.0);
+    }
+
+    #[test]
+    fn area_near_paper() {
+        let r = report(&fake_stats());
+        assert!(r.macro_area_mm2 > 0.6 && r.macro_area_mm2 < 1.2, "{}", r.macro_area_mm2);
+        assert!(r.soc_area_mm2 > r.macro_area_mm2);
+    }
+
+    #[test]
+    fn zero_run_is_safe() {
+        let r = report(&RunStats::default());
+        assert_eq!(r.inferences, 0);
+        assert!(r.power_w >= 0.0);
+    }
+}

@@ -1,0 +1,39 @@
+//! # PiC-BNN — Processing-in-CAM Binary Neural Network Accelerator
+//!
+//! Full-system reproduction of "PiC-BNN: A 128-kbit 65 nm Processing-in-
+//! CAM-Based End-to-End Binary Neural Network Accelerator" (CS.AR 2026).
+//! See DESIGN.md for the system inventory and EXPERIMENTS.md for
+//! paper-vs-measured results.
+//!
+//! The paper's silicon is replaced by a transistor-level-informed analog
+//! simulator ([`analog`], [`cam`]); the accelerator coordination layer
+//! ([`accel`], [`server`]) is the rust L3 of the three-layer stack; the
+//! JAX/Pallas L2/L1 graphs are AOT-lowered to HLO text and executed from
+//! rust via PJRT ([`runtime`]).
+
+pub mod accel;
+pub mod analog;
+pub mod baseline;
+pub mod benchkit;
+pub mod bnn;
+pub mod cam;
+pub mod data;
+pub mod energy;
+pub mod riscv;
+pub mod runtime;
+pub mod server;
+pub mod sim;
+pub mod testkit;
+pub mod util;
+
+/// Crate version (for CLI banners).
+pub fn version() -> &'static str {
+    env!("CARGO_PKG_VERSION")
+}
+
+/// Locate the artifacts directory: $PICBNN_ARTIFACTS or ./artifacts.
+pub fn artifacts_dir() -> std::path::PathBuf {
+    std::env::var_os("PICBNN_ARTIFACTS")
+        .map(std::path::PathBuf::from)
+        .unwrap_or_else(|| std::path::PathBuf::from("artifacts"))
+}

@@ -1,0 +1,288 @@
+//! `picbnn` CLI: the leader entrypoint for the simulated accelerator.
+//!
+//! Subcommands:
+//!   classify   — run Algorithm-1 inference over a test set (CAM backend)
+//!   calibrate  — print the regenerated Table I voltage/tolerance table
+//!   report     — hardware report (Table II) for a workload
+//!   serve      — run the batched inference server over a synthetic load
+//!   info       — artifact + model summary
+
+use picbnn::accel::{evaluate, Pipeline, PipelineOptions, VoltageController};
+use picbnn::analog::Pvt;
+use picbnn::benchkit::Table;
+use picbnn::bnn::model::MappedModel;
+use picbnn::cam::NoiseMode;
+use picbnn::data::{ModelMeta, TestSet};
+use picbnn::energy;
+use picbnn::util::cli::Args;
+
+fn load_model(name: &str) -> (MappedModel, TestSet, ModelMeta) {
+    let dir = picbnn::artifacts_dir();
+    let model = MappedModel::load(dir.join(format!("{name}_weights.bin")))
+        .unwrap_or_else(|e| die(&format!("load model: {e} (run `make artifacts` first)")));
+    let test = TestSet::load(dir.join(format!("{name}_test.bin")))
+        .unwrap_or_else(|e| die(&format!("load test set: {e}")));
+    let meta = ModelMeta::load(dir.join(format!("{name}_meta.json")))
+        .unwrap_or_else(|e| die(&format!("load meta: {e}")));
+    (model, test, meta)
+}
+
+fn die(msg: &str) -> ! {
+    eprintln!("error: {msg}");
+    std::process::exit(1)
+}
+
+fn main() {
+    let args = Args::parse(&["nominal", "help"]);
+    let cmd = args.positional().first().map(String::as_str).unwrap_or("help");
+    match cmd {
+        "run" => cmd_run(&args),
+        "classify" => cmd_classify(&args),
+        "calibrate" => cmd_calibrate(&args),
+        "report" => cmd_report(&args),
+        "serve" => cmd_serve(&args),
+        "info" => cmd_info(&args),
+        _ => {
+            println!("picbnn {} — processing-in-CAM BNN accelerator", picbnn::version());
+            println!();
+            println!("usage: picbnn <command> [--model mnist|hg] [options]");
+            println!();
+            println!("  run        launcher: execute an experiment config");
+            println!("             --config configs/<name>.toml");
+            println!("  classify   run Algorithm-1 inference over the test set");
+            println!("             [--limit N] [--batch N] [--executions K] [--nominal]");
+            println!("  calibrate  regenerate the Table I voltage/tolerance table");
+            println!("             [--cells N]");
+            println!("  report     Table II hardware report for the workload");
+            println!("             [--limit N] [--batch N]");
+            println!("  serve      batched inference server over a synthetic load");
+            println!("             [--requests N] [--max-batch N] [--producers N]");
+            println!("  info       artifact + model summary");
+        }
+    }
+}
+
+fn cmd_run(args: &Args) {
+    use picbnn::util::config::{Config, RunConfig};
+    let path = args.get("config").unwrap_or_else(|| die("run requires --config <path>"));
+    let cfg = Config::load(path).unwrap_or_else(|e| die(&e));
+    let rc = RunConfig::from_config(&cfg).unwrap_or_else(|e| die(&e));
+    let (model, test, meta) = load_model(&rc.model);
+    let n = rc.limit.min(test.len());
+    let opts = PipelineOptions {
+        noise: if rc.noise == "nominal" { NoiseMode::Nominal } else { NoiseMode::Analog },
+        pvt: Pvt { temp_c: rc.temp_c, vdd: rc.vdd, ..Pvt::nominal() },
+        seed: rc.seed,
+        schedule_prefix: rc.executions,
+        noise_scale: 1.0,
+    };
+    println!(
+        "run: model={} n={} batch={} threads={} noise={} backend={} pvt=({} °C, {} V)",
+        rc.model, n, rc.batch, rc.threads, rc.noise, rc.backend, rc.temp_c, rc.vdd
+    );
+    let t = picbnn::util::Timer::start();
+    if rc.backend == "cam" || rc.backend == "both" {
+        let (results, stats) = picbnn::accel::classify_parallel(
+            &model, opts, &test.images[..n], rc.batch, rc.threads,
+        );
+        let votes: Vec<_> = results.into_iter().map(|(v, _)| v).collect();
+        let acc = evaluate(&votes, &test.labels[..n]);
+        println!(
+            "CAM backend:  top1 {:.4}  top2 {:.4}  (paper CAM {:.3}, software {:.3})  [{:.2}s host]",
+            acc.top1, acc.top2, meta.paper_cam_top1, meta.software_top1, t.elapsed_s()
+        );
+        if rc.report_energy {
+            let r = energy::report(&stats);
+            println!(
+                "device: {:.1} cyc/inf  {:.0} inf/s  {:.3} mW  {:.0} M inf/s/W  {:.0} TOPS/W",
+                r.cycles_per_inference, r.inf_per_s, r.power_w * 1e3,
+                r.inf_per_s_per_w / 1e6, r.ops_per_w / 1e12
+            );
+        }
+    }
+    if rc.backend == "pjrt" || rc.backend == "both" {
+        match picbnn::runtime::InferEngine::load(&rc.model, &model) {
+            Ok(engine) => {
+                let t = picbnn::util::Timer::start();
+                let results = engine
+                    .classify_all(&test.images[..n])
+                    .unwrap_or_else(|e| die(&format!("pjrt: {e}")));
+                let votes: Vec<_> = results.into_iter().map(|(v, _)| v).collect();
+                let acc = evaluate(&votes, &test.labels[..n]);
+                println!(
+                    "PJRT backend: top1 {:.4}  top2 {:.4}  (nominal semantics)  [{:.2}s host]",
+                    acc.top1, acc.top2, t.elapsed_s()
+                );
+            }
+            Err(e) => println!("PJRT backend unavailable: {e}"),
+        }
+    }
+}
+
+fn pipeline_opts(args: &Args) -> PipelineOptions {
+    PipelineOptions {
+        noise: if args.flag("nominal") {
+            NoiseMode::Nominal
+        } else {
+            NoiseMode::Analog
+        },
+        seed: args.get_parse("seed", 0xB11Au64),
+        schedule_prefix: args.get("executions").map(|s| s.parse().unwrap_or(33)),
+        ..Default::default()
+    }
+}
+
+fn cmd_classify(args: &Args) {
+    let name = args.get_or("model", "mnist");
+    let (model, test, meta) = load_model(name);
+    let limit = args.get_parse("limit", test.len());
+    let batch = args.get_parse("batch", 256usize);
+    let mut pipe = Pipeline::new(&model, pipeline_opts(args));
+    let n = limit.min(test.len());
+    let t = picbnn::util::Timer::start();
+    let mut votes = Vec::with_capacity(n);
+    for chunk in test.images[..n].chunks(batch) {
+        for (v, _) in pipe.classify_batch(chunk) {
+            votes.push(v);
+        }
+    }
+    let acc = evaluate(&votes, &test.labels[..n]);
+    let stats = pipe.take_stats(n as u64);
+    println!(
+        "{name}: {} images  top1 {:.4}  top2 {:.4}  (paper CAM top1 {:.3}, software {:.3})",
+        n, acc.top1, acc.top2, meta.paper_cam_top1, meta.software_top1
+    );
+    println!(
+        "device: {:.1} cycles/inf  {:.0} inf/s (modelled)  |  host sim {:.2}s",
+        stats.cycles_per_inference(),
+        stats.inferences_per_s(),
+        t.elapsed_s()
+    );
+}
+
+fn cmd_calibrate(args: &Args) {
+    let cells = args.get_parse("cells", 256usize);
+    let ctl = VoltageController::new(cells, Pvt::nominal());
+    let mut table = Table::new(
+        &format!("Table I — calibrated HD tolerance points ({cells}-cell rows)"),
+        &["HD tol", "V_ref (mV)", "V_eval (mV)", "V_st (mV)", "achieved"],
+    );
+    for target in (0..=36).step_by(4) {
+        match ctl.calibrate(target, 0.5).or_else(|| ctl.calibrate(target, 2.0)) {
+            Some(p) => table.row(vec![
+                target.to_string(),
+                format!("{:.0}", p.voltages.vref * 1e3),
+                format!("{:.0}", p.voltages.veval * 1e3),
+                format!("{:.0}", p.voltages.vst * 1e3),
+                format!("{:.2}", p.achieved_tol),
+            ]),
+            None => table.row(vec![
+                target.to_string(),
+                "-".into(),
+                "-".into(),
+                "-".into(),
+                "unreachable".into(),
+            ]),
+        }
+    }
+    table.print();
+}
+
+fn cmd_report(args: &Args) {
+    let name = args.get_or("model", "mnist");
+    let (model, test, _) = load_model(name);
+    let limit = args.get_parse("limit", 512usize).min(test.len());
+    let batch = args.get_parse("batch", 256usize);
+    let mut pipe = Pipeline::new(&model, pipeline_opts(args));
+    for chunk in test.images[..limit].chunks(batch) {
+        pipe.classify_batch(chunk);
+    }
+    let stats = pipe.take_stats(limit as u64);
+    let r = energy::report(&stats);
+    let mut table = Table::new(
+        &format!("Table II — hardware report ({name}, {limit} inferences)"),
+        &["metric", "measured", "paper"],
+    );
+    table.row(vec!["throughput (inf/s)".into(), format!("{:.0}", r.inf_per_s), "560000".into()]);
+    table.row(vec!["power (mW)".into(), format!("{:.3}", r.power_w * 1e3), "0.8".into()]);
+    table.row(vec![
+        "efficiency (M inf/s/W)".into(),
+        format!("{:.0}", r.inf_per_s_per_w / 1e6),
+        "703".into(),
+    ]);
+    table.row(vec![
+        "efficiency (TOPS/W)".into(),
+        format!("{:.0}", r.ops_per_w / 1e12),
+        "184".into(),
+    ]);
+    table.row(vec!["macro area (mm²)".into(), format!("{:.2}", r.macro_area_mm2), "0.87".into()]);
+    table.row(vec!["SoC area (mm²)".into(), format!("{:.2}", r.soc_area_mm2), "2.38".into()]);
+    table.row(vec![
+        "cycles/inference".into(),
+        format!("{:.1}", r.cycles_per_inference),
+        "~44.6".into(),
+    ]);
+    table.print();
+}
+
+fn cmd_serve(args: &Args) {
+    use picbnn::accel::BatchPolicy;
+    use std::time::Duration;
+    let name = args.get_or("model", "mnist");
+    let (model, test, _) = load_model(name);
+    let requests = args.get_parse("requests", 2000usize);
+    let max_batch = args.get_parse("max-batch", 256usize);
+    let producers = args.get_parse("producers", 4usize);
+    let images: Vec<_> = (0..requests)
+        .map(|i| test.images[i % test.len()].clone())
+        .collect();
+    let t = picbnn::util::Timer::start();
+    let (responses, metrics) = picbnn::server::serve_workload(
+        &model,
+        pipeline_opts(args),
+        BatchPolicy {
+            max_batch,
+            max_wait: Duration::from_millis(2),
+        },
+        &images,
+        producers,
+        Duration::ZERO,
+    );
+    println!(
+        "served {} requests in {:.2}s host time: {:.0} req/s host-side",
+        responses.len(),
+        t.elapsed_s(),
+        responses.len() as f64 / t.elapsed_s()
+    );
+    println!(
+        "batches {}  mean batch {:.1}  latency p50 {:.2} ms  p99 {:.2} ms",
+        metrics.batches,
+        metrics.mean_batch(),
+        metrics.p50_ms(),
+        metrics.p99_ms()
+    );
+}
+
+fn cmd_info(args: &Args) {
+    let name = args.get_or("model", "mnist");
+    let (model, test, meta) = load_model(name);
+    println!("model {name}:");
+    println!("  dims {} -> {} -> {}", meta.n_in, meta.n_hidden, meta.n_classes);
+    for (i, l) in model.layers.iter().enumerate() {
+        println!(
+            "  layer {i}: {}x{} weights, {} segment(s) of {} cells ({} pads in seg 0)",
+            l.n_out(),
+            l.n_in(),
+            l.n_seg(),
+            l.seg_width,
+            l.seg_pads(0)
+        );
+    }
+    println!("  schedule: {} thresholds {:?}..{:?}", model.schedule.len(),
+             model.schedule.first(), model.schedule.last());
+    println!("  test set: {} images, {} classes", test.len(), test.n_classes);
+    println!(
+        "  python-side accuracies: software {:.4}, CAM-nominal {:.4}",
+        meta.software_top1, meta.cam_nominal_top1
+    );
+}

@@ -1,0 +1,424 @@
+//! Two-pass RV32I assembler for the control firmware: labels, the base
+//! ISA, and the common pseudo-instructions (li, la, mv, j, call, ret,
+//! beqz/bnez, nop).  Enough to write readable firmware in-tree without an
+//! external toolchain.
+
+use std::collections::BTreeMap;
+
+/// Assemble source into a little-endian image loaded at address 0.
+pub fn assemble(src: &str) -> Result<Vec<u8>, String> {
+    let lines = tokenize(src)?;
+    // pass 1: label addresses (li/la expand to 2 words conservatively)
+    let mut labels: BTreeMap<String, u32> = BTreeMap::new();
+    let mut addr = 0u32;
+    for line in &lines {
+        for label in &line.labels {
+            if labels.insert(label.clone(), addr).is_some() {
+                return Err(format!("duplicate label {label}"));
+            }
+        }
+        if let Some(op) = &line.op {
+            addr += 4 * words_for_op(op);
+        }
+    }
+    // pass 2: encode
+    let mut out = Vec::new();
+    let mut addr = 0u32;
+    for line in &lines {
+        if let Some(op) = &line.op {
+            let words = encode(op, &line.args, addr, &labels)
+                .map_err(|e| format!("line {}: {e}", line.lineno))?;
+            for w in words {
+                out.extend_from_slice(&w.to_le_bytes());
+            }
+            addr = out.len() as u32;
+        }
+    }
+    Ok(out)
+}
+
+struct Line {
+    lineno: usize,
+    labels: Vec<String>,
+    op: Option<String>,
+    args: Vec<String>,
+}
+
+fn tokenize(src: &str) -> Result<Vec<Line>, String> {
+    let mut out = Vec::new();
+    for (lineno, raw) in src.lines().enumerate() {
+        let line = raw.split('#').next().unwrap().trim();
+        if line.is_empty() {
+            continue;
+        }
+        let mut labels = Vec::new();
+        let mut rest = line;
+        while let Some(idx) = rest.find(':') {
+            let (head, tail) = rest.split_at(idx);
+            if head.contains(char::is_whitespace) {
+                break;
+            }
+            labels.push(head.trim().to_string());
+            rest = tail[1..].trim();
+        }
+        if rest.is_empty() {
+            out.push(Line {
+                lineno: lineno + 1,
+                labels,
+                op: None,
+                args: Vec::new(),
+            });
+            continue;
+        }
+        let (op, args_str) = match rest.split_once(char::is_whitespace) {
+            Some((o, a)) => (o, a),
+            None => (rest, ""),
+        };
+        let args: Vec<String> = args_str
+            .split(',')
+            .map(|a| a.trim().to_string())
+            .filter(|a| !a.is_empty())
+            .collect();
+        out.push(Line {
+            lineno: lineno + 1,
+            labels,
+            op: Some(op.to_lowercase()),
+            args,
+        });
+    }
+    Ok(out)
+}
+
+fn words_for_op(op: &str) -> u32 {
+    match op {
+        "li" | "la" | "call" => 2, // worst case; encoder pads with nop
+        _ => 1,
+    }
+}
+
+fn reg(name: &str) -> Result<u32, String> {
+    let abi = [
+        ("zero", 0),
+        ("ra", 1),
+        ("sp", 2),
+        ("gp", 3),
+        ("tp", 4),
+        ("t0", 5),
+        ("t1", 6),
+        ("t2", 7),
+        ("s0", 8),
+        ("fp", 8),
+        ("s1", 9),
+        ("a0", 10),
+        ("a1", 11),
+        ("a2", 12),
+        ("a3", 13),
+        ("a4", 14),
+        ("a5", 15),
+        ("a6", 16),
+        ("a7", 17),
+        ("s2", 18),
+        ("s3", 19),
+        ("s4", 20),
+        ("s5", 21),
+        ("s6", 22),
+        ("s7", 23),
+        ("s8", 24),
+        ("s9", 25),
+        ("s10", 26),
+        ("s11", 27),
+        ("t3", 28),
+        ("t4", 29),
+        ("t5", 30),
+        ("t6", 31),
+    ];
+    if let Some(&(_, n)) = abi.iter().find(|&&(a, _)| a == name) {
+        return Ok(n);
+    }
+    if let Some(n) = name.strip_prefix('x').and_then(|s| s.parse::<u32>().ok()) {
+        if n < 32 {
+            return Ok(n);
+        }
+    }
+    Err(format!("bad register {name:?}"))
+}
+
+fn imm(s: &str, labels: &BTreeMap<String, u32>) -> Result<i64, String> {
+    if let Some(v) = labels.get(s) {
+        return Ok(*v as i64);
+    }
+    let (neg, body) = match s.strip_prefix('-') {
+        Some(b) => (true, b),
+        None => (false, s),
+    };
+    let v = if let Some(hex) = body.strip_prefix("0x") {
+        i64::from_str_radix(hex, 16).map_err(|e| e.to_string())?
+    } else {
+        body.parse::<i64>().map_err(|_| format!("bad immediate {s:?}"))?
+    };
+    Ok(if neg { -v } else { v })
+}
+
+/// Parse "imm(reg)" memory operands.
+fn mem_operand(s: &str, labels: &BTreeMap<String, u32>) -> Result<(i64, u32), String> {
+    let open = s.find('(').ok_or_else(|| format!("bad mem operand {s:?}"))?;
+    let close = s.rfind(')').ok_or_else(|| format!("bad mem operand {s:?}"))?;
+    let off = if open == 0 { 0 } else { imm(&s[..open], labels)? };
+    let r = reg(&s[open + 1..close])?;
+    Ok((off, r))
+}
+
+fn enc_r(f7: u32, rs2: u32, rs1: u32, f3: u32, rd: u32, op: u32) -> u32 {
+    (f7 << 25) | (rs2 << 20) | (rs1 << 15) | (f3 << 12) | (rd << 7) | op
+}
+
+fn enc_i(imm: i64, rs1: u32, f3: u32, rd: u32, op: u32) -> Result<u32, String> {
+    if !(-2048..=2047).contains(&imm) {
+        return Err(format!("I-immediate {imm} out of range"));
+    }
+    Ok((((imm as u32) & 0xfff) << 20) | (rs1 << 15) | (f3 << 12) | (rd << 7) | op)
+}
+
+fn enc_s(imm: i64, rs2: u32, rs1: u32, f3: u32, op: u32) -> Result<u32, String> {
+    if !(-2048..=2047).contains(&imm) {
+        return Err(format!("S-immediate {imm} out of range"));
+    }
+    let u = imm as u32;
+    Ok(((u >> 5 & 0x7f) << 25) | (rs2 << 20) | (rs1 << 15) | (f3 << 12) | ((u & 0x1f) << 7) | op)
+}
+
+fn enc_b(imm: i64, rs2: u32, rs1: u32, f3: u32) -> Result<u32, String> {
+    if imm % 2 != 0 || !(-4096..=4094).contains(&imm) {
+        return Err(format!("branch offset {imm} invalid"));
+    }
+    let u = imm as u32;
+    Ok(((u >> 12 & 1) << 31)
+        | ((u >> 5 & 0x3f) << 25)
+        | (rs2 << 20)
+        | (rs1 << 15)
+        | (f3 << 12)
+        | ((u >> 1 & 0xf) << 8)
+        | ((u >> 11 & 1) << 7)
+        | 0x63)
+}
+
+fn enc_j(imm: i64, rd: u32) -> Result<u32, String> {
+    if imm % 2 != 0 || !(-(1 << 20)..(1 << 20)).contains(&imm) {
+        return Err(format!("jump offset {imm} invalid"));
+    }
+    let u = imm as u32;
+    Ok(((u >> 20 & 1) << 31)
+        | ((u >> 1 & 0x3ff) << 21)
+        | ((u >> 11 & 1) << 20)
+        | ((u >> 12 & 0xff) << 12)
+        | (rd << 7)
+        | 0x6f)
+}
+
+fn enc_u(value: i64, rd: u32, op: u32) -> u32 {
+    ((value as u32) & 0xffff_f000) | (rd << 7) | op
+}
+
+/// Expand `li rd, imm32` / `la` into lui+addi (always two words; nop pad).
+fn expand_li(rd: u32, value: i64) -> Vec<u32> {
+    let v = value as i32;
+    let lo = ((v << 20) >> 20) as i64; // sign-extended low 12
+    let hi = (v as i64 - lo) as i32 as u32; // upper 20 with carry folded
+    let mut out = Vec::new();
+    if hi != 0 {
+        out.push(enc_u(hi as i64, rd, 0x37)); // lui
+        if lo != 0 {
+            out.push(enc_i(lo, rd, 0, rd, 0x13).unwrap()); // addi rd, rd, lo
+        }
+    } else {
+        out.push(enc_i(lo, 0, 0, rd, 0x13).unwrap()); // addi rd, x0, lo
+    }
+    while out.len() < 2 {
+        out.push(enc_i(0, 0, 0, 0, 0x13).unwrap()); // nop pad (fixed size)
+    }
+    out
+}
+
+fn encode(
+    op: &str,
+    args: &[String],
+    pc: u32,
+    labels: &BTreeMap<String, u32>,
+) -> Result<Vec<u32>, String> {
+    let a = |i: usize| -> Result<&str, String> {
+        args.get(i)
+            .map(String::as_str)
+            .ok_or_else(|| format!("{op}: missing operand {i}"))
+    };
+    let branch_to = |target: &str| -> Result<i64, String> {
+        let t = imm(target, labels)?;
+        Ok(t - pc as i64)
+    };
+    let one = |w: u32| Ok(vec![w]);
+    match op {
+        // --- U/J ---
+        "lui" => one(enc_u(imm(a(1)?, labels)? << 12, reg(a(0)?)?, 0x37)),
+        "auipc" => one(enc_u(imm(a(1)?, labels)? << 12, reg(a(0)?)?, 0x17)),
+        "jal" => {
+            let (rd, target) = if args.len() == 1 {
+                (1, a(0)?)
+            } else {
+                (reg(a(0)?)?, a(1)?)
+            };
+            one(enc_j(branch_to(target)?, rd)?)
+        }
+        "jalr" => {
+            let (off, rs1) = mem_operand(a(1)?, labels)?;
+            one(enc_i(off, rs1, 0, reg(a(0)?)?, 0x67)?)
+        }
+        // --- branches ---
+        "beq" | "bne" | "blt" | "bge" | "bltu" | "bgeu" => {
+            let f3 = match op {
+                "beq" => 0,
+                "bne" => 1,
+                "blt" => 4,
+                "bge" => 5,
+                "bltu" => 6,
+                _ => 7,
+            };
+            one(enc_b(branch_to(a(2)?)?, reg(a(1)?)?, reg(a(0)?)?, f3)?)
+        }
+        "beqz" => one(enc_b(branch_to(a(1)?)?, 0, reg(a(0)?)?, 0)?),
+        "bnez" => one(enc_b(branch_to(a(1)?)?, 0, reg(a(0)?)?, 1)?),
+        // --- loads/stores ---
+        "lb" | "lh" | "lw" | "lbu" | "lhu" => {
+            let f3 = match op {
+                "lb" => 0,
+                "lh" => 1,
+                "lw" => 2,
+                "lbu" => 4,
+                _ => 5,
+            };
+            let (off, rs1) = mem_operand(a(1)?, labels)?;
+            one(enc_i(off, rs1, f3, reg(a(0)?)?, 0x03)?)
+        }
+        "sb" | "sh" | "sw" => {
+            let f3 = match op {
+                "sb" => 0,
+                "sh" => 1,
+                _ => 2,
+            };
+            let (off, rs1) = mem_operand(a(1)?, labels)?;
+            one(enc_s(off, reg(a(0)?)?, rs1, f3, 0x23)?)
+        }
+        // --- ALU imm ---
+        "addi" | "slti" | "sltiu" | "xori" | "ori" | "andi" => {
+            let f3 = match op {
+                "addi" => 0,
+                "slti" => 2,
+                "sltiu" => 3,
+                "xori" => 4,
+                "ori" => 6,
+                _ => 7,
+            };
+            one(enc_i(imm(a(2)?, labels)?, reg(a(1)?)?, f3, reg(a(0)?)?, 0x13)?)
+        }
+        "slli" | "srli" | "srai" => {
+            let sh = imm(a(2)?, labels)? as u32 & 31;
+            let f7 = if op == "srai" { 0x20 } else { 0 };
+            let f3 = if op == "slli" { 1 } else { 5 };
+            one(enc_r(f7, sh, reg(a(1)?)?, f3, reg(a(0)?)?, 0x13))
+        }
+        // --- ALU reg ---
+        "add" | "sub" | "sll" | "slt" | "sltu" | "xor" | "srl" | "sra" | "or" | "and" => {
+            let (f3, f7) = match op {
+                "add" => (0, 0x00),
+                "sub" => (0, 0x20),
+                "sll" => (1, 0x00),
+                "slt" => (2, 0x00),
+                "sltu" => (3, 0x00),
+                "xor" => (4, 0x00),
+                "srl" => (5, 0x00),
+                "sra" => (5, 0x20),
+                "or" => (6, 0x00),
+                _ => (7, 0x00),
+            };
+            one(enc_r(f7, reg(a(2)?)?, reg(a(1)?)?, f3, reg(a(0)?)?, 0x33))
+        }
+        // --- system ---
+        "ecall" => one(0x0000_0073),
+        "ebreak" => one(0x0010_0073),
+        "fence" => one(0x0000_000f),
+        // --- pseudo ---
+        "nop" => one(enc_i(0, 0, 0, 0, 0x13)?),
+        "mv" => one(enc_i(0, reg(a(1)?)?, 0, reg(a(0)?)?, 0x13)?),
+        "not" => one(enc_i(-1, reg(a(1)?)?, 4, reg(a(0)?)?, 0x13)?),
+        "neg" => one(enc_r(0x20, reg(a(1)?)?, 0, 0, reg(a(0)?)?, 0x33)),
+        "j" => one(enc_j(branch_to(a(0)?)?, 0)?),
+        "jr" => one(enc_i(0, reg(a(0)?)?, 0, 0, 0x67)?),
+        "ret" => one(enc_i(0, 1, 0, 0, 0x67)?),
+        "li" | "la" => Ok(expand_li(reg(a(0)?)?, imm(a(1)?, labels)?)),
+        "call" => {
+            // 2 words: auipc+jalr would be general; label fits jal here,
+            // pad with nop to keep the fixed 2-word footprint of pass 1
+            let target = branch_to(a(0)?)?;
+            Ok(vec![enc_j(target, 1)?, enc_i(0, 0, 0, 0, 0x13)?])
+        }
+        other => Err(format!("unknown mnemonic {other:?}")),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn encodes_known_words() {
+        // addi x1, x0, 5  = 0x00500093
+        let img = assemble("addi x1, x0, 5\n").unwrap();
+        assert_eq!(u32::from_le_bytes(img[..4].try_into().unwrap()), 0x0050_0093);
+        // add x3, x1, x2 = 0x002081B3
+        let img = assemble("add x3, x1, x2\n").unwrap();
+        assert_eq!(u32::from_le_bytes(img[..4].try_into().unwrap()), 0x0020_81b3);
+        // sw x2, 8(x1) = 0x0020A423
+        let img = assemble("sw x2, 8(x1)\n").unwrap();
+        assert_eq!(u32::from_le_bytes(img[..4].try_into().unwrap()), 0x0020_a423);
+    }
+
+    #[test]
+    fn labels_resolve_forward_and_back() {
+        let img = assemble(
+            "start: addi a0, zero, 1\n\
+             j end\n\
+             addi a0, zero, 99\n\
+             end: ecall\n",
+        )
+        .unwrap();
+        assert_eq!(img.len(), 4 * 4);
+    }
+
+    #[test]
+    fn li_expands_to_fixed_two_words() {
+        for v in ["5", "-5", "0x12345678", "-2048", "2047", "0x7ffff000"] {
+            let img = assemble(&format!("li a0, {v}\n")).unwrap();
+            assert_eq!(img.len(), 8, "li {v}");
+        }
+    }
+
+    #[test]
+    fn duplicate_label_rejected() {
+        assert!(assemble("x: nop\nx: nop\n").is_err());
+    }
+
+    #[test]
+    fn unknown_mnemonic_rejected() {
+        assert!(assemble("frobnicate a0, a1\n").is_err());
+    }
+
+    #[test]
+    fn immediate_range_checked() {
+        assert!(assemble("addi a0, a0, 5000\n").is_err());
+    }
+
+    #[test]
+    fn abi_and_numeric_registers_equivalent() {
+        let a = assemble("add a0, a1, a2\n").unwrap();
+        let b = assemble("add x10, x11, x12\n").unwrap();
+        assert_eq!(a, b);
+    }
+}

@@ -1,0 +1,413 @@
+//! RV32I interpreter: the SoC control CPU (paper ref. [41] — "a RISC-V CPU
+//! that controls the SoC").  Base integer ISA (no CSR/FENCE semantics
+//! beyond no-ops), byte-addressable RAM, and an MMIO hook for the CAM
+//! device bus.
+
+/// Outcome of one executed instruction.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Step {
+    /// Continue at the (already updated) PC.
+    Continue,
+    /// ECALL executed: firmware requests a service / halt (a7 = code).
+    Ecall,
+    /// EBREAK executed.
+    Ebreak,
+}
+
+/// Execution fault.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub enum Fault {
+    BadInstruction { pc: u32, word: u32 },
+    BadAccess { pc: u32, addr: u32 },
+    StepLimit,
+}
+
+/// A memory-mapped device on the bus.
+pub trait MmioDevice {
+    /// Word read at device-relative offset (must be 4-aligned).
+    fn read(&mut self, offset: u32) -> u32;
+    /// Word write at device-relative offset.
+    fn write(&mut self, offset: u32, value: u32);
+}
+
+/// Bus layout: RAM at 0, one MMIO window.
+pub const MMIO_BASE: u32 = 0x4000_0000;
+pub const MMIO_SIZE: u32 = 0x1000;
+
+/// The RV32I hart + memory.
+pub struct Cpu<'d> {
+    pub regs: [u32; 32],
+    pub pc: u32,
+    pub ram: Vec<u8>,
+    pub device: Option<&'d mut dyn MmioDevice>,
+    pub instret: u64,
+}
+
+impl<'d> Cpu<'d> {
+    pub fn new(ram_bytes: usize) -> Self {
+        Cpu {
+            regs: [0; 32],
+            pc: 0,
+            ram: vec![0; ram_bytes],
+            device: None,
+            instret: 0,
+        }
+    }
+
+    pub fn with_device(ram_bytes: usize, device: &'d mut dyn MmioDevice) -> Self {
+        let mut cpu = Cpu::new(ram_bytes);
+        cpu.device = Some(device);
+        cpu
+    }
+
+    /// Load a program image at `addr`.
+    pub fn load(&mut self, addr: u32, image: &[u8]) {
+        self.ram[addr as usize..addr as usize + image.len()].copy_from_slice(image);
+    }
+
+    #[inline]
+    fn reg(&self, r: u32) -> u32 {
+        self.regs[r as usize]
+    }
+
+    #[inline]
+    fn set_reg(&mut self, r: u32, v: u32) {
+        if r != 0 {
+            self.regs[r as usize] = v;
+        }
+    }
+
+    fn load_word(&mut self, addr: u32, pc: u32) -> Result<u32, Fault> {
+        if addr >= MMIO_BASE && addr < MMIO_BASE + MMIO_SIZE {
+            let dev = self.device.as_mut().ok_or(Fault::BadAccess { pc, addr })?;
+            return Ok(dev.read(addr - MMIO_BASE));
+        }
+        let a = addr as usize;
+        if a + 4 > self.ram.len() {
+            return Err(Fault::BadAccess { pc, addr });
+        }
+        Ok(u32::from_le_bytes(self.ram[a..a + 4].try_into().unwrap()))
+    }
+
+    fn store_word(&mut self, addr: u32, v: u32, pc: u32) -> Result<(), Fault> {
+        if addr >= MMIO_BASE && addr < MMIO_BASE + MMIO_SIZE {
+            let dev = self.device.as_mut().ok_or(Fault::BadAccess { pc, addr })?;
+            dev.write(addr - MMIO_BASE, v);
+            return Ok(());
+        }
+        let a = addr as usize;
+        if a + 4 > self.ram.len() {
+            return Err(Fault::BadAccess { pc, addr });
+        }
+        self.ram[a..a + 4].copy_from_slice(&v.to_le_bytes());
+        Ok(())
+    }
+
+    fn load_byte(&mut self, addr: u32, pc: u32) -> Result<u8, Fault> {
+        if addr >= MMIO_BASE {
+            // byte access to MMIO: read the word and slice
+            let w = self.load_word(addr & !3, pc)?;
+            return Ok((w >> ((addr % 4) * 8)) as u8);
+        }
+        self.ram
+            .get(addr as usize)
+            .copied()
+            .ok_or(Fault::BadAccess { pc, addr })
+    }
+
+    fn store_byte(&mut self, addr: u32, v: u8, pc: u32) -> Result<(), Fault> {
+        if addr >= MMIO_BASE {
+            return Err(Fault::BadAccess { pc, addr }); // word-only MMIO writes
+        }
+        match self.ram.get_mut(addr as usize) {
+            Some(slot) => {
+                *slot = v;
+                Ok(())
+            }
+            None => Err(Fault::BadAccess { pc, addr }),
+        }
+    }
+
+    /// Execute one instruction.
+    pub fn step(&mut self) -> Result<Step, Fault> {
+        let pc = self.pc;
+        let word = self.load_word(pc, pc)?;
+        self.instret += 1;
+        let opcode = word & 0x7f;
+        let rd = (word >> 7) & 0x1f;
+        let rs1 = (word >> 15) & 0x1f;
+        let rs2 = (word >> 20) & 0x1f;
+        let funct3 = (word >> 12) & 7;
+        let funct7 = word >> 25;
+        let imm_i = (word as i32) >> 20;
+        let imm_s = (((word & 0xfe00_0000) as i32) >> 20) | (((word >> 7) & 0x1f) as i32);
+        let imm_b = ((((word >> 31) & 1) << 12)
+            | (((word >> 7) & 1) << 11)
+            | (((word >> 25) & 0x3f) << 5)
+            | (((word >> 8) & 0xf) << 1)) as i32;
+        let imm_b = (imm_b << 19) >> 19; // sign-extend 13-bit
+        let imm_u = (word & 0xffff_f000) as i32;
+        let imm_j = ((((word >> 31) & 1) << 20)
+            | (((word >> 12) & 0xff) << 12)
+            | (((word >> 20) & 1) << 11)
+            | (((word >> 21) & 0x3ff) << 1)) as i32;
+        let imm_j = (imm_j << 11) >> 11; // sign-extend 21-bit
+
+        let mut next_pc = pc.wrapping_add(4);
+        match opcode {
+            0x37 => self.set_reg(rd, imm_u as u32), // LUI
+            0x17 => self.set_reg(rd, pc.wrapping_add(imm_u as u32)), // AUIPC
+            0x6f => {
+                // JAL
+                self.set_reg(rd, next_pc);
+                next_pc = pc.wrapping_add(imm_j as u32);
+            }
+            0x67 => {
+                // JALR
+                let t = self.reg(rs1).wrapping_add(imm_i as u32) & !1;
+                self.set_reg(rd, next_pc);
+                next_pc = t;
+            }
+            0x63 => {
+                // branches
+                let a = self.reg(rs1);
+                let b = self.reg(rs2);
+                let take = match funct3 {
+                    0 => a == b,
+                    1 => a != b,
+                    4 => (a as i32) < (b as i32),
+                    5 => (a as i32) >= (b as i32),
+                    6 => a < b,
+                    7 => a >= b,
+                    _ => return Err(Fault::BadInstruction { pc, word }),
+                };
+                if take {
+                    next_pc = pc.wrapping_add(imm_b as u32);
+                }
+            }
+            0x03 => {
+                // loads
+                let addr = self.reg(rs1).wrapping_add(imm_i as u32);
+                let v = match funct3 {
+                    0 => self.load_byte(addr, pc)? as i8 as i32 as u32,
+                    1 => {
+                        let lo = self.load_byte(addr, pc)? as u32;
+                        let hi = self.load_byte(addr + 1, pc)? as u32;
+                        ((lo | (hi << 8)) as u16) as i16 as i32 as u32
+                    }
+                    2 => self.load_word(addr, pc)?,
+                    4 => self.load_byte(addr, pc)? as u32,
+                    5 => {
+                        let lo = self.load_byte(addr, pc)? as u32;
+                        let hi = self.load_byte(addr + 1, pc)? as u32;
+                        lo | (hi << 8)
+                    }
+                    _ => return Err(Fault::BadInstruction { pc, word }),
+                };
+                self.set_reg(rd, v);
+            }
+            0x23 => {
+                // stores
+                let addr = self.reg(rs1).wrapping_add(imm_s as u32);
+                let v = self.reg(rs2);
+                match funct3 {
+                    0 => self.store_byte(addr, v as u8, pc)?,
+                    1 => {
+                        self.store_byte(addr, v as u8, pc)?;
+                        self.store_byte(addr + 1, (v >> 8) as u8, pc)?;
+                    }
+                    2 => self.store_word(addr, v, pc)?,
+                    _ => return Err(Fault::BadInstruction { pc, word }),
+                }
+            }
+            0x13 => {
+                // ALU immediate
+                let a = self.reg(rs1);
+                let v = match funct3 {
+                    0 => a.wrapping_add(imm_i as u32),
+                    2 => ((a as i32) < imm_i) as u32,
+                    3 => (a < imm_i as u32) as u32,
+                    4 => a ^ imm_i as u32,
+                    6 => a | imm_i as u32,
+                    7 => a & imm_i as u32,
+                    1 => a.wrapping_shl(rs2),
+                    5 => {
+                        if funct7 & 0x20 != 0 {
+                            ((a as i32) >> rs2) as u32
+                        } else {
+                            a.wrapping_shr(rs2)
+                        }
+                    }
+                    _ => return Err(Fault::BadInstruction { pc, word }),
+                };
+                self.set_reg(rd, v);
+            }
+            0x33 => {
+                // ALU register
+                let a = self.reg(rs1);
+                let b = self.reg(rs2);
+                let v = match (funct3, funct7) {
+                    (0, 0x00) => a.wrapping_add(b),
+                    (0, 0x20) => a.wrapping_sub(b),
+                    (1, 0x00) => a.wrapping_shl(b & 31),
+                    (2, 0x00) => ((a as i32) < (b as i32)) as u32,
+                    (3, 0x00) => (a < b) as u32,
+                    (4, 0x00) => a ^ b,
+                    (5, 0x00) => a.wrapping_shr(b & 31),
+                    (5, 0x20) => ((a as i32) >> (b & 31)) as u32,
+                    (6, 0x00) => a | b,
+                    (7, 0x00) => a & b,
+                    _ => return Err(Fault::BadInstruction { pc, word }),
+                };
+                self.set_reg(rd, v);
+            }
+            0x0f => {} // FENCE: no-op
+            0x73 => {
+                self.pc = next_pc;
+                return Ok(if imm_i == 1 { Step::Ebreak } else { Step::Ecall });
+            }
+            _ => return Err(Fault::BadInstruction { pc, word }),
+        }
+        self.pc = next_pc;
+        Ok(Step::Continue)
+    }
+
+    /// Run until ECALL/EBREAK or the step limit; returns instruction count.
+    pub fn run(&mut self, max_steps: u64) -> Result<u64, Fault> {
+        let start = self.instret;
+        loop {
+            match self.step()? {
+                Step::Continue => {
+                    if self.instret - start >= max_steps {
+                        return Err(Fault::StepLimit);
+                    }
+                }
+                Step::Ecall | Step::Ebreak => return Ok(self.instret - start),
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::riscv::asm::assemble;
+
+    fn run_asm(src: &str) -> Cpu<'static> {
+        let image = assemble(src).expect("assemble");
+        let mut cpu = Cpu::new(64 * 1024);
+        cpu.load(0, &image);
+        cpu.run(100_000).expect("run");
+        cpu
+    }
+
+    #[test]
+    fn arithmetic_and_logic() {
+        let cpu = run_asm(
+            "li a0, 20\n\
+             li a1, 22\n\
+             add a2, a0, a1\n\
+             sub a3, a0, a1\n\
+             xor a4, a0, a1\n\
+             and a5, a0, a1\n\
+             or a6, a0, a1\n\
+             ecall\n",
+        );
+        assert_eq!(cpu.regs[12], 42); // a2
+        assert_eq!(cpu.regs[13] as i32, -2); // a3
+        assert_eq!(cpu.regs[14], 20 ^ 22);
+        assert_eq!(cpu.regs[15], 20 & 22);
+        assert_eq!(cpu.regs[16], 20 | 22);
+    }
+
+    #[test]
+    fn shifts_and_compares() {
+        let cpu = run_asm(
+            "li a0, -8\n\
+             srai a1, a0, 1\n\
+             srli a2, a0, 1\n\
+             slli a3, a0, 1\n\
+             slti a4, a0, 0\n\
+             sltiu a5, a0, 0\n\
+             ecall\n",
+        );
+        assert_eq!(cpu.regs[11] as i32, -4);
+        assert_eq!(cpu.regs[12], (-8i32 as u32) >> 1);
+        assert_eq!(cpu.regs[13] as i32, -16);
+        assert_eq!(cpu.regs[14], 1);
+        assert_eq!(cpu.regs[15], 0);
+    }
+
+    #[test]
+    fn loads_stores_all_widths() {
+        let cpu = run_asm(
+            "li a0, 0x1000\n\
+             li a1, 0x12345678\n\
+             sw a1, 0(a0)\n\
+             lw a2, 0(a0)\n\
+             lh a3, 0(a0)\n\
+             lhu a4, 2(a0)\n\
+             lb a5, 3(a0)\n\
+             lbu a6, 1(a0)\n\
+             ecall\n",
+        );
+        assert_eq!(cpu.regs[12], 0x1234_5678);
+        assert_eq!(cpu.regs[13], 0x5678);
+        assert_eq!(cpu.regs[14], 0x1234);
+        assert_eq!(cpu.regs[15], 0x12);
+        assert_eq!(cpu.regs[16], 0x56);
+    }
+
+    #[test]
+    fn branch_loop_sums() {
+        // sum 1..=10 with a bne loop
+        let cpu = run_asm(
+            "li a0, 0\n\
+             li a1, 1\n\
+             li a2, 11\n\
+             loop:\n\
+             add a0, a0, a1\n\
+             addi a1, a1, 1\n\
+             bne a1, a2, loop\n\
+             ecall\n",
+        );
+        assert_eq!(cpu.regs[10], 55);
+    }
+
+    #[test]
+    fn jal_and_jalr_call_return() {
+        let cpu = run_asm(
+            "li a0, 5\n\
+             call double\n\
+             call double\n\
+             ecall\n\
+             double:\n\
+             add a0, a0, a0\n\
+             ret\n",
+        );
+        assert_eq!(cpu.regs[10], 20);
+    }
+
+    #[test]
+    fn x0_is_hardwired_zero() {
+        let cpu = run_asm("li x0, 99\nli a0, 7\nadd a0, a0, x0\necall\n");
+        assert_eq!(cpu.regs[0], 0);
+        assert_eq!(cpu.regs[10], 7);
+    }
+
+    #[test]
+    fn bad_instruction_faults() {
+        let mut cpu = Cpu::new(4096);
+        cpu.load(0, &0xffff_ffffu32.to_le_bytes());
+        assert!(matches!(cpu.step(), Err(Fault::BadInstruction { .. })));
+    }
+
+    #[test]
+    fn step_limit_enforced() {
+        // infinite loop: j 0
+        let image = assemble("loop: j loop\n").unwrap();
+        let mut cpu = Cpu::new(4096);
+        cpu.load(0, &image);
+        assert_eq!(cpu.run(1000), Err(Fault::StepLimit));
+    }
+}

@@ -1,0 +1,200 @@
+//! Control firmware: the Algorithm-1 threshold sweep as an RV32I program
+//! driving the CAM through its register file — the end-to-end proof that
+//! the SoC control plane (paper [41]) needs nothing but binary searches
+//! and register writes: no multiplier, no float unit, no popcount.
+//!
+//! RAM layout (addresses in the CPU's RAM space):
+//! ```text
+//! 0x2000  u32 K            number of schedule entries
+//! 0x2004  u32 n_classes    classes (≤ 32: votes read fires word 0)
+//! 0x2010  u32 × 3K         voltage table: (vref_mv, veval_mv, vst_mv) × K
+//! 0x3000  u32 × n_classes  vote accumulators (firmware output)
+//! ```
+//! The host pokes the query into the device data window beforehand; the
+//! firmware retunes, searches, and accumulates votes per class.
+
+use crate::accel::CalibratedPoint;
+use crate::util::bitops::BitVec;
+
+use super::asm::assemble;
+use super::cpu::{Cpu, Fault};
+use super::mmio::{CamMmio, DATA_BASE};
+
+/// The sweep program (see module docs for the RAM contract).
+pub const SWEEP_ASM: &str = "\
+    li   s0, 0x40000000      # MMIO base
+    li   t0, 0x2000
+    lw   s2, 0(t0)           # K
+    lw   s3, 4(t0)           # n_classes
+    li   s4, 0x2010          # voltage table ptr
+    li   s5, 0x3000          # votes ptr
+    li   s1, 0               # k = 0
+sweep:
+    lw   t1, 0(s4)
+    sw   t1, 8(s0)           # VREF_MV
+    lw   t1, 4(s4)
+    sw   t1, 12(s0)          # VEVAL_MV
+    lw   t1, 8(s4)
+    sw   t1, 16(s0)          # VST_MV
+    li   t1, 3
+    sw   t1, 20(s0)          # CMD = retune
+    li   t1, 2
+    sw   t1, 20(s0)          # CMD = search
+    li   t6, 0x40000200
+    lw   t2, 0(t6)           # fires word 0
+    li   t3, 0               # class c = 0
+    mv   t4, s5
+vote_loop:
+    andi t5, t2, 1
+    beqz t5, no_vote
+    lw   t6, 0(t4)
+    addi t6, t6, 1
+    sw   t6, 0(t4)
+no_vote:
+    srli t2, t2, 1
+    addi t4, t4, 4
+    addi t3, t3, 1
+    bne  t3, s3, vote_loop
+    addi s4, s4, 12
+    addi s1, s1, 1
+    bne  s1, s2, sweep
+    ecall
+";
+
+/// Run the sweep firmware for one query; returns per-class votes.
+///
+/// `points` are the calibrated operating points for the schedule (their
+/// voltages are quantized to the same 1 mV grid the registers carry), and
+/// the query must already match the device's configured word width.
+pub fn run_sweep(
+    dev: &mut CamMmio,
+    points: &[CalibratedPoint],
+    n_classes: usize,
+    query: &BitVec,
+) -> Result<(Vec<u32>, u64), Fault> {
+    assert!(n_classes <= 32, "firmware reads fires word 0 only");
+    // poke the query into the device data window
+    use super::cpu::MmioDevice;
+    for i in 0..query.len().div_ceil(32) {
+        let mut w = 0u32;
+        for b in 0..32 {
+            let idx = i * 32 + b;
+            if idx < query.len() && query.get(idx) {
+                w |= 1 << b;
+            }
+        }
+        dev.write(DATA_BASE + 4 * i as u32, w);
+    }
+    // assemble + load program and parameter block
+    let image = assemble(SWEEP_ASM).expect("firmware assembles");
+    let mut cpu = Cpu::with_device(256 * 1024, dev);
+    cpu.load(0, &image);
+    let mut params = Vec::new();
+    params.extend_from_slice(&(points.len() as u32).to_le_bytes());
+    params.extend_from_slice(&(n_classes as u32).to_le_bytes());
+    cpu.load(0x2000, &params);
+    let mut table = Vec::new();
+    for p in points {
+        for v in [p.voltages.vref, p.voltages.veval, p.voltages.vst] {
+            table.extend_from_slice(&((v * 1e3).round() as u32).to_le_bytes());
+        }
+    }
+    cpu.load(0x2010, &table);
+    let instret = cpu.run(4_000_000)?;
+    let votes = (0..n_classes)
+        .map(|c| {
+            let a = 0x3000 + 4 * c;
+            u32::from_le_bytes(cpu.ram[a..a + 4].try_into().unwrap())
+        })
+        .collect();
+    Ok((votes, instret))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::accel::VoltageController;
+    use crate::analog::Pvt;
+    use crate::bnn::infer::{digital_output_hd, sweep_votes};
+    use crate::bnn::mapping::{program_row, segment_query};
+    use crate::bnn::model::test_fixtures::tiny_model;
+    use crate::cam::{CamArray, CamConfig, NoiseMode};
+    use crate::riscv::cpu::MmioDevice;
+    use crate::riscv::mmio::{CMD_WRITE_ROW, REG_CMD, REG_ROW_ADDR};
+    use crate::util::rng::Rng;
+
+    #[test]
+    fn firmware_sweep_matches_digital_reference() {
+        // map a tiny output layer (n_in=128 -> fits 512-wide words with the
+        // fixture's 256-cell seg_width extended by matching spares)
+        let model = tiny_model(128, 16, 8, 71);
+        let out = &model.layers[1]; // 8 classes × 16 inputs, width ≥ 64
+        let cfg = CamConfig::W512x256;
+        let mut dev = CamMmio::new(CamArray::new(
+            cfg,
+            Pvt::nominal(),
+            NoiseMode::Nominal,
+            0,
+        ));
+        // program class rows through the register file (as the CPU would)
+        let width = cfg.width();
+        for j in 0..out.n_out() {
+            let row = program_row(out, 0, j);
+            // extend to the physical width with matching '1' spares
+            let mut bits = crate::util::bitops::BitVec::ones(width);
+            for i in 0..row.len() {
+                if !row.get(i) {
+                    bits.set(i, false);
+                }
+            }
+            for w in 0..width.div_ceil(32) {
+                let mut word = 0u32;
+                for b in 0..32 {
+                    let idx = w * 32 + b;
+                    if idx < width && bits.get(idx) {
+                        word |= 1 << b;
+                    }
+                }
+                dev.write(DATA_BASE + 4 * w as u32, word);
+            }
+            dev.write(REG_ROW_ADDR, j as u32);
+            dev.write(REG_CMD, CMD_WRITE_ROW);
+        }
+        // calibrate a short schedule on the physical width
+        let ctl = VoltageController::new(width, Pvt::nominal());
+        let targets: Vec<u32> = (0..=16).step_by(2).collect();
+        let points = ctl.calibrate_schedule(&targets);
+
+        // a random hidden activation vector
+        let mut rng = Rng::new(9, 9);
+        let mut h = crate::util::bitops::BitVec::zeros(out.n_in());
+        for i in 0..out.n_in() {
+            h.set(i, rng.chance(0.5));
+        }
+        let narrow = segment_query(out, 0, &h);
+        let mut query = crate::util::bitops::BitVec::ones(width);
+        for i in 0..narrow.len() {
+            if !narrow.get(i) {
+                query.set(i, false);
+            }
+        }
+
+        let (votes, instret) =
+            run_sweep(&mut dev, &points, out.n_out(), &query).expect("firmware runs");
+        // digital reference: HD + threshold sweep
+        let hd = digital_output_hd(out, &h);
+        let sched: Vec<i32> = targets.iter().map(|&t| t as i32).collect();
+        let want = sweep_votes(&hd, &sched);
+        assert_eq!(votes, want, "firmware votes vs digital reference");
+        assert!(instret > 100, "firmware actually executed ({instret} insns)");
+    }
+
+    #[test]
+    fn firmware_is_compact() {
+        let image = assemble(SWEEP_ASM).unwrap();
+        // the whole control loop fits in a few hundred bytes — the point of
+        // the end-to-end-binary design: the CPU never does arithmetic wider
+        // than an increment
+        assert!(image.len() < 512, "{} bytes", image.len());
+    }
+}

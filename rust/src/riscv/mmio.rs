@@ -1,0 +1,223 @@
+//! Memory-mapped CAM device interface: the bus the control CPU drives
+//! (paper Fig. 6: the RISC-V SoC wraps the PiC-BNN macro).
+//!
+//! Register map (word offsets from MMIO_BASE):
+//! ```text
+//! 0x000 CONFIG   w: 0/1/2 -> 512x256 / 1024x128 / 2048x64 (clears array)
+//! 0x004 ROW_ADDR w: row index for CMD_WRITE_ROW
+//! 0x008 VREF_MV  w: V_ref in millivolts
+//! 0x00C VEVAL_MV w: V_eval in millivolts
+//! 0x010 VST_MV   w: V_st in millivolts
+//! 0x014 CMD      w: 1 = write row (data window -> row), 2 = search
+//!                   (data window = query, fires -> fire window),
+//!                   3 = retune rails to the *_MV registers
+//! 0x018 STATUS   r: 1 = ready (the model has no multi-cycle busy states)
+//! 0x01C CYCLES   r: device cycle counter (low 32 bits)
+//! 0x020 TOL_Q8   r: current nominal HD tolerance, 24.8 fixed point
+//! 0x100-0x1FF    DATA window: row/query bits (up to 2048 = 64 words)
+//! 0x200-0x21F    FIRE window: per-row MLSA outputs (up to 256 rows)
+//! ```
+
+use crate::analog::Voltages;
+use crate::cam::{CamArray, CamConfig};
+use crate::util::bitops::BitVec;
+
+use super::cpu::MmioDevice;
+
+pub const REG_CONFIG: u32 = 0x000;
+pub const REG_ROW_ADDR: u32 = 0x004;
+pub const REG_VREF: u32 = 0x008;
+pub const REG_VEVAL: u32 = 0x00c;
+pub const REG_VST: u32 = 0x010;
+pub const REG_CMD: u32 = 0x014;
+pub const REG_STATUS: u32 = 0x018;
+pub const REG_CYCLES: u32 = 0x01c;
+pub const REG_TOL_Q8: u32 = 0x020;
+pub const DATA_BASE: u32 = 0x100;
+pub const DATA_WORDS: u32 = 64; // 2048 bits
+pub const FIRE_BASE: u32 = 0x200;
+pub const FIRE_WORDS: u32 = 8; // 256 rows
+
+pub const CMD_WRITE_ROW: u32 = 1;
+pub const CMD_SEARCH: u32 = 2;
+pub const CMD_RETUNE: u32 = 3;
+
+/// The CAM macro behind the register file.
+pub struct CamMmio {
+    pub cam: CamArray,
+    row_addr: u32,
+    vref_mv: u32,
+    veval_mv: u32,
+    vst_mv: u32,
+    data: [u32; DATA_WORDS as usize],
+    fires: [u32; FIRE_WORDS as usize],
+    scratch_m: Vec<u32>,
+    scratch_f: Vec<bool>,
+}
+
+impl CamMmio {
+    pub fn new(cam: CamArray) -> Self {
+        CamMmio {
+            cam,
+            row_addr: 0,
+            vref_mv: 1200,
+            veval_mv: 1200,
+            vst_mv: 1200,
+            data: [0; DATA_WORDS as usize],
+            fires: [0; FIRE_WORDS as usize],
+            scratch_m: Vec::new(),
+            scratch_f: Vec::new(),
+        }
+    }
+
+    fn data_bits(&self, width: usize) -> BitVec {
+        let mut v = BitVec::zeros(width);
+        for i in 0..width {
+            let w = self.data[i / 32];
+            if (w >> (i % 32)) & 1 == 1 {
+                v.set(i, true);
+            }
+        }
+        v
+    }
+
+    fn execute(&mut self, cmd: u32) {
+        let width = self.cam.config().width();
+        match cmd {
+            CMD_WRITE_ROW => {
+                let row = self.row_addr as usize % self.cam.config().rows();
+                let bits = self.data_bits(width);
+                self.cam.write_row(row, &bits);
+            }
+            CMD_SEARCH => {
+                let query = self.data_bits(width);
+                let mut m = std::mem::take(&mut self.scratch_m);
+                let mut f = std::mem::take(&mut self.scratch_f);
+                self.cam.search_into(&query, &mut m, &mut f);
+                self.fires = [0; FIRE_WORDS as usize];
+                for (r, &fire) in f.iter().enumerate() {
+                    if fire && r < 256 {
+                        self.fires[r / 32] |= 1 << (r % 32);
+                    }
+                }
+                self.scratch_m = m;
+                self.scratch_f = f;
+            }
+            CMD_RETUNE => {
+                self.cam.set_voltages(Voltages::new(
+                    self.vref_mv as f64 / 1e3,
+                    self.veval_mv as f64 / 1e3,
+                    self.vst_mv as f64 / 1e3,
+                ));
+            }
+            _ => {} // unknown commands ignore (write-1-to-poke style bus)
+        }
+    }
+}
+
+impl MmioDevice for CamMmio {
+    fn read(&mut self, offset: u32) -> u32 {
+        match offset {
+            REG_STATUS => 1,
+            REG_CYCLES => self.cam.clock.cycles as u32,
+            REG_TOL_Q8 => (self.cam.current_tolerance() * 256.0) as u32,
+            REG_VREF => self.vref_mv,
+            REG_VEVAL => self.veval_mv,
+            REG_VST => self.vst_mv,
+            o if (DATA_BASE..DATA_BASE + 4 * DATA_WORDS).contains(&o) => {
+                self.data[((o - DATA_BASE) / 4) as usize]
+            }
+            o if (FIRE_BASE..FIRE_BASE + 4 * FIRE_WORDS).contains(&o) => {
+                self.fires[((o - FIRE_BASE) / 4) as usize]
+            }
+            _ => 0,
+        }
+    }
+
+    fn write(&mut self, offset: u32, value: u32) {
+        match offset {
+            REG_CONFIG => {
+                let cfg = match value {
+                    0 => CamConfig::W512x256,
+                    1 => CamConfig::W1024x128,
+                    _ => CamConfig::W2048x64,
+                };
+                self.cam.reconfigure(cfg);
+            }
+            REG_ROW_ADDR => self.row_addr = value,
+            REG_VREF => self.vref_mv = value,
+            REG_VEVAL => self.veval_mv = value,
+            REG_VST => self.vst_mv = value,
+            REG_CMD => self.execute(value),
+            o if (DATA_BASE..DATA_BASE + 4 * DATA_WORDS).contains(&o) => {
+                self.data[((o - DATA_BASE) / 4) as usize] = value;
+            }
+            _ => {}
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn device() -> CamMmio {
+        CamMmio::new(CamArray::nominal(CamConfig::W512x256))
+    }
+
+    #[test]
+    fn write_row_and_exact_search_via_registers() {
+        let mut dev = device();
+        // row 3 := data window pattern
+        for w in 0..16 {
+            dev.write(DATA_BASE + 4 * w, 0xdead_beef ^ w);
+        }
+        dev.write(REG_ROW_ADDR, 3);
+        dev.write(REG_CMD, CMD_WRITE_ROW);
+        // exact search for the same pattern
+        dev.write(REG_VREF, 1200);
+        dev.write(REG_VEVAL, 1200);
+        dev.write(REG_VST, 1200);
+        dev.write(REG_CMD, CMD_RETUNE);
+        dev.write(REG_CMD, CMD_SEARCH);
+        assert_eq!(dev.read(FIRE_BASE) & (1 << 3), 1 << 3, "row 3 fires");
+        assert_eq!(dev.read(FIRE_BASE) & !(1 << 3), 0, "only row 3");
+        // flip one query bit -> no match at zero tolerance
+        dev.write(DATA_BASE, (0xdead_beefu32) ^ 1);
+        dev.write(REG_CMD, CMD_SEARCH);
+        assert_eq!(dev.read(FIRE_BASE), 0);
+    }
+
+    #[test]
+    fn retune_changes_reported_tolerance() {
+        let mut dev = device();
+        dev.write(REG_VREF, 1200);
+        dev.write(REG_VEVAL, 1200);
+        dev.write(REG_VST, 1200);
+        dev.write(REG_CMD, CMD_RETUNE);
+        let t0 = dev.read(REG_TOL_Q8);
+        dev.write(REG_VREF, 700);
+        dev.write(REG_VEVAL, 450);
+        dev.write(REG_VST, 1100);
+        dev.write(REG_CMD, CMD_RETUNE);
+        let t1 = dev.read(REG_TOL_Q8);
+        assert_eq!(t0, 0);
+        assert!(t1 > 256, "tolerance should exceed 1.0 (q8): {t1}");
+    }
+
+    #[test]
+    fn cycles_advance_with_commands() {
+        let mut dev = device();
+        let c0 = dev.read(REG_CYCLES);
+        dev.write(REG_CMD, CMD_SEARCH);
+        dev.write(REG_CMD, CMD_SEARCH);
+        assert_eq!(dev.read(REG_CYCLES), c0 + 2);
+    }
+
+    #[test]
+    fn config_write_reconfigures() {
+        let mut dev = device();
+        dev.write(REG_CONFIG, 2);
+        assert_eq!(dev.cam.config(), CamConfig::W2048x64);
+    }
+}

@@ -1,0 +1,12 @@
+//! RISC-V control plane: the RV32I CPU + memory-mapped CAM bus + control
+//! firmware that together model the paper's SoC ([41] — "LEO-II" research
+//! platform: PiC-BNN plus a RISC-V CPU that controls the SoC).
+
+pub mod asm;
+pub mod cpu;
+pub mod firmware;
+pub mod mmio;
+
+pub use asm::assemble;
+pub use cpu::{Cpu, Fault, MmioDevice, Step};
+pub use mmio::CamMmio;

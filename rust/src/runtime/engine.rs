@@ -1,0 +1,151 @@
+//! Generic HLO-artifact execution: one compiled PJRT executable per
+//! artifact, executed with f32 literals.
+
+use std::path::Path;
+
+use anyhow::{Context, Result};
+
+/// A compiled PJRT executable wrapping one HLO-text artifact.
+pub struct Engine {
+    client: xla::PjRtClient,
+    exe: xla::PjRtLoadedExecutable,
+    path: String,
+}
+
+impl Engine {
+    /// Load + compile an HLO text artifact on the CPU PJRT client.
+    pub fn load(path: impl AsRef<Path>) -> Result<Engine> {
+        let path = path.as_ref();
+        let client = xla::PjRtClient::cpu().context("create PJRT CPU client")?;
+        let proto = xla::HloModuleProto::from_text_file(path.to_str().unwrap())
+            .with_context(|| format!("parse HLO text {}", path.display()))?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        let exe = client
+            .compile(&comp)
+            .with_context(|| format!("compile {}", path.display()))?;
+        Ok(Engine {
+            client,
+            exe,
+            path: path.display().to_string(),
+        })
+    }
+
+    pub fn platform(&self) -> String {
+        self.client.platform_name()
+    }
+
+    pub fn path(&self) -> &str {
+        &self.path
+    }
+
+    /// Execute with f32 inputs of the given shapes; returns the outputs of
+    /// the result tuple as flat f32 vectors (jax lowers with
+    /// return_tuple=True, so the single result is a tuple literal).
+    pub fn run_f32(&self, inputs: &[(&[f32], &[usize])]) -> Result<Vec<Vec<f32>>> {
+        let literals: Vec<xla::Literal> = inputs
+            .iter()
+            .map(|(data, shape)| {
+                let lit = xla::Literal::vec1(data);
+                let dims: Vec<i64> = shape.iter().map(|&d| d as i64).collect();
+                lit.reshape(&dims).context("reshape input literal")
+            })
+            .collect::<Result<_>>()?;
+        let mut result = self
+            .exe
+            .execute::<xla::Literal>(&literals)
+            .context("execute")?[0][0]
+            .to_literal_sync()
+            .context("fetch result")?;
+        let tuple = result.decompose_tuple().context("decompose result tuple")?;
+        tuple
+            .into_iter()
+            .map(|lit| {
+                // outputs may be f32 or s32; normalise to f32
+                match lit.ty() {
+                    Ok(xla::ElementType::F32) => lit.to_vec::<f32>().context("f32 out"),
+                    Ok(xla::ElementType::S32) => Ok(lit
+                        .to_vec::<i32>()
+                        .context("s32 out")?
+                        .into_iter()
+                        .map(|v| v as f32)
+                        .collect()),
+                    other => anyhow::bail!("unsupported output element type {other:?}"),
+                }
+            })
+            .collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn artifact(name: &str) -> std::path::PathBuf {
+        crate::artifacts_dir().join(name)
+    }
+
+    #[test]
+    fn xnor_dot_artifact_matches_packed_reference() {
+        let path = artifact("xnor_dot.hlo.txt");
+        if !path.exists() {
+            eprintln!("skipping: {} not built", path.display());
+            return;
+        }
+        let eng = Engine::load(&path).unwrap();
+        // shapes fixed at lowering: x (64,1024), w (128,1024)
+        let mut rng = crate::util::rng::Rng::new(3, 3);
+        let x: Vec<f32> = (0..64 * 1024)
+            .map(|_| if rng.chance(0.5) { 1.0 } else { -1.0 })
+            .collect();
+        let w: Vec<f32> = (0..128 * 1024)
+            .map(|_| if rng.chance(0.5) { 1.0 } else { -1.0 })
+            .collect();
+        let out = eng
+            .run_f32(&[(&x, &[64, 1024]), (&w, &[128, 1024])])
+            .unwrap();
+        assert_eq!(out.len(), 1);
+        assert_eq!(out[0].len(), 64 * 128);
+        // check a few entries against the packed bitops reference
+        use crate::util::bitops::BitVec;
+        let to_bv = |v: &[f32]| {
+            let pm: Vec<i8> = v.iter().map(|&f| if f > 0.0 { 1 } else { -1 }).collect();
+            BitVec::from_pm1(&pm)
+        };
+        for &(i, j) in &[(0usize, 0usize), (5, 100), (63, 127)] {
+            let xb = to_bv(&x[i * 1024..(i + 1) * 1024]);
+            let wb = to_bv(&w[j * 1024..(j + 1) * 1024]);
+            let want = xb.dot_pm1(&wb) as f32;
+            assert_eq!(out[0][i * 128 + j], want, "entry ({i},{j})");
+        }
+    }
+
+    #[test]
+    fn matchline_artifact_matches_analog_nominal() {
+        let path = artifact("matchline_fire.hlo.txt");
+        if !path.exists() {
+            eprintln!("skipping: {} not built", path.display());
+            return;
+        }
+        let eng = Engine::load(&path).unwrap();
+        // shapes fixed at lowering: m (256,64), v (3,)
+        let mut rng = crate::util::rng::Rng::new(5, 9);
+        let m: Vec<f32> = (0..256 * 64).map(|_| rng.below(257) as f32).collect();
+        let v = [0.775f32, 0.6, 1.1];
+        let out = eng.run_f32(&[(&m, &[256, 64]), (&v, &[3])]).unwrap();
+        let model = crate::analog::MatchlineModel::new(
+            256,
+            crate::analog::Pvt::nominal(),
+        );
+        let volts =
+            crate::analog::Voltages::new(v[0] as f64, v[1] as f64, v[2] as f64);
+        let tol = model.hd_tolerance(&volts);
+        for (idx, &fire) in out[0].iter().enumerate() {
+            let mm = m[idx] as f64;
+            if (mm - tol).abs() < 0.25 {
+                continue; // f32-vs-f64 boundary cell
+            }
+            let want = if mm <= tol { 1.0 } else { 0.0 };
+            assert_eq!(fire, want, "m={mm} tol={tol}");
+        }
+    }
+}

@@ -1,0 +1,117 @@
+//! Model-level PJRT inference: wraps the `{name}_infer.hlo.txt` artifact
+//! (the full Algorithm-1 graph with weights as runtime parameters) behind
+//! a batched classify API that matches the CAM pipeline's semantics.
+
+use anyhow::{Context, Result};
+
+use crate::bnn::model::MappedModel;
+use crate::util::bitops::BitVec;
+
+use super::engine::Engine;
+
+/// AOT batch the artifacts were lowered at (python/compile/aot.py::BATCH).
+pub const AOT_BATCH: usize = 64;
+
+/// The Algorithm-1 inference graph, executed via PJRT.
+pub struct InferEngine {
+    engine: Engine,
+    // flattened f32 parameter buffers (built once from the mapped model)
+    w1: Vec<f32>,
+    q1: Vec<f32>,
+    w2: Vec<f32>,
+    q2: Vec<f32>,
+    schedule: Vec<f32>,
+    n_in: usize,
+    n_hidden: usize,
+    n_seg: usize,
+    n_classes: usize,
+}
+
+fn weights_to_f32(layer: &crate::bnn::model::MappedLayer) -> Vec<f32> {
+    let mut out = Vec::with_capacity(layer.n_out() * layer.n_in());
+    for r in 0..layer.n_out() {
+        for c in 0..layer.n_in() {
+            out.push(if layer.weights.get(r, c) { 1.0 } else { -1.0 });
+        }
+    }
+    out
+}
+
+impl InferEngine {
+    /// Load the artifact for `name` ("mnist"/"hg") and bind the model's
+    /// parameters.
+    pub fn load(name: &str, model: &MappedModel) -> Result<InferEngine> {
+        let path = crate::artifacts_dir().join(format!("{name}_infer.hlo.txt"));
+        let engine = Engine::load(&path)
+            .with_context(|| format!("load inference artifact for {name}"))?;
+        anyhow::ensure!(model.layers.len() == 2, "artifact expects 2 layers");
+        let l1 = &model.layers[0];
+        let l2 = &model.layers[1];
+        Ok(InferEngine {
+            engine,
+            w1: weights_to_f32(l1),
+            q1: l1.q.iter().flatten().map(|&q| q as f32).collect(),
+            w2: weights_to_f32(l2),
+            q2: l2.q.iter().flatten().map(|&q| q as f32).collect(),
+            schedule: model.schedule.iter().map(|&t| t as f32).collect(),
+            n_in: l1.n_in(),
+            n_hidden: l1.n_out(),
+            n_seg: l1.n_seg(),
+            n_classes: l2.n_out(),
+        })
+    }
+
+    pub fn platform(&self) -> String {
+        self.engine.platform()
+    }
+
+    /// Classify up to AOT_BATCH images; returns (votes, pred) per image.
+    /// Short batches are padded (padding results are discarded).
+    pub fn classify_batch(&self, images: &[BitVec]) -> Result<Vec<(Vec<u32>, usize)>> {
+        anyhow::ensure!(!images.is_empty(), "empty batch");
+        anyhow::ensure!(
+            images.len() <= AOT_BATCH,
+            "batch {} exceeds AOT batch {AOT_BATCH}",
+            images.len()
+        );
+        let mut x = vec![1.0f32; AOT_BATCH * self.n_in];
+        for (i, img) in images.iter().enumerate() {
+            anyhow::ensure!(img.len() == self.n_in, "image width mismatch");
+            for c in 0..self.n_in {
+                x[i * self.n_in + c] = if img.get(c) { 1.0 } else { -1.0 };
+            }
+        }
+        let out = self.engine.run_f32(&[
+            (&x, &[AOT_BATCH, self.n_in]),
+            (&self.w1, &[self.n_hidden, self.n_in]),
+            (&self.q1, &[self.n_seg, self.n_hidden]),
+            (&self.w2, &[self.n_classes, self.n_hidden]),
+            (&self.q2, &[1, self.n_classes]),
+            (&self.schedule, &[self.schedule.len()]),
+        ])?;
+        anyhow::ensure!(out.len() == 2, "expected (votes, pred) outputs");
+        let votes_flat = &out[0];
+        let preds = &out[1];
+        Ok(images
+            .iter()
+            .enumerate()
+            .map(|(i, _)| {
+                let votes: Vec<u32> = votes_flat
+                    [i * self.n_classes..(i + 1) * self.n_classes]
+                    .iter()
+                    .map(|&v| v as u32)
+                    .collect();
+                (votes, preds[i] as usize)
+            })
+            .collect())
+    }
+
+    /// Classify an arbitrary number of images, chunking at the AOT batch.
+    pub fn classify_all(&self, images: &[BitVec]) -> Result<Vec<(Vec<u32>, usize)>> {
+        let mut out = Vec::with_capacity(images.len());
+        for chunk in images.chunks(AOT_BATCH) {
+            out.extend(self.classify_batch(chunk)?);
+        }
+        Ok(out)
+    }
+}

@@ -1,0 +1,16 @@
+//! PJRT runtime: loads the AOT-lowered HLO text artifacts produced by
+//! `python/compile/aot.py` and executes them on the XLA CPU client — the
+//! functional-reference execution backend of the three-layer stack.
+//!
+//! Python never runs here: the artifacts are compiled once at build time
+//! (`make artifacts`), and this module's `Engine` compiles the HLO text to
+//! a PJRT executable at startup and serves requests from the rust event
+//! loop.  Interchange is HLO *text* (not serialized protos): jax ≥ 0.5
+//! emits 64-bit instruction ids that xla_extension 0.5.1 rejects, while
+//! the text parser reassigns ids (see /opt/xla-example/README.md).
+
+pub mod engine;
+pub mod infer;
+
+pub use engine::Engine;
+pub use infer::InferEngine;

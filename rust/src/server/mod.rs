@@ -1,0 +1,255 @@
+//! In-process inference server: a request/response loop over channels with
+//! a dynamic batcher in front of the pipeline — the shape a deployment
+//! would put around the accelerator (tokio is unavailable offline; std
+//! mpsc + threads carry the same architecture).
+
+use std::sync::mpsc;
+use std::time::{Duration, Instant};
+
+use crate::accel::{BatchPolicy, Batcher, Pipeline, PipelineOptions};
+use crate::bnn::model::MappedModel;
+use crate::util::bitops::BitVec;
+use crate::util::stats::Summary;
+
+/// A classification response.
+#[derive(Clone, Debug)]
+pub struct Response {
+    pub id: u64,
+    pub prediction: usize,
+    pub votes: Vec<u32>,
+    pub latency: Duration,
+}
+
+/// Aggregate service metrics.
+#[derive(Clone, Debug, Default)]
+pub struct ServerMetrics {
+    pub served: u64,
+    pub batches: u64,
+    pub latency_ms: Summary,
+    pub batch_sizes: Summary,
+}
+
+impl ServerMetrics {
+    pub fn p50_ms(&self) -> f64 {
+        self.latency_ms.percentile(50.0)
+    }
+
+    pub fn p99_ms(&self) -> f64 {
+        self.latency_ms.percentile(99.0)
+    }
+
+    pub fn mean_batch(&self) -> f64 {
+        self.batch_sizes.mean()
+    }
+}
+
+/// Synchronous single-threaded server core: feed requests in, drive the
+/// batcher + pipeline, collect responses.  The threaded front-end
+/// (`serve_workload`) wraps this with producer threads.
+pub struct Server<'m> {
+    pipeline: Pipeline<'m>,
+    batcher: Batcher,
+    pub metrics: ServerMetrics,
+}
+
+impl<'m> Server<'m> {
+    pub fn new(model: &'m MappedModel, opts: PipelineOptions, policy: BatchPolicy) -> Self {
+        Server {
+            pipeline: Pipeline::new(model, opts),
+            batcher: Batcher::new(policy),
+            metrics: ServerMetrics::default(),
+        }
+    }
+
+    /// Enqueue one request; returns its id.
+    pub fn submit(&mut self, image: BitVec) -> u64 {
+        self.batcher.push(image)
+    }
+
+    /// Flush pending requests if the policy says so (or `force`).
+    /// Returns completed responses.
+    pub fn poll(&mut self, force: bool) -> Vec<Response> {
+        let now = Instant::now();
+        if !force && !self.batcher.ready(now) {
+            return Vec::new();
+        }
+        let batch = if force {
+            self.batcher.drain_all()
+        } else {
+            self.batcher.drain_batch()
+        };
+        if batch.is_empty() {
+            return Vec::new();
+        }
+        let images: Vec<BitVec> = batch.iter().map(|r| r.image.clone()).collect();
+        let results = self.pipeline.classify_batch(&images);
+        let done = Instant::now();
+        self.metrics.batches += 1;
+        self.metrics.batch_sizes.push(batch.len() as f64);
+        batch
+            .into_iter()
+            .zip(results)
+            .map(|(req, (votes, prediction))| {
+                let latency = done.duration_since(req.enqueued);
+                self.metrics.served += 1;
+                self.metrics.latency_ms.push(latency.as_secs_f64() * 1e3);
+                Response {
+                    id: req.id,
+                    prediction,
+                    votes,
+                    latency,
+                }
+            })
+            .collect()
+    }
+
+    /// Device statistics accumulated so far.
+    pub fn take_device_stats(&mut self) -> crate::accel::RunStats {
+        self.pipeline.take_stats(self.metrics.served)
+    }
+}
+
+/// Drive a server with a workload produced by `n_producers` threads, each
+/// submitting `per_producer` images with `inter_arrival` spacing.  Returns
+/// (responses in completion order, metrics).
+pub fn serve_workload(
+    model: &MappedModel,
+    opts: PipelineOptions,
+    policy: BatchPolicy,
+    images: &[BitVec],
+    n_producers: usize,
+    inter_arrival: Duration,
+) -> (Vec<Response>, ServerMetrics) {
+    let (tx, rx) = mpsc::channel::<BitVec>();
+    std::thread::scope(|s| {
+        // producers
+        let per = images.len().div_ceil(n_producers.max(1));
+        for chunk in images.chunks(per) {
+            let tx = tx.clone();
+            s.spawn(move || {
+                for img in chunk {
+                    if tx.send(img.clone()).is_err() {
+                        return;
+                    }
+                    if !inter_arrival.is_zero() {
+                        std::thread::sleep(inter_arrival);
+                    }
+                }
+            });
+        }
+        drop(tx);
+        // consumer: the server loop
+        let mut server = Server::new(model, opts, policy);
+        let mut responses = Vec::with_capacity(images.len());
+        loop {
+            match rx.recv_timeout(Duration::from_micros(200)) {
+                Ok(img) => {
+                    server.submit(img);
+                    responses.extend(server.poll(false));
+                }
+                Err(mpsc::RecvTimeoutError::Timeout) => {
+                    responses.extend(server.poll(false));
+                }
+                Err(mpsc::RecvTimeoutError::Disconnected) => {
+                    responses.extend(server.poll(true));
+                    break;
+                }
+            }
+        }
+        let metrics = server.metrics.clone();
+        (responses, metrics)
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::bnn::model::test_fixtures::tiny_model;
+    use crate::cam::NoiseMode;
+    use crate::util::rng::Rng;
+
+    fn images(n: usize, bits: usize) -> Vec<BitVec> {
+        let mut rng = Rng::new(8, 8);
+        (0..n)
+            .map(|_| {
+                let mut v = BitVec::zeros(bits);
+                for i in 0..bits {
+                    v.set(i, rng.chance(0.5));
+                }
+                v
+            })
+            .collect()
+    }
+
+    fn opts() -> PipelineOptions {
+        PipelineOptions {
+            noise: NoiseMode::Nominal,
+            ..Default::default()
+        }
+    }
+
+    #[test]
+    fn serves_all_requests_once() {
+        let model = tiny_model(64, 8, 3, 31);
+        let imgs = images(40, 64);
+        let (responses, metrics) = serve_workload(
+            &model,
+            opts(),
+            BatchPolicy {
+                max_batch: 8,
+                max_wait: Duration::from_micros(100),
+            },
+            &imgs,
+            3,
+            Duration::ZERO,
+        );
+        assert_eq!(responses.len(), 40);
+        assert_eq!(metrics.served, 40);
+        let mut ids: Vec<u64> = responses.iter().map(|r| r.id).collect();
+        ids.sort_unstable();
+        ids.dedup();
+        assert_eq!(ids.len(), 40, "every id exactly once");
+        assert!(metrics.mean_batch() >= 1.0);
+    }
+
+    #[test]
+    fn predictions_match_direct_pipeline() {
+        let model = tiny_model(64, 8, 3, 32);
+        let imgs = images(16, 64);
+        let (mut responses, _) = serve_workload(
+            &model,
+            opts(),
+            BatchPolicy {
+                max_batch: 4,
+                max_wait: Duration::from_micros(50),
+            },
+            &imgs,
+            1,
+            Duration::ZERO,
+        );
+        responses.sort_by_key(|r| r.id);
+        let mut pipe = Pipeline::new(&model, opts());
+        let want = pipe.classify_batch(&imgs);
+        for (r, (votes, pred)) in responses.iter().zip(&want) {
+            assert_eq!(&r.prediction, pred);
+            assert_eq!(&r.votes, votes);
+        }
+    }
+
+    #[test]
+    fn force_poll_flushes_partial_batch() {
+        let model = tiny_model(64, 8, 3, 33);
+        let mut server = Server::new(
+            &model,
+            opts(),
+            BatchPolicy {
+                max_batch: 100,
+                max_wait: Duration::from_secs(60),
+            },
+        );
+        server.submit(images(1, 64).pop().unwrap());
+        assert!(server.poll(false).is_empty(), "policy not yet ready");
+        let got = server.poll(true);
+        assert_eq!(got.len(), 1);
+    }
+}

@@ -1,0 +1,113 @@
+//! Clocked-simulation core: cycle accounting and per-event energy hooks.
+//!
+//! The CAM device is synchronous (25 MHz): every search, write, or read is
+//! one clock cycle; voltage retunes stall for their settle time.  `SimClock`
+//! tracks cycles and stall time; `EventCounters` tallies the primitive
+//! events the energy model (rust/src/energy) converts to joules.
+
+use crate::analog::constants as k;
+
+/// Primitive device events, counted per workload.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub struct EventCounters {
+    /// Search cycles issued (one per array-wide compare).
+    pub searches: u64,
+    /// Row-cells precharged across all searches (cells × searches).
+    pub cells_precharged: u64,
+    /// Searchline (column) toggles driven across all searches.
+    pub sl_toggles: u64,
+    /// MLSA evaluations (rows sensed × searches).
+    pub mlsa_evals: u64,
+    /// SRAM cells written (weight programming).
+    pub cells_written: u64,
+    /// DAC retune events.
+    pub retunes: u64,
+    /// Read cycles (diagnostics; not on the inference path).
+    pub reads: u64,
+    /// Logical binary MACs performed (payload XNOR+accumulate pairs —
+    /// excludes pad/spare cells; the BNN-accelerator "ops" convention
+    /// counts 2 ops per MAC).
+    pub useful_macs: u64,
+}
+
+impl EventCounters {
+    pub fn add(&mut self, other: &EventCounters) {
+        self.searches += other.searches;
+        self.cells_precharged += other.cells_precharged;
+        self.sl_toggles += other.sl_toggles;
+        self.mlsa_evals += other.mlsa_evals;
+        self.cells_written += other.cells_written;
+        self.retunes += other.retunes;
+        self.reads += other.reads;
+        self.useful_macs += other.useful_macs;
+    }
+}
+
+/// Cycle/time accounting at the device clock.
+#[derive(Clone, Debug, Default)]
+pub struct SimClock {
+    /// Clock cycles consumed by array operations.
+    pub cycles: u64,
+    /// Stall time from DAC settling etc. [s].
+    pub stall_s: f64,
+}
+
+impl SimClock {
+    pub fn new() -> Self {
+        SimClock::default()
+    }
+
+    /// Advance by n device cycles.
+    pub fn tick(&mut self, n: u64) {
+        self.cycles += n;
+    }
+
+    /// Stall for `t` seconds (retune settling).
+    pub fn stall(&mut self, t: f64) {
+        self.stall_s += t;
+    }
+
+    /// Total elapsed device time [s] at the nominal clock.
+    pub fn elapsed_s(&self) -> f64 {
+        self.cycles as f64 / k::F_CLK + self.stall_s
+    }
+
+    pub fn reset(&mut self) {
+        self.cycles = 0;
+        self.stall_s = 0.0;
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn clock_accumulates() {
+        let mut c = SimClock::new();
+        c.tick(25_000_000);
+        assert!((c.elapsed_s() - 1.0).abs() < 1e-12);
+        c.stall(0.5);
+        assert!((c.elapsed_s() - 1.5).abs() < 1e-12);
+        c.reset();
+        assert_eq!(c.cycles, 0);
+    }
+
+    #[test]
+    fn counters_add() {
+        let mut a = EventCounters {
+            searches: 1,
+            mlsa_evals: 10,
+            ..Default::default()
+        };
+        let b = EventCounters {
+            searches: 2,
+            cells_written: 5,
+            ..Default::default()
+        };
+        a.add(&b);
+        assert_eq!(a.searches, 3);
+        assert_eq!(a.mlsa_evals, 10);
+        assert_eq!(a.cells_written, 5);
+    }
+}

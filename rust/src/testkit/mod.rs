@@ -1,0 +1,164 @@
+//! Property-based testing mini-framework (proptest is unavailable offline;
+//! DESIGN.md §1).
+//!
+//! ```no_run
+//! use picbnn::testkit::{forall, prop_assert};
+//! forall(100, 42, |g| {
+//!     let n = g.usize_in(1, 64);
+//!     let v = g.vec_i32(n, -5, 5);
+//!     let sum: i32 = v.iter().sum();
+//!     prop_assert(sum.abs() <= 5 * n as i32, format!("sum {sum}"))
+//! });
+//! ```
+//!
+//! On failure, the failing case index and seed are reported so the case can
+//! be replayed deterministically with [`replay`].
+
+use crate::util::rng::Rng;
+
+/// Input generator handed to each property invocation.
+pub struct Gen {
+    rng: Rng,
+    /// Human-readable log of drawn values for failure reports.
+    log: Vec<String>,
+}
+
+impl Gen {
+    fn new(seed: u64, case: u64) -> Self {
+        Gen {
+            rng: Rng::new(seed, case.wrapping_add(1)),
+            log: Vec::new(),
+        }
+    }
+
+    pub fn usize_in(&mut self, lo: usize, hi: usize) -> usize {
+        let v = self.rng.range_u64(lo as u64, hi as u64) as usize;
+        self.log.push(format!("usize {v}"));
+        v
+    }
+
+    pub fn i64_in(&mut self, lo: i64, hi: i64) -> i64 {
+        let span = (hi - lo) as u64;
+        let v = lo + self.rng.below(span + 1) as i64;
+        self.log.push(format!("i64 {v}"));
+        v
+    }
+
+    pub fn f64_in(&mut self, lo: f64, hi: f64) -> f64 {
+        let v = self.rng.range_f64(lo, hi);
+        self.log.push(format!("f64 {v}"));
+        v
+    }
+
+    pub fn bool(&mut self) -> bool {
+        let v = self.rng.chance(0.5);
+        self.log.push(format!("bool {v}"));
+        v
+    }
+
+    pub fn vec_i32(&mut self, len: usize, lo: i32, hi: i32) -> Vec<i32> {
+        let v: Vec<i32> = (0..len)
+            .map(|_| self.i64_in(lo as i64, hi as i64) as i32)
+            .collect();
+        v
+    }
+
+    /// A ±1 vector of the given length.
+    pub fn pm1_vec(&mut self, len: usize) -> Vec<i8> {
+        (0..len)
+            .map(|_| if self.rng.chance(0.5) { 1 } else { -1 })
+            .collect()
+    }
+
+    /// Raw access for custom draws.
+    pub fn rng(&mut self) -> &mut Rng {
+        &mut self.rng
+    }
+}
+
+/// Property outcome: Err carries the failure message.
+pub type PropResult = Result<(), String>;
+
+/// Assertion helper for property bodies.
+pub fn prop_assert(cond: bool, msg: impl Into<String>) -> PropResult {
+    if cond {
+        Ok(())
+    } else {
+        Err(msg.into())
+    }
+}
+
+/// Run `prop` over `cases` random inputs; panics (with seed + case index +
+/// draw log) on the first failure.
+pub fn forall<F>(cases: u64, seed: u64, prop: F)
+where
+    F: Fn(&mut Gen) -> PropResult,
+{
+    for case in 0..cases {
+        let mut g = Gen::new(seed, case);
+        if let Err(msg) = prop(&mut g) {
+            panic!(
+                "property failed at case {case} (seed {seed}): {msg}\n  draws: [{}]\n  replay with testkit::replay(seed={seed}, case={case}, prop)",
+                g.log.join(", ")
+            );
+        }
+    }
+}
+
+/// Re-run a single failing case deterministically.
+pub fn replay<F>(seed: u64, case: u64, prop: F) -> PropResult
+where
+    F: Fn(&mut Gen) -> PropResult,
+{
+    let mut g = Gen::new(seed, case);
+    prop(&mut g)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn passing_property_runs_all_cases() {
+        forall(50, 1, |g| {
+            let a = g.i64_in(-100, 100);
+            prop_assert(a >= -100 && a <= 100, "range")
+        });
+    }
+
+    #[test]
+    #[should_panic(expected = "property failed")]
+    fn failing_property_panics_with_case() {
+        forall(50, 2, |g| {
+            let a = g.usize_in(0, 10);
+            prop_assert(a < 10, format!("drew {a}"))
+        });
+    }
+
+    #[test]
+    fn replay_reproduces_draws() {
+        // record draws from case 0, then assert replay sees the same
+        let seen = std::cell::Cell::new(None);
+        forall(8, 3, |g| {
+            let v = g.usize_in(0, 1_000_000);
+            if seen.get().is_none() {
+                seen.set(Some(v));
+            }
+            Ok(())
+        });
+        let first = seen.get().unwrap();
+        replay(3, 0, |g| {
+            prop_assert(g.usize_in(0, 1_000_000) == first, "replay mismatch")
+        })
+        .unwrap();
+    }
+
+    #[test]
+    fn pm1_vec_is_pm1() {
+        forall(20, 4, |g| {
+            let n = g.usize_in(0, 100);
+            let v = g.pm1_vec(n);
+            prop_assert(v.iter().all(|&x| x == 1 || x == -1), "pm1")
+        });
+    }
+}

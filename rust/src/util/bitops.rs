@@ -1,0 +1,489 @@
+//! Packed ±1 bit vectors: the storage/compute format of the BNN fast path.
+//!
+//! Convention (shared with `python/compile/train.py::pack_bits_pm1`):
+//! bit `i` lives in word `i / 64` at position `i % 64`, and a set bit
+//! encodes +1 ("logic '1'"), a clear bit −1 ("logic '0'").
+
+/// Number of u64 words needed for `n` bits.
+#[inline]
+pub const fn words_for(n: usize) -> usize {
+    n.div_ceil(64)
+}
+
+/// A packed ±1 vector of fixed logical length.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct BitVec {
+    words: Vec<u64>,
+    len: usize,
+}
+
+impl BitVec {
+    /// All −1 (all bits clear).
+    pub fn zeros(len: usize) -> Self {
+        BitVec {
+            words: vec![0; words_for(len)],
+            len,
+        }
+    }
+
+    /// All +1 (all payload bits set; tail bits of the last word stay clear).
+    pub fn ones(len: usize) -> Self {
+        let mut v = BitVec {
+            words: vec![!0u64; words_for(len)],
+            len,
+        };
+        v.mask_tail();
+        v
+    }
+
+    /// From ±1 i8 values (+1 -> set).
+    pub fn from_pm1(vals: &[i8]) -> Self {
+        let mut v = BitVec::zeros(vals.len());
+        for (i, &x) in vals.iter().enumerate() {
+            if x > 0 {
+                v.set(i, true);
+            }
+        }
+        v
+    }
+
+    /// From raw packed words (validates tail bits are clear).
+    pub fn from_words(words: Vec<u64>, len: usize) -> Self {
+        assert_eq!(words.len(), words_for(len));
+        let mut v = BitVec { words, len };
+        v.mask_tail();
+        v
+    }
+
+    #[inline]
+    pub fn len(&self) -> usize {
+        self.len
+    }
+
+    #[inline]
+    pub fn is_empty(&self) -> bool {
+        self.len == 0
+    }
+
+    #[inline]
+    pub fn words(&self) -> &[u64] {
+        &self.words
+    }
+
+    #[inline]
+    pub fn get(&self, i: usize) -> bool {
+        debug_assert!(i < self.len);
+        (self.words[i / 64] >> (i % 64)) & 1 == 1
+    }
+
+    /// ±1 view of bit `i`.
+    #[inline]
+    pub fn pm1(&self, i: usize) -> i32 {
+        if self.get(i) {
+            1
+        } else {
+            -1
+        }
+    }
+
+    #[inline]
+    pub fn set(&mut self, i: usize, v: bool) {
+        debug_assert!(i < self.len);
+        let w = &mut self.words[i / 64];
+        if v {
+            *w |= 1 << (i % 64);
+        } else {
+            *w &= !(1 << (i % 64));
+        }
+    }
+
+    /// Flip bit `i`.
+    #[inline]
+    pub fn flip(&mut self, i: usize) {
+        self.words[i / 64] ^= 1 << (i % 64);
+    }
+
+    /// Count of set bits (+1 entries).
+    pub fn count_ones(&self) -> u32 {
+        self.words.iter().map(|w| w.count_ones()).sum()
+    }
+
+    /// Hamming distance to another vector of the same length.
+    ///
+    /// This is the packed-XNOR hot path: HD = popcount(a XOR b).
+    #[inline]
+    pub fn hamming(&self, other: &BitVec) -> u32 {
+        debug_assert_eq!(self.len, other.len);
+        hamming_words(&self.words, &other.words)
+    }
+
+    /// ±1 dot product: n − 2·HD.
+    #[inline]
+    pub fn dot_pm1(&self, other: &BitVec) -> i32 {
+        self.len as i32 - 2 * self.hamming(other) as i32
+    }
+
+    /// Slice of bits [lo, hi) as a new BitVec (used for row segmentation).
+    /// Word-level shift-copy: O(words), not O(bits).
+    pub fn slice(&self, lo: usize, hi: usize) -> BitVec {
+        assert!(lo <= hi && hi <= self.len);
+        let len = hi - lo;
+        let mut out = BitVec::zeros(len);
+        copy_bits(&self.words, lo, len, &mut out.words, 0);
+        out.mask_tail();
+        out
+    }
+
+    /// Overwrite bits [dst_lo, dst_lo+len) of `self` with bits
+    /// [src_lo, src_lo+len) of `src` (word-level).
+    pub fn write_range(&mut self, dst_lo: usize, src: &BitVec, src_lo: usize, len: usize) {
+        assert!(src_lo + len <= src.len && dst_lo + len <= self.len);
+        copy_bits(&src.words, src_lo, len, &mut self.words, dst_lo);
+        self.mask_tail();
+    }
+
+    fn mask_tail(&mut self) {
+        let tail = self.len % 64;
+        if tail != 0 {
+            if let Some(last) = self.words.last_mut() {
+                *last &= (1u64 << tail) - 1;
+            }
+        }
+    }
+}
+
+/// Copy `len` bits from `src` starting at bit `src_lo` into `dst` starting
+/// at bit `dst_lo`, using word-level shifts (O(len/64), not O(len)).
+/// Bits of `dst` outside the target range are preserved.
+pub fn copy_bits(src: &[u64], src_lo: usize, len: usize, dst: &mut [u64], dst_lo: usize) {
+    if len == 0 {
+        return;
+    }
+    // read bit i (relative) from src
+    let read = |i: usize| -> u64 {
+        let bit = src_lo + i;
+        (src[bit / 64] >> (bit % 64)) & 1
+    };
+    // fast path: both word-aligned
+    if src_lo % 64 == 0 && dst_lo % 64 == 0 {
+        let full = len / 64;
+        let sw = src_lo / 64;
+        let dw = dst_lo / 64;
+        dst[dw..dw + full].copy_from_slice(&src[sw..sw + full]);
+        let tail = len % 64;
+        if tail != 0 {
+            let mask = (1u64 << tail) - 1;
+            dst[dw + full] = (dst[dw + full] & !mask) | (src[sw + full] & mask);
+        }
+        return;
+    }
+    // general path: gather 64-bit windows with a double-word shift
+    let shift = src_lo % 64;
+    let sbase = src_lo / 64;
+    let gather = |widx: usize| -> u64 {
+        // the 64 source bits starting at src_lo + widx*64
+        let lo = src[sbase + widx] >> shift;
+        let hi_idx = sbase + widx + 1;
+        let hi = if shift == 0 || hi_idx >= src.len() {
+            0
+        } else {
+            src[hi_idx] << (64 - shift)
+        };
+        lo | hi
+    };
+    let mut written = 0usize;
+    while written < len {
+        let n = (len - written).min(64);
+        let chunk = if written / 64 * 64 == written && n == 64 && src_lo + written + 64 <= src.len() * 64
+        {
+            gather(written / 64)
+        } else {
+            // boundary chunk: assemble bit-by-bit (at most 2 per call)
+            let mut w = 0u64;
+            for b in 0..n {
+                w |= read(written + b) << b;
+            }
+            w
+        };
+        // scatter chunk into dst at dst_lo + written
+        let pos = dst_lo + written;
+        let dwi = pos / 64;
+        let doff = pos % 64;
+        let mask = if n == 64 { !0u64 } else { (1u64 << n) - 1 };
+        dst[dwi] = (dst[dwi] & !(mask << doff)) | ((chunk & mask) << doff);
+        let spill = (doff + n).saturating_sub(64);
+        if spill > 0 {
+            let smask = (1u64 << spill) - 1;
+            dst[dwi + 1] =
+                (dst[dwi + 1] & !smask) | ((chunk >> (n - spill)) & smask);
+        }
+        written += n;
+    }
+}
+
+/// Hamming distance between equal-length word slices.
+#[inline]
+pub fn hamming_words(a: &[u64], b: &[u64]) -> u32 {
+    debug_assert_eq!(a.len(), b.len());
+    let mut acc = 0u32;
+    for (x, y) in a.iter().zip(b) {
+        acc += (x ^ y).count_ones();
+    }
+    acc
+}
+
+/// A dense row-major matrix of packed ±1 rows (e.g. a binary weight matrix:
+/// `rows` neurons × `cols` inputs), rows padded to whole words.
+#[derive(Clone, Debug)]
+pub struct BitMatrix {
+    data: Vec<u64>,
+    rows: usize,
+    cols: usize,
+    stride: usize, // words per row
+}
+
+impl BitMatrix {
+    pub fn zeros(rows: usize, cols: usize) -> Self {
+        let stride = words_for(cols);
+        BitMatrix {
+            data: vec![0; rows * stride],
+            rows,
+            cols,
+            stride,
+        }
+    }
+
+    /// Assemble from per-row BitVecs (all of length `cols`).
+    pub fn from_rows(rows: &[BitVec]) -> Self {
+        assert!(!rows.is_empty());
+        let cols = rows[0].len();
+        let mut m = BitMatrix::zeros(rows.len(), cols);
+        for (r, row) in rows.iter().enumerate() {
+            assert_eq!(row.len(), cols);
+            m.row_words_mut(r).copy_from_slice(row.words());
+        }
+        m
+    }
+
+    /// From raw packed words laid out row-major with this stride.
+    pub fn from_words(data: Vec<u64>, rows: usize, cols: usize) -> Self {
+        let stride = words_for(cols);
+        assert_eq!(data.len(), rows * stride);
+        BitMatrix {
+            data,
+            rows,
+            cols,
+            stride,
+        }
+    }
+
+    #[inline]
+    pub fn rows(&self) -> usize {
+        self.rows
+    }
+
+    #[inline]
+    pub fn cols(&self) -> usize {
+        self.cols
+    }
+
+    #[inline]
+    pub fn row_words(&self, r: usize) -> &[u64] {
+        &self.data[r * self.stride..(r + 1) * self.stride]
+    }
+
+    #[inline]
+    pub fn row_words_mut(&mut self, r: usize) -> &mut [u64] {
+        &mut self.data[r * self.stride..(r + 1) * self.stride]
+    }
+
+    pub fn row(&self, r: usize) -> BitVec {
+        BitVec::from_words(self.row_words(r).to_vec(), self.cols)
+    }
+
+    #[inline]
+    pub fn get(&self, r: usize, c: usize) -> bool {
+        (self.row_words(r)[c / 64] >> (c % 64)) & 1 == 1
+    }
+
+    pub fn set(&mut self, r: usize, c: usize, v: bool) {
+        let stride = self.stride;
+        let w = &mut self.data[r * stride + c / 64];
+        if v {
+            *w |= 1 << (c % 64);
+        } else {
+            *w &= !(1 << (c % 64));
+        }
+    }
+
+    /// HD between `query` and every row; appends into `out`.
+    pub fn hamming_all(&self, query: &BitVec, out: &mut Vec<u32>) {
+        debug_assert_eq!(query.len(), self.cols);
+        out.clear();
+        out.reserve(self.rows);
+        for r in 0..self.rows {
+            out.push(hamming_words(self.row_words(r), query.words()));
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Rng;
+
+    #[test]
+    fn words_for_boundaries() {
+        assert_eq!(words_for(0), 0);
+        assert_eq!(words_for(1), 1);
+        assert_eq!(words_for(64), 1);
+        assert_eq!(words_for(65), 2);
+        assert_eq!(words_for(784), 13);
+    }
+
+    #[test]
+    fn set_get_roundtrip() {
+        let mut v = BitVec::zeros(130);
+        v.set(0, true);
+        v.set(63, true);
+        v.set(64, true);
+        v.set(129, true);
+        for i in 0..130 {
+            assert_eq!(v.get(i), matches!(i, 0 | 63 | 64 | 129), "{i}");
+        }
+        assert_eq!(v.count_ones(), 4);
+    }
+
+    #[test]
+    fn ones_respects_tail() {
+        let v = BitVec::ones(70);
+        assert_eq!(v.count_ones(), 70);
+        assert_eq!(v.words()[1] >> 6, 0);
+    }
+
+    #[test]
+    fn hamming_matches_naive() {
+        let mut rng = Rng::new(1, 1);
+        for len in [1usize, 63, 64, 65, 784, 1024] {
+            let mut a = BitVec::zeros(len);
+            let mut b = BitVec::zeros(len);
+            for i in 0..len {
+                a.set(i, rng.chance(0.5));
+                b.set(i, rng.chance(0.5));
+            }
+            let naive = (0..len).filter(|&i| a.get(i) != b.get(i)).count() as u32;
+            assert_eq!(a.hamming(&b), naive, "len {len}");
+        }
+    }
+
+    #[test]
+    fn dot_pm1_identity() {
+        let v = BitVec::from_pm1(&[1, -1, 1, 1, -1]);
+        assert_eq!(v.dot_pm1(&v), 5);
+        let w = BitVec::from_pm1(&[-1, 1, -1, -1, 1]);
+        assert_eq!(v.dot_pm1(&w), -5);
+    }
+
+    #[test]
+    fn slice_extracts_bits() {
+        let v = BitVec::from_pm1(&[1, -1, 1, 1, -1, 1, -1, -1]);
+        let s = v.slice(2, 6);
+        assert_eq!(s.len(), 4);
+        assert_eq!(
+            (0..4).map(|i| s.pm1(i)).collect::<Vec<_>>(),
+            vec![1, 1, -1, 1]
+        );
+    }
+
+    #[test]
+    fn copy_bits_matches_naive_reference() {
+        let mut rng = Rng::new(17, 3);
+        for _ in 0..300 {
+            let src_bits = rng.range_u64(1, 300) as usize;
+            let dst_bits = rng.range_u64(1, 300) as usize;
+            let mut src = BitVec::zeros(src_bits);
+            let mut dst = BitVec::zeros(dst_bits);
+            for i in 0..src_bits {
+                src.set(i, rng.chance(0.5));
+            }
+            for i in 0..dst_bits {
+                dst.set(i, rng.chance(0.5));
+            }
+            let max_len = src_bits.min(dst_bits);
+            let len = rng.range_u64(0, max_len as u64) as usize;
+            let src_lo = rng.range_u64(0, (src_bits - len) as u64) as usize;
+            let dst_lo = rng.range_u64(0, (dst_bits - len) as u64) as usize;
+            // naive reference
+            let mut want = dst.clone();
+            for i in 0..len {
+                want.set(dst_lo + i, src.get(src_lo + i));
+            }
+            let mut got = dst.clone();
+            got.write_range(dst_lo, &src, src_lo, len);
+            assert_eq!(
+                got, want,
+                "src_bits={src_bits} dst_bits={dst_bits} len={len} src_lo={src_lo} dst_lo={dst_lo}"
+            );
+        }
+    }
+
+    #[test]
+    fn slice_matches_naive_on_random_ranges() {
+        let mut rng = Rng::new(23, 5);
+        for _ in 0..200 {
+            let bits = rng.range_u64(1, 3000) as usize;
+            let mut v = BitVec::zeros(bits);
+            for i in 0..bits {
+                v.set(i, rng.chance(0.5));
+            }
+            let hi = rng.range_u64(0, bits as u64) as usize;
+            let lo = rng.range_u64(0, hi as u64) as usize;
+            let s = v.slice(lo, hi);
+            for i in 0..(hi - lo) {
+                assert_eq!(s.get(i), v.get(lo + i), "bits={bits} lo={lo} hi={hi} i={i}");
+            }
+            assert_eq!(s.count_ones(), (lo..hi).filter(|&i| v.get(i)).count() as u32);
+        }
+    }
+
+    #[test]
+    fn matrix_rows_roundtrip() {
+        let rows: Vec<BitVec> = (0..5)
+            .map(|r| {
+                let mut v = BitVec::zeros(100);
+                v.set(r * 7, true);
+                v
+            })
+            .collect();
+        let m = BitMatrix::from_rows(&rows);
+        assert_eq!(m.rows(), 5);
+        assert_eq!(m.cols(), 100);
+        for (r, row) in rows.iter().enumerate() {
+            assert_eq!(&m.row(r), row);
+        }
+    }
+
+    #[test]
+    fn hamming_all_matches_per_row() {
+        let mut rng = Rng::new(2, 2);
+        let rows: Vec<BitVec> = (0..8)
+            .map(|_| {
+                let mut v = BitVec::zeros(257);
+                for i in 0..257 {
+                    v.set(i, rng.chance(0.5));
+                }
+                v
+            })
+            .collect();
+        let m = BitMatrix::from_rows(&rows);
+        let mut q = BitVec::zeros(257);
+        for i in 0..257 {
+            q.set(i, rng.chance(0.5));
+        }
+        let mut out = Vec::new();
+        m.hamming_all(&q, &mut out);
+        for (r, row) in rows.iter().enumerate() {
+            assert_eq!(out[r], row.hamming(&q));
+        }
+    }
+}

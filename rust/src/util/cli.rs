@@ -1,0 +1,115 @@
+//! Minimal CLI argument parser (the crates.io `clap` family is unavailable
+//! in this offline environment; see DESIGN.md §1).
+//!
+//! Supports `--flag`, `--key value`, `--key=value`, and positional args.
+
+use std::collections::BTreeMap;
+
+#[derive(Clone, Debug, Default)]
+pub struct Args {
+    opts: BTreeMap<String, String>,
+    flags: Vec<String>,
+    positional: Vec<String>,
+}
+
+impl Args {
+    /// Parse from an explicit iterator (tests) — `flag_names` lists options
+    /// that take no value.
+    pub fn parse_from<I: IntoIterator<Item = String>>(iter: I, flag_names: &[&str]) -> Args {
+        let mut out = Args::default();
+        let mut it = iter.into_iter().peekable();
+        while let Some(arg) = it.next() {
+            if let Some(stripped) = arg.strip_prefix("--") {
+                if let Some((k, v)) = stripped.split_once('=') {
+                    out.opts.insert(k.to_string(), v.to_string());
+                } else if flag_names.contains(&stripped) {
+                    out.flags.push(stripped.to_string());
+                } else if let Some(next) = it.peek() {
+                    if next.starts_with("--") {
+                        out.flags.push(stripped.to_string());
+                    } else {
+                        out.opts.insert(stripped.to_string(), it.next().unwrap());
+                    }
+                } else {
+                    out.flags.push(stripped.to_string());
+                }
+            } else {
+                out.positional.push(arg);
+            }
+        }
+        out
+    }
+
+    /// Parse from std::env::args (skipping argv[0]).
+    pub fn parse(flag_names: &[&str]) -> Args {
+        Args::parse_from(std::env::args().skip(1), flag_names)
+    }
+
+    pub fn flag(&self, name: &str) -> bool {
+        self.flags.iter().any(|f| f == name)
+    }
+
+    pub fn get(&self, name: &str) -> Option<&str> {
+        self.opts.get(name).map(|s| s.as_str())
+    }
+
+    pub fn get_or<'a>(&'a self, name: &str, default: &'a str) -> &'a str {
+        self.get(name).unwrap_or(default)
+    }
+
+    pub fn get_parse<T: std::str::FromStr>(&self, name: &str, default: T) -> T {
+        match self.get(name) {
+            Some(s) => s.parse().unwrap_or(default),
+            None => default,
+        }
+    }
+
+    pub fn positional(&self) -> &[String] {
+        &self.positional
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn args(v: &[&str], flags: &[&str]) -> Args {
+        Args::parse_from(v.iter().map(|s| s.to_string()), flags)
+    }
+
+    #[test]
+    fn key_value_pairs() {
+        let a = args(&["--model", "mnist", "--batch=32"], &[]);
+        assert_eq!(a.get("model"), Some("mnist"));
+        assert_eq!(a.get_parse("batch", 0usize), 32);
+    }
+
+    #[test]
+    fn flags_and_positional() {
+        let a = args(&["run", "--verbose", "--n", "5", "extra"], &["verbose"]);
+        assert!(a.flag("verbose"));
+        assert_eq!(a.get_parse("n", 0u32), 5);
+        assert_eq!(a.positional(), &["run".to_string(), "extra".to_string()]);
+    }
+
+    #[test]
+    fn trailing_flag() {
+        let a = args(&["--quick"], &[]);
+        assert!(a.flag("quick"));
+    }
+
+    #[test]
+    fn flag_before_another_option() {
+        let a = args(&["--quick", "--n", "3"], &[]);
+        assert!(a.flag("quick"));
+        assert_eq!(a.get_parse("n", 0u32), 3);
+    }
+
+    #[test]
+    fn defaults() {
+        let a = args(&[], &[]);
+        assert_eq!(a.get_or("model", "mnist"), "mnist");
+        assert_eq!(a.get_parse("batch", 64usize), 64);
+        assert!(!a.flag("verbose"));
+    }
+}

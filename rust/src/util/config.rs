@@ -1,0 +1,305 @@
+//! Minimal TOML-subset configuration parser + typed experiment config.
+//!
+//! Supports the subset our configs use: `[section]` headers, `key = value`
+//! with string/int/float/bool/array-of-scalars values, `#` comments.
+//! (serde/toml are unavailable offline — DESIGN.md §1.)
+
+use std::collections::BTreeMap;
+
+#[derive(Clone, Debug, PartialEq)]
+pub enum Value {
+    Str(String),
+    Int(i64),
+    Float(f64),
+    Bool(bool),
+    Arr(Vec<Value>),
+}
+
+impl Value {
+    pub fn as_str(&self) -> Option<&str> {
+        match self {
+            Value::Str(s) => Some(s),
+            _ => None,
+        }
+    }
+
+    pub fn as_i64(&self) -> Option<i64> {
+        match self {
+            Value::Int(v) => Some(*v),
+            _ => None,
+        }
+    }
+
+    pub fn as_f64(&self) -> Option<f64> {
+        match self {
+            Value::Float(v) => Some(*v),
+            Value::Int(v) => Some(*v as f64),
+            _ => None,
+        }
+    }
+
+    pub fn as_bool(&self) -> Option<bool> {
+        match self {
+            Value::Bool(b) => Some(*b),
+            _ => None,
+        }
+    }
+}
+
+/// Parsed config: section -> key -> value ("" = top-level section).
+#[derive(Clone, Debug, Default)]
+pub struct Config {
+    sections: BTreeMap<String, BTreeMap<String, Value>>,
+}
+
+impl Config {
+    pub fn parse(text: &str) -> Result<Config, String> {
+        let mut cfg = Config::default();
+        let mut section = String::new();
+        for (lineno, raw) in text.lines().enumerate() {
+            let line = strip_comment(raw).trim().to_string();
+            if line.is_empty() {
+                continue;
+            }
+            if let Some(name) = line.strip_prefix('[').and_then(|s| s.strip_suffix(']')) {
+                section = name.trim().to_string();
+                cfg.sections.entry(section.clone()).or_default();
+                continue;
+            }
+            let (key, val) = line
+                .split_once('=')
+                .ok_or_else(|| format!("line {}: expected key = value", lineno + 1))?;
+            let value = parse_value(val.trim())
+                .map_err(|e| format!("line {}: {e}", lineno + 1))?;
+            cfg.sections
+                .entry(section.clone())
+                .or_default()
+                .insert(key.trim().to_string(), value);
+        }
+        Ok(cfg)
+    }
+
+    pub fn load(path: impl AsRef<std::path::Path>) -> Result<Config, String> {
+        let text = std::fs::read_to_string(path.as_ref())
+            .map_err(|e| format!("read {}: {e}", path.as_ref().display()))?;
+        Config::parse(&text)
+    }
+
+    pub fn get(&self, section: &str, key: &str) -> Option<&Value> {
+        self.sections.get(section)?.get(key)
+    }
+
+    pub fn str_or(&self, section: &str, key: &str, default: &str) -> String {
+        self.get(section, key)
+            .and_then(Value::as_str)
+            .unwrap_or(default)
+            .to_string()
+    }
+
+    pub fn i64_or(&self, section: &str, key: &str, default: i64) -> i64 {
+        self.get(section, key).and_then(Value::as_i64).unwrap_or(default)
+    }
+
+    pub fn f64_or(&self, section: &str, key: &str, default: f64) -> f64 {
+        self.get(section, key).and_then(Value::as_f64).unwrap_or(default)
+    }
+
+    pub fn bool_or(&self, section: &str, key: &str, default: bool) -> bool {
+        self.get(section, key).and_then(Value::as_bool).unwrap_or(default)
+    }
+
+    pub fn sections(&self) -> impl Iterator<Item = &str> {
+        self.sections.keys().map(String::as_str)
+    }
+}
+
+fn strip_comment(line: &str) -> &str {
+    // '#' starts a comment unless inside a string
+    let mut in_str = false;
+    for (i, c) in line.char_indices() {
+        match c {
+            '"' => in_str = !in_str,
+            '#' if !in_str => return &line[..i],
+            _ => {}
+        }
+    }
+    line
+}
+
+fn parse_value(s: &str) -> Result<Value, String> {
+    if s.is_empty() {
+        return Err("empty value".into());
+    }
+    if let Some(inner) = s.strip_prefix('"').and_then(|t| t.strip_suffix('"')) {
+        return Ok(Value::Str(inner.to_string()));
+    }
+    if s == "true" {
+        return Ok(Value::Bool(true));
+    }
+    if s == "false" {
+        return Ok(Value::Bool(false));
+    }
+    if let Some(inner) = s.strip_prefix('[').and_then(|t| t.strip_suffix(']')) {
+        let inner = inner.trim();
+        if inner.is_empty() {
+            return Ok(Value::Arr(Vec::new()));
+        }
+        return inner
+            .split(',')
+            .map(|item| parse_value(item.trim()))
+            .collect::<Result<Vec<_>, _>>()
+            .map(Value::Arr);
+    }
+    if let Ok(v) = s.parse::<i64>() {
+        return Ok(Value::Int(v));
+    }
+    if let Ok(v) = s.parse::<f64>() {
+        return Ok(Value::Float(v));
+    }
+    Err(format!("cannot parse value: {s:?}"))
+}
+
+// ----------------------------------------------------------------------
+// Typed experiment configuration (the launcher's schema).
+// ----------------------------------------------------------------------
+
+/// Full run configuration for the launcher (`picbnn run --config …`).
+#[derive(Clone, Debug)]
+pub struct RunConfig {
+    pub model: String,
+    pub limit: usize,
+    pub batch: usize,
+    pub threads: usize,
+    pub executions: Option<usize>,
+    pub noise: String,   // "analog" | "nominal"
+    pub seed: u64,
+    pub temp_c: f64,
+    pub vdd: f64,
+    pub backend: String, // "cam" | "pjrt" | "both"
+    pub report_energy: bool,
+}
+
+impl Default for RunConfig {
+    fn default() -> Self {
+        RunConfig {
+            model: "mnist".into(),
+            limit: usize::MAX,
+            batch: 256,
+            threads: 1,
+            executions: None,
+            noise: "analog".into(),
+            seed: 0xB11A,
+            temp_c: 25.0,
+            vdd: 1.2,
+            backend: "cam".into(),
+            report_energy: true,
+        }
+    }
+}
+
+impl RunConfig {
+    pub fn from_config(cfg: &Config) -> Result<RunConfig, String> {
+        let d = RunConfig::default();
+        let noise = cfg.str_or("run", "noise", &d.noise);
+        if !matches!(noise.as_str(), "analog" | "nominal") {
+            return Err(format!("run.noise must be analog|nominal, got {noise:?}"));
+        }
+        let backend = cfg.str_or("run", "backend", &d.backend);
+        if !matches!(backend.as_str(), "cam" | "pjrt" | "both") {
+            return Err(format!("run.backend must be cam|pjrt|both, got {backend:?}"));
+        }
+        Ok(RunConfig {
+            model: cfg.str_or("run", "model", &d.model),
+            limit: cfg.i64_or("run", "limit", i64::MAX) as usize,
+            batch: cfg.i64_or("run", "batch", d.batch as i64) as usize,
+            threads: cfg.i64_or("run", "threads", d.threads as i64) as usize,
+            executions: cfg
+                .get("run", "executions")
+                .and_then(Value::as_i64)
+                .map(|v| v as usize),
+            noise,
+            seed: cfg.i64_or("run", "seed", d.seed as i64) as u64,
+            temp_c: cfg.f64_or("pvt", "temp_c", d.temp_c),
+            vdd: cfg.f64_or("pvt", "vdd", d.vdd),
+            backend,
+            report_energy: cfg.bool_or("run", "report_energy", d.report_energy),
+        })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    const SAMPLE: &str = r#"
+# experiment: mnist full run
+[run]
+model = "mnist"
+limit = 1000
+batch = 128          # retune-batch size
+executions = 33
+noise = "analog"
+threads = 4
+report_energy = true
+
+[pvt]
+temp_c = 85.0
+vdd = 1.14
+"#;
+
+    #[test]
+    fn parses_sections_and_types() {
+        let cfg = Config::parse(SAMPLE).unwrap();
+        assert_eq!(cfg.str_or("run", "model", "x"), "mnist");
+        assert_eq!(cfg.i64_or("run", "limit", 0), 1000);
+        assert_eq!(cfg.f64_or("pvt", "temp_c", 0.0), 85.0);
+        assert!(cfg.bool_or("run", "report_energy", false));
+        assert_eq!(cfg.get("run", "nope"), None);
+    }
+
+    #[test]
+    fn comments_and_strings() {
+        let cfg = Config::parse("name = \"a # not comment\" # real comment").unwrap();
+        assert_eq!(cfg.str_or("", "name", ""), "a # not comment");
+    }
+
+    #[test]
+    fn arrays() {
+        let cfg = Config::parse("xs = [1, 2, 3]\nys = []").unwrap();
+        let xs = match cfg.get("", "xs") {
+            Some(Value::Arr(v)) => v.clone(),
+            other => panic!("{other:?}"),
+        };
+        assert_eq!(xs, vec![Value::Int(1), Value::Int(2), Value::Int(3)]);
+    }
+
+    #[test]
+    fn rejects_garbage() {
+        assert!(Config::parse("just a line").is_err());
+        assert!(Config::parse("k = ").is_err());
+    }
+
+    #[test]
+    fn run_config_roundtrip_and_validation() {
+        let cfg = Config::parse(SAMPLE).unwrap();
+        let rc = RunConfig::from_config(&cfg).unwrap();
+        assert_eq!(rc.model, "mnist");
+        assert_eq!(rc.executions, Some(33));
+        assert_eq!(rc.threads, 4);
+        assert_eq!(rc.temp_c, 85.0);
+        assert_eq!(rc.vdd, 1.14);
+
+        let bad = Config::parse("[run]\nnoise = \"loud\"").unwrap();
+        assert!(RunConfig::from_config(&bad).is_err());
+        let bad2 = Config::parse("[run]\nbackend = \"gpu\"").unwrap();
+        assert!(RunConfig::from_config(&bad2).is_err());
+    }
+
+    #[test]
+    fn defaults_when_missing() {
+        let rc = RunConfig::from_config(&Config::parse("").unwrap()).unwrap();
+        assert_eq!(rc.model, "mnist");
+        assert_eq!(rc.batch, 256);
+        assert_eq!(rc.noise, "analog");
+    }
+}

@@ -1,0 +1,28 @@
+//! Foundation substrates: PRNG, packed bit tensors, statistics, CLI/JSON
+//! parsing, and a scoped thread pool.  Hand-rolled because the offline
+//! crate set lacks rand/clap/serde/tokio (DESIGN.md §1).
+
+pub mod bitops;
+pub mod config;
+pub mod cli;
+pub mod json;
+pub mod pool;
+pub mod rng;
+pub mod stats;
+
+/// Wall-clock timer for coarse phase timing.
+pub struct Timer(std::time::Instant);
+
+impl Timer {
+    pub fn start() -> Self {
+        Timer(std::time::Instant::now())
+    }
+
+    pub fn elapsed_s(&self) -> f64 {
+        self.0.elapsed().as_secs_f64()
+    }
+
+    pub fn elapsed_ms(&self) -> f64 {
+        self.elapsed_s() * 1e3
+    }
+}

@@ -1,0 +1,136 @@
+//! A small scoped thread pool (tokio is unavailable offline; the inference
+//! batch paths only need fork-join data parallelism, not async I/O).
+
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::Arc;
+
+/// Number of worker threads to use by default.
+pub fn default_threads() -> usize {
+    std::thread::available_parallelism()
+        .map(|n| n.get())
+        .unwrap_or(4)
+        .min(16)
+}
+
+/// Run `f(chunk_index, item_index_range)` across `n_items` split into
+/// per-thread chunks, using scoped threads. `f` must be Sync.
+pub fn parallel_chunks<F>(n_items: usize, n_threads: usize, f: F)
+where
+    F: Fn(usize, std::ops::Range<usize>) + Sync,
+{
+    if n_items == 0 {
+        return;
+    }
+    let n_threads = n_threads.max(1).min(n_items);
+    let chunk = n_items.div_ceil(n_threads);
+    std::thread::scope(|s| {
+        for t in 0..n_threads {
+            let lo = t * chunk;
+            let hi = ((t + 1) * chunk).min(n_items);
+            if lo >= hi {
+                break;
+            }
+            let f = &f;
+            s.spawn(move || f(t, lo..hi));
+        }
+    });
+}
+
+/// Map each index in [0, n) to a value, in parallel, preserving order.
+pub fn parallel_map<T, F>(n: usize, n_threads: usize, f: F) -> Vec<T>
+where
+    T: Send + Default + Clone,
+    F: Fn(usize) -> T + Sync,
+{
+    let mut out = vec![T::default(); n];
+    let slots: Vec<std::sync::Mutex<&mut [T]>> = {
+        // split the output into per-thread windows up front
+        let n_threads = n_threads.max(1).min(n.max(1));
+        let chunk = n.div_ceil(n_threads);
+        out.chunks_mut(chunk.max(1))
+            .map(std::sync::Mutex::new)
+            .collect()
+    };
+    let chunk = if slots.is_empty() {
+        0
+    } else {
+        n.div_ceil(slots.len())
+    };
+    std::thread::scope(|s| {
+        for (t, slot) in slots.iter().enumerate() {
+            let f = &f;
+            s.spawn(move || {
+                let mut guard = slot.lock().unwrap();
+                for (i, out_slot) in guard.iter_mut().enumerate() {
+                    *out_slot = f(t * chunk + i);
+                }
+            });
+        }
+    });
+    drop(slots);
+    out
+}
+
+/// A shared atomic work queue: threads steal indices until exhausted.
+/// Better than fixed chunks when per-item cost is highly variable.
+pub fn parallel_queue<F>(n_items: usize, n_threads: usize, f: F)
+where
+    F: Fn(usize) + Sync,
+{
+    let next = Arc::new(AtomicUsize::new(0));
+    let n_threads = n_threads.max(1).min(n_items.max(1));
+    std::thread::scope(|s| {
+        for _ in 0..n_threads {
+            let next = Arc::clone(&next);
+            let f = &f;
+            s.spawn(move || loop {
+                let i = next.fetch_add(1, Ordering::Relaxed);
+                if i >= n_items {
+                    break;
+                }
+                f(i);
+            });
+        }
+    });
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::atomic::AtomicU64;
+
+    #[test]
+    fn chunks_cover_all_items() {
+        let sum = AtomicU64::new(0);
+        parallel_chunks(1000, 4, |_, range| {
+            for i in range {
+                sum.fetch_add(i as u64, Ordering::Relaxed);
+            }
+        });
+        assert_eq!(sum.load(Ordering::Relaxed), 999 * 1000 / 2);
+    }
+
+    #[test]
+    fn map_preserves_order() {
+        let v = parallel_map(100, 7, |i| i * i);
+        for (i, &x) in v.iter().enumerate() {
+            assert_eq!(x, i * i);
+        }
+    }
+
+    #[test]
+    fn queue_processes_each_once() {
+        let counts: Vec<AtomicU64> = (0..500).map(|_| AtomicU64::new(0)).collect();
+        parallel_queue(500, 8, |i| {
+            counts[i].fetch_add(1, Ordering::Relaxed);
+        });
+        assert!(counts.iter().all(|c| c.load(Ordering::Relaxed) == 1));
+    }
+
+    #[test]
+    fn empty_and_single() {
+        parallel_chunks(0, 4, |_, _| panic!("no items"));
+        let v = parallel_map(1, 4, |i| i + 1);
+        assert_eq!(v, vec![1]);
+    }
+}

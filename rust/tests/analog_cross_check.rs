@@ -1,0 +1,104 @@
+//! Cross-validation of the rust analog model against the python functional
+//! twin (`python/compile/physics.py`): the nominal closed-form tolerance
+//! and fire decisions must agree on a dense grid.  The python constants are
+//! re-stated here (they are the contract); if either side drifts, this
+//! test and python/tests/test_physics.py catch it.
+
+use picbnn::analog::constants as k;
+use picbnn::analog::{MatchlineModel, Pvt, RowVariation, Voltages};
+
+#[test]
+fn constants_match_python_physics() {
+    // python/compile/physics.py values
+    assert_eq!(k::V_DD, 1.2);
+    assert_eq!(k::V_TH, 0.25);
+    assert_eq!(k::K_G, 8.93e-7);
+    assert_eq!(k::C_ML_256, 12e-15);
+    assert_eq!(k::TAU0, 0.8e-9);
+    assert_eq!(k::VREF_RANGE, (0.6, 1.2));
+    assert_eq!(k::VEVAL_RANGE, (0.3, 1.2));
+    assert_eq!(k::VST_RANGE, (0.6, 1.2));
+}
+
+/// Reference implementation transcribed from python physics.hd_tolerance.
+fn py_hd_tolerance(vref: f64, veval: f64, vst: f64, n_cells: usize) -> f64 {
+    if vref >= 1.2 {
+        return 0.0;
+    }
+    let c_ml = 12e-15 / 256.0 * n_cells as f64;
+    let g = 8.93e-7 * (veval - 0.25f64).max(0.0);
+    let ts = 0.8e-9 * 1.2 / (vst - 0.25f64).max(1e-3);
+    let denom = g * ts;
+    if denom <= 0.0 {
+        return n_cells as f64;
+    }
+    c_ml * (1.2f64 / vref).ln() / denom
+}
+
+#[test]
+fn tolerance_agrees_with_python_on_grid() {
+    for n_cells in [256usize, 512, 1024, 2048] {
+        let model = MatchlineModel::new(n_cells, Pvt::nominal());
+        let mut vref = 0.6;
+        while vref <= 1.19 {
+            let mut veval = 0.3;
+            while veval <= 1.2 {
+                let mut vst = 0.6;
+                while vst <= 1.2 {
+                    let v = Voltages::new(vref, veval, vst);
+                    let rust = model.hd_tolerance(&v);
+                    let py = py_hd_tolerance(vref, veval, vst, n_cells);
+                    let err = (rust - py).abs() / py.max(1e-9);
+                    assert!(
+                        err < 1e-9,
+                        "n={n_cells} v=({vref},{veval},{vst}): {rust} vs {py}"
+                    );
+                    vst += 0.075;
+                }
+                veval += 0.075;
+            }
+            vref += 0.075;
+        }
+    }
+}
+
+#[test]
+fn fire_decisions_agree_with_python_semantics() {
+    // python ref.matchline_fire: fire iff m <= tol
+    let model = MatchlineModel::new(256, Pvt::nominal());
+    let var = RowVariation::nominal();
+    for &(vref, veval, vst) in &[
+        (0.775, 0.6, 1.1),
+        (0.7, 0.45, 1.1),
+        (0.95, 0.525, 1.1),
+        (1.0, 0.475, 0.725),
+    ] {
+        let v = Voltages::new(vref, veval, vst);
+        let tol = py_hd_tolerance(vref, veval, vst, 256);
+        for m in 0..=256u32 {
+            if (m as f64 - tol).abs() < 1e-6 {
+                continue;
+            }
+            assert_eq!(
+                model.fires_nominal(m, &v, &var),
+                (m as f64) <= tol,
+                "m={m} tol={tol} v={v:?}"
+            );
+        }
+    }
+}
+
+#[test]
+fn schedule_constants_match() {
+    // python physics.HD_SCHEDULE = 0..=64 step 2 (33 executions)
+    let sched: Vec<i32> = (0..=64).step_by(2).collect();
+    assert_eq!(sched.len(), 33);
+    // the shipped model artifacts carry the same schedule
+    if let Ok(model) = picbnn::bnn::model::MappedModel::load(
+        picbnn::artifacts_dir().join("mnist_weights.bin"),
+    ) {
+        assert_eq!(model.schedule, sched);
+    } else {
+        eprintln!("skipping artifact schedule check: artifacts not built");
+    }
+}

@@ -1,0 +1,185 @@
+//! End-to-end integration tests over the real artifacts (skipped with a
+//! notice when `make artifacts` hasn't run) and synthetic models.
+
+use picbnn::accel::{evaluate, Pipeline, PipelineOptions};
+use picbnn::baseline::digital_predict;
+use picbnn::bnn::infer::digital_forward;
+use picbnn::bnn::model::MappedModel;
+use picbnn::cam::NoiseMode;
+use picbnn::data::{ModelMeta, TestSet};
+
+fn load(name: &str) -> Option<(MappedModel, TestSet, ModelMeta)> {
+    let dir = picbnn::artifacts_dir();
+    let model = MappedModel::load(dir.join(format!("{name}_weights.bin"))).ok()?;
+    let test = TestSet::load(dir.join(format!("{name}_test.bin"))).ok()?;
+    let meta = ModelMeta::load(dir.join(format!("{name}_meta.json"))).ok()?;
+    Some((model, test, meta))
+}
+
+#[test]
+fn mnist_nominal_cam_matches_python_nominal_eval() {
+    // the rust nominal CAM path must reproduce python's eval_cam votes
+    // (cam_nominal_top1 in the meta) exactly, over the full test set
+    let Some((model, test, meta)) = load("mnist") else {
+        eprintln!("skipping: artifacts not built");
+        return;
+    };
+    let mut pipe = Pipeline::new(
+        &model,
+        PipelineOptions {
+            noise: NoiseMode::Nominal,
+            ..Default::default()
+        },
+    );
+    let mut votes = Vec::new();
+    for chunk in test.images.chunks(512) {
+        votes.extend(pipe.classify_batch(chunk).into_iter().map(|(v, _)| v));
+    }
+    let acc = evaluate(&votes, &test.labels);
+    assert!(
+        (acc.top1 - meta.cam_nominal_top1).abs() < 1e-9,
+        "rust nominal {} vs python nominal {}",
+        acc.top1,
+        meta.cam_nominal_top1
+    );
+}
+
+#[test]
+fn mnist_analog_reaches_paper_regime() {
+    let Some((model, test, meta)) = load("mnist") else {
+        eprintln!("skipping: artifacts not built");
+        return;
+    };
+    let mut pipe = Pipeline::new(&model, PipelineOptions::default());
+    let n = 1000.min(test.len());
+    let mut votes = Vec::new();
+    for chunk in test.images[..n].chunks(256) {
+        votes.extend(pipe.classify_batch(chunk).into_iter().map(|(v, _)| v));
+    }
+    let acc = evaluate(&votes, &test.labels[..n]);
+    // paper: analog CAM reaches the software baseline (95.2%); allow the
+    // simulator a small noise haircut from its own baseline
+    assert!(
+        acc.top1 > meta.cam_nominal_top1 - 0.03,
+        "analog top1 {} too far below nominal {}",
+        acc.top1,
+        meta.cam_nominal_top1
+    );
+}
+
+#[test]
+fn hg_analog_tracks_nominal_with_segmentation_gap() {
+    let Some((model, test, meta)) = load("hg") else {
+        eprintln!("skipping: artifacts not built");
+        return;
+    };
+    let mut pipe = Pipeline::new(&model, PipelineOptions::default());
+    let n = 500.min(test.len());
+    let mut votes = Vec::new();
+    for chunk in test.images[..n].chunks(256) {
+        votes.extend(pipe.classify_batch(chunk).into_iter().map(|(v, _)| v));
+    }
+    let acc = evaluate(&votes, &test.labels[..n]);
+    // paper shape: CAM HG accuracy sits below the software baseline
+    // (93.5% vs 99%) but stays high
+    assert!(acc.top1 > 0.80, "hg analog top1 {}", acc.top1);
+    assert!(
+        acc.top1 < meta.software_top1,
+        "segmentation gap should persist"
+    );
+}
+
+#[test]
+fn digital_baseline_beats_chance_and_bounds_cam() {
+    let Some((model, test, _)) = load("mnist") else {
+        eprintln!("skipping: artifacts not built");
+        return;
+    };
+    let n = 500.min(test.len());
+    let correct = test.images[..n]
+        .iter()
+        .zip(&test.labels[..n])
+        .filter(|(x, &y)| digital_predict(&model, x) == y as usize)
+        .count();
+    let acc = correct as f64 / n as f64;
+    assert!(acc > 0.9, "digital baseline {acc}");
+}
+
+#[test]
+fn prefix_schedule_accuracy_monotone_overall() {
+    // Fig. 5 shape: accuracy with 1 execution << accuracy with 33
+    let Some((model, test, _)) = load("mnist") else {
+        eprintln!("skipping: artifacts not built");
+        return;
+    };
+    let n = 400.min(test.len());
+    let acc_k = |k: usize| {
+        let mut pipe = Pipeline::new(
+            &model,
+            PipelineOptions {
+                noise: NoiseMode::Nominal,
+                schedule_prefix: Some(k),
+                ..Default::default()
+            },
+        );
+        let mut votes = Vec::new();
+        for chunk in test.images[..n].chunks(256) {
+            votes.extend(pipe.classify_batch(chunk).into_iter().map(|(v, _)| v));
+        }
+        evaluate(&votes, &test.labels[..n]).top1
+    };
+    let a1 = acc_k(1);
+    let a9 = acc_k(9);
+    let a33 = acc_k(33);
+    assert!(a33 > a1 + 0.05, "a1={a1} a33={a33}");
+    assert!(a33 >= a9 - 0.01, "a9={a9} a33={a33}");
+}
+
+#[test]
+fn device_throughput_in_paper_order_of_magnitude() {
+    let Some((model, test, _)) = load("mnist") else {
+        eprintln!("skipping: artifacts not built");
+        return;
+    };
+    let mut pipe = Pipeline::new(&model, PipelineOptions::default());
+    let n = 512.min(test.len());
+    for chunk in test.images[..n].chunks(256) {
+        pipe.classify_batch(chunk);
+    }
+    let stats = pipe.take_stats(n as u64);
+    let inf_s = stats.inferences_per_s();
+    // paper: 560 K inf/s; accept the same order of magnitude
+    assert!(
+        (1e5..2e6).contains(&inf_s),
+        "modelled throughput {inf_s} inf/s"
+    );
+    let report = picbnn::energy::report(&stats);
+    assert!(
+        (0.1e-3..5e-3).contains(&report.power_w),
+        "modelled power {} W",
+        report.power_w
+    );
+}
+
+#[test]
+fn nominal_digital_and_cam_forward_agree_on_artifacts() {
+    // bit-exactness on the real mnist model, per image
+    let Some((model, test, _)) = load("mnist") else {
+        eprintln!("skipping: artifacts not built");
+        return;
+    };
+    let mut pipe = Pipeline::new(
+        &model,
+        PipelineOptions {
+            noise: NoiseMode::Nominal,
+            ..Default::default()
+        },
+    );
+    let n = 64.min(test.len());
+    let got = pipe.classify_batch(&test.images[..n]);
+    for (img, (votes, pred)) in test.images[..n].iter().zip(&got) {
+        let (want_votes, want_pred) = digital_forward(&model, img, &model.schedule);
+        assert_eq!(votes, &want_votes);
+        assert_eq!(pred, &want_pred);
+    }
+}

@@ -1,0 +1,180 @@
+//! Cross-module property tests (the testkit mini-framework): coordinator
+//! invariants — mapping/routing/batching/state — over random models.
+
+use picbnn::accel::{Pipeline, PipelineOptions};
+use picbnn::analog::{MatchlineModel, Pvt, Voltages};
+use picbnn::bnn::infer::{digital_forward, sweep_votes};
+use picbnn::bnn::mapping::{expected_mismatches, program_row, segment_query};
+use picbnn::bnn::model::{MappedLayer, MappedModel};
+use picbnn::cam::{CamArray, CamConfig, NoiseMode};
+use picbnn::testkit::{forall, prop_assert, Gen};
+use picbnn::util::bitops::{hamming_words, BitMatrix, BitVec};
+
+/// Draw a random single-segment mapped layer.
+fn gen_layer(g: &mut Gen, n_out: usize, n_in: usize, width: usize) -> MappedLayer {
+    let rows: Vec<BitVec> = (0..n_out)
+        .map(|_| BitVec::from_pm1(&g.pm1_vec(n_in)))
+        .collect();
+    let pads = width - n_in;
+    let q = vec![(0..n_out)
+        .map(|_| g.usize_in(0, pads) as i32)
+        .collect::<Vec<_>>()];
+    MappedLayer {
+        weights: BitMatrix::from_rows(&rows),
+        q,
+        seg_bounds: vec![0, n_in],
+        seg_width: width,
+    }
+}
+
+fn gen_model(g: &mut Gen) -> MappedModel {
+    let n_in = g.usize_in(16, 120);
+    let h = g.usize_in(4, 24);
+    let n_cls = g.usize_in(2, 10);
+    let l1 = gen_layer(g, h, n_in, (n_in + 16).max(64));
+    let l2 = gen_layer(g, n_cls, h, (h + 16).max(64));
+    MappedModel {
+        layers: vec![l1, l2],
+        schedule: (0..=64).step_by(2).collect(),
+    }
+}
+
+#[test]
+fn prop_row_query_mismatch_identity() {
+    // HD(programmed row, segment query) == HD_w + q for every neuron
+    forall(60, 101, |g| {
+        let n_out = g.usize_in(1, 12);
+        let n_in = g.usize_in(8, 100);
+        let layer = gen_layer(g, n_out, n_in, 128);
+        layer.validate().map_err(|e| e)?;
+        let x = BitVec::from_pm1(&g.pm1_vec(layer.n_in()));
+        for j in 0..layer.n_out() {
+            let row = program_row(&layer, 0, j);
+            let q = segment_query(&layer, 0, &x);
+            prop_assert(
+                hamming_words(row.words(), q.words()) == expected_mismatches(&layer, 0, j, &x),
+                format!("neuron {j}"),
+            )?;
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_nominal_pipeline_equals_digital_reference() {
+    // the device (no noise) and the in-memory reference are bit-identical
+    forall(25, 103, |g| {
+        let model = gen_model(g);
+        let mut pipe = Pipeline::new(
+            &model,
+            PipelineOptions {
+                noise: NoiseMode::Nominal,
+                ..Default::default()
+            },
+        );
+        let n_img = g.usize_in(1, 6);
+        let images: Vec<BitVec> = (0..n_img)
+            .map(|_| BitVec::from_pm1(&g.pm1_vec(model.n_in())))
+            .collect();
+        let got = pipe.classify_batch(&images);
+        for (img, (votes, pred)) in images.iter().zip(&got) {
+            let (want_votes, want_pred) = digital_forward(&model, img, &model.schedule);
+            prop_assert(votes == &want_votes, "votes")?;
+            prop_assert(pred == &want_pred, "pred")?;
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_batch_invariance_nominal() {
+    // classifying images in different batch groupings gives identical
+    // results in nominal mode (state is reprogrammed identically)
+    forall(15, 107, |g| {
+        let model = gen_model(g);
+        let images: Vec<BitVec> = (0..8)
+            .map(|_| BitVec::from_pm1(&g.pm1_vec(model.n_in())))
+            .collect();
+        let opts = PipelineOptions {
+            noise: NoiseMode::Nominal,
+            ..Default::default()
+        };
+        let mut one = Pipeline::new(&model, opts);
+        let all = one.classify_batch(&images);
+        let mut two = Pipeline::new(&model, opts);
+        let mut split = Vec::new();
+        for chunk in images.chunks(3) {
+            split.extend(two.classify_batch(chunk));
+        }
+        prop_assert(all == split, "batch grouping changed results")?;
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_sweep_votes_monotone_and_bounded() {
+    forall(100, 109, |g| {
+        let k = g.usize_in(1, 33);
+        let schedule: Vec<i32> = (0..k as i32).map(|i| 2 * i).collect();
+        let n = g.usize_in(1, 20);
+        let hd: Vec<u32> = (0..n).map(|_| g.usize_in(0, 200) as u32).collect();
+        let votes = sweep_votes(&hd, &schedule);
+        for (i, &v) in votes.iter().enumerate() {
+            prop_assert(v <= k as u32, format!("vote {v} > {k}"))?;
+            for (j, &w) in votes.iter().enumerate() {
+                if hd[i] < hd[j] {
+                    prop_assert(v >= w, format!("monotonicity {i},{j}"))?;
+                }
+            }
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_cam_search_tolerance_semantics() {
+    // for random rails, fires <=> mismatches <= tol (nominal mode)
+    forall(40, 113, |g| {
+        let mut cam = CamArray::nominal(CamConfig::W512x256);
+        let vref = g.f64_in(0.6, 1.19);
+        let veval = g.f64_in(0.35, 1.2);
+        let vst = g.f64_in(0.6, 1.2);
+        cam.set_voltages(Voltages::new(vref, veval, vst));
+        let stored = BitVec::from_pm1(&g.pm1_vec(512));
+        cam.write_row(0, &stored);
+        let flips = g.usize_in(0, 512);
+        let mut query = stored.clone();
+        for i in 0..flips {
+            query.flip(i);
+        }
+        let tol = cam.current_tolerance();
+        if (flips as f64 - tol).abs() < 0.5 {
+            return Ok(()); // boundary cell: quantization ambiguity
+        }
+        let fires = cam.search(&query)[0];
+        prop_assert(
+            fires == (flips as f64 <= tol),
+            format!("flips {flips} tol {tol}"),
+        )?;
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_tolerance_scales_linearly_with_row_length() {
+    // hd_tolerance(n) ∝ n at fixed voltages (C_ML scales with cells)
+    forall(50, 127, |g| {
+        let v = Voltages::new(
+            g.f64_in(0.6, 1.15),
+            g.f64_in(0.35, 1.2),
+            g.f64_in(0.6, 1.2),
+        );
+        let t256 = MatchlineModel::new(256, Pvt::nominal()).hd_tolerance(&v);
+        let t1024 = MatchlineModel::new(1024, Pvt::nominal()).hd_tolerance(&v);
+        prop_assert(
+            (t1024 - 4.0 * t256).abs() < 1e-6 * t1024.max(1.0),
+            format!("{t256} vs {t1024}"),
+        )?;
+        Ok(())
+    });
+}

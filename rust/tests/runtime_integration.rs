@@ -1,0 +1,93 @@
+//! PJRT runtime integration: the AOT-lowered Algorithm-1 graph must agree
+//! bit-for-bit with the nominal CAM pipeline and the digital reference on
+//! the real artifacts.  Skipped (with notice) when artifacts are absent.
+
+use picbnn::accel::{Pipeline, PipelineOptions};
+use picbnn::bnn::infer::digital_forward;
+use picbnn::bnn::model::MappedModel;
+use picbnn::cam::NoiseMode;
+use picbnn::data::TestSet;
+use picbnn::runtime::InferEngine;
+
+fn load(name: &str) -> Option<(MappedModel, TestSet)> {
+    let dir = picbnn::artifacts_dir();
+    if !dir.join(format!("{name}_infer.hlo.txt")).exists() {
+        return None;
+    }
+    Some((
+        MappedModel::load(dir.join(format!("{name}_weights.bin"))).ok()?,
+        TestSet::load(dir.join(format!("{name}_test.bin"))).ok()?,
+    ))
+}
+
+#[test]
+fn pjrt_matches_digital_reference_mnist() {
+    let Some((model, test)) = load("mnist") else {
+        eprintln!("skipping: artifacts not built");
+        return;
+    };
+    let engine = InferEngine::load("mnist", &model).expect("load PJRT engine");
+    let n = 128.min(test.len());
+    let got = engine.classify_all(&test.images[..n]).expect("classify");
+    for (img, (votes, pred)) in test.images[..n].iter().zip(&got) {
+        let (want_votes, want_pred) = digital_forward(&model, img, &model.schedule);
+        assert_eq!(votes, &want_votes, "votes mismatch");
+        assert_eq!(pred, &want_pred, "pred mismatch");
+    }
+}
+
+#[test]
+fn pjrt_matches_nominal_cam_pipeline_mnist() {
+    let Some((model, test)) = load("mnist") else {
+        eprintln!("skipping: artifacts not built");
+        return;
+    };
+    let engine = InferEngine::load("mnist", &model).expect("load PJRT engine");
+    let mut pipe = Pipeline::new(
+        &model,
+        PipelineOptions {
+            noise: NoiseMode::Nominal,
+            ..Default::default()
+        },
+    );
+    let n = 64.min(test.len());
+    let pjrt = engine.classify_batch(&test.images[..n]).unwrap();
+    let cam = pipe.classify_batch(&test.images[..n]);
+    assert_eq!(pjrt, cam, "the two execution backends must agree");
+}
+
+#[test]
+fn pjrt_matches_digital_reference_hg() {
+    let Some((model, test)) = load("hg") else {
+        eprintln!("skipping: artifacts not built");
+        return;
+    };
+    let engine = InferEngine::load("hg", &model).expect("load PJRT engine");
+    let n = 64.min(test.len());
+    let got = engine.classify_all(&test.images[..n]).expect("classify");
+    for (img, (votes, pred)) in test.images[..n].iter().zip(&got) {
+        let (want_votes, want_pred) = digital_forward(&model, img, &model.schedule);
+        assert_eq!(votes, &want_votes);
+        assert_eq!(pred, &want_pred);
+    }
+}
+
+#[test]
+fn pjrt_partial_batches_pad_correctly() {
+    let Some((model, test)) = load("mnist") else {
+        eprintln!("skipping: artifacts not built");
+        return;
+    };
+    let engine = InferEngine::load("mnist", &model).expect("load PJRT engine");
+    // 1, 63, 64, 65 image batches must all work and agree with full-batch
+    for n in [1usize, 63, 64, 65] {
+        let n = n.min(test.len());
+        let got = engine.classify_all(&test.images[..n]).unwrap();
+        assert_eq!(got.len(), n);
+        for (img, (votes, pred)) in test.images[..n].iter().zip(&got) {
+            let (want_votes, want_pred) = digital_forward(&model, img, &model.schedule);
+            assert_eq!(votes, &want_votes, "n={n}");
+            assert_eq!(pred, &want_pred, "n={n}");
+        }
+    }
+}
