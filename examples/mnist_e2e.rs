@@ -12,7 +12,7 @@
 //!
 //! Run: `cargo run --release --example mnist_e2e [-- --limit N]`
 
-use picbnn::accel::{evaluate, Pipeline, PipelineOptions};
+use picbnn::accel::{evaluate, MacroPool, Pipeline, PipelineOptions};
 use picbnn::baseline::digital_predict;
 use picbnn::bnn::model::MappedModel;
 use picbnn::cam::NoiseMode;
@@ -48,21 +48,35 @@ fn main() {
         t.elapsed_s()
     );
 
-    // --- 2. the device: analog CAM, Algorithm 1, batched ---
+    // --- 2. the device: analog CAM pool, Algorithm 1, batched ---
+    // the resident MacroPool programs every layer segment and pre-tunes
+    // every output threshold once, then serves batches with zero
+    // reprogramming / zero retunes (falls back to the reload scheduler if
+    // the model exceeded the pool capacity)
     let t = Timer::start();
-    let mut pipe = Pipeline::new(&model, PipelineOptions::default());
+    let pool = MacroPool::new(&model, PipelineOptions::default());
+    println!(
+        "device pool: {:?} mode, {} simulated macros",
+        pool.mode(),
+        pool.n_macros()
+    );
     let mut votes = Vec::with_capacity(n);
     for chunk in test.images[..n].chunks(256) {
-        votes.extend(pipe.classify_batch(chunk).into_iter().map(|(v, _)| v));
+        votes.extend(pool.classify_batch(chunk).into_iter().map(|(v, _)| v));
     }
     let acc = evaluate(&votes, &test.labels[..n]);
-    let stats = pipe.take_stats(n as u64);
+    let stats = pool.take_stats(n as u64);
     println!(
         "PiC-BNN (analog sim)  top1 {:.4}   top2 {:.4}   (paper: {:.3})   [{:.2}s]",
         acc.top1,
         acc.top2,
         meta.paper_cam_top1,
         t.elapsed_s()
+    );
+    println!(
+        "pool epoch: {} programming cycles, {} retune events (both one-off; steady-state batches pay zero)",
+        stats.programming_cycles(),
+        stats.events.retunes
     );
 
     // --- 3. cross-check vs the PJRT (AOT JAX/Pallas) backend ---

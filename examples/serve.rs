@@ -7,8 +7,7 @@
 
 use std::time::Duration;
 
-use picbnn::accel::BatchPolicy;
-use picbnn::accel::PipelineOptions;
+use picbnn::accel::{BatchPolicy, MacroPool, PipelineOptions};
 use picbnn::benchkit::Table;
 use picbnn::bnn::model::MappedModel;
 use picbnn::data::TestSet;
@@ -26,6 +25,21 @@ fn main() {
         .map(|i| test.images[i % test.len()].clone())
         .collect();
 
+    // the server fronts a resident MacroPool: weights stay programmed and
+    // every output threshold keeps pre-tuned rails across the whole run
+    let opts = PipelineOptions::default();
+    let required = MacroPool::macros_required(&model, &opts);
+    println!(
+        "backing pool: {} macros required, budget {} -> {} mode",
+        required,
+        picbnn::accel::DEFAULT_POOL_MACROS,
+        if required <= picbnn::accel::DEFAULT_POOL_MACROS {
+            "resident"
+        } else {
+            "reload"
+        }
+    );
+
     let mut table = Table::new(
         "batching policy vs latency/throughput (4 producer threads)",
         &["max batch", "served", "batches", "mean batch", "p50 ms", "p99 ms", "host req/s"],
@@ -34,7 +48,7 @@ fn main() {
         let t = Timer::start();
         let (responses, metrics) = serve_workload(
             &model,
-            PipelineOptions::default(),
+            opts,
             BatchPolicy {
                 max_batch,
                 max_wait: Duration::from_millis(1),

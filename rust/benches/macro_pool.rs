@@ -1,0 +1,150 @@
+//! Experiment A4 — resident multi-macro pool vs single-macro reload
+//! scheduler: steady-state device cost per inference.
+//!
+//! The reload `Pipeline` reprograms the hidden layer every batch (the
+//! output rows evict it) and retunes the rails for all 33 output
+//! thresholds of every batch; the resident `MacroPool` pays programming
+//! and retuning once at construction.  This bench measures both engines on
+//! the same synthetic MNIST-shaped model (784 -> 128 -> 10; no artifacts
+//! needed) and reports steady-state cycles/inference, programming cycles,
+//! and retune stalls.
+//!
+//! Run: `cargo bench --bench macro_pool`
+
+use picbnn::accel::{MacroPool, Pipeline, PipelineOptions, PoolMode};
+use picbnn::benchkit::Table;
+use picbnn::bnn::model::{MappedLayer, MappedModel};
+use picbnn::cam::NoiseMode;
+use picbnn::util::bitops::{BitMatrix, BitVec};
+use picbnn::util::rng::Rng;
+use picbnn::util::Timer;
+
+fn rand_bits(n: usize, rng: &mut Rng) -> BitVec {
+    let mut v = BitVec::zeros(n);
+    for i in 0..n {
+        v.set(i, rng.chance(0.5));
+    }
+    v
+}
+
+/// Single-segment random layer (mirrors the python mapper's shape).
+fn layer(rng: &mut Rng, n_out: usize, n_in: usize, width: usize) -> MappedLayer {
+    let rows: Vec<BitVec> = (0..n_out).map(|_| rand_bits(n_in, rng)).collect();
+    let pads = width - n_in;
+    let q = vec![(0..n_out)
+        .map(|_| rng.range_u64(0, pads as u64) as i32)
+        .collect()];
+    MappedLayer {
+        weights: BitMatrix::from_rows(&rows),
+        q,
+        seg_bounds: vec![0, n_in],
+        seg_width: width,
+    }
+}
+
+fn mnist_shaped(seed: u64) -> MappedModel {
+    let mut rng = Rng::new(seed, 0xBE9C);
+    let l1 = layer(&mut rng, 128, 784, 1024);
+    let l2 = layer(&mut rng, 10, 128, 512);
+    let m = MappedModel {
+        layers: vec![l1, l2],
+        schedule: (0..=64).step_by(2).collect(),
+    };
+    for l in &m.layers {
+        l.validate().expect("synthetic layer valid");
+    }
+    m
+}
+
+fn main() {
+    let t0 = Timer::start();
+    let model = mnist_shaped(7);
+    let mut rng = Rng::new(3, 3);
+    let images: Vec<BitVec> = (0..256).map(|_| rand_bits(784, &mut rng)).collect();
+    let opts = PipelineOptions {
+        noise: NoiseMode::Nominal,
+        ..Default::default()
+    };
+    let batches = 8usize;
+    let n_inf = (batches * images.len()) as u64;
+
+    // --- resident pool: program once, serve forever ---
+    let pool = MacroPool::new(&model, opts);
+    assert_eq!(pool.mode(), PoolMode::Resident);
+    pool.classify_batch(&images); // warmup epoch
+    let warm = pool.take_stats(images.len() as u64);
+    let t = Timer::start();
+    for _ in 0..batches {
+        pool.classify_batch(&images);
+    }
+    let host_pool = t.elapsed_s();
+    let pool_stats = pool.take_stats(n_inf);
+
+    // --- reload pipeline: reprogram + retune every batch ---
+    let mut pipe = Pipeline::new(&model, opts);
+    pipe.classify_batch(&images); // same warmup treatment
+    pipe.take_stats(images.len() as u64);
+    let t = Timer::start();
+    for _ in 0..batches {
+        pipe.classify_batch(&images);
+    }
+    let host_pipe = t.elapsed_s();
+    let pipe_stats = pipe.take_stats(n_inf);
+
+    let mut table = Table::new(
+        &format!(
+            "A4: resident MacroPool ({} macros) vs reload Pipeline — steady state, \
+             {batches} × {} images",
+            pool.n_macros(),
+            images.len()
+        ),
+        &[
+            "engine",
+            "cycles/inf",
+            "program cyc",
+            "retunes",
+            "stall µs/inf",
+            "device inf/s",
+            "host img/s",
+        ],
+    );
+    for (name, stats, host) in [
+        ("MacroPool (resident)", &pool_stats, host_pool),
+        ("Pipeline (reload)", &pipe_stats, host_pipe),
+    ] {
+        table.row(vec![
+            name.to_string(),
+            format!("{:.1}", stats.cycles_per_inference()),
+            stats.programming_cycles().to_string(),
+            stats.events.retunes.to_string(),
+            format!("{:.3}", stats.stall_s * 1e6 / n_inf as f64),
+            format!("{:.0}", stats.inferences_per_s()),
+            format!("{:.0}", n_inf as f64 / host),
+        ]);
+    }
+    table.print();
+
+    println!(
+        "\nwarmup epoch (pool construction + first batch): {} programming cycles, \
+         {} retune events",
+        warm.programming_cycles(),
+        warm.events.retunes
+    );
+    assert_eq!(
+        pool_stats.programming_cycles(),
+        0,
+        "resident steady state must not program"
+    );
+    assert_eq!(pool_stats.events.retunes, 0, "resident steady state must not retune");
+    assert!(
+        pool_stats.cycles_per_inference() < pipe_stats.cycles_per_inference(),
+        "resident pool must beat the reload scheduler: {} vs {}",
+        pool_stats.cycles_per_inference(),
+        pipe_stats.cycles_per_inference()
+    );
+    println!(
+        "\nresident advantage: {:.1}% fewer device cycles per inference",
+        100.0 * (1.0 - pool_stats.cycles_per_inference() / pipe_stats.cycles_per_inference())
+    );
+    println!("\n[macro_pool done in {:.1}s]", t0.elapsed_s());
+}

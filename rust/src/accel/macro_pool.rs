@@ -1,0 +1,556 @@
+//! Multi-macro sharded execution engine with persistent weight residency.
+//!
+//! The single-macro [`Pipeline`] reprograms every layer's rows into one
+//! simulated 128-kbit macro on **every batch** and retunes the rails for
+//! every output threshold of every batch — pure overhead at steady state.
+//! A `MacroPool` instead partitions a model's layer segments across N
+//! simulated [`CamArray`] macros at construction time:
+//!
+//! * every hidden-layer *load* (one segment's neuron chunk that fits the
+//!   configured row count) gets its own macro, programmed **once** and
+//!   parked at the layer's midpoint operating point;
+//! * the output layer is replicated across one macro **per schedule
+//!   threshold**, each parked at its calibrated (V_ref, V_eval, V_st)
+//!   triple — so the per-batch threshold sweep becomes a walk across
+//!   pre-tuned macros with **zero retunes and zero reprogramming**.
+//!
+//! This is the paper's §V-B amortisation argument taken to its limit (and
+//! the way PIMBALL / ChewBaccaNN scale BNN inference across many in-memory
+//! arrays): weight loads and voltage retunes are paid once per deployment,
+//! not once per batch.  Models whose load count exceeds the pool capacity
+//! fall back to the existing reload scheduler ([`Pipeline`]) transparently.
+//!
+//! Concurrency: every macro sits behind a `Mutex`, so one pool can be
+//! shared across worker threads (`classify_parallel`, `Server`).  Analog
+//! noise stays deterministic under any thread interleaving because frozen
+//! per-row variation is drawn from each macro's own seed at construction,
+//! while per-evaluation noise is drawn from a per-image stream derived
+//! from (pool seed, image index) — see [`CamArray::search_into_rng`].
+
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::Mutex;
+
+use crate::bnn::mapping::segment_query_wide;
+use crate::bnn::model::MappedModel;
+use crate::cam::{CamArray, CamConfig};
+use crate::sim::SimClock;
+use crate::util::bitops::BitVec;
+use crate::util::rng::{splitmix64, Rng};
+
+use super::pipeline::{
+    calibrate_hidden_points, calibrate_output_points, io_cycles_per_image, plan_loads,
+    program_load_into, resolve_schedule, Load,
+};
+use super::pipeline::{Pipeline, PipelineOptions, RunStats};
+use super::voltage::CalibratedPoint;
+
+/// Default number of simulated macros a pool may instantiate.
+pub const DEFAULT_POOL_MACROS: usize = 64;
+
+/// How the pool executes a model.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum PoolMode {
+    /// Every load and every output threshold is resident on its own macro.
+    Resident,
+    /// The model exceeds the pool capacity; the reload scheduler runs it.
+    Reload,
+}
+
+/// Deterministic per-macro seed derivation (stable across runs/threads).
+fn macro_seed(base: u64, idx: u64) -> u64 {
+    let mut s = base ^ idx.wrapping_mul(0x9E37_79B9_7F4A_7C15);
+    splitmix64(&mut s)
+}
+
+struct Resident {
+    /// One programmed macro per hidden (layer, load), parked at the
+    /// layer's midpoint operating point.
+    hidden_slots: Vec<Vec<Mutex<CamArray>>>,
+    /// One programmed macro per output-schedule threshold, parked at that
+    /// threshold's operating point.
+    output_slots: Vec<Mutex<CamArray>>,
+    /// Host-device I/O cycles (shared 128-bit bus; same clock domain).
+    io_clock: Mutex<SimClock>,
+}
+
+/// Sharded multi-macro execution engine for one mapped model.
+pub struct MacroPool<'m> {
+    model: &'m MappedModel,
+    opts: PipelineOptions,
+    schedule: Vec<i32>,
+    plans: Vec<Vec<Load>>,
+    hidden_points: Vec<CalibratedPoint>,
+    output_points: Vec<CalibratedPoint>,
+    resident: Option<Resident>,
+    /// Reload fallback when the model exceeds the pool capacity.
+    fallback: Option<Mutex<Pipeline<'m>>>,
+    /// Next per-image noise-stream index for [`MacroPool::classify_batch`].
+    stream_cursor: AtomicU64,
+}
+
+impl<'m> MacroPool<'m> {
+    /// Pool with the default macro budget ([`DEFAULT_POOL_MACROS`]).
+    pub fn new(model: &'m MappedModel, opts: PipelineOptions) -> Self {
+        Self::with_capacity(model, opts, DEFAULT_POOL_MACROS)
+    }
+
+    /// Macros a resident pool needs for `model` under `opts`:
+    /// one per hidden load plus one per output-schedule threshold.
+    pub fn macros_required(model: &MappedModel, opts: &PipelineOptions) -> usize {
+        Self::required_for(&plan_loads(model), resolve_schedule(model, opts).len())
+    }
+
+    /// Single source of the residency formula (shared by the public probe
+    /// and the constructor's capacity check).
+    fn required_for(plans: &[Vec<Load>], schedule_len: usize) -> usize {
+        let hidden: usize = plans[..plans.len() - 1].iter().map(Vec::len).sum();
+        hidden + schedule_len
+    }
+
+    /// Pool with an explicit macro budget; falls back to the reload
+    /// scheduler when the model needs more macros than `max_macros`.
+    pub fn with_capacity(model: &'m MappedModel, opts: PipelineOptions, max_macros: usize) -> Self {
+        let out_layer = model.layers.last().expect("model has layers");
+        assert_eq!(out_layer.n_seg(), 1, "output layer must fit one CAM word");
+        let schedule = resolve_schedule(model, &opts);
+        let plans = plan_loads(model);
+        let out_idx = model.layers.len() - 1;
+        assert_eq!(plans[out_idx].len(), 1, "output layer fits one load");
+        let needed = Self::required_for(&plans, schedule.len());
+
+        // calibration (a voltage grid search per hidden layer + per
+        // threshold) only runs for the resident path; the reload fallback's
+        // Pipeline performs its own identical calibration internally
+        let (resident, fallback, hidden_points, output_points) = if needed <= max_macros {
+            let hidden_points = calibrate_hidden_points(model, opts.pvt);
+            let output_points = calibrate_output_points(model, &schedule, opts.pvt);
+            let mut next_macro = 0u64;
+            let mut mk_cam = |cfg: CamConfig| {
+                let mut cam =
+                    CamArray::new(cfg, opts.pvt, opts.noise, macro_seed(opts.seed, next_macro));
+                next_macro += 1;
+                cam.set_noise_scale(opts.noise_scale);
+                cam
+            };
+            let mut hidden_slots = Vec::with_capacity(out_idx);
+            for (li, layer) in model.layers[..out_idx].iter().enumerate() {
+                let cfg = CamConfig::fitting(layer.seg_width)
+                    .unwrap_or_else(|| panic!("word width {} unsupported", layer.seg_width));
+                let mut slots = Vec::with_capacity(plans[li].len());
+                for load in &plans[li] {
+                    let mut cam = mk_cam(cfg);
+                    program_load_into(&mut cam, layer, load);
+                    cam.set_voltages(hidden_points[li].voltages);
+                    slots.push(Mutex::new(cam));
+                }
+                hidden_slots.push(slots);
+            }
+            let out_cfg = CamConfig::fitting(out_layer.seg_width)
+                .expect("output word width unsupported");
+            let out_load = &plans[out_idx][0];
+            let mut output_slots = Vec::with_capacity(schedule.len());
+            for point in &output_points {
+                let mut cam = mk_cam(out_cfg);
+                program_load_into(&mut cam, out_layer, out_load);
+                cam.set_voltages(point.voltages);
+                output_slots.push(Mutex::new(cam));
+            }
+            (
+                Some(Resident {
+                    hidden_slots,
+                    output_slots,
+                    io_clock: Mutex::new(SimClock::new()),
+                }),
+                None,
+                hidden_points,
+                output_points,
+            )
+        } else {
+            (
+                None,
+                Some(Mutex::new(Pipeline::new(model, opts))),
+                Vec::new(),
+                Vec::new(),
+            )
+        };
+
+        MacroPool {
+            model,
+            opts,
+            schedule,
+            plans,
+            hidden_points,
+            output_points,
+            resident,
+            fallback,
+            stream_cursor: AtomicU64::new(0),
+        }
+    }
+
+    pub fn mode(&self) -> PoolMode {
+        if self.resident.is_some() {
+            PoolMode::Resident
+        } else {
+            PoolMode::Reload
+        }
+    }
+
+    /// Simulated macros instantiated by this pool (1 in reload mode).
+    pub fn n_macros(&self) -> usize {
+        match &self.resident {
+            Some(r) => {
+                r.hidden_slots.iter().map(Vec::len).sum::<usize>() + r.output_slots.len()
+            }
+            None => 1,
+        }
+    }
+
+    pub fn schedule(&self) -> &[i32] {
+        &self.schedule
+    }
+
+    pub fn options(&self) -> &PipelineOptions {
+        &self.opts
+    }
+
+    /// Calibrated output operating points (diagnostics; empty in reload
+    /// mode — the fallback `Pipeline` owns its own calibration).
+    pub fn output_points(&self) -> &[CalibratedPoint] {
+        &self.output_points
+    }
+
+    /// Calibrated hidden midpoint per non-output layer (diagnostics;
+    /// empty in reload mode).
+    pub fn hidden_points(&self) -> &[CalibratedPoint] {
+        &self.hidden_points
+    }
+
+    /// Per-image noise stream: independent of thread scheduling, derived
+    /// from (pool seed, global image index).
+    fn image_rng(&self, global_idx: u64) -> Rng {
+        Rng::new(self.opts.seed ^ 0xA11A_0F0E_5EED_0001, global_idx)
+    }
+
+    /// Classify a batch; noise-stream indices assigned from the pool's
+    /// internal cursor (serving path).
+    pub fn classify_batch(&self, images: &[BitVec]) -> Vec<(Vec<u32>, usize)> {
+        let base = self
+            .stream_cursor
+            .fetch_add(images.len() as u64, Ordering::Relaxed);
+        self.classify_batch_at(images, base)
+    }
+
+    /// Classify a batch with explicit noise-stream base index `stream_base`
+    /// (the sharded parallel path passes each image's global index so
+    /// results do not depend on thread count or interleaving).
+    pub fn classify_batch_at(
+        &self,
+        images: &[BitVec],
+        stream_base: u64,
+    ) -> Vec<(Vec<u32>, usize)> {
+        if images.is_empty() {
+            return Vec::new();
+        }
+        if let Some(fb) = &self.fallback {
+            return fb.lock().unwrap().classify_batch(images);
+        }
+        let resident = self.resident.as_ref().unwrap();
+        let mut rngs: Vec<Rng> = (0..images.len())
+            .map(|i| self.image_rng(stream_base + i as u64))
+            .collect();
+        let mut acts: Vec<BitVec> = images.to_vec();
+        for layer_idx in 0..self.model.layers.len() - 1 {
+            acts = self.run_hidden(resident, layer_idx, &acts, &mut rngs);
+        }
+        let votes = self.run_output(resident, &acts, &mut rngs);
+        resident
+            .io_clock
+            .lock()
+            .unwrap()
+            .tick(io_cycles_per_image(self.model, self.schedule.len()) * images.len() as u64);
+        votes
+            .into_iter()
+            .map(|v| {
+                let p = crate::bnn::infer::argmax_vote(&v);
+                (v, p)
+            })
+            .collect()
+    }
+
+    /// Execute one hidden layer for a batch over the layer's resident
+    /// load macros; returns the hidden codes (majority across segments).
+    fn run_hidden(
+        &self,
+        resident: &Resident,
+        layer_idx: usize,
+        inputs: &[BitVec],
+        rngs: &mut [Rng],
+    ) -> Vec<BitVec> {
+        let layer = &self.model.layers[layer_idx];
+        let n_out = layer.n_out();
+        let n_seg = layer.n_seg();
+        let mut seg_fires = vec![vec![0u8; n_out]; inputs.len()];
+        let (mut m, mut f) = (Vec::new(), Vec::new());
+        // rails were parked at the layer's midpoint at construction — no
+        // set_voltages on the batch path
+        for (load_idx, load) in self.plans[layer_idx].iter().enumerate() {
+            let mut cam = resident.hidden_slots[layer_idx][load_idx].lock().unwrap();
+            let width = cam.config().width();
+            let payload = (load.neuron_hi - load.neuron_lo) as u64
+                * (layer.seg_bounds[load.seg + 1] - layer.seg_bounds[load.seg]) as u64;
+            for (img_idx, x) in inputs.iter().enumerate() {
+                let q = segment_query_wide(layer, load.seg, x, width);
+                cam.search_into_rng(&q, &mut m, &mut f, &mut rngs[img_idx]);
+                cam.events.useful_macs += payload;
+                for (row, neuron) in (load.neuron_lo..load.neuron_hi).enumerate() {
+                    if f[row] {
+                        seg_fires[img_idx][neuron] += 1;
+                    }
+                }
+            }
+        }
+        seg_fires
+            .into_iter()
+            .map(|fires| {
+                let mut h = BitVec::zeros(n_out);
+                for (j, &cnt) in fires.iter().enumerate() {
+                    // majority of segments, ties fire (MLSA convention)
+                    h.set(j, (cnt as usize) * 2 >= n_seg);
+                }
+                h
+            })
+            .collect()
+    }
+
+    /// Output-layer threshold sweep: one pre-tuned macro per threshold, so
+    /// a batch is a pure sequence of searches — no retunes.
+    fn run_output(
+        &self,
+        resident: &Resident,
+        hidden: &[BitVec],
+        rngs: &mut [Rng],
+    ) -> Vec<Vec<u32>> {
+        let layer = self.model.layers.last().unwrap();
+        let n_cls = layer.n_out();
+        let width = CamConfig::fitting(layer.seg_width).unwrap().width();
+        // queries are threshold-independent: build once per batch
+        let queries: Vec<BitVec> = hidden
+            .iter()
+            .map(|h| segment_query_wide(layer, 0, h, width))
+            .collect();
+        let mut votes = vec![vec![0u32; n_cls]; hidden.len()];
+        let (mut m, mut f) = (Vec::new(), Vec::new());
+        let payload = (layer.n_in() * n_cls) as u64;
+        for slot in &resident.output_slots {
+            let mut cam = slot.lock().unwrap();
+            for (img_idx, q) in queries.iter().enumerate() {
+                cam.search_into_rng(q, &mut m, &mut f, &mut rngs[img_idx]);
+                cam.events.useful_macs += payload;
+                for (c, vote) in votes[img_idx].iter_mut().enumerate() {
+                    if f[c] {
+                        *vote += 1;
+                    }
+                }
+            }
+        }
+        votes
+    }
+
+    /// Drain device statistics accumulated since the last call, summed
+    /// across every macro in the pool (aggregate device work, not
+    /// wall-clock: resident macros operate concurrently in silicon).
+    pub fn take_stats(&self, inferences: u64) -> RunStats {
+        if let Some(fb) = &self.fallback {
+            return fb.lock().unwrap().take_stats(inferences);
+        }
+        let resident = self.resident.as_ref().unwrap();
+        let mut stats = RunStats {
+            inferences,
+            ..RunStats::default()
+        };
+        let mut drain = |cam: &mut CamArray| {
+            stats.cycles += cam.clock.cycles;
+            stats.stall_s += cam.clock.stall_s;
+            stats.events.add(&cam.events);
+            cam.reset_accounting();
+        };
+        for slots in &resident.hidden_slots {
+            for slot in slots {
+                drain(&mut slot.lock().unwrap());
+            }
+        }
+        for slot in &resident.output_slots {
+            drain(&mut slot.lock().unwrap());
+        }
+        let mut io = resident.io_clock.lock().unwrap();
+        stats.cycles += io.cycles;
+        stats.stall_s += io.stall_s;
+        io.reset();
+        stats
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::bnn::infer::digital_forward;
+    use crate::bnn::model::test_fixtures::tiny_model;
+    use crate::cam::NoiseMode;
+
+    fn rand_images(n: usize, bits: usize, seed: u64) -> Vec<BitVec> {
+        let mut rng = Rng::new(seed, 1);
+        (0..n)
+            .map(|_| {
+                let mut v = BitVec::zeros(bits);
+                for i in 0..bits {
+                    v.set(i, rng.chance(0.5));
+                }
+                v
+            })
+            .collect()
+    }
+
+    fn nominal() -> PipelineOptions {
+        PipelineOptions {
+            noise: NoiseMode::Nominal,
+            ..Default::default()
+        }
+    }
+
+    #[test]
+    fn resident_pool_matches_single_macro_pipeline_bit_exactly() {
+        // acceptance: sharded pool predictions (and votes) are identical
+        // to the single-macro Pipeline under NoiseMode::Nominal
+        let model = tiny_model(100, 16, 4, 42);
+        let images = rand_images(24, 100, 7);
+        let pool = MacroPool::new(&model, nominal());
+        assert_eq!(pool.mode(), PoolMode::Resident);
+        let mut pipe = Pipeline::new(&model, nominal());
+        for chunk_len in [1usize, 5, 24] {
+            for chunk in images.chunks(chunk_len) {
+                let got = pool.classify_batch(chunk);
+                let want = pipe.classify_batch(chunk);
+                assert_eq!(got, want, "chunk_len {chunk_len}");
+            }
+        }
+        // and both agree with the digital oracle
+        let got = pool.classify_batch(&images);
+        for (img, (votes, pred)) in images.iter().zip(&got) {
+            let (want_votes, want_pred) = digital_forward(&model, img, pool.schedule());
+            assert_eq!(votes, &want_votes);
+            assert_eq!(pred, &want_pred);
+        }
+    }
+
+    #[test]
+    fn steady_state_batches_pay_zero_programming_and_zero_retunes() {
+        let model = tiny_model(64, 8, 3, 2);
+        let images = rand_images(16, 64, 3);
+        let pool = MacroPool::new(&model, nominal());
+        // warmup: construction programmed the macros; drain that epoch
+        pool.classify_batch(&images);
+        let warm = pool.take_stats(16);
+        assert!(warm.events.row_writes > 0, "construction programs rows");
+        // steady state: no programming, no retunes, no stalls — searches only
+        pool.classify_batch(&images);
+        pool.classify_batch(&images);
+        let steady = pool.take_stats(32);
+        assert_eq!(steady.programming_cycles(), 0, "{:?}", steady.events);
+        assert_eq!(steady.events.row_writes, 0);
+        assert_eq!(steady.events.cells_written, 0);
+        assert_eq!(steady.events.retunes, 0);
+        assert_eq!(steady.stall_s, 0.0);
+        assert!(steady.events.searches > 0);
+        assert!(steady.cycles > 0);
+    }
+
+    #[test]
+    fn resident_pool_beats_reload_pipeline_on_steady_state_cycles() {
+        let model = tiny_model(100, 16, 4, 11);
+        let images = rand_images(32, 100, 5);
+        let pool = MacroPool::new(&model, nominal());
+        pool.classify_batch(&images); // warmup
+        pool.take_stats(0);
+        for _ in 0..4 {
+            pool.classify_batch(&images);
+        }
+        let pool_cpi = pool.take_stats(4 * 32).cycles_per_inference();
+
+        let mut pipe = Pipeline::new(&model, nominal());
+        pipe.classify_batch(&images); // same warmup treatment
+        pipe.take_stats(0);
+        for _ in 0..4 {
+            pipe.classify_batch(&images);
+        }
+        let pipe_cpi = pipe.take_stats(4 * 32).cycles_per_inference();
+        assert!(
+            pool_cpi < pipe_cpi,
+            "resident {pool_cpi} should beat reload {pipe_cpi}"
+        );
+    }
+
+    #[test]
+    fn capacity_overflow_falls_back_to_reload_scheduler() {
+        let model = tiny_model(64, 8, 3, 9);
+        let needed = MacroPool::macros_required(&model, &nominal());
+        assert!(needed > 2);
+        let pool = MacroPool::with_capacity(&model, nominal(), 2);
+        assert_eq!(pool.mode(), PoolMode::Reload);
+        // still bit-exact vs the pipeline in nominal mode
+        let images = rand_images(10, 64, 13);
+        let mut pipe = Pipeline::new(&model, nominal());
+        assert_eq!(pool.classify_batch(&images), pipe.classify_batch(&images));
+        // stats flow through the fallback
+        let s = pool.take_stats(10);
+        assert!(s.cycles > 0);
+        assert!(s.events.searches > 0);
+    }
+
+    #[test]
+    fn macro_budget_matches_plan() {
+        let model = tiny_model(100, 16, 4, 21);
+        let opts = nominal();
+        let pool = MacroPool::new(&model, opts);
+        assert_eq!(pool.mode(), PoolMode::Resident);
+        // 1 hidden load + 33 output thresholds for the tiny fixture
+        assert_eq!(pool.n_macros(), MacroPool::macros_required(&model, &opts));
+        assert_eq!(pool.n_macros(), 1 + pool.schedule().len());
+    }
+
+    #[test]
+    fn analog_mode_deterministic_for_fixed_stream_indices() {
+        let model = tiny_model(64, 8, 4, 31);
+        let images = rand_images(12, 64, 17);
+        let opts = PipelineOptions::default(); // analog noise
+        let a = MacroPool::new(&model, opts).classify_batch_at(&images, 0);
+        let b = MacroPool::new(&model, opts).classify_batch_at(&images, 0);
+        assert_eq!(a, b);
+        // a different seed draws different noise
+        let c = MacroPool::new(
+            &model,
+            PipelineOptions {
+                seed: opts.seed ^ 0xDEAD,
+                ..opts
+            },
+        )
+        .classify_batch_at(&images, 0);
+        // votes are near-deterministic on easy instances; only require the
+        // structures to be well-formed rather than identical
+        assert_eq!(c.len(), a.len());
+    }
+
+    #[test]
+    fn schedule_prefix_respected() {
+        let model = tiny_model(64, 8, 3, 1);
+        let pool = MacroPool::new(
+            &model,
+            PipelineOptions {
+                noise: NoiseMode::Nominal,
+                schedule_prefix: Some(5),
+                ..Default::default()
+            },
+        );
+        assert_eq!(pool.schedule(), &model.schedule[..5]);
+        assert_eq!(pool.n_macros(), 1 + 5);
+    }
+}

@@ -1,21 +1,27 @@
-//! Host-parallel evaluation: shard a workload over N independent simulated
-//! devices (one `Pipeline` per thread, deterministic per-shard seeds) and
+//! Host-parallel evaluation over one shared [`MacroPool`]: worker threads
+//! pull disjoint image ranges through the same set of resident macros and
 //! merge results in order.
 //!
-//! This models a *fleet* of PiC-BNN macros, but its practical role here is
-//! simulation throughput: large accuracy sweeps (Fig. 5 regenerates 20
-//! full-test-set runs) are embarrassingly parallel across images.
+//! This models a *fleet-shared* PiC-BNN pool (weights stay resident while
+//! many workers stream queries), and its practical role here is simulation
+//! throughput: large accuracy sweeps (Fig. 5 regenerates 20 full-test-set
+//! runs) are embarrassingly parallel across images.
+//!
+//! Determinism: frozen per-macro variation comes from the pool seed at
+//! construction, and per-evaluation noise comes from per-image streams
+//! indexed by each image's *global* position — so results are identical
+//! for any thread count or interleaving (see `CamArray::search_into_rng`).
+//! Models that exceed the pool capacity fall back to the seed behaviour:
+//! one reload `Pipeline` per shard, seeded `opts.seed + shard`.
 
 use crate::bnn::model::MappedModel;
 use crate::util::bitops::BitVec;
 
+use super::macro_pool::{MacroPool, PoolMode};
 use super::pipeline::{Pipeline, PipelineOptions, RunStats};
 
-/// Classify `images` using `n_threads` pipelines; returns per-image
+/// Classify `images` using `n_threads` workers; returns per-image
 /// (votes, prediction) in input order plus the merged device statistics.
-///
-/// Each shard's pipeline seeds its noise stream from `opts.seed` + shard
-/// index, so results are deterministic for a given (seed, thread count).
 pub fn classify_parallel(
     model: &MappedModel,
     opts: PipelineOptions,
@@ -24,12 +30,57 @@ pub fn classify_parallel(
     n_threads: usize,
 ) -> (Vec<(Vec<u32>, usize)>, RunStats) {
     let n_threads = n_threads.max(1).min(images.len().max(1));
-    let chunk = images.len().div_ceil(n_threads);
+    let batch = batch.max(1);
+    let chunk = images.len().div_ceil(n_threads).max(1);
+    // cheap residency probe (no calibration) before building anything:
+    // oversized models go straight to the per-shard reload path
+    if MacroPool::macros_required(model, &opts) > super::macro_pool::DEFAULT_POOL_MACROS {
+        return classify_parallel_reload(model, opts, images, batch, n_threads);
+    }
+    let pool = MacroPool::new(model, opts);
+    debug_assert_eq!(pool.mode(), PoolMode::Resident);
+    let mut shard_results: Vec<Option<Vec<(Vec<u32>, usize)>>> =
+        (0..n_threads).map(|_| None).collect();
+    std::thread::scope(|s| {
+        for (t, (shard, slot)) in images
+            .chunks(chunk)
+            .zip(shard_results.iter_mut())
+            .enumerate()
+        {
+            let pool = &pool;
+            s.spawn(move || {
+                let base = (t * chunk) as u64;
+                let mut out = Vec::with_capacity(shard.len());
+                for (b, sub) in shard.chunks(batch).enumerate() {
+                    out.extend(pool.classify_batch_at(sub, base + (b * batch) as u64));
+                }
+                *slot = Some(out);
+            });
+        }
+    });
+    let mut results = Vec::with_capacity(images.len());
+    for slot in shard_results.into_iter().flatten() {
+        results.extend(slot);
+    }
+    let stats = pool.take_stats(images.len() as u64);
+    (results, stats)
+}
+
+/// Fallback for models exceeding the pool capacity: one reload pipeline
+/// per shard with deterministic per-shard seeds (the seed behaviour).
+fn classify_parallel_reload(
+    model: &MappedModel,
+    opts: PipelineOptions,
+    images: &[BitVec],
+    batch: usize,
+    n_threads: usize,
+) -> (Vec<(Vec<u32>, usize)>, RunStats) {
+    let chunk = images.len().div_ceil(n_threads).max(1);
     let mut shard_results: Vec<Option<(Vec<(Vec<u32>, usize)>, RunStats)>> =
         (0..n_threads).map(|_| None).collect();
     std::thread::scope(|s| {
         for (t, (shard, slot)) in images
-            .chunks(chunk.max(1))
+            .chunks(chunk)
             .zip(shard_results.iter_mut())
             .enumerate()
         {
@@ -108,6 +159,21 @@ mod tests {
         let (a, _) = classify_parallel(&model, opts, &imgs, 8, 4);
         let (b, _) = classify_parallel(&model, opts, &imgs, 8, 4);
         assert_eq!(a, b);
+    }
+
+    #[test]
+    fn parallel_deterministic_across_thread_counts() {
+        // the shared-pool path goes further than the seed contract: with
+        // per-image noise streams the result is independent of the worker
+        // count entirely
+        let model = tiny_model(64, 8, 4, 58);
+        let imgs = images(30, 64);
+        let opts = PipelineOptions::default(); // analog noise
+        let (one, _) = classify_parallel(&model, opts, &imgs, 8, 1);
+        for threads in [2, 3, 5, 8] {
+            let (many, _) = classify_parallel(&model, opts, &imgs, 8, threads);
+            assert_eq!(one, many, "threads={threads}");
+        }
     }
 
     #[test]

@@ -52,17 +52,17 @@ impl Default for PipelineOptions {
 
 /// One weight load: a contiguous chunk of neurons of one segment.
 #[derive(Clone, Debug)]
-struct Load {
-    seg: usize,
-    neuron_lo: usize,
-    neuron_hi: usize,
+pub(crate) struct Load {
+    pub(crate) seg: usize,
+    pub(crate) neuron_lo: usize,
+    pub(crate) neuron_hi: usize,
 }
 
 /// Extend a row/query image to the configured word width: spare columns
 /// store '1' and are driven with '1', so they always match and contribute
 /// nothing to the mismatch count (how the silicon handles words narrower
 /// than the configured width).
-fn fit_width(v: &BitVec, width: usize) -> BitVec {
+pub(crate) fn fit_width(v: &BitVec, width: usize) -> BitVec {
     if v.len() == width {
         return v.clone();
     }
@@ -74,6 +74,109 @@ fn fit_width(v: &BitVec, width: usize) -> BitVec {
         }
     }
     out
+}
+
+/// Midpoint operating point per non-output layer (calibrated against the
+/// *physical* word width the layer runs at; see `Pipeline::new`).
+pub(crate) fn calibrate_hidden_points(model: &MappedModel, pvt: Pvt) -> Vec<CalibratedPoint> {
+    model.layers[..model.layers.len() - 1]
+        .iter()
+        .map(|l| {
+            let cfg = CamConfig::fitting(l.seg_width)
+                .unwrap_or_else(|| panic!("word width {} unsupported", l.seg_width));
+            let ctl = VoltageController::new(cfg.width(), pvt);
+            let target = (l.seg_width / 2) as u32;
+            ctl.calibrate(target, 2.0)
+                .or_else(|| ctl.calibrate(target, 4.0))
+                .unwrap_or_else(|| ctl.calibrate_best(target))
+        })
+        .collect()
+}
+
+/// The active schedule under `opts` (possibly a prefix of the model's).
+pub(crate) fn resolve_schedule(model: &MappedModel, opts: &PipelineOptions) -> Vec<i32> {
+    match opts.schedule_prefix {
+        Some(k) => model.schedule.iter().copied().take(k).collect(),
+        None => model.schedule.clone(),
+    }
+}
+
+/// Operating point per schedule threshold at the output word width.
+pub(crate) fn calibrate_output_points(
+    model: &MappedModel,
+    schedule: &[i32],
+    pvt: Pvt,
+) -> Vec<CalibratedPoint> {
+    let out_layer = model.layers.last().expect("model has layers");
+    let out_cfg = CamConfig::fitting(out_layer.seg_width).expect("output word width unsupported");
+    let ctl_out = VoltageController::new(out_cfg.width(), pvt);
+    ctl_out.calibrate_schedule(&schedule.iter().map(|&t| t.max(0) as u32).collect::<Vec<_>>())
+}
+
+/// Per-layer load plans: each load is one segment's neuron chunk that fits
+/// the configured row count (the weight-reload scheduler's unit).
+pub(crate) fn plan_loads(model: &MappedModel) -> Vec<Vec<Load>> {
+    model
+        .layers
+        .iter()
+        .map(|l| {
+            let cfg = CamConfig::fitting(l.seg_width)
+                .unwrap_or_else(|| panic!("word width {} unsupported", l.seg_width));
+            let rows = cfg.rows();
+            let mut loads = Vec::new();
+            for seg in 0..l.n_seg() {
+                let mut lo = 0;
+                while lo < l.n_out() {
+                    let hi = (lo + rows).min(l.n_out());
+                    loads.push(Load {
+                        seg,
+                        neuron_lo: lo,
+                        neuron_hi: hi,
+                    });
+                    lo = hi;
+                }
+            }
+            loads
+        })
+        .collect()
+}
+
+/// Host-device I/O cycles per image (128-bit bus, paper SoC): input
+/// vector in, hidden activations out+in (through the control CPU), and
+/// the per-execution MLSA fire words out.  Shared by the single-macro
+/// `Pipeline` and the `MacroPool` (same bus either way).
+pub(crate) fn io_cycles_per_image(model: &MappedModel, schedule_len: usize) -> u64 {
+    let bus = crate::analog::constants::IO_BUS_BITS;
+    let n_in = model.n_in().div_ceil(bus) as u64;
+    let hidden: u64 = model.layers[..model.layers.len() - 1]
+        .iter()
+        .map(|l| 2 * l.n_out().div_ceil(bus) as u64) // readout + reload
+        .sum();
+    let votes_bits = model.n_classes() * schedule_len;
+    n_in + hidden + votes_bits.div_ceil(bus) as u64
+}
+
+/// Program one load's rows into `cam` (reconfiguring the array if its
+/// geometry doesn't match the layer's word width), invalidating stale rows
+/// beyond the load.  Shared by the reload `Pipeline` (per batch) and the
+/// resident `MacroPool` (once at construction).
+pub(crate) fn program_load_into(
+    cam: &mut CamArray,
+    layer: &crate::bnn::model::MappedLayer,
+    load: &Load,
+) {
+    let cfg = CamConfig::fitting(layer.seg_width).unwrap();
+    if cam.config() != cfg {
+        cam.reconfigure(cfg);
+    }
+    let width = cfg.width();
+    for (row, neuron) in (load.neuron_lo..load.neuron_hi).enumerate() {
+        let image = fit_width(&program_row(layer, load.seg, neuron), width);
+        cam.write_row(row, &image);
+    }
+    for row in (load.neuron_hi - load.neuron_lo)..cfg.rows() {
+        cam.clear_row(row);
+    }
 }
 
 /// Device-accurate inference engine for one mapped model.
@@ -117,6 +220,13 @@ impl RunStats {
     pub fn cycles_per_inference(&self) -> f64 {
         self.cycles as f64 / self.inferences.max(1) as f64
     }
+
+    /// Device cycles spent programming weight rows (one per row write).
+    /// Zero at steady state on a resident [`super::MacroPool`]; the
+    /// reload scheduler pays it on every batch.
+    pub fn programming_cycles(&self) -> u64 {
+        self.events.row_writes
+    }
 }
 
 impl<'m> Pipeline<'m> {
@@ -128,52 +238,11 @@ impl<'m> Pipeline<'m> {
         // of the configuration the layer runs at (C_ML scales with the full
         // row), while thresholds stay in logical mismatch counts — padded
         // spare columns always match and never discharge.
-        let hidden_points = model.layers[..model.layers.len() - 1]
-            .iter()
-            .map(|l| {
-                let cfg = CamConfig::fitting(l.seg_width)
-                    .unwrap_or_else(|| panic!("word width {} unsupported", l.seg_width));
-                let ctl = VoltageController::new(cfg.width(), opts.pvt);
-                let target = (l.seg_width / 2) as u32;
-                ctl.calibrate(target, 2.0)
-                    .or_else(|| ctl.calibrate(target, 4.0))
-                    .unwrap_or_else(|| ctl.calibrate_best(target))
-            })
-            .collect();
-        let schedule: Vec<i32> = match opts.schedule_prefix {
-            Some(k) => model.schedule.iter().copied().take(k).collect(),
-            None => model.schedule.clone(),
-        };
-        let out_cfg = CamConfig::fitting(out_layer.seg_width)
-            .expect("output word width unsupported");
-        let ctl_out = VoltageController::new(out_cfg.width(), opts.pvt);
-        let output_points = ctl_out.calibrate_schedule(
-            &schedule.iter().map(|&t| t.max(0) as u32).collect::<Vec<_>>(),
-        );
+        let hidden_points = calibrate_hidden_points(model, opts.pvt);
+        let schedule = resolve_schedule(model, &opts);
+        let output_points = calibrate_output_points(model, &schedule, opts.pvt);
         // load plans per layer
-        let plans = model
-            .layers
-            .iter()
-            .map(|l| {
-                let cfg = CamConfig::fitting(l.seg_width)
-                    .unwrap_or_else(|| panic!("word width {} unsupported", l.seg_width));
-                let rows = cfg.rows();
-                let mut loads = Vec::new();
-                for seg in 0..l.n_seg() {
-                    let mut lo = 0;
-                    while lo < l.n_out() {
-                        let hi = (lo + rows).min(l.n_out());
-                        loads.push(Load {
-                            seg,
-                            neuron_lo: lo,
-                            neuron_hi: hi,
-                        });
-                        lo = hi;
-                    }
-                }
-                loads
-            })
-            .collect();
+        let plans = plan_loads(model);
         let first_cfg = CamConfig::fitting(model.layers[0].seg_width).unwrap();
         let mut cam = CamArray::new(first_cfg, opts.pvt, opts.noise, opts.seed);
         cam.set_noise_scale(opts.noise_scale);
@@ -205,20 +274,8 @@ impl<'m> Pipeline<'m> {
             return;
         }
         let layer = &self.model.layers[layer_idx];
-        let cfg = CamConfig::fitting(layer.seg_width).unwrap();
-        if self.cam.config() != cfg {
-            self.cam.reconfigure(cfg);
-        }
         let load = &self.plans[layer_idx][load_idx];
-        let width = cfg.width();
-        for (row, neuron) in (load.neuron_lo..load.neuron_hi).enumerate() {
-            let image = fit_width(&program_row(layer, load.seg, neuron), width);
-            self.cam.write_row(row, &image);
-        }
-        // invalidate any stale rows beyond this load
-        for row in (load.neuron_hi - load.neuron_lo)..cfg.rows() {
-            self.cam.clear_row(row);
-        }
+        program_load_into(&mut self.cam, layer, load);
         self.resident = Some((layer_idx, load_idx));
     }
 
@@ -306,18 +363,9 @@ impl<'m> Pipeline<'m> {
         votes
     }
 
-    /// Host-device I/O cycles per image (128-bit bus, paper SoC): input
-    /// vector in, hidden activations out+in (through the control CPU), and
-    /// the per-execution MLSA fire words out.
+    /// Host-device I/O cycles per image (see [`io_cycles_per_image`]).
     fn io_cycles_per_image(&self) -> u64 {
-        let bus = crate::analog::constants::IO_BUS_BITS;
-        let n_in = self.model.n_in().div_ceil(bus) as u64;
-        let hidden: u64 = self.model.layers[..self.model.layers.len() - 1]
-            .iter()
-            .map(|l| 2 * l.n_out().div_ceil(bus) as u64) // readout + reload
-            .sum();
-        let votes_bits = self.model.n_classes() * self.schedule.len();
-        n_in + hidden + votes_bits.div_ceil(bus) as u64
+        io_cycles_per_image(self.model, self.schedule.len())
     }
 
     /// Classify a batch: returns (votes, prediction) per image.

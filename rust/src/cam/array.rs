@@ -40,6 +40,10 @@ pub struct CamArray {
     rng: Rng,
     pvt: Pvt,
     noise: NoiseMode,
+    /// Internal mismatch-count scratch for fire-only entry points
+    /// ([`CamArray::search`], [`CamArray::search_masked_fires`]): reused
+    /// across calls so the hot path allocates nothing.
+    scratch_m: Vec<u32>,
 }
 
 impl CamArray {
@@ -62,6 +66,7 @@ impl CamArray {
             rng,
             pvt,
             noise,
+            scratch_m: Vec::new(),
         }
     }
 
@@ -116,6 +121,7 @@ impl CamArray {
         };
         self.clock.tick(1);
         self.events.cells_written += self.config.width() as u64;
+        self.events.row_writes += 1;
     }
 
     /// Invalidate a row (its MLSA output is ignored by searches).
@@ -157,7 +163,30 @@ impl CamArray {
     ///
     /// `fires[r]` is meaningful only for valid rows; invalid rows report
     /// `false`.  Reuses caller buffers — the hot path allocates nothing.
+    /// Per-evaluation noise draws come from the array's own stream.
     pub fn search_into(&mut self, query: &BitVec, mismatches: &mut Vec<u32>, fires: &mut Vec<bool>) {
+        // advance the device stream through an external handle: clone in,
+        // draw, write back (Rng is two words; this is the cheap way to
+        // split the borrow of `self.rng` from the rest of the array)
+        let mut rng = self.rng.clone();
+        self.search_into_rng(query, mismatches, fires, &mut rng);
+        self.rng = rng;
+    }
+
+    /// [`CamArray::search_into`] with an explicit noise stream.
+    ///
+    /// The pool execution engine (`accel::macro_pool`) threads a per-image
+    /// RNG through every macro an image touches, so analog-mode results
+    /// are deterministic regardless of how worker threads interleave on
+    /// the shared macros (the frozen per-row variation was already drawn
+    /// from the macro's own stream at programming time).
+    pub fn search_into_rng(
+        &mut self,
+        query: &BitVec,
+        mismatches: &mut Vec<u32>,
+        fires: &mut Vec<bool>,
+        rng: &mut Rng,
+    ) {
         assert_eq!(query.len(), self.config.width(), "query width mismatch");
         let rows = self.config.rows();
         mismatches.clear();
@@ -168,7 +197,7 @@ impl CamArray {
         // cycle-global noise (supply, strobe jitter) drawn once per search:
         // every row of a cycle shares the rails and the MLSA strobe
         let cycle = match self.noise {
-            NoiseMode::Analog => Some(self.model.begin_cycle(&v, &mut self.rng)),
+            NoiseMode::Analog => Some(self.model.begin_cycle(&v, rng)),
             NoiseMode::Nominal => None,
         };
         for r in 0..rows {
@@ -181,7 +210,7 @@ impl CamArray {
             mismatches.push(m);
             let fire = match &cycle {
                 None => self.model.fires_nominal(m, &v, &self.row_var[r]),
-                Some(c) => c.fires(m, &self.row_var[r], &mut self.rng),
+                Some(c) => c.fires(m, &self.row_var[r], rng),
             };
             fires.push(fire);
         }
@@ -235,10 +264,26 @@ impl CamArray {
 
     /// Allocating convenience wrapper around [`CamArray::search_into`].
     pub fn search(&mut self, query: &BitVec) -> Vec<bool> {
-        let mut m = Vec::new();
+        let mut m = std::mem::take(&mut self.scratch_m);
         let mut f = Vec::new();
         self.search_into(query, &mut m, &mut f);
+        self.scratch_m = m;
         f
+    }
+
+    /// Fire-only masked search that honours the out-parameter contract:
+    /// the mismatch-count scratch is owned by the array and reused, so
+    /// repeated calls allocate nothing once `out_fires` has grown to the
+    /// row count (see `cam::ops::masked_search`).
+    pub fn search_masked_fires(
+        &mut self,
+        query: &BitVec,
+        mask: &BitVec,
+        out_fires: &mut Vec<bool>,
+    ) {
+        let mut m = std::mem::take(&mut self.scratch_m);
+        self.search_masked_into(query, mask, &mut m, out_fires);
+        self.scratch_m = m;
     }
 
     /// Matchline voltage trace for row `row` under the current rails

@@ -40,10 +40,10 @@ pub fn masked_search(
     out_fires: &mut Vec<bool>,
 ) {
     assert_eq!(query.len(), mask.len());
-    let (mut m, mut f) = (Vec::new(), Vec::new());
-    cam.search_masked_into(query, mask, &mut m, &mut f);
-    out_fires.clear();
-    out_fires.extend_from_slice(&f);
+    // honour the out-parameter contract: fires land directly in the
+    // caller's buffer and the mismatch-count scratch is owned (and reused)
+    // by the array — steady-state calls perform zero allocations
+    cam.search_masked_fires(query, mask, out_fires);
 }
 
 /// Result of a nearest-match retrieval.
@@ -198,5 +198,28 @@ mod tests {
         // unmasked search does not fire
         let plain = cam.search(&q);
         assert!(!plain[0]);
+    }
+
+    #[test]
+    fn masked_search_reuses_caller_buffer_without_reallocating() {
+        let mut rng = Rng::new(6, 2);
+        let mut cam = CamArray::nominal(CamConfig::W512x256);
+        cam.write_row(0, &rand_bits(512, &mut rng));
+        cam.set_voltages(crate::analog::Voltages::exact());
+        let q = rand_bits(512, &mut rng);
+        let mask = rand_bits(512, &mut rng);
+        let mut fires = Vec::new();
+        // first call grows the buffer to the row count …
+        masked_search(&mut cam, &q, &mask, &mut fires);
+        assert_eq!(fires.len(), 256);
+        let cap = fires.capacity();
+        let ptr = fires.as_ptr();
+        // … and repeated calls never reallocate it (or any scratch)
+        for _ in 0..100 {
+            masked_search(&mut cam, &q, &mask, &mut fires);
+        }
+        assert_eq!(fires.capacity(), cap, "out buffer reallocated");
+        assert_eq!(fires.as_ptr(), ptr, "out buffer moved");
+        assert_eq!(fires.len(), 256);
     }
 }

@@ -1,82 +1,144 @@
 //! Generic HLO-artifact execution: one compiled PJRT executable per
 //! artifact, executed with f32 literals.
+//!
+//! Two implementations behind one API:
+//! * `pjrt` feature enabled — the real XLA CPU client (requires the `xla`
+//!   bindings crate + xla_extension shared library at build time);
+//! * default (offline) — a stub whose `load` always fails with a clear
+//!   "backend unavailable" error, which every call site treats as a skip.
 
 use std::path::Path;
 
-use anyhow::{Context, Result};
+use super::{RtError, RtResult};
 
-/// A compiled PJRT executable wrapping one HLO-text artifact.
-pub struct Engine {
-    client: xla::PjRtClient,
-    exe: xla::PjRtLoadedExecutable,
-    path: String,
+#[cfg(feature = "pjrt")]
+mod real {
+    use super::*;
+
+    /// A compiled PJRT executable wrapping one HLO-text artifact.
+    pub struct Engine {
+        client: xla::PjRtClient,
+        exe: xla::PjRtLoadedExecutable,
+        path: String,
+    }
+
+    impl Engine {
+        /// Load + compile an HLO text artifact on the CPU PJRT client.
+        pub fn load(path: impl AsRef<Path>) -> RtResult<Engine> {
+            let path = path.as_ref();
+            let client = xla::PjRtClient::cpu()
+                .map_err(|e| RtError::msg(e.to_string()).context("create PJRT CPU client"))?;
+            let proto = xla::HloModuleProto::from_text_file(path.to_str().unwrap())
+                .map_err(|e| {
+                    RtError::msg(e.to_string())
+                        .context(format!("parse HLO text {}", path.display()))
+                })?;
+            let comp = xla::XlaComputation::from_proto(&proto);
+            let exe = client.compile(&comp).map_err(|e| {
+                RtError::msg(e.to_string()).context(format!("compile {}", path.display()))
+            })?;
+            Ok(Engine {
+                client,
+                exe,
+                path: path.display().to_string(),
+            })
+        }
+
+        pub fn platform(&self) -> String {
+            self.client.platform_name()
+        }
+
+        pub fn path(&self) -> &str {
+            &self.path
+        }
+
+        /// Execute with f32 inputs of the given shapes; returns the outputs
+        /// of the result tuple as flat f32 vectors (jax lowers with
+        /// return_tuple=True, so the single result is a tuple literal).
+        pub fn run_f32(&self, inputs: &[(&[f32], &[usize])]) -> RtResult<Vec<Vec<f32>>> {
+            let wrap = |e: xla::Error, ctx: &str| RtError::msg(e.to_string()).context(ctx);
+            let literals: Vec<xla::Literal> = inputs
+                .iter()
+                .map(|(data, shape)| {
+                    let lit = xla::Literal::vec1(data);
+                    let dims: Vec<i64> = shape.iter().map(|&d| d as i64).collect();
+                    lit.reshape(&dims).map_err(|e| wrap(e, "reshape input literal"))
+                })
+                .collect::<RtResult<_>>()?;
+            let mut result = self
+                .exe
+                .execute::<xla::Literal>(&literals)
+                .map_err(|e| wrap(e, "execute"))?[0][0]
+                .to_literal_sync()
+                .map_err(|e| wrap(e, "fetch result"))?;
+            let tuple = result
+                .decompose_tuple()
+                .map_err(|e| wrap(e, "decompose result tuple"))?;
+            tuple
+                .into_iter()
+                .map(|lit| {
+                    // outputs may be f32 or s32; normalise to f32
+                    match lit.ty() {
+                        Ok(xla::ElementType::F32) => {
+                            lit.to_vec::<f32>().map_err(|e| wrap(e, "f32 out"))
+                        }
+                        Ok(xla::ElementType::S32) => Ok(lit
+                            .to_vec::<i32>()
+                            .map_err(|e| wrap(e, "s32 out"))?
+                            .into_iter()
+                            .map(|v| v as f32)
+                            .collect()),
+                        other => Err(RtError::msg(format!(
+                            "unsupported output element type {other:?}"
+                        ))),
+                    }
+                })
+                .collect()
+        }
+    }
 }
 
-impl Engine {
-    /// Load + compile an HLO text artifact on the CPU PJRT client.
-    pub fn load(path: impl AsRef<Path>) -> Result<Engine> {
-        let path = path.as_ref();
-        let client = xla::PjRtClient::cpu().context("create PJRT CPU client")?;
-        let proto = xla::HloModuleProto::from_text_file(path.to_str().unwrap())
-            .with_context(|| format!("parse HLO text {}", path.display()))?;
-        let comp = xla::XlaComputation::from_proto(&proto);
-        let exe = client
-            .compile(&comp)
-            .with_context(|| format!("compile {}", path.display()))?;
-        Ok(Engine {
-            client,
-            exe,
-            path: path.display().to_string(),
-        })
+#[cfg(not(feature = "pjrt"))]
+mod stub {
+    use super::*;
+
+    /// Offline stand-in: carries the API surface of the PJRT engine but
+    /// cannot be constructed — `load` reports the backend as unavailable.
+    pub struct Engine {
+        // never constructed; kept so the API surface matches the real engine
+        #[allow(dead_code)]
+        path: String,
     }
 
-    pub fn platform(&self) -> String {
-        self.client.platform_name()
-    }
+    impl Engine {
+        pub fn load(path: impl AsRef<Path>) -> RtResult<Engine> {
+            Err(RtError::msg(format!(
+                "PJRT backend unavailable: built without the `pjrt` feature \
+                 (artifact {})",
+                path.as_ref().display()
+            )))
+        }
 
-    pub fn path(&self) -> &str {
-        &self.path
-    }
+        pub fn platform(&self) -> String {
+            "unavailable".to_string()
+        }
 
-    /// Execute with f32 inputs of the given shapes; returns the outputs of
-    /// the result tuple as flat f32 vectors (jax lowers with
-    /// return_tuple=True, so the single result is a tuple literal).
-    pub fn run_f32(&self, inputs: &[(&[f32], &[usize])]) -> Result<Vec<Vec<f32>>> {
-        let literals: Vec<xla::Literal> = inputs
-            .iter()
-            .map(|(data, shape)| {
-                let lit = xla::Literal::vec1(data);
-                let dims: Vec<i64> = shape.iter().map(|&d| d as i64).collect();
-                lit.reshape(&dims).context("reshape input literal")
-            })
-            .collect::<Result<_>>()?;
-        let mut result = self
-            .exe
-            .execute::<xla::Literal>(&literals)
-            .context("execute")?[0][0]
-            .to_literal_sync()
-            .context("fetch result")?;
-        let tuple = result.decompose_tuple().context("decompose result tuple")?;
-        tuple
-            .into_iter()
-            .map(|lit| {
-                // outputs may be f32 or s32; normalise to f32
-                match lit.ty() {
-                    Ok(xla::ElementType::F32) => lit.to_vec::<f32>().context("f32 out"),
-                    Ok(xla::ElementType::S32) => Ok(lit
-                        .to_vec::<i32>()
-                        .context("s32 out")?
-                        .into_iter()
-                        .map(|v| v as f32)
-                        .collect()),
-                    other => anyhow::bail!("unsupported output element type {other:?}"),
-                }
-            })
-            .collect()
+        pub fn path(&self) -> &str {
+            &self.path
+        }
+
+        pub fn run_f32(&self, _inputs: &[(&[f32], &[usize])]) -> RtResult<Vec<Vec<f32>>> {
+            Err(RtError::msg("PJRT backend unavailable"))
+        }
     }
 }
 
-#[cfg(test)]
+#[cfg(feature = "pjrt")]
+pub use real::Engine;
+#[cfg(not(feature = "pjrt"))]
+pub use stub::Engine;
+
+#[cfg(all(test, feature = "pjrt"))]
 mod tests {
     use super::*;
 
@@ -132,12 +194,8 @@ mod tests {
         let m: Vec<f32> = (0..256 * 64).map(|_| rng.below(257) as f32).collect();
         let v = [0.775f32, 0.6, 1.1];
         let out = eng.run_f32(&[(&m, &[256, 64]), (&v, &[3])]).unwrap();
-        let model = crate::analog::MatchlineModel::new(
-            256,
-            crate::analog::Pvt::nominal(),
-        );
-        let volts =
-            crate::analog::Voltages::new(v[0] as f64, v[1] as f64, v[2] as f64);
+        let model = crate::analog::MatchlineModel::new(256, crate::analog::Pvt::nominal());
+        let volts = crate::analog::Voltages::new(v[0] as f64, v[1] as f64, v[2] as f64);
         let tol = model.hd_tolerance(&volts);
         for (idx, &fire) in out[0].iter().enumerate() {
             let mm = m[idx] as f64;
@@ -147,5 +205,18 @@ mod tests {
             let want = if mm <= tol { 1.0 } else { 0.0 };
             assert_eq!(fire, want, "m={mm} tol={tol}");
         }
+    }
+}
+
+#[cfg(all(test, not(feature = "pjrt")))]
+mod stub_tests {
+    use super::*;
+
+    #[test]
+    fn stub_load_reports_unavailable() {
+        let err = Engine::load("nonexistent.hlo.txt").unwrap_err();
+        let msg = err.to_string();
+        assert!(msg.contains("PJRT backend unavailable"), "{msg}");
+        assert!(msg.contains("pjrt"), "{msg}");
     }
 }

@@ -2,12 +2,11 @@
 //! (the full Algorithm-1 graph with weights as runtime parameters) behind
 //! a batched classify API that matches the CAM pipeline's semantics.
 
-use anyhow::{Context, Result};
-
 use crate::bnn::model::MappedModel;
 use crate::util::bitops::BitVec;
 
 use super::engine::Engine;
+use super::{RtError, RtResult};
 
 /// AOT batch the artifacts were lowered at (python/compile/aot.py::BATCH).
 pub const AOT_BATCH: usize = 64;
@@ -40,11 +39,13 @@ fn weights_to_f32(layer: &crate::bnn::model::MappedLayer) -> Vec<f32> {
 impl InferEngine {
     /// Load the artifact for `name` ("mnist"/"hg") and bind the model's
     /// parameters.
-    pub fn load(name: &str, model: &MappedModel) -> Result<InferEngine> {
+    pub fn load(name: &str, model: &MappedModel) -> RtResult<InferEngine> {
         let path = crate::artifacts_dir().join(format!("{name}_infer.hlo.txt"));
         let engine = Engine::load(&path)
-            .with_context(|| format!("load inference artifact for {name}"))?;
-        anyhow::ensure!(model.layers.len() == 2, "artifact expects 2 layers");
+            .map_err(|e| e.context(format!("load inference artifact for {name}")))?;
+        if model.layers.len() != 2 {
+            return Err(RtError::msg("artifact expects 2 layers"));
+        }
         let l1 = &model.layers[0];
         let l2 = &model.layers[1];
         Ok(InferEngine {
@@ -67,16 +68,21 @@ impl InferEngine {
 
     /// Classify up to AOT_BATCH images; returns (votes, pred) per image.
     /// Short batches are padded (padding results are discarded).
-    pub fn classify_batch(&self, images: &[BitVec]) -> Result<Vec<(Vec<u32>, usize)>> {
-        anyhow::ensure!(!images.is_empty(), "empty batch");
-        anyhow::ensure!(
-            images.len() <= AOT_BATCH,
-            "batch {} exceeds AOT batch {AOT_BATCH}",
-            images.len()
-        );
+    pub fn classify_batch(&self, images: &[BitVec]) -> RtResult<Vec<(Vec<u32>, usize)>> {
+        if images.is_empty() {
+            return Err(RtError::msg("empty batch"));
+        }
+        if images.len() > AOT_BATCH {
+            return Err(RtError::msg(format!(
+                "batch {} exceeds AOT batch {AOT_BATCH}",
+                images.len()
+            )));
+        }
         let mut x = vec![1.0f32; AOT_BATCH * self.n_in];
         for (i, img) in images.iter().enumerate() {
-            anyhow::ensure!(img.len() == self.n_in, "image width mismatch");
+            if img.len() != self.n_in {
+                return Err(RtError::msg("image width mismatch"));
+            }
             for c in 0..self.n_in {
                 x[i * self.n_in + c] = if img.get(c) { 1.0 } else { -1.0 };
             }
@@ -89,15 +95,16 @@ impl InferEngine {
             (&self.q2, &[1, self.n_classes]),
             (&self.schedule, &[self.schedule.len()]),
         ])?;
-        anyhow::ensure!(out.len() == 2, "expected (votes, pred) outputs");
+        if out.len() != 2 {
+            return Err(RtError::msg("expected (votes, pred) outputs"));
+        }
         let votes_flat = &out[0];
         let preds = &out[1];
         Ok(images
             .iter()
             .enumerate()
             .map(|(i, _)| {
-                let votes: Vec<u32> = votes_flat
-                    [i * self.n_classes..(i + 1) * self.n_classes]
+                let votes: Vec<u32> = votes_flat[i * self.n_classes..(i + 1) * self.n_classes]
                     .iter()
                     .map(|&v| v as u32)
                     .collect();
@@ -107,7 +114,7 @@ impl InferEngine {
     }
 
     /// Classify an arbitrary number of images, chunking at the AOT batch.
-    pub fn classify_all(&self, images: &[BitVec]) -> Result<Vec<(Vec<u32>, usize)>> {
+    pub fn classify_all(&self, images: &[BitVec]) -> RtResult<Vec<(Vec<u32>, usize)>> {
         let mut out = Vec::with_capacity(images.len());
         for chunk in images.chunks(AOT_BATCH) {
             out.extend(self.classify_batch(chunk)?);

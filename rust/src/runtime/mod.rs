@@ -8,9 +8,42 @@
 //! loop.  Interchange is HLO *text* (not serialized protos): jax ≥ 0.5
 //! emits 64-bit instruction ids that xla_extension 0.5.1 rejects, while
 //! the text parser reassigns ids (see /opt/xla-example/README.md).
+//!
+//! The offline build has no xla_extension toolchain, so the real engine is
+//! gated behind the non-default `pjrt` cargo feature; the default build
+//! ships a stub whose `load` reports the backend as unavailable.  Every
+//! caller (benches, examples, the CLI) already treats a failing load as
+//! "backend unavailable" and falls back to the CAM simulator.
 
 pub mod engine;
 pub mod infer;
 
 pub use engine::Engine;
 pub use infer::InferEngine;
+
+/// Runtime-layer error: a rendered message chain (the offline build has no
+/// `anyhow`; this carries the same context-wrapping ergonomics we need).
+#[derive(Clone, Debug)]
+pub struct RtError(String);
+
+impl RtError {
+    pub fn msg(m: impl Into<String>) -> Self {
+        RtError(m.into())
+    }
+
+    /// Wrap with a context prefix (outermost first, like anyhow's chain).
+    pub fn context(self, ctx: impl std::fmt::Display) -> Self {
+        RtError(format!("{ctx}: {}", self.0))
+    }
+}
+
+impl std::fmt::Display for RtError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.write_str(&self.0)
+    }
+}
+
+impl std::error::Error for RtError {}
+
+/// Result alias for the runtime layer.
+pub type RtResult<T> = Result<T, RtError>;

@@ -1,12 +1,18 @@
 //! In-process inference server: a request/response loop over channels with
-//! a dynamic batcher in front of the pipeline — the shape a deployment
-//! would put around the accelerator (tokio is unavailable offline; std
-//! mpsc + threads carry the same architecture).
+//! a dynamic batcher in front of the resident [`MacroPool`] — the shape a
+//! deployment would put around the accelerator (tokio is unavailable
+//! offline; std mpsc + threads carry the same architecture).
+//!
+//! The pool keeps every layer's weights programmed and every schedule
+//! threshold's rails pre-tuned across the server's lifetime, so a served
+//! batch costs searches + I/O only (zero reprogramming, zero retunes at
+//! steady state); models exceeding the pool capacity transparently run on
+//! the reload scheduler inside the pool.
 
 use std::sync::mpsc;
 use std::time::{Duration, Instant};
 
-use crate::accel::{BatchPolicy, Batcher, Pipeline, PipelineOptions};
+use crate::accel::{BatchPolicy, Batcher, MacroPool, PipelineOptions, PoolMode};
 use crate::bnn::model::MappedModel;
 use crate::util::bitops::BitVec;
 use crate::util::stats::Summary;
@@ -44,21 +50,34 @@ impl ServerMetrics {
 }
 
 /// Synchronous single-threaded server core: feed requests in, drive the
-/// batcher + pipeline, collect responses.  The threaded front-end
+/// batcher + pool, collect responses.  The threaded front-end
 /// (`serve_workload`) wraps this with producer threads.
 pub struct Server<'m> {
-    pipeline: Pipeline<'m>,
+    pool: MacroPool<'m>,
     batcher: Batcher,
     pub metrics: ServerMetrics,
+    /// Inferences already reported by `take_device_stats` (delta base).
+    stats_reported: u64,
 }
 
 impl<'m> Server<'m> {
     pub fn new(model: &'m MappedModel, opts: PipelineOptions, policy: BatchPolicy) -> Self {
         Server {
-            pipeline: Pipeline::new(model, opts),
+            pool: MacroPool::new(model, opts),
             batcher: Batcher::new(policy),
             metrics: ServerMetrics::default(),
+            stats_reported: 0,
         }
+    }
+
+    /// Execution mode of the backing pool (resident vs reload fallback).
+    pub fn pool_mode(&self) -> PoolMode {
+        self.pool.mode()
+    }
+
+    /// The backing pool (diagnostics: macro count, operating points).
+    pub fn pool(&self) -> &MacroPool<'m> {
+        &self.pool
     }
 
     /// Enqueue one request; returns its id.
@@ -81,20 +100,26 @@ impl<'m> Server<'m> {
         if batch.is_empty() {
             return Vec::new();
         }
-        let images: Vec<BitVec> = batch.iter().map(|r| r.image.clone()).collect();
-        let results = self.pipeline.classify_batch(&images);
+        // move the images out of the requests — the classify path never
+        // clones a request body
+        let mut meta = Vec::with_capacity(batch.len());
+        let mut images = Vec::with_capacity(batch.len());
+        for req in batch {
+            meta.push((req.id, req.enqueued));
+            images.push(req.image);
+        }
+        let results = self.pool.classify_batch(&images);
         let done = Instant::now();
         self.metrics.batches += 1;
-        self.metrics.batch_sizes.push(batch.len() as f64);
-        batch
-            .into_iter()
+        self.metrics.batch_sizes.push(images.len() as f64);
+        meta.into_iter()
             .zip(results)
-            .map(|(req, (votes, prediction))| {
-                let latency = done.duration_since(req.enqueued);
+            .map(|((id, enqueued), (votes, prediction))| {
+                let latency = done.duration_since(enqueued);
                 self.metrics.served += 1;
                 self.metrics.latency_ms.push(latency.as_secs_f64() * 1e3);
                 Response {
-                    id: req.id,
+                    id,
                     prediction,
                     votes,
                     latency,
@@ -103,14 +128,21 @@ impl<'m> Server<'m> {
             .collect()
     }
 
-    /// Device statistics accumulated so far.
+    /// Drain device statistics accumulated since the *previous* call.
+    ///
+    /// Delta-based: each served inference is attributed to exactly one
+    /// report, so calling this twice never double-counts (the pool's
+    /// cycle/event counters are drained by `take_stats` and the served
+    /// total is diffed against the last report).
     pub fn take_device_stats(&mut self) -> crate::accel::RunStats {
-        self.pipeline.take_stats(self.metrics.served)
+        let delta = self.metrics.served - self.stats_reported;
+        self.stats_reported = self.metrics.served;
+        self.pool.take_stats(delta)
     }
 }
 
 /// Drive a server with a workload produced by `n_producers` threads, each
-/// submitting `per_producer` images with `inter_arrival` spacing.  Returns
+/// submitting a share of `images` with `inter_arrival` spacing.  Returns
 /// (responses in completion order, metrics).
 pub fn serve_workload(
     model: &MappedModel,
@@ -124,7 +156,7 @@ pub fn serve_workload(
     std::thread::scope(|s| {
         // producers
         let per = images.len().div_ceil(n_producers.max(1));
-        for chunk in images.chunks(per) {
+        for chunk in images.chunks(per.max(1)) {
             let tx = tx.clone();
             s.spawn(move || {
                 for img in chunk {
@@ -164,6 +196,7 @@ pub fn serve_workload(
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::accel::Pipeline;
     use crate::bnn::model::test_fixtures::tiny_model;
     use crate::cam::NoiseMode;
     use crate::util::rng::Rng;
@@ -251,5 +284,68 @@ mod tests {
         assert!(server.poll(false).is_empty(), "policy not yet ready");
         let got = server.poll(true);
         assert_eq!(got.len(), 1);
+    }
+
+    #[test]
+    fn device_stats_are_delta_based_not_cumulative() {
+        // regression: take_device_stats used to re-report the cumulative
+        // served count on every call
+        let model = tiny_model(64, 8, 3, 34);
+        let mut server = Server::new(
+            &model,
+            opts(),
+            BatchPolicy {
+                max_batch: 8,
+                max_wait: Duration::ZERO,
+            },
+        );
+        for img in images(8, 64) {
+            server.submit(img);
+        }
+        assert_eq!(server.poll(true).len(), 8);
+        let first = server.take_device_stats();
+        assert_eq!(first.inferences, 8);
+        assert!(first.cycles > 0);
+        // nothing served in between: second report must be empty
+        let second = server.take_device_stats();
+        assert_eq!(second.inferences, 0, "cumulative double count");
+        assert_eq!(second.cycles, 0, "device counters not drained");
+        // serve more: only the new inferences appear
+        for img in images(5, 64) {
+            server.submit(img);
+        }
+        assert_eq!(server.poll(true).len(), 5);
+        let third = server.take_device_stats();
+        assert_eq!(third.inferences, 5);
+        assert!(third.cycles > 0);
+    }
+
+    #[test]
+    fn server_runs_resident_and_pays_no_steady_state_programming() {
+        let model = tiny_model(64, 8, 3, 35);
+        let mut server = Server::new(
+            &model,
+            opts(),
+            BatchPolicy {
+                max_batch: 8,
+                max_wait: Duration::ZERO,
+            },
+        );
+        assert_eq!(server.pool_mode(), PoolMode::Resident);
+        // warmup epoch: construction programming drains with the first take
+        for img in images(8, 64) {
+            server.submit(img);
+        }
+        server.poll(true);
+        server.take_device_stats();
+        // steady state: zero programming / retunes
+        for img in images(8, 64) {
+            server.submit(img);
+        }
+        server.poll(true);
+        let steady = server.take_device_stats();
+        assert_eq!(steady.programming_cycles(), 0);
+        assert_eq!(steady.events.retunes, 0);
+        assert!(steady.events.searches > 0);
     }
 }

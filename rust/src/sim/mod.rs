@@ -20,6 +20,9 @@ pub struct EventCounters {
     pub mlsa_evals: u64,
     /// SRAM cells written (weight programming).
     pub cells_written: u64,
+    /// Row-write cycles (weight programming; one device cycle per row) —
+    /// the reload overhead the resident `MacroPool` eliminates.
+    pub row_writes: u64,
     /// DAC retune events.
     pub retunes: u64,
     /// Read cycles (diagnostics; not on the inference path).
@@ -37,6 +40,7 @@ impl EventCounters {
         self.sl_toggles += other.sl_toggles;
         self.mlsa_evals += other.mlsa_evals;
         self.cells_written += other.cells_written;
+        self.row_writes += other.row_writes;
         self.retunes += other.retunes;
         self.reads += other.reads;
         self.useful_macs += other.useful_macs;

@@ -447,6 +447,87 @@ mod tests {
     }
 
     #[test]
+    fn copy_bits_unaligned_src_roundtrip() {
+        // force the general (shift-gather) path: src_lo % 64 != 0, spans
+        // long enough to exercise whole-word windows plus boundary chunks
+        let mut rng = Rng::new(41, 9);
+        for _ in 0..400 {
+            let src_bits = 64 + rng.range_u64(1, 2048) as usize;
+            let dst_bits = 64 + rng.range_u64(1, 2048) as usize;
+            let mut src = BitVec::zeros(src_bits);
+            let mut dst = BitVec::zeros(dst_bits);
+            for i in 0..src_bits {
+                src.set(i, rng.chance(0.5));
+            }
+            for i in 0..dst_bits {
+                dst.set(i, rng.chance(0.5));
+            }
+            let max_len = (src_bits - 63).min(dst_bits);
+            let len = rng.range_u64(0, max_len as u64) as usize;
+            // src_lo deliberately word-misaligned (bump off alignment when
+            // the range still fits)
+            let mut src_lo = rng.range_u64(0, (src_bits - len) as u64) as usize;
+            if src_lo % 64 == 0 && src_lo + 1 + len <= src_bits {
+                src_lo += 1;
+            }
+            let dst_lo = rng.range_u64(0, (dst_bits - len) as u64) as usize;
+            let mut want = dst.clone();
+            for i in 0..len {
+                want.set(dst_lo + i, src.get(src_lo + i));
+            }
+            let mut got = dst.clone();
+            got.write_range(dst_lo, &src, src_lo, len);
+            assert_eq!(
+                got, want,
+                "src_bits={src_bits} dst_bits={dst_bits} len={len} src_lo={src_lo} dst_lo={dst_lo}"
+            );
+        }
+    }
+
+    #[test]
+    fn from_words_masks_tail_at_odd_lengths() {
+        // tail bits of the last word beyond `len` must be cleared, so the
+        // vector equals the same content built bit-by-bit and hamming /
+        // count_ones never see ghost bits
+        for len in [1usize, 63, 65, 100, 127, 129, 700, 784] {
+            let dirty = vec![!0u64; words_for(len)];
+            let v = BitVec::from_words(dirty, len);
+            assert_eq!(v.count_ones() as usize, len, "len {len}");
+            let want = BitVec::ones(len);
+            assert_eq!(v, want, "len {len}");
+            // round-trip through words() preserves the masked form
+            let v2 = BitVec::from_words(v.words().to_vec(), len);
+            assert_eq!(v2, v, "len {len}");
+            assert_eq!(v.hamming(&BitVec::zeros(len)) as usize, len);
+        }
+    }
+
+    #[test]
+    fn from_words_roundtrip_random_unaligned_lengths() {
+        let mut rng = Rng::new(77, 13);
+        for _ in 0..100 {
+            // lengths deliberately not multiples of 64
+            let len = (rng.range_u64(1, 2000) as usize) | 1;
+            let mut v = BitVec::zeros(len);
+            for i in 0..len {
+                v.set(i, rng.chance(0.5));
+            }
+            let rt = BitVec::from_words(v.words().to_vec(), len);
+            assert_eq!(rt, v, "len {len}");
+            assert_eq!(rt.count_ones(), v.count_ones());
+        }
+    }
+
+    #[test]
+    #[cfg(debug_assertions)]
+    #[should_panic]
+    fn hamming_words_rejects_length_mismatch_in_debug() {
+        let a = [0u64; 3];
+        let b = [0u64; 2];
+        let _ = hamming_words(&a, &b);
+    }
+
+    #[test]
     fn matrix_rows_roundtrip() {
         let rows: Vec<BitVec> = (0..5)
             .map(|r| {
