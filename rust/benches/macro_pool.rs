@@ -1,13 +1,15 @@
-//! Experiment A4 — resident multi-macro pool vs single-macro reload
-//! scheduler: steady-state device cost per inference.
+//! Experiment A4 — capacity-aware placement: steady-state device cost as
+//! the macro budget shrinks from full residency to the single-macro
+//! reload scheduler.
 //!
-//! The reload `Pipeline` reprograms the hidden layer every batch (the
-//! output rows evict it) and retunes the rails for all 33 output
-//! thresholds of every batch; the resident `MacroPool` pays programming
-//! and retuning once at construction.  This bench measures both engines on
-//! the same synthetic MNIST-shaped model (784 -> 128 -> 10; no artifacts
-//! needed) and reports steady-state cycles/inference, programming cycles,
-//! and retune stalls.
+//! The model is HG-shaped for the planner's acceptance case: 6 hidden
+//! loads + 33 output thresholds = 39 macros for full residency, planned
+//! down into 16.  Under the degraded budget every hidden load keeps its
+//! dedicated macro (zero steady-state programming) while the output
+//! thresholds share: 9 stay pinned, the other 24 funnel through one
+//! LRU-parked slot and pay a tracked retune per operating-point switch —
+//! still strictly cheaper than the reload `Pipeline`, which reprograms
+//! every hidden load *and* retunes all 33 thresholds every batch.
 //!
 //! Run: `cargo bench --bench macro_pool`
 
@@ -42,10 +44,13 @@ fn layer(rng: &mut Rng, n_out: usize, n_in: usize, width: usize) -> MappedLayer 
     }
 }
 
-fn mnist_shaped(seed: u64) -> MappedModel {
+/// HG-shaped synthetic model: 1500 -> 384 -> 6.  The hidden layer runs at
+/// the 2048x64 configuration, so its 384 neurons need 6 weight loads;
+/// with the 33-threshold schedule that is 39 macros for full residency.
+fn hg_shaped(seed: u64) -> MappedModel {
     let mut rng = Rng::new(seed, 0xBE9C);
-    let l1 = layer(&mut rng, 128, 784, 1024);
-    let l2 = layer(&mut rng, 10, 128, 512);
+    let l1 = layer(&mut rng, 384, 1500, 2048);
+    let l2 = layer(&mut rng, 6, 384, 512);
     let m = MappedModel {
         layers: vec![l1, l2],
         schedule: (0..=64).step_by(2).collect(),
@@ -56,29 +61,65 @@ fn mnist_shaped(seed: u64) -> MappedModel {
     m
 }
 
+struct Run {
+    label: String,
+    macros: usize,
+    cpi: f64,
+    program: u64,
+    retunes_per_batch: f64,
+    stall_us_per_inf: f64,
+    inf_s: f64,
+    host_img_s: f64,
+}
+
 fn main() {
     let t0 = Timer::start();
-    let model = mnist_shaped(7);
+    let model = hg_shaped(7);
     let mut rng = Rng::new(3, 3);
-    let images: Vec<BitVec> = (0..256).map(|_| rand_bits(784, &mut rng)).collect();
+    let images: Vec<BitVec> = (0..128).map(|_| rand_bits(1500, &mut rng)).collect();
     let opts = PipelineOptions {
         noise: NoiseMode::Nominal,
         ..Default::default()
     };
-    let batches = 8usize;
+    let batches = 4usize;
     let n_inf = (batches * images.len()) as u64;
+    let required = MacroPool::macros_required(&model, &opts);
+    assert_eq!(required, 39, "the acceptance shape: 6 loads + 33 thresholds");
 
-    // --- resident pool: program once, serve forever ---
-    let pool = MacroPool::new(&model, opts);
-    assert_eq!(pool.mode(), PoolMode::Resident);
-    pool.classify_batch(&images); // warmup epoch
-    let warm = pool.take_stats(images.len() as u64);
-    let t = Timer::start();
-    for _ in 0..batches {
-        pool.classify_batch(&images);
+    let mut runs: Vec<Run> = Vec::new();
+    for (name, budget) in [("full residency", required), ("degraded", 16)] {
+        let pool = MacroPool::with_capacity(&model, opts, budget);
+        assert_eq!(pool.mode(), PoolMode::Resident, "{name}");
+        let plan = pool.plan().unwrap();
+        println!("budget {budget:>2} ({name}): {}", plan.describe());
+        pool.classify_batch(&images); // warmup epoch
+        pool.take_stats(images.len() as u64);
+        let t = Timer::start();
+        for _ in 0..batches {
+            pool.classify_batch(&images);
+        }
+        let host = t.elapsed_s();
+        let stats = pool.take_stats(n_inf);
+        assert_eq!(
+            stats.programming_cycles(),
+            0,
+            "{name}: resident steady state must not program"
+        );
+        assert!(
+            stats.events.retunes <= plan.predicted_retunes_per_batch() * batches as u64,
+            "{name}: retunes exceed the plan's cost model"
+        );
+        runs.push(Run {
+            label: format!("MacroPool ({budget} macros, {name})"),
+            macros: pool.n_macros(),
+            cpi: stats.cycles_per_inference(),
+            program: stats.programming_cycles(),
+            retunes_per_batch: stats.events.retunes as f64 / batches as f64,
+            stall_us_per_inf: stats.stall_s * 1e6 / n_inf as f64,
+            inf_s: stats.inferences_per_s(),
+            host_img_s: n_inf as f64 / host,
+        });
     }
-    let host_pool = t.elapsed_s();
-    let pool_stats = pool.take_stats(n_inf);
 
     // --- reload pipeline: reprogram + retune every batch ---
     let mut pipe = Pipeline::new(&model, opts);
@@ -88,63 +129,70 @@ fn main() {
     for _ in 0..batches {
         pipe.classify_batch(&images);
     }
-    let host_pipe = t.elapsed_s();
-    let pipe_stats = pipe.take_stats(n_inf);
+    let host = t.elapsed_s();
+    let stats = pipe.take_stats(n_inf);
+    runs.push(Run {
+        label: "Pipeline (1 macro, reload)".into(),
+        macros: 1,
+        cpi: stats.cycles_per_inference(),
+        program: stats.programming_cycles(),
+        retunes_per_batch: stats.events.retunes as f64 / batches as f64,
+        stall_us_per_inf: stats.stall_s * 1e6 / n_inf as f64,
+        inf_s: stats.inferences_per_s(),
+        host_img_s: n_inf as f64 / host,
+    });
 
     let mut table = Table::new(
         &format!(
-            "A4: resident MacroPool ({} macros) vs reload Pipeline — steady state, \
-             {batches} × {} images",
-            pool.n_macros(),
+            "A4: placement plan vs macro budget — steady state, {batches} × {} images, \
+             full residency = {required} macros",
             images.len()
         ),
         &[
             "engine",
+            "macros",
             "cycles/inf",
             "program cyc",
-            "retunes",
+            "retunes/batch",
             "stall µs/inf",
             "device inf/s",
             "host img/s",
         ],
     );
-    for (name, stats, host) in [
-        ("MacroPool (resident)", &pool_stats, host_pool),
-        ("Pipeline (reload)", &pipe_stats, host_pipe),
-    ] {
+    for r in &runs {
         table.row(vec![
-            name.to_string(),
-            format!("{:.1}", stats.cycles_per_inference()),
-            stats.programming_cycles().to_string(),
-            stats.events.retunes.to_string(),
-            format!("{:.3}", stats.stall_s * 1e6 / n_inf as f64),
-            format!("{:.0}", stats.inferences_per_s()),
-            format!("{:.0}", n_inf as f64 / host),
+            r.label.clone(),
+            r.macros.to_string(),
+            format!("{:.1}", r.cpi),
+            r.program.to_string(),
+            format!("{:.1}", r.retunes_per_batch),
+            format!("{:.3}", r.stall_us_per_inf),
+            format!("{:.0}", r.inf_s),
+            format!("{:.0}", r.host_img_s),
         ]);
     }
     table.print();
 
-    println!(
-        "\nwarmup epoch (pool construction + first batch): {} programming cycles, \
-         {} retune events",
-        warm.programming_cycles(),
-        warm.events.retunes
-    );
-    assert_eq!(
-        pool_stats.programming_cycles(),
-        0,
-        "resident steady state must not program"
-    );
-    assert_eq!(pool_stats.events.retunes, 0, "resident steady state must not retune");
+    let (full, degraded, reload) = (&runs[0], &runs[1], &runs[2]);
+    assert_eq!(full.retunes_per_batch, 0.0, "full residency never retunes");
     assert!(
-        pool_stats.cycles_per_inference() < pipe_stats.cycles_per_inference(),
-        "resident pool must beat the reload scheduler: {} vs {}",
-        pool_stats.cycles_per_inference(),
-        pipe_stats.cycles_per_inference()
+        degraded.retunes_per_batch < reload.retunes_per_batch,
+        "degraded budget must retune strictly less than reload: {} vs {}",
+        degraded.retunes_per_batch,
+        reload.retunes_per_batch
+    );
+    assert!(reload.program > 0, "reload reprograms every batch");
+    assert!(
+        degraded.cpi < reload.cpi,
+        "degraded residency must beat the reload scheduler: {} vs {}",
+        degraded.cpi,
+        reload.cpi
     );
     println!(
-        "\nresident advantage: {:.1}% fewer device cycles per inference",
-        100.0 * (1.0 - pool_stats.cycles_per_inference() / pipe_stats.cycles_per_inference())
+        "\ndegraded-budget advantage over reload: {:.1}% fewer device cycles/inf, \
+         {:.0} fewer retunes/batch (cost model bound held)",
+        100.0 * (1.0 - degraded.cpi / reload.cpi),
+        reload.retunes_per_batch - degraded.retunes_per_batch
     );
     println!("\n[macro_pool done in {:.1}s]", t0.elapsed_s());
 }

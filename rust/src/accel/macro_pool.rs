@@ -3,32 +3,38 @@
 //! The single-macro [`Pipeline`] reprograms every layer's rows into one
 //! simulated 128-kbit macro on **every batch** and retunes the rails for
 //! every output threshold of every batch — pure overhead at steady state.
-//! A `MacroPool` instead partitions a model's layer segments across N
-//! simulated [`CamArray`] macros at construction time:
+//! A `MacroPool` instead executes a [`PlacementPlan`] built by
+//! [`super::planner`] against an explicit macro budget:
 //!
 //! * every hidden-layer *load* (one segment's neuron chunk that fits the
-//!   configured row count) gets its own macro, programmed **once** and
-//!   parked at the layer's midpoint operating point;
-//! * the output layer is replicated across one macro **per schedule
-//!   threshold**, each parked at its calibrated (V_ref, V_eval, V_st)
-//!   triple — so the per-batch threshold sweep becomes a walk across
-//!   pre-tuned macros with **zero retunes and zero reprogramming**.
+//!   configured row count) gets at least one dedicated macro, programmed
+//!   **once** and parked at the layer's midpoint operating point; surplus
+//!   budget buys *replicas* of the largest loads so parallel workers
+//!   search a free replica instead of serialising on one mutex;
+//! * the output layer's rows are programmed into `pinned + shared` slot
+//!   macros.  Pinned slots park one threshold's calibrated (V_ref,
+//!   V_eval, V_st) triple forever; shared slots serve the remaining
+//!   thresholds, parking one triple at a time and paying a tracked retune
+//!   when the sweep switches operating points (LRU over parked triples).
 //!
-//! This is the paper's §V-B amortisation argument taken to its limit (and
-//! the way PIMBALL / ChewBaccaNN scale BNN inference across many in-memory
-//! arrays): weight loads and voltage retunes are paid once per deployment,
-//! not once per batch.  Models whose load count exceeds the pool capacity
-//! fall back to the existing reload scheduler ([`Pipeline`]) transparently.
+//! This is the paper's §V-B amortisation argument taken past the PR 1
+//! all-or-nothing split: weight loads are paid once per deployment at any
+//! viable budget, and retunes degrade *gradually* as the budget shrinks.
+//! Only models whose hidden loads alone exceed the budget fall back to
+//! the reload scheduler ([`Pipeline`]).
 //!
-//! Concurrency: every macro sits behind a `Mutex`, so one pool can be
-//! shared across worker threads (`classify_parallel`, `Server`).  Analog
-//! noise stays deterministic under any thread interleaving because frozen
-//! per-row variation is drawn from each macro's own seed at construction,
-//! while per-evaluation noise is drawn from a per-image stream derived
-//! from (pool seed, image index) — see [`CamArray::search_into_rng`].
+//! Concurrency & determinism: every macro sits behind a `Mutex`, so one
+//! pool can be shared across worker threads (`classify_parallel`,
+//! `Server`).  Replicas of a hidden load — and all output slots — are
+//! seeded identically, so their frozen per-row variation is bit-identical
+//! and an image's result does not depend on *which* replica or slot
+//! served it; per-evaluation noise is drawn from a per-image stream
+//! derived from (pool seed, image index) — see
+//! [`CamArray::search_into_rng`].  Only retune/stall *accounting* can
+//! vary with thread interleaving on shared slots.
 
-use std::sync::atomic::{AtomicU64, Ordering};
-use std::sync::Mutex;
+use std::sync::atomic::{AtomicU64, AtomicUsize, Ordering};
+use std::sync::{Mutex, MutexGuard};
 
 use crate::bnn::mapping::segment_query_wide;
 use crate::bnn::model::MappedModel;
@@ -39,9 +45,10 @@ use crate::util::rng::{splitmix64, Rng};
 
 use super::pipeline::{
     calibrate_hidden_points, calibrate_output_points, io_cycles_per_image, plan_loads,
-    program_load_into, resolve_schedule, Load,
+    program_load_into, resolve_schedule, CategoryCost, Load,
 };
 use super::pipeline::{Pipeline, PipelineOptions, RunStats};
+use super::planner::{self, PlacementPlan};
 use super::voltage::CalibratedPoint;
 
 /// Default number of simulated macros a pool may instantiate.
@@ -50,9 +57,9 @@ pub const DEFAULT_POOL_MACROS: usize = 64;
 /// How the pool executes a model.
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
 pub enum PoolMode {
-    /// Every load and every output threshold is resident on its own macro.
+    /// Hidden loads (and some or all output thresholds) are resident.
     Resident,
-    /// The model exceeds the pool capacity; the reload scheduler runs it.
+    /// The budget cannot hold the hidden loads; the reload scheduler runs.
     Reload,
 }
 
@@ -62,13 +69,83 @@ fn macro_seed(base: u64, idx: u64) -> u64 {
     splitmix64(&mut s)
 }
 
+/// One hidden load's replica set: identically seeded + programmed macros.
+/// `acquire` hands out a free replica (round-robin try-lock) so parallel
+/// workers only serialise when every replica is busy.
+struct LoadSlots {
+    replicas: Vec<Mutex<CamArray>>,
+    next: AtomicUsize,
+}
+
+impl LoadSlots {
+    fn acquire(&self) -> MutexGuard<'_, CamArray> {
+        let n = self.replicas.len();
+        let start = self.next.fetch_add(1, Ordering::Relaxed) % n;
+        for k in 0..n {
+            if let Ok(guard) = self.replicas[(start + k) % n].try_lock() {
+                return guard;
+            }
+        }
+        self.replicas[start].lock().unwrap()
+    }
+}
+
+/// One output slot: the programmed class rows plus the threshold its
+/// rails are currently parked at (guarded together, so the parked record
+/// can never drift from the actual rails).
+struct OutputSlotState {
+    cam: CamArray,
+    parked: Option<usize>,
+}
+
+/// LRU routing metadata for the shared output slots.  Held briefly per
+/// threshold dispatch; the authoritative parked state lives in the slot.
+struct SharedRouter {
+    parked: Vec<Option<usize>>,
+    stamp: Vec<u64>,
+    tick: u64,
+}
+
+impl SharedRouter {
+    fn new(n_slots: usize) -> Self {
+        SharedRouter {
+            parked: vec![None; n_slots],
+            stamp: vec![0; n_slots],
+            tick: 0,
+        }
+    }
+
+    /// Slot index (within the shared set) to serve `threshold`: a slot
+    /// already parked there if any, else the least recently used.
+    fn route(&mut self, threshold: usize) -> usize {
+        self.tick += 1;
+        let idx = match self.parked.iter().position(|&p| p == Some(threshold)) {
+            Some(hit) => hit,
+            None => {
+                let (lru, _) = self
+                    .stamp
+                    .iter()
+                    .enumerate()
+                    .min_by_key(|&(_, &s)| s)
+                    .expect("router has slots");
+                self.parked[lru] = Some(threshold);
+                lru
+            }
+        };
+        self.stamp[idx] = self.tick;
+        idx
+    }
+}
+
 struct Resident {
-    /// One programmed macro per hidden (layer, load), parked at the
-    /// layer's midpoint operating point.
-    hidden_slots: Vec<Vec<Mutex<CamArray>>>,
-    /// One programmed macro per output-schedule threshold, parked at that
-    /// threshold's operating point.
-    output_slots: Vec<Mutex<CamArray>>,
+    plan: PlacementPlan,
+    /// Replica sets per hidden (layer, load), parked at the layer's
+    /// midpoint operating point.
+    hidden_slots: Vec<Vec<LoadSlots>>,
+    /// Output slots: the first `plan.pinned` are permanently parked, the
+    /// rest are the LRU-shared set.
+    output_slots: Vec<Mutex<OutputSlotState>>,
+    router: Mutex<SharedRouter>,
     /// Host-device I/O cycles (shared 128-bit bus; same clock domain).
     io_clock: Mutex<SimClock>,
 }
@@ -82,7 +159,7 @@ pub struct MacroPool<'m> {
     hidden_points: Vec<CalibratedPoint>,
     output_points: Vec<CalibratedPoint>,
     resident: Option<Resident>,
-    /// Reload fallback when the model exceeds the pool capacity.
+    /// Reload fallback when the budget cannot hold the hidden loads.
     fallback: Option<Mutex<Pipeline<'m>>>,
     /// Next per-image noise-stream index for [`MacroPool::classify_batch`].
     stream_cursor: AtomicU64,
@@ -94,71 +171,129 @@ impl<'m> MacroPool<'m> {
         Self::with_capacity(model, opts, DEFAULT_POOL_MACROS)
     }
 
-    /// Macros a resident pool needs for `model` under `opts`:
-    /// one per hidden load plus one per output-schedule threshold.
+    /// Macros *full* residency needs for `model` under `opts`: one per
+    /// hidden load plus one per output-schedule threshold.  Budgets below
+    /// this still run resident via threshold sharing (down to hidden
+    /// loads + 1); budgets above it buy hidden-load replicas.
     pub fn macros_required(model: &MappedModel, opts: &PipelineOptions) -> usize {
         Self::required_for(&plan_loads(model), resolve_schedule(model, opts).len())
     }
 
-    /// Single source of the residency formula (shared by the public probe
-    /// and the constructor's capacity check).
+    /// Single source of the full-residency formula.
     fn required_for(plans: &[Vec<Load>], schedule_len: usize) -> usize {
         let hidden: usize = plans[..plans.len() - 1].iter().map(Vec::len).sum();
         hidden + schedule_len
     }
 
-    /// Pool with an explicit macro budget; falls back to the reload
-    /// scheduler when the model needs more macros than `max_macros`.
+    /// Hidden-load row counts in planner shape (`[layer][load]`).
+    fn load_rows(plans: &[Vec<Load>]) -> Vec<Vec<usize>> {
+        plans[..plans.len() - 1]
+            .iter()
+            .map(|layer| layer.iter().map(|l| l.neuron_hi - l.neuron_lo).collect())
+            .collect()
+    }
+
+    /// The placement the planner would choose for `model` under `budget`
+    /// macros, without building anything (no calibration, no macros).
+    /// `None` means the pool would run in reload mode; feasibility never
+    /// depends on the worker count.
+    pub fn plan_for(
+        model: &MappedModel,
+        opts: &PipelineOptions,
+        budget: usize,
+    ) -> Option<PlacementPlan> {
+        let plans = plan_loads(model);
+        let schedule = resolve_schedule(model, opts);
+        planner::plan(&Self::load_rows(&plans), schedule.len(), budget, 1)
+    }
+
+    /// Pool with an explicit macro budget, planned for a single searcher
+    /// (no hidden-load replicas; see [`Self::with_capacity_for_workers`]).
     pub fn with_capacity(model: &'m MappedModel, opts: PipelineOptions, max_macros: usize) -> Self {
+        Self::with_capacity_for_workers(model, opts, max_macros, 1)
+    }
+
+    /// Pool with an explicit macro budget serving `workers` concurrent
+    /// searchers.  The planner decides the placement (see
+    /// [`super::planner`]): surplus budget beyond full threshold pinning
+    /// buys hidden-load replicas, up to one per worker; only when even
+    /// the hidden loads don't fit does the pool fall back to the reload
+    /// scheduler.
+    pub fn with_capacity_for_workers(
+        model: &'m MappedModel,
+        opts: PipelineOptions,
+        max_macros: usize,
+        workers: usize,
+    ) -> Self {
         let out_layer = model.layers.last().expect("model has layers");
         assert_eq!(out_layer.n_seg(), 1, "output layer must fit one CAM word");
         let schedule = resolve_schedule(model, &opts);
         let plans = plan_loads(model);
         let out_idx = model.layers.len() - 1;
         assert_eq!(plans[out_idx].len(), 1, "output layer fits one load");
-        let needed = Self::required_for(&plans, schedule.len());
+        let plan = planner::plan(&Self::load_rows(&plans), schedule.len(), max_macros, workers);
 
         // calibration (a voltage grid search per hidden layer + per
         // threshold) only runs for the resident path; the reload fallback's
         // Pipeline performs its own identical calibration internally
-        let (resident, fallback, hidden_points, output_points) = if needed <= max_macros {
+        let (resident, fallback, hidden_points, output_points) = if let Some(plan) = plan {
             let hidden_points = calibrate_hidden_points(model, opts.pvt);
             let output_points = calibrate_output_points(model, &schedule, opts.pvt);
-            let mut next_macro = 0u64;
-            let mut mk_cam = |cfg: CamConfig| {
+            // replicas of a load (and all output slots) share one seed, so
+            // frozen per-row variation is identical and results never
+            // depend on which replica served an image
+            let mk_cam = |cfg: CamConfig, seed_idx: u64| {
                 let mut cam =
-                    CamArray::new(cfg, opts.pvt, opts.noise, macro_seed(opts.seed, next_macro));
-                next_macro += 1;
+                    CamArray::new(cfg, opts.pvt, opts.noise, macro_seed(opts.seed, seed_idx));
                 cam.set_noise_scale(opts.noise_scale);
                 cam
             };
+            let mut seed_idx = 0u64;
             let mut hidden_slots = Vec::with_capacity(out_idx);
             for (li, layer) in model.layers[..out_idx].iter().enumerate() {
                 let cfg = CamConfig::fitting(layer.seg_width)
                     .unwrap_or_else(|| panic!("word width {} unsupported", layer.seg_width));
                 let mut slots = Vec::with_capacity(plans[li].len());
-                for load in &plans[li] {
-                    let mut cam = mk_cam(cfg);
-                    program_load_into(&mut cam, layer, load);
-                    cam.set_voltages(hidden_points[li].voltages);
-                    slots.push(Mutex::new(cam));
+                for (di, load) in plans[li].iter().enumerate() {
+                    let replicas = (0..plan.hidden_replicas[li][di])
+                        .map(|_| {
+                            let mut cam = mk_cam(cfg, seed_idx);
+                            program_load_into(&mut cam, layer, load);
+                            cam.set_voltages(hidden_points[li].voltages);
+                            Mutex::new(cam)
+                        })
+                        .collect();
+                    seed_idx += 1;
+                    slots.push(LoadSlots {
+                        replicas,
+                        next: AtomicUsize::new(0),
+                    });
                 }
                 hidden_slots.push(slots);
             }
             let out_cfg = CamConfig::fitting(out_layer.seg_width)
                 .expect("output word width unsupported");
             let out_load = &plans[out_idx][0];
-            let mut output_slots = Vec::with_capacity(schedule.len());
-            for point in &output_points {
-                let mut cam = mk_cam(out_cfg);
-                program_load_into(&mut cam, out_layer, out_load);
-                cam.set_voltages(point.voltages);
-                output_slots.push(Mutex::new(cam));
-            }
+            let output_slots: Vec<Mutex<OutputSlotState>> = (0..plan.output_macros())
+                .map(|slot| {
+                    let mut cam = mk_cam(out_cfg, seed_idx);
+                    program_load_into(&mut cam, out_layer, out_load);
+                    let parked = if slot < plan.pinned {
+                        cam.set_voltages(output_points[slot].voltages);
+                        Some(slot)
+                    } else {
+                        None
+                    };
+                    Mutex::new(OutputSlotState { cam, parked })
+                })
+                .collect();
+            let router = Mutex::new(SharedRouter::new(plan.shared_slots));
             (
                 Some(Resident {
+                    plan,
                     hidden_slots,
                     output_slots,
+                    router,
                     io_clock: Mutex::new(SimClock::new()),
                 }),
                 None,
@@ -195,12 +330,15 @@ impl<'m> MacroPool<'m> {
         }
     }
 
+    /// The placement plan backing a resident pool (`None` in reload mode).
+    pub fn plan(&self) -> Option<&PlacementPlan> {
+        self.resident.as_ref().map(|r| &r.plan)
+    }
+
     /// Simulated macros instantiated by this pool (1 in reload mode).
     pub fn n_macros(&self) -> usize {
         match &self.resident {
-            Some(r) => {
-                r.hidden_slots.iter().map(Vec::len).sum::<usize>() + r.output_slots.len()
-            }
+            Some(r) => r.plan.macros_used(),
             None => 1,
         }
     }
@@ -294,7 +432,7 @@ impl<'m> MacroPool<'m> {
         // rails were parked at the layer's midpoint at construction — no
         // set_voltages on the batch path
         for (load_idx, load) in self.plans[layer_idx].iter().enumerate() {
-            let mut cam = resident.hidden_slots[layer_idx][load_idx].lock().unwrap();
+            let mut cam = resident.hidden_slots[layer_idx][load_idx].acquire();
             let width = cam.config().width();
             let payload = (load.neuron_hi - load.neuron_lo) as u64
                 * (layer.seg_bounds[load.seg + 1] - layer.seg_bounds[load.seg]) as u64;
@@ -322,8 +460,9 @@ impl<'m> MacroPool<'m> {
             .collect()
     }
 
-    /// Output-layer threshold sweep: one pre-tuned macro per threshold, so
-    /// a batch is a pure sequence of searches — no retunes.
+    /// Output-layer threshold sweep: pinned thresholds hit their
+    /// permanently parked macro; the rest route through the shared slots,
+    /// paying a retune only when the slot must switch operating points.
     fn run_output(
         &self,
         resident: &Resident,
@@ -341,8 +480,21 @@ impl<'m> MacroPool<'m> {
         let mut votes = vec![vec![0u32; n_cls]; hidden.len()];
         let (mut m, mut f) = (Vec::new(), Vec::new());
         let payload = (layer.n_in() * n_cls) as u64;
-        for slot in &resident.output_slots {
-            let mut cam = slot.lock().unwrap();
+        let pinned = resident.plan.pinned;
+        for k in 0..self.schedule.len() {
+            let slot_idx = if k < pinned {
+                k
+            } else {
+                pinned + resident.router.lock().unwrap().route(k)
+            };
+            let mut slot = resident.output_slots[slot_idx].lock().unwrap();
+            if slot.parked != Some(k) {
+                // switching operating points: the retune + stall is
+                // counted by set_voltages (free if the triples coincide)
+                slot.cam.set_voltages(self.output_points[k].voltages);
+                slot.parked = Some(k);
+            }
+            let cam = &mut slot.cam;
             for (img_idx, q) in queries.iter().enumerate() {
                 cam.search_into_rng(q, &mut m, &mut f, &mut rngs[img_idx]);
                 cam.events.useful_macs += payload;
@@ -359,6 +511,7 @@ impl<'m> MacroPool<'m> {
     /// Drain device statistics accumulated since the last call, summed
     /// across every macro in the pool (aggregate device work, not
     /// wall-clock: resident macros operate concurrently in silicon).
+    /// Hidden-load and output-slot costs are attributed per category.
     pub fn take_stats(&self, inferences: u64) -> RunStats {
         if let Some(fb) = &self.fallback {
             return fb.lock().unwrap().take_stats(inferences);
@@ -368,20 +521,28 @@ impl<'m> MacroPool<'m> {
             inferences,
             ..RunStats::default()
         };
-        let mut drain = |cam: &mut CamArray| {
+        let mut drain = |cam: &mut CamArray, cost: &mut CategoryCost| {
             stats.cycles += cam.clock.cycles;
             stats.stall_s += cam.clock.stall_s;
             stats.events.add(&cam.events);
+            cost.retunes += cam.events.retunes;
+            cost.row_writes += cam.events.row_writes;
             cam.reset_accounting();
         };
+        let mut hidden_cost = CategoryCost::default();
+        let mut output_cost = CategoryCost::default();
         for slots in &resident.hidden_slots {
             for slot in slots {
-                drain(&mut slot.lock().unwrap());
+                for replica in &slot.replicas {
+                    drain(&mut replica.lock().unwrap(), &mut hidden_cost);
+                }
             }
         }
         for slot in &resident.output_slots {
-            drain(&mut slot.lock().unwrap());
+            drain(&mut slot.lock().unwrap().cam, &mut output_cost);
         }
+        stats.hidden_cost = hidden_cost;
+        stats.output_cost = output_cost;
         let mut io = resident.io_clock.lock().unwrap();
         stats.cycles += io.cycles;
         stats.stall_s += io.stall_s;
@@ -443,6 +604,45 @@ mod tests {
     }
 
     #[test]
+    fn budget_constrained_plan_matches_reload_pipeline_bit_exactly() {
+        // satellite acceptance: threshold sharing active (most thresholds
+        // funnel through one shared slot) must not change a single vote
+        let model = tiny_model(100, 16, 4, 42);
+        let images = rand_images(24, 100, 7);
+        let required = MacroPool::macros_required(&model, &nominal());
+        for budget in [2usize, 5, required / 2] {
+            let pool = MacroPool::with_capacity(&model, nominal(), budget);
+            assert_eq!(pool.mode(), PoolMode::Resident, "budget {budget}");
+            let plan = pool.plan().unwrap();
+            assert!(plan.sharing_active(), "budget {budget}");
+            assert!(plan.macros_used() <= budget);
+            let mut pipe = Pipeline::new(&model, nominal());
+            for chunk in images.chunks(8) {
+                assert_eq!(
+                    pool.classify_batch(chunk),
+                    pipe.classify_batch(chunk),
+                    "budget {budget}"
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn replicated_plan_matches_pipeline_bit_exactly() {
+        // surplus budget buys hidden-load replicas; identical seeding
+        // keeps results bit-identical to the unreplicated engines
+        let model = tiny_model(100, 16, 4, 42);
+        let images = rand_images(16, 100, 7);
+        let required = MacroPool::macros_required(&model, &nominal());
+        let pool = MacroPool::with_capacity_for_workers(&model, nominal(), required + 5, 4);
+        let plan = pool.plan().unwrap();
+        assert!(plan.replication_active());
+        assert!(plan.macros_used() <= required + 5);
+        let mut pipe = Pipeline::new(&model, nominal());
+        assert_eq!(pool.classify_batch(&images), pipe.classify_batch(&images));
+    }
+
+    #[test]
     fn steady_state_batches_pay_zero_programming_and_zero_retunes() {
         let model = tiny_model(64, 8, 3, 2);
         let images = rand_images(16, 64, 3);
@@ -462,6 +662,55 @@ mod tests {
         assert_eq!(steady.stall_s, 0.0);
         assert!(steady.events.searches > 0);
         assert!(steady.cycles > 0);
+    }
+
+    #[test]
+    fn degraded_budget_stays_resident_with_bounded_retunes() {
+        // the Resident/Reload cliff is gone: half the full budget still
+        // pays zero programming, and per-batch retunes respect the plan's
+        // cost model while beating the reload scheduler
+        let model = tiny_model(64, 8, 3, 2);
+        let images = rand_images(16, 64, 3);
+        let required = MacroPool::macros_required(&model, &nominal());
+        let budget = required / 2;
+        let pool = MacroPool::with_capacity(&model, nominal(), budget);
+        assert_eq!(pool.mode(), PoolMode::Resident);
+        let predicted = pool.plan().unwrap().predicted_retunes_per_batch();
+        assert!(predicted > 0);
+        // warmup epoch (construction programming + first shared parks)
+        pool.classify_batch(&images);
+        pool.take_stats(16);
+        let batches = 4u64;
+        for _ in 0..batches {
+            pool.classify_batch(&images);
+        }
+        let steady = pool.take_stats(batches * 16);
+        assert_eq!(steady.programming_cycles(), 0, "steady state reprograms");
+        assert!(steady.events.retunes > 0, "sharing must retune");
+        assert!(
+            steady.events.retunes <= predicted * batches,
+            "{} > {predicted}/batch",
+            steady.events.retunes
+        );
+        // all retunes are output-sweep switches, none from hidden loads
+        assert_eq!(steady.hidden_cost.retunes, 0);
+        assert_eq!(steady.output_cost.retunes, steady.events.retunes);
+
+        // strictly fewer retunes per batch than the reload scheduler
+        let mut pipe = Pipeline::new(&model, nominal());
+        pipe.classify_batch(&images);
+        pipe.take_stats(16);
+        for _ in 0..batches {
+            pipe.classify_batch(&images);
+        }
+        let reload = pipe.take_stats(batches * 16);
+        assert!(
+            steady.events.retunes < reload.events.retunes,
+            "shared {} vs reload {}",
+            steady.events.retunes,
+            reload.events.retunes
+        );
+        assert!(reload.programming_cycles() > 0);
     }
 
     #[test]
@@ -490,20 +739,23 @@ mod tests {
     }
 
     #[test]
-    fn capacity_overflow_falls_back_to_reload_scheduler() {
+    fn budget_below_hidden_loads_falls_back_to_reload_scheduler() {
+        // only when the hidden loads themselves don't fit (plus one
+        // output slot) does the pool give up residency entirely
         let model = tiny_model(64, 8, 3, 9);
-        let needed = MacroPool::macros_required(&model, &nominal());
-        assert!(needed > 2);
-        let pool = MacroPool::with_capacity(&model, nominal(), 2);
+        assert!(MacroPool::plan_for(&model, &nominal(), 1).is_none());
+        let pool = MacroPool::with_capacity(&model, nominal(), 1);
         assert_eq!(pool.mode(), PoolMode::Reload);
+        assert!(pool.plan().is_none());
         // still bit-exact vs the pipeline in nominal mode
         let images = rand_images(10, 64, 13);
         let mut pipe = Pipeline::new(&model, nominal());
         assert_eq!(pool.classify_batch(&images), pipe.classify_batch(&images));
-        // stats flow through the fallback
+        // stats flow through the fallback, attribution included
         let s = pool.take_stats(10);
         assert!(s.cycles > 0);
         assert!(s.events.searches > 0);
+        assert!(s.hidden_cost.row_writes > 0);
     }
 
     #[test]
@@ -515,6 +767,7 @@ mod tests {
         // 1 hidden load + 33 output thresholds for the tiny fixture
         assert_eq!(pool.n_macros(), MacroPool::macros_required(&model, &opts));
         assert_eq!(pool.n_macros(), 1 + pool.schedule().len());
+        assert_eq!(pool.n_macros(), pool.plan().unwrap().macros_used());
     }
 
     #[test]
@@ -540,6 +793,28 @@ mod tests {
     }
 
     #[test]
+    fn analog_results_independent_of_budget() {
+        // identical seeding of replicas/slots + per-image noise streams:
+        // the placement is an execution detail, never a semantic one
+        let model = tiny_model(64, 8, 4, 31);
+        let images = rand_images(12, 64, 17);
+        let opts = PipelineOptions::default(); // analog noise
+        let required = MacroPool::macros_required(&model, &opts);
+        let full = MacroPool::with_capacity(&model, opts, required);
+        let want = full.classify_batch_at(&images, 0);
+        for budget in [2usize, required / 2, required + 6] {
+            // plan for several workers so the largest budget replicates
+            let pool = MacroPool::with_capacity_for_workers(&model, opts, budget, 3);
+            assert_eq!(pool.mode(), PoolMode::Resident);
+            assert_eq!(
+                pool.classify_batch_at(&images, 0),
+                want,
+                "budget {budget}"
+            );
+        }
+    }
+
+    #[test]
     fn schedule_prefix_respected() {
         let model = tiny_model(64, 8, 3, 1);
         let pool = MacroPool::new(
@@ -551,6 +826,12 @@ mod tests {
             },
         );
         assert_eq!(pool.schedule(), &model.schedule[..5]);
+        // 1 hidden load + 5 pinned thresholds; the single-worker default
+        // leaves the rest of the budget unspent (no idle replicas)
+        let plan = pool.plan().unwrap();
+        assert_eq!(plan.pinned, 5);
+        assert_eq!(plan.output_macros(), 5);
+        assert_eq!(pool.n_macros(), plan.macros_used());
         assert_eq!(pool.n_macros(), 1 + 5);
     }
 }

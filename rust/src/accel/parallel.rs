@@ -7,21 +7,28 @@
 //! throughput: large accuracy sweeps (Fig. 5 regenerates 20 full-test-set
 //! runs) are embarrassingly parallel across images.
 //!
+//! The pool is planned for the worker count, so surplus macro budget buys
+//! hidden-load *replicas* — workers grab a free replica instead of
+//! serialising on one `Mutex<CamArray>` (see [`super::planner`]).  Budgets
+//! too small for full residency degrade to threshold sharing, and only a
+//! budget that cannot hold the hidden loads falls back to the seed
+//! behaviour: one reload `Pipeline` per shard, seeded `opts.seed + shard`.
+//!
 //! Determinism: frozen per-macro variation comes from the pool seed at
-//! construction, and per-evaluation noise comes from per-image streams
-//! indexed by each image's *global* position — so results are identical
-//! for any thread count or interleaving (see `CamArray::search_into_rng`).
-//! Models that exceed the pool capacity fall back to the seed behaviour:
-//! one reload `Pipeline` per shard, seeded `opts.seed + shard`.
+//! construction (replicas are seeded identically), and per-evaluation
+//! noise comes from per-image streams indexed by each image's *global*
+//! position — so results are identical for any thread count, interleaving,
+//! or macro budget (see `CamArray::search_into_rng`).
 
 use crate::bnn::model::MappedModel;
 use crate::util::bitops::BitVec;
 
-use super::macro_pool::{MacroPool, PoolMode};
+use super::macro_pool::{MacroPool, DEFAULT_POOL_MACROS};
 use super::pipeline::{Pipeline, PipelineOptions, RunStats};
 
-/// Classify `images` using `n_threads` workers; returns per-image
-/// (votes, prediction) in input order plus the merged device statistics.
+/// Classify `images` using `n_threads` workers under the default macro
+/// budget; returns per-image (votes, prediction) in input order plus the
+/// merged device statistics.
 pub fn classify_parallel(
     model: &MappedModel,
     opts: PipelineOptions,
@@ -29,16 +36,29 @@ pub fn classify_parallel(
     batch: usize,
     n_threads: usize,
 ) -> (Vec<(Vec<u32>, usize)>, RunStats) {
+    classify_parallel_with_budget(model, opts, images, batch, n_threads, DEFAULT_POOL_MACROS)
+}
+
+/// [`classify_parallel`] with an explicit macro budget (degraded budgets
+/// run resident with threshold sharing; infeasible ones reload per shard).
+pub fn classify_parallel_with_budget(
+    model: &MappedModel,
+    opts: PipelineOptions,
+    images: &[BitVec],
+    batch: usize,
+    n_threads: usize,
+    budget: usize,
+) -> (Vec<(Vec<u32>, usize)>, RunStats) {
     let n_threads = n_threads.max(1).min(images.len().max(1));
     let batch = batch.max(1);
     let chunk = images.len().div_ceil(n_threads).max(1);
-    // cheap residency probe (no calibration) before building anything:
-    // oversized models go straight to the per-shard reload path
-    if MacroPool::macros_required(model, &opts) > super::macro_pool::DEFAULT_POOL_MACROS {
+    // cheap placement probe (no calibration) before building anything:
+    // models whose hidden loads exceed the budget go straight to the
+    // per-shard reload path
+    if MacroPool::plan_for(model, &opts, budget).is_none() {
         return classify_parallel_reload(model, opts, images, batch, n_threads);
     }
-    let pool = MacroPool::new(model, opts);
-    debug_assert_eq!(pool.mode(), PoolMode::Resident);
+    let pool = MacroPool::with_capacity_for_workers(model, opts, budget, n_threads);
     let mut shard_results: Vec<Option<Vec<(Vec<u32>, usize)>>> =
         (0..n_threads).map(|_| None).collect();
     std::thread::scope(|s| {
@@ -107,6 +127,8 @@ fn classify_parallel_reload(
         stats.cycles += slot.1.cycles;
         stats.stall_s += slot.1.stall_s;
         stats.events.add(&slot.1.events);
+        stats.hidden_cost.add(&slot.1.hidden_cost);
+        stats.output_cost.add(&slot.1.output_cost);
     }
     (results, stats)
 }
@@ -152,6 +174,30 @@ mod tests {
     }
 
     #[test]
+    fn degraded_budgets_match_serial_nominal() {
+        // the planner's sharing (small budgets) and replication (surplus
+        // budgets, multi-worker) must both be invisible in the results
+        let model = tiny_model(64, 8, 4, 55);
+        let imgs = images(50, 64);
+        let opts = PipelineOptions {
+            noise: NoiseMode::Nominal,
+            ..Default::default()
+        };
+        let mut serial = Pipeline::new(&model, opts);
+        let mut want = Vec::new();
+        for b in imgs.chunks(16) {
+            want.extend(serial.classify_batch(b));
+        }
+        let required = MacroPool::macros_required(&model, &opts);
+        for budget in [2usize, required / 2, required + 8] {
+            let (got, stats) =
+                classify_parallel_with_budget(&model, opts, &imgs, 16, 4, budget);
+            assert_eq!(got, want, "budget={budget}");
+            assert_eq!(stats.inferences, 50);
+        }
+    }
+
+    #[test]
     fn parallel_deterministic_given_threads() {
         let model = tiny_model(64, 8, 4, 56);
         let imgs = images(40, 64);
@@ -165,7 +211,8 @@ mod tests {
     fn parallel_deterministic_across_thread_counts() {
         // the shared-pool path goes further than the seed contract: with
         // per-image noise streams the result is independent of the worker
-        // count entirely
+        // count entirely — including when the worker count changes the
+        // plan's replica layout
         let model = tiny_model(64, 8, 4, 58);
         let imgs = images(30, 64);
         let opts = PipelineOptions::default(); // analog noise

@@ -197,6 +197,27 @@ pub struct Pipeline<'m> {
     // scratch buffers (hot path allocates nothing per search)
     scratch_m: Vec<u32>,
     scratch_f: Vec<bool>,
+    // per-category retune/programming attribution (drained by take_stats)
+    attr_hidden: CategoryCost,
+    attr_output: CategoryCost,
+}
+
+/// Where a retune or programming event was spent: hidden-layer loads vs
+/// the output threshold sweep.  The placement planner trades exactly these
+/// two costs against each other, so reports keep them separate.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub struct CategoryCost {
+    /// DAC retune events attributed to the category.
+    pub retunes: u64,
+    /// Weight-programming row writes attributed to the category.
+    pub row_writes: u64,
+}
+
+impl CategoryCost {
+    pub fn add(&mut self, other: &CategoryCost) {
+        self.retunes += other.retunes;
+        self.row_writes += other.row_writes;
+    }
 }
 
 /// Accumulated device statistics for a run.
@@ -206,6 +227,10 @@ pub struct RunStats {
     pub cycles: u64,
     pub stall_s: f64,
     pub events: EventCounters,
+    /// Retune/programming cost attributed to hidden-layer loads.
+    pub hidden_cost: CategoryCost,
+    /// Retune/programming cost attributed to the output threshold sweep.
+    pub output_cost: CategoryCost,
 }
 
 impl RunStats {
@@ -257,6 +282,8 @@ impl<'m> Pipeline<'m> {
             resident: None,
             scratch_m: Vec::new(),
             scratch_f: Vec::new(),
+            attr_hidden: CategoryCost::default(),
+            attr_output: CategoryCost::default(),
         }
     }
 
@@ -279,8 +306,14 @@ impl<'m> Pipeline<'m> {
         self.resident = Some((layer_idx, load_idx));
     }
 
+    /// Retune/row-write totals on the single macro (attribution snapshot).
+    fn cost_snapshot(&self) -> (u64, u64) {
+        (self.cam.events.retunes, self.cam.events.row_writes)
+    }
+
     /// Execute one hidden layer for a batch; returns the hidden codes.
     fn run_hidden(&mut self, layer_idx: usize, inputs: &[BitVec]) -> Vec<BitVec> {
+        let before = self.cost_snapshot();
         let layer = &self.model.layers[layer_idx];
         let n_out = layer.n_out();
         let n_seg = layer.n_seg();
@@ -310,7 +343,7 @@ impl<'m> Pipeline<'m> {
                 self.scratch_f = f;
             }
         }
-        seg_fires
+        let codes = seg_fires
             .into_iter()
             .map(|fires| {
                 let mut h = BitVec::zeros(n_out);
@@ -320,11 +353,16 @@ impl<'m> Pipeline<'m> {
                 }
                 h
             })
-            .collect()
+            .collect();
+        let after = self.cost_snapshot();
+        self.attr_hidden.retunes += after.0 - before.0;
+        self.attr_hidden.row_writes += after.1 - before.1;
+        codes
     }
 
     /// Execute the output layer sweep for a batch; returns per-image votes.
     fn run_output(&mut self, hidden: &[BitVec]) -> Vec<Vec<u32>> {
+        let before = self.cost_snapshot();
         let layer_idx = self.model.layers.len() - 1;
         let layer = self.model.layers.last().unwrap();
         let n_cls = layer.n_out();
@@ -360,6 +398,9 @@ impl<'m> Pipeline<'m> {
                 self.scratch_f = f;
             }
         }
+        let after = self.cost_snapshot();
+        self.attr_output.retunes += after.0 - before.0;
+        self.attr_output.row_writes += after.1 - before.1;
         votes
     }
 
@@ -400,8 +441,12 @@ impl<'m> Pipeline<'m> {
             cycles: self.cam.clock.cycles,
             stall_s: self.cam.clock.stall_s,
             events: self.cam.events,
+            hidden_cost: self.attr_hidden,
+            output_cost: self.attr_output,
         };
         self.cam.reset_accounting();
+        self.attr_hidden = CategoryCost::default();
+        self.attr_output = CategoryCost::default();
         stats
     }
 
@@ -513,6 +558,39 @@ mod tests {
             cpi_32 < cpi_1,
             "batching should amortise programming: {cpi_32} vs {cpi_1}"
         );
+    }
+
+    #[test]
+    fn stats_attribute_costs_per_category() {
+        // the reload scheduler pays hidden programming every batch and one
+        // output retune per threshold per batch; the two categories must
+        // partition the totals exactly
+        let model = tiny_model(64, 8, 3, 6);
+        let mut pipe = Pipeline::new(
+            &model,
+            PipelineOptions {
+                noise: NoiseMode::Nominal,
+                ..Default::default()
+            },
+        );
+        let images = rand_images(8, 64, 21);
+        pipe.classify_batch(&images);
+        pipe.classify_batch(&images);
+        let s = pipe.take_stats(16);
+        assert_eq!(
+            s.hidden_cost.retunes + s.output_cost.retunes,
+            s.events.retunes
+        );
+        assert_eq!(
+            s.hidden_cost.row_writes + s.output_cost.row_writes,
+            s.events.row_writes
+        );
+        assert!(s.hidden_cost.row_writes > 0, "hidden reprograms per batch");
+        assert!(s.output_cost.retunes > 0, "threshold sweep retunes");
+        // attribution drains with the stats
+        let s2 = pipe.take_stats(0);
+        assert_eq!(s2.hidden_cost, CategoryCost::default());
+        assert_eq!(s2.output_cost, CategoryCost::default());
     }
 
     #[test]

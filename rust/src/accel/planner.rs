@@ -1,0 +1,290 @@
+//! Capacity-aware macro placement: how a fixed budget of simulated
+//! 128-kbit macros is spent on one mapped model.
+//!
+//! PR 1's pool was all-or-nothing — either every hidden load *and* every
+//! output threshold got its own macro, or the model dropped to the
+//! single-macro reload scheduler.  The planner replaces that cliff with a
+//! cost-model-driven [`PlacementPlan`]:
+//!
+//! 1. **Hidden loads come first.**  Sharing a hidden macro would mean
+//!    reprogramming rows mid-batch (the 138-cycle-per-load reload tax the
+//!    pool exists to kill), so a plan is only resident when every hidden
+//!    load owns a macro.
+//! 2. **Output thresholds share.**  All output slots hold the *same*
+//!    programmed rows and differ only in their parked (V_ref, V_eval,
+//!    V_st) triple, so a threshold that loses its dedicated macro costs a
+//!    *retune*, never a reprogram.  With `d` pinned thresholds and `s`
+//!    shared slots serving the remaining `r = K − d` (LRU over parked
+//!    triples), a cyclic Algorithm-1 sweep pays 0 retunes/batch when
+//!    `r ≤ s` and `r` retunes/batch otherwise — LRU misses every access
+//!    of a cycle longer than the slot pool.  That makes pins strictly
+//!    better than extra shared slots for sweep traffic, so the planner
+//!    maximises `d` and keeps a single shared slot (`s = 1`) as the
+//!    funnel; the LRU mechanism still pays off for non-cyclic operating
+//!    point traffic (schedule prefixes, future per-request points).
+//! 3. **Surplus replicates hidden loads.**  Budget beyond full pinning
+//!    buys hidden-load replicas so `classify_parallel` workers search a
+//!    free replica instead of serialising on one `Mutex<CamArray>`.
+//!    Every image touches every load once per batch, so "hot" means
+//!    longest lock hold — loads are replicated in descending row count,
+//!    and never past the worker count the pool serves (a replica no
+//!    searcher can reach is pure simulated area).
+//!
+//! Cost model summary (steady state, per batch): resident plans pay
+//! `predicted_retunes_per_batch()` retune stalls and zero programming;
+//! the reload `Pipeline` pays `K` output retunes plus a full reprogram of
+//! every hidden load.  A plan is only worth emitting when its budget
+//! covers all hidden loads plus one output slot; below that the caller
+//! falls back to reload mode.
+
+/// How a macro budget is spent on one model: replicas per hidden load,
+/// pinned output thresholds, and LRU-shared output slots.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct PlacementPlan {
+    /// The budget the plan was built against (`macros_used() <= budget`).
+    pub budget: usize,
+    /// Macro replicas per hidden (layer, load); parallel to the layer
+    /// load plans, every entry ≥ 1.
+    pub hidden_replicas: Vec<Vec<usize>>,
+    /// The first `pinned` schedule thresholds own a permanently parked
+    /// macro each (zero steady-state retunes).
+    pub pinned: usize,
+    /// Shared output slots serving thresholds `pinned..schedule_len`,
+    /// parked at one triple each and evicted LRU.
+    pub shared_slots: usize,
+    /// Total output-schedule thresholds.
+    pub schedule_len: usize,
+}
+
+/// Build a plan for a model with the given hidden-load row counts
+/// (`hidden_load_rows[layer][load]` = programmed rows of that load) and
+/// output schedule length, under `budget` macros, serving `workers`
+/// concurrent searchers.  A load is never replicated beyond `workers`
+/// copies — more replicas than searchers can only sit idle — so a
+/// single-worker plan leaves surplus budget unspent rather than burning
+/// area on macros nobody can reach.  Returns `None` when the budget
+/// cannot hold every hidden load plus one output slot — the caller
+/// should then run the reload scheduler.
+pub fn plan(
+    hidden_load_rows: &[Vec<usize>],
+    schedule_len: usize,
+    budget: usize,
+    workers: usize,
+) -> Option<PlacementPlan> {
+    let hidden: usize = hidden_load_rows.iter().map(Vec::len).sum();
+    let min_output = schedule_len.min(1);
+    if budget < hidden + min_output {
+        return None;
+    }
+    let output_budget = budget - hidden;
+    let (pinned, shared_slots) = if schedule_len == 0 {
+        (0, 0)
+    } else if output_budget >= schedule_len {
+        // full pinning: every threshold parked forever, zero retunes
+        (schedule_len, 0)
+    } else {
+        // maximise pins, funnel the rest through one LRU slot (see the
+        // module docs for why one funnel beats a balanced split)
+        (output_budget - 1, 1)
+    };
+    let mut hidden_replicas: Vec<Vec<usize>> = hidden_load_rows
+        .iter()
+        .map(|layer| vec![1; layer.len()])
+        .collect();
+    let cap = workers.max(1);
+    let mut surplus = budget - hidden - pinned - shared_slots;
+    if surplus > 0 && hidden > 0 && cap > 1 {
+        // replicate hottest-first: largest loads hold their lock longest
+        let mut order: Vec<(usize, usize)> = hidden_load_rows
+            .iter()
+            .enumerate()
+            .flat_map(|(li, layer)| (0..layer.len()).map(move |di| (li, di)))
+            .collect();
+        order.sort_by_key(|&(li, di)| std::cmp::Reverse(hidden_load_rows[li][di]));
+        let mut cursor = 0usize;
+        let mut at_cap = 0usize;
+        while surplus > 0 && at_cap < order.len() {
+            let (li, di) = order[cursor % order.len()];
+            cursor += 1;
+            if hidden_replicas[li][di] < cap {
+                hidden_replicas[li][di] += 1;
+                surplus -= 1;
+                at_cap = 0;
+            } else {
+                at_cap += 1;
+            }
+        }
+    }
+    Some(PlacementPlan {
+        budget,
+        hidden_replicas,
+        pinned,
+        shared_slots,
+        schedule_len,
+    })
+}
+
+impl PlacementPlan {
+    /// Macros spent on hidden loads (replicas included).
+    pub fn hidden_macros(&self) -> usize {
+        self.hidden_replicas.iter().flatten().sum()
+    }
+
+    /// Macros spent on the output sweep (pinned + shared).
+    pub fn output_macros(&self) -> usize {
+        self.pinned + self.shared_slots
+    }
+
+    /// Total macros the plan instantiates (never exceeds the budget).
+    pub fn macros_used(&self) -> usize {
+        self.hidden_macros() + self.output_macros()
+    }
+
+    /// Whether any threshold lost its dedicated macro.
+    pub fn sharing_active(&self) -> bool {
+        self.pinned < self.schedule_len
+    }
+
+    /// Whether surplus budget bought hidden-load replicas.
+    pub fn replication_active(&self) -> bool {
+        self.hidden_replicas.iter().flatten().any(|&r| r > 1)
+    }
+
+    /// Steady-state retune upper bound per batch for the cyclic
+    /// Algorithm-1 sweep: the `r = schedule_len − pinned` unpinned
+    /// thresholds all miss when they outnumber the shared slots (LRU on a
+    /// cycle longer than the pool), and all park permanently otherwise.
+    /// Thresholds whose calibrated triples coincide retune for free, so
+    /// the measured count may come in below this bound.
+    pub fn predicted_retunes_per_batch(&self) -> u64 {
+        let rest = self.schedule_len - self.pinned;
+        if rest <= self.shared_slots {
+            0
+        } else {
+            rest as u64
+        }
+    }
+
+    /// One-line human description for reports and examples.
+    pub fn describe(&self) -> String {
+        let h: usize = self.hidden_replicas.iter().map(Vec::len).sum();
+        format!(
+            "{} macros: {} hidden loads ({} replicas), {}/{} thresholds pinned, \
+             {} shared slot(s), ≤{} retunes/batch",
+            self.macros_used(),
+            h,
+            self.hidden_macros() - h,
+            self.pinned,
+            self.schedule_len,
+            self.shared_slots,
+            self.predicted_retunes_per_batch()
+        )
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn infeasible_budgets_return_none() {
+        // 3 hidden loads + ≥1 output slot → 4 macros minimum
+        let rows = vec![vec![64, 64], vec![16]];
+        for budget in 0..4 {
+            assert!(plan(&rows, 33, budget, 1).is_none(), "budget {budget}");
+        }
+        assert!(plan(&rows, 33, 4, 1).is_some());
+    }
+
+    #[test]
+    fn full_budget_pins_everything_and_replicates_surplus() {
+        let rows = vec![vec![64, 64], vec![16]];
+        let p = plan(&rows, 33, 3 + 33, 4).unwrap();
+        assert_eq!(p.pinned, 33);
+        assert_eq!(p.shared_slots, 0);
+        assert!(!p.sharing_active());
+        assert!(!p.replication_active());
+        assert_eq!(p.predicted_retunes_per_batch(), 0);
+        assert_eq!(p.macros_used(), 36);
+
+        // 5 surplus macros: hottest loads (64 rows) replicate first
+        let p = plan(&rows, 33, 3 + 33 + 5, 4).unwrap();
+        assert!(p.replication_active());
+        assert_eq!(p.macros_used(), 41);
+        assert_eq!(p.predicted_retunes_per_batch(), 0);
+        // round-robin over [64, 64, 16] hottest-first: 2+2+1
+        assert_eq!(p.hidden_replicas, vec![vec![3, 3], vec![2]]);
+    }
+
+    #[test]
+    fn replication_never_exceeds_the_worker_count() {
+        let rows = vec![vec![64], vec![16]];
+        // huge surplus, 3 workers: every load caps at 3 replicas and the
+        // rest of the budget stays unspent
+        let p = plan(&rows, 4, 100, 3).unwrap();
+        assert_eq!(p.hidden_replicas, vec![vec![3], vec![3]]);
+        assert_eq!(p.macros_used(), 6 + 4);
+        // one worker: replicas can only idle, so none are built
+        let p = plan(&rows, 4, 100, 1).unwrap();
+        assert!(!p.replication_active());
+        assert_eq!(p.macros_used(), 2 + 4);
+    }
+
+    #[test]
+    fn degraded_budget_shares_thresholds_through_one_slot() {
+        // the acceptance shape: 6 hidden loads + 33 thresholds = 39 full,
+        // planned into 16
+        let rows = vec![vec![64; 6]];
+        let p = plan(&rows, 33, 16, 1).unwrap();
+        assert_eq!(p.hidden_macros(), 6);
+        assert_eq!(p.pinned, 9);
+        assert_eq!(p.shared_slots, 1);
+        assert_eq!(p.macros_used(), 16);
+        assert!(p.sharing_active());
+        // 24 unpinned thresholds funnel through the shared slot
+        assert_eq!(p.predicted_retunes_per_batch(), 24);
+    }
+
+    #[test]
+    fn minimum_viable_budget_runs_everything_shared() {
+        let rows = vec![vec![64]];
+        let p = plan(&rows, 33, 2, 1).unwrap();
+        assert_eq!(p.pinned, 0);
+        assert_eq!(p.shared_slots, 1);
+        assert_eq!(p.predicted_retunes_per_batch(), 33);
+        assert_eq!(p.macros_used(), 2);
+    }
+
+    #[test]
+    fn pinning_dominates_extra_shared_slots_for_cyclic_sweeps() {
+        // the cost-model claim: at equal budget, d pins + 1 funnel beats
+        // any balanced shared split (whose LRU thrashes the full cycle)
+        let rows = vec![vec![64]];
+        for budget in 3..34 {
+            let p = plan(&rows, 33, budget, 1).unwrap();
+            let balanced_cost = 33u64; // s ≥ 2 shared slots, r > s → all miss
+            assert!(
+                p.predicted_retunes_per_batch() < balanced_cost,
+                "budget {budget}: {}",
+                p.predicted_retunes_per_batch()
+            );
+        }
+    }
+
+    #[test]
+    fn empty_schedule_needs_no_output_macros() {
+        let rows = vec![vec![64, 32]];
+        let p = plan(&rows, 0, 2, 1).unwrap();
+        assert_eq!(p.output_macros(), 0);
+        assert_eq!(p.predicted_retunes_per_batch(), 0);
+        assert!(plan(&rows, 0, 1, 1).is_none());
+    }
+
+    #[test]
+    fn describe_mentions_the_split() {
+        let p = plan(&[vec![64; 6]], 33, 16, 1).unwrap();
+        let d = p.describe();
+        assert!(d.contains("16 macros"), "{d}");
+        assert!(d.contains("9/33"), "{d}");
+    }
+}

@@ -129,6 +129,7 @@ mod tests {
             cycles: 34,
             stall_s: 0.0,
             events: ev,
+            ..RunStats::default()
         }
     }
 

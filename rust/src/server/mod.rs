@@ -3,16 +3,21 @@
 //! deployment would put around the accelerator (tokio is unavailable
 //! offline; std mpsc + threads carry the same architecture).
 //!
-//! The pool keeps every layer's weights programmed and every schedule
-//! threshold's rails pre-tuned across the server's lifetime, so a served
-//! batch costs searches + I/O only (zero reprogramming, zero retunes at
-//! steady state); models exceeding the pool capacity transparently run on
-//! the reload scheduler inside the pool.
+//! The pool keeps every layer's weights programmed across the server's
+//! lifetime, so a served batch never reprograms; under a full macro
+//! budget every schedule threshold's rails are also pre-tuned (zero
+//! retunes at steady state), and under a degraded budget the placement
+//! planner shares output macros between thresholds, paying a bounded,
+//! tracked retune cost per batch (see `accel::planner`).  Only models
+//! whose hidden loads exceed the budget run on the reload scheduler
+//! inside the pool.
 
 use std::sync::mpsc;
 use std::time::{Duration, Instant};
 
-use crate::accel::{BatchPolicy, Batcher, MacroPool, PipelineOptions, PoolMode};
+use crate::accel::{
+    BatchPolicy, Batcher, MacroPool, PipelineOptions, PoolMode, Request, DEFAULT_POOL_MACROS,
+};
 use crate::bnn::model::MappedModel;
 use crate::util::bitops::BitVec;
 use crate::util::stats::Summary;
@@ -62,8 +67,20 @@ pub struct Server<'m> {
 
 impl<'m> Server<'m> {
     pub fn new(model: &'m MappedModel, opts: PipelineOptions, policy: BatchPolicy) -> Self {
+        Self::with_capacity(model, opts, policy, DEFAULT_POOL_MACROS)
+    }
+
+    /// Server over a pool planned for an explicit macro budget (degraded
+    /// budgets keep weights resident and share output macros between
+    /// thresholds instead of dropping to the reload scheduler).
+    pub fn with_capacity(
+        model: &'m MappedModel,
+        opts: PipelineOptions,
+        policy: BatchPolicy,
+        max_macros: usize,
+    ) -> Self {
         Server {
-            pool: MacroPool::new(model, opts),
+            pool: MacroPool::with_capacity(model, opts, max_macros),
             batcher: Batcher::new(policy),
             metrics: ServerMetrics::default(),
             stats_reported: 0,
@@ -85,18 +102,32 @@ impl<'m> Server<'m> {
         self.batcher.push(image)
     }
 
-    /// Flush pending requests if the policy says so (or `force`).
+    /// Flush pending requests as long as the policy says so (or `force`).
     /// Returns completed responses.
+    ///
+    /// Drains *every* ready batch, not just the first: a burst of several
+    /// `max_batch`-fulls clears in one poll.  (The old single-batch drain
+    /// left a bursty queue permanently behind the arrival rate — each
+    /// poll removed at most one batch while the burst kept the backlog
+    /// above the threshold.)
     pub fn poll(&mut self, force: bool) -> Vec<Response> {
-        let now = Instant::now();
-        if !force && !self.batcher.ready(now) {
-            return Vec::new();
+        if force {
+            let batch = self.batcher.drain_all();
+            return self.run_batch(batch);
         }
-        let batch = if force {
-            self.batcher.drain_all()
-        } else {
-            self.batcher.drain_batch()
-        };
+        let mut responses = Vec::new();
+        while self.batcher.ready(Instant::now()) {
+            let batch = self.batcher.drain_batch();
+            if batch.is_empty() {
+                break;
+            }
+            responses.extend(self.run_batch(batch));
+        }
+        responses
+    }
+
+    /// Classify one drained batch and record its metrics.
+    fn run_batch(&mut self, batch: Vec<Request>) -> Vec<Response> {
         if batch.is_empty() {
             return Vec::new();
         }
@@ -152,6 +183,28 @@ pub fn serve_workload(
     n_producers: usize,
     inter_arrival: Duration,
 ) -> (Vec<Response>, ServerMetrics) {
+    serve_workload_with_capacity(
+        model,
+        opts,
+        policy,
+        images,
+        n_producers,
+        inter_arrival,
+        DEFAULT_POOL_MACROS,
+    )
+}
+
+/// [`serve_workload`] over a pool planned for an explicit macro budget.
+#[allow(clippy::too_many_arguments)]
+pub fn serve_workload_with_capacity(
+    model: &MappedModel,
+    opts: PipelineOptions,
+    policy: BatchPolicy,
+    images: &[BitVec],
+    n_producers: usize,
+    inter_arrival: Duration,
+    max_macros: usize,
+) -> (Vec<Response>, ServerMetrics) {
     let (tx, rx) = mpsc::channel::<BitVec>();
     std::thread::scope(|s| {
         // producers
@@ -171,7 +224,7 @@ pub fn serve_workload(
         }
         drop(tx);
         // consumer: the server loop
-        let mut server = Server::new(model, opts, policy);
+        let mut server = Server::with_capacity(model, opts, policy, max_macros);
         let mut responses = Vec::with_capacity(images.len());
         loop {
             match rx.recv_timeout(Duration::from_micros(200)) {
@@ -284,6 +337,100 @@ mod tests {
         assert!(server.poll(false).is_empty(), "policy not yet ready");
         let got = server.poll(true);
         assert_eq!(got.len(), 1);
+    }
+
+    #[test]
+    fn burst_of_full_batches_clears_in_one_poll() {
+        // regression: poll(force=false) used to drain at most one
+        // max_batch per call, so a burst left the queue permanently
+        // behind the arrival rate
+        let model = tiny_model(64, 8, 3, 36);
+        let mut server = Server::new(
+            &model,
+            opts(),
+            BatchPolicy {
+                max_batch: 8,
+                max_wait: Duration::from_secs(60),
+            },
+        );
+        for img in images(3 * 8, 64) {
+            server.submit(img);
+        }
+        let got = server.poll(false);
+        assert_eq!(got.len(), 24, "3×max_batch burst must clear in one poll");
+        assert_eq!(server.metrics.batches, 3, "drained as policy-sized batches");
+        assert!(server.poll(false).is_empty(), "queue actually empty");
+    }
+
+    #[test]
+    fn poll_drains_timed_out_partial_batch_after_full_ones() {
+        let model = tiny_model(64, 8, 3, 37);
+        let mut server = Server::new(
+            &model,
+            opts(),
+            BatchPolicy {
+                max_batch: 8,
+                max_wait: Duration::ZERO, // everything is instantly due
+            },
+        );
+        for img in images(2 * 8 + 3, 64) {
+            server.submit(img);
+        }
+        let got = server.poll(false);
+        assert_eq!(got.len(), 19, "two full batches + the due partial one");
+        assert_eq!(server.metrics.batches, 3);
+    }
+
+    #[test]
+    fn degraded_budget_serves_resident_with_bounded_retunes() {
+        // tentpole acceptance at the server layer: a model whose full
+        // residency exceeds the budget still serves with zero
+        // steady-state programming and a planned, bounded retune cost
+        let model = tiny_model(64, 8, 3, 38);
+        let required = MacroPool::macros_required(&model, &opts());
+        let budget = required / 2;
+        let mut server = Server::with_capacity(
+            &model,
+            opts(),
+            BatchPolicy {
+                max_batch: 8,
+                max_wait: Duration::ZERO,
+            },
+            budget,
+        );
+        assert_eq!(server.pool_mode(), PoolMode::Resident);
+        let predicted = server.pool().plan().unwrap().predicted_retunes_per_batch();
+        assert!(predicted > 0, "sharing must be active at half budget");
+        // warmup epoch
+        for img in images(8, 64) {
+            server.submit(img);
+        }
+        server.poll(true);
+        server.take_device_stats();
+        // steady state: zero programming, retunes bounded by the plan
+        for img in images(8, 64) {
+            server.submit(img);
+        }
+        server.poll(true);
+        let steady = server.take_device_stats();
+        assert_eq!(steady.programming_cycles(), 0);
+        assert!(steady.events.retunes > 0);
+        assert!(steady.events.retunes <= predicted);
+        assert_eq!(steady.hidden_cost.retunes, 0);
+        assert_eq!(steady.output_cost.retunes, steady.events.retunes);
+        // and the predictions still match the reload pipeline bit-exactly
+        let imgs = images(8, 64);
+        for img in &imgs {
+            server.submit(img.clone());
+        }
+        let mut responses = server.poll(true);
+        responses.sort_by_key(|r| r.id);
+        let mut pipe = Pipeline::new(&model, opts());
+        let want = pipe.classify_batch(&imgs);
+        for (r, (votes, pred)) in responses.iter().zip(&want) {
+            assert_eq!(&r.prediction, pred);
+            assert_eq!(&r.votes, votes);
+        }
     }
 
     #[test]

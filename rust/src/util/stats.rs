@@ -1,64 +1,136 @@
 //! Lightweight descriptive statistics for benches and metrics.
 
-/// Online + batch summary of a sample.
-#[derive(Clone, Debug, Default)]
+use crate::util::rng::Rng;
+
+/// Samples retained for percentile estimation (see [`Summary`]).
+pub const SUMMARY_RESERVOIR_CAP: usize = 4096;
+
+/// Online summary of a sample with bounded memory.
+///
+/// Count, mean, standard deviation, min, and max are exact over every
+/// value ever pushed (Welford accumulation).  Percentiles come from a
+/// deterministic reservoir (Algorithm R over a fixed-seed PRNG) of at
+/// most [`SUMMARY_RESERVOIR_CAP`] samples: exact while the sample fits
+/// the reservoir, an unbiased estimate beyond it.
+///
+/// The previous implementation stored every sample forever and re-sorted
+/// the whole vector per `percentile` call — a long-running `Server`
+/// pushing one latency per request grew without bound.  The reservoir
+/// caps both the memory and the per-read sort at the reservoir size.
+#[derive(Clone, Debug)]
 pub struct Summary {
-    values: Vec<f64>,
+    count: u64,
+    mean: f64,
+    m2: f64,
+    min: f64,
+    max: f64,
+    cap: usize,
+    reservoir: Vec<f64>,
+    rng: Rng,
+}
+
+impl Default for Summary {
+    fn default() -> Self {
+        Summary::new()
+    }
 }
 
 impl Summary {
     pub fn new() -> Self {
-        Summary { values: Vec::new() }
+        Summary::with_reservoir(SUMMARY_RESERVOIR_CAP)
+    }
+
+    /// Summary with an explicit reservoir capacity (≥ 1).
+    pub fn with_reservoir(cap: usize) -> Self {
+        assert!(cap > 0, "reservoir capacity must be positive");
+        Summary {
+            count: 0,
+            mean: 0.0,
+            m2: 0.0,
+            min: f64::INFINITY,
+            max: f64::NEG_INFINITY,
+            cap,
+            reservoir: Vec::new(),
+            // fixed seed: summaries are deterministic across runs
+            rng: Rng::new(0x5EED_0A11_CA55_E77E, 0x51),
+        }
     }
 
     pub fn push(&mut self, v: f64) {
-        self.values.push(v);
+        self.count += 1;
+        let delta = v - self.mean;
+        self.mean += delta / self.count as f64;
+        self.m2 += delta * (v - self.mean);
+        self.min = self.min.min(v);
+        self.max = self.max.max(v);
+        if self.reservoir.len() < self.cap {
+            self.reservoir.push(v);
+        } else {
+            // Algorithm R: the i-th value replaces a uniform slot with
+            // probability cap/i, keeping every prefix uniformly sampled
+            let j = self.rng.below(self.count);
+            if (j as usize) < self.cap {
+                self.reservoir[j as usize] = v;
+            }
+        }
     }
 
     pub fn extend(&mut self, vs: &[f64]) {
-        self.values.extend_from_slice(vs);
+        for &v in vs {
+            self.push(v);
+        }
     }
 
+    /// Total values observed (not the retained sample count).
     pub fn len(&self) -> usize {
-        self.values.len()
+        self.count as usize
     }
 
     pub fn is_empty(&self) -> bool {
-        self.values.is_empty()
+        self.count == 0
+    }
+
+    /// Samples currently retained for percentile estimation — bounded by
+    /// the reservoir capacity no matter how many values were pushed.
+    pub fn stored(&self) -> usize {
+        self.reservoir.len()
+    }
+
+    /// Whether percentiles are exact (every observation retained).
+    pub fn is_exact(&self) -> bool {
+        self.count as usize == self.reservoir.len()
     }
 
     pub fn mean(&self) -> f64 {
-        if self.values.is_empty() {
+        if self.count == 0 {
             return f64::NAN;
         }
-        self.values.iter().sum::<f64>() / self.values.len() as f64
+        self.mean
     }
 
     /// Sample standard deviation (n−1 denominator; 0 for n<2).
     pub fn stddev(&self) -> f64 {
-        let n = self.values.len();
-        if n < 2 {
+        if self.count < 2 {
             return 0.0;
         }
-        let m = self.mean();
-        let ss: f64 = self.values.iter().map(|v| (v - m) * (v - m)).sum();
-        (ss / (n - 1) as f64).sqrt()
+        (self.m2 / (self.count - 1) as f64).sqrt()
     }
 
     pub fn min(&self) -> f64 {
-        self.values.iter().copied().fold(f64::INFINITY, f64::min)
+        self.min
     }
 
     pub fn max(&self) -> f64 {
-        self.values.iter().copied().fold(f64::NEG_INFINITY, f64::max)
+        self.max
     }
 
-    /// Linear-interpolated percentile, p in [0, 100].
+    /// Linear-interpolated percentile, p in [0, 100], over the retained
+    /// sample (exact below the reservoir capacity).
     pub fn percentile(&self, p: f64) -> f64 {
-        if self.values.is_empty() {
+        if self.reservoir.is_empty() {
             return f64::NAN;
         }
-        let mut sorted = self.values.clone();
+        let mut sorted = self.reservoir.clone();
         sorted.sort_by(|a, b| a.partial_cmp(b).unwrap());
         let rank = (p / 100.0) * (sorted.len() - 1) as f64;
         let lo = rank.floor() as usize;
@@ -77,7 +149,7 @@ impl Summary {
 }
 
 /// Fixed-width histogram over [lo, hi); out-of-range values clamp to the
-/// edge buckets.
+/// edge buckets, NaN values are ignored.
 #[derive(Clone, Debug)]
 pub struct Histogram {
     lo: f64,
@@ -98,6 +170,11 @@ impl Histogram {
     }
 
     pub fn record(&mut self, v: f64) {
+        // a NaN would land in bucket 0 through the `as i64` cast below,
+        // silently skewing the low tail — drop it instead
+        if v.is_nan() {
+            return;
+        }
         let n = self.buckets.len();
         let idx = ((v - self.lo) / (self.hi - self.lo) * n as f64) as i64;
         let idx = idx.clamp(0, n as i64 - 1) as usize;
@@ -113,12 +190,17 @@ impl Histogram {
         &self.buckets
     }
 
-    /// Approximate quantile from bucket mass (bucket midpoint).
+    /// Approximate quantile from bucket mass (bucket midpoint).  `q` is
+    /// clamped to [0, 1]; `q = 1` reports the highest *occupied* bucket
+    /// rather than the range edge.
     pub fn quantile(&self, q: f64) -> f64 {
-        if self.count == 0 {
+        if self.count == 0 || q.is_nan() {
             return f64::NAN;
         }
-        let target = (q * self.count as f64) as u64;
+        // clamp the rank below the total mass so the scan always lands in
+        // an occupied bucket (q=1 used to fall off the loop and report
+        // `hi` even with all mass in bucket 0)
+        let target = ((q.clamp(0.0, 1.0) * self.count as f64) as u64).min(self.count - 1);
         let mut acc = 0;
         let width = (self.hi - self.lo) / self.buckets.len() as f64;
         for (i, &b) in self.buckets.iter().enumerate() {
@@ -156,6 +238,59 @@ mod tests {
     }
 
     #[test]
+    fn small_samples_are_exact() {
+        // below the reservoir capacity nothing is sampled away: the
+        // percentiles are identical to the full-retention implementation
+        let mut s = Summary::new();
+        let vals: Vec<f64> = (0..1000).map(|i| (i * 7 % 1000) as f64).collect();
+        s.extend(&vals);
+        assert!(s.is_exact());
+        assert_eq!(s.stored(), 1000);
+        assert_eq!(s.percentile(0.0), 0.0);
+        assert_eq!(s.percentile(50.0), 499.5);
+        assert!((s.percentile(99.0) - 989.01).abs() < 1e-9);
+        assert_eq!(s.percentile(100.0), 999.0);
+    }
+
+    #[test]
+    fn memory_stays_bounded_after_a_million_pushes() {
+        // regression: the old Summary kept every sample forever — a
+        // long-running server grew without bound
+        let mut s = Summary::new();
+        for i in 0..1_000_000u64 {
+            s.push((i % 1000) as f64);
+        }
+        assert_eq!(s.len(), 1_000_000, "observation count is exact");
+        assert!(
+            s.stored() <= SUMMARY_RESERVOIR_CAP,
+            "reservoir leaked: {}",
+            s.stored()
+        );
+        assert!(!s.is_exact());
+        // exact moments survive the sampling
+        assert_eq!(s.min(), 0.0);
+        assert_eq!(s.max(), 999.0);
+        assert!((s.mean() - 499.5).abs() < 1e-6);
+        // the reservoir estimate tracks the true uniform distribution
+        let p50 = s.percentile(50.0);
+        assert!((p50 - 499.5).abs() < 50.0, "p50 {p50}");
+        let p99 = s.percentile(99.0);
+        assert!((p99 - 990.0).abs() < 15.0, "p99 {p99}");
+    }
+
+    #[test]
+    fn reservoir_is_deterministic() {
+        let fill = |n: u64| {
+            let mut s = Summary::new();
+            for i in 0..n {
+                s.push((i % 777) as f64);
+            }
+            (s.percentile(50.0), s.percentile(99.0))
+        };
+        assert_eq!(fill(100_000), fill(100_000));
+    }
+
+    #[test]
     fn histogram_quantiles() {
         let mut h = Histogram::new(0.0, 100.0, 100);
         for i in 0..1000 {
@@ -173,5 +308,32 @@ mod tests {
         h.record(50.0);
         assert_eq!(h.buckets()[0], 1);
         assert_eq!(h.buckets()[9], 1);
+    }
+
+    #[test]
+    fn quantile_one_lands_in_occupied_bucket() {
+        // regression: with all mass in bucket 0, quantile(1.0) reported
+        // the range edge `hi` instead of the occupied bucket
+        let mut h = Histogram::new(0.0, 100.0, 10);
+        h.record(1.0);
+        h.record(2.0);
+        assert!((h.quantile(1.0) - 5.0).abs() < 1e-12, "{}", h.quantile(1.0));
+        assert!((h.quantile(0.5) - 5.0).abs() < 1e-12);
+        // out-of-range q clamps instead of scanning past the buckets
+        assert!((h.quantile(2.0) - 5.0).abs() < 1e-12);
+        assert!((h.quantile(-1.0) - 5.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn histogram_ignores_nan() {
+        // regression: NaN `as i64` is 0, so NaN records landed in bucket 0
+        let mut h = Histogram::new(0.0, 10.0, 10);
+        h.record(f64::NAN);
+        assert_eq!(h.count(), 0);
+        assert_eq!(h.buckets()[0], 0);
+        assert!(h.quantile(0.5).is_nan());
+        assert!(h.quantile(f64::NAN).is_nan());
+        h.record(3.0);
+        assert!(h.quantile(f64::NAN).is_nan());
     }
 }

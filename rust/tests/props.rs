@@ -1,7 +1,7 @@
 //! Cross-module property tests (the testkit mini-framework): coordinator
-//! invariants — mapping/routing/batching/state — over random models.
+//! invariants — mapping/routing/batching/placement — over random models.
 
-use picbnn::accel::{Pipeline, PipelineOptions};
+use picbnn::accel::{planner, MacroPool, Pipeline, PipelineOptions};
 use picbnn::analog::{MatchlineModel, Pvt, Voltages};
 use picbnn::bnn::infer::{digital_forward, sweep_votes};
 use picbnn::bnn::mapping::{expected_mismatches, program_row, segment_query};
@@ -107,6 +107,82 @@ fn prop_batch_invariance_nominal() {
             split.extend(two.classify_batch(chunk));
         }
         prop_assert(all == split, "batch grouping changed results")?;
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_planner_never_exceeds_the_budget() {
+    // over random load shapes, schedules, budgets, and worker counts:
+    // a plan either fits the budget exactly or is refused, every hidden
+    // load keeps >= 1 macro, and pinned thresholds never exceed the
+    // schedule
+    forall(300, 131, |g| {
+        let n_layers = g.usize_in(1, 4);
+        let rows: Vec<Vec<usize>> = (0..n_layers)
+            .map(|_| {
+                let loads = g.usize_in(1, 8);
+                (0..loads).map(|_| g.usize_in(1, 256)).collect()
+            })
+            .collect();
+        let hidden: usize = rows.iter().map(Vec::len).sum();
+        let schedule_len = g.usize_in(0, 40);
+        let budget = g.usize_in(0, 120);
+        let workers = g.usize_in(0, 12);
+        match planner::plan(&rows, schedule_len, budget, workers) {
+            None => prop_assert(
+                budget < hidden + schedule_len.min(1),
+                format!("refused a feasible budget {budget} (hidden {hidden})"),
+            )?,
+            Some(p) => {
+                prop_assert(
+                    p.macros_used() <= budget,
+                    format!("{} macros over budget {budget}", p.macros_used()),
+                )?;
+                prop_assert(
+                    p.hidden_replicas.iter().flatten().all(|&r| r >= 1),
+                    "hidden load lost its macro",
+                )?;
+                prop_assert(
+                    p.hidden_replicas
+                        .iter()
+                        .flatten()
+                        .all(|&r| r <= workers.max(1)),
+                    "replicas exceed the worker count",
+                )?;
+                prop_assert(p.pinned <= schedule_len, "pinned past the schedule")?;
+                prop_assert(
+                    p.pinned == schedule_len || p.shared_slots >= 1,
+                    "unpinned thresholds need a shared slot",
+                )?;
+            }
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_budget_never_changes_nominal_predictions() {
+    // any viable budget (sharing, partial pinning, replication) yields
+    // the reload Pipeline's exact votes in nominal mode
+    forall(8, 137, |g| {
+        let model = gen_model(g);
+        let opts = PipelineOptions {
+            noise: NoiseMode::Nominal,
+            ..Default::default()
+        };
+        let images: Vec<BitVec> = (0..6)
+            .map(|_| BitVec::from_pm1(&g.pm1_vec(model.n_in())))
+            .collect();
+        let mut pipe = Pipeline::new(&model, opts);
+        let want = pipe.classify_batch(&images);
+        let required = MacroPool::macros_required(&model, &opts);
+        let budget = g.usize_in(2, required + 4);
+        let pool = MacroPool::with_capacity_for_workers(&model, opts, budget, 3);
+        prop_assert(
+            pool.classify_batch(&images) == want,
+            format!("budget {budget} changed predictions"),
+        )?;
         Ok(())
     });
 }
