@@ -1,11 +1,18 @@
 //! Hot-path microbenchmarks for the §Perf optimisation loop: packed
-//! Hamming distance, array search, row programming, vote accumulation,
-//! and the end-to-end per-image cost on both models.
+//! Hamming distance (single-query and query-batched), array search
+//! (sequential and batched, both noise modes), row programming, vote
+//! accumulation, and the end-to-end per-image cost on both models.
+//!
+//! Results are persisted to `BENCH_hotpath.json` at the repo root
+//! (`benchkit::emit_json`) so later PRs can diff the perf trajectory.
+//! Under `PICBNN_BENCH_QUICK=1` (CI) every bench runs single-iteration
+//! smoke samples; the batched-vs-sequential parity checks still run, so a
+//! kernel regression that panics or mis-shapes output fails the pipeline.
 
 use picbnn::accel::{Pipeline, PipelineOptions};
-use picbnn::benchkit::{bench, black_box};
+use picbnn::benchkit::{bench, bench_artifact_path, black_box, emit_json, quick_mode, BenchRecord};
 use picbnn::bnn::model::MappedModel;
-use picbnn::cam::{CamArray, CamConfig};
+use picbnn::cam::{CamArray, CamConfig, NoiseMode};
 use picbnn::data::TestSet;
 use picbnn::util::bitops::{hamming_words, BitMatrix, BitVec};
 use picbnn::util::rng::Rng;
@@ -18,8 +25,57 @@ fn rand_bits(n: usize, rng: &mut Rng) -> BitVec {
     v
 }
 
+/// A fully programmed 1024x128 array at the metastable-band probe point.
+fn probe_array(noise: NoiseMode, seed: u64) -> CamArray {
+    let mut cam = match noise {
+        NoiseMode::Nominal => CamArray::nominal(CamConfig::W1024x128),
+        NoiseMode::Analog => CamArray::analog(CamConfig::W1024x128, seed),
+    };
+    let mut rng = Rng::new(seed ^ 0xDA7A, 2);
+    for row in 0..128 {
+        cam.write_row(row, &rand_bits(1024, &mut rng));
+    }
+    cam.set_voltages(picbnn::analog::Voltages::new(0.75, 0.5, 1.0));
+    cam
+}
+
+/// Batched vs sequential parity on twin arrays: mismatches, fires, and
+/// per-query RNG stream positions must be bit-identical (the kernel's
+/// draw-order contract; this is the CI smoke check, not a timing).
+fn check_batch_parity(noise: NoiseMode, queries: &[BitVec]) {
+    let mut seq = probe_array(noise, 77);
+    let mut bat = probe_array(noise, 77);
+    let mut rngs_a: Vec<Rng> = (0..queries.len() as u64).map(|i| Rng::new(13, i)).collect();
+    let mut rngs_b = rngs_a.clone();
+    let (mut sm, mut sf) = (Vec::new(), Vec::new());
+    let (mut seq_m, mut seq_f) = (Vec::new(), Vec::new());
+    for (i, q) in queries.iter().enumerate() {
+        seq.search_into_rng(q, &mut sm, &mut sf, &mut rngs_a[i]);
+        seq_m.extend_from_slice(&sm);
+        seq_f.push(sf.clone());
+    }
+    let (mut bm, mut bf) = (Vec::new(), BitMatrix::default());
+    bat.search_batch_into_rngs(queries, &mut rngs_b, &mut bm, &mut bf);
+    assert_eq!(bm, seq_m, "{noise:?}: batched mismatch counts diverged");
+    for (i, f) in seq_f.iter().enumerate() {
+        for r in 0..128 {
+            assert_eq!(bf.get(i, r), f[r], "{noise:?}: fires q{i} r{r}");
+        }
+    }
+    for (i, (ra, rb)) in rngs_a.iter().zip(&rngs_b).enumerate() {
+        assert_eq!(
+            format!("{ra:?}"),
+            format!("{rb:?}"),
+            "{noise:?}: rng stream {i} position diverged"
+        );
+    }
+    assert_eq!(seq.clock.cycles, bat.clock.cycles, "{noise:?}: cycles");
+    assert_eq!(seq.events, bat.events, "{noise:?}: event accounting");
+}
+
 fn main() {
     let mut rng = Rng::new(1, 1);
+    let mut records: Vec<BenchRecord> = Vec::new();
 
     // packed hamming over one 1024-bit row
     let a = rand_bits(1024, &mut rng);
@@ -27,12 +83,10 @@ fn main() {
     let r = bench("hamming_1024b_single_row", || {
         black_box(hamming_words(black_box(a.words()), black_box(b.words())));
     });
-    println!(
-        "  -> {:.2} G row-bits/s",
-        r.throughput(1024.0) / 1e9
-    );
+    println!("  -> {:.2} G row-bits/s", r.throughput(1024.0) / 1e9);
+    records.push(r.record(Some(1024.0)));
 
-    // full-matrix hamming (128 rows of 1024)
+    // full-matrix hamming: one query vs the register-tiled batch kernel
     let rows: Vec<BitVec> = (0..128).map(|_| rand_bits(1024, &mut rng)).collect();
     let m = BitMatrix::from_rows(&rows);
     let q = rand_bits(1024, &mut rng);
@@ -42,17 +96,26 @@ fn main() {
         black_box(&out);
     });
     println!("  -> {:.2} M row-searches/s", r.throughput(128.0) / 1e6);
+    records.push(r.record(Some(128.0)));
 
-    // array search (nominal + analog)
-    for (label, mut cam) in [
-        ("search_1024x128_nominal", CamArray::nominal(CamConfig::W1024x128)),
-        ("search_1024x128_analog", CamArray::analog(CamConfig::W1024x128, 7)),
+    let queries64: Vec<BitVec> = (0..64).map(|_| rand_bits(1024, &mut rng)).collect();
+    let r = bench("hamming_all_batch64_128x1024", || {
+        m.hamming_all_batch(black_box(&queries64), &mut out);
+        black_box(&out);
+    });
+    println!(
+        "  -> {:.2} M row-searches/s (query-batched)",
+        r.throughput(64.0 * 128.0) / 1e6
+    );
+    records.push(r.record(Some(64.0 * 128.0)));
+
+    // array search, sequential baseline (nominal + analog)
+    let mut single_rate = std::collections::BTreeMap::new();
+    for (label, noise) in [
+        ("search_1024x128_nominal", NoiseMode::Nominal),
+        ("search_1024x128_analog", NoiseMode::Analog),
     ] {
-        for row in 0..128 {
-            let data = rand_bits(1024, &mut rng);
-            cam.write_row(row, &data);
-        }
-        cam.set_voltages(picbnn::analog::Voltages::new(0.75, 0.5, 1.0));
+        let mut cam = probe_array(noise, 7);
         let q = rand_bits(1024, &mut rng);
         let (mut mm, mut ff) = (Vec::new(), Vec::new());
         let r = bench(label, || {
@@ -60,6 +123,37 @@ fn main() {
             black_box(&ff);
         });
         println!("  -> {:.2} M row-evals/s", r.throughput(128.0) / 1e6);
+        single_rate.insert(noise as usize, r.throughput(128.0));
+        records.push(r.record(Some(128.0)));
+    }
+
+    // the batched kernel (acceptance variants): 64 queries per device
+    // batch, per-image noise streams, packed fires.  Speedup asserts are
+    // deferred until after emit_json so a below-threshold run still
+    // persists its measurements.
+    let mut speedups: Vec<(&str, f64)> = Vec::new();
+    for (label, noise) in [
+        ("search_batch64_1024x128_nominal", NoiseMode::Nominal),
+        ("search_batch64_1024x128_analog", NoiseMode::Analog),
+    ] {
+        check_batch_parity(noise, &queries64[..16]);
+        let mut cam = probe_array(noise, 7);
+        let mut rngs: Vec<Rng> = (0..64u64).map(|i| Rng::new(0xBA7C, i)).collect();
+        let (mut mm, mut ff) = (Vec::new(), BitMatrix::default());
+        // warm the threshold cache so quick mode's first sample is honest
+        cam.search_batch_into_rngs(&queries64, &mut rngs, &mut mm, &mut ff);
+        let r = bench(label, || {
+            cam.search_batch_into_rngs(black_box(&queries64), &mut rngs, &mut mm, &mut ff);
+            black_box(&ff);
+        });
+        let rate = r.throughput(64.0 * 128.0);
+        let speedup = rate / single_rate[&(noise as usize)];
+        println!(
+            "  -> {:.2} M row-evals/s ({speedup:.1}x vs single-query)",
+            rate / 1e6
+        );
+        records.push(r.record(Some(64.0 * 128.0)));
+        speedups.push((label, speedup));
     }
 
     // row programming
@@ -67,10 +161,11 @@ fn main() {
         let mut cam = CamArray::analog(CamConfig::W1024x128, 9);
         let data = rand_bits(1024, &mut rng);
         let mut row = 0usize;
-        bench("write_row_1024b", || {
+        let r = bench("write_row_1024b", || {
             cam.write_row(black_box(row), black_box(&data));
             row = (row + 1) % 128;
         });
+        records.push(r.record(None));
     }
 
     // end-to-end per-image (batch-256 amortised)
@@ -90,5 +185,21 @@ fn main() {
             "  -> {:.0} host images/s (simulator speed, not device speed)",
             r.throughput(imgs.len() as f64)
         );
+        records.push(r.record(Some(imgs.len() as f64)));
+    }
+
+    emit_json(bench_artifact_path("BENCH_hotpath.json"), &records)
+        .expect("write BENCH_hotpath.json");
+
+    // acceptance gate, after the artifact is safely on disk; quick mode's
+    // single-iteration timings are too noisy to gate on
+    if !quick_mode() {
+        for (label, speedup) in &speedups {
+            assert!(
+                *speedup >= 2.0,
+                "{label}: batched kernel must be >= 2x the single-query \
+                 baseline, got {speedup:.2}x"
+            );
+        }
     }
 }

@@ -14,7 +14,7 @@
 //! Run: `cargo bench --bench macro_pool`
 
 use picbnn::accel::{MacroPool, Pipeline, PipelineOptions, PoolMode};
-use picbnn::benchkit::Table;
+use picbnn::benchkit::{bench_artifact_path, emit_json, BenchRecord, Table};
 use picbnn::bnn::model::{MappedLayer, MappedModel};
 use picbnn::cam::NoiseMode;
 use picbnn::util::bitops::{BitMatrix, BitVec};
@@ -194,5 +194,23 @@ fn main() {
         100.0 * (1.0 - degraded.cpi / reload.cpi),
         reload.retunes_per_batch - degraded.retunes_per_batch
     );
+
+    // persist the perf trajectory: host ns/image + host img/s per engine,
+    // plus the device-clock inferences/s the paper's numbers live in
+    let records: Vec<BenchRecord> = runs
+        .iter()
+        .flat_map(|r| {
+            [
+                BenchRecord::new(&r.label, 1e9 / r.host_img_s, Some(r.host_img_s)),
+                BenchRecord::new(
+                    &format!("{} [device inf/s]", r.label),
+                    1e9 / r.inf_s,
+                    Some(r.inf_s),
+                ),
+            ]
+        })
+        .collect();
+    emit_json(bench_artifact_path("BENCH_macro_pool.json"), &records)
+        .expect("write BENCH_macro_pool.json");
     println!("\n[macro_pool done in {:.1}s]", t0.elapsed_s());
 }

@@ -40,7 +40,7 @@ use crate::bnn::mapping::segment_query_wide;
 use crate::bnn::model::MappedModel;
 use crate::cam::{CamArray, CamConfig};
 use crate::sim::SimClock;
-use crate::util::bitops::BitVec;
+use crate::util::bitops::{BitMatrix, BitVec};
 use crate::util::rng::{splitmix64, Rng};
 
 use super::pipeline::{
@@ -417,6 +417,11 @@ impl<'m> MacroPool<'m> {
 
     /// Execute one hidden layer for a batch over the layer's resident
     /// load macros; returns the hidden codes (majority across segments).
+    ///
+    /// One [`CamArray::search_batch_into_rngs`] call per load: the stored
+    /// rows stream once per query tile, per-image noise streams advance
+    /// exactly as the sequential path would, and the lock is held for one
+    /// batched kernel instead of one search per image.
     fn run_hidden(
         &self,
         resident: &Resident,
@@ -428,7 +433,7 @@ impl<'m> MacroPool<'m> {
         let n_out = layer.n_out();
         let n_seg = layer.n_seg();
         let mut seg_fires = vec![vec![0u8; n_out]; inputs.len()];
-        let (mut m, mut f) = (Vec::new(), Vec::new());
+        let (mut m, mut fires) = (Vec::new(), BitMatrix::default());
         // rails were parked at the layer's midpoint at construction — no
         // set_voltages on the batch path
         for (load_idx, load) in self.plans[layer_idx].iter().enumerate() {
@@ -436,14 +441,16 @@ impl<'m> MacroPool<'m> {
             let width = cam.config().width();
             let payload = (load.neuron_hi - load.neuron_lo) as u64
                 * (layer.seg_bounds[load.seg + 1] - layer.seg_bounds[load.seg]) as u64;
-            for (img_idx, x) in inputs.iter().enumerate() {
-                let q = segment_query_wide(layer, load.seg, x, width);
-                cam.search_into_rng(&q, &mut m, &mut f, &mut rngs[img_idx]);
-                cam.events.useful_macs += payload;
-                for (row, neuron) in (load.neuron_lo..load.neuron_hi).enumerate() {
-                    if f[row] {
-                        seg_fires[img_idx][neuron] += 1;
-                    }
+            let queries: Vec<BitVec> = inputs
+                .iter()
+                .map(|x| segment_query_wide(layer, load.seg, x, width))
+                .collect();
+            cam.search_batch_into_rngs(&queries, rngs, &mut m, &mut fires);
+            cam.events.useful_macs += payload * inputs.len() as u64;
+            for (img_idx, img_fires) in seg_fires.iter_mut().enumerate() {
+                // rows past the load are cleared and can never fire
+                for row in fires.row_ones(img_idx) {
+                    img_fires[load.neuron_lo + row] += 1;
                 }
             }
         }
@@ -478,7 +485,7 @@ impl<'m> MacroPool<'m> {
             .map(|h| segment_query_wide(layer, 0, h, width))
             .collect();
         let mut votes = vec![vec![0u32; n_cls]; hidden.len()];
-        let (mut m, mut f) = (Vec::new(), Vec::new());
+        let (mut m, mut fires) = (Vec::new(), BitMatrix::default());
         let payload = (layer.n_in() * n_cls) as u64;
         let pinned = resident.plan.pinned;
         for k in 0..self.schedule.len() {
@@ -495,13 +502,11 @@ impl<'m> MacroPool<'m> {
                 slot.parked = Some(k);
             }
             let cam = &mut slot.cam;
-            for (img_idx, q) in queries.iter().enumerate() {
-                cam.search_into_rng(q, &mut m, &mut f, &mut rngs[img_idx]);
-                cam.events.useful_macs += payload;
-                for (c, vote) in votes[img_idx].iter_mut().enumerate() {
-                    if f[c] {
-                        *vote += 1;
-                    }
+            cam.search_batch_into_rngs(&queries, rngs, &mut m, &mut fires);
+            cam.events.useful_macs += payload * queries.len() as u64;
+            for (img_idx, img_votes) in votes.iter_mut().enumerate() {
+                for c in fires.row_ones(img_idx) {
+                    img_votes[c] += 1;
                 }
             }
         }

@@ -14,6 +14,12 @@
 //! budget that cannot hold the hidden loads falls back to the seed
 //! behaviour: one reload `Pipeline` per shard, seeded `opts.seed + shard`.
 //!
+//! Each `batch`-sized chunk a worker pulls is one call into the
+//! query-batched search kernel (`CamArray::search_batch_into_rngs`), so
+//! the chunk size doubles as the kernel's query-tile feed: larger chunks
+//! amortise lock acquisitions and store streaming, and — because noise
+//! streams are per-image — any chunking yields bit-identical results.
+//!
 //! Determinism: frozen per-macro variation comes from the pool seed at
 //! construction (replicas are seeded identically), and per-evaluation
 //! noise comes from per-image streams indexed by each image's *global*

@@ -22,7 +22,7 @@ use crate::bnn::mapping::{program_row, segment_query_wide};
 use crate::bnn::model::MappedModel;
 use crate::cam::{CamArray, CamConfig, NoiseMode};
 use crate::sim::EventCounters;
-use crate::util::bitops::BitVec;
+use crate::util::bitops::{BitMatrix, BitVec};
 
 use super::voltage::{CalibratedPoint, VoltageController};
 
@@ -194,9 +194,10 @@ pub struct Pipeline<'m> {
     plans: Vec<Vec<Load>>,
     /// Which layer's weights are currently resident (load caching).
     resident: Option<(usize, usize)>, // (layer, load index)
-    // scratch buffers (hot path allocates nothing per search)
+    // scratch buffers (the batched search reshapes them in place; steady
+    // state allocates nothing per batch beyond the query images)
     scratch_m: Vec<u32>,
-    scratch_f: Vec<bool>,
+    scratch_fires: BitMatrix,
     // per-category retune/programming attribution (drained by take_stats)
     attr_hidden: CategoryCost,
     attr_output: CategoryCost,
@@ -281,7 +282,7 @@ impl<'m> Pipeline<'m> {
             plans,
             resident: None,
             scratch_m: Vec::new(),
-            scratch_f: Vec::new(),
+            scratch_fires: BitMatrix::default(),
             attr_hidden: CategoryCost::default(),
             attr_output: CategoryCost::default(),
         }
@@ -328,20 +329,24 @@ impl<'m> Pipeline<'m> {
             let width = self.cam.config().width();
             let payload = (load.neuron_hi - load.neuron_lo) as u64
                 * (layer.seg_bounds[load.seg + 1] - layer.seg_bounds[load.seg]) as u64;
-            for (img_idx, x) in inputs.iter().enumerate() {
-                let q = segment_query_wide(layer, load.seg, x, width);
-                let mut m = std::mem::take(&mut self.scratch_m);
-                let mut f = std::mem::take(&mut self.scratch_f);
-                self.cam.search_into(&q, &mut m, &mut f);
-                self.cam.events.useful_macs += payload;
-                for (row, neuron) in (load.neuron_lo..load.neuron_hi).enumerate() {
-                    if f[row] {
-                        seg_fires[img_idx][neuron] += 1;
-                    }
+            // one batched search per load: the store streams once per
+            // query tile instead of once per image (util::bitops docs)
+            let queries: Vec<BitVec> = inputs
+                .iter()
+                .map(|x| segment_query_wide(layer, load.seg, x, width))
+                .collect();
+            let mut m = std::mem::take(&mut self.scratch_m);
+            let mut fires = std::mem::take(&mut self.scratch_fires);
+            self.cam.search_batch_into(&queries, &mut m, &mut fires);
+            self.cam.events.useful_macs += payload * inputs.len() as u64;
+            for (img_idx, img_fires) in seg_fires.iter_mut().enumerate() {
+                // rows past the load are cleared and can never fire
+                for row in fires.row_ones(img_idx) {
+                    img_fires[load.neuron_lo + row] += 1;
                 }
-                self.scratch_m = m;
-                self.scratch_f = f;
             }
+            self.scratch_m = m;
+            self.scratch_fires = fires;
         }
         let codes = seg_fires
             .into_iter()
@@ -379,24 +384,23 @@ impl<'m> Pipeline<'m> {
             .map(|h| segment_query_wide(layer, 0, h, width))
             .collect();
         let mut votes = vec![vec![0u32; n_cls]; hidden.len()];
-        // thresholds outer, images inner: one retune per threshold per batch
+        // thresholds outer, images inner: one retune per threshold per
+        // batch, and one batched search per threshold
+        let payload = (layer.n_in() * n_cls) as u64;
         for k in 0..self.schedule.len() {
             let point = self.output_points[k];
             self.cam.set_voltages(point.voltages);
-            let payload = (layer.n_in() * n_cls) as u64;
-            for (img_idx, q) in queries.iter().enumerate() {
-                let mut m = std::mem::take(&mut self.scratch_m);
-                let mut f = std::mem::take(&mut self.scratch_f);
-                self.cam.search_into(q, &mut m, &mut f);
-                self.cam.events.useful_macs += payload;
-                for (c, vote_row) in votes[img_idx].iter_mut().enumerate() {
-                    if f[c] {
-                        *vote_row += 1;
-                    }
+            let mut m = std::mem::take(&mut self.scratch_m);
+            let mut fires = std::mem::take(&mut self.scratch_fires);
+            self.cam.search_batch_into(&queries, &mut m, &mut fires);
+            self.cam.events.useful_macs += payload * queries.len() as u64;
+            for (img_idx, img_votes) in votes.iter_mut().enumerate() {
+                for c in fires.row_ones(img_idx) {
+                    img_votes[c] += 1;
                 }
-                self.scratch_m = m;
-                self.scratch_f = f;
             }
+            self.scratch_m = m;
+            self.scratch_fires = fires;
         }
         let after = self.cost_snapshot();
         self.attr_output.retunes += after.0 - before.0;

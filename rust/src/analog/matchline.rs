@@ -164,8 +164,9 @@ impl MatchlineModel {
     /// One-off convenience over [`MatchlineModel::begin_cycle`]: batched
     /// searches should hold a [`SearchCycle`] instead — supply noise and
     /// sampling jitter are *cycle-global* in silicon (every row of a search
-    /// shares the same rails and strobe), and hoisting them keeps the hot
-    /// loop at one gaussian + one ln per row.
+    /// shares the same rails and strobe), and hoisting them (plus the
+    /// per-row `ln(vref + off)` cache, [`SearchCycle::fires_cached`]) keeps
+    /// the hot loop transcendental-free.
     pub fn fires(&self, m: u32, v: &Voltages, var: &RowVariation, rng: &mut Rng) -> bool {
         self.begin_cycle(v, rng).fires(m, var, rng)
     }
@@ -179,9 +180,11 @@ impl MatchlineModel {
         let vdd = self.pvt.vdd + rng.normal(0.0, k::SIGMA_VDD_NOISE * self.noise_scale);
         SearchCycle {
             vref: v.vref,
-            vdd,
-            // m fires iff m * g * ts / C < ln(vdd / (vref + off)):
-            // carry C / (g_nom * ts) so the per-row cost is one ln + one mul
+            // m fires iff m·g·ts/C < ln(vdd) − ln(vref + off): ln(vdd) is
+            // cycle-global, ln(vref + off) is frozen per row until the next
+            // retune/reprogram (cached by `cam::CamArray`), so the per-row
+            // cost is one subtract + one multiply + a compare
+            ln_vdd: vdd.ln(),
             c_over_gts: if g_nom > 0.0 {
                 self.c_ml() / (g_nom * ts)
             } else {
@@ -208,24 +211,47 @@ impl MatchlineModel {
 }
 
 /// Per-search-cycle state for the noisy hot path: the cycle-global noise
-/// draws (supply, strobe jitter) folded into precomputed constants, so
-/// each row evaluation costs one gaussian draw, one `ln`, and a compare.
+/// draws (supply, strobe jitter) folded into precomputed constants.  With
+/// the per-row `ln(vref + off)` cached at retune/programming time (see
+/// `cam::CamArray`), each row evaluation costs one multiply and a compare;
+/// only metastable-band rows pay for a gaussian draw.
 ///
 /// Algebra: V_ML(t_s) > V_ref + off
 ///   ⇔ vdd·exp(−m·g·ts/C) > vref + off
-///   ⇔ m·(g_row·(1+ε)) < (C/(g_nom·ts))·ln(vdd/(vref+off))
+///   ⇔ m·(g_row·(1+ε)) < (C/(g_nom·ts))·(ln(vdd) − ln(vref+off))
+///
+/// Note on reproducibility: `ln(vdd) − ln(vref+off)` can differ from the
+/// former `ln(vdd/(vref+off))` by an ulp, so analog decisions for rows
+/// sitting *exactly* on a comparison boundary may differ from pre-cache
+/// builds of the simulator (and with them that stream's later draw
+/// positions).  Within a build every path shares this one formula —
+/// batched and sequential searches are bit-identical — and nominal mode
+/// is bit-identical across builds (integer thresholds from the exact
+/// closed form).
 #[derive(Clone, Copy, Debug)]
 pub struct SearchCycle {
     vref: f64,
-    vdd: f64,
+    ln_vdd: f64,
     c_over_gts: f64,
     sigma_g: f64,
 }
 
 impl SearchCycle {
-    /// MLSA decision for one row in this cycle.
+    /// MLSA decision for one row in this cycle (computes the row's
+    /// `ln(vref + off)` on the fly; batched searches pass the cached value
+    /// to [`SearchCycle::fires_cached`] instead).
     #[inline]
     pub fn fires(&self, m: u32, var: &RowVariation, rng: &mut Rng) -> bool {
+        self.fires_cached(m, var.g_row_factor, (self.vref + var.mlsa_offset).ln(), rng)
+    }
+
+    /// MLSA decision for one row given its precomputed threshold state:
+    /// `g_row_factor` and `ln_sense = ln(vref + mlsa_offset)` are frozen
+    /// between retune/programming events, so the hot path never touches a
+    /// transcendental.  `rng` advances only for metastable-band rows —
+    /// callers must present rows in a fixed order for reproducibility.
+    #[inline]
+    pub fn fires_cached(&self, m: u32, g_row_factor: f64, ln_sense: f64, rng: &mut Rng) -> bool {
         if m == 0 {
             // no discharge path: ML holds V_DD above any legal reference
             return true;
@@ -233,13 +259,12 @@ impl SearchCycle {
         if self.c_over_gts.is_infinite() {
             return true; // M_eval cut off
         }
-        let sense = self.vref + var.mlsa_offset;
-        if sense >= self.vdd {
+        if ln_sense >= self.ln_vdd {
             return false; // reference above the precharged rail
         }
         // decision: m · g_row·(1+ε) < budget, ε ~ N(0, σ_g_eval)
-        let budget = self.c_over_gts * (self.vdd / sense).ln();
-        let base = (m as f64) * var.g_row_factor;
+        let budget = self.c_over_gts * (self.ln_vdd - ln_sense);
+        let base = (m as f64) * g_row_factor;
         // fast path: rows further than 6σ from the boundary decide
         // deterministically (P(flip) < 1e-9) without burning a gaussian —
         // only metastable-band rows pay for the noise draw
@@ -360,6 +385,31 @@ mod tests {
             }
         }
         assert!(stochastic >= 1, "no metastable band around tol={tol}");
+    }
+
+    #[test]
+    fn fires_cached_identical_to_fires_including_draw_positions() {
+        // the cached-threshold entry point is the same decision (and the
+        // same RNG consumption) as the convenience wrapper
+        let mm = model();
+        let v = Voltages::new(0.7, 0.45, 1.1);
+        let mut rng = Rng::new(21, 2);
+        for trial in 0..200 {
+            let var = RowVariation::draw(&mut rng);
+            let m = (trial % 64) as u32;
+            let cycle = mm.begin_cycle(&v, &mut rng);
+            let mut ra = rng.clone();
+            let mut rb = rng.clone();
+            let a = cycle.fires(m, &var, &mut ra);
+            let b = cycle.fires_cached(
+                m,
+                var.g_row_factor,
+                (v.vref + var.mlsa_offset).ln(),
+                &mut rb,
+            );
+            assert_eq!(a, b, "trial {trial} m={m}");
+            assert_eq!(format!("{ra:?}"), format!("{rb:?}"), "draw count diverged");
+        }
     }
 
     #[test]

@@ -5,8 +5,19 @@
 //! and table-shaped "experiment" output for regenerating the paper's tables
 //! and figures as aligned text blocks that are easy to diff against
 //! EXPERIMENTS.md.
+//!
+//! Two extras feed the perf-optimisation loop:
+//! * `PICBNN_BENCH_QUICK=1` ([`quick_mode`]) collapses every [`bench`] to
+//!   a couple of single-iteration samples — CI *runs* the hot-path benches
+//!   this way so kernel regressions that panic or mis-shape output fail
+//!   the pipeline (timings in quick mode are indicative only).
+//! * [`emit_json`] persists results (`BENCH_*.json` at the repo root via
+//!   [`bench_artifact_path`]) so future PRs have a perf trajectory to
+//!   compare against.
 
+use crate::util::json::{obj, Json};
 use crate::util::stats::Summary;
+use std::path::{Path, PathBuf};
 use std::time::Instant;
 
 /// Prevent the optimizer from eliding a computed value.
@@ -30,6 +41,78 @@ impl BenchResult {
     pub fn throughput(&self, items_per_iter: f64) -> f64 {
         items_per_iter / (self.mean_ns * 1e-9)
     }
+
+    /// Persistable record; `items_per_iter` (if any) yields items/s.
+    pub fn record(&self, items_per_iter: Option<f64>) -> BenchRecord {
+        BenchRecord {
+            name: self.name.clone(),
+            ns_per_iter: self.mean_ns,
+            throughput: items_per_iter.map(|n| self.throughput(n)),
+        }
+    }
+}
+
+/// One persisted benchmark record (see [`emit_json`]).
+#[derive(Clone, Debug)]
+pub struct BenchRecord {
+    pub name: String,
+    pub ns_per_iter: f64,
+    /// Items per second, when the bench has a natural item count.
+    pub throughput: Option<f64>,
+}
+
+impl BenchRecord {
+    /// Record from an already-computed (time, rate) pair — for experiment
+    /// benches that measure whole runs rather than [`bench`] iterations.
+    pub fn new(name: &str, ns_per_iter: f64, throughput: Option<f64>) -> Self {
+        BenchRecord {
+            name: name.to_string(),
+            ns_per_iter,
+            throughput,
+        }
+    }
+}
+
+/// True when `PICBNN_BENCH_QUICK` is set to anything but `0`/empty:
+/// single-iteration smoke runs for CI (module docs).
+pub fn quick_mode() -> bool {
+    std::env::var("PICBNN_BENCH_QUICK")
+        .map(|v| !v.is_empty() && v != "0")
+        .unwrap_or(false)
+}
+
+/// Repo-root path for a benchmark artifact: cargo runs benches with
+/// `CARGO_MANIFEST_DIR` at the workspace root.
+pub fn bench_artifact_path(file_name: &str) -> PathBuf {
+    std::env::var_os("CARGO_MANIFEST_DIR")
+        .map(PathBuf::from)
+        .unwrap_or_else(|| PathBuf::from("."))
+        .join(file_name)
+}
+
+/// Write records as a JSON array of `{name, ns_per_iter, throughput}`
+/// objects (parseable by `util::json`) — the perf trajectory future PRs
+/// diff against.  Non-finite values (a zero-time quick-mode sample makes
+/// a throughput infinite) are written as `null`, never as bare
+/// `inf`/`NaN` tokens the reader would reject.
+pub fn emit_json(path: impl AsRef<Path>, records: &[BenchRecord]) -> std::io::Result<()> {
+    let num = |v: f64| if v.is_finite() { Json::Num(v) } else { Json::Null };
+    let arr = Json::Arr(
+        records
+            .iter()
+            .map(|r| {
+                obj(vec![
+                    ("name", Json::Str(r.name.clone())),
+                    ("ns_per_iter", num(r.ns_per_iter)),
+                    ("throughput", r.throughput.map(num).unwrap_or(Json::Null)),
+                ])
+            })
+            .collect(),
+    );
+    let path = path.as_ref();
+    std::fs::write(path, arr.to_string() + "\n")?;
+    println!("bench results -> {}", path.display());
+    Ok(())
 }
 
 fn fmt_ns(ns: f64) -> String {
@@ -46,21 +129,30 @@ fn fmt_ns(ns: f64) -> String {
 
 /// Time `f`, scaling iteration count until a sample batch takes ≥ ~20 ms,
 /// then collect `samples` batches and report per-iteration statistics.
+///
+/// Under [`quick_mode`] the calibration loop is skipped: one warmup call
+/// plus two single-iteration samples — enough for CI to catch panics and
+/// shape regressions without paying for stable statistics.
 pub fn bench<F: FnMut()>(name: &str, mut f: F) -> BenchResult {
-    // warmup + calibration
-    let mut iters: u64 = 1;
-    loop {
-        let t = Instant::now();
-        for _ in 0..iters {
-            f();
+    let (iters, samples) = if quick_mode() {
+        f(); // warmup: first-call cache builds stay out of the samples
+        (1u64, 2usize)
+    } else {
+        // warmup + calibration
+        let mut iters: u64 = 1;
+        loop {
+            let t = Instant::now();
+            for _ in 0..iters {
+                f();
+            }
+            let dt = t.elapsed().as_secs_f64();
+            if dt > 0.02 || iters >= 1 << 24 {
+                break;
+            }
+            iters = (iters * 4).min(1 << 24);
         }
-        let dt = t.elapsed().as_secs_f64();
-        if dt > 0.02 || iters >= 1 << 24 {
-            break;
-        }
-        iters = (iters * 4).min(1 << 24);
-    }
-    let samples = 12;
+        (iters, 12usize)
+    };
     let mut per_iter = Summary::new();
     for _ in 0..samples {
         let t = Instant::now();
@@ -186,5 +278,45 @@ mod tests {
             min_ns: 1000.0,
         };
         assert!((r.throughput(1.0) - 1e6).abs() < 1e-6);
+    }
+
+    #[test]
+    fn emit_json_roundtrips_through_the_json_reader() {
+        let r = BenchResult {
+            name: "kernel_x".into(),
+            iters: 4,
+            mean_ns: 250.5,
+            stddev_ns: 1.0,
+            median_ns: 250.0,
+            min_ns: 249.0,
+        };
+        let records = vec![
+            r.record(Some(128.0)),
+            BenchRecord::new("no_throughput", 10.0, None),
+        ];
+        let path = std::env::temp_dir().join("picbnn_bench_emit_test.json");
+        emit_json(&path, &records).unwrap();
+        let parsed = Json::parse(&std::fs::read_to_string(&path).unwrap()).unwrap();
+        let arr = parsed.as_arr().unwrap();
+        assert_eq!(arr.len(), 2);
+        assert_eq!(arr[0].get("name").unwrap().as_str(), Some("kernel_x"));
+        assert!(
+            (arr[0].get("ns_per_iter").unwrap().as_f64().unwrap() - 250.5).abs() < 1e-9
+        );
+        let rate = arr[0].get("throughput").unwrap().as_f64().unwrap();
+        assert!((rate - 128.0 / 250.5e-9).abs() / rate < 1e-12);
+        assert_eq!(arr[1].get("throughput"), Some(&Json::Null));
+        let _ = std::fs::remove_file(&path);
+    }
+
+    #[test]
+    fn quick_mode_reads_the_env_knob() {
+        // avoid mutating the process environment (tests run in parallel):
+        // only pin the default-off behaviour plus the artifact path shape
+        if std::env::var_os("PICBNN_BENCH_QUICK").is_none() {
+            assert!(!quick_mode());
+        }
+        let p = bench_artifact_path("BENCH_x.json");
+        assert!(p.ends_with("BENCH_x.json"));
     }
 }

@@ -6,13 +6,40 @@
 //! cells (throttled by V_eval), and sample every MLSA at t_s(V_st) against
 //! V_ref.  All rows evaluate in parallel in silicon; the simulator charges
 //! one cycle regardless of row count.
+//!
+//! ## Precomputed per-row thresholds
+//!
+//! The MLSA decision depends only on state frozen between programming and
+//! retune events, so the array caches it ([`RowCache`], rebuilt lazily):
+//! in nominal mode an integer `m_max[r]` turns the decision into
+//! `m <= m_max[r]` (zero transcendentals; built by binary-searching the
+//! exact `fires_nominal` curve, so it is bit-identical to evaluating the
+//! closed form per search); in analog mode `ln(vref + mlsa_offset[r])`
+//! and `g_row_factor[r]` are cached in SoA form so each row costs one
+//! multiply + compare after the cycle-global `ln(vdd)` (see
+//! [`SearchCycle::fires_cached`]).  The cache is invalidated by
+//! [`CamArray::set_voltages`] (delivered rails change), `write_row` /
+//! `clear_row` (row variation or validity change), and `reconfigure`.
+//!
+//! ## Query batching and draw-order compatibility
+//!
+//! [`CamArray::search_batch_into_rngs`] amortises rails/model reads and
+//! streams the stored rows once per query tile
+//! (`BitMatrix::hamming_all_batch`), charging exactly one device cycle
+//! and one cycle-global noise draw per query.  The batch kernel is
+//! **pinned to the sequential path's RNG draw order**: for each query, the
+//! cycle-global draw comes first, then metastable-band rows draw in
+//! ascending row order, all from that query's own stream.  This is why
+//! mismatch counting (RNG-free, any traversal order) and MLSA decisions
+//! (RNG-consuming, fixed order) are two separate passes — fusing them in
+//! tiled order would permute draws and silently change analog results.
 
 use crate::analog::constants as k;
 use crate::analog::dac::VoltageRails;
-use crate::analog::matchline::{MatchlineModel, RowVariation, Voltages};
+use crate::analog::matchline::{MatchlineModel, RowVariation, SearchCycle, Voltages};
 use crate::analog::transistor::Pvt;
 use crate::sim::{EventCounters, SimClock};
-use crate::util::bitops::{hamming_words, BitMatrix, BitVec};
+use crate::util::bitops::{hamming_words, hamming_words_masked, BitMatrix, BitVec};
 use crate::util::rng::Rng;
 
 use super::config::CamConfig;
@@ -24,6 +51,53 @@ pub enum NoiseMode {
     Nominal,
     /// Full Monte-Carlo variation + per-evaluation noise (the device).
     Analog,
+}
+
+/// Precomputed per-row MLSA decision state (module docs).  Everything in
+/// here is a pure function of the delivered rails, the frozen per-row
+/// variation, and row validity — all of which only change through
+/// `set_voltages` / `write_row` / `clear_row` / `reconfigure`, each of
+/// which clears `valid`.
+#[derive(Default)]
+struct RowCache {
+    valid: bool,
+    /// Nominal mode: largest mismatch count that still fires, per row
+    /// (decision: `m <= m_max[r]`).
+    m_max: Vec<u32>,
+    /// Analog mode: `ln(vref + mlsa_offset[r])` at the delivered rails.
+    ln_sense: Vec<f64>,
+    /// Analog mode: per-row systematic conductance factor (SoA copy of
+    /// `RowVariation::g_row_factor`).
+    g_row: Vec<f64>,
+    /// `Some(k)` when rows `[0, k)` are exactly the valid rows (the
+    /// programmed-prefix layout every load planner produces) — lets the
+    /// batch kernel tile the live prefix without per-row validity checks.
+    prefix: Option<usize>,
+}
+
+/// Per-cycle decision plan: the nominal threshold compare or the analog
+/// cycle-global noise constants.
+enum CyclePlan {
+    Nominal,
+    Analog(SearchCycle),
+}
+
+/// MLSA decision for row `r` with mismatch count `m` (free function so the
+/// search loops can borrow the cache alongside other array fields).
+#[inline]
+fn row_fires(plan: &CyclePlan, cache: &RowCache, m: u32, r: usize, rng: &mut Rng) -> bool {
+    match plan {
+        CyclePlan::Nominal => m <= cache.m_max[r],
+        CyclePlan::Analog(c) => c.fires_cached(m, cache.g_row[r], cache.ln_sense[r], rng),
+    }
+}
+
+/// Noise-stream source for a batched search: the serving engines thread
+/// one independent stream per image; the single-macro paths thread the
+/// array's own stream through every query in order.
+enum BatchRngs<'a> {
+    Shared(&'a mut Rng),
+    PerQuery(&'a mut [Rng]),
 }
 
 /// The simulated PiC-BNN macro.
@@ -44,6 +118,11 @@ pub struct CamArray {
     /// ([`CamArray::search`], [`CamArray::search_masked_fires`]): reused
     /// across calls so the hot path allocates nothing.
     scratch_m: Vec<u32>,
+    /// Internal fires scratch backing [`CamArray::search`]'s borrowed
+    /// return value (same zero-allocation contract as `scratch_m`).
+    scratch_f: Vec<bool>,
+    /// Lazily rebuilt per-row decision state (module docs).
+    cache: RowCache,
 }
 
 impl CamArray {
@@ -67,6 +146,8 @@ impl CamArray {
             pvt,
             noise,
             scratch_m: Vec::new(),
+            scratch_f: Vec::new(),
+            cache: RowCache::default(),
         }
     }
 
@@ -101,6 +182,7 @@ impl CamArray {
         self.row_valid = vec![false; config.rows()];
         self.row_var = vec![RowVariation::nominal(); config.rows()];
         self.model = MatchlineModel::with_noise_scale(config.width(), self.pvt, scale);
+        self.cache.valid = false;
     }
 
     /// Scale every per-evaluation noise sigma (ablations; 1.0 = shipped).
@@ -119,6 +201,7 @@ impl CamArray {
             NoiseMode::Nominal => RowVariation::nominal(),
             NoiseMode::Analog => RowVariation::draw(&mut self.rng),
         };
+        self.cache.valid = false;
         self.clock.tick(1);
         self.events.cells_written += self.config.width() as u64;
         self.events.row_writes += 1;
@@ -127,6 +210,7 @@ impl CamArray {
     /// Invalidate a row (its MLSA output is ignored by searches).
     pub fn clear_row(&mut self, row: usize) {
         self.row_valid[row] = false;
+        self.cache.valid = false;
     }
 
     /// Read a row back (diagnostic path; one cycle).
@@ -144,6 +228,10 @@ impl CamArray {
     pub fn set_voltages(&mut self, v: Voltages) {
         let stall = self.rails.retune(v.clamped());
         if stall > 0.0 {
+            // delivered rails changed — the per-row threshold caches are
+            // stale (a zero stall means every DAC kept its level, so the
+            // cache stays warm across repeated parks at one point)
+            self.cache.valid = false;
             self.clock.stall(stall);
             self.events.retunes += 1;
         }
@@ -157,6 +245,86 @@ impl CamArray {
     /// Nominal HD tolerance at the current rails (diagnostic).
     pub fn current_tolerance(&self) -> f64 {
         self.model.hd_tolerance(&self.rails.delivered())
+    }
+
+    /// Rebuild the per-row decision cache if a programming/retune event
+    /// invalidated it (see the module docs for the exact dependency set).
+    fn ensure_row_cache(&mut self) {
+        if self.cache.valid {
+            return;
+        }
+        let rows = self.config.rows();
+        let v = self.rails.delivered();
+        let n_prefix = self.row_valid.iter().take_while(|&&b| b).count();
+        let contiguous = self.row_valid[n_prefix..].iter().all(|&b| !b);
+        self.cache.prefix = contiguous.then_some(n_prefix);
+        match self.noise {
+            NoiseMode::Nominal => {
+                self.cache.m_max.clear();
+                self.cache.m_max.reserve(rows);
+                let n_cells = self.config.width() as u32;
+                // binary search the exact fires_nominal curve (monotone
+                // non-increasing in m), so `m <= m_max[r]` reproduces the
+                // closed form bit-for-bit; rows sharing one variation
+                // (every nominal-mode row) share one search via the memo
+                let mut memo: Option<(RowVariation, u32)> = None;
+                for r in 0..rows {
+                    if !self.row_valid[r] {
+                        self.cache.m_max.push(0);
+                        continue;
+                    }
+                    let var = self.row_var[r];
+                    let hit = memo.filter(|(mv, _)| {
+                        mv.g_row_factor == var.g_row_factor && mv.mlsa_offset == var.mlsa_offset
+                    });
+                    let m_max = match hit {
+                        Some((_, m_max)) => m_max,
+                        None => {
+                            let m_max = if self.model.fires_nominal(n_cells, &v, &var) {
+                                n_cells
+                            } else {
+                                // invariant: fires(lo), !fires(hi)
+                                let (mut lo, mut hi) = (0u32, n_cells);
+                                while lo + 1 < hi {
+                                    let mid = lo + (hi - lo) / 2;
+                                    if self.model.fires_nominal(mid, &v, &var) {
+                                        lo = mid;
+                                    } else {
+                                        hi = mid;
+                                    }
+                                }
+                                lo
+                            };
+                            memo = Some((var, m_max));
+                            m_max
+                        }
+                    };
+                    self.cache.m_max.push(m_max);
+                }
+            }
+            NoiseMode::Analog => {
+                self.cache.ln_sense.clear();
+                self.cache.ln_sense.reserve(rows);
+                self.cache.g_row.clear();
+                self.cache.g_row.reserve(rows);
+                for r in 0..rows {
+                    let var = &self.row_var[r];
+                    self.cache.ln_sense.push((v.vref + var.mlsa_offset).ln());
+                    self.cache.g_row.push(var.g_row_factor);
+                }
+            }
+        }
+        self.cache.valid = true;
+    }
+
+    /// The per-cycle decision plan (draws the analog cycle-global noise).
+    fn begin_plan(&self, rng: &mut Rng) -> CyclePlan {
+        match self.noise {
+            NoiseMode::Nominal => CyclePlan::Nominal,
+            NoiseMode::Analog => {
+                CyclePlan::Analog(self.model.begin_cycle(&self.rails.delivered(), rng))
+            }
+        }
     }
 
     /// One search cycle: per-row mismatch counts + MLSA decisions.
@@ -187,34 +355,7 @@ impl CamArray {
         fires: &mut Vec<bool>,
         rng: &mut Rng,
     ) {
-        assert_eq!(query.len(), self.config.width(), "query width mismatch");
-        let rows = self.config.rows();
-        mismatches.clear();
-        mismatches.reserve(rows);
-        fires.clear();
-        fires.reserve(rows);
-        let v = self.rails.delivered();
-        // cycle-global noise (supply, strobe jitter) drawn once per search:
-        // every row of a cycle shares the rails and the MLSA strobe
-        let cycle = match self.noise {
-            NoiseMode::Analog => Some(self.model.begin_cycle(&v, rng)),
-            NoiseMode::Nominal => None,
-        };
-        for r in 0..rows {
-            if !self.row_valid[r] {
-                mismatches.push(0);
-                fires.push(false);
-                continue;
-            }
-            let m = hamming_words(self.store.row_words(r), query.words());
-            mismatches.push(m);
-            let fire = match &cycle {
-                None => self.model.fires_nominal(m, &v, &self.row_var[r]),
-                Some(c) => c.fires(m, &self.row_var[r], rng),
-            };
-            fires.push(fire);
-        }
-        self.account_search();
+        self.search_one(query, None, mismatches, fires, rng);
     }
 
     /// Ternary (masked) search cycle: columns with a clear `mask` bit are
@@ -227,48 +368,168 @@ impl CamArray {
         mismatches: &mut Vec<u32>,
         fires: &mut Vec<bool>,
     ) {
-        assert_eq!(query.len(), self.config.width());
-        assert_eq!(mask.len(), self.config.width());
+        let mut rng = self.rng.clone();
+        self.search_one(query, Some(mask), mismatches, fires, &mut rng);
+        self.rng = rng;
+    }
+
+    /// The unified single-query kernel behind the exact and masked search
+    /// entry points: one row loop, one decision path (the same cached
+    /// thresholds the batch kernel uses), masked searches differing only
+    /// in the mismatch-count primitive.
+    fn search_one(
+        &mut self,
+        query: &BitVec,
+        mask: Option<&BitVec>,
+        mismatches: &mut Vec<u32>,
+        fires: &mut Vec<bool>,
+        rng: &mut Rng,
+    ) {
+        assert_eq!(query.len(), self.config.width(), "query width mismatch");
+        if let Some(mask) = mask {
+            assert_eq!(mask.len(), self.config.width(), "mask width mismatch");
+        }
+        self.ensure_row_cache();
         let rows = self.config.rows();
         mismatches.clear();
+        mismatches.reserve(rows);
         fires.clear();
-        let v = self.rails.delivered();
-        let cycle = match self.noise {
-            NoiseMode::Analog => Some(self.model.begin_cycle(&v, &mut self.rng)),
-            NoiseMode::Nominal => None,
-        };
+        fires.reserve(rows);
+        // cycle-global noise (supply, strobe jitter) drawn once per search:
+        // every row of a cycle shares the rails and the MLSA strobe
+        let plan = self.begin_plan(rng);
         for r in 0..rows {
             if !self.row_valid[r] {
                 mismatches.push(0);
                 fires.push(false);
                 continue;
             }
-            // HD over driven columns only: popcount((row ^ query) & mask)
-            let m: u32 = self
-                .store
-                .row_words(r)
-                .iter()
-                .zip(query.words())
-                .zip(mask.words())
-                .map(|((&a, &b), &k)| ((a ^ b) & k).count_ones())
-                .sum();
-            mismatches.push(m);
-            let fire = match &cycle {
-                None => self.model.fires_nominal(m, &v, &self.row_var[r]),
-                Some(c) => c.fires(m, &self.row_var[r], &mut self.rng),
+            let m = match mask {
+                None => hamming_words(self.store.row_words(r), query.words()),
+                Some(mask) => {
+                    hamming_words_masked(self.store.row_words(r), query.words(), mask.words())
+                }
             };
-            fires.push(fire);
+            mismatches.push(m);
+            fires.push(row_fires(&plan, &self.cache, m, r, rng));
         }
-        self.account_search();
+        self.account_searches(1);
     }
 
-    /// Allocating convenience wrapper around [`CamArray::search_into`].
-    pub fn search(&mut self, query: &BitVec) -> Vec<bool> {
+    /// Query-batched search: `queries.len()` device cycles, one per query,
+    /// with one cycle-global noise draw per query from that query's own
+    /// stream — accounting and per-stream draw order bit-identical to
+    /// issuing the same queries through [`CamArray::search_into_rng`]
+    /// sequentially (the serving engines rely on this; module docs).
+    ///
+    /// Outputs: `mismatches[q * rows + r]` and one packed fires bitmask
+    /// per query (`fires.row_ones(q)` walks query `q`'s firing rows).
+    /// Both buffers are reshaped in place and never reallocate once grown.
+    pub fn search_batch_into_rngs(
+        &mut self,
+        queries: &[BitVec],
+        rngs: &mut [Rng],
+        mismatches: &mut Vec<u32>,
+        fires: &mut BitMatrix,
+    ) {
+        assert_eq!(queries.len(), rngs.len(), "one noise stream per query");
+        self.search_batch_core(queries, BatchRngs::PerQuery(rngs), mismatches, fires);
+    }
+
+    /// [`CamArray::search_batch_into_rngs`] drawing every query's noise
+    /// from the array's own stream, in query order — the draw sequence of
+    /// the equivalent [`CamArray::search_into`] loop (single-macro paths).
+    pub fn search_batch_into(
+        &mut self,
+        queries: &[BitVec],
+        mismatches: &mut Vec<u32>,
+        fires: &mut BitMatrix,
+    ) {
+        let mut rng = self.rng.clone();
+        self.search_batch_core(queries, BatchRngs::Shared(&mut rng), mismatches, fires);
+        self.rng = rng;
+    }
+
+    fn search_batch_core(
+        &mut self,
+        queries: &[BitVec],
+        mut rngs: BatchRngs<'_>,
+        mismatches: &mut Vec<u32>,
+        fires: &mut BitMatrix,
+    ) {
+        let rows = self.config.rows();
+        let nq = queries.len();
+        for q in queries {
+            assert_eq!(q.len(), self.config.width(), "query width mismatch");
+        }
+        fires.reset(nq, rows);
+        mismatches.clear();
+        mismatches.resize(nq * rows, 0);
+        if nq == 0 {
+            return;
+        }
+        self.ensure_row_cache();
+
+        // pass 1 — mismatch counts (RNG-free): stream the store once per
+        // query tile over the programmed prefix; arrays with cleared holes
+        // (diagnostics only) fall back to a row-major loop
+        match self.cache.prefix {
+            Some(live) => {
+                self.store
+                    .hamming_rows_batch_into(live, queries, mismatches, rows);
+            }
+            None => {
+                for r in 0..rows {
+                    if !self.row_valid[r] {
+                        continue;
+                    }
+                    let row = self.store.row_words(r);
+                    for (qi, q) in queries.iter().enumerate() {
+                        mismatches[qi * rows + r] = hamming_words(row, q.words());
+                    }
+                }
+            }
+        }
+
+        // pass 2 — MLSA decisions in the sequential path's exact draw
+        // order: per query, the cycle-global draw, then metastable rows
+        // ascending (see the module docs for why the passes are split)
+        for qi in 0..nq {
+            let rng: &mut Rng = match &mut rngs {
+                BatchRngs::Shared(r) => &mut **r,
+                BatchRngs::PerQuery(rs) => &mut rs[qi],
+            };
+            let plan = self.begin_plan(rng);
+            let m_row = &mismatches[qi * rows..(qi + 1) * rows];
+            let fire_words = fires.row_words_mut(qi);
+            let mut word = 0u64;
+            let mut widx = 0usize;
+            for (r, &m) in m_row.iter().enumerate() {
+                if self.row_valid[r] && row_fires(&plan, &self.cache, m, r, rng) {
+                    word |= 1 << (r % 64);
+                }
+                if r % 64 == 63 {
+                    fire_words[widx] = word;
+                    word = 0;
+                    widx += 1;
+                }
+            }
+            if rows % 64 != 0 {
+                fire_words[widx] = word;
+            }
+        }
+        self.account_searches(nq as u64);
+    }
+
+    /// Allocation-free convenience wrapper around [`CamArray::search_into`]:
+    /// the returned slice borrows array-owned scratch, reused across calls.
+    pub fn search(&mut self, query: &BitVec) -> &[bool] {
         let mut m = std::mem::take(&mut self.scratch_m);
-        let mut f = Vec::new();
+        let mut f = std::mem::take(&mut self.scratch_f);
         self.search_into(query, &mut m, &mut f);
         self.scratch_m = m;
-        f
+        self.scratch_f = f;
+        &self.scratch_f
     }
 
     /// Fire-only masked search that honours the out-parameter contract:
@@ -295,14 +556,16 @@ impl CamArray {
         (self.model.trace(m, ts * 2.0, n_pts, &v), ts)
     }
 
-    fn account_search(&mut self) {
-        self.clock.tick(1);
-        self.events.searches += 1;
+    /// Charge `n` search cycles (one per query — batching amortises host
+    /// work, never device work; totals match `n` sequential searches).
+    fn account_searches(&mut self, n: u64) {
+        self.clock.tick(n);
+        self.events.searches += n;
         let width = self.config.width() as u64;
         let rows = self.config.rows() as u64;
-        self.events.cells_precharged += width * rows;
-        self.events.sl_toggles += width;
-        self.events.mlsa_evals += rows;
+        self.events.cells_precharged += width * rows * n;
+        self.events.sl_toggles += width * n;
+        self.events.mlsa_evals += rows * n;
     }
 
     /// Reset cycle/event accounting (contents preserved).
@@ -436,6 +699,157 @@ mod tests {
         let (mut m, mut f) = (Vec::new(), Vec::new());
         cam.search_into(&q, &mut m, &mut f);
         assert_eq!(m[0], 33);
+    }
+
+    fn rand_bits(n: usize, rng: &mut Rng) -> BitVec {
+        let mut v = BitVec::zeros(n);
+        for i in 0..n {
+            v.set(i, rng.chance(0.5));
+        }
+        v
+    }
+
+    /// Two bit-identical arrays (same seed, same writes, same rails).
+    fn twin_arrays(noise: NoiseMode, seed: u64, n_rows: usize) -> (CamArray, CamArray) {
+        let mk = || {
+            let mut cam = CamArray::new(CamConfig::W512x256, Pvt::nominal(), noise, seed);
+            let mut rng = Rng::new(seed ^ 0xF00D, 2);
+            for r in 0..n_rows {
+                cam.write_row(r, &rand_bits(512, &mut rng));
+            }
+            cam.set_voltages(Voltages::new(0.72, 0.48, 1.05));
+            cam
+        };
+        (mk(), mk())
+    }
+
+    #[test]
+    fn batch_search_matches_sequential_in_both_modes() {
+        for noise in [NoiseMode::Nominal, NoiseMode::Analog] {
+            let (mut seq, mut bat) = twin_arrays(noise, 11, 20);
+            let mut rng = Rng::new(99, 1);
+            let queries: Vec<BitVec> = (0..6).map(|_| rand_bits(512, &mut rng)).collect();
+            let mut rngs_a: Vec<Rng> = (0..6).map(|i| Rng::new(7, i)).collect();
+            let mut rngs_b = rngs_a.clone();
+            let (mut sm, mut sf) = (Vec::new(), Vec::new());
+            let (mut seq_m, mut seq_f) = (Vec::new(), Vec::new());
+            for (i, q) in queries.iter().enumerate() {
+                seq.search_into_rng(q, &mut sm, &mut sf, &mut rngs_a[i]);
+                seq_m.extend_from_slice(&sm);
+                seq_f.push(sf.clone());
+            }
+            let (mut bm, mut bf) = (Vec::new(), BitMatrix::default());
+            bat.search_batch_into_rngs(&queries, &mut rngs_b, &mut bm, &mut bf);
+            assert_eq!(bm, seq_m, "{noise:?}: mismatch counts diverge");
+            for (i, f) in seq_f.iter().enumerate() {
+                for r in 0..256 {
+                    assert_eq!(bf.get(i, r), f[r], "{noise:?}: fires q{i} r{r}");
+                }
+            }
+            for (ra, rb) in rngs_a.iter().zip(&rngs_b) {
+                assert_eq!(format!("{ra:?}"), format!("{rb:?}"), "{noise:?}: rng stream");
+            }
+            assert_eq!(seq.clock.cycles, bat.clock.cycles, "{noise:?}");
+            assert_eq!(seq.events, bat.events, "{noise:?}");
+        }
+    }
+
+    #[test]
+    fn batch_search_shared_stream_matches_search_into_loop() {
+        // single-macro paths: the array's own stream, threaded through
+        // every query in order, must see the sequential draw sequence
+        let (mut seq, mut bat) = twin_arrays(NoiseMode::Analog, 31, 12);
+        let mut rng = Rng::new(5, 5);
+        let queries: Vec<BitVec> = (0..5).map(|_| rand_bits(512, &mut rng)).collect();
+        let (mut sm, mut sf) = (Vec::new(), Vec::new());
+        let mut seq_f = Vec::new();
+        for q in &queries {
+            seq.search_into(q, &mut sm, &mut sf);
+            seq_f.push(sf.clone());
+        }
+        let (mut bm, mut bf) = (Vec::new(), BitMatrix::default());
+        bat.search_batch_into(&queries, &mut bm, &mut bf);
+        for (i, f) in seq_f.iter().enumerate() {
+            for r in 0..256 {
+                assert_eq!(bf.get(i, r), f[r], "q{i} r{r}");
+            }
+        }
+        // the internal streams advanced identically: subsequent single
+        // searches still agree
+        let probe = rand_bits(512, &mut rng);
+        assert_eq!(seq.search(&probe), bat.search(&probe));
+    }
+
+    #[test]
+    fn threshold_cache_invalidated_by_writes_and_retunes() {
+        let mut cam = CamArray::nominal(CamConfig::W512x256);
+        let stored = BitVec::ones(512);
+        cam.write_row(0, &stored);
+        cam.set_voltages(Voltages::exact());
+        assert!(cam.search(&stored)[0], "exact match fires");
+        // reprogram the row after a search has built the cache: the stale
+        // m_max must not leak into the next decision
+        let mut other = BitVec::ones(512);
+        other.set(0, false);
+        cam.write_row(0, &other);
+        assert!(!cam.search(&stored)[0], "stale cache after write_row");
+        assert!(cam.search(&other)[0]);
+        // retune to a tolerant point: the same query now fires
+        let mut v8 = None;
+        for vref in [0.7, 0.8, 0.9] {
+            for veval in [0.4, 0.6] {
+                let v = Voltages::new(vref, veval, 1.0);
+                if MatchlineModel::new(512, Pvt::nominal()).hd_tolerance(&v) > 4.0 {
+                    v8 = Some(v);
+                }
+            }
+        }
+        cam.set_voltages(v8.expect("a tolerant grid point"));
+        assert!(cam.search(&stored)[0], "stale cache after set_voltages");
+        // clearing the row silences it without touching other rows
+        cam.write_row(1, &stored);
+        cam.clear_row(0);
+        let fires = cam.search(&stored);
+        assert!(!fires[0], "cleared row fired");
+        assert!(fires[1]);
+    }
+
+    #[test]
+    fn search_reuses_owned_scratch_without_reallocating() {
+        let mut cam = CamArray::nominal(CamConfig::W512x256);
+        cam.write_row(0, &BitVec::ones(512));
+        let q = BitVec::ones(512);
+        let p1 = cam.search(&q).as_ptr();
+        for _ in 0..50 {
+            cam.search(&q);
+        }
+        let p2 = cam.search(&q).as_ptr();
+        assert_eq!(p1, p2, "fires scratch reallocated");
+    }
+
+    #[test]
+    fn batch_search_with_cleared_hole_matches_sequential() {
+        // a non-contiguous validity pattern exercises the kernel's
+        // row-major fallback path
+        for noise in [NoiseMode::Nominal, NoiseMode::Analog] {
+            let (mut seq, mut bat) = twin_arrays(noise, 17, 10);
+            seq.clear_row(4);
+            bat.clear_row(4);
+            let mut rng = Rng::new(3, 9);
+            let queries: Vec<BitVec> = (0..3).map(|_| rand_bits(512, &mut rng)).collect();
+            let mut rngs_a: Vec<Rng> = (0..3).map(|i| Rng::new(41, i)).collect();
+            let mut rngs_b = rngs_a.clone();
+            let (mut sm, mut sf) = (Vec::new(), Vec::new());
+            let mut seq_all = Vec::new();
+            for (i, q) in queries.iter().enumerate() {
+                seq.search_into_rng(q, &mut sm, &mut sf, &mut rngs_a[i]);
+                seq_all.extend_from_slice(&sm);
+            }
+            let (mut bm, mut bf) = (Vec::new(), BitMatrix::default());
+            bat.search_batch_into_rngs(&queries, &mut rngs_b, &mut bm, &mut bf);
+            assert_eq!(bm, seq_all, "{noise:?}");
+            assert!(bf.row_ones(0).all(|r| r != 4), "cleared row fired");
+        }
     }
 
     #[test]

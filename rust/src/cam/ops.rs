@@ -42,7 +42,10 @@ pub fn masked_search(
     assert_eq!(query.len(), mask.len());
     // honour the out-parameter contract: fires land directly in the
     // caller's buffer and the mismatch-count scratch is owned (and reused)
-    // by the array — steady-state calls perform zero allocations
+    // by the array — steady-state calls perform zero allocations.  The
+    // masked and exact paths share one row kernel (`CamArray::search_one`),
+    // differing only in the mismatch-count primitive, so both benefit from
+    // the precomputed per-row MLSA thresholds.
     cam.search_masked_fires(query, mask, out_fires);
 }
 

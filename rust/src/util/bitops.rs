@@ -3,6 +3,27 @@
 //! Convention (shared with `python/compile/train.py::pack_bits_pm1`):
 //! bit `i` lives in word `i / 64` at position `i % 64`, and a set bit
 //! encodes +1 ("logic '1'"), a clear bit −1 ("logic '0'").
+//!
+//! ## The query-batched Hamming kernel
+//!
+//! [`BitMatrix::hamming_all_batch`] is the simulator's innermost loop.  It
+//! inverts the naive loop order: instead of re-streaming the whole stored
+//! matrix once per query, each row's words are loaded **once** and
+//! XOR/popcounted against a register tile of up to [`QUERY_TILE`] queries
+//! (the tile's words stay in L1/registers, and the per-query accumulators
+//! form independent dependency chains, so the popcounts pipeline instead
+//! of serialising on one accumulator).  Fire vectors on the batch path are
+//! word-packed `u64` bitmasks (a `BitMatrix` row per query, walked with
+//! [`BitMatrix::row_ones`]) rather than `Vec<bool>`, so vote accumulation
+//! touches only firing rows.
+//!
+//! The tile shape is free to change: mismatch counts are exact integers,
+//! so any traversal order yields bit-identical results.  What is *pinned*
+//! is downstream of this kernel — `cam::CamArray` consumes the counts in
+//! ascending-row order per query so the metastable-band noise draws hit
+//! each per-image RNG stream in exactly the order the sequential path
+//! used (see `cam/array.rs`); keep the count pass separate from any
+//! RNG-consuming pass when extending this module.
 
 /// Number of u64 words needed for `n` bits.
 #[inline]
@@ -232,6 +253,25 @@ pub fn hamming_words(a: &[u64], b: &[u64]) -> u32 {
     acc
 }
 
+/// Hamming distance over driven columns only: popcount((a ^ b) & mask)
+/// (the ternary-search primitive — masked columns never open a discharge
+/// path, see `cam::ops::masked_search`).
+#[inline]
+pub fn hamming_words_masked(a: &[u64], b: &[u64], mask: &[u64]) -> u32 {
+    debug_assert_eq!(a.len(), b.len());
+    debug_assert_eq!(a.len(), mask.len());
+    let mut acc = 0u32;
+    for ((x, y), k) in a.iter().zip(b).zip(mask) {
+        acc += ((x ^ y) & k).count_ones();
+    }
+    acc
+}
+
+/// Queries per register tile of the batched Hamming kernel.  Eight 32-bit
+/// accumulators plus the row word fit comfortably in registers, and an
+/// 8-query × 32-word tile (2 KiB of query words) stays L1-resident.
+pub const QUERY_TILE: usize = 8;
+
 /// A dense row-major matrix of packed ±1 rows (e.g. a binary weight matrix:
 /// `rows` neurons × `cols` inputs), rows padded to whole words.
 #[derive(Clone, Debug)]
@@ -316,6 +356,29 @@ impl BitMatrix {
         }
     }
 
+    /// Reshape in place to `rows` × `cols`, zero-filled, reusing the
+    /// existing allocation (batch-path scratch: steady-state calls with a
+    /// stable shape never reallocate).
+    pub fn reset(&mut self, rows: usize, cols: usize) {
+        self.rows = rows;
+        self.cols = cols;
+        self.stride = words_for(cols);
+        self.data.clear();
+        self.data.resize(rows * self.stride, 0);
+    }
+
+    /// Indices of set bits in row `r`, ascending (walks the packed fires
+    /// bitmask one `trailing_zeros` per set bit, so vote accumulation
+    /// costs O(fires), not O(rows)).
+    pub fn row_ones(&self, r: usize) -> RowOnes<'_> {
+        let words = self.row_words(r);
+        RowOnes {
+            words,
+            word_idx: 0,
+            cur: words.first().copied().unwrap_or(0),
+        }
+    }
+
     /// HD between `query` and every row; appends into `out`.
     pub fn hamming_all(&self, query: &BitVec, out: &mut Vec<u32>) {
         debug_assert_eq!(query.len(), self.cols);
@@ -324,6 +387,115 @@ impl BitMatrix {
         for r in 0..self.rows {
             out.push(hamming_words(self.row_words(r), query.words()));
         }
+    }
+
+    /// HD between every query and every row, query-batched: resizes `out`
+    /// to `queries.len() * rows` and writes `out[q * rows + r]`.
+    ///
+    /// This is the register-tiled kernel described in the module docs:
+    /// each row's words are streamed once per tile of [`QUERY_TILE`]
+    /// queries instead of once per query.
+    pub fn hamming_all_batch(&self, queries: &[BitVec], out: &mut Vec<u32>) {
+        out.clear();
+        out.resize(queries.len() * self.rows, 0);
+        self.hamming_rows_batch_into(self.rows, queries, out, self.rows);
+    }
+
+    /// [`BitMatrix::hamming_all_batch`] restricted to the first `rows`
+    /// rows, writing `out[q * out_stride + r]` (entries past `rows` are
+    /// left untouched).  `cam::CamArray` uses this to tile over the
+    /// programmed row prefix only.
+    pub fn hamming_rows_batch_into(
+        &self,
+        rows: usize,
+        queries: &[BitVec],
+        out: &mut [u32],
+        out_stride: usize,
+    ) {
+        assert!(rows <= self.rows, "row limit exceeds the matrix");
+        assert!(rows <= out_stride, "output stride too small");
+        if !queries.is_empty() {
+            assert!(
+                out.len() >= (queries.len() - 1) * out_stride + rows,
+                "output buffer too small"
+            );
+        }
+        let mut q0 = 0usize;
+        for tile in queries.chunks(QUERY_TILE) {
+            let out_tile = &mut out[q0 * out_stride..];
+            match tile.len() {
+                8 => self.hamming_tile::<8>(rows, tile, out_tile, out_stride),
+                7 => self.hamming_tile::<7>(rows, tile, out_tile, out_stride),
+                6 => self.hamming_tile::<6>(rows, tile, out_tile, out_stride),
+                5 => self.hamming_tile::<5>(rows, tile, out_tile, out_stride),
+                4 => self.hamming_tile::<4>(rows, tile, out_tile, out_stride),
+                3 => self.hamming_tile::<3>(rows, tile, out_tile, out_stride),
+                2 => self.hamming_tile::<2>(rows, tile, out_tile, out_stride),
+                1 => self.hamming_tile::<1>(rows, tile, out_tile, out_stride),
+                _ => unreachable!("chunks({QUERY_TILE}) yields 1..={QUERY_TILE}"),
+            }
+            q0 += tile.len();
+        }
+    }
+
+    /// One register tile: `K` query word-slices held live against each
+    /// streamed row, `K` independent accumulator chains.
+    fn hamming_tile<const K: usize>(
+        &self,
+        rows: usize,
+        tile: &[BitVec],
+        out: &mut [u32],
+        out_stride: usize,
+    ) {
+        debug_assert_eq!(tile.len(), K);
+        let qs: [&[u64]; K] = core::array::from_fn(|k| {
+            let w = tile[k].words();
+            assert_eq!(w.len(), self.stride, "query width mismatch");
+            w
+        });
+        for r in 0..rows {
+            let row = self.row_words(r);
+            let mut acc = [0u32; K];
+            for (i, &w) in row.iter().enumerate() {
+                for (k, q) in qs.iter().enumerate() {
+                    acc[k] += (w ^ q[i]).count_ones();
+                }
+            }
+            for (k, &a) in acc.iter().enumerate() {
+                out[k * out_stride + r] = a;
+            }
+        }
+    }
+}
+
+impl Default for BitMatrix {
+    fn default() -> Self {
+        BitMatrix::zeros(0, 0)
+    }
+}
+
+/// Iterator over the set-bit indices of one packed row
+/// (see [`BitMatrix::row_ones`]).
+pub struct RowOnes<'a> {
+    words: &'a [u64],
+    word_idx: usize,
+    cur: u64,
+}
+
+impl Iterator for RowOnes<'_> {
+    type Item = usize;
+
+    fn next(&mut self) -> Option<usize> {
+        while self.cur == 0 {
+            self.word_idx += 1;
+            if self.word_idx >= self.words.len() {
+                return None;
+            }
+            self.cur = self.words[self.word_idx];
+        }
+        let bit = self.cur.trailing_zeros() as usize;
+        self.cur &= self.cur - 1;
+        Some(self.word_idx * 64 + bit)
     }
 }
 
@@ -542,6 +714,138 @@ mod tests {
         for (r, row) in rows.iter().enumerate() {
             assert_eq!(&m.row(r), row);
         }
+    }
+
+    #[test]
+    fn hamming_all_batch_matches_per_row_for_every_tile_shape() {
+        // batch sizes crossing the QUERY_TILE boundary, plus odd widths so
+        // the last word is partial
+        let mut rng = Rng::new(9, 31);
+        for cols in [64usize, 257, 1024] {
+            let rows: Vec<BitVec> = (0..13)
+                .map(|_| {
+                    let mut v = BitVec::zeros(cols);
+                    for i in 0..cols {
+                        v.set(i, rng.chance(0.5));
+                    }
+                    v
+                })
+                .collect();
+            let m = BitMatrix::from_rows(&rows);
+            for nq in [1usize, 2, 7, 8, 9, 17] {
+                let queries: Vec<BitVec> = (0..nq)
+                    .map(|_| {
+                        let mut v = BitVec::zeros(cols);
+                        for i in 0..cols {
+                            v.set(i, rng.chance(0.5));
+                        }
+                        v
+                    })
+                    .collect();
+                let mut out = Vec::new();
+                m.hamming_all_batch(&queries, &mut out);
+                assert_eq!(out.len(), nq * m.rows());
+                for (q, query) in queries.iter().enumerate() {
+                    for (r, row) in rows.iter().enumerate() {
+                        assert_eq!(
+                            out[q * m.rows() + r],
+                            row.hamming(query),
+                            "cols={cols} nq={nq} q={q} r={r}"
+                        );
+                    }
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn hamming_rows_batch_into_respects_row_limit_and_stride() {
+        let mut rng = Rng::new(4, 44);
+        let rows: Vec<BitVec> = (0..10)
+            .map(|_| {
+                let mut v = BitVec::zeros(130);
+                for i in 0..130 {
+                    v.set(i, rng.chance(0.5));
+                }
+                v
+            })
+            .collect();
+        let m = BitMatrix::from_rows(&rows);
+        let q = rows[3].clone();
+        let queries = vec![q.clone(), rows[7].clone()];
+        let stride = 16; // > row limit: tail entries must stay untouched
+        let mut out = vec![u32::MAX; 2 * stride];
+        m.hamming_rows_batch_into(6, &queries, &mut out, stride);
+        for (qi, query) in queries.iter().enumerate() {
+            for r in 0..6 {
+                assert_eq!(out[qi * stride + r], rows[r].hamming(query));
+            }
+            for r in 6..stride {
+                assert_eq!(out[qi * stride + r], u32::MAX, "tail clobbered");
+            }
+        }
+    }
+
+    #[test]
+    fn hamming_words_masked_matches_naive() {
+        let mut rng = Rng::new(8, 18);
+        for len in [1usize, 64, 65, 700] {
+            let mut a = BitVec::zeros(len);
+            let mut b = BitVec::zeros(len);
+            let mut k = BitVec::zeros(len);
+            for i in 0..len {
+                a.set(i, rng.chance(0.5));
+                b.set(i, rng.chance(0.5));
+                k.set(i, rng.chance(0.5));
+            }
+            let naive = (0..len)
+                .filter(|&i| k.get(i) && a.get(i) != b.get(i))
+                .count() as u32;
+            assert_eq!(
+                hamming_words_masked(a.words(), b.words(), k.words()),
+                naive,
+                "len {len}"
+            );
+        }
+    }
+
+    #[test]
+    fn row_ones_walks_exactly_the_set_bits() {
+        let mut rng = Rng::new(6, 66);
+        let mut m = BitMatrix::zeros(4, 300);
+        for r in 0..4 {
+            for c in 0..300 {
+                m.set(r, c, rng.chance(0.1));
+            }
+        }
+        for r in 0..4 {
+            let got: Vec<usize> = m.row_ones(r).collect();
+            let want: Vec<usize> = (0..300).filter(|&c| m.get(r, c)).collect();
+            assert_eq!(got, want, "row {r}");
+        }
+        // empty row and empty matrix
+        let z = BitMatrix::zeros(1, 128);
+        assert_eq!(z.row_ones(0).count(), 0);
+        let e = BitMatrix::default();
+        assert_eq!(e.rows(), 0);
+    }
+
+    #[test]
+    fn reset_reuses_the_allocation() {
+        let mut m = BitMatrix::zeros(8, 512);
+        m.set(3, 100, true);
+        let cap = m.data.capacity();
+        let ptr = m.data.as_ptr();
+        m.reset(8, 512);
+        assert_eq!(m.data.capacity(), cap);
+        assert_eq!(m.data.as_ptr(), ptr);
+        assert!(!m.get(3, 100), "reset must zero the contents");
+        // shrinking then growing back stays within the first allocation
+        m.reset(2, 64);
+        assert_eq!(m.rows(), 2);
+        assert_eq!(m.cols(), 64);
+        m.reset(8, 512);
+        assert_eq!(m.data.capacity(), cap);
     }
 
     #[test]

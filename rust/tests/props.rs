@@ -9,6 +9,7 @@ use picbnn::bnn::model::{MappedLayer, MappedModel};
 use picbnn::cam::{CamArray, CamConfig, NoiseMode};
 use picbnn::testkit::{forall, prop_assert, Gen};
 use picbnn::util::bitops::{hamming_words, BitMatrix, BitVec};
+use picbnn::util::rng::Rng;
 
 /// Draw a random single-segment mapped layer.
 fn gen_layer(g: &mut Gen, n_out: usize, n_in: usize, width: usize) -> MappedLayer {
@@ -164,7 +165,8 @@ fn prop_planner_never_exceeds_the_budget() {
 #[test]
 fn prop_budget_never_changes_nominal_predictions() {
     // any viable budget (sharing, partial pinning, replication) yields
-    // the reload Pipeline's exact votes in nominal mode
+    // the reload Pipeline's exact votes in nominal mode — and so does any
+    // chunking of the batched search kernel the pool now runs on
     forall(8, 137, |g| {
         let model = gen_model(g);
         let opts = PipelineOptions {
@@ -183,6 +185,106 @@ fn prop_budget_never_changes_nominal_predictions() {
             pool.classify_batch(&images) == want,
             format!("budget {budget} changed predictions"),
         )?;
+        // sweep the batched path's chunk shapes: device-batch size is an
+        // execution detail, never a semantic one
+        let chunk = g.usize_in(1, images.len());
+        let mut split = Vec::new();
+        for c in images.chunks(chunk) {
+            split.extend(pool.classify_batch(c));
+        }
+        prop_assert(
+            split == want,
+            format!("budget {budget} chunk {chunk} changed the batched kernel's predictions"),
+        )?;
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_batch_search_bit_identical_to_sequential() {
+    // the tentpole contract: `search_batch_into_rngs` over any batch size,
+    // either noise mode, and across interleaved retunes/row-writes (cache
+    // invalidation soundness) is bit-identical to N sequential
+    // `search_into_rng` calls — mismatch counts, fires, per-stream RNG
+    // positions, and cycle/event accounting
+    forall(20, 211, |g| {
+        let cfg = CamConfig::all()[g.usize_in(0, 2)];
+        let analog = g.bool();
+        let seed = g.usize_in(0, 1 << 20) as u64;
+        let width = cfg.width();
+        let mk = |noise| CamArray::new(cfg, Pvt::nominal(), noise, seed);
+        let noise = if analog {
+            NoiseMode::Analog
+        } else {
+            NoiseMode::Nominal
+        };
+        let (mut seq, mut bat) = (mk(noise), mk(noise));
+        let n_rows = g.usize_in(1, 16).min(cfg.rows());
+        for r in 0..n_rows {
+            let data = BitVec::from_pm1(&g.pm1_vec(width));
+            seq.write_row(r, &data);
+            bat.write_row(r, &data);
+        }
+        if g.bool() && n_rows > 1 {
+            // punch a hole so the kernel's non-prefix fallback is covered
+            let hole = g.usize_in(0, n_rows - 1);
+            seq.clear_row(hole);
+            bat.clear_row(hole);
+        }
+        for round in 0..2u64 {
+            // rails chosen anew each round: the second round exercises the
+            // threshold caches across a retune + a row rewrite
+            let v = Voltages::new(
+                g.f64_in(0.62, 1.15),
+                g.f64_in(0.35, 1.1),
+                g.f64_in(0.65, 1.15),
+            );
+            seq.set_voltages(v);
+            bat.set_voltages(v);
+            let nq = g.usize_in(1, 11);
+            let queries: Vec<BitVec> = (0..nq)
+                .map(|_| BitVec::from_pm1(&g.pm1_vec(width)))
+                .collect();
+            let mut rngs_seq: Vec<Rng> = (0..nq as u64)
+                .map(|i| Rng::new(seed ^ 0x5EED, round * 100 + i))
+                .collect();
+            let mut rngs_bat = rngs_seq.clone();
+            let (mut sm, mut sf) = (Vec::new(), Vec::new());
+            let (mut want_m, mut want_f) = (Vec::new(), Vec::new());
+            for (i, q) in queries.iter().enumerate() {
+                seq.search_into_rng(q, &mut sm, &mut sf, &mut rngs_seq[i]);
+                want_m.extend_from_slice(&sm);
+                want_f.push(sf.clone());
+            }
+            let (mut bm, mut bf) = (Vec::new(), BitMatrix::default());
+            bat.search_batch_into_rngs(&queries, &mut rngs_bat, &mut bm, &mut bf);
+            prop_assert(bm == want_m, format!("round {round}: mismatch counts"))?;
+            for (i, f) in want_f.iter().enumerate() {
+                for r in 0..cfg.rows() {
+                    prop_assert(
+                        bf.get(i, r) == f[r],
+                        format!("round {round}: fires q{i} r{r}"),
+                    )?;
+                }
+            }
+            for (i, (ra, rb)) in rngs_seq.iter().zip(&rngs_bat).enumerate() {
+                prop_assert(
+                    format!("{ra:?}") == format!("{rb:?}"),
+                    format!("round {round}: rng stream {i} position"),
+                )?;
+            }
+            prop_assert(
+                seq.clock.cycles == bat.clock.cycles,
+                format!("round {round}: cycles"),
+            )?;
+            prop_assert(seq.events == bat.events, format!("round {round}: events"))?;
+            // interleaved programming between rounds: both paths must drop
+            // their caches identically
+            let rewrite = g.usize_in(0, n_rows - 1);
+            let data = BitVec::from_pm1(&g.pm1_vec(width));
+            seq.write_row(rewrite, &data);
+            bat.write_row(rewrite, &data);
+        }
         Ok(())
     });
 }
