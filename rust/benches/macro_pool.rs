@@ -14,51 +14,18 @@
 //! Run: `cargo bench --bench macro_pool`
 
 use picbnn::accel::{MacroPool, Pipeline, PipelineOptions, PoolMode};
-use picbnn::benchkit::{bench_artifact_path, emit_json, BenchRecord, Table};
-use picbnn::bnn::model::{MappedLayer, MappedModel};
+use picbnn::benchkit::{bench_artifact_path, emit_json, synth_bits, synth_model, BenchRecord, Table};
+use picbnn::bnn::model::MappedModel;
 use picbnn::cam::NoiseMode;
-use picbnn::util::bitops::{BitMatrix, BitVec};
+use picbnn::util::bitops::BitVec;
 use picbnn::util::rng::Rng;
 use picbnn::util::Timer;
-
-fn rand_bits(n: usize, rng: &mut Rng) -> BitVec {
-    let mut v = BitVec::zeros(n);
-    for i in 0..n {
-        v.set(i, rng.chance(0.5));
-    }
-    v
-}
-
-/// Single-segment random layer (mirrors the python mapper's shape).
-fn layer(rng: &mut Rng, n_out: usize, n_in: usize, width: usize) -> MappedLayer {
-    let rows: Vec<BitVec> = (0..n_out).map(|_| rand_bits(n_in, rng)).collect();
-    let pads = width - n_in;
-    let q = vec![(0..n_out)
-        .map(|_| rng.range_u64(0, pads as u64) as i32)
-        .collect()];
-    MappedLayer {
-        weights: BitMatrix::from_rows(&rows),
-        q,
-        seg_bounds: vec![0, n_in],
-        seg_width: width,
-    }
-}
 
 /// HG-shaped synthetic model: 1500 -> 384 -> 6.  The hidden layer runs at
 /// the 2048x64 configuration, so its 384 neurons need 6 weight loads;
 /// with the 33-threshold schedule that is 39 macros for full residency.
 fn hg_shaped(seed: u64) -> MappedModel {
-    let mut rng = Rng::new(seed, 0xBE9C);
-    let l1 = layer(&mut rng, 384, 1500, 2048);
-    let l2 = layer(&mut rng, 6, 384, 512);
-    let m = MappedModel {
-        layers: vec![l1, l2],
-        schedule: (0..=64).step_by(2).collect(),
-    };
-    for l in &m.layers {
-        l.validate().expect("synthetic layer valid");
-    }
-    m
+    synth_model(seed, 0xBE9C, &[(384, 1500, 2048), (6, 384, 512)])
 }
 
 struct Run {
@@ -76,7 +43,7 @@ fn main() {
     let t0 = Timer::start();
     let model = hg_shaped(7);
     let mut rng = Rng::new(3, 3);
-    let images: Vec<BitVec> = (0..128).map(|_| rand_bits(1500, &mut rng)).collect();
+    let images: Vec<BitVec> = (0..128).map(|_| synth_bits(1500, &mut rng)).collect();
     let opts = PipelineOptions {
         noise: NoiseMode::Nominal,
         ..Default::default()

@@ -1,0 +1,232 @@
+//! Experiment A5 — multi-tenant serving: one macro budget, two model
+//! shapes (MNIST-shaped + HG-shaped) behind one `MultiServer`.
+//!
+//! Sweeps the shared budget from full residency for both tenants down
+//! through threshold sharing into the cold-spill regime, recording per
+//! tenant: steady-state programming cycles, retunes/batch, and device
+//! inferences/s.  Also measures the traffic-aware pinning acceptance
+//! case: on a skewed schedule (one threshold value holding 8 of 12
+//! positions), histogram-driven point pinning must pay at most the
+//! cyclic `K − d` retunes/batch and strictly fewer than prefix pinning.
+//!
+//! Run: `cargo bench --bench multi_tenant`
+//! (CI runs it under `PICBNN_BENCH_QUICK=1`.)
+
+use std::time::Duration;
+
+use picbnn::accel::{BatchPolicy, MacroPool, Pipeline, PipelineOptions, PoolMode};
+use picbnn::benchkit::{
+    bench_artifact_path, emit_json, quick_mode, synth_bits, synth_model, BenchRecord, Table,
+};
+use picbnn::bnn::model::MappedModel;
+use picbnn::cam::NoiseMode;
+use picbnn::server::MultiServer;
+use picbnn::util::bitops::BitVec;
+use picbnn::util::rng::Rng;
+use picbnn::util::Timer;
+
+/// MNIST-shaped synthetic model: 784 -> 128 -> 10 at the 1024x128
+/// configuration (1 hidden load + 33 thresholds = 34 macros full).
+fn mnist_shaped(seed: u64) -> MappedModel {
+    synth_model(seed, 0x31A7, &[(128, 784, 1024), (10, 128, 512)])
+}
+
+/// HG-shaped synthetic model: 1500 -> 384 -> 6 at the 2048x64
+/// configuration (6 hidden loads + 33 thresholds = 39 macros full).
+fn hg_shaped(seed: u64) -> MappedModel {
+    synth_model(seed, 0xBE9C, &[(384, 1500, 2048), (6, 384, 512)])
+}
+
+fn main() {
+    let t0 = Timer::start();
+    let quick = quick_mode();
+    let n_img = if quick { 16 } else { 64 };
+    let batches = if quick { 2u64 } else { 4 };
+    let opts = PipelineOptions {
+        noise: NoiseMode::Nominal,
+        ..Default::default()
+    };
+    let policy = BatchPolicy {
+        max_batch: n_img,
+        max_wait: Duration::from_millis(1),
+    };
+
+    let mnist = mnist_shaped(7);
+    let hg = hg_shaped(8);
+    let models = [&mnist, &hg];
+    let names = ["mnist-shaped", "hg-shaped"];
+    let mut rng = Rng::new(3, 5);
+    let imgs: Vec<Vec<BitVec>> = models
+        .iter()
+        .map(|m| (0..n_img).map(|_| synth_bits(m.n_in(), &mut rng)).collect())
+        .collect();
+    let required: usize = models
+        .iter()
+        .map(|m| MacroPool::macros_required(m, &opts))
+        .sum();
+    assert_eq!(required, 34 + 39, "the acceptance shapes");
+
+    // reference predictions (budget-independent in nominal mode) + the
+    // reload scheduler's steady-state programming bill per tenant
+    let mut want = Vec::new();
+    let mut reload_prog = Vec::new();
+    for (m, tenant_imgs) in models.iter().zip(&imgs) {
+        let mut pipe = Pipeline::new(m, opts);
+        want.push(pipe.classify_batch(tenant_imgs));
+        pipe.take_stats(0);
+        for _ in 0..batches {
+            pipe.classify_batch(tenant_imgs);
+        }
+        reload_prog.push(pipe.take_stats(batches * n_img as u64).programming_cycles());
+    }
+
+    let mut table = Table::new(
+        &format!(
+            "A5: one budget, two tenants — steady state, {batches} × {n_img} images per \
+             tenant, full residency = {required} macros"
+        ),
+        &[
+            "budget",
+            "tenant",
+            "plan",
+            "program cyc",
+            "retunes/batch",
+            "device inf/s",
+        ],
+    );
+    let mut records: Vec<BenchRecord> = Vec::new();
+    for budget in [required, 48, 24, 8] {
+        let mut server = MultiServer::new(&models, opts, policy, budget);
+        // warmup epoch: construction programming + first funnel parks
+        for t in 0..2 {
+            for img in &imgs[t] {
+                server.submit(t, img.clone());
+            }
+        }
+        server.poll(true);
+        server.take_device_stats(0);
+        server.take_device_stats(1);
+        // steady state: tenants interleave epoch by epoch
+        let mut steady_responses = Vec::new();
+        for _ in 0..batches {
+            for t in 0..2 {
+                for img in &imgs[t] {
+                    server.submit(t, img.clone());
+                }
+            }
+            steady_responses.extend(server.poll(true));
+        }
+        for t in 0..2 {
+            let stats = server.take_device_stats(t);
+            let plan = server.pool().tenant(t).plan().expect("resident tenant");
+            assert_eq!(server.pool().tenant(t).mode(), PoolMode::Resident);
+            let retunes_per_batch = stats.events.retunes as f64 / batches as f64;
+            if plan.spill_active() {
+                // cold-spill reprograms, but strictly less than reload
+                assert!(stats.programming_cycles() > 0, "spill reprograms");
+                assert!(
+                    stats.programming_cycles() < reload_prog[t],
+                    "budget {budget} tenant {t}: spill {} vs reload {}",
+                    stats.programming_cycles(),
+                    reload_prog[t]
+                );
+            } else {
+                assert_eq!(
+                    stats.programming_cycles(),
+                    0,
+                    "budget {budget} tenant {t}: resident steady state must not program"
+                );
+            }
+            assert!(
+                stats.events.retunes <= plan.predicted_retunes_per_batch() * batches,
+                "budget {budget} tenant {t}: retunes exceed the plan's cost model"
+            );
+            table.row(vec![
+                budget.to_string(),
+                names[t].into(),
+                plan.describe(),
+                stats.programming_cycles().to_string(),
+                format!("{retunes_per_batch:.1}"),
+                format!("{:.0}", stats.inferences_per_s()),
+            ]);
+            let tag = format!("tenants=2 budget={budget} {}", names[t]);
+            records.push(BenchRecord::new(
+                &format!("{tag} [device inf/s]"),
+                1e9 / stats.inferences_per_s(),
+                Some(stats.inferences_per_s()),
+            ));
+            records.push(BenchRecord::new(
+                &format!("{tag} [retunes/batch]"),
+                retunes_per_batch,
+                None,
+            ));
+            records.push(BenchRecord::new(
+                &format!("{tag} [programming cycles]"),
+                stats.programming_cycles() as f64,
+                None,
+            ));
+        }
+        // tenant isolation: steady responses equal the standalone
+        // reference predictions, per tenant, in submission order
+        steady_responses.sort_by_key(|r| (r.tenant, r.id));
+        for t in 0..2 {
+            let tenant_resp: Vec<_> = steady_responses
+                .iter()
+                .filter(|r| r.tenant == t)
+                .collect();
+            assert_eq!(tenant_resp.len(), batches as usize * n_img);
+            for (i, r) in tenant_resp.iter().enumerate() {
+                let (votes, pred) = &want[t][i % n_img];
+                assert_eq!(&r.prediction, pred, "budget {budget} tenant {t}");
+                assert_eq!(&r.votes, votes, "budget {budget} tenant {t}");
+            }
+        }
+    }
+    table.print();
+
+    // --- traffic-aware pinning on a skewed schedule (acceptance) ---
+    // threshold value 0 holds 8 of 12 positions (skew 8× ≥ 2×); at a
+    // budget of 4 macros the prefix rule pins d = 2 positions, so the
+    // classic bound is K − d = 10 retunes/batch
+    let mut skewed = mnist_shaped(9);
+    skewed.schedule = vec![0, 0, 0, 0, 0, 0, 0, 0, 8, 16, 24, 32];
+    let skew_imgs: Vec<BitVec> = (0..n_img)
+        .map(|_| synth_bits(skewed.n_in(), &mut rng))
+        .collect();
+    let budget = 4;
+    let prefix = MacroPool::with_capacity(&skewed, opts, budget);
+    let traffic = MacroPool::with_traffic(&skewed, opts, budget, 1, &[1; 12]);
+    let d = prefix.plan().unwrap().pinned as u64;
+    let bound = skewed.schedule.len() as u64 - d;
+    prefix.classify_batch(&skew_imgs); // warmup parks
+    traffic.classify_batch(&skew_imgs);
+    prefix.take_stats(0);
+    traffic.take_stats(0);
+    for _ in 0..batches {
+        prefix.classify_batch(&skew_imgs);
+        traffic.classify_batch(&skew_imgs);
+    }
+    let p = prefix.take_stats(batches * n_img as u64);
+    let t = traffic.take_stats(batches * n_img as u64);
+    let p_rpb = p.events.retunes as f64 / batches as f64;
+    let t_rpb = t.events.retunes as f64 / batches as f64;
+    assert!(
+        t.events.retunes <= bound * batches,
+        "traffic-aware {t_rpb}/batch exceeds the K−d bound {bound}"
+    );
+    assert!(
+        t.events.retunes < p.events.retunes,
+        "traffic-aware {t_rpb}/batch must beat prefix {p_rpb}/batch on 8× skew"
+    );
+    println!(
+        "\nskewed schedule (8× skew, budget {budget}): K−d bound {bound}, \
+         prefix {p_rpb:.1} retunes/batch, traffic-aware {t_rpb:.1} retunes/batch"
+    );
+    records.push(BenchRecord::new("skew K-d bound [retunes/batch]", bound as f64, None));
+    records.push(BenchRecord::new("skew prefix [retunes/batch]", p_rpb, None));
+    records.push(BenchRecord::new("skew traffic-aware [retunes/batch]", t_rpb, None));
+
+    emit_json(bench_artifact_path("BENCH_multi_tenant.json"), &records)
+        .expect("write BENCH_multi_tenant.json");
+    println!("\n[multi_tenant done in {:.1}s]", t0.elapsed_s());
+}

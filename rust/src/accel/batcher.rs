@@ -14,6 +14,10 @@ use crate::util::bitops::BitVec;
 #[derive(Clone, Debug)]
 pub struct Request {
     pub id: u64,
+    /// Tenant the request targets (0 for single-model servers).  A
+    /// multi-tenant server keeps one batcher lane per tenant, so a
+    /// drained batch is always tenant-homogeneous.
+    pub tenant: usize,
     pub image: BitVec,
     pub enqueued: Instant,
 }
@@ -51,12 +55,20 @@ impl Batcher {
         }
     }
 
-    /// Enqueue an image; returns its request id.
+    /// Enqueue an image for tenant 0; returns its request id.
     pub fn push(&mut self, image: BitVec) -> u64 {
+        self.push_tagged(0, image)
+    }
+
+    /// Enqueue an image tagged with a tenant; returns its request id
+    /// (unique within this batcher — a multi-tenant server uses one
+    /// batcher lane per tenant and disambiguates by `Response::tenant`).
+    pub fn push_tagged(&mut self, tenant: usize, image: BitVec) -> u64 {
         let id = self.next_id;
         self.next_id += 1;
         self.queue.push(Request {
             id,
+            tenant,
             image,
             enqueued: Instant::now(),
         });
@@ -138,6 +150,16 @@ mod tests {
         assert_eq!(b.drain_batch().len(), 2);
         assert_eq!(b.pending(), 3);
         assert_eq!(b.drain_all().len(), 3);
+    }
+
+    #[test]
+    fn tenant_tags_ride_along() {
+        let mut b = Batcher::new(BatchPolicy::default());
+        b.push(img()); // untagged requests land on tenant 0
+        b.push_tagged(3, img());
+        let batch = b.drain_all();
+        assert_eq!(batch[0].tenant, 0);
+        assert_eq!(batch[1].tenant, 3);
     }
 
     #[test]

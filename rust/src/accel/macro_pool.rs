@@ -1,4 +1,6 @@
-//! Multi-macro sharded execution engine with persistent weight residency.
+//! Multi-macro sharded execution engine with persistent weight residency —
+//! for one model ([`MacroPool`]) or several tenants sharing one macro
+//! budget ([`MultiPool`]).
 //!
 //! The single-macro [`Pipeline`] reprograms every layer's rows into one
 //! simulated 128-kbit macro on **every batch** and retunes the rails for
@@ -12,16 +14,26 @@
 //!   budget buys *replicas* of the largest loads so parallel workers
 //!   search a free replica instead of serialising on one mutex;
 //! * the output layer's rows are programmed into `pinned + shared` slot
-//!   macros.  Pinned slots park one threshold's calibrated (V_ref,
-//!   V_eval, V_st) triple forever; shared slots serve the remaining
-//!   thresholds, parking one triple at a time and paying a tracked retune
-//!   when the sweep switches operating points (LRU over parked triples).
+//!   macros.  Pinned slots park one **operating point**'s calibrated
+//!   (V_ref, V_eval, V_st) triple forever — schedule positions with equal
+//!   threshold values share the point, and the slot ([`PlacementPlan`]'s
+//!   `pin_slot`/`point_of`).  Shared slots serve the remaining points,
+//!   parking one triple at a time and paying a tracked retune when the
+//!   sweep switches operating points (LRU over parked points);
+//! * under a **sub-minimum budget** (fewer macros than hidden loads + 1)
+//!   the plan *cold-spills* its smallest hidden loads: they are
+//!   reprogrammed into the shared funnel slot per batch while the hottest
+//!   loads stay resident — strictly less programming than the reload
+//!   scheduler, which reloads *every* load.  Only budgets below the
+//!   spill floor (2 macros, or full residency for single-load models)
+//!   fall back to reload ([`Pipeline`]).
 //!
-//! This is the paper's §V-B amortisation argument taken past the PR 1
-//! all-or-nothing split: weight loads are paid once per deployment at any
-//! viable budget, and retunes degrade *gradually* as the budget shrinks.
-//! Only models whose hidden loads alone exceed the budget fall back to
-//! the reload scheduler ([`Pipeline`]).
+//! The pool also measures a per-schedule-position **traffic histogram**
+//! ([`MacroPool::take_output_traffic`]); feeding it back into
+//! [`MacroPool::with_traffic`] re-plans the pinned set against observed
+//! access frequencies instead of the schedule prefix, which beats the
+//! cyclic `K − d` retune bound whenever the schedule (or live traffic)
+//! is skewed.
 //!
 //! Concurrency & determinism: every macro sits behind a `Mutex`, so one
 //! pool can be shared across worker threads (`classify_parallel`,
@@ -30,8 +42,18 @@
 //! and an image's result does not depend on *which* replica or slot
 //! served it; per-evaluation noise is drawn from a per-image stream
 //! derived from (pool seed, image index) — see
-//! [`CamArray::search_into_rng`].  Only retune/stall *accounting* can
-//! vary with thread interleaving on shared slots.
+//! [`CamArray::search_into_rng`].  Analog results are therefore
+//! bit-stable across budgets, worker counts, and slot routing for every
+//! *non-spill* plan; a cold-spilled load redraws its frozen variation at
+//! each reprogram (exactly as the reload scheduler does), so spill plans
+//! are deterministic per (seed, plan, batch sequence) but not bit-equal
+//! to fully-resident placements in analog mode — and because concurrent
+//! searchers reload the funnel in arrival order, analog spill pools
+//! should be driven single-threaded (`classify_parallel` detects this
+//! and falls back to reload shards).  Nominal-mode predictions are
+//! bit-identical to the reload [`Pipeline`] under every plan, spill
+//! included.  Only retune/stall *accounting* can vary with thread
+//! interleaving on shared slots.
 
 use std::sync::atomic::{AtomicU64, AtomicUsize, Ordering};
 use std::sync::{Mutex, MutexGuard};
@@ -48,7 +70,7 @@ use super::pipeline::{
     program_load_into, resolve_schedule, CategoryCost, Load,
 };
 use super::pipeline::{Pipeline, PipelineOptions, RunStats};
-use super::planner::{self, PlacementPlan};
+use super::planner::{self, PlacementPlan, TenantPlan, TenantSpec};
 use super::voltage::CalibratedPoint;
 
 /// Default number of simulated macros a pool may instantiate.
@@ -59,7 +81,7 @@ pub const DEFAULT_POOL_MACROS: usize = 64;
 pub enum PoolMode {
     /// Hidden loads (and some or all output thresholds) are resident.
     Resident,
-    /// The budget cannot hold the hidden loads; the reload scheduler runs.
+    /// The budget cannot hold even a spill plan; the reload scheduler runs.
     Reload,
 }
 
@@ -67,6 +89,22 @@ pub enum PoolMode {
 fn macro_seed(base: u64, idx: u64) -> u64 {
     let mut s = base ^ idx.wrapping_mul(0x9E37_79B9_7F4A_7C15);
     splitmix64(&mut s)
+}
+
+/// Operating-point classes of a schedule: a position's class is the first
+/// position holding the same threshold value.  Calibration is a pure
+/// function of the target (see `accel::voltage`), so equal values park
+/// identical triples and retunes between them are free — the planner
+/// exploits this by pinning whole points instead of prefix positions.
+pub(crate) fn point_classes(schedule: &[i32]) -> Vec<usize> {
+    (0..schedule.len())
+        .map(|k| {
+            schedule[..k]
+                .iter()
+                .position(|&u| u == schedule[k])
+                .unwrap_or(k)
+        })
+        .collect()
 }
 
 /// One hidden load's replica set: identically seeded + programmed macros.
@@ -90,16 +128,28 @@ impl LoadSlots {
     }
 }
 
-/// One output slot: the programmed class rows plus the threshold its
+/// What an output slot's rows currently hold: the class rows, or a
+/// cold-spilled hidden load parked mid-reload in the funnel slot.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+enum SlotRows {
+    Output,
+    Hidden(usize, usize), // (layer, load)
+}
+
+/// One output slot: its programmed rows plus the operating point the
 /// rails are currently parked at (guarded together, so the parked record
 /// can never drift from the actual rails).
 struct OutputSlotState {
     cam: CamArray,
+    /// Operating-point class currently parked (`None` after a spill use
+    /// re-routed the rails to a hidden midpoint).
     parked: Option<usize>,
+    rows: SlotRows,
 }
 
-/// LRU routing metadata for the shared output slots.  Held briefly per
-/// threshold dispatch; the authoritative parked state lives in the slot.
+/// LRU routing metadata for the shared output slots, keyed by operating
+/// point.  Held briefly per dispatch; the authoritative parked state
+/// lives in the slot.
 struct SharedRouter {
     parked: Vec<Option<usize>>,
     stamp: Vec<u64>,
@@ -115,11 +165,12 @@ impl SharedRouter {
         }
     }
 
-    /// Slot index (within the shared set) to serve `threshold`: a slot
-    /// already parked there if any, else the least recently used.
-    fn route(&mut self, threshold: usize) -> usize {
+    /// Slot index (within the shared set) to serve operating point
+    /// `point`: a slot already parked there if any, else the least
+    /// recently used.
+    fn route(&mut self, point: usize) -> usize {
         self.tick += 1;
-        let idx = match self.parked.iter().position(|&p| p == Some(threshold)) {
+        let idx = match self.parked.iter().position(|&p| p == Some(point)) {
             Some(hit) => hit,
             None => {
                 let (lru, _) = self
@@ -128,7 +179,7 @@ impl SharedRouter {
                     .enumerate()
                     .min_by_key(|&(_, &s)| s)
                     .expect("router has slots");
-                self.parked[lru] = Some(threshold);
+                self.parked[lru] = Some(point);
                 lru
             }
         };
@@ -140,14 +191,21 @@ impl SharedRouter {
 struct Resident {
     plan: PlacementPlan,
     /// Replica sets per hidden (layer, load), parked at the layer's
-    /// midpoint operating point.
-    hidden_slots: Vec<Vec<LoadSlots>>,
+    /// midpoint operating point.  `None` = cold-spilled to the funnel.
+    hidden_slots: Vec<Vec<Option<LoadSlots>>>,
     /// Output slots: the first `plan.pinned` are permanently parked, the
-    /// rest are the LRU-shared set.
+    /// rest are the LRU-shared set (slot `plan.pinned`, the first shared
+    /// one, doubles as the spill funnel).
     output_slots: Vec<Mutex<OutputSlotState>>,
     router: Mutex<SharedRouter>,
     /// Host-device I/O cycles (shared 128-bit bus; same clock domain).
     io_clock: Mutex<SimClock>,
+    /// Funnel retunes/row-writes spent serving cold-spilled hidden loads
+    /// (moved from the output to the hidden category by `take_stats`).
+    spill_cost: Mutex<CategoryCost>,
+    /// Per-schedule-position access counts (images × visits): the
+    /// measured traffic histogram for [`MacroPool::with_traffic`].
+    traffic: Vec<AtomicU64>,
 }
 
 /// Sharded multi-macro execution engine for one mapped model.
@@ -159,7 +217,7 @@ pub struct MacroPool<'m> {
     hidden_points: Vec<CalibratedPoint>,
     output_points: Vec<CalibratedPoint>,
     resident: Option<Resident>,
-    /// Reload fallback when the budget cannot hold the hidden loads.
+    /// Reload fallback when the budget cannot hold even a spill plan.
     fallback: Option<Mutex<Pipeline<'m>>>,
     /// Next per-image noise-stream index for [`MacroPool::classify_batch`].
     stream_cursor: AtomicU64,
@@ -173,8 +231,8 @@ impl<'m> MacroPool<'m> {
 
     /// Macros *full* residency needs for `model` under `opts`: one per
     /// hidden load plus one per output-schedule threshold.  Budgets below
-    /// this still run resident via threshold sharing (down to hidden
-    /// loads + 1); budgets above it buy hidden-load replicas.
+    /// this still run resident via threshold sharing (and, below hidden
+    /// loads + 1, cold-spill); budgets above it buy hidden-load replicas.
     pub fn macros_required(model: &MappedModel, opts: &PipelineOptions) -> usize {
         Self::required_for(&plan_loads(model), resolve_schedule(model, opts).len())
     }
@@ -216,22 +274,80 @@ impl<'m> MacroPool<'m> {
     /// Pool with an explicit macro budget serving `workers` concurrent
     /// searchers.  The planner decides the placement (see
     /// [`super::planner`]): surplus budget beyond full threshold pinning
-    /// buys hidden-load replicas, up to one per worker; only when even
-    /// the hidden loads don't fit does the pool fall back to the reload
-    /// scheduler.
+    /// buys hidden-load replicas, up to one per worker; budgets below
+    /// hidden loads + 1 cold-spill; only below the spill floor does the
+    /// pool fall back to the reload scheduler.
     pub fn with_capacity_for_workers(
         model: &'m MappedModel,
         opts: PipelineOptions,
         max_macros: usize,
         workers: usize,
     ) -> Self {
-        let out_layer = model.layers.last().expect("model has layers");
-        assert_eq!(out_layer.n_seg(), 1, "output layer must fit one CAM word");
         let schedule = resolve_schedule(model, &opts);
         let plans = plan_loads(model);
+        let plan = planner::plan(&Self::load_rows(&plans), schedule.len(), max_macros, workers);
+        Self::build(model, opts, schedule, plans, plan)
+    }
+
+    /// Pool planned against a measured per-position traffic histogram
+    /// (`traffic[k]` = accesses of schedule position `k`, e.g. from
+    /// [`Self::take_output_traffic`] of a previous deployment): schedule
+    /// positions with equal threshold values are grouped into one
+    /// operating point and the hottest points pin first — at most the
+    /// prefix rule's `K − d` retunes/batch, strictly fewer on skew.
+    pub fn with_traffic(
+        model: &'m MappedModel,
+        opts: PipelineOptions,
+        max_macros: usize,
+        workers: usize,
+        traffic: &[u64],
+    ) -> Self {
+        let schedule = resolve_schedule(model, &opts);
+        // an empty histogram (a reload-mode pool measured nothing) means
+        // uniform traffic; anything else must cover every position
+        assert!(
+            traffic.is_empty() || traffic.len() == schedule.len(),
+            "one count per schedule position (or an empty histogram)"
+        );
+        let plans = plan_loads(model);
+        let points = point_classes(&schedule);
+        let plan = planner::plan_traffic(
+            &Self::load_rows(&plans),
+            &points,
+            Some(traffic),
+            max_macros,
+            workers,
+        );
+        Self::build(model, opts, schedule, plans, plan)
+    }
+
+    /// Pool executing an externally built [`PlacementPlan`] — the
+    /// multi-tenant path: [`MultiPool`] partitions one budget into per-
+    /// tenant plans and builds each tenant through here.  The plan's
+    /// shape must match the model's load plans and active schedule.
+    pub fn with_plan(model: &'m MappedModel, opts: PipelineOptions, plan: PlacementPlan) -> Self {
+        let schedule = resolve_schedule(model, &opts);
+        let plans = plan_loads(model);
+        assert_eq!(plan.schedule_len, schedule.len(), "plan schedule mismatch");
+        let rows = Self::load_rows(&plans);
+        assert_eq!(plan.hidden_replicas.len(), rows.len(), "plan layer mismatch");
+        for (p, r) in plan.hidden_replicas.iter().zip(&rows) {
+            assert_eq!(p.len(), r.len(), "plan load mismatch");
+        }
+        Self::build(model, opts, schedule, plans, Some(plan))
+    }
+
+    fn build(
+        model: &'m MappedModel,
+        opts: PipelineOptions,
+        schedule: Vec<i32>,
+        plans: Vec<Vec<Load>>,
+        plan: Option<PlacementPlan>,
+    ) -> Self {
+        let out_layer = model.layers.last().expect("model has layers");
+        assert_eq!(out_layer.n_seg(), 1, "output layer must fit one CAM word");
         let out_idx = model.layers.len() - 1;
         assert_eq!(plans[out_idx].len(), 1, "output layer fits one load");
-        let plan = planner::plan(&Self::load_rows(&plans), schedule.len(), max_macros, workers);
 
         // calibration (a voltage grid search per hidden layer + per
         // threshold) only runs for the resident path; the reload fallback's
@@ -241,7 +357,9 @@ impl<'m> MacroPool<'m> {
             let output_points = calibrate_output_points(model, &schedule, opts.pvt);
             // replicas of a load (and all output slots) share one seed, so
             // frozen per-row variation is identical and results never
-            // depend on which replica served an image
+            // depend on which replica served an image; spilled loads still
+            // consume a seed index so placements stay seed-stable across
+            // budgets
             let mk_cam = |cfg: CamConfig, seed_idx: u64| {
                 let mut cam =
                     CamArray::new(cfg, opts.pvt, opts.noise, macro_seed(opts.seed, seed_idx));
@@ -255,39 +373,59 @@ impl<'m> MacroPool<'m> {
                     .unwrap_or_else(|| panic!("word width {} unsupported", layer.seg_width));
                 let mut slots = Vec::with_capacity(plans[li].len());
                 for (di, load) in plans[li].iter().enumerate() {
-                    let replicas = (0..plan.hidden_replicas[li][di])
-                        .map(|_| {
-                            let mut cam = mk_cam(cfg, seed_idx);
-                            program_load_into(&mut cam, layer, load);
-                            cam.set_voltages(hidden_points[li].voltages);
-                            Mutex::new(cam)
-                        })
-                        .collect();
-                    seed_idx += 1;
-                    slots.push(LoadSlots {
-                        replicas,
-                        next: AtomicUsize::new(0),
+                    let n_replicas = plan.hidden_replicas[li][di];
+                    let built = (n_replicas > 0).then(|| {
+                        let replicas = (0..n_replicas)
+                            .map(|_| {
+                                let mut cam = mk_cam(cfg, seed_idx);
+                                program_load_into(&mut cam, layer, load);
+                                cam.set_voltages(hidden_points[li].voltages);
+                                Mutex::new(cam)
+                            })
+                            .collect();
+                        LoadSlots {
+                            replicas,
+                            next: AtomicUsize::new(0),
+                        }
                     });
+                    seed_idx += 1;
+                    slots.push(built);
                 }
                 hidden_slots.push(slots);
             }
             let out_cfg = CamConfig::fitting(out_layer.seg_width)
                 .expect("output word width unsupported");
             let out_load = &plans[out_idx][0];
+            // a pinned slot parks the triple of the first schedule
+            // position it serves (all its positions share the point)
+            let rep_of_slot: Vec<usize> = (0..plan.pinned)
+                .map(|s| {
+                    plan.pin_slot
+                        .iter()
+                        .position(|&p| p == Some(s))
+                        .expect("pinned slot serves a position")
+                })
+                .collect();
             let output_slots: Vec<Mutex<OutputSlotState>> = (0..plan.output_macros())
                 .map(|slot| {
                     let mut cam = mk_cam(out_cfg, seed_idx);
                     program_load_into(&mut cam, out_layer, out_load);
                     let parked = if slot < plan.pinned {
-                        cam.set_voltages(output_points[slot].voltages);
-                        Some(slot)
+                        let k = rep_of_slot[slot];
+                        cam.set_voltages(output_points[k].voltages);
+                        Some(plan.point_of[k])
                     } else {
                         None
                     };
-                    Mutex::new(OutputSlotState { cam, parked })
+                    Mutex::new(OutputSlotState {
+                        cam,
+                        parked,
+                        rows: SlotRows::Output,
+                    })
                 })
                 .collect();
             let router = Mutex::new(SharedRouter::new(plan.shared_slots));
+            let traffic = (0..plan.schedule_len).map(|_| AtomicU64::new(0)).collect();
             (
                 Some(Resident {
                     plan,
@@ -295,6 +433,8 @@ impl<'m> MacroPool<'m> {
                     output_slots,
                     router,
                     io_clock: Mutex::new(SimClock::new()),
+                    spill_cost: Mutex::new(CategoryCost::default()),
+                    traffic,
                 }),
                 None,
                 hidden_points,
@@ -363,6 +503,19 @@ impl<'m> MacroPool<'m> {
         &self.hidden_points
     }
 
+    /// Drain the measured per-schedule-position access histogram (counts
+    /// accumulate per served image per sweep visit).  Feed this back into
+    /// [`Self::with_traffic`] to re-plan the pinned set against observed
+    /// traffic instead of the schedule prefix.  Empty in reload mode —
+    /// the planner treats an empty histogram as uniform, so the feedback
+    /// loop is safe regardless of the previous deployment's mode.
+    pub fn take_output_traffic(&self) -> Vec<u64> {
+        match &self.resident {
+            Some(r) => r.traffic.iter().map(|a| a.swap(0, Ordering::Relaxed)).collect(),
+            None => Vec::new(),
+        }
+    }
+
     /// Per-image noise stream: independent of thread scheduling, derived
     /// from (pool seed, global image index).
     fn image_rng(&self, global_idx: u64) -> Rng {
@@ -416,7 +569,8 @@ impl<'m> MacroPool<'m> {
     }
 
     /// Execute one hidden layer for a batch over the layer's resident
-    /// load macros; returns the hidden codes (majority across segments).
+    /// load macros (cold-spilled loads reprogram into the funnel slot);
+    /// returns the hidden codes (majority across segments).
     ///
     /// One [`CamArray::search_batch_into_rngs`] call per load: the stored
     /// rows stream once per query tile, per-image noise streams advance
@@ -432,21 +586,49 @@ impl<'m> MacroPool<'m> {
         let layer = &self.model.layers[layer_idx];
         let n_out = layer.n_out();
         let n_seg = layer.n_seg();
+        let cfg = CamConfig::fitting(layer.seg_width)
+            .unwrap_or_else(|| panic!("word width {} unsupported", layer.seg_width));
+        let width = cfg.width();
         let mut seg_fires = vec![vec![0u8; n_out]; inputs.len()];
         let (mut m, mut fires) = (Vec::new(), BitMatrix::default());
-        // rails were parked at the layer's midpoint at construction — no
-        // set_voltages on the batch path
+        // resident rails were parked at the layer's midpoint at
+        // construction — no set_voltages on the resident batch path
         for (load_idx, load) in self.plans[layer_idx].iter().enumerate() {
-            let mut cam = resident.hidden_slots[layer_idx][load_idx].acquire();
-            let width = cam.config().width();
             let payload = (load.neuron_hi - load.neuron_lo) as u64
                 * (layer.seg_bounds[load.seg + 1] - layer.seg_bounds[load.seg]) as u64;
             let queries: Vec<BitVec> = inputs
                 .iter()
                 .map(|x| segment_query_wide(layer, load.seg, x, width))
                 .collect();
-            cam.search_batch_into_rngs(&queries, rngs, &mut m, &mut fires);
-            cam.events.useful_macs += payload * inputs.len() as u64;
+            match &resident.hidden_slots[layer_idx][load_idx] {
+                Some(slots) => {
+                    let mut cam = slots.acquire();
+                    cam.search_batch_into_rngs(&queries, rngs, &mut m, &mut fires);
+                    cam.events.useful_macs += payload * inputs.len() as u64;
+                }
+                None => {
+                    // cold-spill: reload this load into the shared funnel
+                    // slot (the last output slot), park the layer midpoint,
+                    // search, and attribute the funnel's cost to the hidden
+                    // category
+                    let mut slot = resident.output_slots[resident.plan.pinned].lock().unwrap();
+                    let before = (slot.cam.events.retunes, slot.cam.events.row_writes);
+                    let want = SlotRows::Hidden(layer_idx, load_idx);
+                    if slot.rows != want {
+                        program_load_into(&mut slot.cam, layer, load);
+                        slot.rows = want;
+                        slot.parked = None;
+                    }
+                    // counted by set_voltages; free when already parked here
+                    slot.cam.set_voltages(self.hidden_points[layer_idx].voltages);
+                    slot.cam.search_batch_into_rngs(&queries, rngs, &mut m, &mut fires);
+                    slot.cam.events.useful_macs += payload * inputs.len() as u64;
+                    let after = (slot.cam.events.retunes, slot.cam.events.row_writes);
+                    let mut spill = resident.spill_cost.lock().unwrap();
+                    spill.retunes += after.0 - before.0;
+                    spill.row_writes += after.1 - before.1;
+                }
+            }
             for (img_idx, img_fires) in seg_fires.iter_mut().enumerate() {
                 // rows past the load are cleared and can never fire
                 for row in fires.row_ones(img_idx) {
@@ -467,16 +649,20 @@ impl<'m> MacroPool<'m> {
             .collect()
     }
 
-    /// Output-layer threshold sweep: pinned thresholds hit their
-    /// permanently parked macro; the rest route through the shared slots,
-    /// paying a retune only when the slot must switch operating points.
+    /// Output-layer threshold sweep: pinned operating points hit their
+    /// permanently parked macro (positions of one point share a slot);
+    /// the rest route through the shared slots, paying a retune only when
+    /// the slot must switch operating points.  The funnel re-lands the
+    /// class rows first when a cold-spilled load used it this batch.
     fn run_output(
         &self,
         resident: &Resident,
         hidden: &[BitVec],
         rngs: &mut [Rng],
     ) -> Vec<Vec<u32>> {
+        let out_idx = self.model.layers.len() - 1;
         let layer = self.model.layers.last().unwrap();
+        let out_load = &self.plans[out_idx][0];
         let n_cls = layer.n_out();
         let width = CamConfig::fitting(layer.seg_width).unwrap().width();
         // queries are threshold-independent: build once per batch
@@ -489,17 +675,23 @@ impl<'m> MacroPool<'m> {
         let payload = (layer.n_in() * n_cls) as u64;
         let pinned = resident.plan.pinned;
         for k in 0..self.schedule.len() {
-            let slot_idx = if k < pinned {
-                k
-            } else {
-                pinned + resident.router.lock().unwrap().route(k)
+            resident.traffic[k].fetch_add(queries.len() as u64, Ordering::Relaxed);
+            let point = resident.plan.point_of[k];
+            let slot_idx = match resident.plan.pin_slot[k] {
+                Some(s) => s,
+                None => pinned + resident.router.lock().unwrap().route(point),
             };
             let mut slot = resident.output_slots[slot_idx].lock().unwrap();
-            if slot.parked != Some(k) {
+            if slot.rows != SlotRows::Output {
+                program_load_into(&mut slot.cam, layer, out_load);
+                slot.rows = SlotRows::Output;
+                slot.parked = None;
+            }
+            if slot.parked != Some(point) {
                 // switching operating points: the retune + stall is
                 // counted by set_voltages (free if the triples coincide)
                 slot.cam.set_voltages(self.output_points[k].voltages);
-                slot.parked = Some(k);
+                slot.parked = Some(point);
             }
             let cam = &mut slot.cam;
             cam.search_batch_into_rngs(&queries, rngs, &mut m, &mut fires);
@@ -516,7 +708,10 @@ impl<'m> MacroPool<'m> {
     /// Drain device statistics accumulated since the last call, summed
     /// across every macro in the pool (aggregate device work, not
     /// wall-clock: resident macros operate concurrently in silicon).
-    /// Hidden-load and output-slot costs are attributed per category.
+    /// Hidden-load and output-slot costs are attributed per category —
+    /// funnel work done on behalf of cold-spilled hidden loads is moved
+    /// to the hidden category.  Call between batches (quiescent pool) for
+    /// exact attribution.
     pub fn take_stats(&self, inferences: u64) -> RunStats {
         if let Some(fb) = &self.fallback {
             return fb.lock().unwrap().take_stats(inferences);
@@ -524,6 +719,7 @@ impl<'m> MacroPool<'m> {
         let resident = self.resident.as_ref().unwrap();
         let mut stats = RunStats {
             inferences,
+            macros: resident.plan.macros_used(),
             ..RunStats::default()
         };
         let mut drain = |cam: &mut CamArray, cost: &mut CategoryCost| {
@@ -537,7 +733,7 @@ impl<'m> MacroPool<'m> {
         let mut hidden_cost = CategoryCost::default();
         let mut output_cost = CategoryCost::default();
         for slots in &resident.hidden_slots {
-            for slot in slots {
+            for slot in slots.iter().flatten() {
                 for replica in &slot.replicas {
                     drain(&mut replica.lock().unwrap(), &mut hidden_cost);
                 }
@@ -546,6 +742,10 @@ impl<'m> MacroPool<'m> {
         for slot in &resident.output_slots {
             drain(&mut slot.lock().unwrap().cam, &mut output_cost);
         }
+        let spill = std::mem::take(&mut *resident.spill_cost.lock().unwrap());
+        output_cost.retunes = output_cost.retunes.saturating_sub(spill.retunes);
+        output_cost.row_writes = output_cost.row_writes.saturating_sub(spill.row_writes);
+        hidden_cost.add(&spill);
         stats.hidden_cost = hidden_cost;
         stats.output_cost = output_cost;
         let mut io = resident.io_clock.lock().unwrap();
@@ -553,6 +753,169 @@ impl<'m> MacroPool<'m> {
         stats.stall_s += io.stall_s;
         io.reset();
         stats
+    }
+}
+
+/// Multi-tenant pool: N models served from one macro budget.
+///
+/// [`planner::plan_tenants`] partitions the budget (floors first, surplus
+/// proportional-fair by traffic share) and every tenant executes its own
+/// [`PlacementPlan`] on its own macros — tenants never share a macro, so
+/// a tenant's predictions are bit-identical (nominal *and* analog) to the
+/// same model running alone on a [`MacroPool`] built from the same plan,
+/// for any budget split and any interleaving of tenant batches.  When
+/// even the tenancy floors don't fit, the budget is split evenly and each
+/// tenant degrades independently (down to the reload scheduler).
+pub struct MultiPool<'m> {
+    tenants: Vec<MacroPool<'m>>,
+    plan: Option<TenantPlan>,
+}
+
+impl<'m> MultiPool<'m> {
+    /// Multi-tenant pool with equal traffic shares and one searcher.
+    pub fn new(models: &[&'m MappedModel], opts: PipelineOptions, budget: usize) -> Self {
+        Self::with_shares(models, opts, budget, 1, &vec![1.0; models.len()])
+    }
+
+    /// Multi-tenant pool with explicit per-tenant traffic shares
+    /// (surplus budget follows the shares) serving `workers` concurrent
+    /// searchers per tenant.
+    pub fn with_shares(
+        models: &[&'m MappedModel],
+        opts: PipelineOptions,
+        budget: usize,
+        workers: usize,
+        shares: &[f64],
+    ) -> Self {
+        let uniform: Vec<Option<Vec<u64>>> = vec![None; models.len()];
+        Self::with_traffic(models, opts, budget, workers, shares, &uniform)
+    }
+
+    /// [`Self::with_shares`] with measured per-tenant output-traffic
+    /// histograms (`traffic[t]` from `tenant(t).take_output_traffic()`;
+    /// `None` = uniform): each tenant's pinned set follows its observed
+    /// per-threshold access frequencies.
+    pub fn with_traffic(
+        models: &[&'m MappedModel],
+        opts: PipelineOptions,
+        budget: usize,
+        workers: usize,
+        shares: &[f64],
+        traffic: &[Option<Vec<u64>>],
+    ) -> Self {
+        assert_eq!(models.len(), shares.len(), "one share per tenant");
+        assert_eq!(models.len(), traffic.len(), "one histogram per tenant");
+        let specs: Vec<TenantSpec> = models
+            .iter()
+            .zip(shares)
+            .zip(traffic)
+            .map(|((m, &share), t)| {
+                let plans = plan_loads(m);
+                let schedule = resolve_schedule(m, &opts);
+                TenantSpec {
+                    hidden_load_rows: MacroPool::load_rows(&plans),
+                    schedule_points: point_classes(&schedule),
+                    traffic: t.clone(),
+                    share,
+                }
+            })
+            .collect();
+        match planner::plan_tenants(&specs, budget, workers) {
+            Some(tp) => {
+                let tenants = models
+                    .iter()
+                    .zip(&tp.plans)
+                    .map(|(m, p)| MacroPool::with_plan(m, opts, p.clone()))
+                    .collect();
+                MultiPool {
+                    tenants,
+                    plan: Some(tp),
+                }
+            }
+            None => {
+                // below the tenancy floors: split evenly, let every
+                // tenant degrade on its own (spill, then reload), still
+                // honouring any measured histogram the caller supplied.
+                // A budget below one macro per tenant is physically
+                // unservable — the fallback still instantiates one
+                // reload macro per tenant, so `n_macros()` may exceed
+                // such a sub-physical budget (check `plan()` for `None`
+                // to detect this regime).
+                let per = (budget / models.len().max(1)).max(1);
+                let tenants = models
+                    .iter()
+                    .zip(traffic)
+                    .map(|(m, t)| match t {
+                        Some(hist) => MacroPool::with_traffic(m, opts, per, workers, hist),
+                        None => MacroPool::with_capacity_for_workers(m, opts, per, workers),
+                    })
+                    .collect();
+                MultiPool {
+                    tenants,
+                    plan: None,
+                }
+            }
+        }
+    }
+
+    pub fn n_tenants(&self) -> usize {
+        self.tenants.len()
+    }
+
+    /// The tenant's backing single-model pool (plan, mode, diagnostics).
+    pub fn tenant(&self, t: usize) -> &MacroPool<'m> {
+        &self.tenants[t]
+    }
+
+    /// The budget partition (`None` when the floors didn't fit and the
+    /// pool fell back to an even split).
+    pub fn plan(&self) -> Option<&TenantPlan> {
+        self.plan.as_ref()
+    }
+
+    /// Simulated macros instantiated across every tenant.
+    pub fn n_macros(&self) -> usize {
+        self.tenants.iter().map(MacroPool::n_macros).sum()
+    }
+
+    /// Classify a batch for `tenant` (tenant-tagged routing; noise-stream
+    /// indices from that tenant's internal cursor).
+    pub fn classify_batch(&self, tenant: usize, images: &[BitVec]) -> Vec<(Vec<u32>, usize)> {
+        self.tenants[tenant].classify_batch(images)
+    }
+
+    /// [`Self::classify_batch`] with an explicit noise-stream base index.
+    pub fn classify_batch_at(
+        &self,
+        tenant: usize,
+        images: &[BitVec],
+        stream_base: u64,
+    ) -> Vec<(Vec<u32>, usize)> {
+        self.tenants[tenant].classify_batch_at(images, stream_base)
+    }
+
+    /// Drain one tenant's device statistics (see [`MacroPool::take_stats`]).
+    pub fn take_stats(&self, tenant: usize, inferences: u64) -> RunStats {
+        self.tenants[tenant].take_stats(inferences)
+    }
+
+    /// Drain and merge every tenant's statistics into one report (macro
+    /// counts sum, so the energy model charges pool-wide leakage).
+    pub fn take_stats_total(&self, inferences: u64) -> RunStats {
+        let mut total = RunStats {
+            inferences,
+            ..RunStats::default()
+        };
+        for t in &self.tenants {
+            let s = t.take_stats(0);
+            total.cycles += s.cycles;
+            total.stall_s += s.stall_s;
+            total.events.add(&s.events);
+            total.hidden_cost.add(&s.hidden_cost);
+            total.output_cost.add(&s.output_cost);
+            total.macros += s.macros;
+        }
+        total
     }
 }
 
@@ -656,6 +1019,7 @@ mod tests {
         pool.classify_batch(&images);
         let warm = pool.take_stats(16);
         assert!(warm.events.row_writes > 0, "construction programs rows");
+        assert_eq!(warm.macros, pool.n_macros());
         // steady state: no programming, no retunes, no stalls — searches only
         pool.classify_batch(&images);
         pool.classify_batch(&images);
@@ -743,15 +1107,77 @@ mod tests {
         );
     }
 
+    /// Two hidden loads (300 neurons exceed the 256-row config), so
+    /// sub-minimum budgets exercise the cold-spill path.
+    fn two_load_model(seed: u64) -> MappedModel {
+        tiny_model(100, 300, 4, seed)
+    }
+
     #[test]
-    fn budget_below_hidden_loads_falls_back_to_reload_scheduler() {
-        // only when the hidden loads themselves don't fit (plus one
-        // output slot) does the pool give up residency entirely
+    fn cold_spill_matches_pipeline_and_beats_full_reload() {
+        let model = two_load_model(23);
+        let images = rand_images(8, 100, 9);
+        let required = MacroPool::macros_required(&model, &nominal());
+        let hidden = required - 33; // 33-threshold fixture schedule
+        assert!(hidden >= 2, "fixture must have ≥2 hidden loads");
+        // budget below hidden + 1: previously reload, now a spill plan
+        let budget = hidden; // one load spills, the rest stay resident
+        let pool = MacroPool::with_capacity(&model, nominal(), budget);
+        assert_eq!(pool.mode(), PoolMode::Resident);
+        let plan = pool.plan().unwrap().clone();
+        assert!(plan.spill_active());
+        assert_eq!(plan.spilled_loads(), 1);
+        assert!(plan.macros_used() <= budget);
+        // nominal predictions are bit-identical to the reload pipeline
+        let mut pipe = Pipeline::new(&model, nominal());
+        for chunk in images.chunks(4) {
+            assert_eq!(pool.classify_batch(chunk), pipe.classify_batch(chunk));
+        }
+        // steady state: the funnel reprograms only the spilled load (+ the
+        // output rows), strictly less than the reload scheduler's full
+        // reload; retunes respect the plan's cost model
+        pool.take_stats(0);
+        pipe.take_stats(0);
+        let batches = 3u64;
+        for _ in 0..batches {
+            pool.classify_batch(&images);
+            pipe.classify_batch(&images);
+        }
+        let spill = pool.take_stats(batches * 8);
+        let reload = pipe.take_stats(batches * 8);
+        assert!(spill.programming_cycles() > 0, "spill must reprogram");
+        assert!(
+            spill.programming_cycles() < reload.programming_cycles(),
+            "spill {} vs reload {}",
+            spill.programming_cycles(),
+            reload.programming_cycles()
+        );
+        assert!(
+            spill.events.retunes <= plan.predicted_retunes_per_batch() * batches,
+            "{} > {}/batch",
+            spill.events.retunes,
+            plan.predicted_retunes_per_batch()
+        );
+        // the spilled load's reprograms are attributed to the hidden
+        // category, the funnel's output re-landing to the output category
+        assert!(spill.hidden_cost.row_writes > 0);
+        assert!(spill.output_cost.row_writes > 0);
+        assert_eq!(
+            spill.hidden_cost.row_writes + spill.output_cost.row_writes,
+            spill.events.row_writes
+        );
+    }
+
+    #[test]
+    fn budget_below_spill_floor_falls_back_to_reload_scheduler() {
+        // single-load models have nothing to spill: below full residency
+        // the pool gives up residency entirely
         let model = tiny_model(64, 8, 3, 9);
         assert!(MacroPool::plan_for(&model, &nominal(), 1).is_none());
         let pool = MacroPool::with_capacity(&model, nominal(), 1);
         assert_eq!(pool.mode(), PoolMode::Reload);
         assert!(pool.plan().is_none());
+        assert!(pool.take_output_traffic().is_empty());
         // still bit-exact vs the pipeline in nominal mode
         let images = rand_images(10, 64, 13);
         let mut pipe = Pipeline::new(&model, nominal());
@@ -761,6 +1187,7 @@ mod tests {
         assert!(s.cycles > 0);
         assert!(s.events.searches > 0);
         assert!(s.hidden_cost.row_writes > 0);
+        assert_eq!(s.macros, 1);
     }
 
     #[test]
@@ -800,7 +1227,8 @@ mod tests {
     #[test]
     fn analog_results_independent_of_budget() {
         // identical seeding of replicas/slots + per-image noise streams:
-        // the placement is an execution detail, never a semantic one
+        // a non-spill placement is an execution detail, never a semantic
+        // one
         let model = tiny_model(64, 8, 4, 31);
         let images = rand_images(12, 64, 17);
         let opts = PipelineOptions::default(); // analog noise
@@ -811,6 +1239,7 @@ mod tests {
             // plan for several workers so the largest budget replicates
             let pool = MacroPool::with_capacity_for_workers(&model, opts, budget, 3);
             assert_eq!(pool.mode(), PoolMode::Resident);
+            assert!(!pool.plan().unwrap().spill_active());
             assert_eq!(
                 pool.classify_batch_at(&images, 0),
                 want,
@@ -838,5 +1267,142 @@ mod tests {
         assert_eq!(plan.output_macros(), 5);
         assert_eq!(pool.n_macros(), plan.macros_used());
         assert_eq!(pool.n_macros(), 1 + 5);
+    }
+
+    #[test]
+    fn traffic_aware_pinning_beats_prefix_on_a_skewed_schedule() {
+        // tentpole acceptance: a schedule where one threshold value holds
+        // 8 of 12 positions (skew 8× ≥ 2×).  Point-grouped, histogram-
+        // driven pinning must pay ≤ the cyclic K − d bound and strictly
+        // fewer measured retunes than prefix pinning at the same budget.
+        let mut model = tiny_model(64, 8, 3, 44);
+        model.schedule = vec![0, 0, 0, 0, 0, 0, 0, 0, 8, 16, 24, 32];
+        let k_len = model.schedule.len() as u64;
+        let images = rand_images(8, 64, 29);
+        let budget = 4; // 1 hidden load + 3 output macros
+        let prefix = MacroPool::with_capacity(&model, nominal(), budget);
+        let traffic_pool = MacroPool::with_traffic(&model, nominal(), budget, 1, &[1; 12]);
+        let d = prefix.plan().unwrap().pinned as u64;
+        let bound = k_len - d; // the PR 2 cyclic rule at this budget
+        assert!(traffic_pool.plan().unwrap().predicted_retunes_per_batch() < bound);
+        // both placements classify identically (nominal = reload pipeline)
+        let mut pipe = Pipeline::new(&model, nominal());
+        let want = pipe.classify_batch(&images);
+        assert_eq!(prefix.classify_batch(&images), want);
+        assert_eq!(traffic_pool.classify_batch(&images), want);
+        // measured steady-state retunes: traffic-aware < prefix ≤ bound
+        prefix.take_stats(0);
+        traffic_pool.take_stats(0);
+        let batches = 4u64;
+        for _ in 0..batches {
+            prefix.classify_batch(&images);
+            traffic_pool.classify_batch(&images);
+        }
+        let p = prefix.take_stats(batches * 8);
+        let t = traffic_pool.take_stats(batches * 8);
+        assert_eq!(p.programming_cycles(), 0);
+        assert_eq!(t.programming_cycles(), 0);
+        assert!(
+            t.events.retunes <= bound * batches,
+            "traffic {} vs bound {}/batch",
+            t.events.retunes,
+            bound
+        );
+        assert!(
+            t.events.retunes < p.events.retunes,
+            "traffic {} must beat prefix {}",
+            t.events.retunes,
+            p.events.retunes
+        );
+        // the histogram the pool measured is the schedule frequency ×
+        // served images, and it drains
+        let h = traffic_pool.take_output_traffic();
+        assert_eq!(h.len(), 12);
+        assert!(h.iter().all(|&c| c == (batches + 1) * 8));
+        assert!(traffic_pool.take_output_traffic().iter().all(|&c| c == 0));
+    }
+
+    #[test]
+    fn multi_pool_serves_tenants_bit_identically_to_standalone_pools() {
+        // tenancy acceptance at the pool layer: one budget, two models —
+        // per-tenant predictions equal the same model running alone on a
+        // pool built from the same per-tenant plan (nominal and analog)
+        let a = tiny_model(100, 16, 4, 42);
+        let b = tiny_model(64, 8, 3, 7);
+        let imgs_a = rand_images(12, 100, 5);
+        let imgs_b = rand_images(12, 64, 6);
+        for opts in [nominal(), PipelineOptions::default()] {
+            let budget = MacroPool::macros_required(&a, &opts)
+                + MacroPool::macros_required(&b, &opts);
+            let pool = MultiPool::new(&[&a, &b], opts, budget);
+            assert_eq!(pool.n_tenants(), 2);
+            let tp = pool.plan().expect("budget covers the floors");
+            assert!(tp.macros_used() <= budget);
+            assert_eq!(pool.n_macros(), tp.macros_used());
+            let alone_a = MacroPool::with_plan(&a, opts, tp.plans[0].clone());
+            let alone_b = MacroPool::with_plan(&b, opts, tp.plans[1].clone());
+            // interleave tenant batches in chunks: isolation must hold
+            // for any interleaving
+            for chunk in [3usize, 5] {
+                let mut base = 0u64;
+                for (ca, cb) in imgs_a.chunks(chunk).zip(imgs_b.chunks(chunk)) {
+                    assert_eq!(
+                        pool.classify_batch_at(0, ca, base),
+                        alone_a.classify_batch_at(ca, base)
+                    );
+                    assert_eq!(
+                        pool.classify_batch_at(1, cb, base),
+                        alone_b.classify_batch_at(cb, base)
+                    );
+                    base += chunk as u64;
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn multi_pool_steady_state_pays_zero_programming_at_full_budget() {
+        let a = tiny_model(100, 16, 4, 42);
+        let b = tiny_model(64, 8, 3, 7);
+        let imgs_a = rand_images(8, 100, 5);
+        let imgs_b = rand_images(8, 64, 6);
+        let budget = MacroPool::macros_required(&a, &nominal())
+            + MacroPool::macros_required(&b, &nominal());
+        let pool = MultiPool::new(&[&a, &b], nominal(), budget);
+        // warmup both tenants, drain construction programming
+        pool.classify_batch(0, &imgs_a);
+        pool.classify_batch(1, &imgs_b);
+        pool.take_stats_total(16);
+        // steady state across interleaved tenant batches
+        for _ in 0..2 {
+            pool.classify_batch(0, &imgs_a);
+            pool.classify_batch(1, &imgs_b);
+        }
+        let steady = pool.take_stats_total(32);
+        assert_eq!(steady.programming_cycles(), 0);
+        assert_eq!(steady.events.retunes, 0);
+        assert!(steady.events.searches > 0);
+        assert_eq!(steady.macros, pool.n_macros());
+        // per-tenant stats drained into the total: nothing left
+        assert_eq!(pool.take_stats(0, 0).cycles, 0);
+        assert_eq!(pool.take_stats(1, 0).cycles, 0);
+    }
+
+    #[test]
+    fn multi_pool_below_floors_splits_evenly_and_degrades() {
+        // two single-load tenants on 2 macros: the tenancy floors (2
+        // each) don't fit, so each tenant gets 1 macro and reloads —
+        // still bit-exact vs the pipeline
+        let a = tiny_model(64, 8, 3, 1);
+        let b = tiny_model(64, 8, 3, 2);
+        let pool = MultiPool::new(&[&a, &b], nominal(), 2);
+        assert!(pool.plan().is_none());
+        assert_eq!(pool.tenant(0).mode(), PoolMode::Reload);
+        assert_eq!(pool.tenant(1).mode(), PoolMode::Reload);
+        let imgs = rand_images(6, 64, 3);
+        let mut pipe_a = Pipeline::new(&a, nominal());
+        let mut pipe_b = Pipeline::new(&b, nominal());
+        assert_eq!(pool.classify_batch(0, &imgs), pipe_a.classify_batch(&imgs));
+        assert_eq!(pool.classify_batch(1, &imgs), pipe_b.classify_batch(&imgs));
     }
 }

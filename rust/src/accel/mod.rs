@@ -1,7 +1,7 @@
 //! L3 accelerator coordination: voltage calibration (Table I), the
-//! Algorithm-1 inference pipeline, the capacity-aware placement planner,
-//! the multi-macro resident execution pool, request batching, and
-//! accuracy metrics.
+//! Algorithm-1 inference pipeline, the capacity-aware placement planner
+//! (single-model and multi-tenant), the multi-macro resident execution
+//! pools, request batching, and accuracy metrics.
 
 pub mod batcher;
 pub mod macro_pool;
@@ -12,9 +12,9 @@ pub mod planner;
 pub mod voltage;
 
 pub use batcher::{BatchPolicy, Batcher, Request};
-pub use macro_pool::{MacroPool, PoolMode, DEFAULT_POOL_MACROS};
+pub use macro_pool::{MacroPool, MultiPool, PoolMode, DEFAULT_POOL_MACROS};
 pub use metrics::{evaluate, Accuracy};
 pub use parallel::{classify_parallel, classify_parallel_with_budget};
 pub use pipeline::{CategoryCost, Pipeline, PipelineOptions, RunStats};
-pub use planner::PlacementPlan;
+pub use planner::{PlacementPlan, TenantPlan, TenantSpec};
 pub use voltage::{CalibratedPoint, VoltageController};

@@ -27,6 +27,7 @@
 //! or macro budget (see `CamArray::search_into_rng`).
 
 use crate::bnn::model::MappedModel;
+use crate::cam::NoiseMode;
 use crate::util::bitops::BitVec;
 
 use super::macro_pool::{MacroPool, DEFAULT_POOL_MACROS};
@@ -59,10 +60,21 @@ pub fn classify_parallel_with_budget(
     let batch = batch.max(1);
     let chunk = images.len().div_ceil(n_threads).max(1);
     // cheap placement probe (no calibration) before building anything:
-    // models whose hidden loads exceed the budget go straight to the
-    // per-shard reload path
-    if MacroPool::plan_for(model, &opts, budget).is_none() {
-        return classify_parallel_reload(model, opts, images, batch, n_threads);
+    // infeasible budgets go straight to the per-shard reload path.  So
+    // do analog-mode *spill* plans: concurrent workers would interleave
+    // funnel reloads, and each reload redraws frozen row variation from
+    // the funnel's own stream — arrival order would leak into analog
+    // results, breaking this evaluator's any-interleaving determinism
+    // contract (nominal mode draws nothing, so spill stays eligible).
+    let spill_racy = |p: &super::planner::PlacementPlan| {
+        p.spill_active() && opts.noise == NoiseMode::Analog && n_threads > 1
+    };
+    match MacroPool::plan_for(model, &opts, budget) {
+        None => return classify_parallel_reload(model, opts, images, batch, n_threads),
+        Some(p) if spill_racy(&p) => {
+            return classify_parallel_reload(model, opts, images, batch, n_threads)
+        }
+        Some(_) => {}
     }
     let pool = MacroPool::with_capacity_for_workers(model, opts, budget, n_threads);
     let mut shard_results: Vec<Option<Vec<(Vec<u32>, usize)>>> =
@@ -135,6 +147,14 @@ fn classify_parallel_reload(
         stats.events.add(&slot.1.events);
         stats.hidden_cost.add(&slot.1.hidden_cost);
         stats.output_cost.add(&slot.1.output_cost);
+        // per-shard elapsed times are *summed* into the merged report, so
+        // each shard's single macro already leaks over exactly its own
+        // slice of that serialized timeline — summing `macros` here would
+        // multiply leakage by the shard count on top of the summed time.
+        // (A resident pool is different: all its macros stay powered for
+        // the pool's whole reported duration, so take_stats reports the
+        // full resident count.)
+        stats.macros = stats.macros.max(slot.1.macros);
     }
     (results, stats)
 }

@@ -232,6 +232,12 @@ pub struct RunStats {
     pub hidden_cost: CategoryCost,
     /// Retune/programming cost attributed to the output threshold sweep.
     pub output_cost: CategoryCost,
+    /// Simulated macros that accrued these stats: 1 for the single-macro
+    /// `Pipeline`, the resident macro count for a `MacroPool`, summed
+    /// across shards/tenants when reports are merged.  The energy model
+    /// multiplies the per-macro leakage power by this count
+    /// (`energy::report`); 0 (an empty/default report) is treated as 1.
+    pub macros: usize,
 }
 
 impl RunStats {
@@ -447,6 +453,7 @@ impl<'m> Pipeline<'m> {
             events: self.cam.events,
             hidden_cost: self.attr_hidden,
             output_cost: self.attr_output,
+            macros: 1,
         };
         self.cam.reset_accounting();
         self.attr_hidden = CategoryCost::default();

@@ -15,10 +15,62 @@
 //!   [`bench_artifact_path`]) so future PRs have a perf trajectory to
 //!   compare against.
 
+use crate::bnn::model::{MappedLayer, MappedModel};
+use crate::util::bitops::{BitMatrix, BitVec};
 use crate::util::json::{obj, Json};
+use crate::util::rng::Rng;
 use crate::util::stats::Summary;
 use std::path::{Path, PathBuf};
 use std::time::Instant;
+
+/// Random bit vector for synthetic workload images.
+pub fn synth_bits(n: usize, rng: &mut Rng) -> BitVec {
+    let mut v = BitVec::zeros(n);
+    for i in 0..n {
+        v.set(i, rng.chance(0.5));
+    }
+    v
+}
+
+/// Random single-segment mapped layer (mirrors the python mapper's
+/// shape) — the synthetic-model building block the experiment benches
+/// and serving demos share, so the acceptance fixtures cannot drift
+/// between them.
+pub fn synth_layer(rng: &mut Rng, n_out: usize, n_in: usize, width: usize) -> MappedLayer {
+    let rows: Vec<BitVec> = (0..n_out).map(|_| synth_bits(n_in, rng)).collect();
+    let pads = width - n_in;
+    let q = vec![(0..n_out)
+        .map(|_| rng.range_u64(0, pads as u64) as i32)
+        .collect()];
+    MappedLayer {
+        weights: BitMatrix::from_rows(&rows),
+        q,
+        seg_bounds: vec![0, n_in],
+        seg_width: width,
+    }
+}
+
+/// Synthetic mapped model over `(n_out, n_in, width)` layer shapes with
+/// the standard 33-threshold Algorithm-1 schedule.  Layers draw from one
+/// `Rng::new(seed, stream)` in order, so a given (seed, stream, shapes)
+/// triple is a stable fixture across benches and examples — e.g. the
+/// HG-shaped acceptance model is `(seed, 0xBE9C, &[(384, 1500, 2048),
+/// (6, 384, 512)])`.
+pub fn synth_model(seed: u64, stream: u64, layers: &[(usize, usize, usize)]) -> MappedModel {
+    let mut rng = Rng::new(seed, stream);
+    let layers = layers
+        .iter()
+        .map(|&(n_out, n_in, width)| synth_layer(&mut rng, n_out, n_in, width))
+        .collect();
+    let m = MappedModel {
+        layers,
+        schedule: (0..=64).step_by(2).collect(),
+    };
+    for l in &m.layers {
+        l.validate().expect("synthetic layer valid");
+    }
+    m
+}
 
 /// Prevent the optimizer from eliding a computed value.
 #[inline]

@@ -42,7 +42,15 @@ impl IdxTensor {
             let o = 4 + 4 * d;
             dims.push(u32::from_be_bytes(buf[o..o + 4].try_into().unwrap()) as usize);
         }
-        let expect: usize = dims.iter().product();
+        // `dims.iter().product()` wraps in release mode: a crafted header
+        // like [2^31, 2^31, 4] multiplies to 2^64 ≡ 0, which defeats the
+        // size check below (an empty payload "matches") and then blows up
+        // `binarize_images`' `i*m..(i+1)*m` slicing.  Reject any header
+        // whose element count is not exactly representable.
+        let expect = dims
+            .iter()
+            .try_fold(1usize, |acc, &d| acc.checked_mul(d))
+            .ok_or_else(|| format!("IDX dims {dims:?} overflow the addressable size"))?;
         if buf.len() != header + expect {
             return Err(format!(
                 "IDX payload size {} != expected {}",
@@ -150,6 +158,27 @@ mod tests {
         let mut float_dtype = make_idx(&[1], &[0]);
         float_dtype[2] = 0x0d;
         assert!(IdxTensor::parse(&float_dtype).is_err());
+    }
+
+    #[test]
+    fn rejects_overflowing_dims_instead_of_wrapping() {
+        // regression: dims [2^31, 2^31, 4] multiply to 2^64, which wraps
+        // to 0 in release mode — the payload-size check then *passes* on
+        // an empty payload and binarize_images' row slicing panics (or
+        // worse, silently reads the wrong rows).  A crafted header must
+        // be rejected up front.
+        let wrap_to_zero = make_idx(&[1 << 31, 1 << 31, 4], &[]);
+        let err = IdxTensor::parse(&wrap_to_zero).unwrap_err();
+        assert!(err.contains("overflow"), "{err}");
+        // wrapping to a small nonzero count is just as dangerous: 2^64+2
+        let wrap_to_two = make_idx(&[1 << 31, 1 << 31, 4, 2], &[0, 0]);
+        // (product = 2^64 · 2 ≡ 0 — still the overflow path, payload lies)
+        assert!(IdxTensor::parse(&wrap_to_two).is_err());
+        // a dim of zero is fine — empty tensors multiply exactly
+        let empty = make_idx(&[0, 28, 28], &[]);
+        let t = IdxTensor::parse(&empty).unwrap();
+        assert_eq!(t.n(), 0);
+        assert!(binarize_images(&t, 128).is_empty());
     }
 
     #[test]

@@ -52,8 +52,16 @@ pub struct HwReport {
     pub soc_area_mm2: f64,
 }
 
-/// Convert event counts to an energy breakdown for a run of `elapsed_s`.
-pub fn energy_of(events: &EventCounters, elapsed_s: f64) -> EnergyBreakdown {
+/// Convert event counts to an energy breakdown for a run of `elapsed_s`
+/// on `macros` resident macros.
+///
+/// `k::P_LEAKAGE` is the Table II *per-macro* standby figure, so leakage
+/// scales with how many macros the run kept powered: a multi-macro
+/// `MacroPool` (or multi-tenant `MultiPool`) leaks on every resident
+/// macro for the whole run, not just one.  (The dynamic terms already
+/// scale naturally — they follow the event counts, wherever the events
+/// happened.)  `macros = 0` (an empty/default report) is treated as 1.
+pub fn energy_of(events: &EventCounters, elapsed_s: f64, macros: usize) -> EnergyBreakdown {
     // Precharge energy scales with the *discharged* fraction; on average
     // roughly half the cells on a searched row mismatch, but we charge the
     // full precharge per search (conservative, matches CV² accounting).
@@ -63,7 +71,7 @@ pub fn energy_of(events: &EventCounters, elapsed_s: f64) -> EnergyBreakdown {
         mlsa: events.mlsa_evals as f64 * k::E_MLSA_PER_ROW,
         writes: events.cells_written as f64 * k::E_WRITE_PER_CELL,
         retunes: events.retunes as f64 * k::E_RETUNE,
-        leakage: k::P_LEAKAGE * elapsed_s,
+        leakage: k::P_LEAKAGE * elapsed_s * macros.max(1) as f64,
     }
 }
 
@@ -76,10 +84,12 @@ pub fn ops_of(events: &EventCounters) -> f64 {
     events.useful_macs as f64 * 2.0
 }
 
-/// Build the full report from run statistics.
+/// Build the full report from run statistics.  Leakage is charged per
+/// resident macro (`RunStats::macros`); the area rows stay per-macro —
+/// they are the paper-comparison silicon figures.
 pub fn report(stats: &RunStats) -> HwReport {
     let elapsed = stats.elapsed_s();
-    let energy = energy_of(&stats.events, elapsed);
+    let energy = energy_of(&stats.events, elapsed, stats.macros);
     let power = if elapsed > 0.0 {
         energy.total() / elapsed
     } else {
@@ -129,6 +139,7 @@ mod tests {
             cycles: 34,
             stall_s: 0.0,
             events: ev,
+            macros: 1,
             ..RunStats::default()
         }
     }
@@ -136,10 +147,33 @@ mod tests {
     #[test]
     fn energy_positive_and_dominated_by_precharge() {
         let s = fake_stats();
-        let e = energy_of(&s.events, s.elapsed_s());
+        let e = energy_of(&s.events, s.elapsed_s(), 1);
         assert!(e.total() > 0.0);
         assert!(e.precharge > e.mlsa);
         assert!(e.precharge > e.searchlines);
+    }
+
+    #[test]
+    fn leakage_scales_with_the_resident_macro_count() {
+        // regression: P_LEAKAGE is the Table II *per-macro* 55 µW figure,
+        // but energy_of used to charge it once regardless of pool size —
+        // a 39-macro HG pool understated leakage (and overstated
+        // inf/s/W) by up to 39×
+        let mut s = fake_stats();
+        assert_eq!(s.macros, 1, "fake stats model one macro");
+        let single = report(&s);
+        s.macros = 39;
+        let pooled = report(&s);
+        let ratio = pooled.energy.leakage / single.energy.leakage;
+        assert!((ratio - 39.0).abs() < 1e-9, "leakage ratio {ratio}");
+        // everything dynamic is unchanged, so the efficiency penalty is
+        // exactly the extra leakage
+        assert_eq!(pooled.energy.precharge, single.energy.precharge);
+        assert!(pooled.power_w > single.power_w);
+        assert!(pooled.inf_per_s_per_w < single.inf_per_s_per_w);
+        // a defaulted report (macros = 0) behaves like one macro
+        let zero = report(&RunStats::default());
+        assert!(zero.power_w >= 0.0);
     }
 
     #[test]

@@ -16,7 +16,8 @@ use std::sync::mpsc;
 use std::time::{Duration, Instant};
 
 use crate::accel::{
-    BatchPolicy, Batcher, MacroPool, PipelineOptions, PoolMode, Request, DEFAULT_POOL_MACROS,
+    BatchPolicy, Batcher, MacroPool, MultiPool, PipelineOptions, PoolMode, Request, RunStats,
+    DEFAULT_POOL_MACROS,
 };
 use crate::bnn::model::MappedModel;
 use crate::util::bitops::BitVec;
@@ -26,6 +27,10 @@ use crate::util::stats::Summary;
 #[derive(Clone, Debug)]
 pub struct Response {
     pub id: u64,
+    /// Tenant that served the request (0 for single-model servers).  Ids
+    /// are unique per tenant lane, so (tenant, id) identifies a request
+    /// on a [`MultiServer`].
+    pub tenant: usize,
     pub prediction: usize,
     pub votes: Vec<u32>,
     pub latency: Duration,
@@ -41,10 +46,16 @@ pub struct ServerMetrics {
 }
 
 impl ServerMetrics {
+    /// Median latency [ms].  `NaN` until a request has been served — an
+    /// idle server has no latency sample, and `Summary::percentile`
+    /// documents the `NaN` sentinel rather than panicking; report
+    /// printers should show a placeholder (see `examples/serve.rs`).
     pub fn p50_ms(&self) -> f64 {
         self.latency_ms.percentile(50.0)
     }
 
+    /// 99th-percentile latency [ms]; `NaN` until a request has been
+    /// served (see [`Self::p50_ms`]).
     pub fn p99_ms(&self) -> f64 {
         self.latency_ms.percentile(99.0)
     }
@@ -151,6 +162,7 @@ impl<'m> Server<'m> {
                 self.metrics.latency_ms.push(latency.as_secs_f64() * 1e3);
                 Response {
                     id,
+                    tenant: 0,
                     prediction,
                     votes,
                     latency,
@@ -169,6 +181,131 @@ impl<'m> Server<'m> {
         let delta = self.metrics.served - self.stats_reported;
         self.stats_reported = self.metrics.served;
         self.pool.take_stats(delta)
+    }
+}
+
+/// Multi-tenant server core: one [`MultiPool`] (one macro budget shared
+/// across N models), one batcher lane and one [`ServerMetrics`] per
+/// tenant.  Requests are tenant-tagged at submission; lanes batch
+/// independently (a device batch is always tenant-homogeneous — tenants
+/// are different models) and `poll` drains every lane's ready batches.
+pub struct MultiServer<'m> {
+    pool: MultiPool<'m>,
+    lanes: Vec<Batcher>,
+    pub metrics: Vec<ServerMetrics>,
+    /// Per-tenant inferences already reported (delta bases).
+    stats_reported: Vec<u64>,
+}
+
+impl<'m> MultiServer<'m> {
+    /// Server over `models` sharing `max_macros` with equal traffic
+    /// shares (see [`MultiPool::new`]).
+    pub fn new(
+        models: &[&'m MappedModel],
+        opts: PipelineOptions,
+        policy: BatchPolicy,
+        max_macros: usize,
+    ) -> Self {
+        Self::with_shares(models, opts, policy, max_macros, &vec![1.0; models.len()])
+    }
+
+    /// Server with explicit per-tenant traffic shares: surplus macro
+    /// budget follows the shares (see `accel::planner::plan_tenants`).
+    pub fn with_shares(
+        models: &[&'m MappedModel],
+        opts: PipelineOptions,
+        policy: BatchPolicy,
+        max_macros: usize,
+        shares: &[f64],
+    ) -> Self {
+        let pool = MultiPool::with_shares(models, opts, max_macros, 1, shares);
+        let n = pool.n_tenants();
+        MultiServer {
+            pool,
+            lanes: (0..n).map(|_| Batcher::new(policy)).collect(),
+            metrics: vec![ServerMetrics::default(); n],
+            stats_reported: vec![0; n],
+        }
+    }
+
+    pub fn n_tenants(&self) -> usize {
+        self.lanes.len()
+    }
+
+    /// The backing multi-tenant pool (plans, modes, diagnostics).
+    pub fn pool(&self) -> &MultiPool<'m> {
+        &self.pool
+    }
+
+    /// Enqueue one request for `tenant`; returns its id (unique within
+    /// the tenant's lane — pair with the tenant for a global key).
+    pub fn submit(&mut self, tenant: usize, image: BitVec) -> u64 {
+        self.lanes[tenant].push_tagged(tenant, image)
+    }
+
+    /// Flush every tenant lane as long as its policy says so (or `force`).
+    /// Returns completed responses across all tenants.  Like
+    /// [`Server::poll`], each lane drains *every* ready batch per call.
+    pub fn poll(&mut self, force: bool) -> Vec<Response> {
+        let mut responses = Vec::new();
+        for tenant in 0..self.lanes.len() {
+            if force {
+                let batch = self.lanes[tenant].drain_all();
+                responses.extend(self.run_lane(tenant, batch));
+                continue;
+            }
+            while self.lanes[tenant].ready(Instant::now()) {
+                let batch = self.lanes[tenant].drain_batch();
+                if batch.is_empty() {
+                    break;
+                }
+                responses.extend(self.run_lane(tenant, batch));
+            }
+        }
+        responses
+    }
+
+    /// Classify one tenant's drained batch and record its lane metrics.
+    fn run_lane(&mut self, tenant: usize, batch: Vec<Request>) -> Vec<Response> {
+        if batch.is_empty() {
+            return Vec::new();
+        }
+        let mut meta = Vec::with_capacity(batch.len());
+        let mut images = Vec::with_capacity(batch.len());
+        for req in batch {
+            debug_assert_eq!(req.tenant, tenant, "lane holds one tenant");
+            meta.push((req.id, req.enqueued));
+            images.push(req.image);
+        }
+        let results = self.pool.classify_batch(tenant, &images);
+        let done = Instant::now();
+        let metrics = &mut self.metrics[tenant];
+        metrics.batches += 1;
+        metrics.batch_sizes.push(images.len() as f64);
+        meta.into_iter()
+            .zip(results)
+            .map(|((id, enqueued), (votes, prediction))| {
+                let latency = done.duration_since(enqueued);
+                metrics.served += 1;
+                metrics.latency_ms.push(latency.as_secs_f64() * 1e3);
+                Response {
+                    id,
+                    tenant,
+                    prediction,
+                    votes,
+                    latency,
+                }
+            })
+            .collect()
+    }
+
+    /// Drain one tenant's device statistics accumulated since the
+    /// previous call for that tenant (delta-based, like
+    /// [`Server::take_device_stats`]).
+    pub fn take_device_stats(&mut self, tenant: usize) -> RunStats {
+        let delta = self.metrics[tenant].served - self.stats_reported[tenant];
+        self.stats_reported[tenant] = self.metrics[tenant].served;
+        self.pool.take_stats(tenant, delta)
     }
 }
 
@@ -465,6 +602,106 @@ mod tests {
         let third = server.take_device_stats();
         assert_eq!(third.inferences, 5);
         assert!(third.cycles > 0);
+    }
+
+    #[test]
+    fn idle_server_reports_nan_percentiles_not_a_panic() {
+        // regression guard: percentile over an empty latency reservoir
+        // must return the documented NaN sentinel, never index-panic
+        let model = tiny_model(64, 8, 3, 39);
+        let server = Server::new(&model, opts(), BatchPolicy::default());
+        assert!(server.metrics.p50_ms().is_nan());
+        assert!(server.metrics.p99_ms().is_nan());
+        assert!(server.metrics.mean_batch().is_nan());
+        // a multi-tenant server's idle lanes behave the same way
+        let b = tiny_model(64, 8, 3, 40);
+        let multi = MultiServer::new(&[&model, &b], opts(), BatchPolicy::default(), 16);
+        for m in &multi.metrics {
+            assert!(m.p50_ms().is_nan());
+            assert!(m.p99_ms().is_nan());
+        }
+    }
+
+    #[test]
+    fn multi_server_serves_two_tenants_from_one_budget() {
+        // tentpole acceptance at the server layer: one budget, two model
+        // shapes, per-tenant metrics, zero steady-state programming, and
+        // per-tenant predictions bit-identical to standalone pools
+        let a = tiny_model(100, 16, 4, 41);
+        let b = tiny_model(64, 8, 3, 42);
+        let budget = MacroPool::macros_required(&a, &opts())
+            + MacroPool::macros_required(&b, &opts());
+        let policy = BatchPolicy {
+            max_batch: 8,
+            max_wait: Duration::ZERO,
+        };
+        let mut server = MultiServer::new(&[&a, &b], opts(), policy, budget);
+        assert_eq!(server.n_tenants(), 2);
+        assert_eq!(server.pool().tenant(0).mode(), PoolMode::Resident);
+        assert_eq!(server.pool().tenant(1).mode(), PoolMode::Resident);
+        let imgs_a = images(8, 100);
+        let imgs_b = images(8, 64);
+        // warmup epoch: interleaved tenant submissions
+        for (ia, ib) in imgs_a.iter().zip(&imgs_b) {
+            server.submit(0, ia.clone());
+            server.submit(1, ib.clone());
+        }
+        server.poll(true);
+        server.take_device_stats(0);
+        server.take_device_stats(1);
+        // steady state: both tenants pay zero programming and zero retunes
+        for (ia, ib) in imgs_a.iter().zip(&imgs_b) {
+            server.submit(0, ia.clone());
+            server.submit(1, ib.clone());
+        }
+        let mut responses = server.poll(true);
+        for t in 0..2 {
+            let steady = server.take_device_stats(t);
+            assert_eq!(steady.inferences, 8, "tenant {t}");
+            assert_eq!(steady.programming_cycles(), 0, "tenant {t}");
+            assert_eq!(steady.events.retunes, 0, "tenant {t}");
+            assert_eq!(server.metrics[t].served, 16, "tenant {t}");
+        }
+        // per-tenant predictions match the reload pipelines bit-exactly
+        responses.sort_by_key(|r| (r.tenant, r.id));
+        let (ra, rb): (Vec<_>, Vec<_>) = responses.into_iter().partition(|r| r.tenant == 0);
+        let mut pipe_a = Pipeline::new(&a, opts());
+        let mut pipe_b = Pipeline::new(&b, opts());
+        // the steady-state epoch re-served the same images
+        let want_a = pipe_a.classify_batch(&imgs_a);
+        let want_b = pipe_b.classify_batch(&imgs_b);
+        for (r, (votes, pred)) in ra.iter().zip(&want_a) {
+            assert_eq!(&r.prediction, pred);
+            assert_eq!(&r.votes, votes);
+        }
+        for (r, (votes, pred)) in rb.iter().zip(&want_b) {
+            assert_eq!(&r.prediction, pred);
+            assert_eq!(&r.votes, votes);
+        }
+    }
+
+    #[test]
+    fn multi_server_partial_batches_flush_per_lane() {
+        let a = tiny_model(64, 8, 3, 43);
+        let b = tiny_model(64, 8, 3, 44);
+        let mut server = MultiServer::new(
+            &[&a, &b],
+            opts(),
+            BatchPolicy {
+                max_batch: 100,
+                max_wait: Duration::from_secs(60),
+            },
+            16,
+        );
+        server.submit(0, images(1, 64).pop().unwrap());
+        server.submit(1, images(1, 64).pop().unwrap());
+        assert!(server.poll(false).is_empty(), "policies not yet ready");
+        let got = server.poll(true);
+        assert_eq!(got.len(), 2);
+        let tenants: Vec<usize> = got.iter().map(|r| r.tenant).collect();
+        assert!(tenants.contains(&0) && tenants.contains(&1));
+        assert_eq!(server.metrics[0].served, 1);
+        assert_eq!(server.metrics[1].served, 1);
     }
 
     #[test]

@@ -126,6 +126,11 @@ impl Summary {
 
     /// Linear-interpolated percentile, p in [0, 100], over the retained
     /// sample (exact below the reservoir capacity).
+    ///
+    /// An empty summary returns the `NaN` sentinel — never an index
+    /// panic — so metrics consumers (an idle `ServerMetrics`, a report
+    /// printed before the first request) can query unconditionally and
+    /// render a placeholder.
     pub fn percentile(&self, p: f64) -> f64 {
         if self.reservoir.is_empty() {
             return f64::NAN;
@@ -226,6 +231,18 @@ mod tests {
         assert_eq!(s.min(), 1.0);
         assert_eq!(s.max(), 5.0);
         assert!((s.stddev() - 1.5811388).abs() < 1e-6);
+    }
+
+    #[test]
+    fn empty_summary_percentiles_are_nan_not_a_panic() {
+        // pinned behaviour: zero samples → NaN sentinel (an idle server's
+        // p50/p99 query must not index into an empty reservoir)
+        let s = Summary::new();
+        assert!(s.is_empty());
+        assert!(s.percentile(50.0).is_nan());
+        assert!(s.percentile(99.0).is_nan());
+        assert!(s.median().is_nan());
+        assert!(s.mean().is_nan());
     }
 
     #[test]

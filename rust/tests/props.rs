@@ -1,7 +1,7 @@
 //! Cross-module property tests (the testkit mini-framework): coordinator
 //! invariants — mapping/routing/batching/placement — over random models.
 
-use picbnn::accel::{planner, MacroPool, Pipeline, PipelineOptions};
+use picbnn::accel::{planner, MacroPool, MultiPool, Pipeline, PipelineOptions};
 use picbnn::analog::{MatchlineModel, Pvt, Voltages};
 use picbnn::bnn::infer::{digital_forward, sweep_votes};
 use picbnn::bnn::mapping::{expected_mismatches, program_row, segment_query};
@@ -115,9 +115,10 @@ fn prop_batch_invariance_nominal() {
 #[test]
 fn prop_planner_never_exceeds_the_budget() {
     // over random load shapes, schedules, budgets, and worker counts:
-    // a plan either fits the budget exactly or is refused, every hidden
-    // load keeps >= 1 macro, and pinned thresholds never exceed the
-    // schedule
+    // a plan either fits the budget exactly or is refused (only below
+    // the cold-spill floor), resident loads keep >= 1 macro, spill
+    // plans keep exactly one funnel, and pinned thresholds never exceed
+    // the schedule
     forall(300, 131, |g| {
         let n_layers = g.usize_in(1, 4);
         let rows: Vec<Vec<usize>> = (0..n_layers)
@@ -130,20 +131,46 @@ fn prop_planner_never_exceeds_the_budget() {
         let schedule_len = g.usize_in(0, 40);
         let budget = g.usize_in(0, 120);
         let workers = g.usize_in(0, 12);
+        let min_output = schedule_len.min(1);
         match planner::plan(&rows, schedule_len, budget, workers) {
-            None => prop_assert(
-                budget < hidden + schedule_len.min(1),
-                format!("refused a feasible budget {budget} (hidden {hidden})"),
-            )?,
+            None => {
+                // refusal only below the floor: full residency for a
+                // single-load model, the 2-macro spill floor otherwise
+                let floor = if hidden >= 2 {
+                    2.min(hidden + min_output)
+                } else {
+                    hidden + min_output
+                };
+                prop_assert(
+                    budget < floor,
+                    format!("refused a feasible budget {budget} (hidden {hidden})"),
+                )?
+            }
             Some(p) => {
                 prop_assert(
                     p.macros_used() <= budget,
                     format!("{} macros over budget {budget}", p.macros_used()),
                 )?;
-                prop_assert(
-                    p.hidden_replicas.iter().flatten().all(|&r| r >= 1),
-                    "hidden load lost its macro",
-                )?;
+                if p.spill_active() {
+                    prop_assert(
+                        budget < hidden + min_output,
+                        "spill above the full-residency floor",
+                    )?;
+                    prop_assert(
+                        p.pinned == 0 && p.shared_slots == 1,
+                        "spill plans keep exactly the funnel",
+                    )?;
+                    prop_assert(
+                        p.hidden_macros() >= 1,
+                        "spill keeps at least one resident load",
+                    )?;
+                    prop_assert(!p.replication_active(), "spill plans never replicate")?;
+                } else {
+                    prop_assert(
+                        p.hidden_replicas.iter().flatten().all(|&r| r >= 1),
+                        "hidden load lost its macro",
+                    )?;
+                }
                 prop_assert(
                     p.hidden_replicas
                         .iter()
@@ -151,10 +178,91 @@ fn prop_planner_never_exceeds_the_budget() {
                         .all(|&r| r <= workers.max(1)),
                     "replicas exceed the worker count",
                 )?;
-                prop_assert(p.pinned <= schedule_len, "pinned past the schedule")?;
                 prop_assert(
-                    p.pinned == schedule_len || p.shared_slots >= 1,
+                    p.pinned_positions() <= schedule_len,
+                    "pinned past the schedule",
+                )?;
+                prop_assert(
+                    p.pinned_positions() == schedule_len || p.shared_slots >= 1,
                     "unpinned thresholds need a shared slot",
+                )?;
+                prop_assert(
+                    p.pin_slot.iter().flatten().all(|&s| s < p.pinned),
+                    "pin routes to a nonexistent slot",
+                )?;
+            }
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_tenant_isolation_under_any_budget_split() {
+    // the multi-tenant analogue of prop_budget_never_changes_nominal_
+    // predictions: for any feasible budget split, traffic-share skew,
+    // noise mode, and interleaving of tenant batches, each tenant's
+    // results are bit-identical to the same model running alone on a
+    // pool built from its tenant plan — and (nominal) to the reload
+    // Pipeline
+    forall(6, 139, |g| {
+        let ma = gen_model(g);
+        let mb = gen_model(g);
+        let analog = g.bool();
+        let opts = PipelineOptions {
+            noise: if analog {
+                NoiseMode::Analog
+            } else {
+                NoiseMode::Nominal
+            },
+            ..Default::default()
+        };
+        let full = MacroPool::macros_required(&ma, &opts)
+            + MacroPool::macros_required(&mb, &opts);
+        let budget = g.usize_in(4, full + 4);
+        let shares = [g.usize_in(1, 5) as f64, g.usize_in(1, 5) as f64];
+        let models = [&ma, &mb];
+        let pool = MultiPool::with_shares(&models, opts, budget, 1, &shares);
+        let tp = match pool.plan() {
+            Some(tp) => tp,
+            None => return Ok(()), // below the tenancy floors
+        };
+        prop_assert(
+            tp.macros_used() <= budget,
+            format!("{} macros over budget {budget}", tp.macros_used()),
+        )?;
+        let alone = [
+            MacroPool::with_plan(&ma, opts, tp.plans[0].clone()),
+            MacroPool::with_plan(&mb, opts, tp.plans[1].clone()),
+        ];
+        let imgs: Vec<Vec<BitVec>> = models
+            .iter()
+            .map(|m| {
+                (0..6)
+                    .map(|_| BitVec::from_pm1(&g.pm1_vec(m.n_in())))
+                    .collect()
+            })
+            .collect();
+        // random interleaving of tenant batches (explicit stream bases so
+        // the standalone pool replays the identical noise streams)
+        let mut base = [0u64; 2];
+        for _ in 0..5 {
+            let t = g.usize_in(0, 1);
+            let lo = g.usize_in(0, imgs[t].len() - 1);
+            let hi = g.usize_in(lo + 1, imgs[t].len());
+            let chunk = &imgs[t][lo..hi];
+            prop_assert(
+                pool.classify_batch_at(t, chunk, base[t])
+                    == alone[t].classify_batch_at(chunk, base[t]),
+                format!("tenant {t} diverged from its standalone pool"),
+            )?;
+            base[t] += chunk.len() as u64;
+        }
+        if !analog {
+            for (t, m) in models.iter().enumerate() {
+                let mut pipe = Pipeline::new(m, opts);
+                prop_assert(
+                    pool.classify_batch_at(t, &imgs[t], 0) == pipe.classify_batch(&imgs[t]),
+                    format!("tenant {t} diverged from the reload pipeline"),
                 )?;
             }
         }
