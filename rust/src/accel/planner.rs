@@ -1,5 +1,6 @@
 //! Capacity-aware macro placement: how a fixed budget of simulated
-//! 128-kbit macros is spent on one mapped model.
+//! 128-kbit macros is spent on one model — or partitioned across a
+//! multi-tenant pool of models.
 //!
 //! PR 1's pool was all-or-nothing — either every hidden load *and* every
 //! output threshold got its own macro, or the model dropped to the
@@ -8,20 +9,33 @@
 //!
 //! 1. **Hidden loads come first.**  Sharing a hidden macro would mean
 //!    reprogramming rows mid-batch (the 138-cycle-per-load reload tax the
-//!    pool exists to kill), so a plan is only resident when every hidden
-//!    load owns a macro.
+//!    pool exists to kill), so a plan keeps every hidden load it can
+//!    afford resident.  Budgets below hidden-loads + 1 no longer drop the
+//!    whole model to the reload scheduler: the **coldest** hidden loads
+//!    (smallest programmed row count — cheapest to reprogram) *spill* to
+//!    the shared funnel slot and are reloaded there per batch
+//!    (`hidden_replicas[li][di] == 0`), while the hottest `budget − 1`
+//!    loads stay resident.  Only budgets that cannot hold one resident
+//!    load plus the funnel (or a single-load model below full residency)
+//!    fall back to reload.
 //! 2. **Output thresholds share.**  All output slots hold the *same*
 //!    programmed rows and differ only in their parked (V_ref, V_eval,
 //!    V_st) triple, so a threshold that loses its dedicated macro costs a
-//!    *retune*, never a reprogram.  With `d` pinned thresholds and `s`
-//!    shared slots serving the remaining `r = K − d` (LRU over parked
-//!    triples), a cyclic Algorithm-1 sweep pays 0 retunes/batch when
-//!    `r ≤ s` and `r` retunes/batch otherwise — LRU misses every access
-//!    of a cycle longer than the slot pool.  That makes pins strictly
-//!    better than extra shared slots for sweep traffic, so the planner
-//!    maximises `d` and keeps a single shared slot (`s = 1`) as the
-//!    funnel; the LRU mechanism still pays off for non-cyclic operating
-//!    point traffic (schedule prefixes, future per-request points).
+//!    *retune*, never a reprogram.  Schedule positions whose calibrated
+//!    triples coincide (equal threshold values — calibration is a pure
+//!    function of the target) are grouped into one **operating point**
+//!    ([`PlacementPlan::point_of`]); pinning a point parks *one* macro
+//!    that serves every position of that point.  Points are pinned
+//!    hottest-first by the per-position traffic histogram (schedule
+//!    frequency by default, measured access counts when fed back from the
+//!    pool — see `MacroPool::take_output_traffic`), and the remaining
+//!    points funnel through a single LRU-parked shared slot.  For an
+//!    all-distinct uniform schedule this reduces to the PR 2 rule — pin a
+//!    prefix of `d` thresholds, pay exactly `K − d` retunes/batch on the
+//!    cyclic sweep — while skewed schedules (repeated values, measured
+//!    hot spots) pay strictly less: the predicted cost is the number of
+//!    operating-point *transitions* the funnel sees per batch
+//!    ([`PlacementPlan::predicted_retunes_per_batch`]).
 //! 3. **Surplus replicates hidden loads.**  Budget beyond full pinning
 //!    buys hidden-load replicas so `classify_parallel` workers search a
 //!    free replica instead of serialising on one `Mutex<CamArray>`.
@@ -30,77 +44,175 @@
 //!    and never past the worker count the pool serves (a replica no
 //!    searcher can reach is pure simulated area).
 //!
+//! **Multi-tenant pools** ([`plan_tenants`]) partition one budget across
+//! N models: every tenant first receives its feasibility floor (full
+//! hidden residency + one output slot, degrading through cold-spill down
+//! to two macros), then the surplus is distributed proportional-fair by
+//! each tenant's measured traffic share, capped at the budget past which
+//! extra macros would idle (full point pinning + worker-capped
+//! replicas).  Tenants never share macros — different models' rows
+//! differ — so isolation is structural: a tenant's plan is exactly a
+//! single-model [`PlacementPlan`] over its sub-budget, and its results
+//! are bit-identical to that model running alone on its own pool.
+//!
 //! Cost model summary (steady state, per batch): resident plans pay
-//! `predicted_retunes_per_batch()` retune stalls and zero programming;
-//! the reload `Pipeline` pays `K` output retunes plus a full reprogram of
-//! every hidden load.  A plan is only worth emitting when its budget
-//! covers all hidden loads plus one output slot; below that the caller
-//! falls back to reload mode.
+//! [`PlacementPlan::predicted_retunes_per_batch`] retune stalls and zero
+//! programming; spill plans additionally reprogram each spilled load (and
+//! re-land the output rows in the funnel once); the reload `Pipeline`
+//! pays `K` output retunes plus a full reprogram of every hidden load.
 
 /// How a macro budget is spent on one model: replicas per hidden load,
-/// pinned output thresholds, and LRU-shared output slots.
+/// pinned output operating points, and LRU-shared output slots.
 #[derive(Clone, Debug, PartialEq, Eq)]
 pub struct PlacementPlan {
     /// The budget the plan was built against (`macros_used() <= budget`).
     pub budget: usize,
     /// Macro replicas per hidden (layer, load); parallel to the layer
-    /// load plans, every entry ≥ 1.
+    /// load plans.  `0` marks a cold-spilled load: it owns no macro and
+    /// is reprogrammed into the shared funnel slot per batch.
     pub hidden_replicas: Vec<Vec<usize>>,
-    /// The first `pinned` schedule thresholds own a permanently parked
-    /// macro each (zero steady-state retunes).
+    /// Pinned slot per schedule position: `Some(s)` routes to pinned
+    /// macro `s` (positions sharing an operating point share a slot),
+    /// `None` routes through the shared LRU funnel.
+    pub pin_slot: Vec<Option<usize>>,
+    /// Operating-point class per schedule position: positions with equal
+    /// class park identical calibrated triples (retunes between them are
+    /// free).  The compat [`plan`] entry point treats every position as
+    /// its own point.
+    pub point_of: Vec<usize>,
+    /// Number of pinned output slot macros.
     pub pinned: usize,
-    /// Shared output slots serving thresholds `pinned..schedule_len`,
-    /// parked at one triple each and evicted LRU.
+    /// Shared output slots serving the unpinned points (and any spilled
+    /// hidden loads), parked at one triple each and evicted LRU.
     pub shared_slots: usize,
-    /// Total output-schedule thresholds.
+    /// Total output-schedule positions.
     pub schedule_len: usize,
+    /// Cost-model retunes/batch (funnel operating-point transitions).
+    predicted_retunes: u64,
 }
 
 /// Build a plan for a model with the given hidden-load row counts
 /// (`hidden_load_rows[layer][load]` = programmed rows of that load) and
 /// output schedule length, under `budget` macros, serving `workers`
-/// concurrent searchers.  A load is never replicated beyond `workers`
-/// copies — more replicas than searchers can only sit idle — so a
-/// single-worker plan leaves surplus budget unspent rather than burning
-/// area on macros nobody can reach.  Returns `None` when the budget
-/// cannot hold every hidden load plus one output slot — the caller
-/// should then run the reload scheduler.
+/// concurrent searchers.  Every schedule position is treated as its own
+/// operating point with uniform traffic (the PR 2 behaviour: prefix
+/// pinning, `K − d` retunes/batch); see [`plan_traffic`] for
+/// point-grouped, histogram-driven pinning.  Returns `None` when the
+/// budget cannot run the model resident even with cold-spill — the
+/// caller should then run the reload scheduler.
 pub fn plan(
     hidden_load_rows: &[Vec<usize>],
     schedule_len: usize,
     budget: usize,
     workers: usize,
 ) -> Option<PlacementPlan> {
+    let points: Vec<usize> = (0..schedule_len).collect();
+    plan_traffic(hidden_load_rows, &points, None, budget, workers)
+}
+
+/// The traffic-aware planner core.  `schedule_points[k]` is the
+/// operating-point class of schedule position `k` (positions with equal
+/// class share one calibrated triple); `traffic[k]` is the measured (or
+/// assumed) access count of position `k` per batch — `None` means
+/// uniform.  Pinning is hottest-point-first; ties break toward the
+/// earliest schedule position so plans are deterministic.
+pub fn plan_traffic(
+    hidden_load_rows: &[Vec<usize>],
+    schedule_points: &[usize],
+    traffic: Option<&[u64]>,
+    budget: usize,
+    workers: usize,
+) -> Option<PlacementPlan> {
+    let schedule_len = schedule_points.len();
+    // an empty histogram means "nothing measured yet" (e.g. fed back
+    // from a pool that ran in reload mode) — treat it as uniform rather
+    // than panicking on the length mismatch
+    let traffic = traffic.filter(|t| !t.is_empty());
+    if let Some(t) = traffic {
+        assert_eq!(t.len(), schedule_len, "one traffic count per position");
+    }
     let hidden: usize = hidden_load_rows.iter().map(Vec::len).sum();
     let min_output = schedule_len.min(1);
-    if budget < hidden + min_output {
+    let spill = budget < hidden + min_output;
+    if spill && (hidden < 2 || budget < 2) {
         return None;
     }
-    let output_budget = budget - hidden;
-    let (pinned, shared_slots) = if schedule_len == 0 {
-        (0, 0)
-    } else if output_budget >= schedule_len {
-        // full pinning: every threshold parked forever, zero retunes
-        (schedule_len, 0)
-    } else {
-        // maximise pins, funnel the rest through one LRU slot (see the
-        // module docs for why one funnel beats a balanced split)
-        (output_budget - 1, 1)
-    };
-    let mut hidden_replicas: Vec<Vec<usize>> = hidden_load_rows
-        .iter()
-        .map(|layer| vec![1; layer.len()])
-        .collect();
-    let cap = workers.max(1);
-    let mut surplus = budget - hidden - pinned - shared_slots;
-    if surplus > 0 && hidden > 0 && cap > 1 {
-        // replicate hottest-first: largest loads hold their lock longest
-        let mut order: Vec<(usize, usize)> = hidden_load_rows
+
+    let (mut hidden_replicas, resident_hidden) = if spill {
+        // cold-spill: keep the hottest budget−1 loads resident (largest
+        // row count = most expensive to reprogram), run the rest through
+        // the shared funnel slot per batch
+        let mut order: Vec<(usize, usize)> = load_order(hidden_load_rows);
+        order.truncate(budget - 1);
+        let mut replicas: Vec<Vec<usize>> = hidden_load_rows
             .iter()
-            .enumerate()
-            .flat_map(|(li, layer)| (0..layer.len()).map(move |di| (li, di)))
+            .map(|layer| vec![0; layer.len()])
             .collect();
-        order.sort_by_key(|&(li, di)| std::cmp::Reverse(hidden_load_rows[li][di]));
+        for &(li, di) in &order {
+            replicas[li][di] = 1;
+        }
+        (replicas, budget - 1)
+    } else {
+        let replicas: Vec<Vec<usize>> = hidden_load_rows
+            .iter()
+            .map(|layer| vec![1; layer.len()])
+            .collect();
+        (replicas, hidden)
+    };
+
+    // --- output placement: pin whole operating points hottest-first ---
+    // distinct points in first-appearance order, with accumulated weight
+    let mut point_ids: Vec<usize> = Vec::new();
+    let mut weights: Vec<u64> = Vec::new();
+    for (k, &p) in schedule_points.iter().enumerate() {
+        let w = traffic.map_or(1, |t| t[k]);
+        match point_ids.iter().position(|&q| q == p) {
+            Some(i) => weights[i] += w,
+            None => {
+                point_ids.push(p);
+                weights.push(w);
+            }
+        }
+    }
+    let n_points = point_ids.len();
+    let output_budget = if spill { 1 } else { budget - hidden };
+    let (pinned_points, shared_slots): (Vec<usize>, usize) = if schedule_len == 0 {
+        // no output sweep; spill plans still keep the funnel for loads
+        (Vec::new(), usize::from(spill))
+    } else if !spill && output_budget >= n_points {
+        // full pinning: every point parked forever, zero retunes
+        ((0..n_points).collect(), 0)
+    } else {
+        // maximise pins under the histogram, funnel the rest through one
+        // LRU slot (see the module docs for why one funnel beats a
+        // balanced split); spill plans keep the whole sweep in the funnel
+        let d = output_budget.saturating_sub(1).min(n_points);
+        let mut by_heat: Vec<usize> = (0..n_points).collect();
+        by_heat.sort_by_key(|&i| std::cmp::Reverse(weights[i])); // stable: ties → earliest
+        (by_heat[..d].to_vec(), 1)
+    };
+
+    // per-position routing: positions of a pinned point share its slot,
+    // slots numbered by the point's first appearance for determinism
+    let mut slot_of_point: Vec<Option<usize>> = vec![None; n_points];
+    let mut ordered: Vec<usize> = pinned_points;
+    ordered.sort_unstable();
+    for (slot, &pi) in ordered.iter().enumerate() {
+        slot_of_point[pi] = Some(slot);
+    }
+    let pinned = ordered.len();
+    let point_of: Vec<usize> = schedule_points
+        .iter()
+        .map(|&p| point_ids.iter().position(|&q| q == p).unwrap())
+        .collect();
+    let pin_slot: Vec<Option<usize>> = point_of.iter().map(|&pi| slot_of_point[pi]).collect();
+
+    // --- surplus buys hidden-load replicas (never on spill plans) ---
+    let cap = workers.max(1);
+    let mut surplus = budget - resident_hidden - pinned - shared_slots;
+    if !spill && surplus > 0 && hidden > 0 && cap > 1 {
+        // replicate hottest-first: largest loads hold their lock longest
+        let order = load_order(hidden_load_rows);
         let mut cursor = 0usize;
         let mut at_cap = 0usize;
         while surplus > 0 && at_cap < order.len() {
@@ -115,22 +227,90 @@ pub fn plan(
             }
         }
     }
+
+    // --- cost model: funnel operating-point transitions per batch ---
+    // the funnel's per-batch access sequence is every spilled load (in
+    // execution order; loads of one layer share the layer midpoint) then
+    // every unpinned schedule position in sweep order.  A retune is paid
+    // exactly when the parked triple changes, cyclically across batches.
+    let mut funnel: Vec<(u8, usize)> = Vec::new();
+    for (li, layer) in hidden_replicas.iter().enumerate() {
+        for &r in layer.iter() {
+            if r == 0 {
+                funnel.push((1, li)); // spilled load parks the layer midpoint
+            }
+        }
+    }
+    for (k, slot) in pin_slot.iter().enumerate() {
+        if slot.is_none() {
+            funnel.push((0, point_of[k]));
+        }
+    }
+    let distinct_funnel = {
+        let mut seen: Vec<(u8, usize)> = Vec::new();
+        for &e in &funnel {
+            if !seen.contains(&e) {
+                seen.push(e);
+            }
+        }
+        seen.len()
+    };
+    let predicted_retunes = if distinct_funnel <= shared_slots {
+        0 // every funnel point parks permanently
+    } else {
+        cyclic_transitions(&funnel)
+    };
+
     Some(PlacementPlan {
         budget,
         hidden_replicas,
+        pin_slot,
+        point_of,
         pinned,
         shared_slots,
         schedule_len,
+        predicted_retunes,
     })
 }
 
+/// Hidden loads ordered hottest-first (descending row count; stable, so
+/// ties keep (layer, load) order) — shared by replication and spill.
+fn load_order(hidden_load_rows: &[Vec<usize>]) -> Vec<(usize, usize)> {
+    let mut order: Vec<(usize, usize)> = hidden_load_rows
+        .iter()
+        .enumerate()
+        .flat_map(|(li, layer)| (0..layer.len()).map(move |di| (li, di)))
+        .collect();
+    order.sort_by_key(|&(li, di)| std::cmp::Reverse(hidden_load_rows[li][di]));
+    order
+}
+
+/// Transitions in a cyclic sequence (how often adjacent entries differ,
+/// wrapping the end around to the start): the steady-state retunes/batch
+/// a single LRU funnel slot pays for this access pattern.
+fn cyclic_transitions(seq: &[(u8, usize)]) -> u64 {
+    if seq.len() <= 1 {
+        return 0;
+    }
+    let mut t = 0u64;
+    let mut prev = *seq.last().unwrap();
+    for &e in seq {
+        if e != prev {
+            t += 1;
+        }
+        prev = e;
+    }
+    t
+}
+
 impl PlacementPlan {
-    /// Macros spent on hidden loads (replicas included).
+    /// Macros spent on hidden loads (replicas included; spilled loads
+    /// contribute nothing).
     pub fn hidden_macros(&self) -> usize {
         self.hidden_replicas.iter().flatten().sum()
     }
 
-    /// Macros spent on the output sweep (pinned + shared).
+    /// Macros spent on the output sweep / funnel (pinned + shared).
     pub fn output_macros(&self) -> usize {
         self.pinned + self.shared_slots
     }
@@ -140,9 +320,14 @@ impl PlacementPlan {
         self.hidden_macros() + self.output_macros()
     }
 
-    /// Whether any threshold lost its dedicated macro.
+    /// Schedule positions served by a permanently pinned macro.
+    pub fn pinned_positions(&self) -> usize {
+        self.pin_slot.iter().filter(|s| s.is_some()).count()
+    }
+
+    /// Whether any schedule position lost its dedicated operating point.
     pub fn sharing_active(&self) -> bool {
-        self.pinned < self.schedule_len
+        self.pinned_positions() < self.schedule_len
     }
 
     /// Whether surplus budget bought hidden-load replicas.
@@ -150,36 +335,177 @@ impl PlacementPlan {
         self.hidden_replicas.iter().flatten().any(|&r| r > 1)
     }
 
-    /// Steady-state retune upper bound per batch for the cyclic
-    /// Algorithm-1 sweep: the `r = schedule_len − pinned` unpinned
-    /// thresholds all miss when they outnumber the shared slots (LRU on a
-    /// cycle longer than the pool), and all park permanently otherwise.
-    /// Thresholds whose calibrated triples coincide retune for free, so
-    /// the measured count may come in below this bound.
+    /// Whether any hidden load is cold-spilled to the funnel slot.
+    pub fn spill_active(&self) -> bool {
+        self.hidden_replicas.iter().flatten().any(|&r| r == 0)
+    }
+
+    /// Cold-spilled hidden loads (reprogrammed into the funnel per batch).
+    pub fn spilled_loads(&self) -> usize {
+        self.hidden_replicas
+            .iter()
+            .flatten()
+            .filter(|&&r| r == 0)
+            .count()
+    }
+
+    /// Steady-state retune upper bound per batch: the number of
+    /// operating-point transitions the shared funnel sees on one cyclic
+    /// Algorithm-1 sweep (spilled loads included).  Pinned points and
+    /// consecutive same-point accesses are free; for an all-distinct
+    /// uniform schedule this is exactly the classic `K − d`.  Measured
+    /// counts may come in below the bound when triples of *different*
+    /// points happen to coincide at the DAC grid.
     pub fn predicted_retunes_per_batch(&self) -> u64 {
-        let rest = self.schedule_len - self.pinned;
-        if rest <= self.shared_slots {
-            0
-        } else {
-            rest as u64
-        }
+        self.predicted_retunes
     }
 
     /// One-line human description for reports and examples.
     pub fn describe(&self) -> String {
         let h: usize = self.hidden_replicas.iter().map(Vec::len).sum();
         format!(
-            "{} macros: {} hidden loads ({} replicas), {}/{} thresholds pinned, \
-             {} shared slot(s), ≤{} retunes/batch",
+            "{} macros: {} hidden loads ({} replicas, {} spilled), {}/{} thresholds pinned \
+             on {} slot(s), {} shared slot(s), ≤{} retunes/batch",
             self.macros_used(),
             h,
-            self.hidden_macros() - h,
-            self.pinned,
+            self.hidden_macros().saturating_sub(h - self.spilled_loads()),
+            self.spilled_loads(),
+            self.pinned_positions(),
             self.schedule_len,
+            self.pinned,
             self.shared_slots,
             self.predicted_retunes_per_batch()
         )
     }
+}
+
+/// One tenant's shape and traffic, as seen by [`plan_tenants`].
+#[derive(Clone, Debug)]
+pub struct TenantSpec {
+    /// Programmed rows per hidden (layer, load) — `MacroPool` shape.
+    pub hidden_load_rows: Vec<Vec<usize>>,
+    /// Operating-point class per schedule position (see [`plan_traffic`]).
+    pub schedule_points: Vec<usize>,
+    /// Measured per-position access histogram (`None` = uniform).
+    pub traffic: Option<Vec<u64>>,
+    /// Relative batch-traffic share of this tenant (surplus allotment);
+    /// non-positive shares are treated as equal weight.
+    pub share: f64,
+}
+
+impl TenantSpec {
+    fn hidden(&self) -> usize {
+        self.hidden_load_rows.iter().map(Vec::len).sum()
+    }
+
+    /// Smallest budget this tenant can run resident on (cold-spill floor).
+    fn min_budget(&self) -> usize {
+        let hidden = self.hidden();
+        let min_output = self.schedule_points.len().min(1);
+        if hidden >= 2 {
+            2.min(hidden + min_output)
+        } else {
+            hidden + min_output
+        }
+    }
+
+    /// Budget past which extra macros can only idle: full point pinning
+    /// plus worker-capped replicas of every load.
+    fn max_useful_budget(&self, workers: usize) -> usize {
+        let mut points: Vec<usize> = self.schedule_points.clone();
+        points.sort_unstable();
+        points.dedup();
+        self.hidden() * workers.max(1) + points.len()
+    }
+}
+
+/// A macro budget partitioned across tenants: `plans[t]` is tenant `t`'s
+/// single-model placement over its sub-budget (Σ sub-budgets ≤ `budget`).
+#[derive(Clone, Debug)]
+pub struct TenantPlan {
+    pub budget: usize,
+    pub plans: Vec<PlacementPlan>,
+}
+
+impl TenantPlan {
+    /// Macros instantiated across every tenant.
+    pub fn macros_used(&self) -> usize {
+        self.plans.iter().map(PlacementPlan::macros_used).sum()
+    }
+
+    /// One-line description per tenant.
+    pub fn describe(&self) -> String {
+        self.plans
+            .iter()
+            .enumerate()
+            .map(|(t, p)| format!("tenant {t}: {}", p.describe()))
+            .collect::<Vec<_>>()
+            .join("; ")
+    }
+}
+
+/// Partition `budget` macros across `specs` tenants and plan each one.
+///
+/// Allocation: every tenant first receives its feasibility floor
+/// ([`TenantSpec::min_budget`] — full residency preferred, cold-spill
+/// accepted); `None` if even the floors don't fit.  The surplus is then
+/// handed out one macro at a time, proportional-fair by traffic share
+/// (each macro goes to the tenant maximising `share / (extra + 1)`, ties
+/// to the lowest tenant index), capped at each tenant's
+/// [`TenantSpec::max_useful_budget`].
+pub fn plan_tenants(specs: &[TenantSpec], budget: usize, workers: usize) -> Option<TenantPlan> {
+    let mins: Vec<usize> = specs.iter().map(TenantSpec::min_budget).collect();
+    let maxs: Vec<usize> = specs
+        .iter()
+        .map(|s| s.max_useful_budget(workers))
+        .collect();
+    let floor: usize = mins.iter().sum();
+    if floor > budget {
+        return None;
+    }
+    let any_positive = specs.iter().any(|s| s.share > 0.0);
+    let share = |i: usize| -> f64 {
+        if any_positive {
+            specs[i].share.max(0.0)
+        } else {
+            1.0
+        }
+    };
+    let mut alloc = mins.clone();
+    let mut surplus = budget - floor;
+    while surplus > 0 {
+        let mut best: Option<(usize, f64)> = None;
+        for i in 0..specs.len() {
+            if alloc[i] >= maxs[i] {
+                continue;
+            }
+            let score = share(i) / (alloc[i] - mins[i] + 1) as f64;
+            if best.map_or(true, |(_, b)| score > b) {
+                best = Some((i, score));
+            }
+        }
+        match best {
+            Some((i, _)) => {
+                alloc[i] += 1;
+                surplus -= 1;
+            }
+            None => break, // every tenant saturated; leave the rest unspent
+        }
+    }
+    let plans: Option<Vec<PlacementPlan>> = specs
+        .iter()
+        .zip(&alloc)
+        .map(|(s, &b)| {
+            plan_traffic(
+                &s.hidden_load_rows,
+                &s.schedule_points,
+                s.traffic.as_deref(),
+                b,
+                workers,
+            )
+        })
+        .collect();
+    plans.map(|plans| TenantPlan { budget, plans })
 }
 
 #[cfg(test)]
@@ -188,12 +514,20 @@ mod tests {
 
     #[test]
     fn infeasible_budgets_return_none() {
-        // 3 hidden loads + ≥1 output slot → 4 macros minimum
+        // 3 hidden loads + ≥1 output slot → 4 macros for full residency;
+        // cold-spill takes the floor down to 2 (1 resident + the funnel)
         let rows = vec![vec![64, 64], vec![16]];
-        for budget in 0..4 {
+        for budget in 0..2 {
             assert!(plan(&rows, 33, budget, 1).is_none(), "budget {budget}");
         }
-        assert!(plan(&rows, 33, 4, 1).is_some());
+        for budget in 2..4 {
+            let p = plan(&rows, 33, budget, 1).unwrap();
+            assert!(p.spill_active(), "budget {budget}");
+        }
+        assert!(!plan(&rows, 33, 4, 1).unwrap().spill_active());
+        // a single hidden load has nothing to spill: below full residency
+        // the model must reload
+        assert!(plan(&[vec![64]], 33, 1, 1).is_none());
     }
 
     #[test]
@@ -201,6 +535,7 @@ mod tests {
         let rows = vec![vec![64, 64], vec![16]];
         let p = plan(&rows, 33, 3 + 33, 4).unwrap();
         assert_eq!(p.pinned, 33);
+        assert_eq!(p.pinned_positions(), 33);
         assert_eq!(p.shared_slots, 0);
         assert!(!p.sharing_active());
         assert!(!p.replication_active());
@@ -241,8 +576,14 @@ mod tests {
         assert_eq!(p.shared_slots, 1);
         assert_eq!(p.macros_used(), 16);
         assert!(p.sharing_active());
-        // 24 unpinned thresholds funnel through the shared slot
+        assert!(!p.spill_active());
+        // 24 unpinned thresholds funnel through the shared slot; with the
+        // uniform compat histogram the pins are the schedule prefix
         assert_eq!(p.predicted_retunes_per_batch(), 24);
+        for k in 0..9 {
+            assert_eq!(p.pin_slot[k], Some(k));
+        }
+        assert!(p.pin_slot[9..].iter().all(Option::is_none));
     }
 
     #[test]
@@ -281,10 +622,159 @@ mod tests {
     }
 
     #[test]
+    fn cold_spill_keeps_the_hottest_loads_resident() {
+        // 4 loads of distinct heat + 4 thresholds, budget 3: the two
+        // hottest loads keep macros, the two coldest spill to the funnel
+        let rows = vec![vec![64, 16], vec![48, 8]];
+        let p = plan(&rows, 4, 3, 1).unwrap();
+        assert!(p.spill_active());
+        assert_eq!(p.hidden_replicas, vec![vec![1, 0], vec![1, 0]]);
+        assert_eq!(p.spilled_loads(), 2);
+        assert_eq!(p.pinned, 0);
+        assert_eq!(p.shared_slots, 1);
+        assert_eq!(p.macros_used(), 3);
+        // funnel cycle: spill(l0), spill(l1), 4 distinct output points →
+        // 6 transitions/batch
+        assert_eq!(p.predicted_retunes_per_batch(), 6);
+        // spill with an empty schedule still keeps the funnel slot
+        let p = plan(&rows, 0, 3, 1).unwrap();
+        assert!(p.spill_active());
+        assert_eq!(p.shared_slots, 1);
+        assert_eq!(p.macros_used(), 3);
+    }
+
+    #[test]
+    fn skewed_schedule_pins_by_point_weight_not_prefix() {
+        // threshold value 0 occupies 8 of 12 positions; grouping by
+        // operating point + weight-first pinning serves all 8 from one
+        // pinned macro, so the funnel sees only the cold tail
+        let points = vec![0, 0, 0, 0, 0, 0, 0, 0, 1, 2, 3, 4];
+        let rows = vec![vec![64]];
+        // budget 4 → output budget 3 → pin 2 points + 1 funnel
+        let p = plan_traffic(&rows, &points, None, 4, 1).unwrap();
+        assert_eq!(p.pinned, 2);
+        // the heavy point (weight 8) and the earliest unit point pin
+        assert_eq!(p.pin_slot[0], Some(0), "heavy point pinned");
+        assert_eq!(p.pin_slot[7], Some(0), "all its positions share the slot");
+        assert_eq!(p.pin_slot[8], Some(1), "tie-break: earliest unit point");
+        assert!(p.pin_slot[9..].iter().all(Option::is_none));
+        assert_eq!(p.pinned_positions(), 9);
+        // funnel: points {2, 3, 4} → 3 transitions, strictly below the
+        // distinct-point prefix rule's K − d = 12 − 2 = 10
+        assert_eq!(p.predicted_retunes_per_batch(), 3);
+        let prefix = plan(&rows, points.len(), 4, 1).unwrap();
+        assert!(p.predicted_retunes_per_batch() < prefix.predicted_retunes_per_batch());
+        // measured traffic can override the schedule frequencies: make
+        // position 11 the hot one
+        let mut traffic = vec![1u64; 12];
+        traffic[11] = 100;
+        let p = plan_traffic(&rows, &points, Some(&traffic), 3, 1).unwrap();
+        assert_eq!(p.pinned, 1);
+        assert_eq!(p.pin_slot[11], Some(0), "measured-hot point pinned first");
+    }
+
+    #[test]
+    fn empty_histogram_means_uniform_traffic() {
+        // feeding back take_output_traffic() from a reload-mode pool
+        // yields an empty histogram — that must plan exactly like the
+        // uniform default, never panic on a length mismatch
+        let points = vec![0, 1, 2, 3];
+        let uniform = plan_traffic(&[vec![64]], &points, None, 3, 1).unwrap();
+        let empty = plan_traffic(&[vec![64]], &points, Some(&[]), 3, 1).unwrap();
+        assert_eq!(uniform, empty);
+    }
+
+    #[test]
+    fn repeated_points_pin_into_one_macro() {
+        // full pinning of 3 distinct points over 6 positions costs 3
+        // macros, not 6
+        let points = vec![0, 1, 0, 2, 1, 0];
+        let p = plan_traffic(&[vec![64]], &points, None, 1 + 3, 1).unwrap();
+        assert_eq!(p.pinned, 3);
+        assert_eq!(p.shared_slots, 0);
+        assert_eq!(p.pinned_positions(), 6);
+        assert_eq!(p.predicted_retunes_per_batch(), 0);
+        assert_eq!(p.macros_used(), 4);
+    }
+
+    #[test]
     fn describe_mentions_the_split() {
         let p = plan(&[vec![64; 6]], 33, 16, 1).unwrap();
         let d = p.describe();
         assert!(d.contains("16 macros"), "{d}");
         assert!(d.contains("9/33"), "{d}");
+    }
+
+    fn spec(rows: Vec<Vec<usize>>, sched: usize, share: f64) -> TenantSpec {
+        TenantSpec {
+            hidden_load_rows: rows,
+            schedule_points: (0..sched).collect(),
+            traffic: None,
+            share,
+        }
+    }
+
+    #[test]
+    fn tenant_floors_come_before_shares() {
+        // two tenants, budget exactly the sum of full-residency needs:
+        // both fully pinned regardless of the share skew
+        let specs = vec![
+            spec(vec![vec![64]], 4, 100.0),
+            spec(vec![vec![64, 64]], 4, 1.0),
+        ];
+        let tp = plan_tenants(&specs, (1 + 4) + (2 + 4), 1).unwrap();
+        assert!(!tp.plans[0].sharing_active());
+        assert!(!tp.plans[1].sharing_active());
+        assert!(tp.macros_used() <= tp.budget);
+        // below the spill floors there is no tenancy plan
+        assert!(plan_tenants(&specs, 2, 1).is_none());
+    }
+
+    #[test]
+    fn surplus_follows_traffic_share() {
+        // equal shapes, 3:1 shares: the hot tenant pins ~3× the surplus
+        let specs = vec![
+            spec(vec![vec![64]], 20, 3.0),
+            spec(vec![vec![64]], 20, 1.0),
+        ];
+        let floor = 2 + 2;
+        let tp = plan_tenants(&specs, floor + 8, 1).unwrap();
+        let extra: Vec<usize> = tp.plans.iter().map(|p| p.budget - 2).collect();
+        assert_eq!(extra[0] + extra[1], 8);
+        assert!(extra[0] >= 3 * extra[1], "{extra:?}");
+        assert!(tp.macros_used() <= tp.budget);
+    }
+
+    #[test]
+    fn tenant_surplus_never_exceeds_useful_budget() {
+        // a huge budget saturates both tenants at full pinning (+ capped
+        // replicas) and leaves the rest unspent
+        let specs = vec![spec(vec![vec![64]], 4, 1.0), spec(vec![vec![32]], 2, 1.0)];
+        let tp = plan_tenants(&specs, 500, 2).unwrap();
+        for (t, p) in tp.plans.iter().enumerate() {
+            assert!(!p.sharing_active(), "tenant {t}");
+            assert!(
+                p.hidden_replicas.iter().flatten().all(|&r| r <= 2),
+                "tenant {t}"
+            );
+        }
+        assert!(tp.macros_used() < 500);
+    }
+
+    #[test]
+    fn tenant_spill_floor_keeps_many_models_viable() {
+        // three multi-load tenants on a budget far below full residency:
+        // every tenant still plans (cold-spill), none reloads
+        let specs = vec![
+            spec(vec![vec![64; 6]], 33, 1.0),
+            spec(vec![vec![64; 4]], 33, 1.0),
+            spec(vec![vec![64; 2]], 33, 1.0),
+        ];
+        let tp = plan_tenants(&specs, 9, 1).unwrap();
+        assert_eq!(tp.plans.len(), 3);
+        for p in &tp.plans {
+            assert!(p.macros_used() >= 2);
+        }
+        assert!(tp.macros_used() <= 9);
     }
 }
