@@ -1,20 +1,33 @@
 //! Hot-path microbenchmarks for the §Perf optimisation loop: packed
-//! Hamming distance (single-query and query-batched), array search
-//! (sequential and batched, both noise modes), row programming, vote
-//! accumulation, and the end-to-end per-image cost on both models.
+//! Hamming distance (single-query and query-batched, per popcount
+//! backend), array search (sequential and batched, both noise modes),
+//! row programming, vote accumulation, and the end-to-end per-image cost
+//! on both models.
 //!
 //! Results are persisted to `BENCH_hotpath.json` at the repo root
-//! (`benchkit::emit_json`) so later PRs can diff the perf trajectory.
-//! Under `PICBNN_BENCH_QUICK=1` (CI) every bench runs single-iteration
-//! smoke samples; the batched-vs-sequential parity checks still run, so a
-//! kernel regression that panics or mis-shapes output fails the pipeline.
+//! (`benchkit::emit_json`; every record carries the active Hamming
+//! backend) so later PRs can diff the perf trajectory — and in full mode
+//! this run *gates* on it: the batched search cases fail if their
+//! throughput regressed more than 20% against the committed baseline,
+//! and the dispatched backend must not lose to the scalar reference on
+//! the batched kernel.  Under `PICBNN_BENCH_QUICK=1` (CI — including
+//! non-AVX2 runners, where dispatch falls back to SWAR) every bench runs
+//! single-iteration smoke samples and the artifact goes to
+//! `BENCH_hotpath_quick.json` instead, so a smoke run can never replace
+//! the committed full-mode baseline; the batched-vs-sequential parity
+//! checks still run, so a kernel regression that panics or mis-shapes
+//! output fails the pipeline.
 
 use picbnn::accel::{Pipeline, PipelineOptions};
-use picbnn::benchkit::{bench, bench_artifact_path, black_box, emit_json, quick_mode, BenchRecord};
+use picbnn::benchkit::{
+    bench, bench_artifact_path, black_box, compare_baseline, emit_json, quick_mode, BenchRecord,
+};
 use picbnn::bnn::model::MappedModel;
 use picbnn::cam::{CamArray, CamConfig, NoiseMode};
 use picbnn::data::TestSet;
-use picbnn::util::bitops::{hamming_words, BitMatrix, BitVec};
+use picbnn::util::bitops::{
+    active_backend, available_backends, hamming_words, BitMatrix, BitVec, HammingBackend,
+};
 use picbnn::util::rng::Rng;
 
 fn rand_bits(n: usize, rng: &mut Rng) -> BitVec {
@@ -73,9 +86,20 @@ fn check_batch_parity(noise: NoiseMode, queries: &[BitVec]) {
     assert_eq!(seq.events, bat.events, "{noise:?}: event accounting");
 }
 
+/// The batched-search acceptance cases gated against the committed
+/// `BENCH_hotpath.json` baseline in full mode.
+const BASELINE_GATED: [&str; 2] = [
+    "search_batch64_1024x128_nominal",
+    "search_batch64_1024x128_analog",
+];
+
 fn main() {
     let mut rng = Rng::new(1, 1);
     let mut records: Vec<BenchRecord> = Vec::new();
+    println!(
+        "hamming backend: {} (force with PICBNN_FORCE_BACKEND=scalar|swar|avx2)",
+        active_backend().name()
+    );
 
     // packed hamming over one 1024-bit row
     let a = rand_bits(1024, &mut rng);
@@ -104,10 +128,39 @@ fn main() {
         black_box(&out);
     });
     println!(
-        "  -> {:.2} M row-searches/s (query-batched)",
+        "  -> {:.2} M row-searches/s (query-batched, dispatched)",
         r.throughput(64.0 * 128.0) / 1e6
     );
     records.push(r.record(Some(64.0 * 128.0)));
+
+    // per-backend A/B on the same batched kernel (the only backend-
+    // dependent stage of the search path): parity against scalar, then a
+    // timing per runnable backend.  Full mode asserts the dispatched
+    // backend does not lose to the scalar reference.
+    let mut backend_rate = std::collections::BTreeMap::new();
+    let mut scalar_out = Vec::new();
+    m.hamming_all_batch_with(HammingBackend::Scalar, &queries64, &mut scalar_out);
+    for backend in available_backends() {
+        let mut check = Vec::new();
+        m.hamming_all_batch_with(backend, &queries64, &mut check);
+        assert_eq!(check, scalar_out, "{backend:?} diverged from scalar");
+        let label = format!("hamming_batch64_128x1024_{}", backend.name());
+        let r = bench(&label, || {
+            m.hamming_all_batch_with(backend, black_box(&queries64), &mut out);
+            black_box(&out);
+        });
+        println!(
+            "  -> {:.2} M row-searches/s ({})",
+            r.throughput(64.0 * 128.0) / 1e6,
+            backend.name()
+        );
+        backend_rate.insert(backend.name(), r.throughput(64.0 * 128.0));
+        // this record timed an explicit backend, not the dispatched one —
+        // persist the backend actually benchmarked
+        let mut rec = r.record(Some(64.0 * 128.0));
+        rec.backend = backend.name();
+        records.push(rec);
+    }
 
     // array search, sequential baseline (nominal + analog)
     let mut single_rate = std::collections::BTreeMap::new();
@@ -188,11 +241,23 @@ fn main() {
         records.push(r.record(Some(imgs.len() as f64)));
     }
 
-    emit_json(bench_artifact_path("BENCH_hotpath.json"), &records)
-        .expect("write BENCH_hotpath.json");
+    // regression gate input: read the *committed* baseline before
+    // emit_json overwrites it with this run's records.  Quick-mode runs
+    // write to a separate artifact so a CI / local smoke run can never
+    // replace the committed full-mode baseline with single-iteration
+    // samples (which compare_baseline would then skip, silently
+    // disarming the gate for every later full run).
+    let baseline_path = bench_artifact_path("BENCH_hotpath.json");
+    let regressions = compare_baseline(&baseline_path, &records, &BASELINE_GATED, 0.2);
+    let out_path = if quick_mode() {
+        bench_artifact_path("BENCH_hotpath_quick.json")
+    } else {
+        baseline_path
+    };
+    emit_json(&out_path, &records).expect("write hotpath bench artifact");
 
-    // acceptance gate, after the artifact is safely on disk; quick mode's
-    // single-iteration timings are too noisy to gate on
+    // acceptance gates, after the artifact is safely on disk; quick
+    // mode's single-iteration timings are too noisy to gate on
     if !quick_mode() {
         for (label, speedup) in &speedups {
             assert!(
@@ -201,5 +266,20 @@ fn main() {
                  baseline, got {speedup:.2}x"
             );
         }
+        // the dispatched backend must be at least as fast as the scalar
+        // reference on the batched kernel (small tolerance for timing
+        // noise when the dispatched backend *is* scalar)
+        let scalar = backend_rate["scalar"];
+        let dispatched = backend_rate[active_backend().name()];
+        assert!(
+            dispatched >= scalar * 0.9,
+            "dispatched backend {} ({dispatched:.3e}/s) lost to scalar ({scalar:.3e}/s)",
+            active_backend().name()
+        );
+        assert!(
+            regressions.is_empty(),
+            "batched throughput regressed >20% vs the committed baseline:\n{}",
+            regressions.join("\n")
+        );
     }
 }

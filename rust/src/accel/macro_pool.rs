@@ -58,16 +58,15 @@
 use std::sync::atomic::{AtomicU64, AtomicUsize, Ordering};
 use std::sync::{Mutex, MutexGuard};
 
-use crate::bnn::mapping::segment_query_wide;
 use crate::bnn::model::MappedModel;
 use crate::cam::{CamArray, CamConfig};
 use crate::sim::SimClock;
-use crate::util::bitops::{BitMatrix, BitVec};
+use crate::util::bitops::BitVec;
 use crate::util::rng::{splitmix64, Rng};
 
 use super::pipeline::{
     calibrate_hidden_points, calibrate_output_points, io_cycles_per_image, plan_loads,
-    program_load_into, resolve_schedule, CategoryCost, Load,
+    program_load_into, resolve_schedule, BatchScratch, CategoryCost, Load,
 };
 use super::pipeline::{Pipeline, PipelineOptions, RunStats};
 use super::planner::{self, PlacementPlan, TenantPlan, TenantSpec};
@@ -221,6 +220,12 @@ pub struct MacroPool<'m> {
     fallback: Option<Mutex<Pipeline<'m>>>,
     /// Next per-image noise-stream index for [`MacroPool::classify_batch`].
     stream_cursor: AtomicU64,
+    /// Free-list of per-batch scratch arenas: each concurrent
+    /// `classify_batch` pops one (building it on first use) and parks it
+    /// back afterwards, so the pool converges to one arena per peak
+    /// concurrent caller and the steady-state batch path allocates
+    /// nothing (pointer-stability test in this module).
+    scratch: Mutex<Vec<BatchScratch>>,
 }
 
 impl<'m> MacroPool<'m> {
@@ -459,6 +464,7 @@ impl<'m> MacroPool<'m> {
             resident,
             fallback,
             stream_cursor: AtomicU64::new(0),
+            scratch: Mutex::new(Vec::new()),
         }
     }
 
@@ -522,6 +528,13 @@ impl<'m> MacroPool<'m> {
         Rng::new(self.opts.seed ^ 0xA11A_0F0E_5EED_0001, global_idx)
     }
 
+    /// Scratch arenas currently parked in the free-list (diagnostics:
+    /// the pool converges to one arena per peak number of concurrent
+    /// `classify_batch` callers; quiescent pools park them all here).
+    pub fn scratch_arenas(&self) -> usize {
+        self.scratch.lock().unwrap().len()
+    }
+
     /// Classify a batch; noise-stream indices assigned from the pool's
     /// internal cursor (serving path).
     pub fn classify_batch(&self, images: &[BitVec]) -> Vec<(Vec<u32>, usize)> {
@@ -546,65 +559,66 @@ impl<'m> MacroPool<'m> {
             return fb.lock().unwrap().classify_batch(images);
         }
         let resident = self.resident.as_ref().unwrap();
-        let mut rngs: Vec<Rng> = (0..images.len())
-            .map(|i| self.image_rng(stream_base + i as u64))
-            .collect();
-        let mut acts: Vec<BitVec> = images.to_vec();
+        // pop a scratch arena (first caller builds it); every buffer
+        // below reshapes in place, so steady-state batches allocate
+        // nothing beyond the returned votes
+        let mut s = self.scratch.lock().unwrap().pop().unwrap_or_default();
+        s.rngs.clear();
+        s.rngs
+            .extend((0..images.len() as u64).map(|i| self.image_rng(stream_base + i)));
+        s.pack_inputs(images, self.model.layers[0].n_in());
         for layer_idx in 0..self.model.layers.len() - 1 {
-            acts = self.run_hidden(resident, layer_idx, &acts, &mut rngs);
+            self.run_hidden(resident, layer_idx, &mut s);
+            // the hidden codes become the next layer's activation block
+            std::mem::swap(&mut s.acts, &mut s.next);
         }
-        let votes = self.run_output(resident, &acts, &mut rngs);
+        self.run_output(resident, &mut s);
         resident
             .io_clock
             .lock()
             .unwrap()
             .tick(io_cycles_per_image(self.model, self.schedule.len()) * images.len() as u64);
-        votes
-            .into_iter()
-            .map(|v| {
-                let p = crate::bnn::infer::argmax_vote(&v);
-                (v, p)
-            })
-            .collect()
+        let out = s.results(self.model.n_classes());
+        self.scratch.lock().unwrap().push(s);
+        out
     }
 
-    /// Execute one hidden layer for a batch over the layer's resident
-    /// load macros (cold-spilled loads reprogram into the funnel slot);
-    /// returns the hidden codes (majority across segments).
+    /// Execute one hidden layer for the batch held in `s.acts` over the
+    /// layer's resident load macros (cold-spilled loads reprogram into
+    /// the funnel slot); leaves the packed hidden codes (majority across
+    /// segments) in `s.next`.
     ///
-    /// One [`CamArray::search_batch_into_rngs`] call per load: the stored
-    /// rows stream once per query tile, per-image noise streams advance
-    /// exactly as the sequential path would, and the lock is held for one
-    /// batched kernel instead of one search per image.
-    fn run_hidden(
-        &self,
-        resident: &Resident,
-        layer_idx: usize,
-        inputs: &[BitVec],
-        rngs: &mut [Rng],
-    ) -> Vec<BitVec> {
+    /// One [`CamArray::search_batch_rows_into_rngs`] call per load: the
+    /// stored rows stream once per query tile, per-image noise streams
+    /// advance exactly as the sequential path would, and the lock is
+    /// held for one batched kernel instead of one search per image.
+    fn run_hidden(&self, resident: &Resident, layer_idx: usize, s: &mut BatchScratch) {
         let layer = &self.model.layers[layer_idx];
+        let n = s.acts.rows();
         let n_out = layer.n_out();
         let n_seg = layer.n_seg();
         let cfg = CamConfig::fitting(layer.seg_width)
             .unwrap_or_else(|| panic!("word width {} unsupported", layer.seg_width));
         let width = cfg.width();
-        let mut seg_fires = vec![vec![0u8; n_out]; inputs.len()];
-        let (mut m, mut fires) = (Vec::new(), BitMatrix::default());
+        s.seg_fires.clear();
+        s.seg_fires.resize(n * n_out, 0);
         // resident rails were parked at the layer's midpoint at
         // construction — no set_voltages on the resident batch path
         for (load_idx, load) in self.plans[layer_idx].iter().enumerate() {
             let payload = (load.neuron_hi - load.neuron_lo) as u64
                 * (layer.seg_bounds[load.seg + 1] - layer.seg_bounds[load.seg]) as u64;
-            let queries: Vec<BitVec> = inputs
-                .iter()
-                .map(|x| segment_query_wide(layer, load.seg, x, width))
-                .collect();
+            // the query block is repacked in place, never reallocated
+            s.pack_queries(layer, load.seg, width);
             match &resident.hidden_slots[layer_idx][load_idx] {
                 Some(slots) => {
                     let mut cam = slots.acquire();
-                    cam.search_batch_into_rngs(&queries, rngs, &mut m, &mut fires);
-                    cam.events.useful_macs += payload * inputs.len() as u64;
+                    cam.search_batch_rows_into_rngs(
+                        &s.queries,
+                        &mut s.rngs,
+                        &mut s.m,
+                        &mut s.fires,
+                    );
+                    cam.events.useful_macs += payload * n as u64;
                 }
                 None => {
                     // cold-spill: reload this load into the shared funnel
@@ -621,64 +635,55 @@ impl<'m> MacroPool<'m> {
                     }
                     // counted by set_voltages; free when already parked here
                     slot.cam.set_voltages(self.hidden_points[layer_idx].voltages);
-                    slot.cam.search_batch_into_rngs(&queries, rngs, &mut m, &mut fires);
-                    slot.cam.events.useful_macs += payload * inputs.len() as u64;
+                    slot.cam.search_batch_rows_into_rngs(
+                        &s.queries,
+                        &mut s.rngs,
+                        &mut s.m,
+                        &mut s.fires,
+                    );
+                    slot.cam.events.useful_macs += payload * n as u64;
                     let after = (slot.cam.events.retunes, slot.cam.events.row_writes);
                     let mut spill = resident.spill_cost.lock().unwrap();
                     spill.retunes += after.0 - before.0;
                     spill.row_writes += after.1 - before.1;
                 }
             }
-            for (img_idx, img_fires) in seg_fires.iter_mut().enumerate() {
+            for i in 0..n {
                 // rows past the load are cleared and can never fire
-                for row in fires.row_ones(img_idx) {
-                    img_fires[load.neuron_lo + row] += 1;
+                let base = i * n_out + load.neuron_lo;
+                for row in s.fires.row_ones(i) {
+                    s.seg_fires[base + row] += 1;
                 }
             }
         }
-        seg_fires
-            .into_iter()
-            .map(|fires| {
-                let mut h = BitVec::zeros(n_out);
-                for (j, &cnt) in fires.iter().enumerate() {
-                    // majority of segments, ties fire (MLSA convention)
-                    h.set(j, (cnt as usize) * 2 >= n_seg);
-                }
-                h
-            })
-            .collect()
+        s.fold_majority(n_out, n_seg);
     }
 
-    /// Output-layer threshold sweep: pinned operating points hit their
-    /// permanently parked macro (positions of one point share a slot);
-    /// the rest route through the shared slots, paying a retune only when
-    /// the slot must switch operating points.  The funnel re-lands the
-    /// class rows first when a cold-spilled load used it this batch.
-    fn run_output(
-        &self,
-        resident: &Resident,
-        hidden: &[BitVec],
-        rngs: &mut [Rng],
-    ) -> Vec<Vec<u32>> {
+    /// Output-layer threshold sweep over the hidden codes in `s.acts`:
+    /// pinned operating points hit their permanently parked macro
+    /// (positions of one point share a slot); the rest route through the
+    /// shared slots, paying a retune only when the slot must switch
+    /// operating points.  The funnel re-lands the class rows first when
+    /// a cold-spilled load used it this batch.  Leaves the flat votes in
+    /// `s.votes`.
+    fn run_output(&self, resident: &Resident, s: &mut BatchScratch) {
         let out_idx = self.model.layers.len() - 1;
         let layer = self.model.layers.last().unwrap();
         let out_load = &self.plans[out_idx][0];
         let n_cls = layer.n_out();
         let width = CamConfig::fitting(layer.seg_width).unwrap().width();
-        // queries are threshold-independent: build once per batch
-        let queries: Vec<BitVec> = hidden
-            .iter()
-            .map(|h| segment_query_wide(layer, 0, h, width))
-            .collect();
-        let mut votes = vec![vec![0u32; n_cls]; hidden.len()];
-        let (mut m, mut fires) = (Vec::new(), BitMatrix::default());
+        let n = s.acts.rows();
+        // queries are threshold-independent: pack once per batch
+        s.pack_queries(layer, 0, width);
+        s.votes.clear();
+        s.votes.resize(n * n_cls, 0);
         let payload = (layer.n_in() * n_cls) as u64;
         let pinned = resident.plan.pinned;
         for k in 0..self.schedule.len() {
-            resident.traffic[k].fetch_add(queries.len() as u64, Ordering::Relaxed);
+            resident.traffic[k].fetch_add(n as u64, Ordering::Relaxed);
             let point = resident.plan.point_of[k];
             let slot_idx = match resident.plan.pin_slot[k] {
-                Some(s) => s,
+                Some(slot) => slot,
                 None => pinned + resident.router.lock().unwrap().route(point),
             };
             let mut slot = resident.output_slots[slot_idx].lock().unwrap();
@@ -694,15 +699,15 @@ impl<'m> MacroPool<'m> {
                 slot.parked = Some(point);
             }
             let cam = &mut slot.cam;
-            cam.search_batch_into_rngs(&queries, rngs, &mut m, &mut fires);
-            cam.events.useful_macs += payload * queries.len() as u64;
-            for (img_idx, img_votes) in votes.iter_mut().enumerate() {
-                for c in fires.row_ones(img_idx) {
-                    img_votes[c] += 1;
+            cam.search_batch_rows_into_rngs(&s.queries, &mut s.rngs, &mut s.m, &mut s.fires);
+            cam.events.useful_macs += payload * n as u64;
+            for i in 0..n {
+                let base = i * n_cls;
+                for c in s.fires.row_ones(i) {
+                    s.votes[base + c] += 1;
                 }
             }
         }
-        votes
     }
 
     /// Drain device statistics accumulated since the last call, summed
@@ -768,18 +773,22 @@ impl<'m> MacroPool<'m> {
 /// tenant degrades independently (down to the reload scheduler).
 pub struct MultiPool<'m> {
     tenants: Vec<MacroPool<'m>>,
-    plan: Option<TenantPlan>,
+    /// Budget of the tenancy partition (`None` = even-split fallback).
+    /// The per-tenant plans themselves live in the tenants — moved
+    /// there at construction, reassembled on demand by [`Self::plan`].
+    tenancy_budget: Option<usize>,
 }
 
 impl<'m> MultiPool<'m> {
     /// Multi-tenant pool with equal traffic shares and one searcher.
     pub fn new(models: &[&'m MappedModel], opts: PipelineOptions, budget: usize) -> Self {
-        Self::with_shares(models, opts, budget, 1, &vec![1.0; models.len()])
+        Self::with_shares(models, opts, budget, 1, &[])
     }
 
     /// Multi-tenant pool with explicit per-tenant traffic shares
     /// (surplus budget follows the shares) serving `workers` concurrent
-    /// searchers per tenant.
+    /// searchers per tenant.  An empty `shares` slice means equal shares
+    /// — the default path builds no throwaway allocation.
     pub fn with_shares(
         models: &[&'m MappedModel],
         opts: PipelineOptions,
@@ -787,14 +796,14 @@ impl<'m> MultiPool<'m> {
         workers: usize,
         shares: &[f64],
     ) -> Self {
-        let uniform: Vec<Option<Vec<u64>>> = vec![None; models.len()];
-        Self::with_traffic(models, opts, budget, workers, shares, &uniform)
+        Self::with_traffic(models, opts, budget, workers, shares, &[])
     }
 
     /// [`Self::with_shares`] with measured per-tenant output-traffic
     /// histograms (`traffic[t]` from `tenant(t).take_output_traffic()`;
-    /// `None` = uniform): each tenant's pinned set follows its observed
-    /// per-threshold access frequencies.
+    /// `None` = uniform, and an empty slice = uniform everywhere): each
+    /// tenant's pinned set follows its observed per-threshold access
+    /// frequencies.
     pub fn with_traffic(
         models: &[&'m MappedModel],
         opts: PipelineOptions,
@@ -803,33 +812,42 @@ impl<'m> MultiPool<'m> {
         shares: &[f64],
         traffic: &[Option<Vec<u64>>],
     ) -> Self {
-        assert_eq!(models.len(), shares.len(), "one share per tenant");
-        assert_eq!(models.len(), traffic.len(), "one histogram per tenant");
-        let specs: Vec<TenantSpec> = models
+        assert!(
+            shares.is_empty() || shares.len() == models.len(),
+            "one share per tenant (or an empty slice for equal shares)"
+        );
+        assert!(
+            traffic.is_empty() || traffic.len() == models.len(),
+            "one histogram per tenant (or an empty slice for uniform)"
+        );
+        let hist = |t: usize| traffic.get(t).and_then(Option::as_deref);
+        let specs: Vec<TenantSpec<'_>> = models
             .iter()
-            .zip(shares)
-            .zip(traffic)
-            .map(|((m, &share), t)| {
+            .enumerate()
+            .map(|(t, m)| {
                 let plans = plan_loads(m);
                 let schedule = resolve_schedule(m, &opts);
                 TenantSpec {
                     hidden_load_rows: MacroPool::load_rows(&plans),
                     schedule_points: point_classes(&schedule),
-                    traffic: t.clone(),
-                    share,
+                    traffic: hist(t),
+                    share: shares.get(t).copied().unwrap_or(1.0),
                 }
             })
             .collect();
         match planner::plan_tenants(&specs, budget, workers) {
             Some(tp) => {
+                // the tenant plans move into their pools — no clones on
+                // the construction path; `plan()` reassembles the
+                // partition from the tenants when diagnostics ask
                 let tenants = models
                     .iter()
-                    .zip(&tp.plans)
-                    .map(|(m, p)| MacroPool::with_plan(m, opts, p.clone()))
+                    .zip(tp.plans)
+                    .map(|(m, p)| MacroPool::with_plan(m, opts, p))
                     .collect();
                 MultiPool {
                     tenants,
-                    plan: Some(tp),
+                    tenancy_budget: Some(tp.budget),
                 }
             }
             None => {
@@ -844,15 +862,15 @@ impl<'m> MultiPool<'m> {
                 let per = (budget / models.len().max(1)).max(1);
                 let tenants = models
                     .iter()
-                    .zip(traffic)
-                    .map(|(m, t)| match t {
-                        Some(hist) => MacroPool::with_traffic(m, opts, per, workers, hist),
+                    .enumerate()
+                    .map(|(t, m)| match hist(t) {
+                        Some(h) => MacroPool::with_traffic(m, opts, per, workers, h),
                         None => MacroPool::with_capacity_for_workers(m, opts, per, workers),
                     })
                     .collect();
                 MultiPool {
                     tenants,
-                    plan: None,
+                    tenancy_budget: None,
                 }
             }
         }
@@ -868,9 +886,19 @@ impl<'m> MultiPool<'m> {
     }
 
     /// The budget partition (`None` when the floors didn't fit and the
-    /// pool fell back to an even split).
-    pub fn plan(&self) -> Option<&TenantPlan> {
-        self.plan.as_ref()
+    /// pool fell back to an even split).  Diagnostics path: the
+    /// partition is reassembled from the plans the tenants own (one
+    /// clone per tenant here, zero on the construction path).
+    pub fn plan(&self) -> Option<TenantPlan> {
+        let budget = self.tenancy_budget?;
+        Some(TenantPlan {
+            budget,
+            plans: self
+                .tenants
+                .iter()
+                .map(|t| t.plan().expect("tenancy plans are resident").clone())
+                .collect(),
+        })
     }
 
     /// Simulated macros instantiated across every tenant.
@@ -1031,6 +1059,65 @@ mod tests {
         assert_eq!(steady.stall_s, 0.0);
         assert!(steady.events.searches > 0);
         assert!(steady.cycles > 0);
+    }
+
+    #[test]
+    fn steady_state_classify_batch_reuses_scratch_without_reallocating() {
+        // the allocation-free contract at the pool: after the first
+        // batch has grown every scratch buffer to its working shape,
+        // further same-shaped batches keep the exact allocations
+        // (acts/next swap roles per hidden layer — compare as a pair)
+        let model = tiny_model(100, 16, 4, 42);
+        let images = rand_images(16, 100, 7);
+        let pool = MacroPool::new(&model, nominal());
+        assert_eq!(pool.scratch_arenas(), 0, "no arena before the first batch");
+        pool.classify_batch(&images); // warmup builds the arena
+        let grab = |pool: &MacroPool| {
+            let arenas = pool.scratch.lock().unwrap();
+            assert_eq!(arenas.len(), 1, "single-threaded pool keeps one arena");
+            let s = &arenas[0];
+            let mut acts_pair = [
+                s.acts.words().as_ptr() as usize,
+                s.next.words().as_ptr() as usize,
+            ];
+            acts_pair.sort_unstable();
+            (
+                acts_pair,
+                s.rngs.as_ptr() as usize,
+                s.queries.words().as_ptr() as usize,
+                s.seg_fires.as_ptr() as usize,
+                s.votes.as_ptr() as usize,
+                s.m.as_ptr() as usize,
+                s.fires.words().as_ptr() as usize,
+            )
+        };
+        let before = grab(&pool);
+        for _ in 0..3 {
+            pool.classify_batch(&images);
+        }
+        assert_eq!(grab(&pool), before, "steady-state batch reallocated scratch");
+    }
+
+    #[test]
+    fn concurrent_batches_share_the_arena_free_list() {
+        // N workers hammering one pool converge to at most N parked
+        // arenas, and arena recycling never corrupts results
+        let model = tiny_model(64, 8, 3, 2);
+        let images = rand_images(32, 64, 3);
+        let pool = MacroPool::new(&model, nominal());
+        let want = pool.classify_batch_at(&images, 0);
+        std::thread::scope(|sc| {
+            for _ in 0..4 {
+                let (pool, images, want) = (&pool, &images, &want);
+                sc.spawn(move || {
+                    for _ in 0..3 {
+                        assert_eq!(&pool.classify_batch_at(images, 0), want);
+                    }
+                });
+            }
+        });
+        let arenas = pool.scratch_arenas();
+        assert!((1..=4).contains(&arenas), "{arenas} arenas for 4 workers");
     }
 
     #[test]

@@ -15,10 +15,14 @@
 //! behaviour: one reload `Pipeline` per shard, seeded `opts.seed + shard`.
 //!
 //! Each `batch`-sized chunk a worker pulls is one call into the
-//! query-batched search kernel (`CamArray::search_batch_into_rngs`), so
-//! the chunk size doubles as the kernel's query-tile feed: larger chunks
-//! amortise lock acquisitions and store streaming, and — because noise
-//! streams are per-image — any chunking yields bit-identical results.
+//! query-batched search kernel (`CamArray::search_batch_rows_into_rngs`,
+//! running on the runtime-dispatched Hamming backend — `util::bitops`),
+//! so the chunk size doubles as the kernel's query-tile feed: larger
+//! chunks amortise lock acquisitions and store streaming, and — because
+//! noise streams are per-image — any chunking yields bit-identical
+//! results.  Workers allocate nothing at steady state: each pops a
+//! `BatchScratch` arena from the pool's free-list per batch (the pool
+//! converges to one arena per worker — see `MacroPool`).
 //!
 //! Determinism: frozen per-macro variation comes from the pool seed at
 //! construction (replicas are seeded identically), and per-evaluation

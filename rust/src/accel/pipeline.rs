@@ -18,13 +18,102 @@
 
 use crate::analog::transistor::Pvt;
 use crate::bnn::infer::argmax_vote;
-use crate::bnn::mapping::{program_row, segment_query_wide};
+use crate::bnn::mapping::{pack_segment_query, program_row};
 use crate::bnn::model::MappedModel;
 use crate::cam::{CamArray, CamConfig, NoiseMode};
 use crate::sim::EventCounters;
 use crate::util::bitops::{BitMatrix, BitVec};
+use crate::util::rng::Rng;
 
 use super::voltage::{CalibratedPoint, VoltageController};
+
+/// Reusable per-batch scratch for the batched execution engines: flat,
+/// stride-indexed buffers packed once per batch and reused across hidden
+/// loads, output slots, and layers.  The hidden layer's codes become the
+/// next layer's activation block by swapping `acts`/`next`, so the
+/// steady-state batch path performs zero heap allocations once every
+/// buffer has grown to its working shape (pointer-stability tests in
+/// this module and `macro_pool`).
+#[derive(Default)]
+pub(crate) struct BatchScratch {
+    /// Per-image noise streams (serving engines; the reload `Pipeline`
+    /// draws from the array's own stream and leaves this empty).
+    pub(crate) rngs: Vec<Rng>,
+    /// Activations entering the current layer, one packed row per image.
+    pub(crate) acts: BitMatrix,
+    /// The current layer's output codes (swapped with `acts` per layer).
+    pub(crate) next: BitMatrix,
+    /// Query block for the current load / output sweep, one row per image.
+    pub(crate) queries: BitMatrix,
+    /// Flat `[image × n_out]` firing-segment counters (stride `n_out`).
+    pub(crate) seg_fires: Vec<u8>,
+    /// Flat `[image × n_classes]` vote accumulators (stride `n_classes`).
+    pub(crate) votes: Vec<u32>,
+    /// Mismatch counts from the batched search kernel.
+    pub(crate) m: Vec<u32>,
+    /// Packed fires bitmasks from the batched search kernel.
+    pub(crate) fires: BitMatrix,
+}
+
+impl BatchScratch {
+    /// Pack a batch of images as the activation block entering layer 0.
+    pub(crate) fn pack_inputs(&mut self, images: &[BitVec], n_in: usize) {
+        self.acts.reset(images.len(), n_in);
+        for (i, img) in images.iter().enumerate() {
+            assert_eq!(img.len(), n_in, "image width mismatch");
+            self.acts.row_words_mut(i).copy_from_slice(img.words());
+        }
+    }
+
+    /// Pack one segment query per activation row into the query block
+    /// (bit-identical to building `segment_query_wide` per image).
+    pub(crate) fn pack_queries(
+        &mut self,
+        layer: &crate::bnn::model::MappedLayer,
+        seg: usize,
+        width: usize,
+    ) {
+        let n = self.acts.rows();
+        self.queries.reset(n, width);
+        for i in 0..n {
+            pack_segment_query(
+                layer,
+                seg,
+                self.acts.row_words(i),
+                self.queries.row_words_mut(i),
+                width,
+            );
+        }
+    }
+
+    /// Fold the flat segment-fire counters into packed hidden codes in
+    /// `next` (majority of segments, ties fire — MLSA convention).
+    pub(crate) fn fold_majority(&mut self, n_out: usize, n_seg: usize) {
+        let n = self.acts.rows();
+        self.next.reset(n, n_out);
+        for i in 0..n {
+            let fires = &self.seg_fires[i * n_out..(i + 1) * n_out];
+            for (j, &cnt) in fires.iter().enumerate() {
+                if (cnt as usize) * 2 >= n_seg {
+                    self.next.set(i, j, true);
+                }
+            }
+        }
+    }
+
+    /// The per-image (votes, prediction) result vector (the only
+    /// allocations of a steady-state batch — they are the return value).
+    pub(crate) fn results(&self, n_cls: usize) -> Vec<(Vec<u32>, usize)> {
+        self.votes
+            .chunks(n_cls)
+            .map(|v| {
+                let v = v.to_vec();
+                let p = argmax_vote(&v);
+                (v, p)
+            })
+            .collect()
+    }
+}
 
 /// Pipeline construction options.
 #[derive(Clone, Copy, Debug)]
@@ -194,10 +283,10 @@ pub struct Pipeline<'m> {
     plans: Vec<Vec<Load>>,
     /// Which layer's weights are currently resident (load caching).
     resident: Option<(usize, usize)>, // (layer, load index)
-    // scratch buffers (the batched search reshapes them in place; steady
-    // state allocates nothing per batch beyond the query images)
-    scratch_m: Vec<u32>,
-    scratch_fires: BitMatrix,
+    /// Per-batch scratch arena (the batched search and the flat
+    /// activation/query/vote buffers reshape in place; the steady-state
+    /// batch path allocates nothing beyond the returned votes).
+    scratch: BatchScratch,
     // per-category retune/programming attribution (drained by take_stats)
     attr_hidden: CategoryCost,
     attr_output: CategoryCost,
@@ -287,8 +376,7 @@ impl<'m> Pipeline<'m> {
             schedule,
             plans,
             resident: None,
-            scratch_m: Vec::new(),
-            scratch_fires: BitMatrix::default(),
+            scratch: BatchScratch::default(),
             attr_hidden: CategoryCost::default(),
             attr_output: CategoryCost::default(),
         }
@@ -318,14 +406,18 @@ impl<'m> Pipeline<'m> {
         (self.cam.events.retunes, self.cam.events.row_writes)
     }
 
-    /// Execute one hidden layer for a batch; returns the hidden codes.
-    fn run_hidden(&mut self, layer_idx: usize, inputs: &[BitVec]) -> Vec<BitVec> {
+    /// Execute one hidden layer for a batch held in `s.acts`; leaves the
+    /// packed hidden codes in `s.next`.
+    fn run_hidden(&mut self, layer_idx: usize, s: &mut BatchScratch) {
         let before = self.cost_snapshot();
-        let layer = &self.model.layers[layer_idx];
+        let model = self.model;
+        let layer = &model.layers[layer_idx];
+        let n = s.acts.rows();
         let n_out = layer.n_out();
         let n_seg = layer.n_seg();
-        // seg_fires[image][neuron] counts firing segments
-        let mut seg_fires = vec![vec![0u8; n_out]; inputs.len()];
+        // seg_fires[image * n_out + neuron] counts firing segments
+        s.seg_fires.clear();
+        s.seg_fires.resize(n * n_out, 0);
         let n_loads = self.plans[layer_idx].len();
         for load_idx in 0..n_loads {
             self.program_load(layer_idx, load_idx);
@@ -336,46 +428,32 @@ impl<'m> Pipeline<'m> {
             let payload = (load.neuron_hi - load.neuron_lo) as u64
                 * (layer.seg_bounds[load.seg + 1] - layer.seg_bounds[load.seg]) as u64;
             // one batched search per load: the store streams once per
-            // query tile instead of once per image (util::bitops docs)
-            let queries: Vec<BitVec> = inputs
-                .iter()
-                .map(|x| segment_query_wide(layer, load.seg, x, width))
-                .collect();
-            let mut m = std::mem::take(&mut self.scratch_m);
-            let mut fires = std::mem::take(&mut self.scratch_fires);
-            self.cam.search_batch_into(&queries, &mut m, &mut fires);
-            self.cam.events.useful_macs += payload * inputs.len() as u64;
-            for (img_idx, img_fires) in seg_fires.iter_mut().enumerate() {
+            // query tile instead of once per image (util::bitops docs);
+            // the query block is repacked in place, never reallocated
+            s.pack_queries(layer, load.seg, width);
+            self.cam.search_batch_rows_into(&s.queries, &mut s.m, &mut s.fires);
+            self.cam.events.useful_macs += payload * n as u64;
+            for i in 0..n {
                 // rows past the load are cleared and can never fire
-                for row in fires.row_ones(img_idx) {
-                    img_fires[load.neuron_lo + row] += 1;
+                let base = i * n_out + load.neuron_lo;
+                for row in s.fires.row_ones(i) {
+                    s.seg_fires[base + row] += 1;
                 }
             }
-            self.scratch_m = m;
-            self.scratch_fires = fires;
         }
-        let codes = seg_fires
-            .into_iter()
-            .map(|fires| {
-                let mut h = BitVec::zeros(n_out);
-                for (j, &cnt) in fires.iter().enumerate() {
-                    // majority of segments, ties fire (MLSA convention)
-                    h.set(j, (cnt as usize) * 2 >= n_seg);
-                }
-                h
-            })
-            .collect();
+        s.fold_majority(n_out, n_seg);
         let after = self.cost_snapshot();
         self.attr_hidden.retunes += after.0 - before.0;
         self.attr_hidden.row_writes += after.1 - before.1;
-        codes
     }
 
-    /// Execute the output layer sweep for a batch; returns per-image votes.
-    fn run_output(&mut self, hidden: &[BitVec]) -> Vec<Vec<u32>> {
+    /// Execute the output layer sweep for the batch whose hidden codes
+    /// sit in `s.acts`; leaves the flat votes in `s.votes`.
+    fn run_output(&mut self, s: &mut BatchScratch) {
         let before = self.cost_snapshot();
-        let layer_idx = self.model.layers.len() - 1;
-        let layer = self.model.layers.last().unwrap();
+        let model = self.model;
+        let layer_idx = model.layers.len() - 1;
+        let layer = model.layers.last().unwrap();
         let n_cls = layer.n_out();
         assert_eq!(
             self.plans[layer_idx].len(),
@@ -383,35 +461,30 @@ impl<'m> Pipeline<'m> {
             "output layer fits one load"
         );
         self.program_load(layer_idx, 0);
-        // queries are threshold-independent: build once per batch
+        // queries are threshold-independent: pack once per batch
         let width = self.cam.config().width();
-        let queries: Vec<BitVec> = hidden
-            .iter()
-            .map(|h| segment_query_wide(layer, 0, h, width))
-            .collect();
-        let mut votes = vec![vec![0u32; n_cls]; hidden.len()];
+        let n = s.acts.rows();
+        s.pack_queries(layer, 0, width);
+        s.votes.clear();
+        s.votes.resize(n * n_cls, 0);
         // thresholds outer, images inner: one retune per threshold per
         // batch, and one batched search per threshold
         let payload = (layer.n_in() * n_cls) as u64;
         for k in 0..self.schedule.len() {
             let point = self.output_points[k];
             self.cam.set_voltages(point.voltages);
-            let mut m = std::mem::take(&mut self.scratch_m);
-            let mut fires = std::mem::take(&mut self.scratch_fires);
-            self.cam.search_batch_into(&queries, &mut m, &mut fires);
-            self.cam.events.useful_macs += payload * queries.len() as u64;
-            for (img_idx, img_votes) in votes.iter_mut().enumerate() {
-                for c in fires.row_ones(img_idx) {
-                    img_votes[c] += 1;
+            self.cam.search_batch_rows_into(&s.queries, &mut s.m, &mut s.fires);
+            self.cam.events.useful_macs += payload * n as u64;
+            for i in 0..n {
+                let base = i * n_cls;
+                for c in s.fires.row_ones(i) {
+                    s.votes[base + c] += 1;
                 }
             }
-            self.scratch_m = m;
-            self.scratch_fires = fires;
         }
         let after = self.cost_snapshot();
         self.attr_output.retunes += after.0 - before.0;
         self.attr_output.row_writes += after.1 - before.1;
-        votes
     }
 
     /// Host-device I/O cycles per image (see [`io_cycles_per_image`]).
@@ -421,22 +494,23 @@ impl<'m> Pipeline<'m> {
 
     /// Classify a batch: returns (votes, prediction) per image.
     pub fn classify_batch(&mut self, images: &[BitVec]) -> Vec<(Vec<u32>, usize)> {
-        let mut acts: Vec<BitVec> = images.to_vec();
+        // the scratch arena moves out for the duration of the batch (it
+        // is Default-empty to take, so taking allocates nothing)
+        let mut s = std::mem::take(&mut self.scratch);
+        s.pack_inputs(images, self.model.layers[0].n_in());
         for layer_idx in 0..self.model.layers.len() - 1 {
-            acts = self.run_hidden(layer_idx, &acts);
+            self.run_hidden(layer_idx, &mut s);
+            // the hidden codes become the next layer's activation block
+            std::mem::swap(&mut s.acts, &mut s.next);
         }
-        let votes = self.run_output(&acts);
+        self.run_output(&mut s);
         // host I/O shares the device clock domain (RISC-V at the same 25 MHz)
         self.cam
             .clock
             .tick(self.io_cycles_per_image() * images.len() as u64);
-        votes
-            .into_iter()
-            .map(|v| {
-                let p = argmax_vote(&v);
-                (v, p)
-            })
-            .collect()
+        let out = s.results(self.model.n_classes());
+        self.scratch = s;
+        out
     }
 
     /// Classify one image (single-image batch; no amortisation).
@@ -544,6 +618,45 @@ mod tests {
         // drained: second take sees zero cycles
         let s2 = pipe.take_stats(0);
         assert_eq!(s2.cycles, 0);
+    }
+
+    #[test]
+    fn steady_state_batches_reuse_scratch_without_reallocating() {
+        // the allocation-free contract at the reload engine: after the
+        // first batch has grown every scratch buffer to its working
+        // shape, further same-shaped batches keep the exact allocations
+        // (acts/next swap roles per layer, so compare them as a pair)
+        let model = tiny_model(100, 16, 4, 42);
+        let mut pipe = Pipeline::new(
+            &model,
+            PipelineOptions {
+                noise: NoiseMode::Nominal,
+                ..Default::default()
+            },
+        );
+        let images = rand_images(12, 100, 7);
+        pipe.classify_batch(&images); // warmup
+        let grab = |p: &Pipeline| {
+            let s = &p.scratch;
+            let mut acts_pair = [
+                s.acts.words().as_ptr() as usize,
+                s.next.words().as_ptr() as usize,
+            ];
+            acts_pair.sort_unstable();
+            (
+                acts_pair,
+                s.queries.words().as_ptr() as usize,
+                s.seg_fires.as_ptr() as usize,
+                s.votes.as_ptr() as usize,
+                s.m.as_ptr() as usize,
+                s.fires.words().as_ptr() as usize,
+            )
+        };
+        let before = grab(&pipe);
+        for _ in 0..3 {
+            pipe.classify_batch(&images);
+        }
+        assert_eq!(grab(&pipe), before, "steady-state batch reallocated scratch");
     }
 
     #[test]

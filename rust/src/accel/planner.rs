@@ -381,19 +381,21 @@ impl PlacementPlan {
 
 /// One tenant's shape and traffic, as seen by [`plan_tenants`].
 #[derive(Clone, Debug)]
-pub struct TenantSpec {
+pub struct TenantSpec<'t> {
     /// Programmed rows per hidden (layer, load) — `MacroPool` shape.
     pub hidden_load_rows: Vec<Vec<usize>>,
     /// Operating-point class per schedule position (see [`plan_traffic`]).
     pub schedule_points: Vec<usize>,
-    /// Measured per-position access histogram (`None` = uniform).
-    pub traffic: Option<Vec<u64>>,
+    /// Measured per-position access histogram (`None` = uniform),
+    /// borrowed from the caller — specs are planning inputs, so they
+    /// never need to own a copy.
+    pub traffic: Option<&'t [u64]>,
     /// Relative batch-traffic share of this tenant (surplus allotment);
     /// non-positive shares are treated as equal weight.
     pub share: f64,
 }
 
-impl TenantSpec {
+impl TenantSpec<'_> {
     fn hidden(&self) -> usize {
         self.hidden_load_rows.iter().map(Vec::len).sum()
     }
@@ -453,7 +455,7 @@ impl TenantPlan {
 /// (each macro goes to the tenant maximising `share / (extra + 1)`, ties
 /// to the lowest tenant index), capped at each tenant's
 /// [`TenantSpec::max_useful_budget`].
-pub fn plan_tenants(specs: &[TenantSpec], budget: usize, workers: usize) -> Option<TenantPlan> {
+pub fn plan_tenants(specs: &[TenantSpec<'_>], budget: usize, workers: usize) -> Option<TenantPlan> {
     let mins: Vec<usize> = specs.iter().map(TenantSpec::min_budget).collect();
     let maxs: Vec<usize> = specs
         .iter()
@@ -499,7 +501,7 @@ pub fn plan_tenants(specs: &[TenantSpec], budget: usize, workers: usize) -> Opti
             plan_traffic(
                 &s.hidden_load_rows,
                 &s.schedule_points,
-                s.traffic.as_deref(),
+                s.traffic,
                 b,
                 workers,
             )
@@ -705,7 +707,7 @@ mod tests {
         assert!(d.contains("9/33"), "{d}");
     }
 
-    fn spec(rows: Vec<Vec<usize>>, sched: usize, share: f64) -> TenantSpec {
+    fn spec(rows: Vec<Vec<usize>>, sched: usize, share: f64) -> TenantSpec<'static> {
         TenantSpec {
             hidden_load_rows: rows,
             schedule_points: (0..sched).collect(),

@@ -16,7 +16,7 @@
 //!   compare against.
 
 use crate::bnn::model::{MappedLayer, MappedModel};
-use crate::util::bitops::{BitMatrix, BitVec};
+use crate::util::bitops::{active_backend, BitMatrix, BitVec};
 use crate::util::json::{obj, Json};
 use crate::util::rng::Rng;
 use crate::util::stats::Summary;
@@ -100,6 +100,8 @@ impl BenchResult {
             name: self.name.clone(),
             ns_per_iter: self.mean_ns,
             throughput: items_per_iter.map(|n| self.throughput(n)),
+            backend: active_backend().name(),
+            quick: quick_mode(),
         }
     }
 }
@@ -111,6 +113,15 @@ pub struct BenchRecord {
     pub ns_per_iter: f64,
     /// Items per second, when the bench has a natural item count.
     pub throughput: Option<f64>,
+    /// The Hamming backend active when the record was taken
+    /// (`util::bitops::active_backend`) — perf trajectories are only
+    /// comparable within one backend, so the artifact carries it.
+    pub backend: &'static str,
+    /// True when the record came from a [`quick_mode`] smoke run:
+    /// single-iteration samples, persisted for artifact continuity but
+    /// never valid as a regression baseline ([`compare_baseline`] skips
+    /// them).
+    pub quick: bool,
 }
 
 impl BenchRecord {
@@ -121,6 +132,8 @@ impl BenchRecord {
             name: name.to_string(),
             ns_per_iter,
             throughput,
+            backend: active_backend().name(),
+            quick: quick_mode(),
         }
     }
 }
@@ -157,6 +170,8 @@ pub fn emit_json(path: impl AsRef<Path>, records: &[BenchRecord]) -> std::io::Re
                     ("name", Json::Str(r.name.clone())),
                     ("ns_per_iter", num(r.ns_per_iter)),
                     ("throughput", r.throughput.map(num).unwrap_or(Json::Null)),
+                    ("backend", Json::Str(r.backend.to_string())),
+                    ("quick", Json::Bool(r.quick)),
                 ])
             })
             .collect(),
@@ -165,6 +180,76 @@ pub fn emit_json(path: impl AsRef<Path>, records: &[BenchRecord]) -> std::io::Re
     std::fs::write(path, arr.to_string() + "\n")?;
     println!("bench results -> {}", path.display());
     Ok(())
+}
+
+/// Gate fresh records against a previously committed baseline artifact
+/// (the [`emit_json`] format): returns one message per regression — a
+/// record named in `names` whose throughput fell more than `tolerance`
+/// (a fraction of the baseline, e.g. `0.2` = 20%) below the baseline
+/// entry of the same name.
+///
+/// Skipped rather than gated (first runs and incomparable history never
+/// fail): a missing/unparsable baseline file; baseline entries that are
+/// missing, have no finite throughput, were taken in [`quick_mode`]
+/// (single-iteration smoke samples), or ran on a *different Hamming
+/// backend* than the fresh record — throughput is only comparable
+/// within one backend, and an old-format entry with no backend field is
+/// treated as incomparable.  Call this *before* [`emit_json`]
+/// overwrites the baseline with the fresh records.
+pub fn compare_baseline(
+    path: impl AsRef<Path>,
+    records: &[BenchRecord],
+    names: &[&str],
+    tolerance: f64,
+) -> Vec<String> {
+    let Ok(text) = std::fs::read_to_string(path.as_ref()) else {
+        return Vec::new();
+    };
+    let Ok(base) = Json::parse(&text) else {
+        return Vec::new();
+    };
+    let Some(entries) = base.as_arr() else {
+        return Vec::new();
+    };
+    let mut regressions = Vec::new();
+    for &name in names {
+        let Some(rec) = records.iter().find(|r| r.name == name) else {
+            continue;
+        };
+        let Some(fresh) = rec.throughput.filter(|t| t.is_finite()) else {
+            continue;
+        };
+        let Some(entry) = entries
+            .iter()
+            .find(|e| e.get("name").and_then(Json::as_str) == Some(name))
+        else {
+            continue;
+        };
+        // quick-mode smoke samples and cross-backend baselines are not
+        // comparable — skip, never mis-gate
+        if entry.get("quick") == Some(&Json::Bool(true)) {
+            continue;
+        }
+        if entry.get("backend").and_then(Json::as_str) != Some(rec.backend) {
+            continue;
+        }
+        let Some(old) = entry
+            .get("throughput")
+            .and_then(Json::as_f64)
+            .filter(|t| t.is_finite() && *t > 0.0)
+        else {
+            continue;
+        };
+        if fresh < old * (1.0 - tolerance) {
+            regressions.push(format!(
+                "{name}: {fresh:.3e} items/s is more than {:.0}% below the \
+                 committed baseline's {old:.3e} (backend {})",
+                tolerance * 100.0,
+                rec.backend
+            ));
+        }
+    }
+    regressions
 }
 
 fn fmt_ns(ns: f64) -> String {
@@ -358,6 +443,69 @@ mod tests {
         let rate = arr[0].get("throughput").unwrap().as_f64().unwrap();
         assert!((rate - 128.0 / 250.5e-9).abs() / rate < 1e-12);
         assert_eq!(arr[1].get("throughput"), Some(&Json::Null));
+        // every record carries the active backend name + quick flag
+        let backend = crate::util::bitops::active_backend().name();
+        for e in arr {
+            assert_eq!(e.get("backend").unwrap().as_str(), Some(backend));
+            assert_eq!(e.get("quick"), Some(&Json::Bool(quick_mode())));
+        }
+        let _ = std::fs::remove_file(&path);
+    }
+
+    /// Env-independent record (tests must behave the same under
+    /// PICBNN_BENCH_QUICK, which `BenchRecord::new` would latch).
+    fn full_record(name: &str, throughput: Option<f64>) -> BenchRecord {
+        BenchRecord {
+            name: name.to_string(),
+            ns_per_iter: 10.0,
+            throughput,
+            backend: crate::util::bitops::active_backend().name(),
+            quick: false,
+        }
+    }
+
+    #[test]
+    fn compare_baseline_flags_only_real_regressions() {
+        let path = std::env::temp_dir().join("picbnn_bench_baseline_test.json");
+        // no baseline on disk: nothing to compare against, no failures
+        let _ = std::fs::remove_file(&path);
+        let fresh = vec![
+            full_record("kern_fast", Some(1000.0)),
+            full_record("kern_slow", Some(100.0)),
+            full_record("kern_quick_base", Some(100.0)),
+            full_record("kern_other_backend", Some(100.0)),
+            full_record("kern_new", Some(5.0)),
+            full_record("no_rate", None),
+        ];
+        assert!(compare_baseline(&path, &fresh, &["kern_fast"], 0.2).is_empty());
+        // commit a baseline, then regress one record beyond 20%; quick
+        // and cross-backend baseline entries must be skipped even when
+        // the fresh number is far below them
+        let mut baseline = vec![
+            full_record("kern_fast", Some(1050.0)), // within 20%
+            full_record("kern_slow", Some(500.0)),  // 5x regression
+            full_record("kern_quick_base", Some(500.0)),
+            full_record("kern_other_backend", Some(500.0)),
+            full_record("gone", Some(1.0)), // not re-measured
+        ];
+        baseline[2].quick = true; // smoke sample, not a valid baseline
+        baseline[3].backend = "other"; // different Hamming backend
+        emit_json(&path, &baseline).unwrap();
+        let names = [
+            "kern_fast",
+            "kern_slow",
+            "kern_quick_base",
+            "kern_other_backend",
+            "kern_new",
+            "no_rate",
+            "gone",
+        ];
+        let msgs = compare_baseline(&path, &fresh, &names, 0.2);
+        assert_eq!(msgs.len(), 1, "{msgs:?}");
+        assert!(msgs[0].starts_with("kern_slow:"), "{msgs:?}");
+        // unparsable baseline: skipped, never a panic
+        std::fs::write(&path, "not json").unwrap();
+        assert!(compare_baseline(&path, &fresh, &["kern_slow"], 0.2).is_empty());
         let _ = std::fs::remove_file(&path);
     }
 

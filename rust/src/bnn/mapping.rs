@@ -12,7 +12,7 @@
 //! The pad drive pattern is all-'1' (+1 on every pad searchline), so a
 //! matching pad stores '1' and a mismatching pad stores '0'.
 
-use crate::util::bitops::BitVec;
+use crate::util::bitops::{copy_bits, words_for, BitVec};
 
 use super::model::MappedLayer;
 
@@ -58,6 +58,36 @@ pub fn segment_query_wide(
     let mut q = BitVec::ones(width);
     q.write_range(0, activations, lo, payload);
     q
+}
+
+/// [`segment_query_wide`] packed straight into a reusable query-block
+/// row — the allocation-free twin of the `BitVec`-returning builder,
+/// bit-identical words by construction.  `acts` is the packed activation
+/// vector (e.g. one row of a batch `BitMatrix`); `out` is one row of a
+/// query block with `width` logical columns (`words_for(width)` words).
+/// Spare columns drive '1' and the tail bits of the last word stay
+/// clear, exactly as `BitVec::ones(width)` would leave them.
+pub fn pack_segment_query(
+    layer: &MappedLayer,
+    seg: usize,
+    acts: &[u64],
+    out: &mut [u64],
+    width: usize,
+) {
+    debug_assert!(width >= layer.seg_width);
+    debug_assert_eq!(out.len(), words_for(width));
+    let lo = layer.seg_bounds[seg];
+    let payload = layer.seg_bounds[seg + 1] - lo;
+    for w in out.iter_mut() {
+        *w = !0u64;
+    }
+    let tail = width % 64;
+    if tail != 0 {
+        if let Some(last) = out.last_mut() {
+            *last &= (1u64 << tail) - 1;
+        }
+    }
+    copy_bits(acts, lo, payload, out, 0);
 }
 
 /// The expected mismatch count of (row, query) for a neuron segment:
@@ -134,6 +164,25 @@ mod tests {
         let row = program_row(l, 0, 2);
         let query = segment_query(l, 0, &x);
         assert_eq!(hamming_words(row.words(), query.words()), 0);
+    }
+
+    #[test]
+    fn pack_segment_query_matches_the_allocating_builder() {
+        // the packed twin must produce bit-identical words, including the
+        // spare-column drive and the masked tail of the last word
+        use crate::util::bitops::words_for;
+        let m = tiny_model(100, 16, 4, 12);
+        for (li, l) in m.layers.iter().enumerate() {
+            let x = rand_act(l.n_in(), 40 + li as u64);
+            for width in [l.seg_width, l.seg_width + 37, 2 * l.seg_width] {
+                for seg in 0..l.n_seg() {
+                    let want = segment_query_wide(l, seg, &x, width);
+                    let mut out = vec![0xDEAD_BEEF_DEAD_BEEFu64; words_for(width)];
+                    pack_segment_query(l, seg, x.words(), &mut out, width);
+                    assert_eq!(out, want.words(), "layer {li} seg {seg} width {width}");
+                }
+            }
+        }
     }
 
     #[test]

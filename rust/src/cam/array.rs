@@ -25,8 +25,12 @@
 //!
 //! [`CamArray::search_batch_into_rngs`] amortises rails/model reads and
 //! streams the stored rows once per query tile
-//! (`BitMatrix::hamming_all_batch`), charging exactly one device cycle
-//! and one cycle-global noise draw per query.  The batch kernel is
+//! (`BitMatrix::hamming_all_batch`, dispatched to the runtime-selected
+//! Hamming backend — see `util::bitops`), charging exactly one device
+//! cycle and one cycle-global noise draw per query.  The
+//! `search_batch_rows_*` twins take the queries as rows of one packed
+//! `BitMatrix` so the execution engines can reuse a query block across
+//! batches (the allocation-free path); both forms are bit-identical.  The batch kernel is
 //! **pinned to the sequential path's RNG draw order**: for each query, the
 //! cycle-global draw comes first, then metastable-band rows draw in
 //! ascending row order, all from that query's own stream.  This is why
@@ -98,6 +102,30 @@ fn row_fires(plan: &CyclePlan, cache: &RowCache, m: u32, r: usize, rng: &mut Rng
 enum BatchRngs<'a> {
     Shared(&'a mut Rng),
     PerQuery(&'a mut [Rng]),
+}
+
+/// Query operands of a batched search: independent `BitVec`s, or the
+/// rows of one packed `BitMatrix` (the allocation-free engines reuse a
+/// query block across batches instead of building per-query `BitVec`s).
+enum Queries<'a> {
+    Slice(&'a [BitVec]),
+    Block(&'a BitMatrix),
+}
+
+impl Queries<'_> {
+    fn len(&self) -> usize {
+        match self {
+            Queries::Slice(q) => q.len(),
+            Queries::Block(m) => m.rows(),
+        }
+    }
+
+    fn words(&self, i: usize) -> &[u64] {
+        match self {
+            Queries::Slice(q) => q[i].words(),
+            Queries::Block(m) => m.row_words(i),
+        }
+    }
 }
 
 /// The simulated PiC-BNN macro.
@@ -433,7 +461,26 @@ impl CamArray {
         fires: &mut BitMatrix,
     ) {
         assert_eq!(queries.len(), rngs.len(), "one noise stream per query");
-        self.search_batch_core(queries, BatchRngs::PerQuery(rngs), mismatches, fires);
+        let q = Queries::Slice(queries);
+        self.search_batch_core(q, BatchRngs::PerQuery(rngs), mismatches, fires);
+    }
+
+    /// [`CamArray::search_batch_into_rngs`] with the queries packed as
+    /// the rows of a [`BitMatrix`] (`queries.rows()` queries of
+    /// `queries.cols() ==` width bits) — the allocation-free batch path:
+    /// the execution engines pack one reusable query block per batch
+    /// instead of building per-query `BitVec`s.  Results, accounting,
+    /// and RNG draw order are bit-identical to the `&[BitVec]` entry.
+    pub fn search_batch_rows_into_rngs(
+        &mut self,
+        queries: &BitMatrix,
+        rngs: &mut [Rng],
+        mismatches: &mut Vec<u32>,
+        fires: &mut BitMatrix,
+    ) {
+        assert_eq!(queries.rows(), rngs.len(), "one noise stream per query");
+        let q = Queries::Block(queries);
+        self.search_batch_core(q, BatchRngs::PerQuery(rngs), mismatches, fires);
     }
 
     /// [`CamArray::search_batch_into_rngs`] drawing every query's noise
@@ -446,21 +493,43 @@ impl CamArray {
         fires: &mut BitMatrix,
     ) {
         let mut rng = self.rng.clone();
-        self.search_batch_core(queries, BatchRngs::Shared(&mut rng), mismatches, fires);
+        let q = Queries::Slice(queries);
+        self.search_batch_core(q, BatchRngs::Shared(&mut rng), mismatches, fires);
+        self.rng = rng;
+    }
+
+    /// [`CamArray::search_batch_rows_into_rngs`] drawing from the
+    /// array's own stream (the reload `Pipeline`'s batch path).
+    pub fn search_batch_rows_into(
+        &mut self,
+        queries: &BitMatrix,
+        mismatches: &mut Vec<u32>,
+        fires: &mut BitMatrix,
+    ) {
+        let mut rng = self.rng.clone();
+        let q = Queries::Block(queries);
+        self.search_batch_core(q, BatchRngs::Shared(&mut rng), mismatches, fires);
         self.rng = rng;
     }
 
     fn search_batch_core(
         &mut self,
-        queries: &[BitVec],
+        queries: Queries<'_>,
         mut rngs: BatchRngs<'_>,
         mismatches: &mut Vec<u32>,
         fires: &mut BitMatrix,
     ) {
         let rows = self.config.rows();
         let nq = queries.len();
-        for q in queries {
-            assert_eq!(q.len(), self.config.width(), "query width mismatch");
+        match &queries {
+            Queries::Slice(qs) => {
+                for q in *qs {
+                    assert_eq!(q.len(), self.config.width(), "query width mismatch");
+                }
+            }
+            Queries::Block(m) => {
+                assert_eq!(m.cols(), self.config.width(), "query width mismatch");
+            }
         }
         fires.reset(nq, rows);
         mismatches.clear();
@@ -473,19 +542,21 @@ impl CamArray {
         // pass 1 — mismatch counts (RNG-free): stream the store once per
         // query tile over the programmed prefix; arrays with cleared holes
         // (diagnostics only) fall back to a row-major loop
-        match self.cache.prefix {
-            Some(live) => {
-                self.store
-                    .hamming_rows_batch_into(live, queries, mismatches, rows);
+        match (self.cache.prefix, &queries) {
+            (Some(live), Queries::Slice(qs)) => {
+                self.store.hamming_rows_batch_into(live, qs, mismatches, rows);
             }
-            None => {
+            (Some(live), Queries::Block(m)) => {
+                self.store.hamming_rows_batch_from(live, m, mismatches, rows);
+            }
+            (None, _) => {
                 for r in 0..rows {
                     if !self.row_valid[r] {
                         continue;
                     }
                     let row = self.store.row_words(r);
-                    for (qi, q) in queries.iter().enumerate() {
-                        mismatches[qi * rows + r] = hamming_words(row, q.words());
+                    for qi in 0..nq {
+                        mismatches[qi * rows + r] = hamming_words(row, queries.words(qi));
                     }
                 }
             }
@@ -778,6 +849,43 @@ mod tests {
         // searches still agree
         let probe = rand_bits(512, &mut rng);
         assert_eq!(seq.search(&probe), bat.search(&probe));
+    }
+
+    #[test]
+    fn batch_search_query_block_matches_bitvec_queries() {
+        // the allocation-free entry (queries as rows of one BitMatrix)
+        // must be bit-identical to the BitVec entry: counts, fires, RNG
+        // stream positions, and accounting — in both noise modes
+        for noise in [NoiseMode::Nominal, NoiseMode::Analog] {
+            let (mut a, mut b) = twin_arrays(noise, 23, 18);
+            let mut rng = Rng::new(61, 2);
+            let queries: Vec<BitVec> = (0..7).map(|_| rand_bits(512, &mut rng)).collect();
+            let block = BitMatrix::from_rows(&queries);
+            let mut rngs_a: Vec<Rng> = (0..7).map(|i| Rng::new(9, i)).collect();
+            let mut rngs_b = rngs_a.clone();
+            let (mut am, mut af) = (Vec::new(), BitMatrix::default());
+            let (mut bm, mut bf) = (Vec::new(), BitMatrix::default());
+            a.search_batch_into_rngs(&queries, &mut rngs_a, &mut am, &mut af);
+            b.search_batch_rows_into_rngs(&block, &mut rngs_b, &mut bm, &mut bf);
+            assert_eq!(am, bm, "{noise:?}: mismatch counts");
+            for q in 0..7 {
+                for r in 0..256 {
+                    assert_eq!(af.get(q, r), bf.get(q, r), "{noise:?}: fires q{q} r{r}");
+                }
+            }
+            for (ra, rb) in rngs_a.iter().zip(&rngs_b) {
+                assert_eq!(format!("{ra:?}"), format!("{rb:?}"), "{noise:?}: rng stream");
+            }
+            assert_eq!(a.clock.cycles, b.clock.cycles, "{noise:?}");
+            assert_eq!(a.events, b.events, "{noise:?}");
+            // shared-stream twin entry as well
+            let (mut sm, mut sf) = (Vec::new(), BitMatrix::default());
+            let (mut tm, mut tf) = (Vec::new(), BitMatrix::default());
+            a.search_batch_into(&queries, &mut sm, &mut sf);
+            b.search_batch_rows_into(&block, &mut tm, &mut tf);
+            assert_eq!(sm, tm, "{noise:?}: shared-stream counts");
+            assert_eq!(a.events, b.events, "{noise:?}: shared-stream events");
+        }
     }
 
     #[test]

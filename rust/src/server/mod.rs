@@ -206,11 +206,12 @@ impl<'m> MultiServer<'m> {
         policy: BatchPolicy,
         max_macros: usize,
     ) -> Self {
-        Self::with_shares(models, opts, policy, max_macros, &vec![1.0; models.len()])
+        Self::with_shares(models, opts, policy, max_macros, &[])
     }
 
     /// Server with explicit per-tenant traffic shares: surplus macro
-    /// budget follows the shares (see `accel::planner::plan_tenants`).
+    /// budget follows the shares (see `accel::planner::plan_tenants`);
+    /// an empty slice means equal shares.
     pub fn with_shares(
         models: &[&'m MappedModel],
         opts: PipelineOptions,

@@ -24,6 +24,36 @@
 //! each per-image RNG stream in exactly the order the sequential path
 //! used (see `cam/array.rs`); keep the count pass separate from any
 //! RNG-consuming pass when extending this module.
+//!
+//! ## Runtime-dispatched popcount backends
+//!
+//! The XOR/popcount primitive behind every Hamming entry point runs on
+//! one of three [`HammingBackend`]s, selected **once per process** (an
+//! enum cached in a `OnceLock` — no trait objects on the hot path):
+//!
+//! * `Scalar` — the per-word `count_ones` loop, the portable reference
+//!   every other backend is property-tested against;
+//! * `Swar` — a 4×u64-unrolled loop over the branch-free SWAR popcount
+//!   (no target features required; the unroll breaks the accumulator
+//!   dependency chain);
+//! * `Avx2` — 256-bit XOR + nibble-LUT popcount via `std::arch`
+//!   (`_mm256_shuffle_epi8` + `_mm256_sad_epu8`), processing four words
+//!   per lane with the accumulator tiling widened accordingly.
+//!
+//! Selection prefers AVX2 when `is_x86_feature_detected!("avx2")` holds
+//! and falls back to SWAR otherwise.  All backends compute *exact*
+//! popcounts, so results are bit-identical by construction (see the
+//! `*_with` entry points and the backend property tests).
+//!
+//! **Forcing a backend when bisecting perf:** set
+//! `PICBNN_FORCE_BACKEND=scalar|swar|avx2` before the process starts
+//! (the choice is latched on first use).  Forcing `avx2` on a host
+//! without AVX2 quietly downgrades to `swar` — executing the kernel
+//! would be undefined behaviour — so A/B tooling should read the backend
+//! actually used from [`active_backend`] (bench records persist it).
+//! Unknown values fall back to auto-detection.  The `unsafe` surface is
+//! confined to `#[target_feature(enable = "avx2")]` functions that are
+//! only reachable behind the runtime CPUID check.
 
 /// Number of u64 words needed for `n` bits.
 #[inline]
@@ -242,10 +272,106 @@ pub fn copy_bits(src: &[u64], src_lo: usize, len: usize, dst: &mut [u64], dst_lo
     }
 }
 
-/// Hamming distance between equal-length word slices.
+// ---------------------------------------------------------------------
+// Runtime-dispatched Hamming backends (module docs)
+// ---------------------------------------------------------------------
+
+/// Popcount backend behind every Hamming entry point (module docs).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum HammingBackend {
+    /// Portable per-word `count_ones` loop — the bit-exact reference.
+    Scalar,
+    /// 4×u64-unrolled branch-free SWAR popcount (no target features).
+    Swar,
+    /// 256-bit XOR + nibble-LUT popcount (`std::arch`), gated at runtime
+    /// on `is_x86_feature_detected!("avx2")`.
+    Avx2,
+}
+
+impl HammingBackend {
+    /// Stable lower-case name (`PICBNN_FORCE_BACKEND` values; persisted
+    /// in bench records).
+    pub fn name(self) -> &'static str {
+        match self {
+            HammingBackend::Scalar => "scalar",
+            HammingBackend::Swar => "swar",
+            HammingBackend::Avx2 => "avx2",
+        }
+    }
+}
+
+/// Parse a `PICBNN_FORCE_BACKEND` value; `None` = auto-detect.
+fn parse_backend(s: &str) -> Option<HammingBackend> {
+    match s {
+        "scalar" => Some(HammingBackend::Scalar),
+        "swar" => Some(HammingBackend::Swar),
+        "avx2" => Some(HammingBackend::Avx2),
+        _ => None,
+    }
+}
+
+/// Whether the AVX2 kernels may execute on this host (runtime CPUID).
+fn avx2_available() -> bool {
+    #[cfg(target_arch = "x86_64")]
+    {
+        is_x86_feature_detected!("avx2")
+    }
+    #[cfg(not(target_arch = "x86_64"))]
+    {
+        false
+    }
+}
+
+/// Every backend that can run on this host, scalar first (the reference
+/// the backend property tests compare against).
+pub fn available_backends() -> Vec<HammingBackend> {
+    let mut v = vec![HammingBackend::Scalar, HammingBackend::Swar];
+    if avx2_available() {
+        v.push(HammingBackend::Avx2);
+    }
+    v
+}
+
+static ACTIVE_BACKEND: std::sync::OnceLock<HammingBackend> = std::sync::OnceLock::new();
+
+/// The backend every dispatching entry point runs on, selected once per
+/// process: `PICBNN_FORCE_BACKEND` if set (an unrunnable or unknown
+/// value downgrades — module docs), else AVX2 when detected, else SWAR.
+pub fn active_backend() -> HammingBackend {
+    *ACTIVE_BACKEND.get_or_init(|| {
+        let forced = std::env::var("PICBNN_FORCE_BACKEND")
+            .ok()
+            .and_then(|v| parse_backend(&v));
+        match forced {
+            Some(HammingBackend::Avx2) if !avx2_available() => HammingBackend::Swar,
+            Some(b) => b,
+            None if avx2_available() => HammingBackend::Avx2,
+            None => HammingBackend::Swar,
+        }
+    })
+}
+
+/// Explicit-backend entry points refuse backends the host cannot run
+/// (the alternative is undefined behaviour, not a wrong answer).
+fn assert_backend_runnable(backend: HammingBackend) {
+    assert!(
+        backend != HammingBackend::Avx2 || avx2_available(),
+        "AVX2 backend requested on a host without AVX2 (pick from available_backends())"
+    );
+}
+
+/// Branch-free SWAR popcount (Hacker's Delight §5-1) — exact for every
+/// input; the `Swar` backend's primitive.
 #[inline]
-pub fn hamming_words(a: &[u64], b: &[u64]) -> u32 {
-    debug_assert_eq!(a.len(), b.len());
+const fn popcount64(x: u64) -> u32 {
+    let x = x - ((x >> 1) & 0x5555_5555_5555_5555);
+    let x = (x & 0x3333_3333_3333_3333) + ((x >> 2) & 0x3333_3333_3333_3333);
+    let x = (x + (x >> 4)) & 0x0F0F_0F0F_0F0F_0F0F;
+    (x.wrapping_mul(0x0101_0101_0101_0101) >> 56) as u32
+}
+
+#[inline]
+fn hamming_words_scalar(a: &[u64], b: &[u64]) -> u32 {
     let mut acc = 0u32;
     for (x, y) in a.iter().zip(b) {
         acc += (x ^ y).count_ones();
@@ -253,13 +379,26 @@ pub fn hamming_words(a: &[u64], b: &[u64]) -> u32 {
     acc
 }
 
-/// Hamming distance over driven columns only: popcount((a ^ b) & mask)
-/// (the ternary-search primitive — masked columns never open a discharge
-/// path, see `cam::ops::masked_search`).
+fn hamming_words_swar(a: &[u64], b: &[u64]) -> u32 {
+    let n = a.len().min(b.len());
+    let chunks = n / 4;
+    let mut acc = [0u32; 4];
+    for c in 0..chunks {
+        let i = 4 * c;
+        acc[0] += popcount64(a[i] ^ b[i]);
+        acc[1] += popcount64(a[i + 1] ^ b[i + 1]);
+        acc[2] += popcount64(a[i + 2] ^ b[i + 2]);
+        acc[3] += popcount64(a[i + 3] ^ b[i + 3]);
+    }
+    let mut t = acc[0] + acc[1] + acc[2] + acc[3];
+    for i in 4 * chunks..n {
+        t += popcount64(a[i] ^ b[i]);
+    }
+    t
+}
+
 #[inline]
-pub fn hamming_words_masked(a: &[u64], b: &[u64], mask: &[u64]) -> u32 {
-    debug_assert_eq!(a.len(), b.len());
-    debug_assert_eq!(a.len(), mask.len());
+fn hamming_words_masked_scalar(a: &[u64], b: &[u64], mask: &[u64]) -> u32 {
     let mut acc = 0u32;
     for ((x, y), k) in a.iter().zip(b).zip(mask) {
         acc += ((x ^ y) & k).count_ones();
@@ -267,10 +406,308 @@ pub fn hamming_words_masked(a: &[u64], b: &[u64], mask: &[u64]) -> u32 {
     acc
 }
 
+fn hamming_words_masked_swar(a: &[u64], b: &[u64], mask: &[u64]) -> u32 {
+    let n = a.len().min(b.len()).min(mask.len());
+    let chunks = n / 4;
+    let mut acc = [0u32; 4];
+    for c in 0..chunks {
+        let i = 4 * c;
+        acc[0] += popcount64((a[i] ^ b[i]) & mask[i]);
+        acc[1] += popcount64((a[i + 1] ^ b[i + 1]) & mask[i + 1]);
+        acc[2] += popcount64((a[i + 2] ^ b[i + 2]) & mask[i + 2]);
+        acc[3] += popcount64((a[i + 3] ^ b[i + 3]) & mask[i + 3]);
+    }
+    let mut t = acc[0] + acc[1] + acc[2] + acc[3];
+    for i in 4 * chunks..n {
+        t += popcount64((a[i] ^ b[i]) & mask[i]);
+    }
+    t
+}
+
+/// AVX2 kernels: 256-bit XOR + nibble-LUT popcount (Mula's scheme —
+/// `_mm256_shuffle_epi8` per nibble, byte sums folded through
+/// `_mm256_sad_epu8` into four u64 lanes).  Every function here is
+/// `unsafe` + `#[target_feature(enable = "avx2")]` and is reachable only
+/// behind the runtime `avx2_available()` check — the module's single
+/// safety obligation.  Word tails shorter than one 256-bit lane fall to
+/// the scalar loop, so any slice length is exact.
+#[cfg(target_arch = "x86_64")]
+mod avx2 {
+    use core::arch::x86_64::*;
+
+    /// Byte-wise popcount of one 256-bit lane.
+    #[inline]
+    #[target_feature(enable = "avx2")]
+    unsafe fn popcount_bytes(x: __m256i) -> __m256i {
+        let lut = _mm256_setr_epi8(
+            0, 1, 1, 2, 1, 2, 2, 3, 1, 2, 2, 3, 2, 3, 3, 4, 0, 1, 1, 2, 1, 2, 2, 3, 1, 2, 2, 3,
+            2, 3, 3, 4,
+        );
+        let low = _mm256_set1_epi8(0x0f);
+        let lo = _mm256_and_si256(x, low);
+        let hi = _mm256_and_si256(_mm256_srli_epi32::<4>(x), low);
+        _mm256_add_epi8(_mm256_shuffle_epi8(lut, lo), _mm256_shuffle_epi8(lut, hi))
+    }
+
+    /// Sum of the four u64 lanes of a `_mm256_sad_epu8` accumulator.
+    #[inline]
+    #[target_feature(enable = "avx2")]
+    unsafe fn hsum_epi64(acc: __m256i) -> u64 {
+        let mut lanes = [0u64; 4];
+        _mm256_storeu_si256(lanes.as_mut_ptr() as *mut __m256i, acc);
+        lanes[0] + lanes[1] + lanes[2] + lanes[3]
+    }
+
+    #[target_feature(enable = "avx2")]
+    pub(super) unsafe fn hamming_words(a: &[u64], b: &[u64]) -> u32 {
+        let n = a.len().min(b.len());
+        let chunks = n / 4;
+        let zero = _mm256_setzero_si256();
+        let mut acc = zero;
+        for c in 0..chunks {
+            let va = _mm256_loadu_si256(a.as_ptr().add(4 * c) as *const __m256i);
+            let vb = _mm256_loadu_si256(b.as_ptr().add(4 * c) as *const __m256i);
+            let cnt = popcount_bytes(_mm256_xor_si256(va, vb));
+            acc = _mm256_add_epi64(acc, _mm256_sad_epu8(cnt, zero));
+        }
+        let mut t = hsum_epi64(acc) as u32;
+        for i in 4 * chunks..n {
+            t += (a[i] ^ b[i]).count_ones();
+        }
+        t
+    }
+
+    #[target_feature(enable = "avx2")]
+    pub(super) unsafe fn hamming_words_masked(a: &[u64], b: &[u64], mask: &[u64]) -> u32 {
+        let n = a.len().min(b.len()).min(mask.len());
+        let chunks = n / 4;
+        let zero = _mm256_setzero_si256();
+        let mut acc = zero;
+        for c in 0..chunks {
+            let va = _mm256_loadu_si256(a.as_ptr().add(4 * c) as *const __m256i);
+            let vb = _mm256_loadu_si256(b.as_ptr().add(4 * c) as *const __m256i);
+            let vk = _mm256_loadu_si256(mask.as_ptr().add(4 * c) as *const __m256i);
+            let x = _mm256_and_si256(_mm256_xor_si256(va, vb), vk);
+            acc = _mm256_add_epi64(acc, _mm256_sad_epu8(popcount_bytes(x), zero));
+        }
+        let mut t = hsum_epi64(acc) as u32;
+        for i in 4 * chunks..n {
+            t += ((a[i] ^ b[i]) & mask[i]).count_ones();
+        }
+        t
+    }
+
+    /// One register tile of the batched kernel: the row streamed in
+    /// 256-bit lanes against `K` query slices, `K` independent
+    /// `sad_epu8` accumulator chains (the scalar tile's accumulator
+    /// tiling widened to four words per step).  Callers validated every
+    /// slice to `stride` words at batch entry.
+    #[target_feature(enable = "avx2")]
+    pub(super) unsafe fn tile_rows<const K: usize>(
+        data: &[u64],
+        stride: usize,
+        rows: usize,
+        qs: &[&[u64]; K],
+        out: &mut [u32],
+        out_stride: usize,
+    ) {
+        let zero = _mm256_setzero_si256();
+        let chunks = stride / 4;
+        for r in 0..rows {
+            let row = &data[r * stride..(r + 1) * stride];
+            let mut acc = [zero; K];
+            for c in 0..chunks {
+                let w = _mm256_loadu_si256(row.as_ptr().add(4 * c) as *const __m256i);
+                for k in 0..K {
+                    let q = _mm256_loadu_si256(qs[k].as_ptr().add(4 * c) as *const __m256i);
+                    let cnt = popcount_bytes(_mm256_xor_si256(w, q));
+                    acc[k] = _mm256_add_epi64(acc[k], _mm256_sad_epu8(cnt, zero));
+                }
+            }
+            for k in 0..K {
+                let mut t = hsum_epi64(acc[k]) as u32;
+                for i in 4 * chunks..stride {
+                    t += (row[i] ^ qs[k][i]).count_ones();
+                }
+                out[k * out_stride + r] = t;
+            }
+        }
+    }
+}
+
+#[cfg(target_arch = "x86_64")]
+#[inline]
+fn hamming_words_avx2(a: &[u64], b: &[u64]) -> u32 {
+    // SAFETY: `HammingBackend::Avx2` only reaches a dispatch arm behind
+    // `avx2_available()` — backend selection and the `_with` guards.
+    unsafe { avx2::hamming_words(a, b) }
+}
+
+#[cfg(not(target_arch = "x86_64"))]
+#[inline]
+fn hamming_words_avx2(a: &[u64], b: &[u64]) -> u32 {
+    hamming_words_swar(a, b) // unreachable: Avx2 is never selected here
+}
+
+#[cfg(target_arch = "x86_64")]
+#[inline]
+fn hamming_words_masked_avx2(a: &[u64], b: &[u64], mask: &[u64]) -> u32 {
+    // SAFETY: as `hamming_words_avx2`.
+    unsafe { avx2::hamming_words_masked(a, b, mask) }
+}
+
+#[cfg(not(target_arch = "x86_64"))]
+#[inline]
+fn hamming_words_masked_avx2(a: &[u64], b: &[u64], mask: &[u64]) -> u32 {
+    hamming_words_masked_swar(a, b, mask)
+}
+
+/// Hamming distance between equal-length word slices (dispatched to
+/// [`active_backend`]; exact on every backend).
+#[inline]
+pub fn hamming_words(a: &[u64], b: &[u64]) -> u32 {
+    debug_assert_eq!(a.len(), b.len());
+    match active_backend() {
+        HammingBackend::Scalar => hamming_words_scalar(a, b),
+        HammingBackend::Swar => hamming_words_swar(a, b),
+        HammingBackend::Avx2 => hamming_words_avx2(a, b),
+    }
+}
+
+/// [`hamming_words`] on an explicit backend (A/B runs and the backend
+/// bit-identity tests).  Panics if `backend` cannot run on this host —
+/// pick from [`available_backends`].
+pub fn hamming_words_with(backend: HammingBackend, a: &[u64], b: &[u64]) -> u32 {
+    assert_backend_runnable(backend);
+    debug_assert_eq!(a.len(), b.len());
+    match backend {
+        HammingBackend::Scalar => hamming_words_scalar(a, b),
+        HammingBackend::Swar => hamming_words_swar(a, b),
+        HammingBackend::Avx2 => hamming_words_avx2(a, b),
+    }
+}
+
+/// Hamming distance over driven columns only: popcount((a ^ b) & mask)
+/// (the ternary-search primitive — masked columns never open a discharge
+/// path, see `cam::ops::masked_search`).  Dispatched like
+/// [`hamming_words`].
+#[inline]
+pub fn hamming_words_masked(a: &[u64], b: &[u64], mask: &[u64]) -> u32 {
+    debug_assert_eq!(a.len(), b.len());
+    debug_assert_eq!(a.len(), mask.len());
+    match active_backend() {
+        HammingBackend::Scalar => hamming_words_masked_scalar(a, b, mask),
+        HammingBackend::Swar => hamming_words_masked_swar(a, b, mask),
+        HammingBackend::Avx2 => hamming_words_masked_avx2(a, b, mask),
+    }
+}
+
+/// [`hamming_words_masked`] on an explicit backend (see
+/// [`hamming_words_with`]).
+pub fn hamming_words_masked_with(
+    backend: HammingBackend,
+    a: &[u64],
+    b: &[u64],
+    mask: &[u64],
+) -> u32 {
+    assert_backend_runnable(backend);
+    debug_assert_eq!(a.len(), b.len());
+    debug_assert_eq!(a.len(), mask.len());
+    match backend {
+        HammingBackend::Scalar => hamming_words_masked_scalar(a, b, mask),
+        HammingBackend::Swar => hamming_words_masked_swar(a, b, mask),
+        HammingBackend::Avx2 => hamming_words_masked_avx2(a, b, mask),
+    }
+}
+
 /// Queries per register tile of the batched Hamming kernel.  Eight 32-bit
 /// accumulators plus the row word fit comfortably in registers, and an
 /// 8-query × 32-word tile (2 KiB of query words) stays L1-resident.
 pub const QUERY_TILE: usize = 8;
+
+/// One register tile, scalar backend: `K` query word-slices held live
+/// against each streamed row, `K` independent accumulator chains.
+fn tile_rows_scalar<const K: usize>(
+    data: &[u64],
+    stride: usize,
+    rows: usize,
+    qs: &[&[u64]; K],
+    out: &mut [u32],
+    out_stride: usize,
+) {
+    for r in 0..rows {
+        let row = &data[r * stride..(r + 1) * stride];
+        let mut acc = [0u32; K];
+        for (i, &w) in row.iter().enumerate() {
+            for (k, q) in qs.iter().enumerate() {
+                acc[k] += (w ^ q[i]).count_ones();
+            }
+        }
+        for (k, &a) in acc.iter().enumerate() {
+            out[k * out_stride + r] = a;
+        }
+    }
+}
+
+/// One register tile, SWAR backend: the row streamed four words per step
+/// through [`popcount64`], `K` accumulator chains as in the scalar tile.
+fn tile_rows_swar<const K: usize>(
+    data: &[u64],
+    stride: usize,
+    rows: usize,
+    qs: &[&[u64]; K],
+    out: &mut [u32],
+    out_stride: usize,
+) {
+    let chunks = stride / 4;
+    for r in 0..rows {
+        let row = &data[r * stride..(r + 1) * stride];
+        let mut acc = [0u32; K];
+        for c in 0..chunks {
+            let i = 4 * c;
+            for (k, q) in qs.iter().enumerate() {
+                acc[k] += popcount64(row[i] ^ q[i])
+                    + popcount64(row[i + 1] ^ q[i + 1])
+                    + popcount64(row[i + 2] ^ q[i + 2])
+                    + popcount64(row[i + 3] ^ q[i + 3]);
+            }
+        }
+        for i in 4 * chunks..stride {
+            for (k, q) in qs.iter().enumerate() {
+                acc[k] += popcount64(row[i] ^ q[i]);
+            }
+        }
+        for (k, &a) in acc.iter().enumerate() {
+            out[k * out_stride + r] = a;
+        }
+    }
+}
+
+/// The enum dispatch at the heart of the batched kernel: one validated
+/// tile handed to the selected backend (no trait objects; the backend
+/// was chosen once at batch entry).
+fn tile_rows_dispatch<const K: usize>(
+    backend: HammingBackend,
+    data: &[u64],
+    stride: usize,
+    rows: usize,
+    qs: &[&[u64]; K],
+    out: &mut [u32],
+    out_stride: usize,
+) {
+    match backend {
+        HammingBackend::Scalar => tile_rows_scalar::<K>(data, stride, rows, qs, out, out_stride),
+        HammingBackend::Swar => tile_rows_swar::<K>(data, stride, rows, qs, out, out_stride),
+        #[cfg(target_arch = "x86_64")]
+        // SAFETY: `Avx2` only reaches a dispatch arm behind
+        // `avx2_available()` — backend selection and the `_with` guards.
+        HammingBackend::Avx2 => unsafe {
+            avx2::tile_rows::<K>(data, stride, rows, qs, out, out_stride)
+        },
+        #[cfg(not(target_arch = "x86_64"))]
+        HammingBackend::Avx2 => tile_rows_swar::<K>(data, stride, rows, qs, out, out_stride),
+    }
+}
 
 /// A dense row-major matrix of packed ±1 rows (e.g. a binary weight matrix:
 /// `rows` neurons × `cols` inputs), rows padded to whole words.
@@ -394,11 +831,34 @@ impl BitMatrix {
     ///
     /// This is the register-tiled kernel described in the module docs:
     /// each row's words are streamed once per tile of [`QUERY_TILE`]
-    /// queries instead of once per query.
+    /// queries instead of once per query, on the dispatched
+    /// [`active_backend`].
     pub fn hamming_all_batch(&self, queries: &[BitVec], out: &mut Vec<u32>) {
         out.clear();
         out.resize(queries.len() * self.rows, 0);
         self.hamming_rows_batch_into(self.rows, queries, out, self.rows);
+    }
+
+    /// [`BitMatrix::hamming_all_batch`] on an explicit backend (A/B runs
+    /// and the backend bit-identity tests; production paths dispatch on
+    /// [`active_backend`]).  Panics if `backend` cannot run on this host.
+    pub fn hamming_all_batch_with(
+        &self,
+        backend: HammingBackend,
+        queries: &[BitVec],
+        out: &mut Vec<u32>,
+    ) {
+        assert_backend_runnable(backend);
+        out.clear();
+        out.resize(queries.len() * self.rows, 0);
+        self.batch_core(
+            backend,
+            self.rows,
+            queries.len(),
+            |i| queries[i].words(),
+            out,
+            self.rows,
+        );
     }
 
     /// [`BitMatrix::hamming_all_batch`] restricted to the first `rows`
@@ -412,59 +872,105 @@ impl BitMatrix {
         out: &mut [u32],
         out_stride: usize,
     ) {
-        assert!(rows <= self.rows, "row limit exceeds the matrix");
-        assert!(rows <= out_stride, "output stride too small");
-        if !queries.is_empty() {
-            assert!(
-                out.len() >= (queries.len() - 1) * out_stride + rows,
-                "output buffer too small"
-            );
-        }
-        let mut q0 = 0usize;
-        for tile in queries.chunks(QUERY_TILE) {
-            let out_tile = &mut out[q0 * out_stride..];
-            match tile.len() {
-                8 => self.hamming_tile::<8>(rows, tile, out_tile, out_stride),
-                7 => self.hamming_tile::<7>(rows, tile, out_tile, out_stride),
-                6 => self.hamming_tile::<6>(rows, tile, out_tile, out_stride),
-                5 => self.hamming_tile::<5>(rows, tile, out_tile, out_stride),
-                4 => self.hamming_tile::<4>(rows, tile, out_tile, out_stride),
-                3 => self.hamming_tile::<3>(rows, tile, out_tile, out_stride),
-                2 => self.hamming_tile::<2>(rows, tile, out_tile, out_stride),
-                1 => self.hamming_tile::<1>(rows, tile, out_tile, out_stride),
-                _ => unreachable!("chunks({QUERY_TILE}) yields 1..={QUERY_TILE}"),
-            }
-            q0 += tile.len();
-        }
+        self.batch_core(
+            active_backend(),
+            rows,
+            queries.len(),
+            |i| queries[i].words(),
+            out,
+            out_stride,
+        );
     }
 
-    /// One register tile: `K` query word-slices held live against each
-    /// streamed row, `K` independent accumulator chains.
-    fn hamming_tile<const K: usize>(
+    /// [`BitMatrix::hamming_rows_batch_into`] with the queries packed as
+    /// the rows of another `BitMatrix` (`queries.rows()` queries of
+    /// `queries.cols()` bits) — the allocation-free batch path: engines
+    /// reuse one query block across batches instead of building
+    /// per-query `BitVec`s.
+    pub fn hamming_rows_batch_from(
         &self,
         rows: usize,
-        tile: &[BitVec],
+        queries: &BitMatrix,
         out: &mut [u32],
         out_stride: usize,
     ) {
-        debug_assert_eq!(tile.len(), K);
-        let qs: [&[u64]; K] = core::array::from_fn(|k| {
-            let w = tile[k].words();
-            assert_eq!(w.len(), self.stride, "query width mismatch");
-            w
-        });
-        for r in 0..rows {
-            let row = self.row_words(r);
-            let mut acc = [0u32; K];
-            for (i, &w) in row.iter().enumerate() {
-                for (k, q) in qs.iter().enumerate() {
-                    acc[k] += (w ^ q[i]).count_ones();
-                }
-            }
-            for (k, &a) in acc.iter().enumerate() {
-                out[k * out_stride + r] = a;
-            }
+        assert_eq!(queries.cols, self.cols, "query width mismatch");
+        self.batch_core(
+            active_backend(),
+            rows,
+            queries.rows,
+            |i| queries.row_words(i),
+            out,
+            out_stride,
+        );
+    }
+
+    /// The shared batch loop: validate once per batch entry (the
+    /// per-query width check is hoisted out of the tile row loops), then
+    /// hand register tiles of up to [`QUERY_TILE`] query slices to the
+    /// selected backend.
+    fn batch_core<'q, F: Fn(usize) -> &'q [u64]>(
+        &self,
+        backend: HammingBackend,
+        rows: usize,
+        nq: usize,
+        q_words: F,
+        out: &mut [u32],
+        out_stride: usize,
+    ) {
+        assert!(rows <= self.rows, "row limit exceeds the matrix");
+        assert!(rows <= out_stride, "output stride too small");
+        if nq == 0 {
+            return;
         }
+        assert!(
+            out.len() >= (nq - 1) * out_stride + rows,
+            "output buffer too small"
+        );
+        // single batch-entry validation: every tile below trusts the
+        // slices to span exactly `stride` words
+        for i in 0..nq {
+            assert_eq!(q_words(i).len(), self.stride, "query width mismatch");
+        }
+        let (data, stride) = (&self.data[..], self.stride);
+        let mut q0 = 0usize;
+        while q0 < nq {
+            let k = (nq - q0).min(QUERY_TILE);
+            let out_tile = &mut out[q0 * out_stride..];
+            // one arm per const tile width, all sharing the same call body
+            macro_rules! tile {
+                ($k:literal) => {
+                    tile_rows_dispatch::<$k>(
+                        backend,
+                        data,
+                        stride,
+                        rows,
+                        &core::array::from_fn(|j| q_words(q0 + j)),
+                        out_tile,
+                        out_stride,
+                    )
+                };
+            }
+            match k {
+                8 => tile!(8),
+                7 => tile!(7),
+                6 => tile!(6),
+                5 => tile!(5),
+                4 => tile!(4),
+                3 => tile!(3),
+                2 => tile!(2),
+                1 => tile!(1),
+                _ => unreachable!("tiles span 1..={QUERY_TILE} queries"),
+            }
+            q0 += k;
+        }
+    }
+
+    /// The backing words, row-major with `words_for(cols)` words per row
+    /// (e.g. for pointer-stability assertions on scratch reuse).
+    #[inline]
+    pub fn words(&self) -> &[u64] {
+        &self.data
     }
 }
 
@@ -869,6 +1375,157 @@ mod tests {
         m.hamming_all(&q, &mut out);
         for (r, row) in rows.iter().enumerate() {
             assert_eq!(out[r], row.hamming(&q));
+        }
+    }
+
+    #[test]
+    fn backend_names_parse_and_unknown_values_fall_through() {
+        for b in [
+            HammingBackend::Scalar,
+            HammingBackend::Swar,
+            HammingBackend::Avx2,
+        ] {
+            assert_eq!(parse_backend(b.name()), Some(b), "{}", b.name());
+        }
+        assert_eq!(parse_backend("sse42"), None);
+        assert_eq!(parse_backend(""), None);
+        assert_eq!(parse_backend("AVX2"), None, "names are lower-case");
+    }
+
+    #[test]
+    fn active_backend_is_runnable_on_this_host() {
+        // whatever the environment forced (CI re-runs the suite under
+        // PICBNN_FORCE_BACKEND=scalar), the latched backend must be one
+        // this host can execute — the downgrade rule's whole point
+        let b = active_backend();
+        assert!(available_backends().contains(&b), "{b:?}");
+        // and scalar + swar are available everywhere
+        assert!(available_backends().contains(&HammingBackend::Scalar));
+        assert!(available_backends().contains(&HammingBackend::Swar));
+    }
+
+    #[test]
+    fn swar_popcount_is_exact() {
+        assert_eq!(popcount64(0), 0);
+        assert_eq!(popcount64(!0), 64);
+        assert_eq!(popcount64(1), 1);
+        assert_eq!(popcount64(1 << 63), 1);
+        let mut rng = Rng::new(12, 21);
+        for _ in 0..2000 {
+            let x = rng.next_u64();
+            assert_eq!(popcount64(x), x.count_ones(), "{x:#x}");
+        }
+    }
+
+    #[test]
+    fn every_backend_matches_scalar_on_pairs_and_masks() {
+        // widths straddling the 4-word SWAR/AVX2 chunk and the word tail
+        let mut rng = Rng::new(3, 33);
+        for len in [1usize, 63, 64, 65, 255, 256, 257, 511, 700, 1024, 2048] {
+            let mut a = BitVec::zeros(len);
+            let mut b = BitVec::zeros(len);
+            let mut k = BitVec::zeros(len);
+            for i in 0..len {
+                a.set(i, rng.chance(0.5));
+                b.set(i, rng.chance(0.5));
+                k.set(i, rng.chance(0.5));
+            }
+            let want = hamming_words_with(HammingBackend::Scalar, a.words(), b.words());
+            let want_masked = hamming_words_masked_with(
+                HammingBackend::Scalar,
+                a.words(),
+                b.words(),
+                k.words(),
+            );
+            for backend in available_backends() {
+                assert_eq!(
+                    hamming_words_with(backend, a.words(), b.words()),
+                    want,
+                    "{backend:?} len {len}"
+                );
+                assert_eq!(
+                    hamming_words_masked_with(backend, a.words(), b.words(), k.words()),
+                    want_masked,
+                    "{backend:?} masked len {len}"
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn every_backend_matches_scalar_on_the_batched_kernel() {
+        // batch sizes crossing the QUERY_TILE boundary × widths crossing
+        // the 4-word chunk boundary, per backend
+        let mut rng = Rng::new(14, 41);
+        for cols in [64usize, 130, 257, 1024] {
+            let rows: Vec<BitVec> = (0..13)
+                .map(|_| {
+                    let mut v = BitVec::zeros(cols);
+                    for i in 0..cols {
+                        v.set(i, rng.chance(0.5));
+                    }
+                    v
+                })
+                .collect();
+            let m = BitMatrix::from_rows(&rows);
+            for nq in [1usize, 7, 8, 9, 17] {
+                let queries: Vec<BitVec> = (0..nq)
+                    .map(|_| {
+                        let mut v = BitVec::zeros(cols);
+                        for i in 0..cols {
+                            v.set(i, rng.chance(0.5));
+                        }
+                        v
+                    })
+                    .collect();
+                let mut want = Vec::new();
+                m.hamming_all_batch_with(HammingBackend::Scalar, &queries, &mut want);
+                for backend in available_backends() {
+                    let mut got = Vec::new();
+                    m.hamming_all_batch_with(backend, &queries, &mut got);
+                    assert_eq!(got, want, "{backend:?} cols {cols} nq {nq}");
+                }
+                // the dispatched entry agrees with whatever is active
+                let mut dispatched = Vec::new();
+                m.hamming_all_batch(&queries, &mut dispatched);
+                assert_eq!(dispatched, want, "dispatched cols {cols} nq {nq}");
+            }
+        }
+    }
+
+    #[test]
+    fn batch_from_query_block_matches_bitvec_queries() {
+        // the allocation-free entry: queries as rows of a BitMatrix are
+        // bit-identical to the same queries as BitVecs, including a row
+        // limit below the matrix height and a wider output stride
+        let mut rng = Rng::new(21, 52);
+        for cols in [100usize, 512, 1030] {
+            let rows: Vec<BitVec> = (0..9)
+                .map(|_| {
+                    let mut v = BitVec::zeros(cols);
+                    for i in 0..cols {
+                        v.set(i, rng.chance(0.5));
+                    }
+                    v
+                })
+                .collect();
+            let m = BitMatrix::from_rows(&rows);
+            let queries: Vec<BitVec> = (0..10)
+                .map(|_| {
+                    let mut v = BitVec::zeros(cols);
+                    for i in 0..cols {
+                        v.set(i, rng.chance(0.5));
+                    }
+                    v
+                })
+                .collect();
+            let block = BitMatrix::from_rows(&queries);
+            let stride = 12;
+            let mut want = vec![u32::MAX; queries.len() * stride];
+            let mut got = want.clone();
+            m.hamming_rows_batch_into(7, &queries, &mut want, stride);
+            m.hamming_rows_batch_from(7, &block, &mut got, stride);
+            assert_eq!(got, want, "cols {cols}");
         }
     }
 }

@@ -8,7 +8,10 @@ use picbnn::bnn::mapping::{expected_mismatches, program_row, segment_query};
 use picbnn::bnn::model::{MappedLayer, MappedModel};
 use picbnn::cam::{CamArray, CamConfig, NoiseMode};
 use picbnn::testkit::{forall, prop_assert, Gen};
-use picbnn::util::bitops::{hamming_words, BitMatrix, BitVec};
+use picbnn::util::bitops::{
+    available_backends, hamming_words, hamming_words_masked_with, hamming_words_with, BitMatrix,
+    BitVec, HammingBackend,
+};
 use picbnn::util::rng::Rng;
 
 /// Draw a random single-segment mapped layer.
@@ -303,6 +306,72 @@ fn prop_budget_never_changes_nominal_predictions() {
         prop_assert(
             split == want,
             format!("budget {budget} chunk {chunk} changed the batched kernel's predictions"),
+        )?;
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_hamming_backends_bit_identical_to_scalar() {
+    // the SIMD-dispatch contract: every backend this host can run
+    // (scalar, SWAR, AVX2 when detected) computes exactly the scalar
+    // reference's counts — single pairs, the masked variant, and the
+    // register-tiled batch kernel — over random widths crossing the
+    // 4-word chunk boundary and batch sizes crossing QUERY_TILE.  Exact
+    // counts mean the choice of backend can never change a decision, so
+    // nominal/analog predictions are dispatch-independent by
+    // construction (CI additionally re-runs this whole suite under
+    // PICBNN_FORCE_BACKEND=scalar to pin RNG draw-order independence).
+    forall(30, 227, |g| {
+        let cols = g.usize_in(1, 1600);
+        let n_rows = g.usize_in(1, 12);
+        let nq = g.usize_in(1, 19);
+        let rows: Vec<BitVec> = (0..n_rows)
+            .map(|_| BitVec::from_pm1(&g.pm1_vec(cols)))
+            .collect();
+        let m = BitMatrix::from_rows(&rows);
+        let queries: Vec<BitVec> = (0..nq)
+            .map(|_| BitVec::from_pm1(&g.pm1_vec(cols)))
+            .collect();
+        let mask = BitVec::from_pm1(&g.pm1_vec(cols));
+        let mut want = Vec::new();
+        m.hamming_all_batch_with(HammingBackend::Scalar, &queries, &mut want);
+        for backend in available_backends() {
+            let mut got = Vec::new();
+            m.hamming_all_batch_with(backend, &queries, &mut got);
+            prop_assert(got == want, format!("{backend:?}: batch kernel"))?;
+            prop_assert(
+                hamming_words_with(backend, rows[0].words(), queries[0].words())
+                    == hamming_words_with(
+                        HammingBackend::Scalar,
+                        rows[0].words(),
+                        queries[0].words(),
+                    ),
+                format!("{backend:?}: single pair"),
+            )?;
+            prop_assert(
+                hamming_words_masked_with(
+                    backend,
+                    rows[0].words(),
+                    queries[0].words(),
+                    mask.words(),
+                ) == hamming_words_masked_with(
+                    HammingBackend::Scalar,
+                    rows[0].words(),
+                    queries[0].words(),
+                    mask.words(),
+                ),
+                format!("{backend:?}: masked variant"),
+            )?;
+        }
+        // and the dispatched production entries agree with scalar too
+        let mut dispatched = Vec::new();
+        m.hamming_all_batch(&queries, &mut dispatched);
+        prop_assert(dispatched == want, "dispatched batch entry")?;
+        prop_assert(
+            hamming_words(rows[0].words(), queries[0].words())
+                == hamming_words_with(HammingBackend::Scalar, rows[0].words(), queries[0].words()),
+            "dispatched single pair",
         )?;
         Ok(())
     });
