@@ -1,0 +1,386 @@
+//! End-to-end serving bench: the admission-controlled engine on a
+//! simulated clock, driven open-loop by deterministic arrival processes
+//! (`server::loadgen`), with the device paced by its own measured
+//! per-image service time (`ServiceModel::DevicePaced`).  Everything —
+//! arrival times, batch closings, shedding, latency percentiles — is
+//! virtual-time discrete-event simulation, so the numbers are bit-exact
+//! reproducible across runs and hosts.
+//!
+//! Three scenarios:
+//!  * steady   — Poisson at half capacity, single tenant: the latency
+//!               floor (p50/p99/p999) and goodput under headroom.
+//!  * overload — bursty offered load above capacity on two tenants, one
+//!               guaranteed and one best-effort with a bounded queue:
+//!               the engine must shed the best-effort lane with typed
+//!               `Rejected { QueueFull }` responses while the guaranteed
+//!               lane's p99 stays bounded (the PR's acceptance run).
+//!  * diurnal  — sinusoidal day over a 3-million synthetic-user
+//!               population, single tenant: goodput tracking a moving
+//!               rate.
+//!
+//! Results go to `BENCH_serving.json` (full mode; quick mode writes
+//! `BENCH_serving_quick.json` so a smoke run never replaces the
+//! committed baseline), and the steady-scenario goodput gates against
+//! the committed baseline with the same quick/backend-mismatch skip
+//! rules as the hotpath bench.  CI runs this under `PICBNN_BENCH_QUICK=1`
+//! including a forced-scalar lane.
+
+use std::time::Duration;
+
+use picbnn::accel::{BatchPolicy, MacroPool, PipelineOptions};
+use picbnn::benchkit::{
+    bench_artifact_path, compare_baseline, emit_json, quick_mode, synth_bits, synth_model,
+    BenchRecord, Table,
+};
+use picbnn::cam::NoiseMode;
+use picbnn::server::{
+    AdmissionPolicy, ArrivalProcess, Clock, Engine, QosClass, RejectReason, Rejected,
+    ServiceModel, Workload,
+};
+use picbnn::util::bitops::BitVec;
+use picbnn::util::rng::Rng;
+use picbnn::util::Timer;
+
+/// Scenario records gated against the committed baseline in full mode.
+const BASELINE_GATED: [&str; 1] = ["serving steady poisson [goodput inf/s]"];
+
+/// Images cycled through per tenant (arrival's user id picks one).
+const IMAGE_POOL: usize = 32;
+
+fn fmt_ms(v: f64) -> String {
+    if v.is_nan() {
+        "-".to_string()
+    } else {
+        format!("{v:.3}")
+    }
+}
+
+/// Run one workload through the engine as a discrete-event loop: admit
+/// every arrival that is due at the current virtual time (one hoisted
+/// clock read per admission burst), then poll; when the device is idle,
+/// jump the clock to the next arrival.  Device service advances the
+/// clock inside `poll` (DevicePaced), so offered load above capacity
+/// piles arrivals into the admission bursts — exactly where bounded
+/// queue depths shed.  Deadline-only closings between arrivals are
+/// handled by the final flush (the arrival spacing here is much finer
+/// than the budgets, so the distortion is nil).
+fn drive(
+    engine: &Engine<'_>,
+    workload: &Workload,
+    images: &[Vec<BitVec>],
+) -> (usize, Vec<Rejected>) {
+    let clock = engine.clock();
+    let mut served = 0usize;
+    let mut rejections = Vec::new();
+    let mut i = 0;
+    while i < workload.arrivals.len() {
+        if workload.arrivals[i].at > clock.now() {
+            clock.advance_to(workload.arrivals[i].at);
+        }
+        let now = clock.now();
+        while i < workload.arrivals.len() && workload.arrivals[i].at <= now {
+            let a = &workload.arrivals[i];
+            let img = images[a.tenant][(a.user % IMAGE_POOL as u64) as usize].clone();
+            match engine.submit_at(a.tenant, img, None, now) {
+                Ok(_) => {}
+                Err(r) => rejections.push(r),
+            }
+            i += 1;
+        }
+        served += engine.poll().len();
+    }
+    served += engine.flush().len();
+    (served, rejections)
+}
+
+fn image_pool(n_in: usize, rng: &mut Rng) -> Vec<BitVec> {
+    (0..IMAGE_POOL).map(|_| synth_bits(n_in, rng)).collect()
+}
+
+fn main() {
+    let t0 = Timer::start();
+    let quick = quick_mode();
+    let opts = PipelineOptions {
+        noise: NoiseMode::Nominal,
+        ..Default::default()
+    };
+    let policy = BatchPolicy {
+        max_batch: 16,
+        max_wait: Duration::from_millis(1),
+    };
+    let mut rng = Rng::new(0x5E4E, 1);
+    let mut records: Vec<BenchRecord> = Vec::new();
+    let mut table = Table::new(
+        "serving: open-loop virtual-time scenarios",
+        &[
+            "scenario",
+            "tenant",
+            "class",
+            "offered/s",
+            "goodput/s",
+            "p50 ms",
+            "p99 ms",
+            "p999 ms",
+            "shed %",
+        ],
+    );
+
+    // small synthetic models keep the host-side classify cost trivial;
+    // the *device* pacing comes from the pool's own cycle model
+    let model_a = synth_model(21, 0x5E4E, &[(32, 64, 512), (10, 32, 512)]);
+    let model_b = synth_model(22, 0x5E4E, &[(24, 64, 512), (6, 24, 512)]);
+    let macros_a = MacroPool::macros_required(&model_a, &opts);
+    let macros_b = MacroPool::macros_required(&model_b, &opts);
+    let imgs_a = image_pool(64, &mut rng);
+    let imgs_b = image_pool(64, &mut rng);
+
+    // ---- scenario 1: steady Poisson at half capacity, single tenant ----
+    {
+        let engine =
+            Engine::single(&model_a, opts, policy, macros_a).with_clock(Clock::simulated());
+        let pacing = engine.calibrate_device_pacing(&[imgs_a.clone()]);
+        let ServiceModel::DevicePaced(ref per_image) = pacing else {
+            unreachable!("calibration returns DevicePaced");
+        };
+        let capacity = 1.0 / per_image[0].as_secs_f64();
+        let engine = engine.with_service(pacing.clone());
+        engine.reset_latency_metrics(0);
+
+        let n_arrivals = if quick { 400 } else { 8_000 };
+        let rate = capacity * 0.5;
+        let horizon = Duration::from_secs_f64(n_arrivals as f64 / rate);
+        let wl = Workload::generate(
+            &ArrivalProcess::Poisson { rate },
+            horizon,
+            1_000_000,
+            &[],
+            0xA11A,
+        );
+        let start = engine.clock().now();
+        let (served, rejections) = drive(&engine, &wl, &[imgs_a.clone()]);
+        let window_s = (engine.clock().now() - start).as_secs_f64();
+        assert!(rejections.is_empty(), "unbounded lane must not shed");
+        assert_eq!(served, wl.len(), "every arrival served");
+        let m = engine.lane_metrics(0);
+        let goodput = m.goodput(window_s);
+        assert!(
+            m.p99_ms().is_finite() && m.p999_ms() >= m.p99_ms() && m.p99_ms() >= m.p50_ms(),
+            "percentiles must be finite and ordered"
+        );
+        table.row(vec![
+            "steady".into(),
+            "0".into(),
+            "guaranteed".into(),
+            format!("{:.0}", wl.offered_rate(horizon)),
+            format!("{goodput:.0}"),
+            fmt_ms(m.p50_ms()),
+            fmt_ms(m.p99_ms()),
+            fmt_ms(m.p999_ms()),
+            format!("{:.1}", m.shed_rate() * 100.0),
+        ]);
+        records.push(BenchRecord::new(
+            "serving steady poisson [goodput inf/s]",
+            1e9 / goodput,
+            Some(goodput),
+        ));
+        for (name, value) in [
+            ("serving steady poisson [p50 ms]", m.p50_ms() * 1e6),
+            ("serving steady poisson [p99 ms]", m.p99_ms() * 1e6),
+            ("serving steady poisson [p999 ms]", m.p999_ms() * 1e6),
+            ("serving steady poisson [shed rate]", m.shed_rate()),
+        ] {
+            records.push(BenchRecord::new(name, value, None));
+        }
+    }
+
+    // ---- scenario 2: bursty overload, guaranteed vs best-effort ----
+    {
+        let budget = macros_a + macros_b;
+        let engine = Engine::multi(&[&model_a, &model_b], opts, policy, budget, &[])
+            .with_clock(Clock::simulated())
+            .with_admission(
+                0,
+                AdmissionPolicy {
+                    class: QosClass::Guaranteed,
+                    max_depth: usize::MAX,
+                },
+            )
+            .with_admission(
+                1,
+                AdmissionPolicy {
+                    class: QosClass::BestEffort,
+                    max_depth: 4 * policy.max_batch,
+                },
+            );
+        let pacing = engine.calibrate_device_pacing(&[imgs_a.clone(), imgs_b.clone()]);
+        let ServiceModel::DevicePaced(ref per_image) = pacing else {
+            unreachable!("calibration returns DevicePaced");
+        };
+        // aggregate capacity bound: the slower tenant's service rate
+        let capacity = 1.0 / per_image[0].max(per_image[1]).as_secs_f64();
+        let engine = engine.with_service(pacing.clone());
+        engine.reset_latency_metrics(0);
+        engine.reset_latency_metrics(1);
+
+        // tenant 0 (guaranteed) gets 25% of the trace: ~0.5x capacity
+        // even at the burst peak; tenant 1 (best-effort) takes the rest
+        // and overloads the device during bursts
+        let n_arrivals = if quick { 800 } else { 16_000 };
+        let burst = capacity * 2.0;
+        let base = capacity * 0.4;
+        let mean_rate = burst * 0.25 + base * 0.75;
+        let horizon = Duration::from_secs_f64(n_arrivals as f64 / mean_rate);
+        let period = Duration::from_secs_f64(horizon.as_secs_f64() / 8.0);
+        let wl = Workload::generate(
+            &ArrivalProcess::Bursty {
+                base,
+                burst,
+                period,
+                duty: 0.25,
+            },
+            horizon,
+            1_000_000,
+            &[0.25, 0.75],
+            0xB0B5,
+        );
+        let start = engine.clock().now();
+        let (served, rejections) = drive(&engine, &wl, &[imgs_a.clone(), imgs_b.clone()]);
+        let window_s = (engine.clock().now() - start).as_secs_f64();
+
+        // the acceptance criteria: overload sheds best-effort only, with
+        // typed QueueFull rejections, and the guaranteed class keeps a
+        // bounded p99
+        assert!(
+            !rejections.is_empty(),
+            "offered load above capacity must shed the bounded lane"
+        );
+        for r in &rejections {
+            assert_eq!(r.tenant, 1, "only the best-effort lane may shed");
+            assert!(
+                matches!(r.reason, RejectReason::QueueFull { .. }),
+                "sheds carry the typed queue-full reason, got {:?}",
+                r.reason
+            );
+        }
+        let mg = engine.lane_metrics(0);
+        let mb = engine.lane_metrics(1);
+        assert_eq!(mg.shed, 0, "guaranteed lane admitted everything");
+        assert_eq!(mb.shed, rejections.len() as u64);
+        assert_eq!(
+            served as u64 + mb.shed,
+            wl.len() as u64,
+            "every arrival either served or typed-rejected"
+        );
+        // guaranteed p99 bound: deadline wait (its full default budget)
+        // plus a generous multiple of batch service time
+        let batch_service_ms = per_image[0].as_secs_f64() * 1e3 * policy.max_batch as f64;
+        let bound_ms = policy.default_budget().as_secs_f64() * 1e3 + 32.0 * batch_service_ms;
+        assert!(
+            mg.p99_ms() <= bound_ms,
+            "guaranteed p99 {:.3} ms blew the {bound_ms:.3} ms bound",
+            mg.p99_ms()
+        );
+        assert!(
+            mb.p99_ms() > mg.p99_ms(),
+            "overload must land on the best-effort lane (be p99 {:.3} vs g p99 {:.3})",
+            mb.p99_ms(),
+            mg.p99_ms()
+        );
+        for (t, class, m) in [(0usize, "guaranteed", &mg), (1, "best-effort", &mb)] {
+            let offered = (m.admitted + m.shed) as f64 / window_s;
+            table.row(vec![
+                "overload".into(),
+                t.to_string(),
+                class.into(),
+                format!("{offered:.0}"),
+                format!("{:.0}", m.goodput(window_s)),
+                fmt_ms(m.p50_ms()),
+                fmt_ms(m.p99_ms()),
+                fmt_ms(m.p999_ms()),
+                format!("{:.1}", m.shed_rate() * 100.0),
+            ]);
+            records.push(BenchRecord::new(
+                &format!("serving overload {class} [p99 ms]"),
+                m.p99_ms() * 1e6,
+                None,
+            ));
+            records.push(BenchRecord::new(
+                &format!("serving overload {class} [shed rate]"),
+                m.shed_rate(),
+                None,
+            ));
+        }
+    }
+
+    // ---- scenario 3: diurnal day over a 3M-user population ----
+    {
+        let engine =
+            Engine::single(&model_a, opts, policy, macros_a).with_clock(Clock::simulated());
+        let pacing = engine.calibrate_device_pacing(&[imgs_a.clone()]);
+        let ServiceModel::DevicePaced(ref per_image) = pacing else {
+            unreachable!("calibration returns DevicePaced");
+        };
+        let capacity = 1.0 / per_image[0].as_secs_f64();
+        let engine = engine.with_service(pacing.clone());
+        engine.reset_latency_metrics(0);
+
+        let n_arrivals = if quick { 400 } else { 8_000 };
+        let mean_rate = capacity * 0.45; // mid between trough and peak
+        let horizon = Duration::from_secs_f64(n_arrivals as f64 / mean_rate);
+        let wl = Workload::generate(
+            &ArrivalProcess::Diurnal {
+                trough: capacity * 0.1,
+                peak: capacity * 0.8,
+                day: horizon,
+            },
+            horizon,
+            3_000_000,
+            &[],
+            0xD1A1,
+        );
+        let start = engine.clock().now();
+        let (served, rejections) = drive(&engine, &wl, &[imgs_a.clone()]);
+        let window_s = (engine.clock().now() - start).as_secs_f64();
+        assert!(rejections.is_empty(), "under-capacity day must not shed");
+        assert_eq!(served, wl.len());
+        let m = engine.lane_metrics(0);
+        table.row(vec![
+            "diurnal".into(),
+            "0".into(),
+            "guaranteed".into(),
+            format!("{:.0}", wl.offered_rate(horizon)),
+            format!("{:.0}", m.goodput(window_s)),
+            fmt_ms(m.p50_ms()),
+            fmt_ms(m.p99_ms()),
+            fmt_ms(m.p999_ms()),
+            format!("{:.1}", m.shed_rate() * 100.0),
+        ]);
+        records.push(BenchRecord::new(
+            "serving diurnal [goodput inf/s]",
+            1e9 / m.goodput(window_s),
+            Some(m.goodput(window_s)),
+        ));
+        records.push(BenchRecord::new("serving diurnal [p99 ms]", m.p99_ms() * 1e6, None));
+    }
+
+    table.print();
+
+    // gate before emit_json overwrites the committed baseline; quick runs
+    // write a separate artifact (same protocol as the hotpath bench)
+    let baseline_path = bench_artifact_path("BENCH_serving.json");
+    let regressions = compare_baseline(&baseline_path, &records, &BASELINE_GATED, 0.2);
+    let out_path = if quick {
+        bench_artifact_path("BENCH_serving_quick.json")
+    } else {
+        baseline_path
+    };
+    emit_json(&out_path, &records).expect("write serving bench artifact");
+    if !quick {
+        assert!(
+            regressions.is_empty(),
+            "serving goodput regressed >20% vs the committed baseline:\n{}",
+            regressions.join("\n")
+        );
+    }
+    println!("\n[serving done in {:.1}s]", t0.elapsed_s());
+}

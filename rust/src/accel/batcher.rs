@@ -1,31 +1,58 @@
 //! Request batcher: groups incoming inference requests so the pipeline can
 //! amortise weight loads and voltage retunes across a batch (paper §V-B).
 //!
-//! Policy: flush when `max_batch` requests are pending, or when the oldest
-//! pending request has waited `max_wait`.  This is the classic dynamic-
-//! batching latency/throughput dial: larger batches amortise the 33
-//! per-batch retunes over more images but add queueing delay.
+//! Closing policy — the serving engine's "lane" stage: a batch closes when
+//! `max_batch` requests are pending, *or* when the oldest pending request
+//! has spent half of its latency budget queueing (the half-budget deadline
+//! rule: half the budget is reserved for service + downstream time, so a
+//! request never burns its whole budget waiting for co-batched peers).
+//! Requests admitted without an explicit budget default to
+//! `2 × max_wait`, which makes the half-budget rule reduce to the classic
+//! "oldest waited `max_wait`" timeout dial.
+//!
+//! Time enters exclusively as [`Timestamp`]s handed in by the caller (the
+//! engine reads its [`crate::server::Clock`] once per scheduler tick) —
+//! the batcher itself never consults a time source, so closing decisions
+//! are replayable under simulated time.
+//!
+//! The queue is a `VecDeque`: draining a batch pops a front range in
+//! O(batch) — the previous `Vec` + `drain(..n)` shifted the entire
+//! remainder on every batch close, an O(pending) tax per batch that
+//! dominated exactly when the server was backlogged.
 
-use std::time::{Duration, Instant};
+use std::collections::VecDeque;
+use std::time::Duration;
 
+use crate::server::clock::Timestamp;
 use crate::util::bitops::BitVec;
 
 /// A pending inference request.
 #[derive(Clone, Debug)]
 pub struct Request {
+    /// Lane-unique id, assigned in admission order.  Doubles as the
+    /// request's noise-stream index: batches drain FIFO, so a drained
+    /// batch covers the contiguous stream range `[batch[0].id, +len)`
+    /// and the executor can replay exactly the streams a sequential run
+    /// would have used (rejected submissions never consume an id).
     pub id: u64,
     /// Tenant the request targets (0 for single-model servers).  A
     /// multi-tenant server keeps one batcher lane per tenant, so a
     /// drained batch is always tenant-homogeneous.
     pub tenant: usize,
     pub image: BitVec,
-    pub enqueued: Instant,
+    /// Admission time (engine clock).
+    pub enqueued: Timestamp,
+    /// End-to-end latency budget; the lane closes its batch once half of
+    /// this is spent queueing (module docs).
+    pub budget: Duration,
 }
 
 /// Batching policy knobs.
 #[derive(Clone, Copy, Debug)]
 pub struct BatchPolicy {
     pub max_batch: usize,
+    /// Queueing-delay dial: requests without an explicit budget get
+    /// `2 × max_wait`, so their batch closes after `max_wait` in queue.
     pub max_wait: Duration,
 }
 
@@ -38,11 +65,18 @@ impl Default for BatchPolicy {
     }
 }
 
-/// FIFO batcher.
+impl BatchPolicy {
+    /// Latency budget assumed for requests admitted without one.
+    pub fn default_budget(&self) -> Duration {
+        self.max_wait * 2
+    }
+}
+
+/// FIFO batcher with deadline-aware closing.
 #[derive(Debug)]
 pub struct Batcher {
     policy: BatchPolicy,
-    queue: Vec<Request>,
+    queue: VecDeque<Request>,
     next_id: u64,
 }
 
@@ -50,27 +84,39 @@ impl Batcher {
     pub fn new(policy: BatchPolicy) -> Self {
         Batcher {
             policy,
-            queue: Vec::new(),
+            queue: VecDeque::new(),
             next_id: 0,
         }
     }
 
-    /// Enqueue an image for tenant 0; returns its request id.
-    pub fn push(&mut self, image: BitVec) -> u64 {
-        self.push_tagged(0, image)
+    /// Enqueue an image for tenant 0 at time `now`; returns its id.
+    pub fn push(&mut self, image: BitVec, now: Timestamp) -> u64 {
+        self.push_tagged(0, image, now)
     }
 
-    /// Enqueue an image tagged with a tenant; returns its request id
+    /// Enqueue a tenant-tagged image with the policy's default budget.
+    pub fn push_tagged(&mut self, tenant: usize, image: BitVec, now: Timestamp) -> u64 {
+        self.push_with_budget(tenant, image, now, self.policy.default_budget())
+    }
+
+    /// Enqueue with an explicit latency budget; returns the request id
     /// (unique within this batcher — a multi-tenant server uses one
     /// batcher lane per tenant and disambiguates by `Response::tenant`).
-    pub fn push_tagged(&mut self, tenant: usize, image: BitVec) -> u64 {
+    pub fn push_with_budget(
+        &mut self,
+        tenant: usize,
+        image: BitVec,
+        now: Timestamp,
+        budget: Duration,
+    ) -> u64 {
         let id = self.next_id;
         self.next_id += 1;
-        self.queue.push(Request {
+        self.queue.push_back(Request {
             id,
             tenant,
             image,
-            enqueued: Instant::now(),
+            enqueued: now,
+            budget,
         });
         id
     }
@@ -79,13 +125,14 @@ impl Batcher {
         self.queue.len()
     }
 
-    /// Should the current queue be flushed now?
-    pub fn ready(&self, now: Instant) -> bool {
+    /// Should the current queue be flushed now?  True when full, or when
+    /// the oldest request has spent half its budget queueing.
+    pub fn ready(&self, now: Timestamp) -> bool {
         if self.queue.len() >= self.policy.max_batch {
             return true;
         }
-        match self.queue.first() {
-            Some(first) => now.duration_since(first.enqueued) >= self.policy.max_wait,
+        match self.queue.front() {
+            Some(first) => now.saturating_sub(first.enqueued) >= first.budget / 2,
             None => false,
         }
     }
@@ -98,7 +145,7 @@ impl Batcher {
 
     /// Force-flush everything (shutdown).
     pub fn drain_all(&mut self) -> Vec<Request> {
-        std::mem::take(&mut self.queue)
+        self.queue.drain(..).collect()
     }
 }
 
@@ -110,17 +157,21 @@ mod tests {
         BitVec::ones(16)
     }
 
+    fn ms(n: u64) -> Timestamp {
+        Duration::from_millis(n)
+    }
+
     #[test]
     fn flushes_at_max_batch() {
         let mut b = Batcher::new(BatchPolicy {
             max_batch: 3,
             max_wait: Duration::from_secs(100),
         });
-        b.push(img());
-        b.push(img());
-        assert!(!b.ready(Instant::now()));
-        b.push(img());
-        assert!(b.ready(Instant::now()));
+        b.push(img(), ms(0));
+        b.push(img(), ms(0));
+        assert!(!b.ready(ms(0)));
+        b.push(img(), ms(0));
+        assert!(b.ready(ms(0)));
         let batch = b.drain_batch();
         assert_eq!(batch.len(), 3);
         assert_eq!(batch[0].id, 0);
@@ -128,14 +179,43 @@ mod tests {
     }
 
     #[test]
-    fn flushes_on_timeout() {
+    fn flushes_when_half_the_default_budget_is_spent() {
+        // default budget = 2×max_wait, so the half-budget rule closes the
+        // batch after exactly max_wait in queue — the classic timeout
         let mut b = Batcher::new(BatchPolicy {
             max_batch: 100,
             max_wait: Duration::from_millis(1),
         });
-        b.push(img());
-        assert!(!b.ready(Instant::now()));
-        assert!(b.ready(Instant::now() + Duration::from_millis(5)));
+        b.push(img(), ms(0));
+        assert!(!b.ready(ms(0)));
+        assert!(b.ready(ms(1)), "half of the 2 ms default budget spent");
+        assert!(b.ready(ms(5)));
+    }
+
+    #[test]
+    fn explicit_budget_overrides_the_policy_timeout() {
+        let mut b = Batcher::new(BatchPolicy {
+            max_batch: 100,
+            max_wait: Duration::from_millis(1),
+        });
+        b.push_with_budget(0, img(), ms(0), Duration::from_millis(10));
+        assert!(!b.ready(ms(1)), "policy max_wait must not close it");
+        assert!(!b.ready(ms(4)));
+        assert!(b.ready(ms(5)), "half of the 10 ms budget spent");
+    }
+
+    #[test]
+    fn readiness_tracks_the_oldest_request() {
+        let mut b = Batcher::new(BatchPolicy {
+            max_batch: 100,
+            max_wait: Duration::from_millis(2),
+        });
+        b.push(img(), ms(0));
+        b.push(img(), ms(3));
+        // oldest (t=0, half-budget 2 ms) governs, not the newcomer
+        assert!(b.ready(ms(2)));
+        b.drain_batch();
+        assert_eq!(b.pending(), 0);
     }
 
     #[test]
@@ -145,7 +225,7 @@ mod tests {
             max_wait: Duration::ZERO,
         });
         for _ in 0..5 {
-            b.push(img());
+            b.push(img(), ms(0));
         }
         assert_eq!(b.drain_batch().len(), 2);
         assert_eq!(b.pending(), 3);
@@ -155,8 +235,8 @@ mod tests {
     #[test]
     fn tenant_tags_ride_along() {
         let mut b = Batcher::new(BatchPolicy::default());
-        b.push(img()); // untagged requests land on tenant 0
-        b.push_tagged(3, img());
+        b.push(img(), ms(0)); // untagged requests land on tenant 0
+        b.push_tagged(3, img(), ms(0));
         let batch = b.drain_all();
         assert_eq!(batch[0].tenant, 0);
         assert_eq!(batch[1].tenant, 3);
@@ -165,11 +245,38 @@ mod tests {
     #[test]
     fn ids_monotone_fifo() {
         let mut b = Batcher::new(BatchPolicy::default());
-        let a = b.push(img());
-        let c = b.push(img());
+        let a = b.push(img(), ms(0));
+        let c = b.push(img(), ms(0));
         assert!(c > a);
         let batch = b.drain_all();
         assert_eq!(batch[0].id, a);
         assert_eq!(batch[1].id, c);
+    }
+
+    #[test]
+    fn large_backlog_drains_fifo_in_policy_batches() {
+        // the VecDeque queue: a deep backlog drains as contiguous FIFO
+        // id ranges without shifting the remainder on every close (the
+        // old Vec::drain(..n) paid O(pending) per batch)
+        let mut b = Batcher::new(BatchPolicy {
+            max_batch: 64,
+            max_wait: Duration::ZERO,
+        });
+        let n = 50_000u64;
+        for _ in 0..n {
+            b.push(img(), ms(0));
+        }
+        let mut seen = 0u64;
+        while b.pending() > 0 {
+            let batch = b.drain_batch();
+            assert!(batch.len() == 64 || b.pending() == 0);
+            for r in &batch {
+                assert_eq!(r.id, seen, "FIFO order broken");
+                seen += 1;
+            }
+        }
+        assert_eq!(seen, n);
+        // the drained batcher keeps assigning fresh ids
+        assert_eq!(b.push(img(), ms(1)), n);
     }
 }

@@ -1,0 +1,191 @@
+//! Time seam for the serving engine: wall time for deployments, a
+//! deterministic simulated timeline for tests and open-loop benches.
+//!
+//! Every scheduling decision in the serving stack (batch deadlines,
+//! latency stamps, service pacing) reads time through a [`Clock`] instead
+//! of `std::time::Instant::now()`.  A [`Timestamp`] is a `Duration` since
+//! the clock's epoch, so the same code path runs against either source:
+//!
+//! * [`Clock::wall`] — monotonic host time (an `Instant` epoch captured
+//!   at construction).  The production default.
+//! * [`Clock::simulated`] — a shared atomic nanosecond counter that only
+//!   moves when [`Clock::advance`]/[`Clock::advance_to`] are called.
+//!   Scheduling decisions become replayable: a test submits at t=0,
+//!   advances to t=5 ms, and *knows* which batches close.  Simulated
+//!   clocks also count [`Clock::now`] reads ([`Clock::reads`]) so tests
+//!   can pin "one timestamp per scheduler tick" — the hoisted-clock-read
+//!   contract of `server::Engine::poll`.
+//!
+//! Clones share the timeline: a wall clone copies the epoch (consistent
+//! readings), a simulated clone shares the counter (advancing one
+//! advances all) — the engine, its lanes, and an open-loop driver all
+//! observe one notion of now.
+
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::Arc;
+use std::time::{Duration, Instant};
+
+/// Time since the owning [`Clock`]'s epoch.
+pub type Timestamp = Duration;
+
+/// Wall or simulated time source (module docs).
+#[derive(Clone, Debug)]
+pub struct Clock {
+    inner: Inner,
+}
+
+#[derive(Clone, Debug)]
+enum Inner {
+    Wall(Instant),
+    Simulated(Arc<SimState>),
+}
+
+#[derive(Debug, Default)]
+struct SimState {
+    /// Nanoseconds since the simulated epoch.
+    nanos: AtomicU64,
+    /// `now()` reads served (test instrumentation; module docs).
+    reads: AtomicU64,
+}
+
+impl Clock {
+    /// Monotonic host time; the epoch is the moment of construction.
+    pub fn wall() -> Self {
+        Clock {
+            inner: Inner::Wall(Instant::now()),
+        }
+    }
+
+    /// Deterministic virtual time starting at zero; advances only via
+    /// [`Self::advance`]/[`Self::advance_to`].
+    pub fn simulated() -> Self {
+        Clock {
+            inner: Inner::Simulated(Arc::new(SimState::default())),
+        }
+    }
+
+    /// Current time since the epoch.
+    pub fn now(&self) -> Timestamp {
+        match &self.inner {
+            Inner::Wall(epoch) => epoch.elapsed(),
+            Inner::Simulated(s) => {
+                s.reads.fetch_add(1, Ordering::Relaxed);
+                Duration::from_nanos(s.nanos.load(Ordering::Relaxed))
+            }
+        }
+    }
+
+    /// Move a simulated clock forward by `d`.
+    ///
+    /// Panics on a wall clock — host time cannot be steered, and a
+    /// service-pacing model wired to a wall clock is a configuration
+    /// error the caller should hear about immediately.
+    pub fn advance(&self, d: Duration) {
+        match &self.inner {
+            Inner::Wall(_) => panic!("Clock::advance on a wall clock"),
+            Inner::Simulated(s) => {
+                s.nanos.fetch_add(d.as_nanos() as u64, Ordering::Relaxed);
+            }
+        }
+    }
+
+    /// Move a simulated clock forward *to* `t` — a no-op if the timeline
+    /// is already past it (an open-loop driver replaying arrival times
+    /// must never rewind a device that fell behind the offered load).
+    /// Panics on a wall clock, like [`Self::advance`].
+    pub fn advance_to(&self, t: Timestamp) {
+        match &self.inner {
+            Inner::Wall(_) => panic!("Clock::advance_to on a wall clock"),
+            Inner::Simulated(s) => {
+                let target = t.as_nanos() as u64;
+                // lock-free max: only ever move forward
+                let _ = s
+                    .nanos
+                    .fetch_update(Ordering::Relaxed, Ordering::Relaxed, |cur| {
+                        (target > cur).then_some(target)
+                    });
+            }
+        }
+    }
+
+    /// Whether this clock is a simulated timeline.
+    pub fn is_simulated(&self) -> bool {
+        matches!(self.inner, Inner::Simulated(_))
+    }
+
+    /// `now()` reads served so far — simulated clocks only (0 on wall
+    /// clocks, which stay instrumentation-free on the hot path).
+    pub fn reads(&self) -> u64 {
+        match &self.inner {
+            Inner::Wall(_) => 0,
+            Inner::Simulated(s) => s.reads.load(Ordering::Relaxed),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn simulated_time_only_moves_when_advanced() {
+        let c = Clock::simulated();
+        assert_eq!(c.now(), Duration::ZERO);
+        assert_eq!(c.now(), Duration::ZERO, "no implicit progress");
+        c.advance(Duration::from_millis(5));
+        assert_eq!(c.now(), Duration::from_millis(5));
+        c.advance(Duration::from_micros(250));
+        assert_eq!(c.now(), Duration::from_micros(5250));
+    }
+
+    #[test]
+    fn advance_to_never_rewinds() {
+        let c = Clock::simulated();
+        c.advance_to(Duration::from_millis(10));
+        assert_eq!(c.now(), Duration::from_millis(10));
+        c.advance_to(Duration::from_millis(3));
+        assert_eq!(c.now(), Duration::from_millis(10), "rewound");
+        c.advance_to(Duration::from_millis(12));
+        assert_eq!(c.now(), Duration::from_millis(12));
+    }
+
+    #[test]
+    fn clones_share_a_simulated_timeline() {
+        let a = Clock::simulated();
+        let b = a.clone();
+        a.advance(Duration::from_secs(1));
+        assert_eq!(b.now(), Duration::from_secs(1));
+        b.advance(Duration::from_secs(1));
+        assert_eq!(a.now(), Duration::from_secs(2));
+    }
+
+    #[test]
+    fn simulated_counts_reads() {
+        let c = Clock::simulated();
+        assert_eq!(c.reads(), 0);
+        let _ = c.now();
+        let _ = c.now();
+        assert_eq!(c.reads(), 2);
+        // clones share the counter (one timeline, one read ledger)
+        let _ = c.clone().now();
+        assert_eq!(c.reads(), 3);
+    }
+
+    #[test]
+    fn wall_clock_progresses_and_reports_zero_reads() {
+        let c = Clock::wall();
+        let a = c.now();
+        let b = c.now();
+        assert!(b >= a);
+        assert!(c.reads() == 0 && !c.is_simulated());
+        // clones share the epoch: readings stay comparable
+        let d = c.clone().now();
+        assert!(d >= b);
+    }
+
+    #[test]
+    #[should_panic(expected = "wall clock")]
+    fn advancing_a_wall_clock_panics() {
+        Clock::wall().advance(Duration::from_secs(1));
+    }
+}

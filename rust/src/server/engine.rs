@@ -1,0 +1,780 @@
+//! The staged serving engine both server facades share:
+//!
+//! ```text
+//!   ingress (bounded MPSC)  →  admission (QoS, depth bounds)  →  lanes
+//!        →  executor (drains ready batches into the resident pool)
+//! ```
+//!
+//! **Ingress** — [`ingress_channel`] is a bounded std MPSC seam between
+//! producer threads and the engine.  A full ring rejects with the typed
+//! [`RejectReason::IngressFull`] instead of queueing unboundedly; the
+//! open-loop drivers and `serve_workload` feed the engine through it.
+//!
+//! **Admission** — every lane carries an [`AdmissionPolicy`]: a QoS class
+//! and a queue-depth bound.  A submission to a full lane is refused with
+//! [`RejectReason::QueueFull`] — typed backpressure the caller can act
+//! on — and counted in the lane's `shed` metric.  Bounded depths are what
+//! keep latency bounded under overload: a lane can never owe more than
+//! `max_depth` requests of work.
+//!
+//! **Lanes** — one [`Batcher`] per tenant.  A batch closes when full or
+//! when the oldest request has spent **half its latency budget** queueing
+//! (the other half is reserved for service; see `accel::batcher`).
+//!
+//! **Executor** — [`Engine::poll`] is one scheduler tick: it reads the
+//! [`Clock`] **once** for all readiness decisions, then drains every
+//! ready batch, guaranteed-class lanes strictly before best-effort ones.
+//! Under overload the guaranteed class therefore keeps its (bounded)
+//! queueing delay while best-effort traffic is shed at admission — the
+//! overload contract the serving bench asserts.  Batches classify on the
+//! shared allocation-free `classify_batch` path; multiple worker threads
+//! may call `poll` concurrently (lane locks cover only drain/record, the
+//! classify runs lock-free on the pool's scratch arenas).
+//!
+//! **Determinism** — a request's lane id doubles as its noise-stream
+//! index ([`Request::id`]), so predictions and RNG draw order depend only
+//! on each lane's admission order, never on batch shapes, poll timing,
+//! or worker interleaving.  `rust/tests/props.rs` pins async ≡ sync
+//! bit-exactness on top of this invariant.  With a simulated [`Clock`]
+//! and a [`ServiceModel::DevicePaced`] pacing model the whole engine
+//! becomes a deterministic discrete-event simulation (latency
+//! distributions included) — that is how `benches/serving.rs` measures
+//! p50/p99/p999 under overload reproducibly.
+
+use std::sync::mpsc::{self, Receiver, SyncSender, TrySendError};
+use std::sync::Mutex;
+use std::time::Duration;
+
+use crate::accel::{
+    BatchPolicy, Batcher, MacroPool, MultiPool, PipelineOptions, PoolMode, Request, RunStats,
+};
+use crate::bnn::model::MappedModel;
+use crate::server::clock::{Clock, Timestamp};
+use crate::server::metrics::ServerMetrics;
+use crate::util::bitops::BitVec;
+
+/// A classification response.
+#[derive(Clone, Debug)]
+pub struct Response {
+    pub id: u64,
+    /// Tenant that served the request (0 for single-model servers).  Ids
+    /// are unique per tenant lane, so (tenant, id) identifies a request.
+    pub tenant: usize,
+    pub prediction: usize,
+    pub votes: Vec<u32>,
+    pub latency: Duration,
+}
+
+/// Service class of a lane: guaranteed lanes drain strictly before
+/// best-effort lanes on every scheduler tick, so under overload the
+/// best-effort class absorbs the queueing (and, with bounded depths, the
+/// shedding) first.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum QosClass {
+    Guaranteed,
+    BestEffort,
+}
+
+/// Per-lane admission policy: QoS class + queue-depth bound.
+#[derive(Clone, Copy, Debug)]
+pub struct AdmissionPolicy {
+    pub class: QosClass,
+    /// Submissions are refused once this many requests are pending.
+    pub max_depth: usize,
+}
+
+impl Default for AdmissionPolicy {
+    /// Guaranteed class, unbounded depth — the facade default, under
+    /// which `submit` never rejects (pre-engine behaviour).
+    fn default() -> Self {
+        AdmissionPolicy {
+            class: QosClass::Guaranteed,
+            max_depth: usize::MAX,
+        }
+    }
+}
+
+/// Why a submission was refused.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub enum RejectReason {
+    /// The lane's queue is at its admission bound.
+    QueueFull { pending: usize, limit: usize },
+    /// The bounded ingress ring is full (producer-side backpressure).
+    IngressFull { capacity: usize },
+    /// The engine side of the ingress hung up.
+    ShuttingDown,
+}
+
+/// Typed rejection — the backpressure signal replacing unbounded queues.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct Rejected {
+    pub tenant: usize,
+    pub reason: RejectReason,
+}
+
+impl std::fmt::Display for Rejected {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match &self.reason {
+            RejectReason::QueueFull { pending, limit } => write!(
+                f,
+                "tenant {}: queue full ({pending} pending, limit {limit})",
+                self.tenant
+            ),
+            RejectReason::IngressFull { capacity } => {
+                write!(f, "tenant {}: ingress full (capacity {capacity})", self.tenant)
+            }
+            RejectReason::ShuttingDown => write!(f, "tenant {}: shutting down", self.tenant),
+        }
+    }
+}
+
+/// How completion time is stamped.
+#[derive(Clone, Debug)]
+pub enum ServiceModel {
+    /// Real time passes during `classify_batch` (wall-clock serving).
+    HostPaced,
+    /// After each batch the engine advances its (simulated) clock by
+    /// `per_image[lane] × batch_len` — the device-time cost model that
+    /// turns the engine into a deterministic discrete-event simulation.
+    /// Requires a simulated [`Clock`]; see
+    /// [`Engine::calibrate_device_pacing`].
+    DevicePaced(Vec<Duration>),
+}
+
+/// One tenant lane: admission policy + mutex-guarded queue/metrics state.
+struct Lane {
+    admission: AdmissionPolicy,
+    state: Mutex<LaneState>,
+}
+
+struct LaneState {
+    batcher: Batcher,
+    metrics: ServerMetrics,
+    /// Inferences already reported by `take_device_stats` (delta base).
+    stats_reported: u64,
+}
+
+enum Backend<'m> {
+    Single(MacroPool<'m>),
+    Multi(MultiPool<'m>),
+}
+
+/// The unified serving core (module docs).  `Server` and `MultiServer`
+/// are thin facades over this type; tests and benches drive it directly
+/// for simulated time, admission control, and multi-worker polling.
+pub struct Engine<'m> {
+    backend: Backend<'m>,
+    lanes: Vec<Lane>,
+    clock: Clock,
+    service: ServiceModel,
+}
+
+impl<'m> Engine<'m> {
+    /// Single-tenant engine over a pool planned for `max_macros`.
+    pub fn single(
+        model: &'m MappedModel,
+        opts: PipelineOptions,
+        policy: BatchPolicy,
+        max_macros: usize,
+    ) -> Self {
+        Engine {
+            backend: Backend::Single(MacroPool::with_capacity(model, opts, max_macros)),
+            lanes: vec![Lane::new(policy)],
+            clock: Clock::wall(),
+            service: ServiceModel::HostPaced,
+        }
+    }
+
+    /// Multi-tenant engine: one lane per model over one shared budget
+    /// (empty `shares` = equal traffic shares; see `MultiPool`).
+    pub fn multi(
+        models: &[&'m MappedModel],
+        opts: PipelineOptions,
+        policy: BatchPolicy,
+        max_macros: usize,
+        shares: &[f64],
+    ) -> Self {
+        let pool = MultiPool::with_shares(models, opts, max_macros, 1, shares);
+        let n = pool.n_tenants();
+        Engine {
+            backend: Backend::Multi(pool),
+            lanes: (0..n).map(|_| Lane::new(policy)).collect(),
+            clock: Clock::wall(),
+            service: ServiceModel::HostPaced,
+        }
+    }
+
+    /// Replace the time source (builder style; simulated clocks make
+    /// every scheduling decision replayable).
+    pub fn with_clock(mut self, clock: Clock) -> Self {
+        self.clock = clock;
+        self
+    }
+
+    /// Replace the completion-pacing model.  `DevicePaced` requires a
+    /// simulated clock (it advances the timeline per batch).
+    pub fn with_service(mut self, service: ServiceModel) -> Self {
+        if matches!(service, ServiceModel::DevicePaced(_)) {
+            assert!(
+                self.clock.is_simulated(),
+                "DevicePaced service requires a simulated clock"
+            );
+        }
+        self.service = service;
+        self
+    }
+
+    /// Set one lane's admission policy (builder style).
+    pub fn with_admission(mut self, lane: usize, admission: AdmissionPolicy) -> Self {
+        self.lanes[lane].admission = admission;
+        self
+    }
+
+    pub fn n_lanes(&self) -> usize {
+        self.lanes.len()
+    }
+
+    pub fn clock(&self) -> &Clock {
+        &self.clock
+    }
+
+    /// The backing single-tenant pool (panics on a multi-tenant engine).
+    pub fn single_pool(&self) -> &MacroPool<'m> {
+        match &self.backend {
+            Backend::Single(p) => p,
+            Backend::Multi(_) => panic!("single_pool on a multi-tenant engine"),
+        }
+    }
+
+    /// The backing multi-tenant pool (panics on a single-tenant engine).
+    pub fn multi_pool(&self) -> &MultiPool<'m> {
+        match &self.backend {
+            Backend::Single(_) => panic!("multi_pool on a single-tenant engine"),
+            Backend::Multi(p) => p,
+        }
+    }
+
+    /// Execution mode of a lane's backing pool.
+    pub fn pool_mode(&self, lane: usize) -> PoolMode {
+        match &self.backend {
+            Backend::Single(p) => p.mode(),
+            Backend::Multi(p) => p.tenant(lane).mode(),
+        }
+    }
+
+    /// Submit with the lane's default budget at the current clock time.
+    pub fn submit(&self, tenant: usize, image: BitVec) -> Result<u64, Rejected> {
+        let now = self.clock.now();
+        self.submit_at(tenant, image, None, now)
+    }
+
+    /// Submit with an explicit end-to-end latency budget (the lane's
+    /// batch closes once half of it is spent queueing).
+    pub fn submit_with_budget(
+        &self,
+        tenant: usize,
+        image: BitVec,
+        budget: Duration,
+    ) -> Result<u64, Rejected> {
+        let now = self.clock.now();
+        self.submit_at(tenant, image, Some(budget), now)
+    }
+
+    /// Admission stage with a caller-hoisted timestamp: bounds the lane's
+    /// queue depth and tags the request.  On success the returned id is
+    /// also the request's noise-stream index (rejections never consume
+    /// an id, so accepted streams stay dense in admission order).
+    pub fn submit_at(
+        &self,
+        tenant: usize,
+        image: BitVec,
+        budget: Option<Duration>,
+        now: Timestamp,
+    ) -> Result<u64, Rejected> {
+        let lane = &self.lanes[tenant];
+        let mut st = lane.state.lock().unwrap();
+        let pending = st.batcher.pending();
+        let limit = lane.admission.max_depth;
+        if pending >= limit {
+            st.metrics.shed += 1;
+            return Err(Rejected {
+                tenant,
+                reason: RejectReason::QueueFull { pending, limit },
+            });
+        }
+        st.metrics.admitted += 1;
+        Ok(match budget {
+            Some(b) => st.batcher.push_with_budget(tenant, image, now, b),
+            None => st.batcher.push_tagged(tenant, image, now),
+        })
+    }
+
+    /// One scheduler tick: drain every policy-ready batch, guaranteed
+    /// lanes first.  Readiness is decided against a **single** clock
+    /// reading taken at tick entry (one more read per executed batch
+    /// stamps its completion) — the hoisted-clock contract a test pins
+    /// via `Clock::reads`.
+    pub fn poll(&self) -> Vec<Response> {
+        self.tick(false)
+    }
+
+    /// Force-flush every lane regardless of policy (shutdown / epoch
+    /// boundaries); each lane drains as one batch, like the facades'
+    /// historical `poll(true)`.
+    pub fn flush(&self) -> Vec<Response> {
+        self.tick(true)
+    }
+
+    fn tick(&self, force: bool) -> Vec<Response> {
+        let now = self.clock.now(); // the tick's only readiness timestamp
+        let mut out = Vec::new();
+        for class in [QosClass::Guaranteed, QosClass::BestEffort] {
+            for (t, lane) in self.lanes.iter().enumerate() {
+                if lane.admission.class != class {
+                    continue;
+                }
+                loop {
+                    let batch = {
+                        let mut st = lane.state.lock().unwrap();
+                        if force {
+                            st.batcher.drain_all()
+                        } else if st.batcher.ready(now) {
+                            st.batcher.drain_batch()
+                        } else {
+                            break;
+                        }
+                    };
+                    if batch.is_empty() {
+                        break;
+                    }
+                    self.execute(t, batch, &mut out);
+                    if force {
+                        break; // drain_all already took everything
+                    }
+                }
+            }
+        }
+        out
+    }
+
+    /// Executor stage: classify one drained batch and record its lane
+    /// metrics.  The lane lock is NOT held while classifying, so worker
+    /// threads polling concurrently overlap their device batches.
+    fn execute(&self, tenant: usize, batch: Vec<Request>, out: &mut Vec<Response>) {
+        let n = batch.len();
+        // FIFO drain of densely-id'd requests: the batch covers the
+        // contiguous noise-stream range [base, base + n)
+        let base = batch[0].id;
+        let mut meta = Vec::with_capacity(n);
+        let mut images = Vec::with_capacity(n);
+        for req in batch {
+            debug_assert_eq!(req.tenant, tenant, "lane holds one tenant");
+            debug_assert_eq!(req.id, base + meta.len() as u64, "ids dense in batch");
+            meta.push((req.id, req.enqueued));
+            images.push(req.image);
+        }
+        let results = match &self.backend {
+            Backend::Single(p) => p.classify_batch_at(&images, base),
+            Backend::Multi(p) => p.classify_batch_at(tenant, &images, base),
+        };
+        if let ServiceModel::DevicePaced(per_image) = &self.service {
+            self.clock.advance(per_image[tenant] * n as u32);
+        }
+        let done = self.clock.now();
+        let mut st = self.lanes[tenant].state.lock().unwrap();
+        st.metrics.batches += 1;
+        st.metrics.batch_sizes.push(n as f64);
+        out.reserve(n);
+        for ((id, enqueued), (votes, prediction)) in meta.into_iter().zip(results) {
+            let latency = done.saturating_sub(enqueued);
+            st.metrics.served += 1;
+            st.metrics.latency_ms.push(latency.as_secs_f64() * 1e3);
+            out.push(Response {
+                id,
+                tenant,
+                prediction,
+                votes,
+                latency,
+            });
+        }
+    }
+
+    /// Requests queued in one lane.
+    pub fn pending(&self, lane: usize) -> usize {
+        self.lanes[lane].state.lock().unwrap().batcher.pending()
+    }
+
+    /// Requests queued across all lanes.
+    pub fn total_pending(&self) -> usize {
+        (0..self.lanes.len()).map(|t| self.pending(t)).sum()
+    }
+
+    /// Snapshot of one lane's metrics.
+    pub fn lane_metrics(&self, lane: usize) -> ServerMetrics {
+        self.lanes[lane].state.lock().unwrap().metrics.clone()
+    }
+
+    /// Clear one lane's latency/batch-size summaries (epoch boundaries:
+    /// drop warmup samples; counters keep accumulating — they are the
+    /// delta base for [`Self::take_device_stats`]).
+    pub fn reset_latency_metrics(&self, lane: usize) {
+        let mut st = self.lanes[lane].state.lock().unwrap();
+        st.metrics.latency_ms = Default::default();
+        st.metrics.batch_sizes = Default::default();
+    }
+
+    /// Drain one lane's device statistics accumulated since the previous
+    /// call for that lane (delta-based: each served inference is
+    /// attributed to exactly one report).
+    pub fn take_device_stats(&self, lane: usize) -> RunStats {
+        let mut st = self.lanes[lane].state.lock().unwrap();
+        let delta = st.metrics.served - st.stats_reported;
+        st.stats_reported = st.metrics.served;
+        drop(st);
+        match &self.backend {
+            Backend::Single(p) => p.take_stats(delta),
+            Backend::Multi(p) => p.take_stats(lane, delta),
+        }
+    }
+
+    /// Measure each lane's steady-state device time per inference by
+    /// running `warmup` images through the pool (doubles as the warmup
+    /// epoch: construction programming and first funnel parks drain
+    /// here), and return the [`ServiceModel::DevicePaced`] cost model.
+    /// The calibration replays noise streams `[0, warmup)` — the same
+    /// stateless streams the first admitted requests will use, so it
+    /// perturbs nothing.
+    pub fn calibrate_device_pacing(&self, images_per_lane: &[Vec<BitVec>]) -> ServiceModel {
+        assert_eq!(images_per_lane.len(), self.lanes.len());
+        let per_image = images_per_lane
+            .iter()
+            .enumerate()
+            .map(|(t, imgs)| {
+                assert!(!imgs.is_empty(), "lane {t}: calibration needs images");
+                let stats = match &self.backend {
+                    Backend::Single(p) => {
+                        p.classify_batch_at(imgs, 0);
+                        p.take_stats(imgs.len() as u64)
+                    }
+                    Backend::Multi(p) => {
+                        p.classify_batch_at(t, imgs, 0);
+                        p.take_stats(t, imgs.len() as u64)
+                    }
+                };
+                Duration::from_secs_f64(stats.elapsed_s() / imgs.len() as f64)
+            })
+            .collect();
+        ServiceModel::DevicePaced(per_image)
+    }
+}
+
+impl Lane {
+    fn new(policy: BatchPolicy) -> Self {
+        Lane {
+            admission: AdmissionPolicy::default(),
+            state: Mutex::new(LaneState {
+                batcher: Batcher::new(policy),
+                metrics: ServerMetrics::default(),
+                stats_reported: 0,
+            }),
+        }
+    }
+}
+
+/// A submission travelling the bounded ingress ring.
+#[derive(Clone, Debug)]
+pub struct Submission {
+    pub tenant: usize,
+    pub image: BitVec,
+    /// Explicit latency budget; `None` = the lane's default.
+    pub budget: Option<Duration>,
+}
+
+/// Producer handle of the bounded MPSC ingress (cloneable across
+/// producer threads).
+#[derive(Clone)]
+pub struct IngressTx {
+    tx: SyncSender<Submission>,
+    capacity: usize,
+}
+
+impl IngressTx {
+    /// Non-blocking send: a full ring rejects with the typed
+    /// [`RejectReason::IngressFull`] — open-loop producers shed here
+    /// instead of queueing unboundedly.
+    pub fn try_submit(&self, s: Submission) -> Result<(), Rejected> {
+        let tenant = s.tenant;
+        self.tx.try_send(s).map_err(|e| match e {
+            TrySendError::Full(_) => Rejected {
+                tenant,
+                reason: RejectReason::IngressFull {
+                    capacity: self.capacity,
+                },
+            },
+            TrySendError::Disconnected(_) => Rejected {
+                tenant,
+                reason: RejectReason::ShuttingDown,
+            },
+        })
+    }
+
+    /// Blocking send (closed-loop producers); errors only at shutdown.
+    pub fn submit_blocking(&self, s: Submission) -> Result<(), Rejected> {
+        let tenant = s.tenant;
+        self.tx.send(s).map_err(|_| Rejected {
+            tenant,
+            reason: RejectReason::ShuttingDown,
+        })
+    }
+}
+
+/// Bounded MPSC ingress seam (std `sync_channel`): producers on the
+/// [`IngressTx`] side, the engine's dispatch loop on the `Receiver`.
+pub fn ingress_channel(capacity: usize) -> (IngressTx, Receiver<Submission>) {
+    let (tx, rx) = mpsc::sync_channel(capacity);
+    (IngressTx { tx, capacity }, rx)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::bnn::model::test_fixtures::tiny_model;
+    use crate::cam::NoiseMode;
+    use crate::util::rng::Rng;
+
+    fn images(n: usize, bits: usize) -> Vec<BitVec> {
+        let mut rng = Rng::new(8, 8);
+        (0..n)
+            .map(|_| {
+                let mut v = BitVec::zeros(bits);
+                for i in 0..bits {
+                    v.set(i, rng.chance(0.5));
+                }
+                v
+            })
+            .collect()
+    }
+
+    fn opts() -> PipelineOptions {
+        PipelineOptions {
+            noise: NoiseMode::Nominal,
+            ..Default::default()
+        }
+    }
+
+    fn ms(n: u64) -> Duration {
+        Duration::from_millis(n)
+    }
+
+    #[test]
+    fn deadline_closes_a_batch_at_half_budget() {
+        let model = tiny_model(64, 8, 3, 51);
+        let engine = Engine::single(
+            &model,
+            opts(),
+            BatchPolicy {
+                max_batch: 100,
+                max_wait: Duration::from_secs(60),
+            },
+            crate::accel::DEFAULT_POOL_MACROS,
+        )
+        .with_clock(Clock::simulated());
+        engine
+            .submit_with_budget(0, images(1, 64).pop().unwrap(), ms(10))
+            .unwrap();
+        engine.clock().advance(ms(4));
+        assert!(engine.poll().is_empty(), "budget less than half spent");
+        engine.clock().advance(ms(1));
+        let got = engine.poll();
+        assert_eq!(got.len(), 1, "half the 10 ms budget spent in queue");
+        assert_eq!(got[0].latency, ms(5));
+    }
+
+    #[test]
+    fn poll_tick_uses_one_readiness_timestamp() {
+        // the hoisted-clock satellite: an empty tick reads the clock
+        // exactly once; a tick that executes k batches reads it 1 + k
+        // times (one completion stamp per batch) — never once per queue
+        // scan iteration or per request
+        let model = tiny_model(64, 8, 3, 52);
+        let engine = Engine::single(
+            &model,
+            opts(),
+            BatchPolicy {
+                max_batch: 8,
+                max_wait: Duration::ZERO,
+            },
+            crate::accel::DEFAULT_POOL_MACROS,
+        )
+        .with_clock(Clock::simulated());
+        let before = engine.clock().reads();
+        assert!(engine.poll().is_empty());
+        assert_eq!(engine.clock().reads() - before, 1, "empty tick");
+        for img in images(3 * 8, 64) {
+            engine.submit(0, img).unwrap();
+        }
+        let before = engine.clock().reads();
+        let got = engine.poll();
+        assert_eq!(got.len(), 24);
+        assert_eq!(
+            engine.clock().reads() - before,
+            1 + 3,
+            "one readiness read + one completion stamp per batch"
+        );
+    }
+
+    #[test]
+    fn admission_rejects_typed_when_the_lane_is_full() {
+        let model = tiny_model(64, 8, 3, 53);
+        let engine = Engine::single(
+            &model,
+            opts(),
+            BatchPolicy {
+                max_batch: 100,
+                max_wait: Duration::from_secs(60),
+            },
+            crate::accel::DEFAULT_POOL_MACROS,
+        )
+        .with_clock(Clock::simulated())
+        .with_admission(
+            0,
+            AdmissionPolicy {
+                class: QosClass::BestEffort,
+                max_depth: 2,
+            },
+        );
+        let imgs = images(3, 64);
+        assert_eq!(engine.submit(0, imgs[0].clone()), Ok(0));
+        assert_eq!(engine.submit(0, imgs[1].clone()), Ok(1));
+        let err = engine.submit(0, imgs[2].clone()).unwrap_err();
+        assert_eq!(
+            err,
+            Rejected {
+                tenant: 0,
+                reason: RejectReason::QueueFull {
+                    pending: 2,
+                    limit: 2,
+                },
+            }
+        );
+        let m = engine.lane_metrics(0);
+        assert_eq!((m.admitted, m.shed), (2, 1));
+        assert!((m.shed_rate() - 1.0 / 3.0).abs() < 1e-12);
+        // shedding frees no slot: still full until a poll drains the lane
+        assert!(engine.submit(0, imgs[2].clone()).is_err());
+        assert_eq!(engine.flush().len(), 2);
+        // ids stay dense over the accepted stream: the post-drain accept
+        // continues at 2 (rejections never consumed an id)
+        assert_eq!(engine.submit(0, imgs[2].clone()), Ok(2));
+    }
+
+    #[test]
+    fn guaranteed_lanes_drain_before_best_effort() {
+        let a = tiny_model(64, 8, 3, 54);
+        let b = tiny_model(64, 8, 3, 55);
+        let engine = Engine::multi(
+            &[&a, &b],
+            opts(),
+            BatchPolicy {
+                max_batch: 8,
+                max_wait: Duration::ZERO,
+            },
+            48,
+            &[],
+        )
+        .with_clock(Clock::simulated())
+        .with_admission(
+            0,
+            AdmissionPolicy {
+                class: QosClass::BestEffort,
+                max_depth: usize::MAX,
+            },
+        )
+        .with_admission(
+            1,
+            AdmissionPolicy {
+                class: QosClass::Guaranteed,
+                max_depth: usize::MAX,
+            },
+        );
+        let pacing = engine.calibrate_device_pacing(&[images(4, 64), images(4, 64)]);
+        let engine = engine.with_service(pacing);
+        // both lanes backlogged; lane 1 (guaranteed) must serve first and
+        // its requests must not pay for lane 0's service time
+        for img in images(8, 64) {
+            engine.submit(0, img.clone()).unwrap();
+            engine.submit(1, img).unwrap();
+        }
+        let got = engine.poll();
+        assert_eq!(got.len(), 16);
+        assert_eq!(got[0].tenant, 1, "guaranteed lane drains first");
+        let first_best_effort = got.iter().position(|r| r.tenant == 0).unwrap();
+        assert!(
+            got[..first_best_effort].iter().all(|r| r.tenant == 1),
+            "no interleaving before the guaranteed lane is dry"
+        );
+        let p99_g = engine.lane_metrics(1).p99_ms();
+        let p99_be = engine.lane_metrics(0).p99_ms();
+        assert!(
+            p99_g < p99_be,
+            "guaranteed p99 {p99_g} must undercut best-effort {p99_be}"
+        );
+    }
+
+    #[test]
+    fn device_paced_engine_is_a_deterministic_simulation() {
+        let model = tiny_model(64, 8, 3, 56);
+        let run = || {
+            let engine = Engine::single(
+                &model,
+                opts(),
+                BatchPolicy {
+                    max_batch: 4,
+                    max_wait: ms(2),
+                },
+                crate::accel::DEFAULT_POOL_MACROS,
+            )
+            .with_clock(Clock::simulated());
+            let pacing = engine.calibrate_device_pacing(&[images(4, 64)]);
+            let engine = engine.with_service(pacing);
+            let mut latencies = Vec::new();
+            for (i, img) in images(10, 64).into_iter().enumerate() {
+                engine.clock().advance_to(ms(i as u64));
+                engine.submit(0, img).unwrap();
+                latencies.extend(engine.poll().into_iter().map(|r| r.latency));
+            }
+            latencies.extend(engine.flush().into_iter().map(|r| r.latency));
+            (latencies, engine.lane_metrics(0).served)
+        };
+        let (l1, served1) = run();
+        let (l2, served2) = run();
+        assert_eq!(served1, 10);
+        assert_eq!((l1, served1), (l2, served2), "replay diverged");
+    }
+
+    #[test]
+    fn ingress_ring_sheds_typed_when_full() {
+        let (tx, rx) = ingress_channel(2);
+        let sub = |t| Submission {
+            tenant: t,
+            image: BitVec::ones(8),
+            budget: None,
+        };
+        tx.try_submit(sub(0)).unwrap();
+        tx.try_submit(sub(1)).unwrap();
+        let err = tx.try_submit(sub(7)).unwrap_err();
+        assert_eq!(
+            err,
+            Rejected {
+                tenant: 7,
+                reason: RejectReason::IngressFull { capacity: 2 },
+            }
+        );
+        assert_eq!(rx.recv().unwrap().tenant, 0);
+        // a slot freed: the ring admits again
+        tx.try_submit(sub(3)).unwrap();
+        drop(rx);
+        let err = tx.try_submit(sub(4)).unwrap_err();
+        assert_eq!(err.reason, RejectReason::ShuttingDown);
+    }
+}

@@ -1,0 +1,111 @@
+//! Per-lane service metrics: latency distribution, batch shaping, and
+//! admission outcomes (admitted vs shed).
+//!
+//! One [`ServerMetrics`] per tenant lane.  Latency percentiles come from
+//! a bounded deterministic reservoir (`util::stats::Summary`), so a
+//! long-running lane's memory stays constant; `p999` needs a tail, so the
+//! serving bench sizes its reservoir generously but the default cap is
+//! already exact below 4096 samples.
+
+use crate::util::stats::Summary;
+
+/// Aggregate service metrics for one lane.
+#[derive(Clone, Debug, Default)]
+pub struct ServerMetrics {
+    /// Responses produced (completions).
+    pub served: u64,
+    /// Device batches executed.
+    pub batches: u64,
+    /// Requests accepted into the lane's queue.
+    pub admitted: u64,
+    /// Requests rejected at admission with a typed reason — the lane's
+    /// shed load (`server::Rejected` carries the reason to the caller).
+    pub shed: u64,
+    pub latency_ms: Summary,
+    pub batch_sizes: Summary,
+}
+
+impl ServerMetrics {
+    /// Median latency [ms].  `NaN` until a request has been served — an
+    /// idle server has no latency sample, and `Summary::percentile`
+    /// documents the `NaN` sentinel rather than panicking; report
+    /// printers should show a placeholder (see `examples/serve.rs`).
+    pub fn p50_ms(&self) -> f64 {
+        self.latency_ms.percentile(50.0)
+    }
+
+    /// 99th-percentile latency [ms]; `NaN` until a request has been
+    /// served (see [`Self::p50_ms`]).
+    pub fn p99_ms(&self) -> f64 {
+        self.latency_ms.percentile(99.0)
+    }
+
+    /// 99.9th-percentile latency [ms]; `NaN` until a request has been
+    /// served.  Tail fidelity is bounded by the reservoir — exact below
+    /// its capacity, an estimate beyond.
+    pub fn p999_ms(&self) -> f64 {
+        self.latency_ms.percentile(99.9)
+    }
+
+    pub fn mean_batch(&self) -> f64 {
+        self.batch_sizes.mean()
+    }
+
+    /// Fraction of offered load rejected at admission (0.0 when nothing
+    /// was offered).
+    pub fn shed_rate(&self) -> f64 {
+        let offered = self.admitted + self.shed;
+        if offered == 0 {
+            0.0
+        } else {
+            self.shed as f64 / offered as f64
+        }
+    }
+
+    /// Completions per second of the given observation window.
+    pub fn goodput(&self, window_s: f64) -> f64 {
+        if window_s > 0.0 {
+            self.served as f64 / window_s
+        } else {
+            0.0
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn idle_metrics_report_sentinels_not_panics() {
+        let m = ServerMetrics::default();
+        assert!(m.p50_ms().is_nan());
+        assert!(m.p99_ms().is_nan());
+        assert!(m.p999_ms().is_nan());
+        assert!(m.mean_batch().is_nan());
+        assert_eq!(m.shed_rate(), 0.0);
+        assert_eq!(m.goodput(1.0), 0.0);
+    }
+
+    #[test]
+    fn shed_rate_and_goodput_arithmetic() {
+        let mut m = ServerMetrics::default();
+        m.admitted = 75;
+        m.shed = 25;
+        m.served = 60;
+        assert!((m.shed_rate() - 0.25).abs() < 1e-12);
+        assert!((m.goodput(2.0) - 30.0).abs() < 1e-12);
+        assert_eq!(m.goodput(0.0), 0.0);
+    }
+
+    #[test]
+    fn percentiles_cover_the_tail() {
+        let mut m = ServerMetrics::default();
+        for i in 0..1000 {
+            m.latency_ms.push(i as f64);
+        }
+        assert!((m.p50_ms() - 499.5).abs() < 1.0);
+        assert!(m.p999_ms() > m.p99_ms());
+        assert!(m.p999_ms() <= 999.0);
+    }
+}

@@ -1,84 +1,61 @@
-//! In-process inference server: a request/response loop over channels with
-//! a dynamic batcher in front of the resident [`MacroPool`] — the shape a
-//! deployment would put around the accelerator (tokio is unavailable
-//! offline; std mpsc + threads carry the same architecture).
+//! In-process inference serving stack, staged as
+//! **ingress → lane → executor** (tokio is unavailable offline; std mpsc
+//! + scoped threads carry the same architecture):
 //!
-//! The pool keeps every layer's weights programmed across the server's
-//! lifetime, so a served batch never reprograms; under a full macro
-//! budget every schedule threshold's rails are also pre-tuned (zero
-//! retunes at steady state), and under a degraded budget the placement
-//! planner shares output macros between thresholds, paying a bounded,
-//! tracked retune cost per batch (see `accel::planner`).  Only models
-//! whose hidden loads exceed the budget run on the reload scheduler
-//! inside the pool.
+//! * [`clock`] — the time seam: wall vs deterministic simulated time.
+//!   Every scheduling decision reads a [`Clock`]; no raw `Instant::now()`
+//!   survives in the serving stack.
+//! * [`engine`] — the unified core: bounded-MPSC ingress, per-tenant
+//!   batcher lanes with half-budget deadline closing, QoS-aware
+//!   admission with typed [`Rejected`] backpressure, and the executor
+//!   that drains ready batches into the resident pool.
+//! * [`metrics`] — per-lane latency/goodput/shed accounting.
+//! * [`loadgen`] — deterministic open-loop arrival processes (Poisson,
+//!   bursty, diurnal) for overload studies and `benches/serving.rs`.
+//!
+//! [`Server`] and [`MultiServer`] are thin facades over one [`Engine`]:
+//! same pool residency guarantees as before (weights stay programmed for
+//! the server's lifetime; degraded budgets share output macros with a
+//! planned retune bound — see `accel::planner`), same delta-based device
+//! stats, but one implementation of the poll loop instead of two.  The
+//! facades run unbounded admission on a wall clock; tests and benches
+//! drive the [`Engine`] directly for simulated time, admission bounds,
+//! and QoS classes.
+
+pub mod clock;
+pub mod engine;
+pub mod loadgen;
+pub mod metrics;
+
+pub use clock::{Clock, Timestamp};
+pub use engine::{
+    ingress_channel, AdmissionPolicy, Engine, IngressTx, QosClass, RejectReason, Rejected,
+    Response, ServiceModel, Submission,
+};
+pub use loadgen::{Arrival, ArrivalProcess, Workload};
+pub use metrics::ServerMetrics;
 
 use std::sync::mpsc;
-use std::time::{Duration, Instant};
+use std::time::Duration;
 
-use crate::accel::{
-    BatchPolicy, Batcher, MacroPool, MultiPool, PipelineOptions, PoolMode, Request, RunStats,
-    DEFAULT_POOL_MACROS,
-};
+use crate::accel::{BatchPolicy, MacroPool, MultiPool, PipelineOptions, PoolMode, RunStats};
 use crate::bnn::model::MappedModel;
 use crate::util::bitops::BitVec;
-use crate::util::stats::Summary;
 
-/// A classification response.
-#[derive(Clone, Debug)]
-pub struct Response {
-    pub id: u64,
-    /// Tenant that served the request (0 for single-model servers).  Ids
-    /// are unique per tenant lane, so (tenant, id) identifies a request
-    /// on a [`MultiServer`].
-    pub tenant: usize,
-    pub prediction: usize,
-    pub votes: Vec<u32>,
-    pub latency: Duration,
-}
+/// Bounded ingress depth used by [`serve_workload`]'s producer seam.
+const INGRESS_CAPACITY: usize = 1024;
 
-/// Aggregate service metrics.
-#[derive(Clone, Debug, Default)]
-pub struct ServerMetrics {
-    pub served: u64,
-    pub batches: u64,
-    pub latency_ms: Summary,
-    pub batch_sizes: Summary,
-}
-
-impl ServerMetrics {
-    /// Median latency [ms].  `NaN` until a request has been served — an
-    /// idle server has no latency sample, and `Summary::percentile`
-    /// documents the `NaN` sentinel rather than panicking; report
-    /// printers should show a placeholder (see `examples/serve.rs`).
-    pub fn p50_ms(&self) -> f64 {
-        self.latency_ms.percentile(50.0)
-    }
-
-    /// 99th-percentile latency [ms]; `NaN` until a request has been
-    /// served (see [`Self::p50_ms`]).
-    pub fn p99_ms(&self) -> f64 {
-        self.latency_ms.percentile(99.0)
-    }
-
-    pub fn mean_batch(&self) -> f64 {
-        self.batch_sizes.mean()
-    }
-}
-
-/// Synchronous single-threaded server core: feed requests in, drive the
-/// batcher + pool, collect responses.  The threaded front-end
-/// (`serve_workload`) wraps this with producer threads.
+/// Single-tenant facade over the serving [`Engine`]: feed requests in,
+/// drive the batcher + pool, collect responses.  The threaded front-end
+/// ([`serve_workload`]) wraps this with producer threads over the bounded
+/// ingress.
 pub struct Server<'m> {
-    pool: MacroPool<'m>,
-    batcher: Batcher,
-    pub metrics: ServerMetrics,
-    /// Inferences already reported by `take_device_stats` (delta base).
-    stats_reported: u64,
+    engine: Engine<'m>,
 }
 
 impl<'m> Server<'m> {
     pub fn new(model: &'m MappedModel, opts: PipelineOptions, policy: BatchPolicy) -> Self {
-        Self::with_capacity(model, opts, policy, DEFAULT_POOL_MACROS)
+        Self::with_capacity(model, opts, policy, crate::accel::DEFAULT_POOL_MACROS)
     }
 
     /// Server over a pool planned for an explicit macro budget (degraded
@@ -91,26 +68,31 @@ impl<'m> Server<'m> {
         max_macros: usize,
     ) -> Self {
         Server {
-            pool: MacroPool::with_capacity(model, opts, max_macros),
-            batcher: Batcher::new(policy),
-            metrics: ServerMetrics::default(),
-            stats_reported: 0,
+            engine: Engine::single(model, opts, policy, max_macros),
         }
     }
 
     /// Execution mode of the backing pool (resident vs reload fallback).
     pub fn pool_mode(&self) -> PoolMode {
-        self.pool.mode()
+        self.engine.pool_mode(0)
     }
 
     /// The backing pool (diagnostics: macro count, operating points).
     pub fn pool(&self) -> &MacroPool<'m> {
-        &self.pool
+        self.engine.single_pool()
     }
 
-    /// Enqueue one request; returns its id.
+    /// The underlying engine (simulated clocks, admission policies, QoS —
+    /// everything beyond the facade's defaults).
+    pub fn engine(&self) -> &Engine<'m> {
+        &self.engine
+    }
+
+    /// Enqueue one request; returns its id.  The facade's lane is
+    /// unbounded (default [`AdmissionPolicy`]), so admission never
+    /// rejects.
     pub fn submit(&mut self, image: BitVec) -> u64 {
-        self.batcher.push(image)
+        self.engine.submit(0, image).expect("facade lane is unbounded")
     }
 
     /// Flush pending requests as long as the policy says so (or `force`).
@@ -123,52 +105,21 @@ impl<'m> Server<'m> {
     /// above the threshold.)
     pub fn poll(&mut self, force: bool) -> Vec<Response> {
         if force {
-            let batch = self.batcher.drain_all();
-            return self.run_batch(batch);
+            self.engine.flush()
+        } else {
+            self.engine.poll()
         }
-        let mut responses = Vec::new();
-        while self.batcher.ready(Instant::now()) {
-            let batch = self.batcher.drain_batch();
-            if batch.is_empty() {
-                break;
-            }
-            responses.extend(self.run_batch(batch));
-        }
-        responses
     }
 
-    /// Classify one drained batch and record its metrics.
-    fn run_batch(&mut self, batch: Vec<Request>) -> Vec<Response> {
-        if batch.is_empty() {
-            return Vec::new();
-        }
-        // move the images out of the requests — the classify path never
-        // clones a request body
-        let mut meta = Vec::with_capacity(batch.len());
-        let mut images = Vec::with_capacity(batch.len());
-        for req in batch {
-            meta.push((req.id, req.enqueued));
-            images.push(req.image);
-        }
-        let results = self.pool.classify_batch(&images);
-        let done = Instant::now();
-        self.metrics.batches += 1;
-        self.metrics.batch_sizes.push(images.len() as f64);
-        meta.into_iter()
-            .zip(results)
-            .map(|((id, enqueued), (votes, prediction))| {
-                let latency = done.duration_since(enqueued);
-                self.metrics.served += 1;
-                self.metrics.latency_ms.push(latency.as_secs_f64() * 1e3);
-                Response {
-                    id,
-                    tenant: 0,
-                    prediction,
-                    votes,
-                    latency,
-                }
-            })
-            .collect()
+    /// Snapshot of the service metrics.
+    pub fn metrics(&self) -> ServerMetrics {
+        self.engine.lane_metrics(0)
+    }
+
+    /// Clear the latency/batch-size summaries (drop warmup samples at an
+    /// epoch boundary; counters keep accumulating).
+    pub fn reset_latency_metrics(&mut self) {
+        self.engine.reset_latency_metrics(0);
     }
 
     /// Drain device statistics accumulated since the *previous* call.
@@ -177,29 +128,24 @@ impl<'m> Server<'m> {
     /// report, so calling this twice never double-counts (the pool's
     /// cycle/event counters are drained by `take_stats` and the served
     /// total is diffed against the last report).
-    pub fn take_device_stats(&mut self) -> crate::accel::RunStats {
-        let delta = self.metrics.served - self.stats_reported;
-        self.stats_reported = self.metrics.served;
-        self.pool.take_stats(delta)
+    pub fn take_device_stats(&mut self) -> RunStats {
+        self.engine.take_device_stats(0)
     }
 }
 
-/// Multi-tenant server core: one [`MultiPool`] (one macro budget shared
-/// across N models), one batcher lane and one [`ServerMetrics`] per
-/// tenant.  Requests are tenant-tagged at submission; lanes batch
-/// independently (a device batch is always tenant-homogeneous — tenants
-/// are different models) and `poll` drains every lane's ready batches.
+/// Multi-tenant facade over the same [`Engine`]: one `MultiPool` (one
+/// macro budget shared across N models), one batcher lane and one
+/// [`ServerMetrics`] per tenant.  Requests are tenant-tagged at
+/// submission; lanes batch independently (a device batch is always
+/// tenant-homogeneous — tenants are different models) and `poll` drains
+/// every lane's ready batches.
 pub struct MultiServer<'m> {
-    pool: MultiPool<'m>,
-    lanes: Vec<Batcher>,
-    pub metrics: Vec<ServerMetrics>,
-    /// Per-tenant inferences already reported (delta bases).
-    stats_reported: Vec<u64>,
+    engine: Engine<'m>,
 }
 
 impl<'m> MultiServer<'m> {
     /// Server over `models` sharing `max_macros` with equal traffic
-    /// shares (see [`MultiPool::new`]).
+    /// shares (see `MultiPool::new`).
     pub fn new(
         models: &[&'m MappedModel],
         opts: PipelineOptions,
@@ -219,100 +165,64 @@ impl<'m> MultiServer<'m> {
         max_macros: usize,
         shares: &[f64],
     ) -> Self {
-        let pool = MultiPool::with_shares(models, opts, max_macros, 1, shares);
-        let n = pool.n_tenants();
         MultiServer {
-            pool,
-            lanes: (0..n).map(|_| Batcher::new(policy)).collect(),
-            metrics: vec![ServerMetrics::default(); n],
-            stats_reported: vec![0; n],
+            engine: Engine::multi(models, opts, policy, max_macros, shares),
         }
     }
 
     pub fn n_tenants(&self) -> usize {
-        self.lanes.len()
+        self.engine.n_lanes()
     }
 
     /// The backing multi-tenant pool (plans, modes, diagnostics).
     pub fn pool(&self) -> &MultiPool<'m> {
-        &self.pool
+        self.engine.multi_pool()
+    }
+
+    /// The underlying engine (see [`Server::engine`]).
+    pub fn engine(&self) -> &Engine<'m> {
+        &self.engine
     }
 
     /// Enqueue one request for `tenant`; returns its id (unique within
-    /// the tenant's lane — pair with the tenant for a global key).
+    /// the tenant's lane — pair with the tenant for a global key).  The
+    /// facade's lanes are unbounded, so admission never rejects.
     pub fn submit(&mut self, tenant: usize, image: BitVec) -> u64 {
-        self.lanes[tenant].push_tagged(tenant, image)
+        self.engine.submit(tenant, image).expect("lanes are unbounded")
     }
 
     /// Flush every tenant lane as long as its policy says so (or `force`).
     /// Returns completed responses across all tenants.  Like
     /// [`Server::poll`], each lane drains *every* ready batch per call.
     pub fn poll(&mut self, force: bool) -> Vec<Response> {
-        let mut responses = Vec::new();
-        for tenant in 0..self.lanes.len() {
-            if force {
-                let batch = self.lanes[tenant].drain_all();
-                responses.extend(self.run_lane(tenant, batch));
-                continue;
-            }
-            while self.lanes[tenant].ready(Instant::now()) {
-                let batch = self.lanes[tenant].drain_batch();
-                if batch.is_empty() {
-                    break;
-                }
-                responses.extend(self.run_lane(tenant, batch));
-            }
+        if force {
+            self.engine.flush()
+        } else {
+            self.engine.poll()
         }
-        responses
     }
 
-    /// Classify one tenant's drained batch and record its lane metrics.
-    fn run_lane(&mut self, tenant: usize, batch: Vec<Request>) -> Vec<Response> {
-        if batch.is_empty() {
-            return Vec::new();
-        }
-        let mut meta = Vec::with_capacity(batch.len());
-        let mut images = Vec::with_capacity(batch.len());
-        for req in batch {
-            debug_assert_eq!(req.tenant, tenant, "lane holds one tenant");
-            meta.push((req.id, req.enqueued));
-            images.push(req.image);
-        }
-        let results = self.pool.classify_batch(tenant, &images);
-        let done = Instant::now();
-        let metrics = &mut self.metrics[tenant];
-        metrics.batches += 1;
-        metrics.batch_sizes.push(images.len() as f64);
-        meta.into_iter()
-            .zip(results)
-            .map(|((id, enqueued), (votes, prediction))| {
-                let latency = done.duration_since(enqueued);
-                metrics.served += 1;
-                metrics.latency_ms.push(latency.as_secs_f64() * 1e3);
-                Response {
-                    id,
-                    tenant,
-                    prediction,
-                    votes,
-                    latency,
-                }
-            })
-            .collect()
+    /// Snapshot of one tenant's service metrics.
+    pub fn metrics(&self, tenant: usize) -> ServerMetrics {
+        self.engine.lane_metrics(tenant)
+    }
+
+    /// Clear one tenant's latency/batch-size summaries (epoch boundary).
+    pub fn reset_latency_metrics(&mut self, tenant: usize) {
+        self.engine.reset_latency_metrics(tenant);
     }
 
     /// Drain one tenant's device statistics accumulated since the
     /// previous call for that tenant (delta-based, like
     /// [`Server::take_device_stats`]).
     pub fn take_device_stats(&mut self, tenant: usize) -> RunStats {
-        let delta = self.metrics[tenant].served - self.stats_reported[tenant];
-        self.stats_reported[tenant] = self.metrics[tenant].served;
-        self.pool.take_stats(tenant, delta)
+        self.engine.take_device_stats(tenant)
     }
 }
 
 /// Drive a server with a workload produced by `n_producers` threads, each
-/// submitting a share of `images` with `inter_arrival` spacing.  Returns
-/// (responses in completion order, metrics).
+/// submitting a share of `images` with `inter_arrival` spacing through
+/// the bounded ingress.  Returns (responses in completion order, metrics).
 pub fn serve_workload(
     model: &MappedModel,
     opts: PipelineOptions,
@@ -328,7 +238,7 @@ pub fn serve_workload(
         images,
         n_producers,
         inter_arrival,
-        DEFAULT_POOL_MACROS,
+        crate::accel::DEFAULT_POOL_MACROS,
     )
 }
 
@@ -343,15 +253,21 @@ pub fn serve_workload_with_capacity(
     inter_arrival: Duration,
     max_macros: usize,
 ) -> (Vec<Response>, ServerMetrics) {
-    let (tx, rx) = mpsc::channel::<BitVec>();
+    let (tx, rx) = ingress_channel(INGRESS_CAPACITY);
     std::thread::scope(|s| {
-        // producers
+        // producers feed the bounded ingress (blocking sends: a closed
+        // loop never sheds, it just backpressures the producer threads)
         let per = images.len().div_ceil(n_producers.max(1));
         for chunk in images.chunks(per.max(1)) {
             let tx = tx.clone();
             s.spawn(move || {
                 for img in chunk {
-                    if tx.send(img.clone()).is_err() {
+                    let sub = Submission {
+                        tenant: 0,
+                        image: img.clone(),
+                        budget: None,
+                    };
+                    if tx.submit_blocking(sub).is_err() {
                         return;
                     }
                     if !inter_arrival.is_zero() {
@@ -361,25 +277,29 @@ pub fn serve_workload_with_capacity(
             });
         }
         drop(tx);
-        // consumer: the server loop
-        let mut server = Server::with_capacity(model, opts, policy, max_macros);
+        // consumer: the engine's dispatch loop
+        let engine = Engine::single(model, opts, policy, max_macros);
         let mut responses = Vec::with_capacity(images.len());
         loop {
             match rx.recv_timeout(Duration::from_micros(200)) {
-                Ok(img) => {
-                    server.submit(img);
-                    responses.extend(server.poll(false));
+                Ok(sub) => {
+                    let admitted = match sub.budget {
+                        Some(b) => engine.submit_with_budget(sub.tenant, sub.image, b),
+                        None => engine.submit(sub.tenant, sub.image),
+                    };
+                    admitted.expect("workload lane is unbounded");
+                    responses.extend(engine.poll());
                 }
                 Err(mpsc::RecvTimeoutError::Timeout) => {
-                    responses.extend(server.poll(false));
+                    responses.extend(engine.poll());
                 }
                 Err(mpsc::RecvTimeoutError::Disconnected) => {
-                    responses.extend(server.poll(true));
+                    responses.extend(engine.flush());
                     break;
                 }
             }
         }
-        let metrics = server.metrics.clone();
+        let metrics = engine.lane_metrics(0);
         (responses, metrics)
     })
 }
@@ -429,6 +349,8 @@ mod tests {
         );
         assert_eq!(responses.len(), 40);
         assert_eq!(metrics.served, 40);
+        assert_eq!(metrics.admitted, 40, "every request admitted");
+        assert_eq!(metrics.shed, 0, "unbounded lane never sheds");
         let mut ids: Vec<u64> = responses.iter().map(|r| r.id).collect();
         ids.sort_unstable();
         ids.dedup();
@@ -496,7 +418,11 @@ mod tests {
         }
         let got = server.poll(false);
         assert_eq!(got.len(), 24, "3×max_batch burst must clear in one poll");
-        assert_eq!(server.metrics.batches, 3, "drained as policy-sized batches");
+        assert_eq!(
+            server.metrics().batches,
+            3,
+            "drained as policy-sized batches"
+        );
         assert!(server.poll(false).is_empty(), "queue actually empty");
     }
 
@@ -516,7 +442,7 @@ mod tests {
         }
         let got = server.poll(false);
         assert_eq!(got.len(), 19, "two full batches + the due partial one");
-        assert_eq!(server.metrics.batches, 3);
+        assert_eq!(server.metrics().batches, 3);
     }
 
     #[test]
@@ -611,13 +537,15 @@ mod tests {
         // must return the documented NaN sentinel, never index-panic
         let model = tiny_model(64, 8, 3, 39);
         let server = Server::new(&model, opts(), BatchPolicy::default());
-        assert!(server.metrics.p50_ms().is_nan());
-        assert!(server.metrics.p99_ms().is_nan());
-        assert!(server.metrics.mean_batch().is_nan());
+        assert!(server.metrics().p50_ms().is_nan());
+        assert!(server.metrics().p99_ms().is_nan());
+        assert!(server.metrics().p999_ms().is_nan());
+        assert!(server.metrics().mean_batch().is_nan());
         // a multi-tenant server's idle lanes behave the same way
         let b = tiny_model(64, 8, 3, 40);
         let multi = MultiServer::new(&[&model, &b], opts(), BatchPolicy::default(), 16);
-        for m in &multi.metrics {
+        for t in 0..multi.n_tenants() {
+            let m = multi.metrics(t);
             assert!(m.p50_ms().is_nan());
             assert!(m.p99_ms().is_nan());
         }
@@ -630,8 +558,8 @@ mod tests {
         // per-tenant predictions bit-identical to standalone pools
         let a = tiny_model(100, 16, 4, 41);
         let b = tiny_model(64, 8, 3, 42);
-        let budget = MacroPool::macros_required(&a, &opts())
-            + MacroPool::macros_required(&b, &opts());
+        let budget =
+            MacroPool::macros_required(&a, &opts()) + MacroPool::macros_required(&b, &opts());
         let policy = BatchPolicy {
             max_batch: 8,
             max_wait: Duration::ZERO,
@@ -661,7 +589,7 @@ mod tests {
             assert_eq!(steady.inferences, 8, "tenant {t}");
             assert_eq!(steady.programming_cycles(), 0, "tenant {t}");
             assert_eq!(steady.events.retunes, 0, "tenant {t}");
-            assert_eq!(server.metrics[t].served, 16, "tenant {t}");
+            assert_eq!(server.metrics(t).served, 16, "tenant {t}");
         }
         // per-tenant predictions match the reload pipelines bit-exactly
         responses.sort_by_key(|r| (r.tenant, r.id));
@@ -701,8 +629,8 @@ mod tests {
         assert_eq!(got.len(), 2);
         let tenants: Vec<usize> = got.iter().map(|r| r.tenant).collect();
         assert!(tenants.contains(&0) && tenants.contains(&1));
-        assert_eq!(server.metrics[0].served, 1);
-        assert_eq!(server.metrics[1].served, 1);
+        assert_eq!(server.metrics(0).served, 1);
+        assert_eq!(server.metrics(1).served, 1);
     }
 
     #[test]

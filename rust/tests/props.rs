@@ -1,12 +1,17 @@
 //! Cross-module property tests (the testkit mini-framework): coordinator
 //! invariants — mapping/routing/batching/placement — over random models.
 
-use picbnn::accel::{planner, MacroPool, MultiPool, Pipeline, PipelineOptions};
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::Mutex;
+use std::time::Duration;
+
+use picbnn::accel::{planner, BatchPolicy, MacroPool, MultiPool, Pipeline, PipelineOptions};
 use picbnn::analog::{MatchlineModel, Pvt, Voltages};
 use picbnn::bnn::infer::{digital_forward, sweep_votes};
 use picbnn::bnn::mapping::{expected_mismatches, program_row, segment_query};
 use picbnn::bnn::model::{MappedLayer, MappedModel};
 use picbnn::cam::{CamArray, CamConfig, NoiseMode};
+use picbnn::server::{Clock, Engine};
 use picbnn::testkit::{forall, prop_assert, Gen};
 use picbnn::util::bitops::{
     available_backends, hamming_words, hamming_words_masked_with, hamming_words_with, BitMatrix,
@@ -267,6 +272,127 @@ fn prop_tenant_isolation_under_any_budget_split() {
                     pool.classify_batch_at(t, &imgs[t], 0) == pipe.classify_batch(&imgs[t]),
                     format!("tenant {t} diverged from the reload pipeline"),
                 )?;
+            }
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_async_engine_bit_identical_to_sync_pool() {
+    // the serving tentpole's correctness claim: any interleaving of
+    // submissions and polls — across tenant lanes, batch sizes, and
+    // worker-thread counts — yields predictions, vote vectors, and RNG
+    // draw order bit-identical to a sequential classify_batch_at on a
+    // standalone pool, in BOTH noise modes.  Holds because request ids
+    // double as noise-stream indices: FIFO lanes drain dense id ranges,
+    // so every device batch replays exactly the streams the sequential
+    // path would, no matter who polls or when.
+    forall(4, 241, |g| {
+        let ma = gen_model(g);
+        let mb = gen_model(g);
+        let models = [&ma, &mb];
+        let counts = [g.usize_in(2, 7), g.usize_in(2, 7)];
+        let imgs: Vec<Vec<BitVec>> = models
+            .iter()
+            .zip(counts)
+            .map(|(m, n)| {
+                (0..n)
+                    .map(|_| BitVec::from_pm1(&g.pm1_vec(m.n_in())))
+                    .collect()
+            })
+            .collect();
+        let max_batch = g.usize_in(1, 5);
+        // either "batch only when full" (simulated time never advances,
+        // so half-budget never fires) or "instantly due" (every poll
+        // closes whatever is queued) — opposite interleaving extremes
+        let max_wait = if g.bool() {
+            Duration::from_secs(3600)
+        } else {
+            Duration::ZERO
+        };
+        let n_workers = g.usize_in(1, 3);
+        // random interleaving of the two tenants' submission sequences
+        let mut order: Vec<usize> = vec![vec![0; counts[0]], vec![1; counts[1]]].concat();
+        for i in (1..order.len()).rev() {
+            let j = g.usize_in(0, i);
+            order.swap(i, j);
+        }
+        for analog in [false, true] {
+            let opts = PipelineOptions {
+                noise: if analog {
+                    NoiseMode::Analog
+                } else {
+                    NoiseMode::Nominal
+                },
+                ..Default::default()
+            };
+            // full residency: the engine's batched path must never fall
+            // back to the reload pipeline (which ignores stream bases)
+            let full = MacroPool::macros_required(&ma, &opts)
+                + MacroPool::macros_required(&mb, &opts);
+            let want: Vec<Vec<(Vec<u32>, usize)>> = models
+                .iter()
+                .enumerate()
+                .map(|(t, m)| {
+                    let req = MacroPool::macros_required(m, &opts);
+                    MacroPool::with_capacity(m, opts, req).classify_batch_at(&imgs[t], 0)
+                })
+                .collect();
+            let policy = BatchPolicy {
+                max_batch,
+                max_wait,
+            };
+            let engine = Engine::multi(&models, opts, policy, full, &[1.0, 1.0])
+                .with_clock(Clock::simulated());
+            let collected = Mutex::new(Vec::new());
+            let stop = AtomicBool::new(false);
+            std::thread::scope(|s| {
+                for _ in 0..n_workers {
+                    s.spawn(|| {
+                        while !stop.load(Ordering::Acquire) {
+                            let got = engine.poll();
+                            if got.is_empty() {
+                                std::thread::yield_now();
+                            } else {
+                                collected.lock().unwrap().extend(got);
+                            }
+                        }
+                    });
+                }
+                let mut next = [0usize; 2];
+                for &t in &order {
+                    engine
+                        .submit(t, imgs[t][next[t]].clone())
+                        .expect("lanes are unbounded");
+                    next[t] += 1;
+                }
+                stop.store(true, Ordering::Release);
+            });
+            collected.lock().unwrap().extend(engine.flush());
+            let mut got = collected.into_inner().unwrap();
+            prop_assert(
+                got.len() == counts[0] + counts[1],
+                format!(
+                    "analog={analog} workers={n_workers}: {} of {} responses",
+                    got.len(),
+                    counts[0] + counts[1]
+                ),
+            )?;
+            got.sort_by_key(|r| (r.tenant, r.id));
+            for t in 0..2 {
+                let lane: Vec<_> = got.iter().filter(|r| r.tenant == t).collect();
+                prop_assert(lane.len() == counts[t], format!("tenant {t} responses"))?;
+                for (i, r) in lane.iter().enumerate() {
+                    prop_assert(r.id == i as u64, format!("tenant {t}: id gap at {i}"))?;
+                    prop_assert(
+                        r.votes == want[t][i].0 && r.prediction == want[t][i].1,
+                        format!(
+                            "analog={analog} workers={n_workers} max_batch={max_batch}: \
+                             tenant {t} image {i} diverged from the sequential pool"
+                        ),
+                    )?;
+                }
             }
         }
         Ok(())
