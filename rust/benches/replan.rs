@@ -1,0 +1,162 @@
+//! Re-planning convergence bench: a sustained skew flip on a resident
+//! pool, steered by the online `ReplanController` in the inter-batch
+//! gaps (the engine's maintenance seam drives the same loop in serving).
+//!
+//! Scenario: a model whose output schedule has one dominant operating
+//! point plus a distinct tail, pooled at a budget where the pinned set
+//! genuinely matters.  The uniform-traffic plan pins the dominant class;
+//! the measured traffic then flips onto three tail points, so the static
+//! plan's shared funnel keeps cycling (retune stalls every batch) until
+//! the controller re-plans and live-migrates the pins onto the hot band.
+//!
+//! Measured phases, all in deterministic device-cycle accounting:
+//!  * static    — retunes/batch of the pre-flip placement serving the
+//!                flipped skew (the cost of never re-planning).
+//!  * converged — retunes/batch after the controller's migration lands.
+//!  * payback   — one-shot migration cost (row writes + re-park retunes)
+//!                against the measured per-batch saving: must repay
+//!                within the controller's own cost horizon.
+//!
+//! The bench asserts the PR's acceptance criteria — strictly lower
+//! steady-state retunes/batch than the static plan and payback within
+//! the horizon — and writes `BENCH_replan.json` (quick mode writes
+//! `BENCH_replan_quick.json` so a smoke run never replaces the committed
+//! baseline).  CI runs it under `PICBNN_BENCH_QUICK=1`, including a
+//! forced-scalar lane (the numbers are backend-independent by design).
+
+use picbnn::accel::{MacroPool, MigrationStats, PipelineOptions, ReplanConfig, ReplanController};
+use picbnn::benchkit::{
+    bench_artifact_path, emit_json, quick_mode, synth_bits, synth_model, BenchRecord, Table,
+};
+use picbnn::cam::NoiseMode;
+use picbnn::util::bitops::BitVec;
+use picbnn::util::rng::Rng;
+use picbnn::util::Timer;
+
+/// Serve `batches` position-restricted batches and return the retune
+/// stalls per batch the device actually paid (drained counters, so each
+/// window starts clean).
+fn measure_retunes(
+    pool: &MacroPool<'_>,
+    images: &[BitVec],
+    band: &[usize],
+    base: &mut u64,
+    batches: u64,
+) -> f64 {
+    pool.take_stats(0);
+    for _ in 0..batches {
+        pool.classify_batch_positions(images, *base, band);
+        *base += images.len() as u64;
+    }
+    pool.take_stats(0).events.retunes as f64 / batches as f64
+}
+
+fn main() {
+    let t0 = Timer::start();
+    let quick = quick_mode();
+    let opts = PipelineOptions {
+        noise: NoiseMode::Nominal,
+        ..Default::default()
+    };
+    // the replan fixture shape: 8 hidden neurons / 3 classes on 64-bit
+    // inputs, with a schedule of one 8-position dominant class plus four
+    // distinct tail points — at a 4-macro budget the pinned set matters
+    let mut model = synth_model(44, 0x5E4E, &[(8, 64, 512), (3, 8, 512)]);
+    model.schedule = vec![0, 0, 0, 0, 0, 0, 0, 0, 8, 16, 24, 32];
+    let budget = 4usize;
+    let pool = MacroPool::with_capacity(&model, opts, budget);
+    assert!(pool.plan().is_some(), "bench pool must be resident");
+    let before_plan = pool.plan().unwrap();
+
+    let per_batch = if quick { 8 } else { 32 };
+    let window = if quick { 8u64 } else { 64 };
+    let mut rng = Rng::new(0x5E4E, 7);
+    let images: Vec<BitVec> = (0..per_batch).map(|_| synth_bits(64, &mut rng)).collect();
+    // the flipped skew: sustained banded traffic on three tail points
+    // the uniform-traffic incumbent mostly left unpinned
+    let band = [8usize, 9, 10];
+    let mut base = 0u64;
+
+    // phase 1: the static plan pays for the flip every batch
+    let retunes_static = measure_retunes(&pool, &images, &band, &mut base, window);
+
+    // phase 2: the control loop reacts — maintain once per inter-batch
+    // gap until the migration it admits has fully landed
+    let cfg = ReplanConfig {
+        period: 2,
+        decay: 0.5,
+        ..ReplanConfig::default()
+    };
+    let mut ctl = ReplanController::new(&pool, budget, cfg);
+    let mut spent = MigrationStats::default();
+    let mut rounds = 0u64;
+    while ctl.migrations_started == 0 || ctl.migration_in_flight() {
+        pool.classify_batch_positions(&images, base, &band);
+        base += images.len() as u64;
+        spent.add(&ctl.maintain(&pool));
+        rounds += 1;
+        assert!(rounds < 400, "controller failed to converge on the flip");
+    }
+    assert_ne!(
+        pool.plan().unwrap().pin_slot,
+        before_plan.pin_slot,
+        "the migration must move the pinned set"
+    );
+
+    // phase 3: steady state after the migration landed
+    let retunes_converged = measure_retunes(&pool, &images, &band, &mut base, window);
+
+    // acceptance: strictly fewer retune stalls than the static plan, and
+    // the one-shot migration cost repaid within the controller's horizon
+    assert!(
+        retunes_converged < retunes_static,
+        "converged placement must beat the static plan \
+         ({retunes_converged:.2} vs {retunes_static:.2} retunes/batch)"
+    );
+    let saved_cycles_per_batch =
+        (retunes_static - retunes_converged) * cfg.cycles_per_retune as f64;
+    let payback_batches = spent.programming_cycles() as f64 / saved_cycles_per_batch;
+    assert!(
+        payback_batches <= cfg.horizon_batches as f64,
+        "migration cost {} cycles never repays within {} batches",
+        spent.programming_cycles(),
+        cfg.horizon_batches
+    );
+
+    let mut table = Table::new(
+        "replan: skew-flip convergence (device-cycle accounting)",
+        &["phase", "retunes/batch", "steps", "row writes", "payback batches"],
+    );
+    table.row(vec![
+        "static".into(),
+        format!("{retunes_static:.2}"),
+        "-".into(),
+        "-".into(),
+        "-".into(),
+    ]);
+    table.row(vec![
+        "converged".into(),
+        format!("{retunes_converged:.2}"),
+        spent.steps.to_string(),
+        spent.row_writes.to_string(),
+        format!("{payback_batches:.2}"),
+    ]);
+    table.print();
+
+    let records = vec![
+        BenchRecord::new("replan skew-flip [retunes/batch static]", retunes_static, None),
+        BenchRecord::new("replan skew-flip [retunes/batch converged]", retunes_converged, None),
+        BenchRecord::new("replan skew-flip [rounds to converge]", rounds as f64, None),
+        BenchRecord::new("replan skew-flip [migration steps]", spent.steps as f64, None),
+        BenchRecord::new("replan skew-flip [migration row writes]", spent.row_writes as f64, None),
+        BenchRecord::new("replan skew-flip [migration retunes]", spent.retunes as f64, None),
+        BenchRecord::new("replan skew-flip [payback batches]", payback_batches, None),
+    ];
+    let out_path = if quick {
+        bench_artifact_path("BENCH_replan_quick.json")
+    } else {
+        bench_artifact_path("BENCH_replan.json")
+    };
+    emit_json(&out_path, &records).expect("write replan bench artifact");
+    println!("\n[replan done in {:.1}s]", t0.elapsed_s());
+}

@@ -137,6 +137,19 @@ impl Batcher {
         }
     }
 
+    /// When the current queue next becomes ready, if ever: `None` when
+    /// empty, the oldest request's enqueue time when the queue is
+    /// already full (ready immediately), otherwise the oldest request's
+    /// half-budget deadline.  The engine's parked workers sleep until
+    /// this instant instead of spin-polling `ready`.
+    pub fn next_deadline(&self) -> Option<Timestamp> {
+        let first = self.queue.front()?;
+        if self.queue.len() >= self.policy.max_batch {
+            return Some(first.enqueued);
+        }
+        Some(first.enqueued + first.budget / 2)
+    }
+
     /// Take up to `max_batch` requests (FIFO order).
     pub fn drain_batch(&mut self) -> Vec<Request> {
         let n = self.queue.len().min(self.policy.max_batch);
@@ -230,6 +243,24 @@ mod tests {
         assert_eq!(b.drain_batch().len(), 2);
         assert_eq!(b.pending(), 3);
         assert_eq!(b.drain_all().len(), 3);
+    }
+
+    #[test]
+    fn next_deadline_tracks_the_closing_rule() {
+        let mut b = Batcher::new(BatchPolicy {
+            max_batch: 2,
+            max_wait: Duration::from_millis(2),
+        });
+        assert_eq!(b.next_deadline(), None, "empty queue: nothing to wait for");
+        b.push_with_budget(0, img(), ms(3), Duration::from_millis(10));
+        // half the 10 ms budget queues before the batch closes
+        assert_eq!(b.next_deadline(), Some(ms(8)));
+        assert!(!b.ready(ms(7)));
+        assert!(b.ready(ms(8)), "ready exactly at the reported deadline");
+        // a second request fills the batch: ready immediately
+        b.push_with_budget(0, img(), ms(4), Duration::from_millis(10));
+        assert_eq!(b.next_deadline(), Some(ms(3)), "full queue is due now");
+        assert!(b.ready(ms(4)));
     }
 
     #[test]

@@ -56,7 +56,7 @@
 //! interleaving on shared slots.
 
 use std::sync::atomic::{AtomicU64, AtomicUsize, Ordering};
-use std::sync::{Mutex, MutexGuard};
+use std::sync::{Mutex, MutexGuard, RwLock};
 
 use crate::bnn::model::MappedModel;
 use crate::cam::{CamArray, CamConfig};
@@ -69,7 +69,7 @@ use super::pipeline::{
     program_load_into, resolve_schedule, BatchScratch, CategoryCost, Load,
 };
 use super::pipeline::{Pipeline, PipelineOptions, RunStats};
-use super::planner::{self, PlacementPlan, TenantPlan, TenantSpec};
+use super::planner::{self, MigrationPlan, PlacementPlan, TenantPlan, TenantSpec};
 use super::voltage::CalibratedPoint;
 
 /// Default number of simulated macros a pool may instantiate.
@@ -88,6 +88,16 @@ pub enum PoolMode {
 fn macro_seed(base: u64, idx: u64) -> u64 {
     let mut s = base ^ idx.wrapping_mul(0x9E37_79B9_7F4A_7C15);
     splitmix64(&mut s)
+}
+
+/// A fresh, identically-seeded macro for seed slot `seed_idx` — the one
+/// constructor both `build` and live migration use, so a macro rebuilt
+/// mid-migration carries frozen per-row variation bit-identical to the
+/// one a fresh pool of the same plan would hold.
+fn fresh_cam(opts: &PipelineOptions, cfg: CamConfig, seed_idx: u64) -> CamArray {
+    let mut cam = CamArray::new(cfg, opts.pvt, opts.noise, macro_seed(opts.seed, seed_idx));
+    cam.set_noise_scale(opts.noise_scale);
+    cam
 }
 
 /// Operating-point classes of a schedule: a position's class is the first
@@ -187,7 +197,42 @@ impl SharedRouter {
     }
 }
 
-struct Resident {
+/// Aggregate device cost of applied live-migration steps, drained by
+/// [`MacroPool::take_migration_stats`].  Migration work also lands in
+/// the regular per-category device statistics (it *is* device work);
+/// this record attributes it so callers can tell a migration's
+/// programming price apart from the serving steady state.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub struct MigrationStats {
+    /// Migration steps executed.
+    pub steps: u64,
+    /// Rows programmed by those steps (one write cycle per row).
+    pub row_writes: u64,
+    /// Rail retunes those steps paid (re-parks; DAC settle stalls).
+    pub retunes: u64,
+}
+
+impl MigrationStats {
+    pub fn add(&mut self, other: &MigrationStats) {
+        self.steps += other.steps;
+        self.row_writes += other.row_writes;
+        self.retunes += other.retunes;
+    }
+
+    /// Programming cycles spent (a row write is one cycle through the
+    /// write circuitry — same unit as `RunStats::programming_cycles`).
+    pub fn programming_cycles(&self) -> u64 {
+        self.row_writes
+    }
+}
+
+/// The placement-dependent half of a resident pool, swapped atomically
+/// by live migration.  The batch path takes the state read-lock once
+/// per batch; [`MacroPool::apply_migration_step`] takes the write lock
+/// in the gap between batches — no batch ever observes a half-applied
+/// step, and untouched macros (moved, not rebuilt) keep their
+/// accumulated device accounting.
+struct ResidentState {
     plan: PlacementPlan,
     /// Replica sets per hidden (layer, load), parked at the layer's
     /// midpoint operating point.  `None` = cold-spilled to the funnel.
@@ -197,13 +242,26 @@ struct Resident {
     /// one, doubles as the spill funnel).
     output_slots: Vec<Mutex<OutputSlotState>>,
     router: Mutex<SharedRouter>,
+}
+
+struct Resident {
+    state: RwLock<ResidentState>,
     /// Host-device I/O cycles (shared 128-bit bus; same clock domain).
     io_clock: Mutex<SimClock>,
     /// Funnel retunes/row-writes spent serving cold-spilled hidden loads
     /// (moved from the output to the hidden category by `take_stats`).
     spill_cost: Mutex<CategoryCost>,
+    /// Device cost of applied migration steps since the last drain.
+    migration: Mutex<MigrationStats>,
+    /// Accounting carried over from macros a migration retired: their
+    /// accumulated cycles/events would otherwise vanish with the drop
+    /// and deflate the next `take_stats` report.
+    carry: Mutex<RunStats>,
     /// Per-schedule-position access counts (images × visits): the
-    /// measured traffic histogram for [`MacroPool::with_traffic`].
+    /// measured traffic histogram for [`MacroPool::with_traffic`] and
+    /// the re-planning controller.  Positionally stable across
+    /// migrations (the schedule never changes), so it lives outside the
+    /// placement lock.
     traffic: Vec<AtomicU64>,
 }
 
@@ -364,13 +422,9 @@ impl<'m> MacroPool<'m> {
             // frozen per-row variation is identical and results never
             // depend on which replica served an image; spilled loads still
             // consume a seed index so placements stay seed-stable across
-            // budgets
-            let mk_cam = |cfg: CamConfig, seed_idx: u64| {
-                let mut cam =
-                    CamArray::new(cfg, opts.pvt, opts.noise, macro_seed(opts.seed, seed_idx));
-                cam.set_noise_scale(opts.noise_scale);
-                cam
-            };
+            // budgets — and the index is a pure function of (layer, load),
+            // so live migration can rebuild any macro bit-identically
+            let mk_cam = |cfg: CamConfig, seed_idx: u64| fresh_cam(&opts, cfg, seed_idx);
             let mut seed_idx = 0u64;
             let mut hidden_slots = Vec::with_capacity(out_idx);
             for (li, layer) in model.layers[..out_idx].iter().enumerate() {
@@ -433,12 +487,16 @@ impl<'m> MacroPool<'m> {
             let traffic = (0..plan.schedule_len).map(|_| AtomicU64::new(0)).collect();
             (
                 Some(Resident {
-                    plan,
-                    hidden_slots,
-                    output_slots,
-                    router,
+                    state: RwLock::new(ResidentState {
+                        plan,
+                        hidden_slots,
+                        output_slots,
+                        router,
+                    }),
                     io_clock: Mutex::new(SimClock::new()),
                     spill_cost: Mutex::new(CategoryCost::default()),
+                    migration: Mutex::new(MigrationStats::default()),
+                    carry: Mutex::new(RunStats::default()),
                     traffic,
                 }),
                 None,
@@ -476,17 +534,40 @@ impl<'m> MacroPool<'m> {
         }
     }
 
-    /// The placement plan backing a resident pool (`None` in reload mode).
-    pub fn plan(&self) -> Option<&PlacementPlan> {
-        self.resident.as_ref().map(|r| &r.plan)
+    /// The placement plan backing a resident pool (`None` in reload
+    /// mode).  Returned by value: live migration can swap the plan
+    /// between batches, so callers get a consistent snapshot instead of
+    /// a reference into the placement lock.
+    pub fn plan(&self) -> Option<PlacementPlan> {
+        self.resident
+            .as_ref()
+            .map(|r| r.state.read().unwrap().plan.clone())
     }
 
     /// Simulated macros instantiated by this pool (1 in reload mode).
     pub fn n_macros(&self) -> usize {
         match &self.resident {
-            Some(r) => r.plan.macros_used(),
+            Some(r) => r.state.read().unwrap().plan.macros_used(),
             None => 1,
         }
+    }
+
+    /// Hidden-load row counts in planner shape (`[layer][load]`) — the
+    /// migration cost model prices steps in programmed rows, which live
+    /// in the load plans, not in the [`PlacementPlan`].
+    pub fn hidden_load_rows(&self) -> Vec<Vec<usize>> {
+        Self::load_rows(&self.plans)
+    }
+
+    /// Programmed rows of the output load (every output slot holds them).
+    pub fn output_rows(&self) -> usize {
+        let out = &self.plans[self.plans.len() - 1][0];
+        out.neuron_hi - out.neuron_lo
+    }
+
+    /// Operating-point classes of the active schedule (planner input).
+    pub fn schedule_points(&self) -> Vec<usize> {
+        point_classes(&self.schedule)
     }
 
     pub fn schedule(&self) -> &[i32] {
@@ -552,6 +633,38 @@ impl<'m> MacroPool<'m> {
         images: &[BitVec],
         stream_base: u64,
     ) -> Vec<(Vec<u32>, usize)> {
+        self.classify_inner(images, stream_base, None)
+    }
+
+    /// Classify a batch sweeping only the given schedule positions (in
+    /// the given order): the banded/partial-sweep serving mode.  Votes
+    /// accumulate from the swept thresholds alone, so predictions are a
+    /// coarser read than the full Algorithm-1 sweep — but they are
+    /// bit-identical across pools of any placement of this model (the
+    /// identical-seeding rule does not care which slot serves a point).
+    /// Only the swept positions accrue traffic, so sustained banded
+    /// workloads skew the measured histogram and the re-planning
+    /// controller repins toward the band.  Resident pools only (the
+    /// reload fallback has no per-position path).
+    pub fn classify_batch_positions(
+        &self,
+        images: &[BitVec],
+        stream_base: u64,
+        positions: &[usize],
+    ) -> Vec<(Vec<u32>, usize)> {
+        assert!(
+            self.resident.is_some(),
+            "position-restricted sweeps need a resident pool"
+        );
+        self.classify_inner(images, stream_base, Some(positions))
+    }
+
+    fn classify_inner(
+        &self,
+        images: &[BitVec],
+        stream_base: u64,
+        positions: Option<&[usize]>,
+    ) -> Vec<(Vec<u32>, usize)> {
         if images.is_empty() {
             return Vec::new();
         }
@@ -559,6 +672,10 @@ impl<'m> MacroPool<'m> {
             return fb.lock().unwrap().classify_batch(images);
         }
         let resident = self.resident.as_ref().unwrap();
+        // one placement read-lock per batch: migration steps apply under
+        // the write lock in the gaps between batches, so no batch ever
+        // waits on (or observes) a half-applied step
+        let st = resident.state.read().unwrap();
         // pop a scratch arena (first caller builds it); every buffer
         // below reshapes in place, so steady-state batches allocate
         // nothing beyond the returned votes
@@ -568,16 +685,17 @@ impl<'m> MacroPool<'m> {
             .extend((0..images.len() as u64).map(|i| self.image_rng(stream_base + i)));
         s.pack_inputs(images, self.model.layers[0].n_in());
         for layer_idx in 0..self.model.layers.len() - 1 {
-            self.run_hidden(resident, layer_idx, &mut s);
+            self.run_hidden(resident, &st, layer_idx, &mut s);
             // the hidden codes become the next layer's activation block
             std::mem::swap(&mut s.acts, &mut s.next);
         }
-        self.run_output(resident, &mut s);
+        self.run_output(resident, &st, &mut s, positions);
+        let sweep_len = positions.map_or(self.schedule.len(), <[usize]>::len);
         resident
             .io_clock
             .lock()
             .unwrap()
-            .tick(io_cycles_per_image(self.model, self.schedule.len()) * images.len() as u64);
+            .tick(io_cycles_per_image(self.model, sweep_len) * images.len() as u64);
         let out = s.results(self.model.n_classes());
         self.scratch.lock().unwrap().push(s);
         out
@@ -592,7 +710,13 @@ impl<'m> MacroPool<'m> {
     /// stored rows stream once per query tile, per-image noise streams
     /// advance exactly as the sequential path would, and the lock is
     /// held for one batched kernel instead of one search per image.
-    fn run_hidden(&self, resident: &Resident, layer_idx: usize, s: &mut BatchScratch) {
+    fn run_hidden(
+        &self,
+        resident: &Resident,
+        st: &ResidentState,
+        layer_idx: usize,
+        s: &mut BatchScratch,
+    ) {
         let layer = &self.model.layers[layer_idx];
         let n = s.acts.rows();
         let n_out = layer.n_out();
@@ -609,7 +733,7 @@ impl<'m> MacroPool<'m> {
                 * (layer.seg_bounds[load.seg + 1] - layer.seg_bounds[load.seg]) as u64;
             // the query block is repacked in place, never reallocated
             s.pack_queries(layer, load.seg, width);
-            match &resident.hidden_slots[layer_idx][load_idx] {
+            match &st.hidden_slots[layer_idx][load_idx] {
                 Some(slots) => {
                     let mut cam = slots.acquire();
                     cam.search_batch_rows_into_rngs(
@@ -625,7 +749,7 @@ impl<'m> MacroPool<'m> {
                     // slot (the last output slot), park the layer midpoint,
                     // search, and attribute the funnel's cost to the hidden
                     // category
-                    let mut slot = resident.output_slots[resident.plan.pinned].lock().unwrap();
+                    let mut slot = st.output_slots[st.plan.pinned].lock().unwrap();
                     let before = (slot.cam.events.retunes, slot.cam.events.row_writes);
                     let want = SlotRows::Hidden(layer_idx, load_idx);
                     if slot.rows != want {
@@ -666,7 +790,13 @@ impl<'m> MacroPool<'m> {
     /// operating points.  The funnel re-lands the class rows first when
     /// a cold-spilled load used it this batch.  Leaves the flat votes in
     /// `s.votes`.
-    fn run_output(&self, resident: &Resident, s: &mut BatchScratch) {
+    fn run_output(
+        &self,
+        resident: &Resident,
+        st: &ResidentState,
+        s: &mut BatchScratch,
+        positions: Option<&[usize]>,
+    ) {
         let out_idx = self.model.layers.len() - 1;
         let layer = self.model.layers.last().unwrap();
         let out_load = &self.plans[out_idx][0];
@@ -678,15 +808,15 @@ impl<'m> MacroPool<'m> {
         s.votes.clear();
         s.votes.resize(n * n_cls, 0);
         let payload = (layer.n_in() * n_cls) as u64;
-        let pinned = resident.plan.pinned;
-        for k in 0..self.schedule.len() {
+        let pinned = st.plan.pinned;
+        let mut sweep_position = |k: usize, s: &mut BatchScratch| {
             resident.traffic[k].fetch_add(n as u64, Ordering::Relaxed);
-            let point = resident.plan.point_of[k];
-            let slot_idx = match resident.plan.pin_slot[k] {
+            let point = st.plan.point_of[k];
+            let slot_idx = match st.plan.pin_slot[k] {
                 Some(slot) => slot,
-                None => pinned + resident.router.lock().unwrap().route(point),
+                None => pinned + st.router.lock().unwrap().route(point),
             };
-            let mut slot = resident.output_slots[slot_idx].lock().unwrap();
+            let mut slot = st.output_slots[slot_idx].lock().unwrap();
             if slot.rows != SlotRows::Output {
                 program_load_into(&mut slot.cam, layer, out_load);
                 slot.rows = SlotRows::Output;
@@ -707,6 +837,19 @@ impl<'m> MacroPool<'m> {
                     s.votes[base + c] += 1;
                 }
             }
+        };
+        match positions {
+            None => {
+                for k in 0..self.schedule.len() {
+                    sweep_position(k, s);
+                }
+            }
+            Some(ps) => {
+                for &k in ps {
+                    assert!(k < self.schedule.len(), "schedule position out of range");
+                    sweep_position(k, s);
+                }
+            }
         }
     }
 
@@ -722,9 +865,10 @@ impl<'m> MacroPool<'m> {
             return fb.lock().unwrap().take_stats(inferences);
         }
         let resident = self.resident.as_ref().unwrap();
+        let st = resident.state.read().unwrap();
         let mut stats = RunStats {
             inferences,
-            macros: resident.plan.macros_used(),
+            macros: st.plan.macros_used(),
             ..RunStats::default()
         };
         let mut drain = |cam: &mut CamArray, cost: &mut CategoryCost| {
@@ -737,16 +881,25 @@ impl<'m> MacroPool<'m> {
         };
         let mut hidden_cost = CategoryCost::default();
         let mut output_cost = CategoryCost::default();
-        for slots in &resident.hidden_slots {
+        for slots in &st.hidden_slots {
             for slot in slots.iter().flatten() {
                 for replica in &slot.replicas {
                     drain(&mut replica.lock().unwrap(), &mut hidden_cost);
                 }
             }
         }
-        for slot in &resident.output_slots {
+        for slot in &st.output_slots {
             drain(&mut slot.lock().unwrap().cam, &mut output_cost);
         }
+        // accounting of macros a migration retired mid-epoch — merged
+        // before the spill reattribution so a retired funnel slot's
+        // spill work still lands in the hidden category below
+        let carry = std::mem::take(&mut *resident.carry.lock().unwrap());
+        stats.cycles += carry.cycles;
+        stats.stall_s += carry.stall_s;
+        stats.events.add(&carry.events);
+        hidden_cost.add(&carry.hidden_cost);
+        output_cost.add(&carry.output_cost);
         let spill = std::mem::take(&mut *resident.spill_cost.lock().unwrap());
         output_cost.retunes = output_cost.retunes.saturating_sub(spill.retunes);
         output_cost.row_writes = output_cost.row_writes.saturating_sub(spill.row_writes);
@@ -758,6 +911,166 @@ impl<'m> MacroPool<'m> {
         stats.stall_s += io.stall_s;
         io.reset();
         stats
+    }
+
+    /// Execute step `k` of a [`MigrationPlan`] against the live pool:
+    /// the placement transform ([`MigrationPlan::apply_step`]) plus the
+    /// physical reconcile — new macros built with the identical-seeding
+    /// rule (so the pool after any step prefix is bit-indistinguishable
+    /// from a fresh pool of the transformed plan), pinned slots
+    /// re-parked, retired macros dropped with their accounting carried
+    /// into the next `take_stats`.  Runs under the placement write
+    /// lock: call it in the gap between batches (the engine's
+    /// maintenance seam does) and in-flight batches are never stalled
+    /// mid-sweep or split across placements.
+    ///
+    /// Returns this step's device cost; the same cost accumulates into
+    /// [`Self::take_migration_stats`].  Panics in reload mode and on a
+    /// step that does not apply to the current plan.
+    pub fn apply_migration_step(&self, mp: &MigrationPlan, k: usize) -> MigrationStats {
+        let resident = self
+            .resident
+            .as_ref()
+            .expect("live migration needs a resident pool");
+        let mut st = resident.state.write().unwrap();
+        let next = mp.apply_step(&st.plan, k);
+        let cost = self.reconcile(resident, &mut st, next);
+        resident.migration.lock().unwrap().add(&cost);
+        cost
+    }
+
+    /// Drain the device cost of migration steps applied since the last
+    /// call (zero / empty in reload mode).
+    pub fn take_migration_stats(&self) -> MigrationStats {
+        match &self.resident {
+            Some(r) => std::mem::take(&mut *r.migration.lock().unwrap()),
+            None => MigrationStats::default(),
+        }
+    }
+
+    /// Reshape the physical state to `next` (already validated by the
+    /// plan transform).  Only macros whose assignment changed are
+    /// touched: survivors move, never rebuild, so their frozen variation
+    /// and accounting are untouched.
+    fn reconcile(
+        &self,
+        resident: &Resident,
+        st: &mut ResidentState,
+        next: PlacementPlan,
+    ) -> MigrationStats {
+        let mut cost = MigrationStats {
+            steps: 1,
+            ..MigrationStats::default()
+        };
+        let mut carry = resident.carry.lock().unwrap();
+        let out_idx = self.model.layers.len() - 1;
+        // the retired macro's history must survive into take_stats
+        let retire = |carry: &mut RunStats, cam: &CamArray, output: bool| {
+            carry.cycles += cam.clock.cycles;
+            carry.stall_s += cam.clock.stall_s;
+            carry.events.add(&cam.events);
+            let cat = if output {
+                &mut carry.output_cost
+            } else {
+                &mut carry.hidden_cost
+            };
+            cat.retunes += cam.events.retunes;
+            cat.row_writes += cam.events.row_writes;
+        };
+        // --- hidden loads: replica counts follow the plan ---
+        let mut seed_idx = 0u64;
+        for li in 0..out_idx {
+            let layer = &self.model.layers[li];
+            let cfg = CamConfig::fitting(layer.seg_width)
+                .unwrap_or_else(|| panic!("word width {} unsupported", layer.seg_width));
+            for (di, load) in self.plans[li].iter().enumerate() {
+                let want = next.hidden_replicas[li][di];
+                let slot = &mut st.hidden_slots[li][di];
+                let have = slot.as_ref().map_or(0, |s| s.replicas.len());
+                if want < have {
+                    let removed = if want == 0 {
+                        slot.take().expect("have > 0").replicas
+                    } else {
+                        slot.as_mut().unwrap().replicas.split_off(want)
+                    };
+                    for replica in removed {
+                        retire(&mut carry, &replica.into_inner().unwrap(), false);
+                    }
+                } else if want > have {
+                    let slots = slot.get_or_insert_with(|| LoadSlots {
+                        replicas: Vec::new(),
+                        next: AtomicUsize::new(0),
+                    });
+                    for _ in have..want {
+                        // identical seeding: the seed index is the flat
+                        // hidden (layer, load) index, exactly as build()
+                        // assigns it, so the rebuilt macro's frozen
+                        // variation is bit-identical to a fresh pool's
+                        let mut cam = fresh_cam(&self.opts, cfg, seed_idx);
+                        program_load_into(&mut cam, layer, load);
+                        cam.set_voltages(self.hidden_points[li].voltages);
+                        cost.row_writes += cam.events.row_writes;
+                        cost.retunes += cam.events.retunes;
+                        slots.replicas.push(Mutex::new(cam));
+                    }
+                }
+                seed_idx += 1;
+            }
+        }
+        // --- output slots: count, then programming, then parking ---
+        let out_layer = self.model.layers.last().unwrap();
+        let out_cfg =
+            CamConfig::fitting(out_layer.seg_width).expect("output word width unsupported");
+        let out_load = &self.plans[out_idx][0];
+        let want_slots = next.output_macros();
+        if want_slots < st.output_slots.len() {
+            for slot in st.output_slots.split_off(want_slots) {
+                retire(&mut carry, &slot.into_inner().unwrap().cam, true);
+            }
+        }
+        for _ in st.output_slots.len()..want_slots {
+            // every output slot shares the post-hidden seed index
+            let mut cam = fresh_cam(&self.opts, out_cfg, seed_idx);
+            program_load_into(&mut cam, out_layer, out_load);
+            cost.row_writes += cam.events.row_writes;
+            st.output_slots.push(Mutex::new(OutputSlotState {
+                cam,
+                parked: None,
+                rows: SlotRows::Output,
+            }));
+        }
+        // re-park the pinned prefix at its (possibly new) points; free
+        // when the triples coincide, counted by set_voltages otherwise
+        for s in 0..next.pinned {
+            let k = next
+                .pin_slot
+                .iter()
+                .position(|&p| p == Some(s))
+                .expect("pinned slot serves a position");
+            let slot = st.output_slots[s].get_mut().unwrap();
+            if slot.rows != SlotRows::Output {
+                // the slot served as the spill funnel before this step
+                let before = slot.cam.events.row_writes;
+                program_load_into(&mut slot.cam, out_layer, out_load);
+                cost.row_writes += slot.cam.events.row_writes - before;
+                slot.rows = SlotRows::Output;
+                slot.parked = None;
+            }
+            let point = next.point_of[k];
+            if slot.parked != Some(point) {
+                let before = slot.cam.events.retunes;
+                slot.cam.set_voltages(self.output_points[k].voltages);
+                cost.retunes += slot.cam.events.retunes - before;
+                slot.parked = Some(point);
+            }
+        }
+        // shared-slot routing restarts whenever the funnel moved or
+        // resized (slot indices are relative to the pinned prefix)
+        if next.shared_slots != st.plan.shared_slots || next.pinned != st.plan.pinned {
+            *st.router.get_mut().unwrap() = SharedRouter::new(next.shared_slots);
+        }
+        st.plan = next;
+        cost
     }
 }
 
@@ -777,6 +1090,12 @@ pub struct MultiPool<'m> {
     /// The per-tenant plans themselves live in the tenants — moved
     /// there at construction, reassembled on demand by [`Self::plan`].
     tenancy_budget: Option<usize>,
+    // re-partitioning inputs, kept so runtime tenant churn
+    // (add_tenant/remove_tenant) re-plans under the original contract
+    opts: PipelineOptions,
+    budget: usize,
+    workers: usize,
+    shares: Vec<f64>,
 }
 
 impl<'m> MultiPool<'m> {
@@ -821,6 +1140,9 @@ impl<'m> MultiPool<'m> {
             "one histogram per tenant (or an empty slice for uniform)"
         );
         let hist = |t: usize| traffic.get(t).and_then(Option::as_deref);
+        let resolved_shares: Vec<f64> = (0..models.len())
+            .map(|t| shares.get(t).copied().unwrap_or(1.0))
+            .collect();
         let specs: Vec<TenantSpec<'_>> = models
             .iter()
             .enumerate()
@@ -831,7 +1153,7 @@ impl<'m> MultiPool<'m> {
                     hidden_load_rows: MacroPool::load_rows(&plans),
                     schedule_points: point_classes(&schedule),
                     traffic: hist(t),
-                    share: shares.get(t).copied().unwrap_or(1.0),
+                    share: resolved_shares[t],
                 }
             })
             .collect();
@@ -848,6 +1170,10 @@ impl<'m> MultiPool<'m> {
                 MultiPool {
                     tenants,
                     tenancy_budget: Some(tp.budget),
+                    opts,
+                    budget,
+                    workers,
+                    shares: resolved_shares,
                 }
             }
             None => {
@@ -871,6 +1197,10 @@ impl<'m> MultiPool<'m> {
                 MultiPool {
                     tenants,
                     tenancy_budget: None,
+                    opts,
+                    budget,
+                    workers,
+                    shares: resolved_shares,
                 }
             }
         }
@@ -896,7 +1226,7 @@ impl<'m> MultiPool<'m> {
             plans: self
                 .tenants
                 .iter()
-                .map(|t| t.plan().expect("tenancy plans are resident").clone())
+                .map(|t| t.plan().expect("tenancy plans are resident"))
                 .collect(),
         })
     }
@@ -944,6 +1274,137 @@ impl<'m> MultiPool<'m> {
             total.macros += s.macros;
         }
         total
+    }
+
+    /// Execute one step of `mp` against `tenant`'s pool (see
+    /// [`MacroPool::apply_migration_step`]) — sibling tenants never share
+    /// a macro, so their bit-exactness is untouched while one migrates.
+    pub fn apply_migration_step(
+        &self,
+        tenant: usize,
+        mp: &MigrationPlan,
+        k: usize,
+    ) -> MigrationStats {
+        self.tenants[tenant].apply_migration_step(mp, k)
+    }
+
+    /// Drain one tenant's migration cost counters.
+    pub fn take_migration_stats(&self, tenant: usize) -> MigrationStats {
+        self.tenants[tenant].take_migration_stats()
+    }
+
+    /// Admit a new tenant at runtime.  The partition is re-planned from
+    /// every sitting tenant's freshly drained traffic; the new tenant is
+    /// built directly at its target plan, and each sitting tenant gets a
+    /// [`MigrationPlan`] from its current placement to its new one —
+    /// apply the steps incrementally via [`Self::apply_migration_step`]
+    /// (index = position in the returned vec) in the gaps between
+    /// batches.  Until a tenant's migration completes it keeps serving
+    /// bit-stably from its current placement.
+    ///
+    /// Returns one migration per tenant (the new tenant's is empty), or
+    /// an empty vec when the enlarged tenancy no longer fits its floors:
+    /// then sitting tenants are left untouched on their current plans and
+    /// the newcomer gets an even-split degraded pool of its own.
+    pub fn add_tenant(&mut self, model: &'m MappedModel, share: f64) -> Vec<MigrationPlan> {
+        self.repartition(Some((model, share)))
+    }
+
+    /// Retire tenant `t` at runtime: its macros are released back to the
+    /// budget and the survivors re-partition over the freed capacity.
+    /// Tenant indices above `t` shift down by one; the returned
+    /// migrations are indexed by the *new* tenant order (empty vec = the
+    /// shrunken tenancy fell below its floors; survivors stay put).
+    pub fn remove_tenant(&mut self, t: usize) -> Vec<MigrationPlan> {
+        self.tenants.remove(t);
+        self.shares.remove(t);
+        self.repartition(None)
+    }
+
+    /// Re-plan the partition over the current tenant set (plus an
+    /// optional incoming tenant) using drained live traffic, and emit
+    /// per-tenant incremental migrations toward the new plans.
+    fn repartition(&mut self, incoming: Option<(&'m MappedModel, f64)>) -> Vec<MigrationPlan> {
+        // freshly drained per-tenant heat; an all-zero histogram carries
+        // no signal (tenant idle since the last drain) → uniform pricing
+        let hists: Vec<Option<Vec<u64>>> = self
+            .tenants
+            .iter()
+            .map(|p| {
+                let h = p.take_output_traffic();
+                (h.iter().any(|&x| x != 0)).then_some(h)
+            })
+            .collect();
+        let mut specs: Vec<TenantSpec<'_>> = self
+            .tenants
+            .iter()
+            .enumerate()
+            .map(|(t, p)| TenantSpec {
+                hidden_load_rows: p.hidden_load_rows(),
+                schedule_points: p.schedule_points(),
+                traffic: hists[t].as_deref(),
+                share: self.shares[t],
+            })
+            .collect();
+        if let Some((m, share)) = incoming {
+            let plans = plan_loads(m);
+            let schedule = resolve_schedule(m, &self.opts);
+            specs.push(TenantSpec {
+                hidden_load_rows: MacroPool::load_rows(&plans),
+                schedule_points: point_classes(&schedule),
+                traffic: None, // no history yet
+                share,
+            });
+        }
+        match planner::plan_tenants(&specs, self.budget, self.workers) {
+            Some(tp) => {
+                self.tenancy_budget = Some(tp.budget);
+                let mut plans = tp.plans.into_iter();
+                let mut migrations = Vec::with_capacity(specs.len());
+                for (t, pool) in self.tenants.iter_mut().enumerate() {
+                    let target = plans.next().expect("one plan per sitting tenant");
+                    migrations.push(match pool.plan() {
+                        // price the current placement under the same
+                        // measured histogram the re-plan saw, so the
+                        // migration's before/after costs are comparable
+                        Some(cur) => cur.repriced(hists[t].as_deref()).diff(&target),
+                        None => {
+                            // the tenant had degraded to reload mode —
+                            // nothing is resident, so swap in a fresh
+                            // resident pool outright (seeding is
+                            // plan-independent: bit-stable by build)
+                            let empty = target.diff(&target);
+                            *pool = MacroPool::with_plan(pool.model, self.opts, target);
+                            empty
+                        }
+                    });
+                }
+                if let Some((m, share)) = incoming {
+                    let target = plans.next().expect("one plan for the new tenant");
+                    migrations.push(target.diff(&target));
+                    self.tenants.push(MacroPool::with_plan(m, self.opts, target));
+                    self.shares.push(share);
+                }
+                migrations
+            }
+            None => {
+                // below the tenancy floors: never force sitting tenants
+                // through a disruptive rebuild — they keep their current
+                // placements; only a newcomer degrades onto an even split
+                self.tenancy_budget = None;
+                if let Some((m, share)) = incoming {
+                    let per = (self.budget / (self.tenants.len() + 1)).max(1);
+                    self.tenants.push(MacroPool::with_capacity_for_workers(
+                        m,
+                        self.opts,
+                        per,
+                        self.workers,
+                    ));
+                    self.shares.push(share);
+                }
+                Vec::new()
+            }
+        }
     }
 }
 
@@ -1211,7 +1672,7 @@ mod tests {
         let budget = hidden; // one load spills, the rest stay resident
         let pool = MacroPool::with_capacity(&model, nominal(), budget);
         assert_eq!(pool.mode(), PoolMode::Resident);
-        let plan = pool.plan().unwrap().clone();
+        let plan = pool.plan().unwrap();
         assert!(plan.spill_active());
         assert_eq!(plan.spilled_loads(), 1);
         assert!(plan.macros_used() <= budget);
@@ -1491,5 +1952,144 @@ mod tests {
         let mut pipe_b = Pipeline::new(&b, nominal());
         assert_eq!(pool.classify_batch(0, &imgs), pipe_a.classify_batch(&imgs));
         assert_eq!(pool.classify_batch(1, &imgs), pipe_b.classify_batch(&imgs));
+    }
+
+    #[test]
+    fn live_migration_is_bit_stable_and_lands_on_the_target_plan() {
+        // tentpole acceptance at the pool layer: re-pin toward a skewed
+        // histogram step by step, serving (analog noise) after every
+        // step — predictions never move, and the final placement equals
+        // the target plan field for field
+        let mut model = tiny_model(64, 8, 3, 44);
+        model.schedule = vec![0, 0, 0, 0, 0, 0, 0, 0, 8, 16, 24, 32];
+        let images = rand_images(8, 64, 29);
+        let opts = PipelineOptions::default(); // analog noise
+        let budget = 4; // 1 hidden load + 2 pinned + 1 shared slot
+        let pool = MacroPool::with_capacity(&model, opts, budget);
+        let old = pool.plan().unwrap();
+        // the measured heat flips to the tail positions
+        let hot: Vec<u64> = (0..12).map(|k| if k >= 8 { 90 } else { 1 }).collect();
+        let target = MacroPool::with_traffic(&model, opts, budget, 1, &hot)
+            .plan()
+            .unwrap();
+        let mp = old.repriced(Some(&hot)).diff(&target);
+        assert!(!mp.is_empty(), "the skew flip must move the pinned set");
+        assert!(
+            mp.predicted_retunes_saved_per_batch() > 0,
+            "re-pinning onto the hot band must save retunes"
+        );
+        let want = pool.classify_batch_at(&images, 0);
+        for k in 0..mp.steps.len() {
+            pool.apply_migration_step(&mp, k);
+            // identical seeding: the placement is invisible to results
+            assert_eq!(pool.classify_batch_at(&images, 0), want, "step {k}");
+        }
+        assert_eq!(pool.plan().unwrap(), mp.target(&old));
+        let mig = pool.take_migration_stats();
+        assert_eq!(mig.steps, mp.steps.len() as u64);
+        assert_eq!(
+            mig.programming_cycles(),
+            mp.programming_cycles_to_apply(&pool.hidden_load_rows(), pool.output_rows())
+        );
+    }
+
+    #[test]
+    fn migration_from_spill_to_full_residency_pays_programming_once() {
+        let model = two_load_model(23);
+        let images = rand_images(8, 100, 9);
+        let required = MacroPool::macros_required(&model, &nominal());
+        let budget = required - 33; // one hidden load cold-spills
+        let pool = MacroPool::with_capacity(&model, nominal(), budget);
+        let old = pool.plan().unwrap();
+        assert!(old.spill_active());
+        let target = MacroPool::plan_for(&model, &nominal(), required).unwrap();
+        assert!(!target.spill_active());
+        let mp = old.diff(&target);
+        assert!(!mp.is_empty());
+        // serve on every intermediate placement: nominal predictions are
+        // placement-independent, so results never move mid-migration
+        let mut pipe = Pipeline::new(&model, nominal());
+        let want = pipe.classify_batch(&images);
+        for k in 0..mp.steps.len() {
+            assert_eq!(pool.classify_batch(&images), want, "before step {k}");
+            pool.apply_migration_step(&mp, k);
+        }
+        assert_eq!(pool.classify_batch(&images), want);
+        assert_eq!(pool.plan().unwrap(), target);
+        let mig = pool.take_migration_stats();
+        assert_eq!(mig.steps, mp.steps.len() as u64);
+        assert_eq!(
+            mig.programming_cycles(),
+            mp.programming_cycles_to_apply(&pool.hidden_load_rows(), pool.output_rows())
+        );
+        assert!(mig.programming_cycles() > 0, "promotion must program rows");
+        // converged: full residency serves with zero recurring cost
+        pool.take_stats(0);
+        for _ in 0..2 {
+            pool.classify_batch(&images);
+        }
+        let steady = pool.take_stats(16);
+        assert_eq!(steady.programming_cycles(), 0);
+        assert_eq!(steady.events.retunes, 0);
+    }
+
+    #[test]
+    fn banded_sweeps_skew_the_measured_histogram() {
+        // classify_batch_positions sweeps only its band, so the drained
+        // histogram reflects the band — the drift signal the re-planning
+        // controller consumes
+        let model = tiny_model(64, 8, 3, 1);
+        let pool = MacroPool::new(&model, nominal());
+        let imgs = rand_images(4, 64, 3);
+        let band = [2usize, 3];
+        let full = pool.classify_batch_at(&imgs, 0);
+        let banded = pool.classify_batch_positions(&imgs, 0, &band);
+        assert_eq!(banded.len(), full.len());
+        let h = pool.take_output_traffic();
+        for (k, &c) in h.iter().enumerate() {
+            let want = if band.contains(&k) { 8 } else { 4 };
+            assert_eq!(c, want, "position {k}");
+        }
+    }
+
+    #[test]
+    fn tenant_churn_migrates_without_disturbing_siblings() {
+        // runtime add/remove: the sitting tenant keeps serving bit-exact
+        // analog results through every incremental migration step while
+        // the partition reshapes around it
+        let a = tiny_model(100, 16, 4, 42);
+        let b = tiny_model(64, 8, 3, 7);
+        let imgs_a = rand_images(12, 100, 5);
+        let imgs_b = rand_images(12, 64, 6);
+        let opts = PipelineOptions::default(); // analog noise
+        let budget = MacroPool::macros_required(&a, &opts) + 4;
+        let mut pool = MultiPool::new(&[&a], opts, budget);
+        let want_a = pool.classify_batch_at(0, &imgs_a, 0);
+        let migs = pool.add_tenant(&b, 1.0);
+        assert_eq!(pool.n_tenants(), 2);
+        assert_eq!(migs.len(), 2);
+        assert!(migs[1].is_empty(), "the newcomer builds at its target");
+        assert!(!migs[0].is_empty(), "the sitting tenant must cede slots");
+        for k in 0..migs[0].steps.len() {
+            pool.apply_migration_step(0, &migs[0], k);
+            assert_eq!(pool.classify_batch_at(0, &imgs_a, 0), want_a, "step {k}");
+        }
+        assert_eq!(
+            pool.take_migration_stats(0).steps,
+            migs[0].steps.len() as u64
+        );
+        // the newcomer serves exactly like a standalone pool of its plan
+        let want_b = pool.classify_batch_at(1, &imgs_b, 0);
+        let alone_b = MacroPool::with_plan(&b, opts, pool.tenant(1).plan().unwrap());
+        assert_eq!(alone_b.classify_batch_at(&imgs_b, 0), want_b);
+        // retiring the newcomer hands its macros back to the survivor
+        let migs = pool.remove_tenant(1);
+        assert_eq!(pool.n_tenants(), 1);
+        assert_eq!(migs.len(), 1);
+        for k in 0..migs[0].steps.len() {
+            pool.apply_migration_step(0, &migs[0], k);
+            assert_eq!(pool.classify_batch_at(0, &imgs_a, 0), want_a, "step {k}");
+        }
+        assert!(pool.tenant(0).n_macros() > MacroPool::macros_required(&a, &opts) / 2);
     }
 }

@@ -9,12 +9,14 @@ pub mod metrics;
 pub mod parallel;
 pub mod pipeline;
 pub mod planner;
+pub mod replan;
 pub mod voltage;
 
 pub use batcher::{BatchPolicy, Batcher, Request};
-pub use macro_pool::{MacroPool, MultiPool, PoolMode, DEFAULT_POOL_MACROS};
+pub use macro_pool::{MacroPool, MigrationStats, MultiPool, PoolMode, DEFAULT_POOL_MACROS};
 pub use metrics::{evaluate, Accuracy};
 pub use parallel::{classify_parallel, classify_parallel_with_budget};
 pub use pipeline::{CategoryCost, Pipeline, PipelineOptions, RunStats};
-pub use planner::{PlacementPlan, TenantPlan, TenantSpec};
+pub use planner::{MigrationPlan, MigrationStep, PlacementPlan, TenantPlan, TenantSpec};
+pub use replan::{ReplanConfig, ReplanController};
 pub use voltage::{CalibratedPoint, VoltageController};

@@ -228,38 +228,8 @@ pub fn plan_traffic(
         }
     }
 
-    // --- cost model: funnel operating-point transitions per batch ---
-    // the funnel's per-batch access sequence is every spilled load (in
-    // execution order; loads of one layer share the layer midpoint) then
-    // every unpinned schedule position in sweep order.  A retune is paid
-    // exactly when the parked triple changes, cyclically across batches.
-    let mut funnel: Vec<(u8, usize)> = Vec::new();
-    for (li, layer) in hidden_replicas.iter().enumerate() {
-        for &r in layer.iter() {
-            if r == 0 {
-                funnel.push((1, li)); // spilled load parks the layer midpoint
-            }
-        }
-    }
-    for (k, slot) in pin_slot.iter().enumerate() {
-        if slot.is_none() {
-            funnel.push((0, point_of[k]));
-        }
-    }
-    let distinct_funnel = {
-        let mut seen: Vec<(u8, usize)> = Vec::new();
-        for &e in &funnel {
-            if !seen.contains(&e) {
-                seen.push(e);
-            }
-        }
-        seen.len()
-    };
-    let predicted_retunes = if distinct_funnel <= shared_slots {
-        0 // every funnel point parks permanently
-    } else {
-        cyclic_transitions(&funnel)
-    };
+    let predicted_retunes =
+        funnel_retunes(&hidden_replicas, &pin_slot, &point_of, shared_slots, traffic);
 
     Some(PlacementPlan {
         budget,
@@ -285,22 +255,71 @@ fn load_order(hidden_load_rows: &[Vec<usize>]) -> Vec<(usize, usize)> {
     order
 }
 
-/// Transitions in a cyclic sequence (how often adjacent entries differ,
-/// wrapping the end around to the start): the steady-state retunes/batch
-/// a single LRU funnel slot pays for this access pattern.
-fn cyclic_transitions(seq: &[(u8, usize)]) -> u64 {
-    if seq.len() <= 1 {
+/// Cost model: funnel operating-point transitions per batch.  The
+/// funnel's per-batch access sequence is every spilled load (in
+/// execution order; loads of one layer share the layer midpoint) then
+/// every unpinned schedule position in sweep order.  A retune is paid
+/// exactly when the parked triple changes, cyclically across batches.
+///
+/// The histogram *weights* the model: `traffic[k]` is position `k`'s
+/// measured access count, so a position that position-restricted sweeps
+/// (`MacroPool::classify_batch_positions`) never touch contributes
+/// nothing, and one accessed in a fraction of batches contributes that
+/// fraction of a transition (normalised by the hottest position, rounded
+/// half-up).  Uniform traffic (`None`, or all counts equal) reproduces
+/// the unweighted transition count exactly.  Shared between
+/// [`plan_traffic`], [`PlacementPlan::repriced`] and
+/// [`MigrationStep::apply_to`] so a migrated plan prices its funnel
+/// exactly like a freshly planned one.
+fn funnel_retunes(
+    hidden_replicas: &[Vec<usize>],
+    pin_slot: &[Option<usize>],
+    point_of: &[usize],
+    shared_slots: usize,
+    traffic: Option<&[u64]>,
+) -> u64 {
+    let w_of = |k: usize| traffic.map_or(1, |t| t[k]);
+    let w_max = (0..pin_slot.len()).map(&w_of).max().unwrap_or(1).max(1);
+    let mut funnel: Vec<((u8, usize), u64)> = Vec::new();
+    for (li, layer) in hidden_replicas.iter().enumerate() {
+        for &r in layer.iter() {
+            if r == 0 {
+                // spilled loads reload every batch: full weight
+                funnel.push(((1, li), w_max));
+            }
+        }
+    }
+    for (k, slot) in pin_slot.iter().enumerate() {
+        if slot.is_none() && w_of(k) > 0 {
+            funnel.push(((0, point_of[k]), w_of(k)));
+        }
+    }
+    let distinct_funnel = {
+        let mut seen: Vec<(u8, usize)> = Vec::new();
+        for &(e, _) in &funnel {
+            if !seen.contains(&e) {
+                seen.push(e);
+            }
+        }
+        seen.len()
+    };
+    if distinct_funnel <= shared_slots {
+        return 0; // every funnel point parks permanently
+    }
+    if funnel.len() <= 1 {
         return 0;
     }
-    let mut t = 0u64;
-    let mut prev = *seq.last().unwrap();
-    for &e in seq {
+    // weighted cyclic transitions: a switch *to* an entry costs that
+    // entry's access frequency (w / w_max) of a retune per batch
+    let mut acc = 0u64;
+    let mut prev = funnel.last().unwrap().0;
+    for &(e, w) in &funnel {
         if e != prev {
-            t += 1;
+            acc += w;
         }
         prev = e;
     }
-    t
+    (acc + w_max / 2) / w_max
 }
 
 impl PlacementPlan {
@@ -360,6 +379,178 @@ impl PlacementPlan {
         self.predicted_retunes
     }
 
+    /// Distinct operating-point classes (`point_of` is a dense 0..n map).
+    fn n_points(&self) -> usize {
+        self.point_of.iter().copied().max().map_or(0, |m| m + 1)
+    }
+
+    /// Sorted distinct operating points currently holding a pinned slot.
+    fn pinned_point_ids(&self) -> Vec<usize> {
+        let mut pts: Vec<usize> = self
+            .point_of
+            .iter()
+            .zip(&self.pin_slot)
+            .filter_map(|(&p, s)| s.map(|_| p))
+            .collect();
+        pts.sort_unstable();
+        pts.dedup();
+        pts
+    }
+
+    /// Rebuild `pin_slot`/`pinned` from a sorted, deduped pinned-point
+    /// set, using the same canonical slot numbering as [`plan_traffic`]
+    /// (slots ascend with the point id) so a migrated plan is
+    /// indistinguishable from a freshly planned one.
+    fn set_pinned_points(&mut self, pts: &[usize]) {
+        let mut slot_of_point: Vec<Option<usize>> = vec![None; self.n_points()];
+        for (slot, &p) in pts.iter().enumerate() {
+            slot_of_point[p] = Some(slot);
+        }
+        self.pin_slot = self.point_of.iter().map(|&p| slot_of_point[p]).collect();
+        self.pinned = pts.len();
+    }
+
+    /// Recurring programming rows per batch a spill plan pays: every
+    /// cold-spilled load reprograms into the funnel each batch, and the
+    /// funnel re-lands the output rows once afterwards.  Zero for
+    /// resident plans.  Row counts come from the pool
+    /// (`MacroPool::hidden_load_rows` / `output_rows`) — the plan itself
+    /// only stores replica counts.
+    pub fn recurring_spill_rows_per_batch(
+        &self,
+        hidden_load_rows: &[Vec<usize>],
+        output_rows: usize,
+    ) -> u64 {
+        let mut rows = 0u64;
+        for (li, layer) in self.hidden_replicas.iter().enumerate() {
+            for (di, &r) in layer.iter().enumerate() {
+                if r == 0 {
+                    rows += hidden_load_rows[li][di] as u64;
+                }
+            }
+        }
+        if rows > 0 {
+            rows += output_rows as u64;
+        }
+        rows
+    }
+
+    /// Clone with the cost model re-priced under a fresh traffic
+    /// histogram (`None` or empty = uniform): the re-planning
+    /// controller prices the *current* plan and a candidate under the
+    /// same measured histogram before deciding whether a migration's
+    /// saving is real, instead of trusting the stale cost the current
+    /// plan was built with.
+    pub fn repriced(&self, traffic: Option<&[u64]>) -> PlacementPlan {
+        let traffic = traffic.filter(|t| !t.is_empty());
+        if let Some(t) = traffic {
+            assert_eq!(t.len(), self.schedule_len, "one traffic count per position");
+        }
+        let mut plan = self.clone();
+        plan.predicted_retunes = funnel_retunes(
+            &plan.hidden_replicas,
+            &plan.pin_slot,
+            &plan.point_of,
+            plan.shared_slots,
+            traffic,
+        );
+        plan
+    }
+
+    /// The minimal typed step sequence migrating `self` into `new`
+    /// (both plans must describe the same model and operating-point
+    /// map).  Steps are ordered so that **every prefix is a valid,
+    /// canonical plan**: replica drops and the funnel's appearance come
+    /// first (freeing budget and giving demoted loads somewhere to
+    /// land), re-pins and releases next, and capacity growth
+    /// (promotions, replicas) last, with a funnel drop only once
+    /// nothing routes through it.  Transiently the pool may hold one
+    /// macro above both budgets when the funnel flips absent → present
+    /// before a release — the price of never stopping the world.
+    pub fn diff(&self, new: &PlacementPlan) -> MigrationPlan {
+        assert_eq!(
+            self.point_of, new.point_of,
+            "diff requires plans of one model and schedule"
+        );
+        assert_eq!(self.schedule_len, new.schedule_len);
+        let shape: Vec<usize> = self.hidden_replicas.iter().map(Vec::len).collect();
+        let new_shape: Vec<usize> = new.hidden_replicas.iter().map(Vec::len).collect();
+        assert_eq!(shape, new_shape, "diff requires identical load shapes");
+
+        let mut steps: Vec<MigrationStep> = Vec::new();
+        let loads = || {
+            self.hidden_replicas
+                .iter()
+                .enumerate()
+                .flat_map(|(li, layer)| (0..layer.len()).map(move |di| (li, di)))
+        };
+
+        // 1. drop surplus replicas (demoted loads keep one for now)
+        for (layer, load) in loads() {
+            let (ro, rn) = (self.hidden_replicas[layer][load], new.hidden_replicas[layer][load]);
+            if ro >= 1 {
+                for _ in rn.max(1)..ro {
+                    steps.push(MigrationStep::DropReplica { layer, load });
+                }
+            }
+        }
+        // 2. the funnel appears before anything needs to route through it
+        for _ in self.shared_slots..new.shared_slots {
+            steps.push(MigrationStep::Reprogram { point: None });
+        }
+        // 3. cold-spill demotions (the funnel now exists to serve them)
+        for (layer, load) in loads() {
+            if self.hidden_replicas[layer][load] >= 1 && new.hidden_replicas[layer][load] == 0 {
+                steps.push(MigrationStep::SpillDemote { layer, load });
+            }
+        }
+        // 4-6. output pinning: re-pin pairs first (slot count unchanged),
+        // then free surplus pins, then program missing ones
+        let po = self.pinned_point_ids();
+        let pn = new.pinned_point_ids();
+        let unpins: Vec<usize> = po.iter().copied().filter(|p| !pn.contains(p)).collect();
+        let pins: Vec<usize> = pn.iter().copied().filter(|p| !po.contains(p)).collect();
+        let paired = unpins.len().min(pins.len());
+        for i in 0..paired {
+            steps.push(MigrationStep::Repin {
+                from: unpins[i],
+                to: pins[i],
+            });
+        }
+        for &p in &unpins[paired..] {
+            steps.push(MigrationStep::Release { point: Some(p) });
+        }
+        for &p in &pins[paired..] {
+            steps.push(MigrationStep::Reprogram { point: Some(p) });
+        }
+        // 7-8. capacity growth: promotions first, then extra replicas
+        for (layer, load) in loads() {
+            if self.hidden_replicas[layer][load] == 0 && new.hidden_replicas[layer][load] >= 1 {
+                steps.push(MigrationStep::SpillPromote { layer, load });
+            }
+        }
+        for (layer, load) in loads() {
+            let (ro, rn) = (self.hidden_replicas[layer][load], new.hidden_replicas[layer][load]);
+            let held = if ro == 0 { rn.min(1) } else { ro.min(rn).max(1) };
+            for _ in held..rn {
+                steps.push(MigrationStep::AddReplica { layer, load });
+            }
+        }
+        // 9. the funnel drops only once the plan is fully pinned + resident
+        for _ in new.shared_slots..self.shared_slots {
+            steps.push(MigrationStep::Release { point: None });
+        }
+
+        MigrationPlan {
+            steps,
+            target_budget: new.budget,
+            retunes_before: self.predicted_retunes,
+            retunes_after: new.predicted_retunes,
+            spill_before: self.spill_active(),
+            spill_after: new.spill_active(),
+        }
+    }
+
     /// One-line human description for reports and examples.
     pub fn describe(&self) -> String {
         let h: usize = self.hidden_replicas.iter().map(Vec::len).sum();
@@ -376,6 +567,273 @@ impl PlacementPlan {
             self.shared_slots,
             self.predicted_retunes_per_batch()
         )
+    }
+}
+
+/// One typed, independently-applicable unit of a live migration between
+/// two [`PlacementPlan`]s of the same model.  Each step is a *pure plan
+/// transform* ([`MigrationStep::apply_to`]) — the pool mirrors it
+/// physically in the gap between batches, so after any step prefix the
+/// pool is exactly a freshly built pool of the transformed plan.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum MigrationStep {
+    /// Move a pinned output slot from operating point `from` to `to`:
+    /// one retune, zero row writes (every output slot holds the same
+    /// programmed rows and differs only in its parked triple).
+    Repin { from: usize, to: usize },
+    /// Program one additional output-row macro: `Some(p)` pins operating
+    /// point `p`, `None` adds a shared funnel slot.  Costs the output
+    /// rows once.
+    Reprogram { point: Option<usize> },
+    /// Free one output macro: `Some(p)` unpins operating point `p` (its
+    /// positions fall back to the funnel), `None` drops a funnel slot —
+    /// valid only once nothing routes through it.  Free to apply.
+    Release { point: Option<usize> },
+    /// Program one more replica of a resident hidden load (costs its
+    /// rows once; replicas share the load's seed, so results are
+    /// bit-identical whichever replica serves).
+    AddReplica { layer: usize, load: usize },
+    /// Drop one replica of a hidden load, keeping at least one.  Free.
+    DropReplica { layer: usize, load: usize },
+    /// Give a cold-spilled hidden load a dedicated macro back: costs
+    /// its rows once, then stops paying the per-batch funnel reload.
+    SpillPromote { layer: usize, load: usize },
+    /// Cold-spill a resident hidden load to the funnel — free to apply
+    /// (dropping a macro writes nothing); the reload cost moves into
+    /// the steady-state model.
+    SpillDemote { layer: usize, load: usize },
+}
+
+impl MigrationStep {
+    /// The plan this step turns `plan` into.  Panics on an invalid
+    /// application (steps come from [`PlacementPlan::diff`], which
+    /// orders them so every prefix is valid).  The result is canonical
+    /// — same slot numbering and cost model as [`plan_traffic`] — and
+    /// its budget only grows past the original on the documented
+    /// transient funnel overshoot.
+    pub fn apply_to(&self, plan: &PlacementPlan) -> PlacementPlan {
+        let mut next = plan.clone();
+        match *self {
+            MigrationStep::AddReplica { layer, load } => {
+                assert!(
+                    next.hidden_replicas[layer][load] >= 1,
+                    "AddReplica on a spilled load — promote first"
+                );
+                next.hidden_replicas[layer][load] += 1;
+            }
+            MigrationStep::DropReplica { layer, load } => {
+                assert!(
+                    next.hidden_replicas[layer][load] >= 2,
+                    "DropReplica would evict the last replica — demote instead"
+                );
+                next.hidden_replicas[layer][load] -= 1;
+            }
+            MigrationStep::SpillPromote { layer, load } => {
+                assert_eq!(next.hidden_replicas[layer][load], 0, "load already resident");
+                next.hidden_replicas[layer][load] = 1;
+            }
+            MigrationStep::SpillDemote { layer, load } => {
+                assert_eq!(
+                    next.hidden_replicas[layer][load], 1,
+                    "demote expects exactly one replica (drop the rest first)"
+                );
+                assert!(next.shared_slots >= 1, "demote needs a funnel to land in");
+                next.hidden_replicas[layer][load] = 0;
+            }
+            MigrationStep::Reprogram { point: None } => {
+                next.shared_slots += 1;
+            }
+            MigrationStep::Release { point: None } => {
+                assert!(next.shared_slots >= 1, "no funnel slot to release");
+                next.shared_slots -= 1;
+                if next.shared_slots == 0 {
+                    assert!(
+                        !next.spill_active() && next.pinned_positions() == next.schedule_len,
+                        "funnel released while positions or spilled loads still route through it"
+                    );
+                }
+            }
+            MigrationStep::Reprogram { point: Some(p) } => {
+                let mut pts = next.pinned_point_ids();
+                assert!(!pts.contains(&p), "point {p} already pinned");
+                assert!(p < next.n_points(), "unknown operating point {p}");
+                pts.push(p);
+                pts.sort_unstable();
+                next.set_pinned_points(&pts);
+            }
+            MigrationStep::Release { point: Some(p) } => {
+                let mut pts = next.pinned_point_ids();
+                let i = pts.iter().position(|&q| q == p).expect("point not pinned");
+                assert!(next.shared_slots >= 1, "unpin needs a funnel to absorb the point");
+                pts.remove(i);
+                next.set_pinned_points(&pts);
+            }
+            MigrationStep::Repin { from, to } => {
+                let mut pts = next.pinned_point_ids();
+                let i = pts.iter().position(|&q| q == from).expect("`from` not pinned");
+                assert!(!pts.contains(&to), "`to` already pinned");
+                assert!(to < next.n_points(), "unknown operating point {to}");
+                assert!(next.shared_slots >= 1, "repin needs a funnel to absorb `from`");
+                pts.remove(i);
+                pts.push(to);
+                pts.sort_unstable();
+                next.set_pinned_points(&pts);
+            }
+        }
+        // mid-flight plans are priced under uniform traffic; the final
+        // step of a MigrationPlan restores the target's traffic-priced
+        // cost (see `MigrationPlan::apply_step`)
+        next.predicted_retunes = funnel_retunes(
+            &next.hidden_replicas,
+            &next.pin_slot,
+            &next.point_of,
+            next.shared_slots,
+            None,
+        );
+        next.budget = next.budget.max(next.macros_used());
+        next
+    }
+
+    /// Row writes applying this step costs (the one-shot programming
+    /// price; retunes are priced separately via the cost model).
+    pub fn programming_rows(&self, hidden_load_rows: &[Vec<usize>], output_rows: usize) -> u64 {
+        match *self {
+            MigrationStep::Reprogram { .. } => output_rows as u64,
+            MigrationStep::AddReplica { layer, load }
+            | MigrationStep::SpillPromote { layer, load } => hidden_load_rows[layer][load] as u64,
+            MigrationStep::Repin { .. }
+            | MigrationStep::Release { .. }
+            | MigrationStep::DropReplica { .. }
+            | MigrationStep::SpillDemote { .. } => 0,
+        }
+    }
+}
+
+/// The typed step sequence migrating one [`PlacementPlan`] into another,
+/// plus the cost-model summary the controller weighs before applying it:
+/// the one-shot programming price ([`MigrationPlan::programming_cycles_to_apply`])
+/// against the recurring steady-state saving
+/// ([`MigrationPlan::predicted_retunes_saved_per_batch`] and the spill
+/// reload-row delta), amortised over a configurable horizon
+/// ([`MigrationPlan::pays_off`]).
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct MigrationPlan {
+    /// Steps in application order; every prefix leaves a valid plan.
+    pub steps: Vec<MigrationStep>,
+    /// Budget of the target plan (the fold restores it on completion —
+    /// intermediate plans may transiently exceed it by one funnel slot).
+    pub target_budget: usize,
+    /// Cost-model retunes/batch of the source plan.
+    pub retunes_before: u64,
+    /// Cost-model retunes/batch of the target plan.
+    pub retunes_after: u64,
+    spill_before: bool,
+    spill_after: bool,
+}
+
+impl MigrationPlan {
+    /// No step to apply — the plans already agree.
+    pub fn is_empty(&self) -> bool {
+        self.steps.is_empty()
+    }
+
+    /// Apply step `k` to the current plan: [`MigrationStep::apply_to`],
+    /// plus — on the final step — restoring the target's budget and
+    /// traffic-priced cost so the fold reproduces the diff's target
+    /// exactly, field for field.
+    pub fn apply_step(&self, current: &PlacementPlan, k: usize) -> PlacementPlan {
+        let mut next = self.steps[k].apply_to(current);
+        if k + 1 == self.steps.len() {
+            debug_assert!(next.macros_used() <= self.target_budget);
+            next.budget = self.target_budget;
+            next.predicted_retunes = self.retunes_after;
+        }
+        next
+    }
+
+    /// The plan after applying the first `k` steps to `from`.
+    pub fn apply(&self, from: &PlacementPlan, k: usize) -> PlacementPlan {
+        assert!(k <= self.steps.len());
+        (0..k).fold(from.clone(), |p, i| self.apply_step(&p, i))
+    }
+
+    /// The migration's destination: the full fold of `steps` over `from`.
+    pub fn target(&self, from: &PlacementPlan) -> PlacementPlan {
+        self.apply(from, self.steps.len())
+    }
+
+    /// Retunes/batch the steady state stops paying once the migration
+    /// completes (negative when the target plan is *worse* — the
+    /// controller never applies those).
+    pub fn predicted_retunes_saved_per_batch(&self) -> i64 {
+        self.retunes_before as i64 - self.retunes_after as i64
+    }
+
+    /// One-shot programming cycles applying every step costs (a row
+    /// write is one cycle through the write circuitry, matching
+    /// `RunStats::programming_cycles`).  Row counts come from the pool —
+    /// plans store replica counts, not row counts.
+    pub fn programming_cycles_to_apply(
+        &self,
+        hidden_load_rows: &[Vec<usize>],
+        output_rows: usize,
+    ) -> u64 {
+        self.steps
+            .iter()
+            .map(|s| s.programming_rows(hidden_load_rows, output_rows))
+            .sum()
+    }
+
+    /// Steady-state cycles saved per batch: retunes priced at
+    /// `cycles_per_retune` (a retune is a DAC settle stall, not a row
+    /// write — the exchange rate is the caller's) plus the spill reload
+    /// rows the target plan stops (or starts) paying.  Spilled loads
+    /// common to both plans cancel, so only promotions/demotions and
+    /// the funnel's output re-land toggle appear.
+    pub fn steady_cycles_saved_per_batch(
+        &self,
+        hidden_load_rows: &[Vec<usize>],
+        output_rows: usize,
+        cycles_per_retune: u64,
+    ) -> i64 {
+        let mut saved = self.predicted_retunes_saved_per_batch() * cycles_per_retune as i64;
+        for s in &self.steps {
+            match *s {
+                MigrationStep::SpillPromote { layer, load } => {
+                    saved += hidden_load_rows[layer][load] as i64;
+                }
+                MigrationStep::SpillDemote { layer, load } => {
+                    saved -= hidden_load_rows[layer][load] as i64;
+                }
+                _ => {}
+            }
+        }
+        saved += output_rows as i64 * (self.spill_before as i64 - self.spill_after as i64);
+        saved
+    }
+
+    /// Whether the one-shot programming price is repaid by the
+    /// steady-state saving within `horizon_batches`: the cost-model gate
+    /// the controller checks before touching the pool.  An empty
+    /// migration trivially pays off; one with no positive saving never
+    /// does.
+    pub fn pays_off(
+        &self,
+        hidden_load_rows: &[Vec<usize>],
+        output_rows: usize,
+        horizon_batches: u64,
+        cycles_per_retune: u64,
+    ) -> bool {
+        if self.steps.is_empty() {
+            return true;
+        }
+        let saved =
+            self.steady_cycles_saved_per_batch(hidden_load_rows, output_rows, cycles_per_retune);
+        if saved <= 0 {
+            return false;
+        }
+        let cost = self.programming_cycles_to_apply(hidden_load_rows, output_rows);
+        cost <= horizon_batches.saturating_mul(saved as u64)
     }
 }
 
@@ -705,6 +1163,129 @@ mod tests {
         let d = p.describe();
         assert!(d.contains("16 macros"), "{d}");
         assert!(d.contains("9/33"), "{d}");
+    }
+
+    #[test]
+    fn diff_of_equal_plans_is_empty() {
+        let rows = vec![vec![64, 32]];
+        let p = plan(&rows, 8, 6, 1).unwrap();
+        let mp = p.diff(&p);
+        assert!(mp.is_empty());
+        assert!(mp.pays_off(&rows, 10, 1, 138), "empty migration is free");
+        assert_eq!(mp.target(&p), p);
+    }
+
+    #[test]
+    fn diff_repins_on_a_skew_flip_and_the_fold_reproduces_the_target() {
+        // 6 distinct points, budget 4 → 2 pins + funnel.  The histogram
+        // flips from low-positions-hot to high-positions-hot: the diff
+        // is two repins (zero row writes), and folding the steps over
+        // the old plan reproduces the new one field for field.
+        let rows = vec![vec![64]];
+        let points: Vec<usize> = (0..6).collect();
+        let hot_lo = [9u64, 9, 9, 1, 1, 1];
+        let hot_hi = [1u64, 1, 1, 9, 9, 9];
+        let old = plan_traffic(&rows, &points, Some(&hot_lo), 4, 1).unwrap();
+        let new = plan_traffic(&rows, &points, Some(&hot_hi), 4, 1).unwrap();
+        let mp = old.diff(&new);
+        assert_eq!(
+            mp.steps,
+            vec![
+                MigrationStep::Repin { from: 0, to: 3 },
+                MigrationStep::Repin { from: 1, to: 4 },
+            ]
+        );
+        assert_eq!(mp.target(&old), new);
+        assert_eq!(mp.programming_cycles_to_apply(&rows, 10), 0);
+        // every step prefix is a valid, fully-provisioned plan
+        for k in 0..=mp.steps.len() {
+            let p = mp.apply(&old, k);
+            assert_eq!(p.macros_used(), 4, "prefix {k}");
+            assert_eq!(p.pinned, 2, "prefix {k}");
+        }
+        // re-priced under the flipped histogram the saving is real: the
+        // old pins sit on positions the workload no longer touches hard
+        let mp = old.repriced(Some(&hot_hi)).diff(&new);
+        assert!(mp.predicted_retunes_saved_per_batch() > 0);
+        assert!(mp.pays_off(&rows, 10, 1, 138));
+    }
+
+    #[test]
+    fn weighted_cost_model_ignores_unaccessed_positions() {
+        // positions the measured histogram never saw contribute nothing:
+        // a plan whose funnel only carries dead positions prices at zero
+        let rows = vec![vec![64]];
+        let points: Vec<usize> = (0..6).collect();
+        let p = plan(&rows, 6, 4, 1).unwrap(); // pins 0,1; funnel 2..6
+        let dead_tail = [5u64, 5, 0, 0, 0, 0];
+        assert_eq!(p.repriced(Some(&dead_tail)).predicted_retunes_per_batch(), 0);
+        // uniform re-pricing reproduces the unweighted transition count
+        assert_eq!(
+            p.repriced(None).predicted_retunes_per_batch(),
+            p.predicted_retunes_per_batch()
+        );
+    }
+
+    #[test]
+    fn diff_grows_a_spill_plan_to_full_residency() {
+        let rows = vec![vec![64, 16], vec![48, 8]];
+        let old = plan(&rows, 4, 3, 1).unwrap(); // 2 resident + funnel, 2 spilled
+        let new = plan(&rows, 4, 8, 1).unwrap(); // fully resident + 4 pins
+        let mp = old.diff(&new);
+        assert_eq!(mp.target(&old), new);
+        // promotions program the spilled rows, pins the output rows; the
+        // funnel drops only at the end (4 pins × 10 + loads 16 + 8)
+        assert_eq!(mp.programming_cycles_to_apply(&rows, 10), 4 * 10 + 16 + 8);
+        assert_eq!(
+            mp.steps.last(),
+            Some(&MigrationStep::Release { point: None }),
+            "funnel drops last"
+        );
+        // steady saving: 6 retunes + 24 spill rows + 10 output re-land
+        assert_eq!(mp.steady_cycles_saved_per_batch(&rows, 10, 1), 6 + 24 + 10);
+        assert!(!mp.pays_off(&rows, 10, 1, 1), "one batch cannot repay 64 cycles");
+        assert!(mp.pays_off(&rows, 10, 2, 1));
+        // the reverse migration makes the steady state worse: no horizon
+        // ever justifies it
+        let back = new.diff(&old);
+        assert_eq!(back.target(&new), old);
+        assert!(back.predicted_retunes_saved_per_batch() < 0);
+        assert!(!back.pays_off(&rows, 10, 1_000_000, 138));
+        // intermediate plans stay valid through the funnel flip: the
+        // documented transient overshoot is at most one macro
+        let peak = (0..=back.steps.len())
+            .map(|k| back.apply(&new, k).macros_used())
+            .max()
+            .unwrap();
+        assert_eq!(peak, new.macros_used() + 1);
+    }
+
+    #[test]
+    fn diff_retargets_replicas_without_touching_residents() {
+        let rows = vec![vec![64], vec![16]];
+        let big = plan(&rows, 4, 8, 3).unwrap(); // surplus 2 → replicas [[2],[2]]
+        let small = plan(&rows, 4, 6, 3).unwrap(); // no surplus → [[1],[1]]
+        assert_eq!(big.hidden_replicas, vec![vec![2], vec![2]]);
+        let down = big.diff(&small);
+        assert_eq!(
+            down.steps,
+            vec![
+                MigrationStep::DropReplica { layer: 0, load: 0 },
+                MigrationStep::DropReplica { layer: 1, load: 0 },
+            ]
+        );
+        assert_eq!(down.programming_cycles_to_apply(&rows, 10), 0);
+        assert_eq!(down.target(&big), small);
+        let up = small.diff(&big);
+        assert_eq!(
+            up.steps,
+            vec![
+                MigrationStep::AddReplica { layer: 0, load: 0 },
+                MigrationStep::AddReplica { layer: 1, load: 0 },
+            ]
+        );
+        assert_eq!(up.programming_cycles_to_apply(&rows, 10), 64 + 16);
+        assert_eq!(up.target(&small), big);
     }
 
     fn spec(rows: Vec<Vec<usize>>, sched: usize, share: f64) -> TenantSpec<'static> {

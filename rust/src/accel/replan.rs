@@ -1,0 +1,355 @@
+//! Online re-planning control loop: placement follows the workload.
+//!
+//! A [`super::MacroPool`] plans its placement once, from whatever traffic
+//! histogram it was built with.  When the live skew drifts — a different
+//! band of output thresholds turns hot — the frozen pinned set keeps
+//! paying funnel retunes for positions that no longer deserve them.  The
+//! [`ReplanController`] closes the loop:
+//!
+//! 1. **Period.** Every [`ReplanConfig::period`] calls to
+//!    [`ReplanController::maintain`] (the serving engine calls it once
+//!    per inter-batch maintenance gap), the controller drains
+//!    [`super::MacroPool::take_output_traffic`] and re-plans.  Between
+//!    periods it only applies at most one step of an in-flight
+//!    migration, so no serving gap ever waits on more than one step.
+//!
+//! 2. **EWMA decay.** The drained delta folds into a running histogram
+//!    as `h ← decay·h + delta` with `decay ∈ [0, 1)`
+//!    ([`ReplanConfig::decay`]).  Decay keeps enough history to ride out
+//!    a quiet period (an all-zero delta leaves the shape intact) while
+//!    letting a genuine skew flip dominate within a few periods.
+//!
+//! 3. **Hysteresis.** A candidate plan replaces the incumbent only when
+//!    its predicted retunes/batch undercut the incumbent's — both priced
+//!    under the *same* decayed histogram — by at least
+//!    [`ReplanConfig::min_improvement`] (a fraction).  Oscillating skew
+//!    that flips faster than the improvement threshold never thrashes
+//!    the placement back and forth.
+//!
+//! 4. **Cost horizon.** Even an improving migration only executes when
+//!    its one-shot programming cycles are repaid by predicted savings
+//!    within [`ReplanConfig::horizon_batches`]
+//!    ([`super::planner::MigrationPlan::pays_off`]).  The controller
+//!    never applies a step of a plan whose modeled cost exceeds its
+//!    horizon savings — rejected plans are dropped whole, not partially
+//!    applied.
+//!
+//! Migrations execute incrementally: one
+//! [`super::MacroPool::apply_migration_step`] per `maintain` call, in
+//! the gaps between batches, so the pool keeps serving bit-stably while
+//! it converges (the identical-seeding rule makes every intermediate
+//! placement's predictions equal the static pool's).
+
+use super::macro_pool::{MacroPool, MigrationStats};
+use super::planner::{self, MigrationPlan};
+
+/// Tuning for the re-planning control loop (see the module docs for the
+/// role each knob plays).
+#[derive(Clone, Copy, Debug)]
+pub struct ReplanConfig {
+    /// Maintenance calls between re-plans (each call applies at most one
+    /// migration step regardless).  Must be ≥ 1.
+    pub period: u64,
+    /// EWMA retention of the traffic histogram per period, in `[0, 1)`:
+    /// `0.0` = only the latest delta counts, `0.75` = a few periods of
+    /// memory.
+    pub decay: f64,
+    /// Minimum fractional retunes/batch improvement before a candidate
+    /// plan is even considered (hysteresis against thrash): `0.25`
+    /// demands the candidate undercut the incumbent by a quarter.
+    pub min_improvement: f64,
+    /// Batches over which a migration's programming cycles must be
+    /// repaid by its predicted per-batch savings.
+    pub horizon_batches: u64,
+    /// Device cycles one avoided retune is worth (a retune stalls the
+    /// DAC settle time; at the 25 MHz device clock the settle dwarfs a
+    /// row write, so this is typically ≫ 1).
+    pub cycles_per_retune: u64,
+    /// Worker count handed to the planner (replica cap), matching how
+    /// the pool was built.
+    pub workers: usize,
+}
+
+impl Default for ReplanConfig {
+    fn default() -> Self {
+        ReplanConfig {
+            period: 8,
+            decay: 0.5,
+            min_improvement: 0.2,
+            horizon_batches: 64,
+            cycles_per_retune: 100,
+            workers: 1,
+        }
+    }
+}
+
+/// Drives one [`MacroPool`] toward the placement its measured traffic
+/// deserves.  Owns the decayed histogram and the in-flight migration;
+/// call [`Self::maintain`] from the serving engine's maintenance gap.
+#[derive(Debug)]
+pub struct ReplanController {
+    cfg: ReplanConfig,
+    /// Planner budget the pool was built with (re-plans never grow it).
+    budget: usize,
+    /// EWMA-decayed per-position heat (fractional from decay).
+    ewma: Vec<f64>,
+    /// Calls since the last re-plan.
+    since_replan: u64,
+    /// Migration in flight: the plan and the next step to apply.
+    inflight: Option<(MigrationPlan, usize)>,
+    /// Re-plans that produced a migration the cost model accepted.
+    pub migrations_started: u64,
+    /// Candidate plans rejected by hysteresis or the cost horizon.
+    pub migrations_rejected: u64,
+    /// Steps applied across all migrations.
+    pub steps_applied: u64,
+    /// Predicted steady-state retunes/batch saved, summed over started
+    /// migrations (the cost model's claim; the serving engine surfaces
+    /// it in `ServerMetrics`).
+    pub retunes_saved: i64,
+}
+
+impl ReplanController {
+    /// Controller for a resident pool (panics in reload mode — there is
+    /// no placement to steer).  `budget` caps every re-plan, normally
+    /// the budget the pool was built with.
+    pub fn new(pool: &MacroPool<'_>, budget: usize, cfg: ReplanConfig) -> Self {
+        assert!(cfg.period >= 1, "period must be at least one call");
+        assert!(
+            (0.0..1.0).contains(&cfg.decay),
+            "decay must be in [0, 1): the histogram must forget eventually"
+        );
+        let plan = pool
+            .plan()
+            .expect("re-planning controls a resident pool's placement");
+        assert!(budget >= plan.macros_used(), "budget below the live plan");
+        ReplanController {
+            cfg,
+            budget,
+            ewma: vec![0.0; plan.schedule_len],
+            since_replan: 0,
+            inflight: None,
+            migrations_started: 0,
+            migrations_rejected: 0,
+            steps_applied: 0,
+            retunes_saved: 0,
+        }
+    }
+
+    /// A migration is currently being applied step by step.
+    pub fn migration_in_flight(&self) -> bool {
+        self.inflight.is_some()
+    }
+
+    /// The migration currently being applied, if any (tests and
+    /// properties audit its cost model against the config's horizon).
+    pub fn inflight_plan(&self) -> Option<&MigrationPlan> {
+        self.inflight.as_ref().map(|(mp, _)| mp)
+    }
+
+    /// One maintenance turn: apply at most one in-flight migration step,
+    /// or — on period boundaries with no migration in flight — drain
+    /// traffic, re-plan, and admit a new migration through hysteresis
+    /// and the cost horizon.  Returns the device cost actually spent
+    /// this turn (zero when idle).
+    pub fn maintain(&mut self, pool: &MacroPool<'_>) -> MigrationStats {
+        if let Some((mp, next)) = self.inflight.as_mut() {
+            let cost = pool.apply_migration_step(mp, *next);
+            *next += 1;
+            self.steps_applied += 1;
+            if *next == mp.steps.len() {
+                self.inflight = None;
+            }
+            return cost;
+        }
+        self.since_replan += 1;
+        if self.since_replan < self.cfg.period {
+            return MigrationStats::default();
+        }
+        self.since_replan = 0;
+        self.absorb(&pool.take_output_traffic());
+        if self.ewma.iter().all(|&h| h <= 0.0) {
+            // nothing measured yet — leave the placement alone
+            return MigrationStats::default();
+        }
+        let hist = self.rounded();
+        let rows = pool.hidden_load_rows();
+        let cur = pool
+            .plan()
+            .expect("controller pools stay resident")
+            .repriced(Some(&hist));
+        let cand = match planner::plan_traffic(
+            &rows,
+            &pool.schedule_points(),
+            Some(&hist),
+            self.budget,
+            self.cfg.workers,
+        ) {
+            Some(p) => p,
+            None => return MigrationStats::default(),
+        };
+        // hysteresis: the candidate must undercut the incumbent — both
+        // priced under the same decayed histogram — by the threshold
+        let bar = cur.predicted_retunes_per_batch() as f64 * (1.0 - self.cfg.min_improvement);
+        if cand.predicted_retunes_per_batch() as f64 > bar {
+            return MigrationStats::default();
+        }
+        let mp = cur.diff(&cand);
+        if mp.is_empty() {
+            return MigrationStats::default();
+        }
+        // cost horizon: programming cycles must be repaid in time
+        if !mp.pays_off(
+            &rows,
+            pool.output_rows(),
+            self.cfg.horizon_batches,
+            self.cfg.cycles_per_retune,
+        ) {
+            self.migrations_rejected += 1;
+            return MigrationStats::default();
+        }
+        self.migrations_started += 1;
+        self.retunes_saved += mp.predicted_retunes_saved_per_batch();
+        self.inflight = Some((mp, 0));
+        MigrationStats::default()
+    }
+
+    /// Fold a drained traffic delta into the EWMA histogram.
+    fn absorb(&mut self, delta: &[u64]) {
+        assert_eq!(delta.len(), self.ewma.len(), "histogram shape is fixed");
+        for (h, &d) in self.ewma.iter_mut().zip(delta) {
+            *h = *h * self.cfg.decay + d as f64;
+        }
+    }
+
+    /// The decayed histogram as integer planner weights (half-up, so a
+    /// faded-but-nonzero position still counts as accessed).
+    fn rounded(&self) -> Vec<u64> {
+        self.ewma.iter().map(|&h| (h + 0.5) as u64).collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::accel::macro_pool::PoolMode;
+    use crate::accel::pipeline::PipelineOptions;
+    use crate::bnn::model::test_fixtures::tiny_model;
+    use crate::cam::NoiseMode;
+    use crate::util::bitops::BitVec;
+    use crate::util::rng::Rng;
+
+    fn nominal() -> PipelineOptions {
+        PipelineOptions {
+            noise: NoiseMode::Nominal,
+            ..Default::default()
+        }
+    }
+
+    fn rand_images(n: usize, bits: usize, seed: u64) -> Vec<BitVec> {
+        let mut rng = Rng::new(seed, 1);
+        (0..n)
+            .map(|_| {
+                let mut v = BitVec::zeros(bits);
+                for i in 0..bits {
+                    v.set(i, rng.chance(0.5));
+                }
+                v
+            })
+            .collect()
+    }
+
+    /// Skewed fixture: one point class holds 8 of 12 positions, so the
+    /// pinned set genuinely matters at a 4-macro budget.
+    fn skewed_model() -> crate::bnn::model::MappedModel {
+        let mut model = tiny_model(64, 8, 3, 44);
+        model.schedule = vec![0, 0, 0, 0, 0, 0, 0, 0, 8, 16, 24, 32];
+        model
+    }
+
+    #[test]
+    fn controller_converges_on_a_skew_flip() {
+        let model = skewed_model();
+        let images = rand_images(8, 64, 29);
+        let pool = MacroPool::with_capacity(&model, nominal(), 4);
+        assert_eq!(pool.mode(), PoolMode::Resident);
+        let before = pool.plan().unwrap();
+        let mut ctl = ReplanController::new(
+            &pool,
+            4,
+            ReplanConfig {
+                period: 2,
+                decay: 0.0, // no memory: track the flip immediately
+                ..ReplanConfig::default()
+            },
+        );
+        // sustained banded traffic on three tail points: the incumbent
+        // pins at most one of them, so its funnel keeps cycling, while a
+        // re-plan pins two and leaves a single point to park for free
+        let band = [8usize, 9, 10];
+        let mut base = 0;
+        for _ in 0..12 {
+            pool.classify_batch_positions(&images, base, &band);
+            base += images.len() as u64;
+            ctl.maintain(&pool);
+        }
+        assert!(!ctl.migration_in_flight(), "migration must have finished");
+        assert_eq!(ctl.migrations_started, 1, "one decisive migration");
+        let after = pool.plan().unwrap();
+        assert_ne!(after.pin_slot, before.pin_slot, "the pinned set moved");
+        // both pin slots now sit inside the hot band
+        assert_eq!(
+            band.iter().filter(|&&k| after.pin_slot[k].is_some()).count(),
+            2
+        );
+        pool.take_stats(0);
+        for _ in 0..3 {
+            pool.classify_batch_positions(&images, base, &band);
+            base += images.len() as u64;
+        }
+        assert_eq!(pool.take_stats(24).events.retunes, 0);
+    }
+
+    #[test]
+    fn hysteresis_holds_the_placement_under_oscillating_skew() {
+        let model = skewed_model();
+        let images = rand_images(8, 64, 29);
+        let pool = MacroPool::with_capacity(&model, nominal(), 4);
+        let before = pool.plan().unwrap();
+        let mut ctl = ReplanController::new(
+            &pool,
+            4,
+            ReplanConfig {
+                period: 1,
+                decay: 0.75, // remember several periods
+                min_improvement: 0.5,
+                ..ReplanConfig::default()
+            },
+        );
+        // alternate the hot band every batch: the decayed histogram
+        // stays near-uniform and the 50% bar never clears
+        let bands: [&[usize]; 2] = [&[0, 1, 2, 3], &[8, 9, 10, 11]];
+        let mut base = 0;
+        for i in 0..10 {
+            pool.classify_batch_positions(&images, base, bands[i % 2]);
+            base += images.len() as u64;
+            ctl.maintain(&pool);
+        }
+        assert_eq!(ctl.migrations_started, 0, "oscillation must not thrash");
+        assert_eq!(ctl.steps_applied, 0);
+        assert_eq!(pool.plan().unwrap(), before);
+    }
+
+    #[test]
+    fn idle_pool_is_left_alone() {
+        let model = skewed_model();
+        let pool = MacroPool::with_capacity(&model, nominal(), 4);
+        let before = pool.plan().unwrap();
+        let mut ctl = ReplanController::new(&pool, 4, ReplanConfig::default());
+        for _ in 0..40 {
+            assert_eq!(ctl.maintain(&pool), MigrationStats::default());
+        }
+        assert_eq!(ctl.migrations_started, 0);
+        assert_eq!(pool.plan().unwrap(), before);
+    }
+}

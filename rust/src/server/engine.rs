@@ -31,6 +31,21 @@
 //! may call `poll` concurrently (lane locks cover only drain/record, the
 //! classify runs lock-free on the pool's scratch arenas).
 //!
+//! **Maintenance** — every tick ends with one turn of the registered
+//! maintenance tasks, after all ready batches have drained: the
+//! online re-planning controller ([`Engine::with_replan`]) applies at
+//! most one live-migration step per gap — a batch never waits on bulk
+//! migration work — and periodic pacing recalibration
+//! ([`Engine::with_recalibration`]) re-measures `DevicePaced` from
+//! served-stat deltas so simulations track device-time drift.
+//! Maintenance reads no clock, so the hoisted-read contract holds.
+//!
+//! **Parked workers** — [`Engine::poll_or_park`] replaces spin-polling:
+//! an idle worker blocks on a condvar signalled by every admitted
+//! submission, waking early at the earliest lane deadline
+//! (`Batcher::next_deadline`).  An idle engine burns no CPU and
+//! performs zero ticks between arrivals ([`Engine::ticks`] pins this).
+//!
 //! **Determinism** — a request's lane id doubles as its noise-stream
 //! index ([`Request::id`]), so predictions and RNG draw order depend only
 //! on each lane's admission order, never on batch shapes, poll timing,
@@ -41,12 +56,14 @@
 //! distributions included) — that is how `benches/serving.rs` measures
 //! p50/p99/p999 under overload reproducibly.
 
+use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::mpsc::{self, Receiver, SyncSender, TrySendError};
-use std::sync::Mutex;
+use std::sync::{Condvar, Mutex};
 use std::time::Duration;
 
 use crate::accel::{
-    BatchPolicy, Batcher, MacroPool, MultiPool, PipelineOptions, PoolMode, Request, RunStats,
+    BatchPolicy, Batcher, MacroPool, MultiPool, PipelineOptions, PoolMode, ReplanConfig,
+    ReplanController, Request, RunStats,
 };
 use crate::bnn::model::MappedModel;
 use crate::server::clock::{Clock, Timestamp};
@@ -159,6 +176,20 @@ enum Backend<'m> {
     Multi(MultiPool<'m>),
 }
 
+/// Work the engine runs in the gaps between batches: one turn per task
+/// per tick, after every ready batch has drained (module docs).
+enum MaintenanceTask {
+    /// Online re-planning for one lane's pool: the controller applies at
+    /// most one live-migration step per turn.
+    Replan {
+        lane: usize,
+        controller: ReplanController,
+    },
+    /// Every `period` ticks, re-measure per-lane device pacing from the
+    /// served-stat deltas and swap it into the `DevicePaced` model.
+    Recalibrate { period: u64, ticks: u64 },
+}
+
 /// The unified serving core (module docs).  `Server` and `MultiServer`
 /// are thin facades over this type; tests and benches drive it directly
 /// for simulated time, admission control, and multi-worker polling.
@@ -166,7 +197,19 @@ pub struct Engine<'m> {
     backend: Backend<'m>,
     lanes: Vec<Lane>,
     clock: Clock,
-    service: ServiceModel,
+    /// Mutex so periodic recalibration can re-pace a running engine; the
+    /// executor holds it only to read the per-batch advance.
+    service: Mutex<ServiceModel>,
+    /// Inter-batch maintenance tasks (module docs).  `try_lock` in the
+    /// tick path: concurrent workers never queue behind a migration step.
+    maintenance: Mutex<Vec<MaintenanceTask>>,
+    /// Scheduler ticks executed (poll + flush) — the parked-worker tests
+    /// pin that an idle engine performs zero ticks between arrivals.
+    ticks: AtomicU64,
+    /// Admitted-submission generation; bumped under the mutex and
+    /// signalled so parked workers wake on arrival.
+    arrivals: Mutex<u64>,
+    arrival_cv: Condvar,
 }
 
 impl<'m> Engine<'m> {
@@ -177,12 +220,10 @@ impl<'m> Engine<'m> {
         policy: BatchPolicy,
         max_macros: usize,
     ) -> Self {
-        Engine {
-            backend: Backend::Single(MacroPool::with_capacity(model, opts, max_macros)),
-            lanes: vec![Lane::new(policy)],
-            clock: Clock::wall(),
-            service: ServiceModel::HostPaced,
-        }
+        Self::from_parts(
+            Backend::Single(MacroPool::with_capacity(model, opts, max_macros)),
+            vec![Lane::new(policy)],
+        )
     }
 
     /// Multi-tenant engine: one lane per model over one shared budget
@@ -196,11 +237,22 @@ impl<'m> Engine<'m> {
     ) -> Self {
         let pool = MultiPool::with_shares(models, opts, max_macros, 1, shares);
         let n = pool.n_tenants();
+        Self::from_parts(
+            Backend::Multi(pool),
+            (0..n).map(|_| Lane::new(policy)).collect(),
+        )
+    }
+
+    fn from_parts(backend: Backend<'m>, lanes: Vec<Lane>) -> Self {
         Engine {
-            backend: Backend::Multi(pool),
-            lanes: (0..n).map(|_| Lane::new(policy)).collect(),
+            backend,
+            lanes,
             clock: Clock::wall(),
-            service: ServiceModel::HostPaced,
+            service: Mutex::new(ServiceModel::HostPaced),
+            maintenance: Mutex::new(Vec::new()),
+            ticks: AtomicU64::new(0),
+            arrivals: Mutex::new(0),
+            arrival_cv: Condvar::new(),
         }
     }
 
@@ -220,7 +272,7 @@ impl<'m> Engine<'m> {
                 "DevicePaced service requires a simulated clock"
             );
         }
-        self.service = service;
+        self.service = Mutex::new(service);
         self
     }
 
@@ -228,6 +280,50 @@ impl<'m> Engine<'m> {
     pub fn with_admission(mut self, lane: usize, admission: AdmissionPolicy) -> Self {
         self.lanes[lane].admission = admission;
         self
+    }
+
+    /// Register the online re-planning maintenance task for one lane:
+    /// every tick applies at most one live-migration step to that lane's
+    /// pool, in the gap after ready batches drain (see `accel::replan`
+    /// for the period/EWMA/hysteresis/horizon knobs).  Steps applied,
+    /// cycles spent, and predicted retunes saved surface in the lane's
+    /// [`ServerMetrics`].
+    pub fn with_replan(self, lane: usize, budget: usize, cfg: ReplanConfig) -> Self {
+        let controller = match &self.backend {
+            Backend::Single(p) => {
+                assert_eq!(lane, 0, "single-tenant engines have one lane");
+                ReplanController::new(p, budget, cfg)
+            }
+            Backend::Multi(p) => ReplanController::new(p.tenant(lane), budget, cfg),
+        };
+        self.maintenance
+            .lock()
+            .unwrap()
+            .push(MaintenanceTask::Replan { lane, controller });
+        self
+    }
+
+    /// Register periodic device-pacing recalibration: every `period`
+    /// ticks the engine re-measures each lane's device time per
+    /// inference from the stats served since the last report and swaps
+    /// it into the `DevicePaced` model, so long simulations track drift
+    /// (a lane that served nothing keeps its pacing; host-paced engines
+    /// ignore the task).  Consumes the same delta stream as
+    /// [`Self::take_device_stats`] — don't drain stats manually on a
+    /// recalibrating engine.
+    pub fn with_recalibration(self, period: u64) -> Self {
+        assert!(period >= 1, "recalibration period must be at least one tick");
+        self.maintenance
+            .lock()
+            .unwrap()
+            .push(MaintenanceTask::Recalibrate { period, ticks: 0 });
+        self
+    }
+
+    /// Snapshot of the completion-pacing model (recalibration may have
+    /// replaced the one installed at build time).
+    pub fn service_model(&self) -> ServiceModel {
+        self.service.lock().unwrap().clone()
     }
 
     pub fn n_lanes(&self) -> usize {
@@ -303,10 +399,16 @@ impl<'m> Engine<'m> {
             });
         }
         st.metrics.admitted += 1;
-        Ok(match budget {
+        let id = match budget {
             Some(b) => st.batcher.push_with_budget(tenant, image, now, b),
             None => st.batcher.push_tagged(tenant, image, now),
-        })
+        };
+        drop(st);
+        // wake parked workers: a new arrival may open a batch or move
+        // the earliest deadline
+        *self.arrivals.lock().unwrap() += 1;
+        self.arrival_cv.notify_all();
+        Ok(id)
     }
 
     /// One scheduler tick: drain every policy-ready batch, guaranteed
@@ -326,6 +428,7 @@ impl<'m> Engine<'m> {
     }
 
     fn tick(&self, force: bool) -> Vec<Response> {
+        self.ticks.fetch_add(1, Ordering::Relaxed);
         let now = self.clock.now(); // the tick's only readiness timestamp
         let mut out = Vec::new();
         for class in [QosClass::Guaranteed, QosClass::BestEffort] {
@@ -354,7 +457,65 @@ impl<'m> Engine<'m> {
                 }
             }
         }
+        self.run_maintenance();
         out
+    }
+
+    /// The maintenance hook: one turn of every registered task, at the
+    /// end of each tick once every ready batch has drained.  A replan
+    /// turn applies at most one migration step, so no serving gap ever
+    /// waits on bulk work; no task reads the clock, preserving the
+    /// hoisted-read contract.  `try_lock`: when workers tick
+    /// concurrently, one runs maintenance and the rest skip.
+    fn run_maintenance(&self) {
+        let mut tasks = match self.maintenance.try_lock() {
+            Ok(tasks) => tasks,
+            Err(_) => return,
+        };
+        for task in tasks.iter_mut() {
+            match task {
+                MaintenanceTask::Replan { lane, controller } => {
+                    let pool = match &self.backend {
+                        Backend::Single(p) => p,
+                        Backend::Multi(p) => p.tenant(*lane),
+                    };
+                    let saved_before = controller.retunes_saved;
+                    let cost = controller.maintain(pool);
+                    let saved = (controller.retunes_saved - saved_before).max(0) as u64;
+                    if cost.steps > 0 || saved > 0 {
+                        let mut st = self.lanes[*lane].state.lock().unwrap();
+                        st.metrics.migration_steps += cost.steps;
+                        st.metrics.migration_cycles += cost.programming_cycles();
+                        st.metrics.migration_retunes_saved += saved;
+                    }
+                }
+                MaintenanceTask::Recalibrate { period, ticks } => {
+                    *ticks += 1;
+                    if *ticks >= *period {
+                        *ticks = 0;
+                        self.recalibrate_pacing();
+                    }
+                }
+            }
+        }
+    }
+
+    /// Re-measure per-lane device pacing from the stats served since the
+    /// last report and swap it into the `DevicePaced` model (lanes that
+    /// served nothing keep their pacing; host-paced engines are a no-op).
+    fn recalibrate_pacing(&self) {
+        let mut service = self.service.lock().unwrap();
+        let per_image = match &mut *service {
+            ServiceModel::DevicePaced(per_image) => per_image,
+            ServiceModel::HostPaced => return,
+        };
+        for lane in 0..self.lanes.len() {
+            let stats = self.take_device_stats(lane);
+            if stats.inferences > 0 {
+                per_image[lane] =
+                    Duration::from_secs_f64(stats.elapsed_s() / stats.inferences as f64);
+            }
+        }
     }
 
     /// Executor stage: classify one drained batch and record its lane
@@ -377,8 +538,12 @@ impl<'m> Engine<'m> {
             Backend::Single(p) => p.classify_batch_at(&images, base),
             Backend::Multi(p) => p.classify_batch_at(tenant, &images, base),
         };
-        if let ServiceModel::DevicePaced(per_image) = &self.service {
-            self.clock.advance(per_image[tenant] * n as u32);
+        let advance = match &*self.service.lock().unwrap() {
+            ServiceModel::DevicePaced(per_image) => Some(per_image[tenant] * n as u32),
+            ServiceModel::HostPaced => None,
+        };
+        if let Some(device_time) = advance {
+            self.clock.advance(device_time);
         }
         let done = self.clock.now();
         let mut st = self.lanes[tenant].state.lock().unwrap();
@@ -407,6 +572,64 @@ impl<'m> Engine<'m> {
     /// Requests queued across all lanes.
     pub fn total_pending(&self) -> usize {
         (0..self.lanes.len()).map(|t| self.pending(t)).sum()
+    }
+
+    /// Scheduler ticks executed so far (polls + flushes).  The
+    /// parked-worker test pins that an idle engine performs zero ticks
+    /// between arrivals.
+    pub fn ticks(&self) -> u64 {
+        self.ticks.load(Ordering::Relaxed)
+    }
+
+    /// The earliest instant at which some lane's batch becomes ready
+    /// (`None` when every lane is empty) — how long a parked worker may
+    /// sleep without missing a deadline.
+    pub fn next_deadline(&self) -> Option<Timestamp> {
+        self.lanes
+            .iter()
+            .filter_map(|lane| lane.state.lock().unwrap().batcher.next_deadline())
+            .min()
+    }
+
+    /// Park the calling worker until a new submission is admitted or
+    /// `timeout` passes; returns whether an arrival woke it.  A parked
+    /// worker performs no ticks and reads no clock — this condvar wait
+    /// is what replaces spin-polling.  Arrivals admitted between the
+    /// caller's last poll and this wait are not lost: the generation
+    /// counter makes the wait return immediately.
+    pub fn wait_for_arrival(&self, timeout: Duration) -> bool {
+        let seen = self.arrivals.lock().unwrap();
+        let start = *seen;
+        let (guard, _) = self
+            .arrival_cv
+            .wait_timeout_while(seen, timeout, |generation| *generation == start)
+            .unwrap();
+        *guard != start
+    }
+
+    /// One tick when work is (or may be) due, otherwise park until an
+    /// arrival or the earliest lane deadline (capped at `max_park`).
+    /// Worker loops call this instead of spinning on [`Self::poll`]; an
+    /// idle engine blocked here burns no CPU.  With a simulated clock
+    /// the deadline wait degenerates to "park until an arrival" — the
+    /// thread that advances virtual time is the one submitting.
+    pub fn poll_or_park(&self, max_park: Duration) -> Vec<Response> {
+        let wait = match self.next_deadline() {
+            // idle: nothing can become ready until a submission lands
+            None => max_park,
+            Some(deadline) => {
+                let remaining = deadline.saturating_sub(self.clock.now());
+                if remaining.is_zero() {
+                    return self.poll(); // a batch is already due
+                }
+                remaining.min(max_park)
+            }
+        };
+        let woke = self.wait_for_arrival(wait);
+        if !woke && self.total_pending() == 0 {
+            return Vec::new(); // still idle: no tick, no clock read
+        }
+        self.poll()
     }
 
     /// Snapshot of one lane's metrics.
@@ -776,5 +999,137 @@ mod tests {
         drop(rx);
         let err = tx.try_submit(sub(4)).unwrap_err();
         assert_eq!(err.reason, RejectReason::ShuttingDown);
+    }
+
+    #[test]
+    fn idle_engine_parks_without_ticking() {
+        // the condvar satellite: a worker loop on poll_or_park performs
+        // zero ticks while the engine is idle, then wakes on arrival
+        let model = tiny_model(64, 8, 3, 57);
+        let engine = Engine::single(
+            &model,
+            opts(),
+            BatchPolicy {
+                max_batch: 4,
+                max_wait: Duration::ZERO,
+            },
+            crate::accel::DEFAULT_POOL_MACROS,
+        )
+        .with_clock(Clock::simulated());
+        std::thread::scope(|s| {
+            let eng = &engine;
+            let worker = s.spawn(move || {
+                let mut served = 0usize;
+                while served < 4 {
+                    served += eng.poll_or_park(Duration::from_millis(50)).len();
+                }
+                served
+            });
+            // the worker parks: no submissions, so no ticks and no
+            // simulated-clock reads while we watch
+            std::thread::sleep(Duration::from_millis(20));
+            assert_eq!(engine.ticks(), 0, "idle worker must not tick");
+            assert_eq!(engine.clock().reads(), 0, "idle worker reads no clock");
+            for img in images(4, 64) {
+                engine.submit(0, img).unwrap();
+            }
+            assert_eq!(worker.join().unwrap(), 4);
+        });
+        assert!(engine.ticks() >= 1, "arrivals woke the worker");
+    }
+
+    #[test]
+    fn recalibration_tracks_a_device_time_step_within_one_period() {
+        let model = tiny_model(64, 8, 3, 58);
+        let imgs = images(4, 64);
+        let engine = Engine::single(
+            &model,
+            opts(),
+            BatchPolicy {
+                max_batch: 4,
+                max_wait: Duration::ZERO,
+            },
+            crate::accel::DEFAULT_POOL_MACROS,
+        )
+        .with_clock(Clock::simulated());
+        let pacing = engine.calibrate_device_pacing(&[imgs.clone()]);
+        let engine = engine.with_service(pacing).with_recalibration(1);
+        // first served epoch: recalibration replaces the warmup estimate
+        // (which still carried construction programming) with the
+        // steady-state truth
+        for img in &imgs {
+            engine.submit(0, img.clone()).unwrap();
+        }
+        assert_eq!(engine.poll().len(), 4);
+        let steady = match engine.service_model() {
+            ServiceModel::DevicePaced(per) => per[0],
+            ServiceModel::HostPaced => unreachable!(),
+        };
+        assert!(steady > Duration::ZERO);
+        // inject a 2× device-time step (the model now claims the device
+        // is twice as slow as it really is)...
+        let engine = engine.with_service(ServiceModel::DevicePaced(vec![steady * 2]));
+        // ...an idle tick must not track it (nothing served, no sample)
+        assert!(engine.poll().is_empty());
+        match engine.service_model() {
+            ServiceModel::DevicePaced(per) => assert_eq!(per[0], steady * 2),
+            ServiceModel::HostPaced => unreachable!(),
+        }
+        // one served epoch = one recalibration period: tracked back
+        for img in &imgs {
+            engine.submit(0, img.clone()).unwrap();
+        }
+        assert_eq!(engine.poll().len(), 4);
+        match engine.service_model() {
+            ServiceModel::DevicePaced(per) => {
+                assert_eq!(per[0], steady, "2× step tracked within one period")
+            }
+            ServiceModel::HostPaced => unreachable!(),
+        }
+    }
+
+    #[test]
+    fn maintenance_replans_the_pool_between_batches() {
+        // tentpole layer 4: the engine's maintenance hook drives the
+        // re-planning controller, one migration step per tick, and the
+        // lane metrics expose what the migration did.  Skewed traffic is
+        // injected with banded sweeps on the shared pool; engine polls
+        // provide the inter-batch gaps.
+        let mut model = tiny_model(64, 8, 3, 59);
+        model.schedule = vec![0, 0, 0, 0, 0, 0, 0, 0, 8, 16, 24, 32];
+        let imgs = images(8, 64);
+        let engine = Engine::single(
+            &model,
+            opts(),
+            BatchPolicy {
+                max_batch: 8,
+                max_wait: Duration::ZERO,
+            },
+            4,
+        )
+        .with_clock(Clock::simulated())
+        .with_replan(
+            0,
+            4,
+            crate::accel::ReplanConfig {
+                period: 2,
+                decay: 0.0,
+                ..Default::default()
+            },
+        );
+        let before = engine.single_pool().plan().unwrap();
+        let band = [8usize, 9, 10];
+        let mut base = 0;
+        for _ in 0..12 {
+            engine.single_pool().classify_batch_positions(&imgs, base, &band);
+            base += imgs.len() as u64;
+            assert!(engine.poll().is_empty(), "maintenance must not serve");
+        }
+        let after = engine.single_pool().plan().unwrap();
+        assert_ne!(after.pin_slot, before.pin_slot, "the pinned set moved");
+        let m = engine.lane_metrics(0);
+        assert!(m.migration_steps > 0, "steps surfaced in lane metrics");
+        assert!(m.migration_retunes_saved > 0, "predicted saving surfaced");
+        assert_eq!(m.migration_cycles, 0, "re-pins program no rows");
     }
 }

@@ -21,6 +21,15 @@ pub struct ServerMetrics {
     /// Requests rejected at admission with a typed reason — the lane's
     /// shed load (`server::Rejected` carries the reason to the caller).
     pub shed: u64,
+    /// Live-migration steps the engine's maintenance hook applied to
+    /// this lane's pool (at most one per scheduler tick).
+    pub migration_steps: u64,
+    /// Programming cycles (row writes) those migration steps spent.
+    pub migration_cycles: u64,
+    /// Predicted steady-state retunes/batch saved by the migrations the
+    /// re-planning controller started on this lane (the cost model's
+    /// claim — never counted before the controller commits a plan).
+    pub migration_retunes_saved: u64,
     pub latency_ms: Summary,
     pub batch_sizes: Summary,
 }

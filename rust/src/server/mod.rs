@@ -220,6 +220,34 @@ impl<'m> MultiServer<'m> {
     }
 }
 
+/// Outcome of a [`serve_workload`] run: the lane's service metrics plus
+/// the typed admission rejections ([`RejectReason`] tallied by variant).
+/// `metrics.shed` equals the sum of the rejection counters — the summary
+/// just keeps the reasons apart so callers can tell queue-bound shedding
+/// from ingress backpressure.
+#[derive(Clone, Debug, Default)]
+pub struct WorkloadSummary {
+    pub metrics: ServerMetrics,
+    /// Lane at its admission depth bound ([`RejectReason::QueueFull`]).
+    pub rejected_queue_full: u64,
+    /// Bounded ingress ring full ([`RejectReason::IngressFull`]) — the
+    /// closed-loop producers block instead, so this stays zero unless a
+    /// driver switches to `try_submit`.
+    pub rejected_ingress_full: u64,
+    /// Submission raced shutdown ([`RejectReason::ShuttingDown`]).
+    pub rejected_shutting_down: u64,
+}
+
+impl WorkloadSummary {
+    fn count(&mut self, rejected: &Rejected) {
+        match rejected.reason {
+            RejectReason::QueueFull { .. } => self.rejected_queue_full += 1,
+            RejectReason::IngressFull { .. } => self.rejected_ingress_full += 1,
+            RejectReason::ShuttingDown => self.rejected_shutting_down += 1,
+        }
+    }
+}
+
 /// Drive a server with a workload produced by `n_producers` threads, each
 /// submitting a share of `images` with `inter_arrival` spacing through
 /// the bounded ingress.  Returns (responses in completion order, metrics).
@@ -242,7 +270,8 @@ pub fn serve_workload(
     )
 }
 
-/// [`serve_workload`] over a pool planned for an explicit macro budget.
+/// [`serve_workload`] over a pool planned for an explicit macro budget
+/// (unbounded admission: the historical facade behaviour).
 #[allow(clippy::too_many_arguments)]
 pub fn serve_workload_with_capacity(
     model: &MappedModel,
@@ -253,10 +282,40 @@ pub fn serve_workload_with_capacity(
     inter_arrival: Duration,
     max_macros: usize,
 ) -> (Vec<Response>, ServerMetrics) {
+    let (responses, summary) = serve_workload_with_admission(
+        model,
+        opts,
+        policy,
+        images,
+        n_producers,
+        inter_arrival,
+        max_macros,
+        AdmissionPolicy::default(),
+    );
+    (responses, summary.metrics)
+}
+
+/// [`serve_workload`] through the full QoS machinery: the lane runs the
+/// given [`AdmissionPolicy`] (class + depth bound), refused submissions
+/// are tallied by typed reason in the [`WorkloadSummary`], and the
+/// consumer parks on the ingress until the earliest batch deadline
+/// instead of spin-polling on a fixed interval.
+#[allow(clippy::too_many_arguments)]
+pub fn serve_workload_with_admission(
+    model: &MappedModel,
+    opts: PipelineOptions,
+    policy: BatchPolicy,
+    images: &[BitVec],
+    n_producers: usize,
+    inter_arrival: Duration,
+    max_macros: usize,
+    admission: AdmissionPolicy,
+) -> (Vec<Response>, WorkloadSummary) {
     let (tx, rx) = ingress_channel(INGRESS_CAPACITY);
     std::thread::scope(|s| {
         // producers feed the bounded ingress (blocking sends: a closed
-        // loop never sheds, it just backpressures the producer threads)
+        // loop never sheds at the ring, it backpressures the producers;
+        // shedding happens at lane admission under a bounded policy)
         let per = images.len().div_ceil(n_producers.max(1));
         for chunk in images.chunks(per.max(1)) {
             let tx = tx.clone();
@@ -277,17 +336,36 @@ pub fn serve_workload_with_capacity(
             });
         }
         drop(tx);
-        // consumer: the engine's dispatch loop
-        let engine = Engine::single(model, opts, policy, max_macros);
+        // consumer: the engine's dispatch loop, parked on the ingress
+        // between arrivals and woken at the earliest lane deadline
+        let engine =
+            Engine::single(model, opts, policy, max_macros).with_admission(0, admission);
         let mut responses = Vec::with_capacity(images.len());
+        let mut summary = WorkloadSummary::default();
         loop {
-            match rx.recv_timeout(Duration::from_micros(200)) {
+            let wait = match engine.next_deadline() {
+                // idle: nothing becomes ready until a submission lands,
+                // so only the ingress can make work (generous timeout)
+                None => Duration::from_millis(50),
+                Some(deadline) => {
+                    let remaining = deadline.saturating_sub(engine.clock().now());
+                    if remaining.is_zero() {
+                        // a batch is due: serve before waiting again
+                        responses.extend(engine.poll());
+                        continue;
+                    }
+                    remaining
+                }
+            };
+            match rx.recv_timeout(wait) {
                 Ok(sub) => {
                     let admitted = match sub.budget {
                         Some(b) => engine.submit_with_budget(sub.tenant, sub.image, b),
                         None => engine.submit(sub.tenant, sub.image),
                     };
-                    admitted.expect("workload lane is unbounded");
+                    if let Err(rejected) = admitted {
+                        summary.count(&rejected);
+                    }
                     responses.extend(engine.poll());
                 }
                 Err(mpsc::RecvTimeoutError::Timeout) => {
@@ -299,8 +377,8 @@ pub fn serve_workload_with_capacity(
                 }
             }
         }
-        let metrics = engine.lane_metrics(0);
-        (responses, metrics)
+        summary.metrics = engine.lane_metrics(0);
+        (responses, summary)
     })
 }
 
@@ -380,6 +458,62 @@ mod tests {
             assert_eq!(&r.prediction, pred);
             assert_eq!(&r.votes, votes);
         }
+    }
+
+    #[test]
+    fn bounded_admission_workload_sheds_typed_in_the_summary() {
+        // satellite: serve_workload through the QoS machinery — a depth
+        // bound smaller than the batch size means the lane can hold 2
+        // requests that never close (huge deadline), so every later
+        // submission is refused QueueFull and tallied by reason
+        let model = tiny_model(64, 8, 3, 46);
+        let imgs = images(64, 64);
+        let (responses, summary) = serve_workload_with_admission(
+            &model,
+            opts(),
+            BatchPolicy {
+                max_batch: 8,
+                max_wait: Duration::from_secs(60),
+            },
+            &imgs,
+            4,
+            Duration::ZERO,
+            crate::accel::DEFAULT_POOL_MACROS,
+            AdmissionPolicy {
+                class: QosClass::BestEffort,
+                max_depth: 2,
+            },
+        );
+        assert_eq!(responses.len(), 2, "only the depth bound survives");
+        assert_eq!(summary.rejected_queue_full, 62);
+        assert_eq!(summary.rejected_ingress_full, 0, "producers block, never shed");
+        assert_eq!(summary.rejected_shutting_down, 0);
+        assert_eq!(summary.metrics.admitted, 2);
+        assert_eq!(summary.metrics.shed, 62, "lane metrics agree with the tally");
+        assert_eq!(summary.metrics.served, 2);
+    }
+
+    #[test]
+    fn unbounded_admission_summary_reports_no_rejections() {
+        let model = tiny_model(64, 8, 3, 47);
+        let imgs = images(24, 64);
+        let (responses, summary) = serve_workload_with_admission(
+            &model,
+            opts(),
+            BatchPolicy {
+                max_batch: 8,
+                max_wait: Duration::from_micros(100),
+            },
+            &imgs,
+            3,
+            Duration::ZERO,
+            crate::accel::DEFAULT_POOL_MACROS,
+            AdmissionPolicy::default(),
+        );
+        assert_eq!(responses.len(), 24);
+        assert_eq!(summary.rejected_queue_full, 0);
+        assert_eq!(summary.metrics.shed, 0);
+        assert_eq!(summary.metrics.served, 24);
     }
 
     #[test]

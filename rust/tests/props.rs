@@ -5,7 +5,10 @@ use std::sync::atomic::{AtomicBool, Ordering};
 use std::sync::Mutex;
 use std::time::Duration;
 
-use picbnn::accel::{planner, BatchPolicy, MacroPool, MultiPool, Pipeline, PipelineOptions};
+use picbnn::accel::{
+    planner, BatchPolicy, MacroPool, MigrationStats, MultiPool, Pipeline, PipelineOptions,
+    ReplanConfig, ReplanController,
+};
 use picbnn::analog::{MatchlineModel, Pvt, Voltages};
 use picbnn::bnn::infer::{digital_forward, sweep_votes};
 use picbnn::bnn::mapping::{expected_mismatches, program_row, segment_query};
@@ -588,6 +591,274 @@ fn prop_batch_search_bit_identical_to_sequential() {
             seq.write_row(rewrite, &data);
             bat.write_row(rewrite, &data);
         }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_live_migration_is_bit_stable_in_both_noise_modes() {
+    // the re-planning tentpole's correctness claim: interleaving any
+    // prefix of a MigrationPlan between batches never changes a
+    // prediction.  After every applied step the migrating pool matches
+    // BOTH a static pool built directly at the intermediate placement
+    // and the pool that never migrated, replaying the same noise-stream
+    // bases (the identical-seeding rule).  Random drift traces price the
+    // candidate; random budgets cover grow, shrink, and sharing shifts.
+    // Analog iterations skip spill placements: reprogramming a funnel
+    // that already served is bit-stable in nominal mode only.
+    forall(6, 251, |g| {
+        let model = gen_model(g);
+        let analog = g.bool();
+        let opts = PipelineOptions {
+            noise: if analog {
+                NoiseMode::Analog
+            } else {
+                NoiseMode::Nominal
+            },
+            ..Default::default()
+        };
+        let required = MacroPool::macros_required(&model, &opts);
+        let src = g.usize_in(2, required + 3);
+        let dst = g.usize_in(2, required + 3);
+        let pool = MacroPool::with_capacity_for_workers(&model, opts, src, 2);
+        let start = match pool.plan() {
+            Some(p) => p,
+            None => return Ok(()), // below every floor: reload mode
+        };
+        // random drift trace: a random histogram prices the re-plan
+        let hist: Vec<u64> = (0..start.schedule_len)
+            .map(|_| g.usize_in(0, 9) as u64)
+            .collect();
+        let rows = pool.hidden_load_rows();
+        let points = pool.schedule_points();
+        let cand = match planner::plan_traffic(&rows, &points, Some(&hist), dst, 2) {
+            Some(p) => p,
+            None => return Ok(()),
+        };
+        if analog && (start.spill_active() || cand.spill_active()) {
+            return Ok(());
+        }
+        let mp = start.repriced(Some(&hist)).diff(&cand);
+        if mp.is_empty() {
+            return Ok(());
+        }
+        // the pool that never migrates, and per-step static rebuilds
+        let frozen = MacroPool::with_plan(&model, opts, start.clone());
+        let images: Vec<BitVec> = (0..3)
+            .map(|_| BitVec::from_pm1(&g.pm1_vec(model.n_in())))
+            .collect();
+        let mut base = 0u64;
+        for k in 0..mp.steps.len() {
+            pool.apply_migration_step(&mp, k);
+            if g.bool() {
+                continue; // some gaps apply several steps with no batch
+            }
+            let staged = MacroPool::with_plan(&model, opts, pool.plan().unwrap());
+            let got = pool.classify_batch_at(&images, base);
+            prop_assert(
+                got == staged.classify_batch_at(&images, base),
+                format!("step {k}: diverged from a static pool at the same placement"),
+            )?;
+            prop_assert(
+                got == frozen.classify_batch_at(&images, base),
+                format!("step {k}: diverged from the never-migrated pool"),
+            )?;
+            base += images.len() as u64;
+        }
+        // landed: the fold over the source reproduces the pool's plan,
+        // and a pool built directly at the target serves identically
+        prop_assert(
+            pool.plan().unwrap() == mp.target(&start),
+            "migrated pool did not land on the diff target",
+        )?;
+        let landed = MacroPool::with_plan(&model, opts, mp.target(&start));
+        let got = pool.classify_batch_at(&images, base);
+        prop_assert(
+            got == landed.classify_batch_at(&images, base),
+            "landed pool diverged from a static pool at the target",
+        )?;
+        prop_assert(
+            got == frozen.classify_batch_at(&images, base),
+            "landed pool diverged from the never-migrated pool",
+        )?;
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_tenant_churn_preserves_sibling_bit_exactness() {
+    // runtime add_tenant / remove_tenant mid-stream: the sitting
+    // tenant's predictions replay bit-identically through the churn —
+    // including while its own migration is half-applied — in both noise
+    // modes, and the newcomer matches a standalone pool on its plan.
+    // one checkpoint: tenant 0 of `pool` vs the standalone pool, at a
+    // shared advancing stream base (identical seeding makes the streams
+    // line up regardless of what either pool served before)
+    fn stream_matches(
+        pool: &MultiPool<'_>,
+        alone: &MacroPool<'_>,
+        imgs: &[BitVec],
+        base: &mut u64,
+    ) -> bool {
+        let same = pool.classify_batch_at(0, imgs, *base) == alone.classify_batch_at(imgs, *base);
+        *base += imgs.len() as u64;
+        same
+    }
+    forall(4, 263, |g| {
+        let ma = gen_model(g);
+        let mb = gen_model(g);
+        let analog = g.bool();
+        let opts = PipelineOptions {
+            noise: if analog {
+                NoiseMode::Analog
+            } else {
+                NoiseMode::Nominal
+            },
+            ..Default::default()
+        };
+        // budget covers both residency floors, so churn re-plans always
+        // succeed (migs are never the empty fall-back vec)
+        let budget = MacroPool::macros_required(&ma, &opts)
+            + MacroPool::macros_required(&mb, &opts)
+            + g.usize_in(0, 4);
+        let models = [&ma];
+        let mut pool = MultiPool::with_shares(&models, opts, budget, 1, &[1.0]);
+        let start_a = pool.plan().expect("floor covered").plans[0].clone();
+        if analog && start_a.spill_active() {
+            return Ok(()); // funnel reprogramming is nominal-only
+        }
+        let alone_a = MacroPool::with_plan(&ma, opts, start_a);
+        let imgs_a: Vec<BitVec> = (0..6)
+            .map(|_| BitVec::from_pm1(&g.pm1_vec(ma.n_in())))
+            .collect();
+        let imgs_b: Vec<BitVec> = (0..4)
+            .map(|_| BitVec::from_pm1(&g.pm1_vec(mb.n_in())))
+            .collect();
+        let mut base_a = 0u64;
+        prop_assert(
+            stream_matches(&pool, &alone_a, &imgs_a, &mut base_a),
+            "pre-churn baseline",
+        )?;
+        // admit tenant b mid-stream and interleave a's batches with the
+        // incremental application of a's migration steps
+        let migs = pool.add_tenant(&mb, 1.0);
+        prop_assert(migs.len() == 2, "one migration per tenant")?;
+        prop_assert(migs[1].is_empty(), "the newcomer is built at target")?;
+        if analog {
+            // proportional-fair sharing may push either tenant into
+            // spill at this budget; the analog claim stops there
+            let tp = pool.plan().expect("floor covered");
+            if tp.plans.iter().any(|p| p.spill_active())
+                || migs[0].target(&tp.plans[0]).spill_active()
+            {
+                return Ok(());
+            }
+        }
+        for k in 0..migs[0].steps.len() {
+            pool.apply_migration_step(0, &migs[0], k);
+            prop_assert(
+                stream_matches(&pool, &alone_a, &imgs_a, &mut base_a),
+                format!("analog={analog}: sibling diverged at add step {k}"),
+            )?;
+        }
+        // the newcomer serves exactly like a standalone pool on its plan
+        let plan_b = pool.plan().expect("resident tenancy").plans[1].clone();
+        let alone_b = MacroPool::with_plan(&mb, opts, plan_b);
+        prop_assert(
+            pool.classify_batch_at(1, &imgs_b, 0) == alone_b.classify_batch_at(&imgs_b, 0),
+            "newcomer diverged from its standalone pool",
+        )?;
+        // retire tenant b: the survivor grows back over the freed budget,
+        // still bit-stable through every step
+        let migs = pool.remove_tenant(1);
+        prop_assert(migs.len() == 1, "one migration for the survivor")?;
+        if analog {
+            let tp = pool.plan().expect("floor covered");
+            if tp.plans[0].spill_active() || migs[0].target(&tp.plans[0]).spill_active() {
+                return Ok(());
+            }
+        }
+        for k in 0..migs[0].steps.len() {
+            pool.apply_migration_step(0, &migs[0], k);
+            prop_assert(
+                stream_matches(&pool, &alone_a, &imgs_a, &mut base_a),
+                format!("analog={analog}: sibling diverged at remove step {k}"),
+            )?;
+        }
+        prop_assert(
+            stream_matches(&pool, &alone_a, &imgs_a, &mut base_a),
+            "post-churn steady state",
+        )?;
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_controller_never_exceeds_its_cost_horizon() {
+    // the controller's cost-model contract: every migration it starts
+    // satisfies pays_off under its own config — it never applies a step
+    // of a plan whose modeled programming cost exceeds the steady-state
+    // savings over the configured horizon — and the programming cycles
+    // it actually spends stay within the sum of those per-migration
+    // horizon budgets.
+    forall(8, 269, |g| {
+        let model = gen_model(g);
+        let opts = PipelineOptions {
+            noise: NoiseMode::Nominal,
+            ..Default::default()
+        };
+        let required = MacroPool::macros_required(&model, &opts);
+        let budget = g.usize_in(2, required + 2);
+        let pool = MacroPool::with_capacity(&model, opts, budget);
+        if pool.plan().is_none() {
+            return Ok(()); // reload mode: nothing to steer
+        }
+        let cfg = ReplanConfig {
+            period: g.usize_in(1, 3) as u64,
+            decay: [0.0, 0.5, 0.75][g.usize_in(0, 2)],
+            min_improvement: [0.0, 0.2, 0.5][g.usize_in(0, 2)],
+            horizon_batches: g.usize_in(1, 64) as u64,
+            cycles_per_retune: g.usize_in(1, 200) as u64,
+            workers: 1,
+        };
+        let mut ctl = ReplanController::new(&pool, budget, cfg);
+        let images: Vec<BitVec> = (0..2)
+            .map(|_| BitVec::from_pm1(&g.pm1_vec(model.n_in())))
+            .collect();
+        let schedule_len = pool.plan().unwrap().schedule_len;
+        let rows = pool.hidden_load_rows();
+        let output_rows = pool.output_rows();
+        let mut base = 0u64;
+        let mut spent = MigrationStats::default();
+        let mut allowance = 0u64;
+        for _ in 0..20 {
+            // random banded traffic drifts the measured skew around
+            let lo = g.usize_in(0, schedule_len - 1);
+            let hi = g.usize_in(lo, schedule_len - 1);
+            let band: Vec<usize> = (lo..=hi).collect();
+            pool.classify_batch_positions(&images, base, &band);
+            base += images.len() as u64;
+            let was_in_flight = ctl.migration_in_flight();
+            spent.add(&ctl.maintain(&pool));
+            if !was_in_flight && ctl.migration_in_flight() {
+                // a migration was just admitted: it must repay in time
+                let mp = ctl.inflight_plan().expect("in flight");
+                let repays =
+                    mp.pays_off(&rows, output_rows, cfg.horizon_batches, cfg.cycles_per_retune);
+                prop_assert(repays, "started a migration that cannot repay its cost")?;
+                let saved =
+                    mp.steady_cycles_saved_per_batch(&rows, output_rows, cfg.cycles_per_retune);
+                prop_assert(saved > 0, "accepted migration with no saving")?;
+                allowance += cfg.horizon_batches.saturating_mul(saved as u64);
+            }
+        }
+        prop_assert(
+            spent.programming_cycles() <= allowance,
+            format!(
+                "spent {} programming cycles against a horizon allowance of {allowance}",
+                spent.programming_cycles()
+            ),
+        )?;
         Ok(())
     });
 }
