@@ -1,0 +1,247 @@
+//! Fault-drill acceptance bench: an escalating, seed-replayable fault
+//! schedule injected into a serving engine whose scrub maintenance task
+//! must detect, repair, and fully heal it — plus a refusal drill that
+//! drives one output slot past every recovery rung and checks the typed
+//! rejection at admission.
+//!
+//! Scenario A (healing drill): `FaultPlan::escalating` lands transient
+//! upsets, stuck bitcells (within the spare budget), dead matchlines,
+//! and rail drift across every resident site while the engine serves
+//! fixed epochs.  Measured, in deterministic device accounting:
+//!  * during-drill prediction mismatch vs a never-faulted twin pool
+//!    (bounded — faults are live between injection and repair);
+//!  * scrub/repair counters as surfaced in the lane's `ServerMetrics`;
+//!  * post-drill mismatch, which must be exactly zero: every repair rung
+//!    short of quarantine restores bit-exact nominal predictions.
+//!
+//! Scenario B (refusal drill): dead rows past the spare budget on an
+//! output slot with no rebuild budget.  The pool must land on
+//! `DegradedMode::Refusing` and the engine must shed new work with the
+//! typed `RejectReason::Degraded` — never serve silently wrong answers.
+//!
+//! The fault seed comes from `PICBNN_FAULT_SEED` (default 0xD1CE) so CI
+//! can pin a fixed drill; results go to `BENCH_faults.json` (quick mode
+//! writes `BENCH_faults_quick.json` so a smoke run never replaces the
+//! committed baseline).  CI runs it under `PICBNN_BENCH_QUICK=1`,
+//! including a forced-scalar lane (the drill is backend-independent).
+
+use std::time::Duration;
+
+use picbnn::accel::{BatchPolicy, MacroPool, PipelineOptions, ScrubConfig};
+use picbnn::benchkit::{
+    bench_artifact_path, emit_json, quick_mode, synth_bits, synth_model, BenchRecord, Table,
+};
+use picbnn::cam::{DegradedMode, FaultKind, FaultPlan, FaultSite, NoiseMode, DEFAULT_SPARE_ROWS};
+use picbnn::server::{Clock, Engine, RejectReason};
+use picbnn::util::bitops::BitVec;
+use picbnn::util::rng::Rng;
+use picbnn::util::Timer;
+
+fn fault_seed() -> u64 {
+    std::env::var("PICBNN_FAULT_SEED")
+        .ok()
+        .and_then(|s| s.parse().ok())
+        .unwrap_or(0xD1CE)
+}
+
+fn main() {
+    let t0 = Timer::start();
+    let quick = quick_mode();
+    let seed = fault_seed();
+    let opts = PipelineOptions {
+        noise: NoiseMode::Nominal,
+        ..Default::default()
+    };
+    // drill fixture: 64 -> 8 -> 6 with a 9-point schedule, so the pool
+    // holds one hidden load plus nine output slots — ten fault sites
+    let mut model = synth_model(60, 0xFA17, &[(8, 64, 512), (6, 8, 512)]);
+    model.schedule = (0..=16).step_by(2).collect();
+    let budget = MacroPool::macros_required(&model, &opts);
+
+    let per_batch = if quick { 4 } else { 16 };
+    let stride = if quick { 2u64 } else { 4 };
+    let mut rng = Rng::new(seed, 7);
+    let images: Vec<BitVec> = (0..per_batch).map(|_| synth_bits(64, &mut rng)).collect();
+
+    // ---- scenario A: escalating drill against a serving engine ----
+    let engine = Engine::single(
+        &model,
+        opts,
+        BatchPolicy {
+            max_batch: per_batch,
+            max_wait: Duration::ZERO,
+        },
+        budget,
+    )
+    .with_clock(Clock::simulated())
+    .with_scrub(
+        0,
+        seed,
+        ScrubConfig {
+            rows_per_turn: 64, // ~one lap per inter-epoch gap
+            ..Default::default()
+        },
+    );
+    let sites = engine.single_pool().fault_sites();
+    assert!(!sites.is_empty(), "bench pool must be resident");
+    let plan = FaultPlan::escalating(seed, &sites, per_batch as u64, stride);
+    let injected = plan.len();
+    let last_at = plan.events.iter().map(|e| e.at_image).max().unwrap();
+    engine.single_pool().inject_fault_plan(plan);
+
+    let twin = MacroPool::with_capacity(&model, opts, budget);
+    // enough epochs to activate every event, plus healing margin
+    let drill_epochs = (last_at / per_batch as u64) as usize + 1 + 6;
+    let mut drill_mismatches = 0u64;
+    let mut last_bad_epoch: Option<usize> = None;
+    let mut base = 0u64;
+    for epoch in 0..drill_epochs {
+        for img in &images {
+            engine.submit(0, img.clone()).expect("drill lane is unbounded");
+        }
+        let mut got = engine.flush();
+        assert_eq!(got.len(), per_batch, "every drill request must complete");
+        got.sort_by_key(|r| r.id);
+        let want = twin.classify_batch_at(&images, base);
+        let bad = got
+            .iter()
+            .zip(&want)
+            .filter(|(r, (_, pred))| r.prediction != *pred)
+            .count() as u64;
+        drill_mismatches += bad;
+        if bad > 0 {
+            last_bad_epoch = Some(epoch);
+        }
+        base += per_batch as u64;
+        // an idle tick guarantees a scrub turn even if the flush raced
+        let _ = engine.poll();
+    }
+    let offered = (drill_epochs * per_batch) as u64;
+    let mismatch_rate = drill_mismatches as f64 / offered as f64;
+
+    // acceptance: bounded damage while faults are live...
+    assert!(
+        mismatch_rate < 0.5,
+        "drill mismatch rate {mismatch_rate:.3} is out of bounds"
+    );
+    let m = engine.lane_metrics(0);
+    assert!(m.scrubbed_rows > 0, "scrub progress must surface");
+    assert!(m.faults_detected > 0, "the drill must be detected");
+    assert!(m.faults_repaired > 0, "the drill must be repaired");
+    assert_eq!(m.replica_quarantines, 0, "the drill stays within spares");
+    assert_eq!(m.unrepairable, 0, "nothing in the drill is terminal");
+    assert_eq!(m.degraded, DegradedMode::Nominal, "the pool must fully heal");
+
+    // ...and exact recovery afterwards: a verification epoch bit-equal
+    // to the never-faulted twin
+    for img in &images {
+        engine.submit(0, img.clone()).expect("verify lane is unbounded");
+    }
+    let mut got = engine.flush();
+    got.sort_by_key(|r| r.id);
+    let want = twin.classify_batch_at(&images, base);
+    let residual = got
+        .iter()
+        .zip(&want)
+        .filter(|(r, (votes, pred))| r.prediction != *pred || &r.votes != votes)
+        .count();
+    assert_eq!(residual, 0, "healed engine must match the twin bit-exactly");
+
+    // ---- scenario B: refusal drill (typed degradation) ----
+    let refusal = Engine::single(
+        &model,
+        opts,
+        BatchPolicy {
+            max_batch: per_batch,
+            max_wait: Duration::ZERO,
+        },
+        budget,
+    )
+    .with_clock(Clock::simulated())
+    .with_scrub(
+        0,
+        seed ^ 0x0BAD,
+        ScrubConfig {
+            rows_per_turn: 1 << 20,
+            max_rebuilds: 0,
+            ..Default::default()
+        },
+    );
+    let mut kill = FaultPlan::default();
+    for row in 0..=DEFAULT_SPARE_ROWS {
+        kill.push(
+            0,
+            FaultSite::Output { slot: Some(0) },
+            FaultKind::DeadRow {
+                row,
+                always_fire: true,
+            },
+        );
+    }
+    refusal.single_pool().inject_fault_plan(kill);
+    for img in &images {
+        refusal.submit(0, img.clone()).expect("admission starts open");
+    }
+    assert_eq!(refusal.flush().len(), per_batch);
+    let _ = refusal.poll(); // idle tick: the scrub turn that gives up
+    let rm = refusal.lane_metrics(0);
+    assert!(rm.unrepairable > 0, "spare exhaustion must be terminal");
+    assert_eq!(rm.degraded, DegradedMode::Refusing);
+    let err = refusal
+        .submit(0, images[0].clone())
+        .expect_err("a refusing pool must shed new work");
+    assert_eq!(err.reason, RejectReason::Degraded, "the rejection is typed");
+    let shed = refusal.lane_metrics(0).shed;
+    assert!(shed > 0, "the shed must surface in metrics");
+
+    let mut table = Table::new(
+        "faults: escalating drill + refusal drill (seeded, replayable)",
+        &["measure", "value"],
+    );
+    table.row(vec!["fault seed".into(), format!("{seed:#x}")]);
+    table.row(vec!["events injected".into(), injected.to_string()]);
+    table.row(vec!["drill epochs".into(), drill_epochs.to_string()]);
+    table.row(vec![
+        "mismatch rate (drill)".into(),
+        format!("{mismatch_rate:.4}"),
+    ]);
+    table.row(vec![
+        "last unhealed epoch".into(),
+        last_bad_epoch.map_or("-".into(), |e| e.to_string()),
+    ]);
+    table.row(vec!["rows scrubbed".into(), m.scrubbed_rows.to_string()]);
+    table.row(vec!["faults detected".into(), m.faults_detected.to_string()]);
+    table.row(vec!["faults repaired".into(), m.faults_repaired.to_string()]);
+    table.row(vec!["replica rebuilds".into(), m.replica_rebuilds.to_string()]);
+    table.row(vec!["post-heal mismatches".into(), residual.to_string()]);
+    table.row(vec![
+        "refusal: unrepairable".into(),
+        rm.unrepairable.to_string(),
+    ]);
+    table.row(vec!["refusal: typed sheds".into(), shed.to_string()]);
+    table.print();
+
+    let records = vec![
+        BenchRecord::new("faults drill [events injected]", injected as f64, None),
+        BenchRecord::new("faults drill [mismatch rate]", mismatch_rate, None),
+        BenchRecord::new(
+            "faults drill [last unhealed epoch]",
+            last_bad_epoch.map_or(-1.0, |e| e as f64),
+            None,
+        ),
+        BenchRecord::new("faults drill [rows scrubbed]", m.scrubbed_rows as f64, None),
+        BenchRecord::new("faults drill [detected]", m.faults_detected as f64, None),
+        BenchRecord::new("faults drill [repaired]", m.faults_repaired as f64, None),
+        BenchRecord::new("faults drill [rebuilds]", m.replica_rebuilds as f64, None),
+        BenchRecord::new("faults drill [post-heal mismatches]", residual as f64, None),
+        BenchRecord::new("faults refusal [unrepairable]", rm.unrepairable as f64, None),
+        BenchRecord::new("faults refusal [typed sheds]", shed as f64, None),
+    ];
+    let out_path = if quick {
+        bench_artifact_path("BENCH_faults_quick.json")
+    } else {
+        bench_artifact_path("BENCH_faults.json")
+    };
+    emit_json(&out_path, &records).expect("write faults bench artifact");
+    println!("\n[faults done in {:.1}s]", t0.elapsed_s());
+}

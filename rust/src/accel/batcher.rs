@@ -125,6 +125,12 @@ impl Batcher {
         self.queue.len()
     }
 
+    /// The lane's batching policy (the engine reads it to resolve the
+    /// default per-request latency budget at the ingress boundary).
+    pub fn policy(&self) -> BatchPolicy {
+        self.policy
+    }
+
     /// Should the current queue be flushed now?  True when full, or when
     /// the oldest request has spent half its budget queueing.
     pub fn ready(&self, now: Timestamp) -> bool {

@@ -55,21 +55,24 @@
 //! included.  Only retune/stall *accounting* can vary with thread
 //! interleaving on shared slots.
 
-use std::sync::atomic::{AtomicU64, AtomicUsize, Ordering};
+use std::sync::atomic::{AtomicU64, AtomicU8, AtomicUsize, Ordering};
 use std::sync::{Mutex, MutexGuard, RwLock};
 
-use crate::bnn::model::MappedModel;
+use crate::bnn::mapping::program_row;
+use crate::bnn::model::{MappedLayer, MappedModel};
+use crate::cam::faults::{DegradedMode, FaultEvent, FaultKind, FaultPlan, FaultSite, SiteGeometry};
 use crate::cam::{CamArray, CamConfig};
 use crate::sim::SimClock;
 use crate::util::bitops::BitVec;
 use crate::util::rng::{splitmix64, Rng};
 
 use super::pipeline::{
-    calibrate_hidden_points, calibrate_output_points, io_cycles_per_image, plan_loads,
+    calibrate_hidden_points, calibrate_output_points, fit_width, io_cycles_per_image, plan_loads,
     program_load_into, resolve_schedule, BatchScratch, CategoryCost, Load,
 };
 use super::pipeline::{Pipeline, PipelineOptions, RunStats};
 use super::planner::{self, MigrationPlan, PlacementPlan, TenantPlan, TenantSpec};
+use super::scrub::{DetectedBy, FaultReport, RepairAction};
 use super::voltage::CalibratedPoint;
 
 /// Default number of simulated macros a pool may instantiate.
@@ -263,6 +266,13 @@ struct Resident {
     /// migrations (the schedule never changes), so it lives outside the
     /// placement lock.
     traffic: Vec<AtomicU64>,
+    /// Pending injected-fault events, sorted by activation image index
+    /// ([`MacroPool::inject_fault_plan`]; `cam::faults` module docs).
+    fault_plan: Mutex<Vec<FaultEvent>>,
+    /// Image index of the earliest pending fault (`u64::MAX` = none) —
+    /// the batch path's one-load fast gate, so an empty plan costs one
+    /// relaxed atomic read per batch and nothing else.
+    next_fault_at: AtomicU64,
 }
 
 /// Sharded multi-macro execution engine for one mapped model.
@@ -284,6 +294,9 @@ pub struct MacroPool<'m> {
     /// concurrent caller and the steady-state batch path allocates
     /// nothing (pointer-stability test in this module).
     scratch: Mutex<Vec<BatchScratch>>,
+    /// Current [`DegradedMode`] rung (0/1/2), maintained by the scrub
+    /// controller and stamped into every [`MacroPool::take_stats`].
+    health: AtomicU8,
 }
 
 impl<'m> MacroPool<'m> {
@@ -498,6 +511,8 @@ impl<'m> MacroPool<'m> {
                     migration: Mutex::new(MigrationStats::default()),
                     carry: Mutex::new(RunStats::default()),
                     traffic,
+                    fault_plan: Mutex::new(Vec::new()),
+                    next_fault_at: AtomicU64::new(u64::MAX),
                 }),
                 None,
                 hidden_points,
@@ -523,6 +538,7 @@ impl<'m> MacroPool<'m> {
             fallback,
             stream_cursor: AtomicU64::new(0),
             scratch: Mutex::new(Vec::new()),
+            health: AtomicU8::new(0),
         }
     }
 
@@ -676,6 +692,12 @@ impl<'m> MacroPool<'m> {
         // the write lock in the gaps between batches, so no batch ever
         // waits on (or observes) a half-applied step
         let st = resident.state.read().unwrap();
+        // injected-fault activation (virtual time): an event becomes
+        // active on the first batch whose base stream index reaches its
+        // `at_image`; the empty-plan fast path is this one atomic load
+        if resident.next_fault_at.load(Ordering::Acquire) <= stream_base {
+            self.activate_faults(resident, &st, stream_base);
+        }
         // pop a scratch arena (first caller builds it); every buffer
         // below reshapes in place, so steady-state batches allocate
         // nothing beyond the returned votes
@@ -862,13 +884,16 @@ impl<'m> MacroPool<'m> {
     /// exact attribution.
     pub fn take_stats(&self, inferences: u64) -> RunStats {
         if let Some(fb) = &self.fallback {
-            return fb.lock().unwrap().take_stats(inferences);
+            let mut stats = fb.lock().unwrap().take_stats(inferences);
+            stats.degraded = self.degraded_mode();
+            return stats;
         }
         let resident = self.resident.as_ref().unwrap();
         let st = resident.state.read().unwrap();
         let mut stats = RunStats {
             inferences,
             macros: st.plan.macros_used(),
+            degraded: self.degraded_mode(),
             ..RunStats::default()
         };
         let mut drain = |cam: &mut CamArray, cost: &mut CategoryCost| {
@@ -946,6 +971,499 @@ impl<'m> MacroPool<'m> {
             Some(r) => std::mem::take(&mut *r.migration.lock().unwrap()),
             None => MigrationStats::default(),
         }
+    }
+
+    // ------------------------------------------------------------------
+    // Fault injection and self-healing (taxonomy in `cam::faults`, scrub
+    // control loop in `accel::scrub`)
+    // ------------------------------------------------------------------
+
+    /// Queue a deterministic [`FaultPlan`] against the live pool.  Events
+    /// activate in virtual time — on the first batch whose base stream
+    /// index reaches their `at_image` — so the same plan against the same
+    /// workload trace injects at identical points regardless of batch
+    /// sizes, shard splits, or worker interleaving.  An empty plan costs
+    /// one relaxed atomic load per batch and nothing else.  Resident
+    /// pools only (the reload fallback is outside the fault model).
+    pub fn inject_fault_plan(&self, plan: FaultPlan) {
+        let resident = self
+            .resident
+            .as_ref()
+            .expect("fault injection needs a resident pool");
+        let mut queue = resident.fault_plan.lock().unwrap();
+        queue.extend(plan.events);
+        queue.sort_by_key(|e| e.at_image);
+        let first = queue.first().map_or(u64::MAX, |e| e.at_image);
+        resident.next_fault_at.store(first, Ordering::Release);
+    }
+
+    /// Drain and land every queued fault event due at `stream_base`.
+    /// Out of line so the healthy batch path pays only the atomic gate.
+    #[cold]
+    fn activate_faults(&self, resident: &Resident, st: &ResidentState, stream_base: u64) {
+        let mut queue = resident.fault_plan.lock().unwrap();
+        while queue.first().is_some_and(|e| e.at_image <= stream_base) {
+            let e = queue.remove(0);
+            Self::apply_fault(st, &e.site, &e.kind);
+        }
+        let first = queue.first().map_or(u64::MAX, |e| e.at_image);
+        resident.next_fault_at.store(first, Ordering::Release);
+    }
+
+    /// Land one fault on the physical macro(s) its site names.  A site
+    /// the current placement does not instantiate (a cold-spilled load,
+    /// an out-of-range replica or slot) is void — silicon that was never
+    /// built cannot fail.  `replica: None` injects into every copy
+    /// identically, preserving the rule that results never depend on
+    /// which replica served an image — under faults too.
+    fn apply_fault(st: &ResidentState, site: &FaultSite, kind: &FaultKind) {
+        match *site {
+            FaultSite::Hidden {
+                layer,
+                load,
+                replica,
+            } => {
+                let Some(slots) = st
+                    .hidden_slots
+                    .get(layer)
+                    .and_then(|l| l.get(load))
+                    .and_then(Option::as_ref)
+                else {
+                    return;
+                };
+                match replica {
+                    Some(k) => {
+                        if let Some(m) = slots.replicas.get(k) {
+                            m.lock().unwrap().inject_fault(kind);
+                        }
+                    }
+                    None => {
+                        for m in &slots.replicas {
+                            m.lock().unwrap().inject_fault(kind);
+                        }
+                    }
+                }
+            }
+            FaultSite::Output { slot } => match slot {
+                Some(i) => {
+                    if let Some(s) = st.output_slots.get(i) {
+                        s.lock().unwrap().cam.inject_fault(kind);
+                    }
+                }
+                None => {
+                    for s in &st.output_slots {
+                        s.lock().unwrap().cam.inject_fault(kind);
+                    }
+                }
+            },
+        }
+    }
+
+    /// Geometry of every physical fault site the current placement
+    /// instantiates, in scrub-cursor order: hidden loads by (layer,
+    /// load), then output slots.  Cold-spilled loads are skipped — no
+    /// resident silicon to fail or scrub.  Empty in reload mode.
+    pub fn fault_sites(&self) -> Vec<SiteGeometry> {
+        let Some(resident) = &self.resident else {
+            return Vec::new();
+        };
+        let st = resident.state.read().unwrap();
+        let out_idx = self.model.layers.len() - 1;
+        let mut sites = Vec::new();
+        for (li, layer) in self.model.layers[..out_idx].iter().enumerate() {
+            let width = CamConfig::fitting(layer.seg_width).map_or(layer.seg_width, |c| c.width());
+            for (di, load) in self.plans[li].iter().enumerate() {
+                if let Some(slots) = st.hidden_slots[li][di].as_ref() {
+                    sites.push(SiteGeometry {
+                        site: FaultSite::Hidden {
+                            layer: li,
+                            load: di,
+                            replica: None,
+                        },
+                        rows: load.neuron_hi - load.neuron_lo,
+                        width,
+                        replicas: slots.replicas.len(),
+                    });
+                }
+            }
+        }
+        let out_layer = &self.model.layers[out_idx];
+        let out_width =
+            CamConfig::fitting(out_layer.seg_width).map_or(out_layer.seg_width, |c| c.width());
+        let out_rows = self.output_rows();
+        for i in 0..st.output_slots.len() {
+            sites.push(SiteGeometry {
+                site: FaultSite::Output { slot: Some(i) },
+                rows: out_rows,
+                width: out_width,
+                replicas: 1,
+            });
+        }
+        sites
+    }
+
+    /// Flat identical-seeding index of hidden load (`layer`, `load`) —
+    /// the exact counter `build` and `reconcile` walk (spilled loads
+    /// still consume an index), so a replica rebuilt here is
+    /// bit-identical to a fresh pool's.
+    fn hidden_seed_index(&self, layer: usize, load: usize) -> u64 {
+        self.plans[..layer].iter().map(|p| p.len() as u64).sum::<u64>() + load as u64
+    }
+
+    /// The shared post-hidden seed index every output slot uses.
+    fn output_seed_index(&self) -> u64 {
+        self.plans[..self.plans.len() - 1]
+            .iter()
+            .map(|p| p.len() as u64)
+            .sum()
+    }
+
+    /// The pool's graceful-degradation rung, as maintained by the scrub
+    /// controller: stamped into every [`MacroPool::take_stats`] and
+    /// checked at engine admission (`Refusing` sheds with a typed
+    /// rejection instead of risking silent wrong answers).
+    pub fn degraded_mode(&self) -> DegradedMode {
+        match self.health.load(Ordering::Acquire) {
+            0 => DegradedMode::Nominal,
+            1 => DegradedMode::Failover,
+            _ => DegradedMode::Refusing,
+        }
+    }
+
+    /// Record the degradation rung (scrub controller only).
+    pub fn set_degraded_mode(&self, mode: DegradedMode) {
+        self.health.store(mode as u8, Ordering::Release);
+    }
+
+    /// Read-verify and canary-check `count` logical rows of one fault
+    /// site starting at `row_lo`, repairing in place along the
+    /// escalation ladder (rewrite → spare remap → [`RepairAction::NeedsRebuild`];
+    /// rail drift → factory re-trim; stuck output rail → spare-leg
+    /// swap).  The golden source is the mapped model itself —
+    /// [`program_row`] is pure, so scrub needs no stored shadow copy.
+    /// Appends one [`FaultReport`] per detection; returns rows verified
+    /// per copy (0 for a void site or a reload pool).  Takes the
+    /// placement read lock: safe to interleave with serving batches.
+    pub fn scrub_rows(
+        &self,
+        site: &FaultSite,
+        row_lo: usize,
+        count: usize,
+        drift_tol: f64,
+        rng: &mut Rng,
+        out: &mut Vec<FaultReport>,
+    ) -> usize {
+        let Some(resident) = &self.resident else {
+            return 0;
+        };
+        let st = resident.state.read().unwrap();
+        let out_idx = self.model.layers.len() - 1;
+        match *site {
+            FaultSite::Hidden {
+                layer,
+                load,
+                replica,
+            } => {
+                let Some(slots) = st
+                    .hidden_slots
+                    .get(layer)
+                    .and_then(|l| l.get(load))
+                    .and_then(Option::as_ref)
+                else {
+                    return 0;
+                };
+                let lay = &self.model.layers[layer];
+                let ld = &self.plans[layer][load];
+                let mut scrubbed = 0;
+                for (k, m) in slots.replicas.iter().enumerate() {
+                    if replica.is_some_and(|want| want != k) {
+                        continue;
+                    }
+                    let mut cam = m.lock().unwrap();
+                    let (n, _) = Self::scrub_cam(
+                        &mut cam, lay, ld, site, k, row_lo, count, drift_tol, false, rng, out,
+                    );
+                    scrubbed = n;
+                }
+                scrubbed
+            }
+            FaultSite::Output { slot } => {
+                let mut scrubbed = 0;
+                for (i, s) in st.output_slots.iter().enumerate() {
+                    if slot.is_some_and(|want| want != i) {
+                        continue;
+                    }
+                    let mut guard = s.lock().unwrap();
+                    let sl = &mut *guard;
+                    // the funnel slot may hold a cold-spilled hidden load
+                    // right now: verify against what is *programmed*
+                    let (lay, ld) = match sl.rows {
+                        SlotRows::Output => (&self.model.layers[out_idx], &self.plans[out_idx][0]),
+                        SlotRows::Hidden(li, di) => (&self.model.layers[li], &self.plans[li][di]),
+                    };
+                    let (n, rails_swapped) = Self::scrub_cam(
+                        &mut sl.cam,
+                        lay,
+                        ld,
+                        site,
+                        i,
+                        row_lo,
+                        count,
+                        drift_tol,
+                        true,
+                        rng,
+                        out,
+                    );
+                    if rails_swapped {
+                        // the spare DAC leg comes up at whatever codes the
+                        // fault froze — force a re-park on next use
+                        sl.parked = None;
+                    }
+                    scrubbed = n;
+                }
+                scrubbed
+            }
+        }
+    }
+
+    /// The per-macro scrub ladder (invariants in `cam::faults`): rails
+    /// first — a stuck rail swaps to its spare DAC leg on output slots
+    /// (`rail_spare_leg`) and escalates to rebuild on hidden replicas;
+    /// drift beyond `drift_tol` re-trims to factory — then `count` rows
+    /// of read-verify against the golden mapping plus a canary search
+    /// pair: the row's own pattern must fire (0 mismatches) and its
+    /// complement must not (width mismatches), both far outside the
+    /// metastable band, so the checks are deterministic in both noise
+    /// modes and consume no draws for the row under test.  Returns
+    /// (rows verified, rails swapped to the spare leg).
+    #[allow(clippy::too_many_arguments)]
+    fn scrub_cam(
+        cam: &mut CamArray,
+        layer: &MappedLayer,
+        load: &Load,
+        site: &FaultSite,
+        copy: usize,
+        row_lo: usize,
+        count: usize,
+        drift_tol: f64,
+        rail_spare_leg: bool,
+        rng: &mut Rng,
+        out: &mut Vec<FaultReport>,
+    ) -> (usize, bool) {
+        fn canary_fires(
+            cam: &mut CamArray,
+            q: &BitVec,
+            r: usize,
+            m: &mut Vec<u32>,
+            fires: &mut Vec<bool>,
+            rng: &mut Rng,
+        ) -> bool {
+            cam.search_into_rng(q, m, fires, rng);
+            fires.get(r).copied().unwrap_or(false)
+        }
+        let report = |row: Option<usize>, detected: DetectedBy, action: RepairAction| FaultReport {
+            site: *site,
+            copy,
+            row,
+            detected,
+            action,
+        };
+        let mut rails_swapped = false;
+        if cam.rails.any_stuck() {
+            if rail_spare_leg {
+                cam.rails.unstick_all();
+                rails_swapped = true;
+                out.push(report(None, DetectedBy::RailStuck, RepairAction::RailRepaired));
+            } else {
+                // hidden replicas have no spare leg: a whole-macro rebuild
+                // is the only repair that restores retunability
+                out.push(report(None, DetectedBy::RailStuck, RepairAction::NeedsRebuild));
+                return (0, false);
+            }
+        }
+        if cam.rails.max_drift() > drift_tol {
+            cam.recalibrate_rails();
+            out.push(report(None, DetectedBy::RailDrift, RepairAction::Recalibrated));
+        }
+        let rows = load.neuron_hi - load.neuron_lo;
+        let width = cam.config().width();
+        let hi = rows.min(row_lo + count);
+        let mut m = Vec::new();
+        let mut fires = Vec::new();
+        let mut scrubbed = 0;
+        for r in row_lo..hi {
+            scrubbed += 1;
+            let golden = fit_width(&program_row(layer, load.seg, load.neuron_lo + r), width);
+            // (a) read-verify the stored pattern against the golden model
+            let stored_ok = cam.read_row(r).is_some_and(|s| s.words() == golden.words());
+            if !stored_ok {
+                cam.rewrite_row(r, &golden);
+                if cam.read_row(r).is_some_and(|s| s.words() == golden.words()) {
+                    out.push(report(Some(r), DetectedBy::ReadVerify, RepairAction::Rewritten));
+                } else if cam.remap_row_to_spare(r) {
+                    // a stuck cell re-asserted through the rewrite: burn a
+                    // spare (remap clears the row's recorded faults) and
+                    // land the pattern on healthy silicon
+                    cam.rewrite_row(r, &golden);
+                    out.push(report(Some(r), DetectedBy::ReadVerify, RepairAction::Remapped));
+                } else {
+                    out.push(report(
+                        Some(r),
+                        DetectedBy::ReadVerify,
+                        RepairAction::NeedsRebuild,
+                    ));
+                    continue;
+                }
+            }
+            // (b) canary pair: catches dead rows and transients, which a
+            // store readback cannot see (the MLSA, not the cells, lies)
+            let mut anti = golden.clone();
+            for c in 0..width {
+                anti.flip(c);
+            }
+            let ok = canary_fires(cam, &golden, r, &mut m, &mut fires, rng)
+                && !canary_fires(cam, &anti, r, &mut m, &mut fires, rng);
+            if ok {
+                continue;
+            }
+            // transient upsets self-clear: retry once before burning a spare
+            let again = canary_fires(cam, &golden, r, &mut m, &mut fires, rng)
+                && !canary_fires(cam, &anti, r, &mut m, &mut fires, rng);
+            if again {
+                out.push(report(Some(r), DetectedBy::Canary, RepairAction::SelfCleared));
+            } else if cam.remap_row_to_spare(r) {
+                cam.rewrite_row(r, &golden);
+                let healed = canary_fires(cam, &golden, r, &mut m, &mut fires, rng)
+                    && !canary_fires(cam, &anti, r, &mut m, &mut fires, rng);
+                out.push(report(
+                    Some(r),
+                    DetectedBy::Canary,
+                    if healed {
+                        RepairAction::Remapped
+                    } else {
+                        RepairAction::NeedsRebuild
+                    },
+                ));
+            } else {
+                out.push(report(Some(r), DetectedBy::Canary, RepairAction::NeedsRebuild));
+            }
+        }
+        (scrubbed, rails_swapped)
+    }
+
+    /// Carry a retired macro's accounting into the next `take_stats`
+    /// (the same bookkeeping as migration's retire path).
+    fn retire_into_carry(resident: &Resident, cam: &CamArray, output: bool) {
+        let mut carry = resident.carry.lock().unwrap();
+        carry.cycles += cam.clock.cycles;
+        carry.stall_s += cam.clock.stall_s;
+        carry.events.add(&cam.events);
+        let cat = if output {
+            &mut carry.output_cost
+        } else {
+            &mut carry.hidden_cost
+        };
+        cat.retunes += cam.events.retunes;
+        cat.row_writes += cam.events.row_writes;
+    }
+
+    /// Replace one hidden replica with a freshly built macro — fresh
+    /// rails, fresh store, full spare budget, zero faults — programmed
+    /// under the identical-seeding rule, so the rebuilt copy is
+    /// bit-identical to a never-faulted one.  The self-healing
+    /// escalation past the spare-row budget.  The retired macro's
+    /// accounting carries into the next `take_stats`; the build cost
+    /// stays on the new macro's meters.  Returns `false` for a void
+    /// site or a reload pool.
+    pub fn rebuild_replica(&self, layer: usize, load: usize, replica: usize) -> bool {
+        let Some(resident) = &self.resident else {
+            return false;
+        };
+        let st = resident.state.read().unwrap();
+        let Some(slots) = st
+            .hidden_slots
+            .get(layer)
+            .and_then(|l| l.get(load))
+            .and_then(Option::as_ref)
+        else {
+            return false;
+        };
+        let Some(m) = slots.replicas.get(replica) else {
+            return false;
+        };
+        let lay = &self.model.layers[layer];
+        let cfg = CamConfig::fitting(lay.seg_width)
+            .unwrap_or_else(|| panic!("word width {} unsupported", lay.seg_width));
+        let mut cam = fresh_cam(&self.opts, cfg, self.hidden_seed_index(layer, load));
+        program_load_into(&mut cam, lay, &self.plans[layer][load]);
+        cam.set_voltages(self.hidden_points[layer].voltages);
+        let mut guard = m.lock().unwrap();
+        Self::retire_into_carry(resident, &guard, false);
+        *guard = cam;
+        true
+    }
+
+    /// Replace one output slot with a freshly built macro (shared seed
+    /// index: bit-identical to any never-faulted slot).  Comes up
+    /// unparked holding the class rows; the next sweep re-parks it at
+    /// whatever point routes there (counted by `set_voltages`).
+    pub fn rebuild_output_slot(&self, slot: usize) -> bool {
+        let Some(resident) = &self.resident else {
+            return false;
+        };
+        let st = resident.state.read().unwrap();
+        let Some(s) = st.output_slots.get(slot) else {
+            return false;
+        };
+        let out_idx = self.model.layers.len() - 1;
+        let out_layer = &self.model.layers[out_idx];
+        let out_cfg =
+            CamConfig::fitting(out_layer.seg_width).expect("output word width unsupported");
+        let mut cam = fresh_cam(&self.opts, out_cfg, self.output_seed_index());
+        program_load_into(&mut cam, out_layer, &self.plans[out_idx][0]);
+        let mut guard = s.lock().unwrap();
+        Self::retire_into_carry(resident, &guard.cam, true);
+        *guard = OutputSlotState {
+            cam,
+            parked: None,
+            rows: SlotRows::Output,
+        };
+        true
+    }
+
+    /// Permanently remove a dying hidden replica from service — the
+    /// escalation past the rebuild budget.  Runs under the placement
+    /// write lock: call it in an inter-batch gap.  Surviving replicas
+    /// keep serving (failover — bit-identical results, by identical
+    /// seeding); removing the last copy cold-spills the load through the
+    /// output funnel, which stays correct but reprograms per batch, so
+    /// the scrub controller follows up with a planner-level re-plan that
+    /// migrates capacity off the quarantined macro.  The plan's replica
+    /// count is updated in place, so `PlacementPlan::diff` against a
+    /// fresh target emits exactly the steps that move off the dying
+    /// macro.  Returns surviving copies (`usize::MAX` for a void site).
+    pub fn quarantine_replica(&self, layer: usize, load: usize, replica: usize) -> usize {
+        let Some(resident) = &self.resident else {
+            return usize::MAX;
+        };
+        let mut st = resident.state.write().unwrap();
+        let Some(slot) = st.hidden_slots.get_mut(layer).and_then(|l| l.get_mut(load)) else {
+            return usize::MAX;
+        };
+        let Some(slots) = slot.as_mut() else {
+            return usize::MAX;
+        };
+        if replica >= slots.replicas.len() {
+            return slots.replicas.len();
+        }
+        let removed = slots.replicas.remove(replica);
+        Self::retire_into_carry(resident, &removed.into_inner().unwrap(), false);
+        let left = slots.replicas.len();
+        if left == 0 {
+            *slot = None;
+        }
+        st.plan.hidden_replicas[layer][load] = left;
+        left
     }
 
     /// Reshape the physical state to `next` (already validated by the
@@ -1272,6 +1790,8 @@ impl<'m> MultiPool<'m> {
             total.hidden_cost.add(&s.hidden_cost);
             total.output_cost.add(&s.output_cost);
             total.macros += s.macros;
+            // the fleet is only as healthy as its sickest tenant
+            total.degraded = total.degraded.max(s.degraded);
         }
         total
     }

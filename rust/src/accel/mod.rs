@@ -1,7 +1,8 @@
 //! L3 accelerator coordination: voltage calibration (Table I), the
 //! Algorithm-1 inference pipeline, the capacity-aware placement planner
 //! (single-model and multi-tenant), the multi-macro resident execution
-//! pools, request batching, and accuracy metrics.
+//! pools, request batching, scrub-and-repair self-healing, and accuracy
+//! metrics.
 
 pub mod batcher;
 pub mod macro_pool;
@@ -10,6 +11,7 @@ pub mod parallel;
 pub mod pipeline;
 pub mod planner;
 pub mod replan;
+pub mod scrub;
 pub mod voltage;
 
 pub use batcher::{BatchPolicy, Batcher, Request};
@@ -19,4 +21,7 @@ pub use parallel::{classify_parallel, classify_parallel_with_budget};
 pub use pipeline::{CategoryCost, Pipeline, PipelineOptions, RunStats};
 pub use planner::{MigrationPlan, MigrationStep, PlacementPlan, TenantPlan, TenantSpec};
 pub use replan::{ReplanConfig, ReplanController};
+pub use scrub::{
+    DetectedBy, FaultReport, RepairAction, ScrubConfig, ScrubController, ScrubStats,
+};
 pub use voltage::{CalibratedPoint, VoltageController};

@@ -327,6 +327,11 @@ pub struct RunStats {
     /// multiplies the per-macro leakage power by this count
     /// (`energy::report`); 0 (an empty/default report) is treated as 1.
     pub macros: usize,
+    /// Health of the pool that produced this report (always
+    /// [`crate::cam::faults::DegradedMode::Nominal`] for the reload
+    /// `Pipeline`; a self-healing `MacroPool` stamps its current ladder
+    /// rung so degradation is visible wherever stats flow).
+    pub degraded: crate::cam::faults::DegradedMode,
 }
 
 impl RunStats {

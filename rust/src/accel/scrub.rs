@@ -1,0 +1,510 @@
+//! Scrub-and-repair control loop: the self-healing half of the fault
+//! model in `cam::faults`.
+//!
+//! Silicon does not announce its failures.  The [`ScrubController`]
+//! finds them the way real memories do — a background scrub pass that
+//! read-verifies stored rows against the golden model and fires canary
+//! searches at the matchline sense amps — and repairs what it finds
+//! along an escalation ladder that ends in typed refusal, never in
+//! silent wrong answers:
+//!
+//! 1. **Amortization.** Each call to [`ScrubController::maintain`] (the
+//!    serving engine calls it once per inter-batch maintenance gap)
+//!    verifies at most [`ScrubConfig::rows_per_turn`] rows, walking a
+//!    persistent `(site, row)` cursor over every resident macro in
+//!    [`super::MacroPool::fault_sites`] order.  A full pass over a
+//!    128-kbit pool therefore spreads across many gaps; no single batch
+//!    ever waits on a bulk verify.
+//!
+//! 2. **Detection.** Per row: a store readback against the pure mapping
+//!    (`bnn::mapping::program_row` — scrub needs no shadow copy), then a
+//!    canary pair (the row's own pattern must fire, its complement must
+//!    not).  The readback catches stuck bitcells; the canary catches
+//!    dead rows and transient upsets, which lie at the sense amp, not in
+//!    the cells.  Rails are checked first: stuck DAC codes and drift
+//!    beyond [`ScrubConfig::drift_tol`] (repaired by factory re-trim).
+//!
+//! 3. **Escalation.** In-place repairs (rewrite, spare-row remap, rail
+//!    re-trim) happen inside [`super::MacroPool::scrub_rows`].  What
+//!    comes back as [`RepairAction::NeedsRebuild`] escalates here: up to
+//!    [`ScrubConfig::max_rebuilds`] whole-macro rebuilds per copy
+//!    (identical seeding makes a rebuilt macro bit-exact to a
+//!    never-faulted one), then — for hidden replicas — quarantine: the
+//!    dying copy is retired, surviving replicas fail over
+//!    (bit-identically), the pool drops to [`DegradedMode::Failover`],
+//!    and a planner-level re-plan is launched whose
+//!    [`super::planner::PlacementPlan::diff`] emits exactly the
+//!    migration steps that move capacity off the quarantined macro (one
+//!    step per later gap, like the re-planning controller).  An output
+//!    slot that exhausts its rebuild budget has no quarantine path — the
+//!    threshold sweep needs every slot — so the pool drops to
+//!    [`DegradedMode::Refusing`] and the engine sheds new work with a
+//!    typed rejection.
+//!
+//! 4. **Determinism.**  The controller owns its own [`Rng`]; scrub
+//!    searches never touch the per-image noise streams, so scrubbing a
+//!    healthy pool is invisible to predictions.  Given the same seed,
+//!    fault plan, and workload trace, the reports, repair schedule, and
+//!    predictions replay bit-identically (property-tested).
+
+use crate::cam::faults::{DegradedMode, FaultSite};
+use crate::util::rng::Rng;
+
+use super::macro_pool::MacroPool;
+use super::planner::{self, MigrationPlan};
+
+/// How a fault was noticed by the scrub pass.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum DetectedBy {
+    /// Store readback differed from the golden mapping (stuck bitcells).
+    ReadVerify,
+    /// The canary search pair misfired (dead rows, transient upsets).
+    Canary,
+    /// A rail's static error left its factory-trim tolerance.
+    RailDrift,
+    /// A rail DAC stopped accepting codes.
+    RailStuck,
+}
+
+/// What the repair ladder did about a detection.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum RepairAction {
+    /// Reprogramming the row restored it (soft corruption).
+    Rewritten,
+    /// The row moved to a spare physical row and reprogrammed clean.
+    Remapped,
+    /// Drifted rails were re-trimmed to factory offsets.
+    Recalibrated,
+    /// A stuck rail swapped onto its spare DAC leg (output slots).
+    RailRepaired,
+    /// The canary failure did not reproduce — a transient burned down.
+    SelfCleared,
+    /// In-place repair is out of budget; the macro needs a rebuild.
+    NeedsRebuild,
+    /// The whole macro was rebuilt from the model (identical seeding).
+    Rebuilt,
+    /// A hidden replica was retired; surviving copies fail over.
+    Quarantined,
+    /// No repair path remains; the pool refuses new work.
+    Unrepairable,
+}
+
+/// One detection (and its outcome) from a scrub pass.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct FaultReport {
+    /// The fault site the affected macro belongs to.
+    pub site: FaultSite,
+    /// Replica index (hidden sites) or slot index (output sites).
+    pub copy: usize,
+    /// Affected logical row; `None` for rail-level detections.
+    pub row: Option<usize>,
+    pub detected: DetectedBy,
+    pub action: RepairAction,
+}
+
+/// Counters summarizing scrub work (per turn and cumulative).
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub struct ScrubStats {
+    /// Rows read-verified + canary-checked.
+    pub rows_scrubbed: u64,
+    /// Detections of any kind (one per [`FaultReport`]).
+    pub faults_detected: u64,
+    /// In-place repairs (rewrite, remap, re-trim, rail swap, self-clear).
+    pub repairs: u64,
+    /// Whole-macro rebuilds performed.
+    pub rebuilds: u64,
+    /// Hidden replicas quarantined.
+    pub quarantines: u64,
+    /// Detections with no remaining repair path.
+    pub unrepairable: u64,
+}
+
+impl ScrubStats {
+    pub fn add(&mut self, other: &ScrubStats) {
+        self.rows_scrubbed += other.rows_scrubbed;
+        self.faults_detected += other.faults_detected;
+        self.repairs += other.repairs;
+        self.rebuilds += other.rebuilds;
+        self.quarantines += other.quarantines;
+        self.unrepairable += other.unrepairable;
+    }
+}
+
+/// Tuning for the scrub loop (role of each knob in the module docs).
+#[derive(Clone, Copy, Debug)]
+pub struct ScrubConfig {
+    /// Row-verify budget per maintenance turn (amortization grain).
+    pub rows_per_turn: usize,
+    /// Rail drift beyond this triggers a factory re-trim [V].
+    pub drift_tol: f64,
+    /// Whole-macro rebuilds granted per copy before quarantine/refusal.
+    pub max_rebuilds: u32,
+    /// Worker count handed to the post-quarantine re-plan (replica cap),
+    /// matching how the pool was built.
+    pub workers: usize,
+}
+
+impl Default for ScrubConfig {
+    fn default() -> Self {
+        ScrubConfig {
+            rows_per_turn: 4,
+            drift_tol: 0.002,
+            max_rebuilds: 2,
+            workers: 1,
+        }
+    }
+}
+
+/// Background scrub-and-repair driver for one [`MacroPool`].  Owns the
+/// scrub cursor, the per-copy strike counts, and any in-flight
+/// post-quarantine migration; call [`Self::maintain`] from the serving
+/// engine's maintenance gap.
+#[derive(Debug)]
+pub struct ScrubController {
+    cfg: ScrubConfig,
+    /// Scrub cursor: index into the pool's current site list.
+    site: usize,
+    /// Next row to verify within the cursor site.
+    row: usize,
+    /// Private noise stream for canary searches (module docs, rule 4).
+    rng: Rng,
+    /// `NeedsRebuild` strikes per (site, copy) — the escalation memory.
+    strikes: Vec<(FaultSite, usize, u32)>,
+    /// Post-quarantine migration being applied one step per turn.
+    inflight: Option<(MigrationPlan, usize)>,
+    /// Cumulative counters since construction.
+    stats: ScrubStats,
+    /// Reports not yet drained by [`Self::take_reports`].
+    reports: Vec<FaultReport>,
+    /// Sticky degradation rung (never improves on its own: a quarantined
+    /// replica stays gone until an operator intervenes).
+    mode: DegradedMode,
+}
+
+impl ScrubController {
+    pub fn new(seed: u64, cfg: ScrubConfig) -> Self {
+        assert!(cfg.rows_per_turn >= 1, "scrub must make progress");
+        ScrubController {
+            cfg,
+            site: 0,
+            row: 0,
+            rng: Rng::new(seed, 0x5C_4B),
+            strikes: Vec::new(),
+            inflight: None,
+            stats: ScrubStats::default(),
+            reports: Vec::new(),
+            mode: DegradedMode::Nominal,
+        }
+    }
+
+    /// One maintenance turn: apply at most one in-flight migration step,
+    /// or spend the row budget scrubbing from the cursor, repairing and
+    /// escalating as the module docs describe.  Returns the work done
+    /// *this turn* (the serving engine feeds it to `ServerMetrics`);
+    /// cumulative counters accrue in [`Self::stats`].
+    pub fn maintain(&mut self, pool: &MacroPool<'_>) -> ScrubStats {
+        let mut delta = ScrubStats::default();
+        // a migration moving capacity off a quarantined macro consumes
+        // the whole turn, mirroring the re-planning controller: no gap
+        // ever waits on more than one step
+        if let Some((mp, next)) = self.inflight.as_mut() {
+            pool.apply_migration_step(mp, *next);
+            *next += 1;
+            if *next == mp.steps.len() {
+                self.inflight = None;
+            }
+            return delta;
+        }
+        let sites = pool.fault_sites();
+        if sites.is_empty() {
+            return delta; // reload pool: nothing resident to scrub
+        }
+        let before = self.reports.len();
+        let mut budget = self.cfg.rows_per_turn;
+        // `visited` bounds the walk to one lap even if every site is
+        // void (e.g. the placement shrank under the cursor)
+        let mut visited = 0;
+        while budget > 0 && visited <= sites.len() {
+            if self.site >= sites.len() {
+                self.site = 0;
+            }
+            let g = &sites[self.site];
+            if self.row >= g.rows {
+                self.site += 1;
+                self.row = 0;
+                visited += 1;
+                continue;
+            }
+            let want = budget.min(g.rows - self.row);
+            let n = pool.scrub_rows(
+                &g.site,
+                self.row,
+                want,
+                self.cfg.drift_tol,
+                &mut self.rng,
+                &mut self.reports,
+            );
+            if n == 0 {
+                // site went void since the snapshot (migration raced us)
+                self.site += 1;
+                self.row = 0;
+                visited += 1;
+                continue;
+            }
+            self.row += n;
+            budget -= n.min(budget);
+            delta.rows_scrubbed += n as u64;
+        }
+        // tally this turn's detections, then escalate what the in-place
+        // ladder could not fix — once per (site, copy), not per row
+        let mut rebuild: Vec<(FaultSite, usize)> = Vec::new();
+        for r in &self.reports[before..] {
+            delta.faults_detected += 1;
+            match r.action {
+                RepairAction::Rewritten
+                | RepairAction::Remapped
+                | RepairAction::Recalibrated
+                | RepairAction::RailRepaired
+                | RepairAction::SelfCleared => delta.repairs += 1,
+                RepairAction::NeedsRebuild => {
+                    if !rebuild.contains(&(r.site, r.copy)) {
+                        rebuild.push((r.site, r.copy));
+                    }
+                }
+                // terminal outcomes are only ever appended by the
+                // escalation below, never by the in-place ladder
+                RepairAction::Rebuilt
+                | RepairAction::Quarantined
+                | RepairAction::Unrepairable => {}
+            }
+        }
+        for (site, copy) in rebuild {
+            self.escalate(pool, site, copy, &mut delta);
+        }
+        pool.set_degraded_mode(self.mode);
+        self.stats.add(&delta);
+        delta
+    }
+
+    /// Escalate one copy that in-place repair gave up on: rebuild while
+    /// the strike budget lasts, then quarantine (hidden) or refuse
+    /// (output).
+    fn escalate(&mut self, pool: &MacroPool<'_>, site: FaultSite, copy: usize, delta: &mut ScrubStats) {
+        let strikes = self.strike(site, copy);
+        let report = |row, detected, action| FaultReport {
+            site,
+            copy,
+            row,
+            detected,
+            action,
+        };
+        match site {
+            FaultSite::Hidden { layer, load, .. } => {
+                if strikes <= self.cfg.max_rebuilds {
+                    if pool.rebuild_replica(layer, load, copy) {
+                        delta.rebuilds += 1;
+                        self.reports
+                            .push(report(None, DetectedBy::ReadVerify, RepairAction::Rebuilt));
+                    }
+                } else {
+                    let left = pool.quarantine_replica(layer, load, copy);
+                    if left == usize::MAX {
+                        return; // site went void: nothing to retire
+                    }
+                    delta.quarantines += 1;
+                    self.mode = self.mode.max(DegradedMode::Failover);
+                    self.reports
+                        .push(report(None, DetectedBy::ReadVerify, RepairAction::Quarantined));
+                    // copy indices shifted under the removal: old strike
+                    // history for this site no longer names real copies
+                    self.strikes.retain(|(s, _, _)| *s != site);
+                    self.launch_replan(pool);
+                }
+            }
+            FaultSite::Output { .. } => {
+                if strikes <= self.cfg.max_rebuilds {
+                    if pool.rebuild_output_slot(copy) {
+                        delta.rebuilds += 1;
+                        self.reports
+                            .push(report(None, DetectedBy::ReadVerify, RepairAction::Rebuilt));
+                    }
+                } else {
+                    // every output slot is load-bearing for the threshold
+                    // sweep — with the rebuild budget spent, refusing new
+                    // work beats serving silently wrong votes
+                    delta.unrepairable += 1;
+                    self.mode = DegradedMode::Refusing;
+                    self.reports
+                        .push(report(None, DetectedBy::ReadVerify, RepairAction::Unrepairable));
+                }
+            }
+        }
+    }
+
+    /// Increment and return the strike count for (site, copy).
+    fn strike(&mut self, site: FaultSite, copy: usize) -> u32 {
+        for (s, c, n) in self.strikes.iter_mut() {
+            if *s == site && *c == copy {
+                *n += 1;
+                return *n;
+            }
+        }
+        self.strikes.push((site, copy, 1));
+        1
+    }
+
+    /// Re-plan within the shrunken macro budget so the placement stops
+    /// leaning on the quarantined copy; `PlacementPlan::diff` emits the
+    /// steps off the dying macro and they apply one per later turn.
+    fn launch_replan(&mut self, pool: &MacroPool<'_>) {
+        let Some(cur) = pool.plan() else {
+            return;
+        };
+        let target = planner::plan_traffic(
+            &pool.hidden_load_rows(),
+            &pool.schedule_points(),
+            None,
+            cur.macros_used(),
+            self.cfg.workers,
+        );
+        if let Some(target) = target {
+            let mp = cur.diff(&target);
+            if !mp.is_empty() {
+                self.inflight = Some((mp, 0));
+            }
+        }
+    }
+
+    /// A post-quarantine migration is still being applied.
+    pub fn migration_in_flight(&self) -> bool {
+        self.inflight.is_some()
+    }
+
+    /// Cumulative counters since construction.
+    pub fn stats(&self) -> ScrubStats {
+        self.stats
+    }
+
+    /// The degradation rung the controller has driven the pool to.
+    pub fn degraded_mode(&self) -> DegradedMode {
+        self.mode
+    }
+
+    /// Drain the accumulated fault reports (diagnostics / tests).
+    pub fn take_reports(&mut self) -> Vec<FaultReport> {
+        std::mem::take(&mut self.reports)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::accel::macro_pool::PoolMode;
+    use crate::accel::pipeline::PipelineOptions;
+    use crate::bnn::model::test_fixtures::tiny_model;
+    use crate::cam::faults::{FaultKind, FaultPlan};
+    use crate::cam::NoiseMode;
+    use crate::util::bitops::BitVec;
+    use crate::util::rng::Rng;
+
+    fn nominal() -> PipelineOptions {
+        PipelineOptions {
+            noise: NoiseMode::Nominal,
+            ..Default::default()
+        }
+    }
+
+    fn rand_images(n: usize, bits: usize, seed: u64) -> Vec<BitVec> {
+        let mut rng = Rng::new(seed, 1);
+        (0..n)
+            .map(|_| {
+                let mut v = BitVec::zeros(bits);
+                for i in 0..bits {
+                    v.set(i, rng.chance(0.5));
+                }
+                v
+            })
+            .collect()
+    }
+
+    /// Exhaustive single-turn config: one maintain() laps the pool.
+    fn full_pass() -> ScrubConfig {
+        ScrubConfig {
+            rows_per_turn: 1 << 20,
+            ..ScrubConfig::default()
+        }
+    }
+
+    #[test]
+    fn healthy_pool_scrubs_clean_and_stays_nominal() {
+        let model = tiny_model(64, 8, 3, 44);
+        let pool = MacroPool::with_capacity(&model, nominal(), 4);
+        assert_eq!(pool.mode(), PoolMode::Resident);
+        let mut ctl = ScrubController::new(7, full_pass());
+        let d = ctl.maintain(&pool);
+        assert!(d.rows_scrubbed > 0, "the cursor visited real rows");
+        assert_eq!(d.faults_detected, 0);
+        assert_eq!(ctl.degraded_mode(), DegradedMode::Nominal);
+        assert!(ctl.take_reports().is_empty());
+    }
+
+    #[test]
+    fn stuck_bits_are_detected_and_repaired_bit_exact() {
+        let model = tiny_model(64, 8, 3, 44);
+        let images = rand_images(6, 64, 29);
+        let pool = MacroPool::with_capacity(&model, nominal(), 4);
+        let twin = MacroPool::with_capacity(&model, nominal(), 4);
+        let site = pool.fault_sites()[0].site;
+        let mut plan = FaultPlan::default();
+        // stick the cell at the complement of its programmed value, so
+        // the corruption is guaranteed (a stuck-at that happens to agree
+        // with the stored bit is genuinely harmless and undetectable)
+        let golden = crate::bnn::mapping::program_row(&model.layers[0], 0, 0);
+        for col in 0..2 {
+            let bit = !golden.get(col);
+            plan.push(0, site, FaultKind::StuckBit { row: 0, col, bit });
+        }
+        pool.inject_fault_plan(plan);
+        // activate on the first batch, then scrub the corruption away
+        pool.classify_batch_at(&images, 0);
+        twin.classify_batch_at(&images, 0);
+        let mut ctl = ScrubController::new(7, full_pass());
+        let d = ctl.maintain(&pool);
+        assert!(d.faults_detected > 0, "a polarity must have corrupted");
+        assert_eq!(d.repairs, d.faults_detected, "all repaired in place");
+        assert!(ctl
+            .take_reports()
+            .iter()
+            .all(|r| r.action == RepairAction::Remapped),
+            "stuck cells re-assert through rewrites: repair must remap");
+        // post-repair predictions are bit-exact against the twin
+        let a = pool.classify_batch_at(&images, images.len() as u64);
+        let b = twin.classify_batch_at(&images, images.len() as u64);
+        assert_eq!(a, b);
+        assert_eq!(ctl.degraded_mode(), DegradedMode::Nominal);
+    }
+
+    #[test]
+    fn scrubbing_a_healthy_pool_is_invisible_to_predictions() {
+        let model = tiny_model(64, 8, 3, 44);
+        let images = rand_images(6, 64, 31);
+        for noise in [NoiseMode::Nominal, NoiseMode::Analog] {
+            let opts = PipelineOptions {
+                noise,
+                ..Default::default()
+            };
+            let pool = MacroPool::with_capacity(&model, opts, 4);
+            let twin = MacroPool::with_capacity(&model, opts, 4);
+            let mut ctl = ScrubController::new(9, full_pass());
+            let mut base = 0;
+            for _ in 0..3 {
+                let a = pool.classify_batch_at(&images, base);
+                let b = twin.classify_batch_at(&images, base);
+                assert_eq!(a, b, "scrub must not perturb noise streams");
+                base += images.len() as u64;
+                ctl.maintain(&pool);
+            }
+            assert_eq!(ctl.stats().faults_detected, 0);
+        }
+    }
+}

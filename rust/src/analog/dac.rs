@@ -5,6 +5,7 @@
 
 use super::constants as k;
 use super::matchline::Voltages;
+use crate::cam::faults::RailId;
 use crate::util::rng::Rng;
 
 /// Coarse DAC resolution [V] — 25 mV steps as in the paper's Table I grid.
@@ -20,6 +21,10 @@ pub struct VoltageDac {
     target: f64,
     /// Static per-instance error (trimmed at production; small).
     offset: f64,
+    /// Factory-trimmed value of `offset` — drift is measured against it.
+    factory: f64,
+    /// Stuck-code fault: the DAC no longer accepts new codes.
+    stuck: bool,
     /// Number of retune events so far (for energy accounting).
     pub retune_count: u64,
 }
@@ -30,9 +35,12 @@ impl VoltageDac {
         // offset (~2 mV sigma) is nulled by calibrating *through* the rail
         // (the achieved tolerance, not the programmed voltage, is what the
         // trim loop measures), leaving only the residual drift below.
+        let offset = rng.normal(0.0, 0.0003);
         VoltageDac {
             target: quantize(initial),
-            offset: rng.normal(0.0, 0.0003),
+            offset,
+            factory: offset,
+            stuck: false,
             retune_count: 0,
         }
     }
@@ -42,13 +50,19 @@ impl VoltageDac {
         VoltageDac {
             target: quantize(initial),
             offset: 0.0,
+            factory: 0.0,
+            stuck: false,
             retune_count: 0,
         }
     }
 
     /// Program a new level. Returns the settle time [s] charged to the
-    /// schedule (0 if the quantized level is unchanged).
+    /// schedule (0 if the quantized level is unchanged).  A stuck DAC
+    /// (`cam::faults::FaultKind::StuckDac`) ignores the request outright.
     pub fn set(&mut self, v: f64) -> f64 {
+        if self.stuck {
+            return 0.0;
+        }
         let q = quantize(v);
         if (q - self.target).abs() < DAC_FINE / 4.0 {
             return 0.0;
@@ -61,6 +75,42 @@ impl VoltageDac {
     /// The voltage actually delivered.
     pub fn value(&self) -> f64 {
         self.target + self.offset
+    }
+
+    /// Freeze the DAC at its current code (stuck-code fault injection).
+    pub fn stick(&mut self) {
+        self.stuck = true;
+    }
+
+    /// Release a stuck code — the repair models switching the rail onto
+    /// its spare DAC leg (scrub escalation charges the settle elsewhere).
+    pub fn unstick(&mut self) {
+        self.stuck = false;
+    }
+
+    pub fn is_stuck(&self) -> bool {
+        self.stuck
+    }
+
+    /// Walk the delivered level away from factory trim (drift fault).
+    pub fn drift(&mut self, volts: f64) {
+        self.offset += volts;
+    }
+
+    /// How far the static error has drifted from its factory trim [V].
+    pub fn drift_from_factory(&self) -> f64 {
+        self.offset - self.factory
+    }
+
+    /// Re-trim the static error back to factory (drift repair).  Returns
+    /// the settle time [s] charged, 0 when already on trim.
+    pub fn trim(&mut self) -> f64 {
+        if (self.offset - self.factory).abs() < 1e-12 {
+            return 0.0;
+        }
+        self.offset = self.factory;
+        self.retune_count += 1;
+        k::T_RETUNE_SETTLE
     }
 }
 
@@ -118,6 +168,56 @@ impl VoltageRails {
     pub fn total_retunes(&self) -> u64 {
         self.vref.retune_count + self.veval.retune_count + self.vst.retune_count
     }
+
+    fn rail_mut(&mut self, rail: RailId) -> &mut VoltageDac {
+        match rail {
+            RailId::Vref => &mut self.vref,
+            RailId::Veval => &mut self.veval,
+            RailId::Vst => &mut self.vst,
+        }
+    }
+
+    /// Freeze one rail's DAC at its current code (fault injection).
+    pub fn stick(&mut self, rail: RailId) {
+        self.rail_mut(rail).stick();
+    }
+
+    /// Drift one rail's delivered level by `volts` (fault injection).
+    pub fn drift(&mut self, rail: RailId, volts: f64) {
+        self.rail_mut(rail).drift(volts);
+    }
+
+    /// Any rail frozen by a stuck-code fault?
+    pub fn any_stuck(&self) -> bool {
+        self.vref.is_stuck() || self.veval.is_stuck() || self.vst.is_stuck()
+    }
+
+    /// Release every stuck rail (the spare-DAC-leg repair; the caller
+    /// re-parks the rails so the next retune lands the correct codes).
+    pub fn unstick_all(&mut self) {
+        self.vref.unstick();
+        self.veval.unstick();
+        self.vst.unstick();
+    }
+
+    /// Largest absolute drift from factory trim across the rails [V] —
+    /// the scrub pass's drift detector (healthy rails report 0.0).
+    pub fn max_drift(&self) -> f64 {
+        self.vref
+            .drift_from_factory()
+            .abs()
+            .max(self.veval.drift_from_factory().abs())
+            .max(self.vst.drift_from_factory().abs())
+    }
+
+    /// Re-trim every rail back to its factory offset; rails settle in
+    /// parallel → max settle time [s], 0 when nothing had drifted.
+    pub fn trim_all(&mut self) -> f64 {
+        let a = self.vref.trim();
+        let b = self.veval.trim();
+        let c = self.vst.trim();
+        a.max(b).max(c)
+    }
 }
 
 #[cfg(test)]
@@ -153,6 +253,33 @@ mod tests {
         assert_eq!(r.total_retunes(), 3);
         let d = r.delivered();
         assert!((d.vref - 0.8).abs() < 1e-12);
+    }
+
+    #[test]
+    fn stuck_dac_ignores_retunes_until_released() {
+        let mut d = VoltageDac::ideal(1.2);
+        d.stick();
+        assert_eq!(d.set(0.8), 0.0);
+        assert_eq!(d.retune_count, 0);
+        assert!((d.value() - 1.2).abs() < 1e-12, "frozen at the old code");
+        d.unstick();
+        assert!(d.set(0.8) > 0.0);
+        assert!((d.value() - 0.8).abs() < 1e-12);
+    }
+
+    #[test]
+    fn drift_is_measured_and_trimmed_against_factory() {
+        let mut rng = Rng::new(7, 7);
+        let mut r = VoltageRails::new(Voltages::exact(), &mut rng);
+        assert_eq!(r.max_drift(), 0.0, "fresh rails sit on factory trim");
+        let before = r.delivered();
+        r.drift(RailId::Vref, 0.004);
+        assert!((r.max_drift() - 0.004).abs() < 1e-12);
+        assert!(r.trim_all() > 0.0);
+        assert_eq!(r.max_drift(), 0.0);
+        let after = r.delivered();
+        assert!((after.vref - before.vref).abs() < 1e-12, "trim restores");
+        assert_eq!(r.trim_all(), 0.0, "already on trim");
     }
 
     #[test]

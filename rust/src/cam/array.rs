@@ -37,6 +37,24 @@
 //! mismatch counting (RNG-free, any traversal order) and MLSA decisions
 //! (RNG-consuming, fixed order) are two separate passes — fusing them in
 //! tiled order would permute draws and silently change analog results.
+//!
+//! ## Fault injection and repair (see `cam::faults`)
+//!
+//! The array owns an [`ArrayFaults`] set, empty on a healthy device.
+//! Stuck bitcells live in the *store* (forced at injection and re-forced
+//! by every row write), so mismatch counting sees them for free; dead
+//! rows and transient upsets override the fire decision **after** the
+//! healthy MLSA evaluated — the RNG draw order is identical with or
+//! without faults, which is what keeps identically-seeded replicas and
+//! repaired arrays bit-exact against a never-faulted twin.  Both search
+//! kernels hoist `has_fire_faults()` so the healthy hot path pays one
+//! branch per batch.  Repairs: [`CamArray::remap_row_to_spare`] models
+//! address-level spare-row redundancy (logical index, prefix layout and
+//! frozen variation preserved — the module docs in `cam::faults` spell
+//! out the invariants), [`CamArray::rewrite_row`] reprograms contents
+//! without redrawing variation, and [`CamArray::recalibrate_rails`]
+//! re-trims drifted DACs, each charged through the normal cycle/stall
+//! accounting.
 
 use crate::analog::constants as k;
 use crate::analog::dac::VoltageRails;
@@ -47,6 +65,7 @@ use crate::util::bitops::{hamming_words, hamming_words_masked, BitMatrix, BitVec
 use crate::util::rng::Rng;
 
 use super::config::CamConfig;
+use super::faults::{ArrayFaults, FaultKind, DEFAULT_SPARE_ROWS};
 
 /// Noise fidelity of the simulation.
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
@@ -151,6 +170,10 @@ pub struct CamArray {
     scratch_f: Vec<bool>,
     /// Lazily rebuilt per-row decision state (module docs).
     cache: RowCache,
+    /// Injected hardware faults (empty on a healthy device — module docs).
+    faults: ArrayFaults,
+    /// Spare physical rows remaining for address-level remap repairs.
+    spare_rows: usize,
 }
 
 impl CamArray {
@@ -176,6 +199,8 @@ impl CamArray {
             scratch_m: Vec::new(),
             scratch_f: Vec::new(),
             cache: RowCache::default(),
+            faults: ArrayFaults::default(),
+            spare_rows: DEFAULT_SPARE_ROWS,
         }
     }
 
@@ -224,6 +249,7 @@ impl CamArray {
         assert_eq!(data.len(), self.config.width(), "row width mismatch");
         assert!(row < self.config.rows(), "row index out of range");
         self.store.row_words_mut(row).copy_from_slice(data.words());
+        self.apply_stuck_bits(row);
         self.row_valid[row] = true;
         self.row_var[row] = match self.noise {
             NoiseMode::Nominal => RowVariation::nominal(),
@@ -233,6 +259,36 @@ impl CamArray {
         self.clock.tick(1);
         self.events.cells_written += self.config.width() as u64;
         self.events.row_writes += 1;
+    }
+
+    /// Reprogram a row's contents *without* redrawing its frozen per-row
+    /// variation — the scrub repair path.  Keeping the variation is the
+    /// documented spare-remap idealization (`cam::faults` module docs):
+    /// it is what makes a completed repair bit-exact against a
+    /// never-faulted twin in analog mode.  Costs one cycle like any row
+    /// write; still-active stuck bits re-assert themselves.
+    pub fn rewrite_row(&mut self, row: usize, data: &BitVec) {
+        assert_eq!(data.len(), self.config.width(), "row width mismatch");
+        assert!(row < self.config.rows(), "row index out of range");
+        self.store.row_words_mut(row).copy_from_slice(data.words());
+        self.apply_stuck_bits(row);
+        if !self.row_valid[row] {
+            self.row_valid[row] = true;
+            self.cache.valid = false;
+        }
+        self.clock.tick(1);
+        self.events.cells_written += self.config.width() as u64;
+        self.events.row_writes += 1;
+    }
+
+    /// Re-force every stuck bitcell recorded against `row` in the store.
+    fn apply_stuck_bits(&mut self, row: usize) {
+        let store = &mut self.store;
+        for &(r, c, b) in &self.faults.stuck_bits {
+            if r == row {
+                store.set(row, c, b);
+            }
+        }
     }
 
     /// Invalidate a row (its MLSA output is ignored by searches).
@@ -250,6 +306,81 @@ impl CamArray {
         } else {
             None
         }
+    }
+
+    /// Inject one hardware fault (taxonomy in `cam::faults`).  Stuck bits
+    /// corrupt the store immediately (and re-assert on every row write);
+    /// dead rows / transients arm the post-decision fire override; DAC
+    /// faults land on the rails.  Injection itself is instantaneous —
+    /// silicon does not announce its failures.
+    pub fn inject_fault(&mut self, kind: &FaultKind) {
+        match *kind {
+            FaultKind::StuckBit { row, col, bit } => {
+                assert!(row < self.config.rows(), "fault row out of range");
+                assert!(col < self.config.width(), "fault col out of range");
+                self.faults.stuck_bits.retain(|&(r, c, _)| (r, c) != (row, col));
+                self.faults.stuck_bits.push((row, col, bit));
+                self.store.set(row, col, bit);
+            }
+            FaultKind::DeadRow { row, always_fire } => {
+                assert!(row < self.config.rows(), "fault row out of range");
+                self.faults.dead_rows.retain(|&(r, _)| r != row);
+                self.faults.dead_rows.push((row, always_fire));
+            }
+            FaultKind::Transient { row, searches } => {
+                assert!(row < self.config.rows(), "fault row out of range");
+                if searches > 0 {
+                    self.faults.transients.push((row, searches));
+                }
+            }
+            FaultKind::StuckDac { rail } => self.rails.stick(rail),
+            FaultKind::DacDrift { rail, volts } => {
+                self.rails.drift(rail, volts);
+                // the delivered level moved under the cached thresholds
+                self.cache.valid = false;
+            }
+        }
+    }
+
+    /// The faults currently active in this array (scrub diagnostics).
+    pub fn active_faults(&self) -> &ArrayFaults {
+        &self.faults
+    }
+
+    /// Spare physical rows still available for remap repairs.
+    pub fn spares_left(&self) -> usize {
+        self.spare_rows
+    }
+
+    /// Remap logical `row` onto a spare physical row (address-level
+    /// redundancy; invariants in `cam::faults`).  The row keeps its
+    /// logical index and frozen variation; all faults recorded against it
+    /// clear because the defective cells are no longer addressed.  The
+    /// caller reprograms the row via [`CamArray::rewrite_row`].  Blowing
+    /// the remap fuse costs one cycle.  Returns `false` (and does
+    /// nothing) once the spare budget is exhausted.
+    pub fn remap_row_to_spare(&mut self, row: usize) -> bool {
+        assert!(row < self.config.rows(), "row index out of range");
+        if self.spare_rows == 0 {
+            return false;
+        }
+        self.spare_rows -= 1;
+        self.faults.clear_row(row);
+        self.clock.tick(1);
+        true
+    }
+
+    /// Re-trim drifted rails back to factory offsets (the scrub drift
+    /// repair).  Charged like any retune: settle stall + one retune event
+    /// when something actually moved; returns the stall [s].
+    pub fn recalibrate_rails(&mut self) -> f64 {
+        let stall = self.rails.trim_all();
+        if stall > 0.0 {
+            self.cache.valid = false;
+            self.clock.stall(stall);
+            self.events.retunes += 1;
+        }
+        stall
     }
 
     /// Retune the three voltage rails; stalls for the DAC settle time.
@@ -426,6 +557,9 @@ impl CamArray {
         // cycle-global noise (supply, strobe jitter) drawn once per search:
         // every row of a cycle shares the rails and the MLSA strobe
         let plan = self.begin_plan(rng);
+        // hoisted so a healthy array pays one branch per search, and the
+        // override runs *after* the MLSA decision (draw order preserved)
+        let have_row_faults = self.faults.has_fire_faults();
         for r in 0..rows {
             if !self.row_valid[r] {
                 mismatches.push(0);
@@ -439,7 +573,11 @@ impl CamArray {
                 }
             };
             mismatches.push(m);
-            fires.push(row_fires(&plan, &self.cache, m, r, rng));
+            let mut fired = row_fires(&plan, &self.cache, m, r, rng);
+            if have_row_faults {
+                fired = self.faults.apply_fire(r, fired);
+            }
+            fires.push(fired);
         }
         self.account_searches(1);
     }
@@ -564,7 +702,10 @@ impl CamArray {
 
         // pass 2 — MLSA decisions in the sequential path's exact draw
         // order: per query, the cycle-global draw, then metastable rows
-        // ascending (see the module docs for why the passes are split)
+        // ascending (see the module docs for why the passes are split).
+        // Fault overrides run after each row's decision (and its draws),
+        // gated on one hoisted branch so the healthy path is unchanged.
+        let have_row_faults = self.faults.has_fire_faults();
         for qi in 0..nq {
             let rng: &mut Rng = match &mut rngs {
                 BatchRngs::Shared(r) => &mut **r,
@@ -576,7 +717,11 @@ impl CamArray {
             let mut word = 0u64;
             let mut widx = 0usize;
             for (r, &m) in m_row.iter().enumerate() {
-                if self.row_valid[r] && row_fires(&plan, &self.cache, m, r, rng) {
+                let mut fired = self.row_valid[r] && row_fires(&plan, &self.cache, m, r, rng);
+                if have_row_faults && self.row_valid[r] {
+                    fired = self.faults.apply_fire(r, fired);
+                }
+                if fired {
                     word |= 1 << (r % 64);
                 }
                 if r % 64 == 63 {
@@ -669,6 +814,137 @@ mod tests {
             q.set(i, false);
         }
         (stored, q)
+    }
+
+    #[test]
+    fn stuck_bit_survives_rewrites_until_remapped() {
+        let mut cam = CamArray::nominal(CamConfig::W512x256);
+        let stored = BitVec::ones(512);
+        cam.write_row(0, &stored);
+        assert!(cam.search(&stored)[0]);
+        // a stuck-at-0 cell corrupts the stored pattern
+        cam.inject_fault(&FaultKind::StuckBit {
+            row: 0,
+            col: 7,
+            bit: false,
+        });
+        let mut m = Vec::new();
+        let mut f = Vec::new();
+        cam.search_into(&stored, &mut m, &mut f);
+        assert_eq!(m[0], 1, "one mismatching cell");
+        // rewriting the golden data does not help: the cell re-sticks
+        cam.rewrite_row(0, &stored);
+        cam.search_into(&stored, &mut m, &mut f);
+        assert_eq!(m[0], 1, "stuck bit re-asserts on write");
+        // spare-row remap clears the fault; the rewrite then lands clean
+        assert_eq!(cam.spares_left(), DEFAULT_SPARE_ROWS);
+        assert!(cam.remap_row_to_spare(0));
+        assert_eq!(cam.spares_left(), DEFAULT_SPARE_ROWS - 1);
+        cam.rewrite_row(0, &stored);
+        cam.search_into(&stored, &mut m, &mut f);
+        assert_eq!(m[0], 0);
+        assert!(f[0]);
+    }
+
+    #[test]
+    fn dead_rows_pin_the_fire_decision_in_both_kernels() {
+        let mut cam = CamArray::nominal(CamConfig::W512x256);
+        let (stored, far) = query(512, 400);
+        cam.write_row(0, &stored);
+        cam.write_row(1, &stored);
+        cam.set_voltages(Voltages::exact());
+        cam.inject_fault(&FaultKind::DeadRow {
+            row: 0,
+            always_fire: false,
+        });
+        cam.inject_fault(&FaultKind::DeadRow {
+            row: 1,
+            always_fire: true,
+        });
+        let fires = cam.search(&stored);
+        assert!(!fires[0], "never-fire row ignores a perfect match");
+        assert!(fires[1]);
+        let fires = cam.search(&far).to_vec();
+        assert!(!fires[0]);
+        assert!(fires[1], "always-fire row ignores 400 mismatches");
+        // the batched kernel applies the same overrides
+        let mut mm = Vec::new();
+        let mut fm = BitMatrix::zeros(1, 1);
+        let mut rngs = vec![Rng::new(1, 1), Rng::new(2, 2)];
+        cam.search_batch_into_rngs(
+            &[stored.clone(), far.clone()],
+            &mut rngs,
+            &mut mm,
+            &mut fm,
+        );
+        for qi in 0..2 {
+            assert!(!fm.get(qi, 0));
+            assert!(fm.get(qi, 1));
+        }
+    }
+
+    #[test]
+    fn transient_upset_inverts_then_self_clears() {
+        let mut cam = CamArray::nominal(CamConfig::W512x256);
+        let stored = BitVec::ones(512);
+        cam.write_row(0, &stored);
+        cam.set_voltages(Voltages::exact());
+        cam.inject_fault(&FaultKind::Transient {
+            row: 0,
+            searches: 2,
+        });
+        assert!(!cam.search(&stored)[0], "upset inverts the match");
+        assert!(!cam.search(&stored)[0]);
+        assert!(cam.search(&stored)[0], "fault burned down");
+        assert!(cam.active_faults().is_empty());
+    }
+
+    #[test]
+    fn faultless_array_is_bit_identical_to_a_pristine_twin() {
+        // zero-cost abstraction at the array level: an array that owns an
+        // (empty) fault set takes the exact same decisions and draws as
+        // one that never heard of faults — here: inject + fully repair,
+        // then compare against the twin on the same query/noise stream
+        for noise in [NoiseMode::Nominal, NoiseMode::Analog] {
+            let mut a = CamArray::new(CamConfig::W512x256, Pvt::nominal(), noise, 9);
+            let mut b = CamArray::new(CamConfig::W512x256, Pvt::nominal(), noise, 9);
+            let mut rng = Rng::new(77, 1);
+            let rows: Vec<BitVec> = (0..8)
+                .map(|_| {
+                    let mut v = BitVec::zeros(512);
+                    for i in 0..512 {
+                        v.set(i, rng.chance(0.5));
+                    }
+                    v
+                })
+                .collect();
+            for (r, data) in rows.iter().enumerate() {
+                a.write_row(r, data);
+                b.write_row(r, data);
+            }
+            a.set_voltages(Voltages::new(0.72, 0.48, 1.05));
+            b.set_voltages(Voltages::new(0.72, 0.48, 1.05));
+            // fault + repair on `a`; `b` stays pristine
+            a.inject_fault(&FaultKind::StuckBit {
+                row: 3,
+                col: 11,
+                bit: true,
+            });
+            assert!(a.remap_row_to_spare(3));
+            a.rewrite_row(3, &rows[3]);
+            b.rewrite_row(3, &rows[3]); // same cycle/event charge on the twin
+            let (mut ma, mut fa) = (Vec::new(), Vec::new());
+            let (mut mb, mut fb) = (Vec::new(), Vec::new());
+            let mut ra = Rng::new(5, 5);
+            let mut rb = Rng::new(5, 5);
+            for q in &rows {
+                a.search_into_rng(q, &mut ma, &mut fa, &mut ra);
+                b.search_into_rng(q, &mut mb, &mut fb, &mut rb);
+                assert_eq!(ma, mb, "{noise:?}");
+                assert_eq!(fa, fb, "{noise:?}");
+            }
+            assert_eq!(format!("{ra:?}"), format!("{rb:?}"), "draw order");
+        }
     }
 
     #[test]

@@ -1,0 +1,386 @@
+//! Deterministic hardware-fault taxonomy and seed-replayable fault plans.
+//!
+//! The variation stack (PVT corners, per-row mismatch, DAC quantization,
+//! matchline noise) models a *healthy* device.  This module adds the
+//! unhealthy one: discrete failures that production silicon accumulates
+//! mid-flight, injected deterministically so every drill is replayable.
+//!
+//! ## Fault taxonomy
+//!
+//! * **Stuck-at bitcell** ([`FaultKind::StuckBit`]) — one cell reads a
+//!   constant regardless of what was programmed.  Modeled in the *store*:
+//!   the stuck value is forced at injection time and re-forced on every
+//!   subsequent row write, so mismatch counting (and therefore every
+//!   downstream prediction path) sees it with zero extra hot-path work.
+//! * **Dead matchline row** ([`FaultKind::DeadRow`]) — the row's MLSA
+//!   output is pinned (`always_fire` or never-fire) independent of the
+//!   mismatch count: a shorted or open matchline.
+//! * **DAC stuck code** ([`FaultKind::StuckDac`]) — the rail's DAC stops
+//!   accepting new codes and freezes at its current level.
+//! * **DAC drift** ([`FaultKind::DacDrift`]) — the rail's static offset
+//!   walks away from its factory trim (aging, temperature).
+//! * **Transient search upset** ([`FaultKind::Transient`]) — the row's
+//!   next `searches` MLSA evaluations are inverted, then the fault clears
+//!   itself (particle strike / supply glitch class).
+//!
+//! ## Determinism and virtual-time scheduling
+//!
+//! A [`FaultPlan`] schedules [`FaultEvent`]s in *image-stream time*
+//! (`at_image` = the pool's global noise-stream index), not wall or device
+//! time: the stream index is the one clock every execution path shares, so
+//! the same plan replayed against the same workload trace lands each fault
+//! on the same image boundary regardless of worker count, batch shape, or
+//! Hamming backend.  An event becomes active on the first batch whose base
+//! stream index reaches `at_image`.
+//!
+//! ## Fire-decision override ordering (identical-seeding interaction)
+//!
+//! Dead-row and transient overrides are applied *after* the healthy MLSA
+//! decision has been evaluated (and after any metastable-band RNG draw it
+//! consumed).  This keeps the RNG draw order of a faulty array identical
+//! to a healthy one, which is what lets a repaired array — and the
+//! identically-seeded sibling replicas of a faulty one — return to
+//! bit-exact agreement with a never-faulted twin.
+//!
+//! ## Quarantine and spare-remap invariants
+//!
+//! Each array carries [`DEFAULT_SPARE_ROWS`] spare physical rows.
+//! `CamArray::remap_row_to_spare` models address-level redundancy (a fuse
+//! remaps the logical row onto a spare in place): the row keeps its
+//! logical index — neuron indexing, prefix layout, and RNG interleave are
+//! untouched — and all of the row's active faults are cleared because the
+//! defective physical row is no longer addressed.  As a documented
+//! idealization the spare inherits the logical row's frozen per-row
+//! variation (repair rewrites go through `CamArray::rewrite_row`, which
+//! does not redraw variation), so a completed repair restores bit-exact
+//! predictions in both noise modes.  When spares are exhausted the repair
+//! escalates: replica rebuild, then replica quarantine (failover to the
+//! bit-identical siblings), then typed refusal — never a silent wrong
+//! answer.
+//!
+//! ## Scrub amortization rule
+//!
+//! The scrub pass (`accel::scrub`) runs on the engine's maintenance seam
+//! and verifies a bounded number of rows per inter-batch gap
+//! (`ScrubConfig::rows_per_turn`), round-robin over every resident site,
+//! so detection latency is bounded by `total_rows / rows_per_turn` gaps
+//! while the steady-state serving path never stalls on scrubbing.
+
+use crate::util::rng::Rng;
+
+/// Spare physical rows per array available for address-level remap.
+pub const DEFAULT_SPARE_ROWS: usize = 4;
+
+/// Typed degradation ladder of a self-healing pool.  Degradation is
+/// *graceful and typed*: a pool never silently serves known-wrong
+/// answers — it repairs, then routes around quarantined copies
+/// ([`DegradedMode::Failover`]), and when a site is beyond repair it
+/// refuses new work ([`DegradedMode::Refusing`]) with a typed rejection
+/// at admission.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq, PartialOrd, Ord)]
+pub enum DegradedMode {
+    /// Every site healthy (or repaired back to bit-exact nominal).
+    #[default]
+    Nominal,
+    /// One or more physical copies quarantined; serving routes around
+    /// them (bit-exact siblings, or the cold-spill funnel).
+    Failover,
+    /// An unrepairable site remains: new admissions are refused, typed.
+    Refusing,
+}
+
+/// One of the three user-configurable voltage rails.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum RailId {
+    Vref,
+    Veval,
+    Vst,
+}
+
+/// A single hardware failure (taxonomy in the module docs).
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub enum FaultKind {
+    /// Bitcell at (`row`, `col`) reads a constant `bit`.
+    StuckBit { row: usize, col: usize, bit: bool },
+    /// Row's MLSA output is pinned: `always_fire` or never-fire.
+    DeadRow { row: usize, always_fire: bool },
+    /// The rail's DAC freezes at its current code.
+    StuckDac { rail: RailId },
+    /// The rail's static offset drifts by `volts` from factory trim.
+    DacDrift { rail: RailId, volts: f64 },
+    /// The row's next `searches` MLSA evaluations are inverted.
+    Transient { row: usize, searches: u64 },
+}
+
+/// Which physical array a fault lands on, in the pool's logical
+/// placement coordinates (stable across re-plans of the same shape).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum FaultSite {
+    /// A hidden-layer load.  `replica: None` hits every identically-seeded
+    /// replica the same way (the determinism drills); `Some(k)` hits one
+    /// physical copy (the failover drills).
+    Hidden {
+        layer: usize,
+        load: usize,
+        replica: Option<usize>,
+    },
+    /// An output slot.  `None` = every output slot; `Some(i)` = one.
+    Output { slot: Option<usize> },
+}
+
+/// One scheduled failure: at image-stream index `at_image`, apply `kind`
+/// to `site`.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct FaultEvent {
+    pub at_image: u64,
+    pub site: FaultSite,
+    pub kind: FaultKind,
+}
+
+/// A deterministic, seed-replayable schedule of failures.
+#[derive(Clone, Debug, Default, PartialEq)]
+pub struct FaultPlan {
+    pub events: Vec<FaultEvent>,
+}
+
+impl FaultPlan {
+    pub fn is_empty(&self) -> bool {
+        self.events.is_empty()
+    }
+
+    pub fn len(&self) -> usize {
+        self.events.len()
+    }
+
+    pub fn push(&mut self, at_image: u64, site: FaultSite, kind: FaultKind) {
+        self.events.push(FaultEvent {
+            at_image,
+            site,
+            kind,
+        });
+    }
+
+    /// Earliest scheduled image index (`u64::MAX` when empty) — the
+    /// pool's fast-path activation gate.
+    pub fn first_at(&self) -> u64 {
+        self.events.iter().map(|e| e.at_image).min().unwrap_or(u64::MAX)
+    }
+
+    /// Stable sort by activation time (injection order within one image
+    /// index is preserved).
+    pub fn sorted(mut self) -> Self {
+        self.events.sort_by_key(|e| e.at_image);
+        self
+    }
+
+    /// The fault-drill generator: an escalating, seed-replayable schedule
+    /// over the given resident sites — transient upsets first, then
+    /// stuck bits within the per-array spare budget, then dead rows and
+    /// rail drift, and finally (when a replicated site exists) a stuck
+    /// rail that writes off one whole replica.  Same `(seed, sites,
+    /// start_image, stride)` → identical plan, run to run.
+    pub fn escalating(seed: u64, sites: &[SiteGeometry], start_image: u64, stride: u64) -> Self {
+        let mut rng = Rng::new(seed, 0xFA17);
+        let mut plan = FaultPlan::default();
+        if sites.is_empty() {
+            return plan;
+        }
+        let stride = stride.max(1);
+        let mut at = start_image;
+        // phase 1 — transient upsets (self-clearing; no repair needed)
+        for _ in 0..sites.len().min(3) {
+            let g = &sites[rng.below(sites.len() as u64) as usize];
+            let row = rng.below(g.rows.max(1) as u64) as usize;
+            let searches = 1 + rng.below(4);
+            plan.push(at, g.site, FaultKind::Transient { row, searches });
+            at += stride;
+        }
+        // phase 2 — stuck bitcells, at most half the spare budget per
+        // site so the dead rows below still have spares to land on
+        for g in sites {
+            for _ in 0..(DEFAULT_SPARE_ROWS / 2) {
+                let row = rng.below(g.rows.max(1) as u64) as usize;
+                let col = rng.below(g.width.max(1) as u64) as usize;
+                let bit = rng.chance(0.5);
+                plan.push(at, g.site, FaultKind::StuckBit { row, col, bit });
+                at += stride;
+            }
+        }
+        // phase 3 — dead matchlines + slow reference drift
+        for g in sites.iter().take(2) {
+            let row = rng.below(g.rows.max(1) as u64) as usize;
+            let always_fire = rng.chance(0.5);
+            plan.push(at, g.site, FaultKind::DeadRow { row, always_fire });
+            at += stride;
+        }
+        let g = &sites[rng.below(sites.len() as u64) as usize];
+        plan.push(
+            at,
+            g.site,
+            FaultKind::DacDrift {
+                rail: RailId::Vref,
+                volts: 0.004,
+            },
+        );
+        at += stride;
+        // phase 4 — a stuck rail kills one copy of a replicated load
+        // outright (failover drill); skipped when nothing is replicated
+        if let Some(g) = sites.iter().find(|g| g.replicas > 1) {
+            if let FaultSite::Hidden { layer, load, .. } = g.site {
+                plan.push(
+                    at,
+                    FaultSite::Hidden {
+                        layer,
+                        load,
+                        replica: Some(0),
+                    },
+                    FaultKind::StuckDac { rail: RailId::Veval },
+                );
+            }
+        }
+        plan.sorted()
+    }
+}
+
+/// Geometry of one injectable site (from `MacroPool::fault_sites`), so
+/// generators like [`FaultPlan::escalating`] can place faults in range.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct SiteGeometry {
+    pub site: FaultSite,
+    /// Programmed rows at the site.
+    pub rows: usize,
+    /// Row width in bits.
+    pub width: usize,
+    /// Physical copies of the site (1 = unreplicated).
+    pub replicas: usize,
+}
+
+/// The faults currently active inside one [`crate::cam::CamArray`]
+/// (empty in a healthy array; every vector scan below is gated on that).
+#[derive(Clone, Debug, Default)]
+pub struct ArrayFaults {
+    /// `(row, col, stuck_value)` — forced in the store on injection and
+    /// on every subsequent write to the row.
+    pub stuck_bits: Vec<(usize, usize, bool)>,
+    /// `(row, always_fire)` — pinned MLSA outputs.
+    pub dead_rows: Vec<(usize, bool)>,
+    /// `(row, remaining_evaluations)` — self-clearing upsets.
+    pub transients: Vec<(usize, u64)>,
+}
+
+impl ArrayFaults {
+    pub fn is_empty(&self) -> bool {
+        self.stuck_bits.is_empty() && self.dead_rows.is_empty() && self.transients.is_empty()
+    }
+
+    /// Any fault that overrides the fire decision (the search loops hoist
+    /// this so a healthy array pays one branch per batch, not per row).
+    #[inline]
+    pub fn has_fire_faults(&self) -> bool {
+        !self.dead_rows.is_empty() || !self.transients.is_empty()
+    }
+
+    /// Drop every fault recorded against `row` (the spare-remap repair:
+    /// the defective physical row is no longer addressed).
+    pub fn clear_row(&mut self, row: usize) {
+        self.stuck_bits.retain(|&(r, _, _)| r != row);
+        self.dead_rows.retain(|&(r, _)| r != row);
+        self.transients.retain(|&(r, _)| r != row);
+    }
+
+    /// Override the healthy fire decision for `row` (called *after* the
+    /// MLSA evaluated, so RNG draw order is fault-independent).  Dead
+    /// rows pin the output; otherwise a pending transient inverts one
+    /// evaluation and burns down.
+    #[inline]
+    pub fn apply_fire(&mut self, row: usize, natural: bool) -> bool {
+        if let Some(&(_, always)) = self.dead_rows.iter().find(|&&(r, _)| r == row) {
+            return always;
+        }
+        let mut hit = false;
+        for t in self.transients.iter_mut() {
+            if t.0 == row {
+                t.1 -= 1;
+                hit = true;
+                break;
+            }
+        }
+        if hit {
+            self.transients.retain(|&(_, left)| left > 0);
+            return !natural;
+        }
+        natural
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn sites() -> Vec<SiteGeometry> {
+        vec![
+            SiteGeometry {
+                site: FaultSite::Hidden {
+                    layer: 0,
+                    load: 0,
+                    replica: None,
+                },
+                rows: 64,
+                width: 256,
+                replicas: 2,
+            },
+            SiteGeometry {
+                site: FaultSite::Output { slot: Some(0) },
+                rows: 16,
+                width: 256,
+                replicas: 1,
+            },
+        ]
+    }
+
+    #[test]
+    fn escalating_plan_is_seed_replayable() {
+        let s = sites();
+        let a = FaultPlan::escalating(0xFA17, &s, 32, 16);
+        let b = FaultPlan::escalating(0xFA17, &s, 32, 16);
+        assert_eq!(a, b);
+        assert!(!a.is_empty());
+        assert_eq!(a.first_at(), 32);
+        // sorted by activation time
+        assert!(a.events.windows(2).all(|w| w[0].at_image <= w[1].at_image));
+        // a different seed produces a different schedule
+        let c = FaultPlan::escalating(0xFA18, &s, 32, 16);
+        assert_ne!(a, c);
+        // the failover phase targeted one replica of the replicated site
+        assert!(a.events.iter().any(|e| matches!(
+            e.site,
+            FaultSite::Hidden {
+                replica: Some(0),
+                ..
+            }
+        )));
+    }
+
+    #[test]
+    fn dead_row_pins_and_transient_inverts_then_clears() {
+        let mut f = ArrayFaults::default();
+        assert!(!f.has_fire_faults());
+        f.dead_rows.push((3, true));
+        assert!(f.apply_fire(3, false));
+        assert!(f.apply_fire(3, false), "dead rows are persistent");
+        f.transients.push((5, 2));
+        assert!(f.apply_fire(5, false));
+        assert!(f.apply_fire(5, false));
+        assert!(!f.apply_fire(5, false), "transient cleared after 2 evals");
+        assert!(f.has_fire_faults(), "dead row still active");
+        f.clear_row(3);
+        assert!(!f.has_fire_faults());
+    }
+
+    #[test]
+    fn empty_plan_gates_the_fast_path() {
+        let p = FaultPlan::default();
+        assert!(p.is_empty());
+        assert_eq!(p.first_at(), u64::MAX);
+    }
+}

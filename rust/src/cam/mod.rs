@@ -6,6 +6,11 @@ pub mod array;
 pub mod bitcell;
 pub mod ops;
 pub mod config;
+pub mod faults;
 
 pub use array::{CamArray, NoiseMode};
+pub use faults::{
+    ArrayFaults, DegradedMode, FaultEvent, FaultKind, FaultPlan, FaultSite, RailId, SiteGeometry,
+    DEFAULT_SPARE_ROWS,
+};
 pub use config::{CamConfig, BANK_COLS, BANK_ROWS, CAPACITY_BITS, N_BANKS};

@@ -63,9 +63,10 @@ use std::time::Duration;
 
 use crate::accel::{
     BatchPolicy, Batcher, MacroPool, MultiPool, PipelineOptions, PoolMode, ReplanConfig,
-    ReplanController, Request, RunStats,
+    ReplanController, Request, RunStats, ScrubConfig, ScrubController,
 };
 use crate::bnn::model::MappedModel;
+use crate::cam::DegradedMode;
 use crate::server::clock::{Clock, Timestamp};
 use crate::server::metrics::ServerMetrics;
 use crate::util::bitops::BitVec;
@@ -118,6 +119,10 @@ pub enum RejectReason {
     QueueFull { pending: usize, limit: usize },
     /// The bounded ingress ring is full (producer-side backpressure).
     IngressFull { capacity: usize },
+    /// The lane's pool has degraded past every recovery rung
+    /// ([`DegradedMode::Refusing`]): refusing new work is the typed
+    /// alternative to serving silently wrong answers.
+    Degraded,
     /// The engine side of the ingress hung up.
     ShuttingDown,
 }
@@ -140,6 +145,11 @@ impl std::fmt::Display for Rejected {
             RejectReason::IngressFull { capacity } => {
                 write!(f, "tenant {}: ingress full (capacity {capacity})", self.tenant)
             }
+            RejectReason::Degraded => write!(
+                f,
+                "tenant {}: pool degraded beyond recovery, refusing service",
+                self.tenant
+            ),
             RejectReason::ShuttingDown => write!(f, "tenant {}: shutting down", self.tenant),
         }
     }
@@ -188,6 +198,13 @@ enum MaintenanceTask {
     /// Every `period` ticks, re-measure per-lane device pacing from the
     /// served-stat deltas and swap it into the `DevicePaced` model.
     Recalibrate { period: u64, ticks: u64 },
+    /// Scrub-and-repair for one lane's pool: each turn spends a bounded
+    /// row budget read-verifying resident weights (plus canary
+    /// searches), repairing in place and escalating per `accel::scrub`.
+    Scrub {
+        lane: usize,
+        controller: ScrubController,
+    },
 }
 
 /// The unified serving core (module docs).  `Server` and `MultiServer`
@@ -320,6 +337,26 @@ impl<'m> Engine<'m> {
         self
     }
 
+    /// Register the scrub-and-repair maintenance task for one lane: each
+    /// tick spends `cfg.rows_per_turn` rows read-verifying that lane's
+    /// resident pool against the golden weights (plus canary searches),
+    /// repairs in place, and escalates through rebuild → quarantine →
+    /// typed refusal (see `accel::scrub`).  Scrub progress, detections,
+    /// repairs, and the pool's [`DegradedMode`] surface in the lane's
+    /// [`ServerMetrics`]; a pool that reaches `Refusing` rejects new
+    /// submissions with [`RejectReason::Degraded`].
+    pub fn with_scrub(self, lane: usize, seed: u64, cfg: ScrubConfig) -> Self {
+        if matches!(self.backend, Backend::Single(_)) {
+            assert_eq!(lane, 0, "single-tenant engines have one lane");
+        }
+        assert!(lane < self.lanes.len(), "scrub lane out of range");
+        self.maintenance.lock().unwrap().push(MaintenanceTask::Scrub {
+            lane,
+            controller: ScrubController::new(seed, cfg),
+        });
+        self
+    }
+
     /// Snapshot of the completion-pacing model (recalibration may have
     /// replaced the one installed at build time).
     pub fn service_model(&self) -> ServiceModel {
@@ -388,7 +425,20 @@ impl<'m> Engine<'m> {
         now: Timestamp,
     ) -> Result<u64, Rejected> {
         let lane = &self.lanes[tenant];
+        // a pool past every recovery rung refuses typed rather than
+        // serve silently wrong answers (the scrub ladder's last rung)
+        let degraded = match &self.backend {
+            Backend::Single(p) => p.degraded_mode(),
+            Backend::Multi(p) => p.tenant(tenant).degraded_mode(),
+        };
         let mut st = lane.state.lock().unwrap();
+        if degraded == DegradedMode::Refusing {
+            st.metrics.shed += 1;
+            return Err(Rejected {
+                tenant,
+                reason: RejectReason::Degraded,
+            });
+        }
         let pending = st.batcher.pending();
         let limit = lane.admission.max_depth;
         if pending >= limit {
@@ -496,6 +546,21 @@ impl<'m> Engine<'m> {
                         self.recalibrate_pacing();
                     }
                 }
+                MaintenanceTask::Scrub { lane, controller } => {
+                    let pool = match &self.backend {
+                        Backend::Single(p) => p,
+                        Backend::Multi(p) => p.tenant(*lane),
+                    };
+                    let delta = controller.maintain(pool);
+                    let mut st = self.lanes[*lane].state.lock().unwrap();
+                    st.metrics.scrubbed_rows += delta.rows_scrubbed;
+                    st.metrics.faults_detected += delta.faults_detected;
+                    st.metrics.faults_repaired += delta.repairs;
+                    st.metrics.replica_rebuilds += delta.rebuilds;
+                    st.metrics.replica_quarantines += delta.quarantines;
+                    st.metrics.unrepairable += delta.unrepairable;
+                    st.metrics.degraded = controller.degraded_mode();
+                }
             }
         }
     }
@@ -511,11 +576,27 @@ impl<'m> Engine<'m> {
         };
         for lane in 0..self.lanes.len() {
             let stats = self.take_device_stats(lane);
-            if stats.inferences > 0 {
-                per_image[lane] =
-                    Duration::from_secs_f64(stats.elapsed_s() / stats.inferences as f64);
+            if let Some(per) = Self::pacing_from_stats(&stats) {
+                per_image[lane] = per;
             }
         }
+    }
+
+    /// Per-image pacing from a served-stat delta, or `None` when the
+    /// sample cannot produce a usable duration: nothing served, or a
+    /// zero/non-finite per-image time (a drained-elsewhere or empty
+    /// delta must leave the current pacing alone — installing a zero
+    /// pacing would collapse the simulation to free batches, and a NaN
+    /// would panic `Duration::from_secs_f64`).
+    fn pacing_from_stats(stats: &RunStats) -> Option<Duration> {
+        if stats.inferences == 0 {
+            return None;
+        }
+        let per = stats.elapsed_s() / stats.inferences as f64;
+        if !per.is_finite() || per <= 0.0 {
+            return None;
+        }
+        Some(Duration::from_secs_f64(per))
     }
 
     /// Executor stage: classify one drained batch and record its lane
@@ -567,6 +648,20 @@ impl<'m> Engine<'m> {
     /// Requests queued in one lane.
     pub fn pending(&self, lane: usize) -> usize {
         self.lanes[lane].state.lock().unwrap().batcher.pending()
+    }
+
+    /// The end-to-end latency budget assigned to requests submitted to
+    /// `lane` without an explicit one — the ingress-ring default for
+    /// `Submission { budget: None, .. }` (see
+    /// [`BatchPolicy::default_budget`]).
+    pub fn default_budget(&self, lane: usize) -> Duration {
+        self.lanes[lane]
+            .state
+            .lock()
+            .unwrap()
+            .batcher
+            .policy()
+            .default_budget()
     }
 
     /// Requests queued across all lanes.
@@ -1131,5 +1226,149 @@ mod tests {
         assert!(m.migration_steps > 0, "steps surfaced in lane metrics");
         assert!(m.migration_retunes_saved > 0, "predicted saving surfaced");
         assert_eq!(m.migration_cycles, 0, "re-pins program no rows");
+    }
+
+    #[test]
+    fn maintenance_scrubs_and_repairs_injected_faults() {
+        // tentpole: the scrub maintenance task detects injected stuck
+        // bits in the inter-batch gap, repairs them, and surfaces every
+        // counter in the lane metrics
+        use crate::cam::{FaultKind, FaultPlan, FaultSite};
+        let model = tiny_model(64, 8, 3, 60);
+        let engine = Engine::single(
+            &model,
+            opts(),
+            BatchPolicy {
+                max_batch: 8,
+                max_wait: Duration::ZERO,
+            },
+            crate::accel::DEFAULT_POOL_MACROS,
+        )
+        .with_clock(Clock::simulated())
+        .with_scrub(
+            0,
+            60,
+            crate::accel::ScrubConfig {
+                rows_per_turn: 1 << 20, // full pass per turn
+                ..Default::default()
+            },
+        );
+        // stuck bits with polarity opposite the stored golden weights,
+        // so read-verify must flag them
+        let golden = crate::bnn::mapping::program_row(&model.layers[0], 0, 0);
+        let mut plan = FaultPlan::default();
+        let site = FaultSite::Hidden {
+            layer: 0,
+            load: 0,
+            replica: None,
+        };
+        for col in 0..2 {
+            plan.push(
+                0,
+                site,
+                FaultKind::StuckBit {
+                    row: 0,
+                    col,
+                    bit: !golden.get(col),
+                },
+            );
+        }
+        engine.single_pool().inject_fault_plan(plan);
+        // first served batch activates the faults; the trailing
+        // maintenance turn scrubs and repairs them
+        for img in images(8, 64) {
+            engine.submit(0, img).unwrap();
+        }
+        assert_eq!(engine.poll().len(), 8);
+        let m = engine.lane_metrics(0);
+        assert!(m.scrubbed_rows > 0, "scrub progress surfaced");
+        assert!(m.faults_detected > 0, "stuck row flagged");
+        assert_eq!(m.faults_repaired, m.faults_detected, "repaired in place");
+        assert_eq!(m.replica_rebuilds, 0, "no rebuild needed");
+        assert_eq!(m.unrepairable, 0);
+        assert_eq!(m.degraded, DegradedMode::Nominal, "repair keeps the lane nominal");
+        // the repaired pool serves the next epoch bit-exactly: a
+        // never-faulted twin classifying the same noise-stream range
+        // must agree on every vote
+        let imgs = images(8, 64);
+        for img in &imgs {
+            engine.submit(0, img.clone()).unwrap();
+        }
+        let mut got = engine.poll();
+        assert_eq!(got.len(), 8);
+        got.sort_by_key(|r| r.id);
+        let twin = MacroPool::new(&model, opts());
+        let want = twin.classify_batch_at(&imgs, 8);
+        for (r, (votes, pred)) in got.iter().zip(&want) {
+            assert_eq!(&r.prediction, pred);
+            assert_eq!(&r.votes, votes);
+        }
+    }
+
+    #[test]
+    fn refusing_pool_rejects_submissions_typed() {
+        // the degradation ladder's last rung: a Refusing pool sheds new
+        // work with a typed reason while already-admitted work drains
+        let model = tiny_model(64, 8, 3, 61);
+        let engine = Engine::single(
+            &model,
+            opts(),
+            BatchPolicy {
+                max_batch: 8,
+                max_wait: Duration::from_secs(60),
+            },
+            crate::accel::DEFAULT_POOL_MACROS,
+        )
+        .with_clock(Clock::simulated());
+        engine.submit(0, images(1, 64).pop().unwrap()).unwrap();
+        engine.single_pool().set_degraded_mode(DegradedMode::Refusing);
+        let err = engine.submit(0, images(1, 64).pop().unwrap()).unwrap_err();
+        assert_eq!(err.reason, RejectReason::Degraded);
+        assert!(err.to_string().contains("refusing"));
+        let m = engine.lane_metrics(0);
+        assert_eq!((m.admitted, m.shed), (1, 1));
+        // graceful: the admitted request still completes
+        assert_eq!(engine.flush().len(), 1);
+        // recovery (spares freed, replica swapped) reopens admission
+        engine.single_pool().set_degraded_mode(DegradedMode::Nominal);
+        assert!(engine.submit(0, images(1, 64).pop().unwrap()).is_ok());
+    }
+
+    #[test]
+    fn default_budget_mirrors_the_lane_policy() {
+        // satellite: the ingress dispatch resolves budget-less messages
+        // through this accessor, so it must agree with the batcher's rule
+        let model = tiny_model(64, 8, 3, 62);
+        let policy = BatchPolicy {
+            max_batch: 8,
+            max_wait: ms(3),
+        };
+        let engine = Engine::single(&model, opts(), policy, crate::accel::DEFAULT_POOL_MACROS);
+        assert_eq!(engine.default_budget(0), policy.default_budget());
+        assert_eq!(engine.default_budget(0), ms(6));
+    }
+
+    #[test]
+    fn pacing_guard_ignores_empty_and_zero_elapsed_samples() {
+        // satellite: recalibration must never install a zero or NaN
+        // pacing — an empty delta (nothing served, or stats drained
+        // elsewhere) keeps the current model
+        let idle = RunStats::default();
+        assert_eq!(Engine::pacing_from_stats(&idle), None, "nothing served");
+        let drained = RunStats {
+            inferences: 8, // served, but cycle counters drained elsewhere
+            ..Default::default()
+        };
+        assert_eq!(
+            Engine::pacing_from_stats(&drained),
+            None,
+            "zero elapsed must not become zero pacing"
+        );
+        let sane = RunStats {
+            inferences: 4,
+            cycles: 4_000,
+            ..Default::default()
+        };
+        assert!(Engine::pacing_from_stats(&sane).unwrap() > Duration::ZERO);
     }
 }

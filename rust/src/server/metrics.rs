@@ -7,6 +7,7 @@
 //! serving bench sizes its reservoir generously but the default cap is
 //! already exact below 4096 samples.
 
+use crate::cam::DegradedMode;
 use crate::util::stats::Summary;
 
 /// Aggregate service metrics for one lane.
@@ -30,6 +31,24 @@ pub struct ServerMetrics {
     /// re-planning controller started on this lane (the cost model's
     /// claim — never counted before the controller commits a plan).
     pub migration_retunes_saved: u64,
+    /// Rows read-verified by the scrub maintenance task on this lane's
+    /// pool (amortised a few rows per inter-batch gap).
+    pub scrubbed_rows: u64,
+    /// Faults the scrubber detected (read-verify mismatches, canary
+    /// failures, rail drift/stuck conditions).
+    pub faults_detected: u64,
+    /// In-place repairs (rewrites, spare-row remaps, rail re-trims).
+    pub faults_repaired: u64,
+    /// Whole-copy rebuilds after in-place repair failed.
+    pub replica_rebuilds: u64,
+    /// Replicas quarantined after exhausting their rebuild budget.
+    pub replica_quarantines: u64,
+    /// Faults past every recovery rung (the lane refuses rather than
+    /// serve silently wrong answers).
+    pub unrepairable: u64,
+    /// Health of the lane's pool as of the last scrub maintenance turn
+    /// (`Nominal` → `Failover` → `Refusing`, monotone per fault).
+    pub degraded: DegradedMode,
     pub latency_ms: Summary,
     pub batch_sizes: Summary,
 }

@@ -236,6 +236,10 @@ pub struct WorkloadSummary {
     pub rejected_ingress_full: u64,
     /// Submission raced shutdown ([`RejectReason::ShuttingDown`]).
     pub rejected_shutting_down: u64,
+    /// Pool degraded past every recovery rung
+    /// ([`RejectReason::Degraded`]) — the typed refusal that replaces
+    /// silently wrong answers.
+    pub rejected_degraded: u64,
 }
 
 impl WorkloadSummary {
@@ -244,6 +248,7 @@ impl WorkloadSummary {
             RejectReason::QueueFull { .. } => self.rejected_queue_full += 1,
             RejectReason::IngressFull { .. } => self.rejected_ingress_full += 1,
             RejectReason::ShuttingDown => self.rejected_shutting_down += 1,
+            RejectReason::Degraded => self.rejected_degraded += 1,
         }
     }
 }
@@ -311,22 +316,94 @@ pub fn serve_workload_with_admission(
     max_macros: usize,
     admission: AdmissionPolicy,
 ) -> (Vec<Response>, WorkloadSummary) {
+    let subs: Vec<Submission> = images
+        .iter()
+        .map(|img| Submission {
+            tenant: 0,
+            image: img.clone(),
+            budget: None,
+        })
+        .collect();
+    drive_submissions(
+        model,
+        opts,
+        policy,
+        subs,
+        n_producers,
+        inter_arrival,
+        max_macros,
+        admission,
+    )
+}
+
+/// [`serve_workload_with_admission`] with an explicit end-to-end latency
+/// budget per request, carried through the ingress ring in the
+/// [`Submission`] message: request `i` travels with `budgets[i]`, and its
+/// lane closes the batch once half that budget is spent queueing (the
+/// half-budget rule — see `accel::batcher`).  The plain facades send
+/// `budget: None`, which the dispatch loop resolves to the lane's
+/// [`Engine::default_budget`].
+#[allow(clippy::too_many_arguments)]
+pub fn serve_workload_with_budgets(
+    model: &MappedModel,
+    opts: PipelineOptions,
+    policy: BatchPolicy,
+    images: &[BitVec],
+    budgets: &[Duration],
+    n_producers: usize,
+    inter_arrival: Duration,
+    max_macros: usize,
+    admission: AdmissionPolicy,
+) -> (Vec<Response>, WorkloadSummary) {
+    assert_eq!(images.len(), budgets.len(), "one budget per request");
+    let subs: Vec<Submission> = images
+        .iter()
+        .zip(budgets)
+        .map(|(img, b)| Submission {
+            tenant: 0,
+            image: img.clone(),
+            budget: Some(*b),
+        })
+        .collect();
+    drive_submissions(
+        model,
+        opts,
+        policy,
+        subs,
+        n_producers,
+        inter_arrival,
+        max_macros,
+        admission,
+    )
+}
+
+/// The shared closed-loop driver behind the `serve_workload_*` facades:
+/// producer threads feed pre-built [`Submission`]s through the bounded
+/// ingress, the consumer runs the engine's dispatch loop parked on the
+/// ring between arrivals.
+#[allow(clippy::too_many_arguments)]
+fn drive_submissions(
+    model: &MappedModel,
+    opts: PipelineOptions,
+    policy: BatchPolicy,
+    subs: Vec<Submission>,
+    n_producers: usize,
+    inter_arrival: Duration,
+    max_macros: usize,
+    admission: AdmissionPolicy,
+) -> (Vec<Response>, WorkloadSummary) {
+    let n = subs.len();
     let (tx, rx) = ingress_channel(INGRESS_CAPACITY);
     std::thread::scope(|s| {
         // producers feed the bounded ingress (blocking sends: a closed
         // loop never sheds at the ring, it backpressures the producers;
         // shedding happens at lane admission under a bounded policy)
-        let per = images.len().div_ceil(n_producers.max(1));
-        for chunk in images.chunks(per.max(1)) {
+        let per = n.div_ceil(n_producers.max(1));
+        for chunk in subs.chunks(per.max(1)) {
             let tx = tx.clone();
             s.spawn(move || {
-                for img in chunk {
-                    let sub = Submission {
-                        tenant: 0,
-                        image: img.clone(),
-                        budget: None,
-                    };
-                    if tx.submit_blocking(sub).is_err() {
+                for sub in chunk {
+                    if tx.submit_blocking(sub.clone()).is_err() {
                         return;
                     }
                     if !inter_arrival.is_zero() {
@@ -340,7 +417,7 @@ pub fn serve_workload_with_admission(
         // between arrivals and woken at the earliest lane deadline
         let engine =
             Engine::single(model, opts, policy, max_macros).with_admission(0, admission);
-        let mut responses = Vec::with_capacity(images.len());
+        let mut responses = Vec::with_capacity(n);
         let mut summary = WorkloadSummary::default();
         loop {
             let wait = match engine.next_deadline() {
@@ -359,11 +436,15 @@ pub fn serve_workload_with_admission(
             };
             match rx.recv_timeout(wait) {
                 Ok(sub) => {
-                    let admitted = match sub.budget {
-                        Some(b) => engine.submit_with_budget(sub.tenant, sub.image, b),
-                        None => engine.submit(sub.tenant, sub.image),
-                    };
-                    if let Err(rejected) = admitted {
+                    // a message without a budget gets the lane's default
+                    // here at the dispatch seam, so every admitted
+                    // request carries an explicit end-to-end budget
+                    let budget = sub
+                        .budget
+                        .unwrap_or_else(|| engine.default_budget(sub.tenant));
+                    if let Err(rejected) =
+                        engine.submit_with_budget(sub.tenant, sub.image, budget)
+                    {
                         summary.count(&rejected);
                     }
                     responses.extend(engine.poll());
@@ -491,6 +572,39 @@ mod tests {
         assert_eq!(summary.metrics.admitted, 2);
         assert_eq!(summary.metrics.shed, 62, "lane metrics agree with the tally");
         assert_eq!(summary.metrics.served, 2);
+    }
+
+    #[test]
+    fn per_request_budgets_ride_the_ingress_ring() {
+        // satellite: explicit latency budgets travel in the Submission
+        // message and every request still completes exactly once
+        let model = tiny_model(64, 8, 3, 48);
+        let imgs = images(12, 64);
+        let budgets: Vec<Duration> = (0..imgs.len())
+            .map(|i| Duration::from_millis(1 + i as u64))
+            .collect();
+        let (responses, summary) = serve_workload_with_budgets(
+            &model,
+            opts(),
+            BatchPolicy {
+                max_batch: 4,
+                max_wait: Duration::from_micros(100),
+            },
+            &imgs,
+            &budgets,
+            2,
+            Duration::ZERO,
+            crate::accel::DEFAULT_POOL_MACROS,
+            AdmissionPolicy::default(),
+        );
+        assert_eq!(responses.len(), 12);
+        assert_eq!(summary.metrics.served, 12);
+        assert_eq!(summary.metrics.shed, 0);
+        assert_eq!(summary.rejected_degraded, 0);
+        let mut ids: Vec<u64> = responses.iter().map(|r| r.id).collect();
+        ids.sort_unstable();
+        ids.dedup();
+        assert_eq!(ids.len(), 12, "every id exactly once");
     }
 
     #[test]
