@@ -687,7 +687,10 @@ impl<'m> MacroPool<'m> {
         if let Some(fb) = &self.fallback {
             return fb.lock().unwrap().classify_batch(images);
         }
-        let resident = self.resident.as_ref().unwrap();
+        let resident = self
+            .resident
+            .as_ref()
+            .expect("non-fallback pool always has a resident placement");
         // one placement read-lock per batch: migration steps apply under
         // the write lock in the gaps between batches, so no batch ever
         // waits on (or observes) a half-applied step
@@ -789,6 +792,7 @@ impl<'m> MacroPool<'m> {
                     );
                     slot.cam.events.useful_macs += payload * n as u64;
                     let after = (slot.cam.events.retunes, slot.cam.events.row_writes);
+                    // picbnn: allow(lock-discipline) — leaf spill-cost mutex under the funnel-slot guard; strict slot→leaf order, leaf never taken first
                     let mut spill = resident.spill_cost.lock().unwrap();
                     spill.retunes += after.0 - before.0;
                     spill.row_writes += after.1 - before.1;
@@ -820,10 +824,12 @@ impl<'m> MacroPool<'m> {
         positions: Option<&[usize]>,
     ) {
         let out_idx = self.model.layers.len() - 1;
-        let layer = self.model.layers.last().unwrap();
+        let layer = self.model.layers.last().expect("model has layers");
         let out_load = &self.plans[out_idx][0];
         let n_cls = layer.n_out();
-        let width = CamConfig::fitting(layer.seg_width).unwrap().width();
+        let width = CamConfig::fitting(layer.seg_width)
+            .unwrap_or_else(|| panic!("word width {} unsupported", layer.seg_width))
+            .width();
         let n = s.acts.rows();
         // queries are threshold-independent: pack once per batch
         s.pack_queries(layer, 0, width);
@@ -888,7 +894,10 @@ impl<'m> MacroPool<'m> {
             stats.degraded = self.degraded_mode();
             return stats;
         }
-        let resident = self.resident.as_ref().unwrap();
+        let resident = self
+            .resident
+            .as_ref()
+            .expect("non-fallback pool always has a resident placement");
         let st = resident.state.read().unwrap();
         let mut stats = RunStats {
             inferences,
@@ -960,6 +969,7 @@ impl<'m> MacroPool<'m> {
         let mut st = resident.state.write().unwrap();
         let next = mp.apply_step(&st.plan, k);
         let cost = self.reconcile(resident, &mut st, next);
+        // picbnn: allow(lock-discipline) — leaf migration-stats mutex under the placement write lock; strict placement→leaf order
         resident.migration.lock().unwrap().add(&cost);
         cost
     }
@@ -1509,7 +1519,7 @@ impl<'m> MacroPool<'m> {
                     let removed = if want == 0 {
                         slot.take().expect("have > 0").replicas
                     } else {
-                        slot.as_mut().unwrap().replicas.split_off(want)
+                        slot.as_mut().expect("have > 0").replicas.split_off(want)
                     };
                     for replica in removed {
                         retire(&mut carry, &replica.into_inner().unwrap(), false);
@@ -1536,7 +1546,7 @@ impl<'m> MacroPool<'m> {
             }
         }
         // --- output slots: count, then programming, then parking ---
-        let out_layer = self.model.layers.last().unwrap();
+        let out_layer = self.model.layers.last().expect("model has layers");
         let out_cfg =
             CamConfig::fitting(out_layer.seg_width).expect("output word width unsupported");
         let out_load = &self.plans[out_idx][0];

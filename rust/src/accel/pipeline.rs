@@ -254,7 +254,8 @@ pub(crate) fn program_load_into(
     layer: &crate::bnn::model::MappedLayer,
     load: &Load,
 ) {
-    let cfg = CamConfig::fitting(layer.seg_width).unwrap();
+    let cfg = CamConfig::fitting(layer.seg_width)
+        .unwrap_or_else(|| panic!("word width {} unsupported", layer.seg_width));
     if cam.config() != cfg {
         cam.reconfigure(cfg);
     }
@@ -369,7 +370,8 @@ impl<'m> Pipeline<'m> {
         let output_points = calibrate_output_points(model, &schedule, opts.pvt);
         // load plans per layer
         let plans = plan_loads(model);
-        let first_cfg = CamConfig::fitting(model.layers[0].seg_width).unwrap();
+        let first_cfg = CamConfig::fitting(model.layers[0].seg_width)
+            .unwrap_or_else(|| panic!("word width {} unsupported", model.layers[0].seg_width));
         let mut cam = CamArray::new(first_cfg, opts.pvt, opts.noise, opts.seed);
         cam.set_noise_scale(opts.noise_scale);
         Pipeline {
@@ -458,7 +460,7 @@ impl<'m> Pipeline<'m> {
         let before = self.cost_snapshot();
         let model = self.model;
         let layer_idx = model.layers.len() - 1;
-        let layer = model.layers.last().unwrap();
+        let layer = model.layers.last().expect("model has layers");
         let n_cls = layer.n_out();
         assert_eq!(
             self.plans[layer_idx].len(),

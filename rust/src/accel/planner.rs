@@ -203,7 +203,12 @@ pub fn plan_traffic(
     let pinned = ordered.len();
     let point_of: Vec<usize> = schedule_points
         .iter()
-        .map(|&p| point_ids.iter().position(|&q| q == p).unwrap())
+        .map(|&p| {
+            point_ids
+                .iter()
+                .position(|&q| q == p)
+                .expect("schedule points come from point_ids")
+        })
         .collect();
     let pin_slot: Vec<Option<usize>> = point_of.iter().map(|&pi| slot_of_point[pi]).collect();
 
@@ -312,7 +317,7 @@ fn funnel_retunes(
     // weighted cyclic transitions: a switch *to* an entry costs that
     // entry's access frequency (w / w_max) of a retune per batch
     let mut acc = 0u64;
-    let mut prev = funnel.last().unwrap().0;
+    let mut prev = funnel.last().expect("len > 1 checked above").0;
     for &(e, w) in &funnel {
         if e != prev {
             acc += w;

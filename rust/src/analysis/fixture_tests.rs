@@ -1,0 +1,206 @@
+//! Fixture-based self-tests: every lint rule gets a firing fixture, a
+//! clean fixture, and a pragma-suppressed fixture (ISSUE 9).  The
+//! fixtures live under `fixtures/` — which `lint_tree` skips and cargo
+//! never compiles — and are fed to [`super::lint_source`] under
+//! synthetic repo paths so each lands in the scope its rule targets.
+
+use super::{lint_source, Report};
+
+fn fire(fixture: &str, as_path: &str, rule: &str) -> Report {
+    let r = lint_source(as_path, fixture);
+    assert!(
+        !r.clean(),
+        "fixture for `{rule}` at {as_path} should fire but was clean"
+    );
+    assert!(
+        r.findings.iter().any(|f| f.rule == rule),
+        "fixture at {as_path} fired {:?}, expected rule `{rule}`",
+        r.findings
+    );
+    r
+}
+
+fn clean(fixture: &str, as_path: &str) -> Report {
+    let r = lint_source(as_path, fixture);
+    assert!(
+        r.clean() && r.suppressed.is_empty(),
+        "fixture at {as_path} should be clean with no suppressions: {:?}",
+        r.findings
+    );
+    r
+}
+
+fn allow(fixture: &str, as_path: &str, rule: &str) -> Report {
+    let r = lint_source(as_path, fixture);
+    assert!(
+        r.clean(),
+        "pragma fixture at {as_path} should be clean: {:?}",
+        r.findings
+    );
+    assert!(
+        r.suppressed.iter().any(|s| s.rule == rule),
+        "pragma fixture at {as_path} suppressed {:?}, expected `{rule}`",
+        r.suppressed
+    );
+    r
+}
+
+#[test]
+fn clock_seam_fixtures() {
+    let r = fire(
+        include_str!("fixtures/clock_fire.rs"),
+        "rust/src/accel/fixture.rs",
+        "clock-seam",
+    );
+    assert_eq!(r.findings.len(), 2, "Instant and SystemTime both fire");
+    clean(
+        include_str!("fixtures/clock_clean.rs"),
+        "rust/src/accel/fixture.rs",
+    );
+    allow(
+        include_str!("fixtures/clock_allow.rs"),
+        "rust/src/accel/fixture.rs",
+        "clock-seam",
+    );
+    // the same firing source is legal outside src/ (benches own their timing)
+    clean(
+        include_str!("fixtures/clock_fire.rs"),
+        "rust/benches/fixture.rs",
+    );
+}
+
+#[test]
+fn seeded_rng_fixtures() {
+    fire(
+        include_str!("fixtures/rng_fire.rs"),
+        "rust/src/server/fixture.rs",
+        "seeded-rng",
+    );
+    clean(
+        include_str!("fixtures/rng_clean.rs"),
+        "rust/src/server/fixture.rs",
+    );
+    allow(
+        include_str!("fixtures/rng_allow.rs"),
+        "rust/src/server/fixture.rs",
+        "seeded-rng",
+    );
+    // seeded-rng holds in tests/benches too (property tests must replay)
+    fire(
+        include_str!("fixtures/rng_fire.rs"),
+        "rust/tests/fixture.rs",
+        "seeded-rng",
+    );
+}
+
+#[test]
+fn hash_iter_fixtures() {
+    fire(
+        include_str!("fixtures/hash_fire.rs"),
+        "rust/src/util/fixture.rs",
+        "no-hash-iter",
+    );
+    clean(
+        include_str!("fixtures/hash_clean.rs"),
+        "rust/src/util/fixture.rs",
+    );
+    let r = allow(
+        include_str!("fixtures/hash_allow.rs"),
+        "rust/src/util/fixture.rs",
+        "no-hash-iter",
+    );
+    assert_eq!(r.suppressed.len(), 2, "allow-file covers both mentions");
+    // outside src/ the container choice is the test's business
+    clean(include_str!("fixtures/hash_fire.rs"), "rust/tests/fixture.rs");
+}
+
+#[test]
+fn lock_discipline_fixtures() {
+    let r = fire(
+        include_str!("fixtures/lock_fire.rs"),
+        "rust/src/accel/fixture.rs",
+        "lock-discipline",
+    );
+    assert_eq!(r.findings.len(), 1, "one nested acquisition");
+    assert!(r.findings[0].message.contains("nested"));
+    assert_eq!(r.poison_unwraps, 2, "both guard unwraps are poison idiom");
+
+    let r = fire(
+        include_str!("fixtures/lock_unwrap_fire.rs"),
+        "rust/src/server/fixture.rs",
+        "lock-discipline",
+    );
+    assert_eq!(r.findings.len(), 1, "only the non-poison unwrap fires");
+    assert!(r.findings[0].message.contains("non-poison"));
+    assert_eq!(r.poison_unwraps, 1);
+
+    let r = clean(
+        include_str!("fixtures/lock_clean.rs"),
+        "rust/src/accel/fixture.rs",
+    );
+    assert_eq!(r.poison_unwraps, 4);
+
+    allow(
+        include_str!("fixtures/lock_allow.rs"),
+        "rust/src/accel/fixture.rs",
+        "lock-discipline",
+    );
+}
+
+#[test]
+fn condvar_fixtures() {
+    fire(
+        include_str!("fixtures/condvar_fire.rs"),
+        "rust/src/server/fixture.rs",
+        "condvar-predicate",
+    );
+    clean(
+        include_str!("fixtures/condvar_clean.rs"),
+        "rust/src/server/fixture.rs",
+    );
+    allow(
+        include_str!("fixtures/condvar_allow.rs"),
+        "rust/src/server/fixture.rs",
+        "condvar-predicate",
+    );
+}
+
+#[test]
+fn panic_marker_fixtures() {
+    fire(
+        include_str!("fixtures/panic_fire.rs"),
+        "rust/src/bnn/fixture.rs",
+        "no-panic-markers",
+    );
+    clean(
+        include_str!("fixtures/panic_clean.rs"),
+        "rust/src/bnn/fixture.rs",
+    );
+    allow(
+        include_str!("fixtures/panic_allow.rs"),
+        "rust/src/bnn/fixture.rs",
+        "no-panic-markers",
+    );
+}
+
+#[test]
+fn pragma_hygiene_fixture() {
+    let r = lint_source(
+        "rust/src/util/fixture.rs",
+        include_str!("fixtures/pragma_bad.rs"),
+    );
+    let pragma_findings = r.findings.iter().filter(|f| f.rule == "pragma").count();
+    assert_eq!(
+        pragma_findings, 3,
+        "missing justification + unknown rule + unused allow: {:?}",
+        r.findings
+    );
+    assert!(
+        r.findings
+            .iter()
+            .any(|f| f.rule == "clock-seam"),
+        "a malformed allow must not suppress the underlying finding"
+    );
+    assert_eq!(r.findings.len(), 4);
+    assert!(r.suppressed.is_empty());
+}

@@ -1,0 +1,6 @@
+// picbnn-lint fixture: `clock-seam` violation suppressed by a line
+// pragma with a justification.
+pub fn stamp() -> std::time::Instant {
+    // picbnn: allow(clock-seam) — fixture demonstrates sanctioned wall timing
+    std::time::Instant::now()
+}

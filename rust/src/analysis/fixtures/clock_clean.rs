@@ -1,0 +1,10 @@
+// picbnn-lint fixture: clean under `clock-seam` — time flows through
+// the Clock seam, and mentions of Instant::now() in comments or
+// "Instant::now()" in strings must not fire.
+use crate::server::Clock;
+
+pub fn stamp(clock: &Clock) -> u64 {
+    let banner = "never call Instant::now() directly";
+    let _ = banner;
+    clock.now()
+}

@@ -1,0 +1,13 @@
+// picbnn-lint fixture: `clock-seam` MUST fire twice here (Instant and
+// SystemTime) when linted under a non-allowlisted src path.  This file
+// is never compiled — it lives under fixtures/, which lint_tree skips.
+pub fn stamp() -> std::time::Instant {
+    std::time::Instant::now()
+}
+
+pub fn wall_secs() -> u64 {
+    std::time::SystemTime::now()
+        .duration_since(std::time::UNIX_EPOCH)
+        .map(|d| d.as_secs())
+        .unwrap_or(0)
+}

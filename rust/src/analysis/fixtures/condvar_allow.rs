@@ -1,0 +1,16 @@
+// picbnn-lint fixture: `condvar-predicate` suppressed by a line
+// pragma.
+use std::sync::{Condvar, Mutex};
+
+pub struct Gate {
+    lock: Mutex<bool>,
+    cv: Condvar,
+}
+
+impl Gate {
+    pub fn block(&self) {
+        let guard = self.lock.lock().unwrap();
+        // picbnn: allow(condvar-predicate) — fixture: caller re-checks the predicate in its own loop
+        let _unused = self.cv.wait(guard).unwrap();
+    }
+}

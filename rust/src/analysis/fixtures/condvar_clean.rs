@@ -1,0 +1,20 @@
+// picbnn-lint fixture: clean under `condvar-predicate` — predicate
+// forms re-check the condition across spurious wakeups.
+use std::sync::{Condvar, Mutex};
+use std::time::Duration;
+
+pub struct Gate {
+    lock: Mutex<bool>,
+    cv: Condvar,
+}
+
+impl Gate {
+    pub fn block(&self, d: Duration) -> bool {
+        let guard = self.lock.lock().unwrap();
+        let (open, _timeout) = self
+            .cv
+            .wait_timeout_while(guard, d, |open| !*open)
+            .unwrap();
+        *open
+    }
+}

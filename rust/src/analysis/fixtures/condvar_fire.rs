@@ -1,0 +1,15 @@
+// picbnn-lint fixture: `condvar-predicate` MUST fire — a bare
+// `.wait(…)` is vulnerable to spurious wakeups.
+use std::sync::{Condvar, Mutex};
+
+pub struct Gate {
+    lock: Mutex<bool>,
+    cv: Condvar,
+}
+
+impl Gate {
+    pub fn block(&self) {
+        let guard = self.lock.lock().unwrap();
+        let _unused = self.cv.wait(guard).unwrap();
+    }
+}

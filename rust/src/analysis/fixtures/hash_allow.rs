@@ -1,0 +1,8 @@
+// picbnn-lint fixture: `no-hash-iter` suppressed file-wide (the
+// justification pattern for a module that never iterates).
+// picbnn: allow-file(no-hash-iter) — fixture: lookups only, never iterated
+use std::collections::HashMap;
+
+pub fn lookup(m: &HashMap<u32, u64>, k: u32) -> Option<u64> {
+    m.get(&k).copied()
+}

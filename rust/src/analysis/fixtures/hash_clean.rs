@@ -1,0 +1,7 @@
+// picbnn-lint fixture: clean under `no-hash-iter` — ordered container,
+// deterministic iteration.
+use std::collections::BTreeMap;
+
+pub fn total(m: &BTreeMap<u32, u64>) -> u64 {
+    m.values().sum()
+}

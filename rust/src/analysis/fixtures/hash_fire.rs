@@ -1,0 +1,7 @@
+// picbnn-lint fixture: `no-hash-iter` MUST fire — HashMap in src/
+// (RandomState iteration order breaks replay).
+use std::collections::HashMap;
+
+pub fn total(m: &HashMap<u32, u64>) -> u64 {
+    m.values().sum()
+}

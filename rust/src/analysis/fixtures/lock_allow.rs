@@ -1,0 +1,18 @@
+// picbnn-lint fixture: `lock-discipline` nested acquisition suppressed
+// by a line pragma (the leaf-ordering pattern macro_pool uses).
+use std::sync::{Mutex, RwLock};
+
+pub struct S {
+    placement: RwLock<u32>,
+    migration: Mutex<u64>,
+}
+
+impl S {
+    pub fn step(&self) {
+        let mut st = self.placement.write().unwrap();
+        // picbnn: allow(lock-discipline) — fixture: leaf stats mutex, strict placement→leaf order
+        let mut mig = self.migration.lock().unwrap();
+        *st += 1;
+        *mig += 1;
+    }
+}

@@ -1,0 +1,25 @@
+// picbnn-lint fixture: clean under `lock-discipline` — sequential
+// temporaries, an early `drop`, and poison unwraps on lock results
+// only.
+use std::sync::Mutex;
+
+pub struct S {
+    a: Mutex<u64>,
+    b: Mutex<u64>,
+}
+
+impl S {
+    pub fn shuffle(&self) {
+        let mut a = self.a.lock().unwrap();
+        *a += 1;
+        drop(a);
+        let mut b = self.b.lock().unwrap();
+        *b += 1;
+    }
+
+    pub fn totals(&self) -> (u64, u64) {
+        let x = *self.a.lock().unwrap();
+        let y = *self.b.lock().unwrap();
+        (x, y)
+    }
+}

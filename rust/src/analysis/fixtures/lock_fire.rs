@@ -1,0 +1,18 @@
+// picbnn-lint fixture: `lock-discipline` (nested acquisition) MUST
+// fire — a second blocking lock is taken while the bound write guard
+// is still held.
+use std::sync::{Mutex, RwLock};
+
+pub struct S {
+    placement: RwLock<u32>,
+    stats: Mutex<u64>,
+}
+
+impl S {
+    pub fn bump(&self) {
+        let mut st = self.placement.write().unwrap();
+        let mut stats = self.stats.lock().unwrap();
+        *st += 1;
+        *stats += 1;
+    }
+}

@@ -1,0 +1,16 @@
+// picbnn-lint fixture: `lock-discipline` (unwrap classification) MUST
+// fire — a non-poison `.unwrap()` in hot-path scope.  The poison
+// unwrap on the lock result below must NOT fire.
+use std::sync::Mutex;
+
+pub struct S {
+    cache: Mutex<Vec<u32>>,
+}
+
+impl S {
+    pub fn first(&self, xs: &[u32]) -> u32 {
+        let held = self.cache.lock().unwrap();
+        let _ = held.len();
+        *xs.first().unwrap()
+    }
+}

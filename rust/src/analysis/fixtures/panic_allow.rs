@@ -1,0 +1,5 @@
+// picbnn-lint fixture: `no-panic-markers` suppressed by a line pragma.
+pub fn probe(x: u32) -> u32 {
+    // picbnn: allow(no-panic-markers) — fixture: temporary diagnostic kept on purpose
+    dbg!(x)
+}

@@ -1,0 +1,5 @@
+// picbnn-lint fixture: `no-panic-markers` MUST fire — a stray `todo!`
+// in src/.
+pub fn later() -> u32 {
+    todo!()
+}

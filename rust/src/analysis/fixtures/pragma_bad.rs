@@ -1,0 +1,13 @@
+// picbnn-lint fixture: the `pragma` meta-rule MUST fire three times —
+// a missing justification, an unknown rule name, and an unused allow —
+// and the malformed allow must NOT suppress, so the clock-seam finding
+// below survives as a fourth.
+pub fn stamp() -> std::time::Instant {
+    // picbnn: allow(clock-seam)
+    std::time::Instant::now()
+}
+
+// picbnn: allow(not-a-rule) — rule name does not exist
+
+// picbnn: allow(seeded-rng) — nothing in this file constructs an RNG
+pub fn noop() {}

@@ -1,0 +1,6 @@
+// picbnn-lint fixture: `seeded-rng` violation suppressed by a same-line
+// pragma.
+pub fn roll() -> u64 {
+    let mut rng = rand::thread_rng(); // picbnn: allow(seeded-rng) — fixture shows same-line suppression
+    rng.gen()
+}

@@ -1,0 +1,8 @@
+// picbnn-lint fixture: clean under `seeded-rng` — the explicit-seed
+// constructor from util::rng.
+use crate::util::rng::Rng;
+
+pub fn roll(seed: u64) -> u64 {
+    let mut rng = Rng::new(seed, 0);
+    rng.next_u64()
+}

@@ -1,0 +1,6 @@
+// picbnn-lint fixture: `seeded-rng` MUST fire — ambient-entropy RNG
+// construction.
+pub fn roll() -> u64 {
+    let mut rng = rand::thread_rng();
+    rng.gen()
+}

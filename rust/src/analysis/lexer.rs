@@ -1,0 +1,483 @@
+//! A comment/string-aware Rust lexer for `picbnn-lint` (no parsing
+//! heroics — see `analysis` module docs).
+//!
+//! The token stream is deliberately coarse: identifiers carry their
+//! text, punctuation carries its byte, and literals collapse to opaque
+//! kinds.  That is exactly enough for the rule engine's pattern scans
+//! (`Instant :: now (`, `. lock ( )`, brace-depth guard tracking) while
+//! guaranteeing that tokens inside comments, doc comments, strings, raw
+//! strings, and char literals can never fire a rule — the failure mode
+//! that makes `grep`-based invariant checks unusable on this codebase
+//! (module docs routinely *mention* `Instant::now()`).
+//!
+//! Two side channels ride along with the tokens:
+//!
+//! * **Pragmas** — line comments *beginning* with the `picbnn:` marker,
+//!   i.e. `// picbnn: allow(<rule>) — <justification>` (or `allow-file`
+//!   for a whole file).  Doc comments and comments that merely mention
+//!   the marker (or a `picbnn::` crate path) are not candidates.  The
+//!   lexer only extracts the raw comment; parsing and matching live in
+//!   `analysis::pragma`.
+//! * **`#[cfg(test)]` spans** — the line ranges of test modules, so
+//!   rules scoped to production code (the hot-path unwrap scan) can skip
+//!   test bodies without a second pass.
+
+/// What a token is; only the distinctions the rules need.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum TokKind {
+    /// Identifier or keyword (text in [`Tok::text`]).
+    Ident,
+    /// Single punctuation byte (in [`Tok::punct`]).
+    Punct,
+    /// Any number literal.
+    Num,
+    /// Any string literal (plain, raw, or byte).
+    Str,
+    /// A char literal.
+    Char,
+    /// A lifetime (`'a`, `'static`).
+    Lifetime,
+}
+
+/// One lexed token.
+#[derive(Clone, Debug)]
+pub struct Tok {
+    pub kind: TokKind,
+    /// Identifier text (empty for non-identifiers — literal bodies are
+    /// opaque to the rules by design).
+    pub text: String,
+    /// Punctuation byte (0 for non-punctuation).
+    pub punct: u8,
+    /// 1-based source line.
+    pub line: u32,
+}
+
+impl Tok {
+    pub fn is_ident(&self, s: &str) -> bool {
+        self.kind == TokKind::Ident && self.text == s
+    }
+
+    pub fn is_punct(&self, c: u8) -> bool {
+        self.kind == TokKind::Punct && self.punct == c
+    }
+}
+
+/// A `//` comment whose text contains the `picbnn:` marker, pre-split
+/// from the token stream for the pragma parser.
+#[derive(Clone, Debug)]
+pub struct RawPragma {
+    /// 1-based line the comment sits on.
+    pub line: u32,
+    /// Comment body after `//`, untrimmed.
+    pub text: String,
+}
+
+/// Lexer output: tokens plus the pragma/test-span side channels.
+#[derive(Debug, Default)]
+pub struct Lexed {
+    pub toks: Vec<Tok>,
+    pub pragmas: Vec<RawPragma>,
+    /// Inclusive 1-based line spans of `#[cfg(test)] mod … { … }` blocks.
+    pub cfg_test_spans: Vec<(u32, u32)>,
+}
+
+impl Lexed {
+    /// Whether `line` falls inside a `#[cfg(test)]` module.
+    pub fn in_test_span(&self, line: u32) -> bool {
+        self.cfg_test_spans
+            .iter()
+            .any(|&(lo, hi)| lo <= line && line <= hi)
+    }
+}
+
+/// Tokenize `src`.  Unterminated constructs never panic: the lexer
+/// simply runs to end of input (a lint must survive any file handed to
+/// it, including its own fixtures).
+pub fn lex(src: &str) -> Lexed {
+    let b = src.as_bytes();
+    let mut out = Lexed::default();
+    let mut i = 0usize;
+    let mut line = 1u32;
+    while i < b.len() {
+        let c = b[i];
+        match c {
+            b'\n' => {
+                line += 1;
+                i += 1;
+            }
+            c if c.is_ascii_whitespace() => i += 1,
+            // line comment (also doc `///` and `//!`): pragma channel
+            b'/' if b.get(i + 1) == Some(&b'/') => {
+                let start = i + 2;
+                while i < b.len() && b[i] != b'\n' {
+                    i += 1;
+                }
+                let text = &src[start..i];
+                // only comments that *begin* with the marker are pragma
+                // candidates: doc comments (`///`, `//!`) and prose that
+                // mentions `picbnn:` or a `picbnn::` path must not parse
+                let trimmed = text.trim_start();
+                if trimmed.starts_with("picbnn:") && !trimmed.starts_with("picbnn::") {
+                    out.pragmas.push(RawPragma {
+                        line,
+                        text: text.to_string(),
+                    });
+                }
+            }
+            // block comment, nesting like Rust's
+            b'/' if b.get(i + 1) == Some(&b'*') => {
+                let mut depth = 1usize;
+                i += 2;
+                while i < b.len() && depth > 0 {
+                    if b[i] == b'\n' {
+                        line += 1;
+                        i += 1;
+                    } else if b[i] == b'/' && b.get(i + 1) == Some(&b'*') {
+                        depth += 1;
+                        i += 2;
+                    } else if b[i] == b'*' && b.get(i + 1) == Some(&b'/') {
+                        depth -= 1;
+                        i += 2;
+                    } else {
+                        i += 1;
+                    }
+                }
+            }
+            // raw strings r"…" / r#"…"# (and br variants via the ident
+            // path peeking below)
+            b'r' if matches!(b.get(i + 1), Some(b'"') | Some(b'#')) && raw_str_at(b, i) => {
+                i = consume_raw_str(b, i, &mut line, &mut out, line);
+            }
+            b'"' => {
+                let start_line = line;
+                i += 1;
+                while i < b.len() {
+                    match b[i] {
+                        b'\\' => i += 2,
+                        b'"' => {
+                            i += 1;
+                            break;
+                        }
+                        b'\n' => {
+                            line += 1;
+                            i += 1;
+                        }
+                        _ => i += 1,
+                    }
+                }
+                out.toks.push(tok(TokKind::Str, start_line));
+            }
+            b'\'' => {
+                // lifetime or char literal: a backslash or a close quote
+                // two bytes on means char; otherwise lifetime
+                let is_char = match (b.get(i + 1), b.get(i + 2)) {
+                    (Some(b'\\'), _) => true,
+                    (Some(_), Some(b'\'')) => true,
+                    _ => false,
+                };
+                if is_char {
+                    i += 1;
+                    while i < b.len() {
+                        match b[i] {
+                            b'\\' => i += 2,
+                            b'\'' => {
+                                i += 1;
+                                break;
+                            }
+                            _ => i += 1,
+                        }
+                    }
+                    out.toks.push(tok(TokKind::Char, line));
+                } else {
+                    i += 1;
+                    while i < b.len() && (b[i] == b'_' || b[i].is_ascii_alphanumeric()) {
+                        i += 1;
+                    }
+                    out.toks.push(tok(TokKind::Lifetime, line));
+                }
+            }
+            c if c == b'_' || c.is_ascii_alphabetic() => {
+                let start = i;
+                while i < b.len() && (b[i] == b'_' || b[i].is_ascii_alphanumeric()) {
+                    i += 1;
+                }
+                // byte/raw-string prefixes: b"…", br"…", b'…'
+                let word = &src[start..i];
+                if (word == "b" || word == "br") && matches!(b.get(i), Some(b'"') | Some(b'#')) {
+                    if word == "br" || b.get(i) == Some(&b'"') {
+                        // rewind onto the quote machinery via raw/plain path
+                        if b.get(i) == Some(&b'"') && word == "b" {
+                            // plain byte string: reuse the string loop
+                            let start_line = line;
+                            i += 1;
+                            while i < b.len() {
+                                match b[i] {
+                                    b'\\' => i += 2,
+                                    b'"' => {
+                                        i += 1;
+                                        break;
+                                    }
+                                    b'\n' => {
+                                        line += 1;
+                                        i += 1;
+                                    }
+                                    _ => i += 1,
+                                }
+                            }
+                            out.toks.push(tok(TokKind::Str, start_line));
+                            continue;
+                        }
+                        i = consume_raw_str(b, i - word.len() + 1, &mut line, &mut out, line);
+                        continue;
+                    }
+                }
+                out.toks.push(Tok {
+                    kind: TokKind::Ident,
+                    text: word.to_string(),
+                    punct: 0,
+                    line,
+                });
+            }
+            c if c.is_ascii_digit() => {
+                while i < b.len()
+                    && (b[i].is_ascii_alphanumeric() || b[i] == b'_' || b[i] == b'.')
+                {
+                    // `0..n` range: stop the number before `..`
+                    if b[i] == b'.' && b.get(i + 1) == Some(&b'.') {
+                        break;
+                    }
+                    i += 1;
+                }
+                out.toks.push(tok(TokKind::Num, line));
+            }
+            c => {
+                out.toks.push(Tok {
+                    kind: TokKind::Punct,
+                    text: String::new(),
+                    punct: c,
+                    line,
+                });
+                i += 1;
+            }
+        }
+    }
+    find_cfg_test_spans(&mut out);
+    out
+}
+
+fn tok(kind: TokKind, line: u32) -> Tok {
+    Tok {
+        kind,
+        text: String::new(),
+        punct: 0,
+        line,
+    }
+}
+
+/// Whether `r` at `i` begins a raw string (`r"`, `r#`), as opposed to an
+/// identifier that merely starts with `r`.
+fn raw_str_at(b: &[u8], i: usize) -> bool {
+    let mut j = i + 1;
+    while b.get(j) == Some(&b'#') {
+        j += 1;
+    }
+    b.get(j) == Some(&b'"')
+}
+
+/// Consume a raw string starting at the `r` (or the `#`/`"` right after a
+/// `br` prefix); returns the index past the closing delimiter.
+fn consume_raw_str(
+    b: &[u8],
+    at: usize,
+    line: &mut u32,
+    out: &mut Lexed,
+    start_line: u32,
+) -> usize {
+    let mut i = at;
+    if b.get(i) == Some(&b'r') {
+        i += 1;
+    }
+    let mut hashes = 0usize;
+    while b.get(i) == Some(&b'#') {
+        hashes += 1;
+        i += 1;
+    }
+    if b.get(i) == Some(&b'"') {
+        i += 1;
+    }
+    'scan: while i < b.len() {
+        if b[i] == b'\n' {
+            *line += 1;
+            i += 1;
+            continue;
+        }
+        if b[i] == b'"' {
+            let mut k = 0usize;
+            while k < hashes && b.get(i + 1 + k) == Some(&b'#') {
+                k += 1;
+            }
+            if k == hashes {
+                i += 1 + hashes;
+                break 'scan;
+            }
+        }
+        i += 1;
+    }
+    out.toks.push(tok(TokKind::Str, start_line));
+    i
+}
+
+/// Record the line spans of `#[cfg(test)] mod … { … }` blocks (skipping
+/// any further attributes between the cfg and the `mod`).
+fn find_cfg_test_spans(lexed: &mut Lexed) {
+    let t = &lexed.toks;
+    let mut i = 0usize;
+    while i + 6 < t.len() {
+        let is_cfg_test = t[i].is_punct(b'#')
+            && t[i + 1].is_punct(b'[')
+            && t[i + 2].is_ident("cfg")
+            && t[i + 3].is_punct(b'(')
+            && t[i + 4].is_ident("test")
+            && t[i + 5].is_punct(b')')
+            && t[i + 6].is_punct(b']');
+        if !is_cfg_test {
+            i += 1;
+            continue;
+        }
+        // skip trailing attributes, find `mod`
+        let mut j = i + 7;
+        while j < t.len() && t[j].is_punct(b'#') {
+            // skip a balanced `[ … ]` attribute group
+            let mut depth = 0i32;
+            j += 1;
+            while j < t.len() {
+                if t[j].is_punct(b'[') {
+                    depth += 1;
+                } else if t[j].is_punct(b']') {
+                    depth -= 1;
+                    if depth == 0 {
+                        j += 1;
+                        break;
+                    }
+                }
+                j += 1;
+            }
+        }
+        if j < t.len() && (t[j].is_ident("mod") || t[j].is_ident("pub")) {
+            // `pub mod` or `mod`
+            if t[j].is_ident("pub") {
+                j += 1;
+            }
+            if j < t.len() && t[j].is_ident("mod") {
+                // find the opening brace, then its match
+                while j < t.len() && !t[j].is_punct(b'{') {
+                    j += 1;
+                }
+                if j < t.len() {
+                    let start_line = t[i].line;
+                    let mut depth = 0i32;
+                    while j < t.len() {
+                        if t[j].is_punct(b'{') {
+                            depth += 1;
+                        } else if t[j].is_punct(b'}') {
+                            depth -= 1;
+                            if depth == 0 {
+                                break;
+                            }
+                        }
+                        j += 1;
+                    }
+                    let end_line = t[j.min(t.len() - 1)].line;
+                    lexed.cfg_test_spans.push((start_line, end_line));
+                    i = j;
+                    continue;
+                }
+            }
+        }
+        i += 1;
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn comments_and_strings_hide_tokens() {
+        let src = r##"
+// Instant::now() in a comment
+/* Instant::now() in a block /* nested */ comment */
+let s = "Instant::now()";
+let r = r#"Instant::now()"#;
+let c = 'I';
+let real = Instant::now();
+"##;
+        let lexed = lex(src);
+        let hits: Vec<u32> = lexed
+            .toks
+            .iter()
+            .filter(|t| t.is_ident("Instant"))
+            .map(|t| t.line)
+            .collect();
+        assert_eq!(hits, vec![7], "only the real call site tokenizes");
+    }
+
+    #[test]
+    fn lifetimes_are_not_char_literals() {
+        let lexed = lex("fn f<'a>(x: &'a str) -> char { 'x' }");
+        let lifetimes = lexed
+            .toks
+            .iter()
+            .filter(|t| t.kind == TokKind::Lifetime)
+            .count();
+        let chars = lexed.toks.iter().filter(|t| t.kind == TokKind::Char).count();
+        assert_eq!((lifetimes, chars), (2, 1));
+    }
+
+    #[test]
+    fn escaped_char_literal_is_char() {
+        let lexed = lex(r"let q = '\''; let n = '\n'; let l: &'static str;");
+        let chars = lexed.toks.iter().filter(|t| t.kind == TokKind::Char).count();
+        assert_eq!(chars, 2);
+        assert!(lexed.toks.iter().any(|t| t.kind == TokKind::Lifetime));
+    }
+
+    #[test]
+    fn pragmas_are_collected_with_lines() {
+        let src = "let a = 1;\n// picbnn: allow(clock-seam) — bench timing\nlet b = 2;\n";
+        let lexed = lex(src);
+        assert_eq!(lexed.pragmas.len(), 1);
+        assert_eq!(lexed.pragmas[0].line, 2);
+        assert!(lexed.pragmas[0].text.contains("allow(clock-seam)"));
+    }
+
+    #[test]
+    fn only_marker_leading_comments_are_pragma_candidates() {
+        let src = "\
+// picbnn: allow(clock-seam) — real pragma\n\
+//! use picbnn::testkit::forall; — crate path in a doc comment\n\
+/// the `picbnn:` marker explained in a doc comment\n\
+// prose that mentions picbnn: mid-sentence\n\
+// picbnn::engine — crate path at comment start\n";
+        let lexed = lex(src);
+        assert_eq!(lexed.pragmas.len(), 1, "pragmas: {:?}", lexed.pragmas);
+        assert_eq!(lexed.pragmas[0].line, 1);
+    }
+
+    #[test]
+    fn cfg_test_spans_cover_the_module() {
+        let src = "fn live() {}\n#[cfg(test)]\nmod tests {\n    fn t() {}\n}\nfn after() {}\n";
+        let lexed = lex(src);
+        assert_eq!(lexed.cfg_test_spans.len(), 1);
+        assert!(lexed.in_test_span(4));
+        assert!(!lexed.in_test_span(1));
+        assert!(!lexed.in_test_span(6));
+    }
+
+    #[test]
+    fn numbers_do_not_swallow_ranges() {
+        let lexed = lex("for i in 0..n { v[i] = 1.5e3; }");
+        let nums = lexed.toks.iter().filter(|t| t.kind == TokKind::Num).count();
+        assert_eq!(nums, 2, "0 and 1.5e3");
+    }
+}

@@ -1,0 +1,298 @@
+//! `picbnn-lint`: static enforcement of the repo's determinism and
+//! concurrency invariants.
+//!
+//! Every guarantee this codebase sells — batched ≡ sequential down to
+//! RNG draw order, async ≡ sync bit-exactness, seed-replayable fault
+//! drills — rests on conventions (the `Clock` seam, seeded RNG
+//! construction, ordered containers, single-acquisition locking) that
+//! the compiler cannot check.  This module turns those prose invariants
+//! into machine-checked ones: a comment/string-aware lexer
+//! ([`lexer`]), six token-level rules ([`rules`]), and a suppression
+//! pragma grammar ([`pragma`]) feed a [`Report`] that the
+//! `picbnn-lint` binary renders as human text or JSON (exit nonzero on
+//! any unsuppressed finding) and that the `lint_clean` tier-1 test runs
+//! over the real tree on every `cargo test`.
+//!
+//! The checker is deliberately token-level, not an AST: the rules are
+//! chosen so that a conservative linear scan has no false negatives on
+//! this codebase's idioms, and the few intentional violations carry
+//! `// picbnn: allow(<rule>) — <why>` pragmas that double as
+//! documentation.  DETERMINISM.md is the invariant catalogue.
+
+pub mod lexer;
+pub mod pragma;
+pub mod rules;
+
+#[cfg(test)]
+mod fixture_tests;
+
+pub use rules::{Finding, RULE_NAMES};
+
+use crate::util::json::{obj, Json};
+use std::path::{Path, PathBuf};
+
+/// A finding that a pragma silenced, kept for the report (suppressions
+/// are visible, never free).
+#[derive(Clone, Debug)]
+pub struct Suppressed {
+    pub rule: String,
+    pub file: String,
+    pub line: u32,
+    pub justification: String,
+}
+
+/// Aggregated lint result for one file or a whole tree.
+#[derive(Debug, Default)]
+pub struct Report {
+    pub files_scanned: usize,
+    /// Unsuppressed findings — any entry here means a nonzero exit.
+    pub findings: Vec<Finding>,
+    pub suppressed: Vec<Suppressed>,
+    /// Hot-path `.unwrap()`s classified as sanctioned poison
+    /// propagation (informational).
+    pub poison_unwraps: usize,
+}
+
+impl Report {
+    pub fn clean(&self) -> bool {
+        self.findings.is_empty()
+    }
+
+    fn merge(&mut self, other: Report) {
+        self.files_scanned += other.files_scanned;
+        self.findings.extend(other.findings);
+        self.suppressed.extend(other.suppressed);
+        self.poison_unwraps += other.poison_unwraps;
+    }
+
+    pub fn to_json(&self) -> Json {
+        obj(vec![
+            ("schema_version", Json::Num(1.0)),
+            ("files_scanned", Json::Num(self.files_scanned as f64)),
+            ("clean", Json::Bool(self.clean())),
+            ("poison_unwraps", Json::Num(self.poison_unwraps as f64)),
+            (
+                "findings",
+                Json::Arr(
+                    self.findings
+                        .iter()
+                        .map(|f| {
+                            obj(vec![
+                                ("rule", Json::Str(f.rule.to_string())),
+                                ("file", Json::Str(f.file.clone())),
+                                ("line", Json::Num(f.line as f64)),
+                                ("message", Json::Str(f.message.clone())),
+                            ])
+                        })
+                        .collect(),
+                ),
+            ),
+            (
+                "suppressed",
+                Json::Arr(
+                    self.suppressed
+                        .iter()
+                        .map(|s| {
+                            obj(vec![
+                                ("rule", Json::Str(s.rule.clone())),
+                                ("file", Json::Str(s.file.clone())),
+                                ("line", Json::Num(s.line as f64)),
+                                ("justification", Json::Str(s.justification.clone())),
+                            ])
+                        })
+                        .collect(),
+                ),
+            ),
+        ])
+    }
+
+    pub fn render_human(&self) -> String {
+        let mut out = String::new();
+        for f in &self.findings {
+            out.push_str(&format!("{}:{} [{}] {}\n", f.file, f.line, f.rule, f.message));
+        }
+        for s in &self.suppressed {
+            out.push_str(&format!(
+                "{}:{} [{}] suppressed — {}\n",
+                s.file, s.line, s.rule, s.justification
+            ));
+        }
+        out.push_str(&format!(
+            "picbnn-lint: {} file(s), {} finding(s), {} suppressed, {} poison unwrap(s)\n",
+            self.files_scanned,
+            self.findings.len(),
+            self.suppressed.len(),
+            self.poison_unwraps
+        ));
+        out
+    }
+}
+
+/// Lint one source file.  `relpath` selects rule scopes (see
+/// [`rules`]) and is what appears in findings; use forward slashes.
+pub fn lint_source(relpath: &str, src: &str) -> Report {
+    let lexed = lexer::lex(src);
+    let mut report = Report {
+        files_scanned: 1,
+        ..Report::default()
+    };
+
+    let mut pragmas = Vec::new();
+    for parsed in pragma::parse_all(&lexed.pragmas) {
+        match parsed {
+            pragma::Parsed::Ok(p) => pragmas.push(p),
+            pragma::Parsed::Bad { line, message } => report.findings.push(Finding {
+                rule: "pragma",
+                file: relpath.to_string(),
+                line,
+                message,
+            }),
+        }
+    }
+
+    let ruled = rules::run(relpath, &lexed);
+    report.poison_unwraps = ruled.poison_unwraps;
+    let mut used = vec![false; pragmas.len()];
+    for f in ruled.findings {
+        match pragmas.iter().position(|p| p.covers(f.rule, f.line)) {
+            Some(idx) => {
+                used[idx] = true;
+                report.suppressed.push(Suppressed {
+                    rule: f.rule.to_string(),
+                    file: f.file,
+                    line: f.line,
+                    justification: pragmas[idx].justification.clone(),
+                });
+            }
+            None => report.findings.push(f),
+        }
+    }
+    // a pragma that silences nothing is a dormant hole in the invariant
+    // wall — stale allows must be cleaned up, so they fire themselves
+    for (idx, p) in pragmas.iter().enumerate() {
+        if !used[idx] {
+            report.findings.push(Finding {
+                rule: "pragma",
+                file: relpath.to_string(),
+                line: p.line,
+                message: format!(
+                    "unused pragma `allow{}({})` — it suppresses nothing; remove it",
+                    if p.file_wide { "-file" } else { "" },
+                    p.rule
+                ),
+            });
+        }
+    }
+    report
+        .findings
+        .sort_by(|a, b| (a.line, a.rule).cmp(&(b.line, b.rule)));
+    report
+}
+
+/// The directories `lint_tree` walks, relative to the repo root.
+const SCAN_ROOTS: &[&str] = &["rust/src", "rust/tests", "rust/benches", "examples"];
+
+/// Lint the whole repo rooted at `root`.  Files under any `fixtures`
+/// path component are skipped (they exist to violate rules on
+/// purpose); everything else `.rs` under [`SCAN_ROOTS`] is scanned in
+/// sorted path order so output is deterministic.
+pub fn lint_tree(root: &Path) -> Result<Report, String> {
+    let mut files: Vec<PathBuf> = Vec::new();
+    for sub in SCAN_ROOTS {
+        let dir = root.join(sub);
+        if dir.is_dir() {
+            collect_rs(&dir, &mut files)?;
+        }
+    }
+    files.sort();
+    let mut report = Report::default();
+    for path in files {
+        let src = std::fs::read_to_string(&path)
+            .map_err(|e| format!("read {}: {e}", path.display()))?;
+        let rel = path
+            .strip_prefix(root)
+            .unwrap_or(&path)
+            .components()
+            .map(|c| c.as_os_str().to_string_lossy().into_owned())
+            .collect::<Vec<_>>()
+            .join("/");
+        report.merge(lint_source(&rel, &src));
+    }
+    Ok(report)
+}
+
+fn collect_rs(dir: &Path, out: &mut Vec<PathBuf>) -> Result<(), String> {
+    let entries =
+        std::fs::read_dir(dir).map_err(|e| format!("read_dir {}: {e}", dir.display()))?;
+    for entry in entries {
+        let entry = entry.map_err(|e| format!("read_dir {}: {e}", dir.display()))?;
+        let path = entry.path();
+        let name = entry.file_name().to_string_lossy().into_owned();
+        if path.is_dir() {
+            if name == "fixtures" {
+                continue;
+            }
+            collect_rs(&path, out)?;
+        } else if name.ends_with(".rs") {
+            out.push(path);
+        }
+    }
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn pragma_suppresses_and_is_recorded() {
+        let src = "fn f() {\n    // picbnn: allow(clock-seam) — fixture exercises suppression\n    let t = Instant::now();\n}\n";
+        let r = lint_source("rust/src/accel/x.rs", src);
+        assert!(r.clean(), "findings: {:?}", r.findings);
+        assert_eq!(r.suppressed.len(), 1);
+        assert_eq!(r.suppressed[0].rule, "clock-seam");
+        assert_eq!(
+            r.suppressed[0].justification,
+            "fixture exercises suppression"
+        );
+    }
+
+    #[test]
+    fn unused_pragma_fires_the_meta_rule() {
+        let src = "// picbnn: allow(seeded-rng) — nothing here needs it\nfn f() {}\n";
+        let r = lint_source("rust/src/accel/x.rs", src);
+        assert_eq!(r.findings.len(), 1);
+        assert_eq!(r.findings[0].rule, "pragma");
+        assert!(r.findings[0].message.contains("unused"));
+    }
+
+    #[test]
+    fn malformed_pragma_fires_and_finding_survives() {
+        let src = "fn f() {\n    // picbnn: allow(clock-seam)\n    let t = Instant::now();\n}\n";
+        let r = lint_source("rust/src/accel/x.rs", src);
+        let rules: Vec<&str> = r.findings.iter().map(|f| f.rule).collect();
+        assert_eq!(rules, vec!["pragma", "clock-seam"]);
+    }
+
+    #[test]
+    fn allow_file_covers_every_instance() {
+        let src = "// picbnn: allow-file(no-hash-iter) — fixture\nuse std::collections::HashMap;\nfn f(m: &HashMap<u32, u32>) {}\n";
+        let r = lint_source("rust/src/util/x.rs", src);
+        assert!(r.clean());
+        assert_eq!(r.suppressed.len(), 2);
+    }
+
+    #[test]
+    fn json_roundtrips_and_reports_clean_flag() {
+        let r = lint_source("rust/src/accel/x.rs", "fn f() { let t = Instant::now(); }\n");
+        let j = r.to_json();
+        let parsed = Json::parse(&j.to_string()).expect("lint JSON parses");
+        assert_eq!(parsed.get("clean"), Some(&Json::Bool(false)));
+        let findings = parsed.get("findings").and_then(|f| f.as_arr()).unwrap_or(&[]);
+        assert_eq!(findings.len(), 1);
+        assert_eq!(
+            findings[0].get("rule").and_then(|r| r.as_str()),
+            Some("clock-seam")
+        );
+    }
+}

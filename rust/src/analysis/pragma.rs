@@ -1,0 +1,180 @@
+//! Suppression pragmas for `picbnn-lint`.
+//!
+//! Grammar (inside a `//` comment):
+//!
+//! ```text
+//! // picbnn: allow(<rule>) — <justification>
+//! // picbnn: allow-file(<rule>) — <justification>
+//! ```
+//!
+//! A line pragma suppresses findings of `<rule>` on its own line or on
+//! the line directly below (so it can sit above the offending
+//! statement).  `allow-file` suppresses the rule for the whole file.
+//! The justification is mandatory — an allow without a reason is itself
+//! a finding — and the separator may be an em-dash, `--`, or `:` so the
+//! pragma survives rustfmt and plain-ASCII editors alike.
+//!
+//! Pragma hygiene is enforced by the `pragma` meta-rule: malformed
+//! pragmas, unknown rule names, missing justifications, and pragmas
+//! that suppress nothing all fire (a stale allow is a dormant hole in
+//! the invariant wall).
+
+use super::lexer::RawPragma;
+use super::rules::RULE_NAMES;
+
+/// A parsed, well-formed suppression.
+#[derive(Clone, Debug)]
+pub struct Pragma {
+    /// 1-based line the pragma comment sits on.
+    pub line: u32,
+    /// Rule it suppresses (one of [`RULE_NAMES`]).
+    pub rule: String,
+    /// `allow-file` form: applies to every line of the file.
+    pub file_wide: bool,
+    pub justification: String,
+}
+
+/// Outcome of parsing one raw pragma comment.
+pub enum Parsed {
+    Ok(Pragma),
+    /// Malformed / unknown rule / missing justification — the message
+    /// becomes a `pragma` finding at the comment's line.
+    Bad { line: u32, message: String },
+}
+
+/// Parse every raw `picbnn:` comment the lexer collected.
+pub fn parse_all(raw: &[RawPragma]) -> Vec<Parsed> {
+    raw.iter().map(parse_one).collect()
+}
+
+fn parse_one(raw: &RawPragma) -> Parsed {
+    let bad = |message: String| Parsed::Bad {
+        line: raw.line,
+        message,
+    };
+    let Some(after_marker) = raw.text.split("picbnn:").nth(1) else {
+        return bad("pragma comment lost its `picbnn:` marker".to_string());
+    };
+    let body = after_marker.trim_start();
+    let (file_wide, after_kw) = if let Some(rest) = body.strip_prefix("allow-file") {
+        (true, rest)
+    } else if let Some(rest) = body.strip_prefix("allow") {
+        (false, rest)
+    } else {
+        return bad(format!(
+            "unknown pragma `{}` — expected `allow(<rule>)` or `allow-file(<rule>)`",
+            body.split_whitespace().next().unwrap_or("")
+        ));
+    };
+    let after_kw = after_kw.trim_start();
+    let Some(rest) = after_kw.strip_prefix('(') else {
+        return bad("malformed pragma — expected `(` after `allow`".to_string());
+    };
+    let Some(close) = rest.find(')') else {
+        return bad("malformed pragma — missing `)` after rule name".to_string());
+    };
+    let rule = rest[..close].trim();
+    if !RULE_NAMES.contains(&rule) {
+        return bad(format!(
+            "unknown rule `{rule}` in pragma (known: {})",
+            RULE_NAMES.join(", ")
+        ));
+    }
+    let mut just = rest[close + 1..].trim();
+    for sep in ["—", "--", "-", ":"] {
+        if let Some(stripped) = just.strip_prefix(sep) {
+            just = stripped.trim();
+            break;
+        }
+    }
+    if just.is_empty() {
+        return bad(format!(
+            "pragma `allow({rule})` has no justification — write `// picbnn: allow({rule}) — <why>`"
+        ));
+    }
+    Parsed::Ok(Pragma {
+        line: raw.line,
+        rule: rule.to_string(),
+        file_wide,
+        justification: just.to_string(),
+    })
+}
+
+impl Pragma {
+    /// Whether this pragma covers a finding of `rule` at `line`.
+    pub fn covers(&self, rule: &str, line: u32) -> bool {
+        self.rule == rule && (self.file_wide || line == self.line || line == self.line + 1)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn raw(line: u32, text: &str) -> RawPragma {
+        RawPragma {
+            line,
+            text: text.to_string(),
+        }
+    }
+
+    #[test]
+    fn well_formed_pragma_parses() {
+        let p = parse_all(&[raw(10, " picbnn: allow(clock-seam) — bench wall timing")]);
+        match &p[0] {
+            Parsed::Ok(pr) => {
+                assert_eq!(pr.rule, "clock-seam");
+                assert!(!pr.file_wide);
+                assert_eq!(pr.justification, "bench wall timing");
+                assert!(pr.covers("clock-seam", 10));
+                assert!(pr.covers("clock-seam", 11));
+                assert!(!pr.covers("clock-seam", 12));
+                assert!(!pr.covers("seeded-rng", 10));
+            }
+            Parsed::Bad { message, .. } => panic!("unexpected reject: {message}"),
+        }
+    }
+
+    #[test]
+    fn file_wide_covers_everything() {
+        let p = parse_all(&[raw(1, " picbnn: allow-file(no-hash-iter) -- fixture")]);
+        match &p[0] {
+            Parsed::Ok(pr) => {
+                assert!(pr.file_wide);
+                assert!(pr.covers("no-hash-iter", 999));
+            }
+            Parsed::Bad { message, .. } => panic!("unexpected reject: {message}"),
+        }
+    }
+
+    #[test]
+    fn unknown_rule_and_missing_justification_reject() {
+        let cases = [
+            " picbnn: allow(not-a-rule) — x",
+            " picbnn: allow(clock-seam)",
+            " picbnn: allow(clock-seam) — ",
+            " picbnn: deny(clock-seam) — x",
+            " picbnn: allow clock-seam — x",
+        ];
+        for c in cases {
+            match parse_one(&raw(1, c)) {
+                Parsed::Bad { .. } => {}
+                Parsed::Ok(_) => panic!("should have rejected: {c}"),
+            }
+        }
+    }
+
+    #[test]
+    fn ascii_separators_accepted() {
+        for c in [
+            " picbnn: allow(seeded-rng) -- fixture rng",
+            " picbnn: allow(seeded-rng): fixture rng",
+            " picbnn: allow(seeded-rng) - fixture rng",
+        ] {
+            match parse_one(&raw(1, c)) {
+                Parsed::Ok(pr) => assert_eq!(pr.justification, "fixture rng"),
+                Parsed::Bad { message, .. } => panic!("rejected {c}: {message}"),
+            }
+        }
+    }
+}

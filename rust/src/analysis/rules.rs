@@ -1,0 +1,576 @@
+//! The six determinism/concurrency rules of `picbnn-lint`.
+//!
+//! Each rule is a linear scan over the token stream from
+//! [`super::lexer`]; none of them parse Rust.  The only stateful one is
+//! `lock-discipline`, which runs a conservative intra-function guard
+//! tracker (documented on [`check_lock_discipline`]).  Rule scopes are
+//! path-based: `rust/src/**` is production code, `server/`+`accel/`
+//! under it are the hot paths, and a small allowlist covers the three
+//! sanctioned wall-clock seams.
+//!
+//! DETERMINISM.md enumerates the invariant behind every rule and the
+//! suppression pragma syntax.
+
+use super::lexer::{Lexed, Tok, TokKind};
+
+/// Every suppressible rule, in reporting order.  (`pragma`, the
+/// hygiene meta-rule, is deliberately absent: you cannot allow your way
+/// out of a malformed allow.)
+pub const RULE_NAMES: &[&str] = &[
+    "clock-seam",
+    "seeded-rng",
+    "no-hash-iter",
+    "lock-discipline",
+    "condvar-predicate",
+    "no-panic-markers",
+];
+
+/// One rule violation at a source location.
+#[derive(Clone, Debug)]
+pub struct Finding {
+    pub rule: &'static str,
+    pub file: String,
+    pub line: u32,
+    pub message: String,
+}
+
+/// Output of running every rule over one file.
+#[derive(Debug, Default)]
+pub struct RuleOutput {
+    pub findings: Vec<Finding>,
+    /// `.unwrap()`s classified as acceptable poison-propagation idiom
+    /// (lock/wait results) in hot-path scope — reported for visibility.
+    pub poison_unwraps: usize,
+}
+
+/// Sanctioned raw-time seams: the `Clock` implementation itself,
+/// `util::Timer` (which benches and the CLI wrap), and `benchkit`'s
+/// wall-clock measurement loops.
+fn clock_allowlisted(relpath: &str) -> bool {
+    relpath == "rust/src/server/clock.rs"
+        || relpath == "rust/src/util/mod.rs"
+        || relpath.starts_with("rust/src/benchkit/")
+}
+
+fn is_src(relpath: &str) -> bool {
+    relpath.starts_with("rust/src/")
+}
+
+/// Hot-path scope for the unwrap classification: the serving engine and
+/// the accelerator pool, where a stray panic takes down a worker thread
+/// mid-batch.
+fn is_hot_path(relpath: &str) -> bool {
+    is_src(relpath) && (relpath.contains("/server/") || relpath.contains("/accel/"))
+}
+
+/// Run all six rules over one lexed file.
+pub fn run(relpath: &str, lexed: &Lexed) -> RuleOutput {
+    let mut out = RuleOutput::default();
+    if is_src(relpath) && !clock_allowlisted(relpath) {
+        check_clock_seam(relpath, lexed, &mut out);
+    }
+    check_seeded_rng(relpath, lexed, &mut out);
+    if is_src(relpath) {
+        check_hash_iter(relpath, lexed, &mut out);
+        check_panic_markers(relpath, lexed, &mut out);
+    }
+    check_condvar_predicate(relpath, lexed, &mut out);
+    check_lock_discipline(relpath, lexed, &mut out);
+    out.findings.sort_by(|a, b| (a.line, a.rule).cmp(&(b.line, b.rule)));
+    out
+}
+
+/// `clock-seam`: no `Instant::now()` / `SystemTime::now()` outside the
+/// allowlisted seams.  Raw time reads anywhere else make replay under
+/// the simulated `Clock` diverge from wall-clock runs.
+fn check_clock_seam(relpath: &str, lexed: &Lexed, out: &mut RuleOutput) {
+    let t = &lexed.toks;
+    for i in 0..t.len().saturating_sub(4) {
+        let src_ty = if t[i].is_ident("Instant") {
+            "Instant"
+        } else if t[i].is_ident("SystemTime") {
+            "SystemTime"
+        } else {
+            continue;
+        };
+        if t[i + 1].is_punct(b':')
+            && t[i + 2].is_punct(b':')
+            && t[i + 3].is_ident("now")
+            && t[i + 4].is_punct(b'(')
+        {
+            out.findings.push(Finding {
+                rule: "clock-seam",
+                file: relpath.to_string(),
+                line: t[i].line,
+                message: format!(
+                    "raw `{src_ty}::now()` outside the Clock seam — take time through \
+                     `server::Clock` (or `util::Timer` in benches) so simulated-time \
+                     replay stays exact"
+                ),
+            });
+        }
+    }
+}
+
+/// `seeded-rng`: RNG state may only come from `util::rng` constructors
+/// with an explicit seed.  Ambient-entropy constructors make every
+/// "deterministic for any thread count / batch shape" property test a
+/// lie.
+fn check_seeded_rng(relpath: &str, lexed: &Lexed, out: &mut RuleOutput) {
+    const BANNED: &[&str] = &[
+        "thread_rng",
+        "from_entropy",
+        "OsRng",
+        "getrandom",
+        "RandomState",
+        "DefaultHasher",
+        "StdRng",
+        "SmallRng",
+    ];
+    for tok in &lexed.toks {
+        if tok.kind == TokKind::Ident && BANNED.contains(&tok.text.as_str()) {
+            out.findings.push(Finding {
+                rule: "seeded-rng",
+                file: relpath.to_string(),
+                line: tok.line,
+                message: format!(
+                    "`{}` draws ambient entropy — construct RNGs through `util::rng` \
+                     with an explicit seed so runs replay bit-exact",
+                    tok.text
+                ),
+            });
+        }
+    }
+}
+
+/// `no-hash-iter`: `HashMap`/`HashSet` are banned in `src/` outright —
+/// `RandomState` iteration order varies per process, which breaks
+/// replica-count-invariant planning and seed replay.  Use `BTreeMap`
+/// or a sorted `Vec`.
+fn check_hash_iter(relpath: &str, lexed: &Lexed, out: &mut RuleOutput) {
+    for tok in &lexed.toks {
+        if tok.is_ident("HashMap") || tok.is_ident("HashSet") {
+            out.findings.push(Finding {
+                rule: "no-hash-iter",
+                file: relpath.to_string(),
+                line: tok.line,
+                message: format!(
+                    "`{}` in production code — RandomState iteration order breaks \
+                     deterministic replay; use `BTreeMap`/`BTreeSet` or a sorted Vec",
+                    tok.text
+                ),
+            });
+        }
+    }
+}
+
+/// `condvar-predicate`: bare `.wait(…)` / `.wait_timeout(…)` are banned
+/// everywhere — spurious wakeups make them return without the guarded
+/// condition holding.  Use `wait_while` / `wait_timeout_while`.
+fn check_condvar_predicate(relpath: &str, lexed: &Lexed, out: &mut RuleOutput) {
+    let t = &lexed.toks;
+    for i in 0..t.len().saturating_sub(2) {
+        if !t[i].is_punct(b'.') || !t[i + 2].is_punct(b'(') {
+            continue;
+        }
+        let name = if t[i + 1].is_ident("wait") {
+            "wait"
+        } else if t[i + 1].is_ident("wait_timeout") {
+            "wait_timeout"
+        } else {
+            continue;
+        };
+        out.findings.push(Finding {
+            rule: "condvar-predicate",
+            file: relpath.to_string(),
+            line: t[i + 1].line,
+            message: format!(
+                "bare `.{name}(…)` is vulnerable to spurious wakeups — use the \
+                 predicate form (`wait_while` / `wait_timeout_while`)"
+            ),
+        });
+    }
+}
+
+/// `no-panic-markers`: `todo!` / `unimplemented!` / `dbg!` banned in
+/// `src/` (inline test modules included — a `dbg!` in a test pollutes
+/// CI logs and a `todo!` is a landmine either way).
+fn check_panic_markers(relpath: &str, lexed: &Lexed, out: &mut RuleOutput) {
+    let t = &lexed.toks;
+    for i in 0..t.len().saturating_sub(1) {
+        if t[i].kind != TokKind::Ident || !t[i + 1].is_punct(b'!') {
+            continue;
+        }
+        let name = t[i].text.as_str();
+        if name == "todo" || name == "unimplemented" || name == "dbg" {
+            out.findings.push(Finding {
+                rule: "no-panic-markers",
+                file: relpath.to_string(),
+                line: t[i].line,
+                message: format!("`{name}!` must not ship in src/"),
+            });
+        }
+    }
+}
+
+/// A live guard in the `lock-discipline` tracker.
+struct Guard {
+    /// Binding name (`let g = ….lock().unwrap();`); `None` for
+    /// temporaries.
+    name: Option<String>,
+    line: u32,
+    /// Brace depth at acquisition — leaving this depth releases it.
+    depth: i32,
+    kind: &'static str,
+    bound: bool,
+}
+
+/// `lock-discipline`, two checks in one pass over each file:
+///
+/// 1. **No nested blocking acquisitions.**  A conservative guard
+///    tracker flags any `.lock()` / `.write()` (empty-arg forms only —
+///    `.write(buf)` is I/O, `.try_lock()` cannot deadlock as the inner
+///    acquisition) taken while another tracked guard is still live.
+///    Guard lifetime heuristic, deliberately simple:
+///    * `let g = <chain ending .unwrap()/.expect(…)>;` binds a guard
+///      that lives to the end of its block or to `drop(g)`;
+///    * any other acquisition is a temporary that dies at the next `;`
+///      at its own brace depth (so a `match x.lock().unwrap() { … }`
+///      scrutinee guard correctly lives through the arms);
+///    * leaving the enclosing block releases everything acquired in it.
+///    The tracker is intra-function by construction: a function body's
+///    closing brace releases its guards, so cross-function ordering is
+///    out of scope (and stays the job of the TSan CI lane).
+///
+/// 2. **Unwrap classification in hot paths** (`server/`/`accel/` src,
+///    `#[cfg(test)]` modules exempt): `.unwrap()` directly on the
+///    result of a lock-family call (`lock`/`read`/`write`/`get_mut`/
+///    `into_inner`/`try_lock`/`wait*`) is the sanctioned
+///    poison-propagation idiom — a poisoned mutex means a sibling
+///    thread already panicked, and unwrapping spreads the abort instead
+///    of computing with torn state.  Any *other* `.unwrap()` is a
+///    finding: replace it with `.expect("<invariant>")` or real
+///    handling.
+fn check_lock_discipline(relpath: &str, lexed: &Lexed, out: &mut RuleOutput) {
+    let t = &lexed.toks;
+    let mut depth = 0i32;
+    let mut guards: Vec<Guard> = Vec::new();
+    // `(name, deref)`: the current statement is `let [mut] name = …`;
+    // `deref` records a `*` right after the `=`, which means the lock
+    // chain's value is copied out and the guard is a temporary
+    // (`let x = *self.a.lock().unwrap();`)
+    let mut pending_let: Option<(String, bool)> = None;
+    // poison-unwrap channel: callee name of each currently-open paren
+    // group, plus the callee of the most recently closed one
+    let mut paren_callees: Vec<Option<String>> = Vec::new();
+    let mut last_closed: Option<String> = None;
+    const POISON: &[&str] = &[
+        "lock",
+        "read",
+        "write",
+        "get_mut",
+        "into_inner",
+        "try_lock",
+        "wait",
+        "wait_while",
+        "wait_timeout",
+        "wait_timeout_while",
+    ];
+    let unwrap_scope = is_hot_path(relpath);
+
+    let mut i = 0usize;
+    while i < t.len() {
+        let tok = &t[i];
+        match (tok.kind, tok.punct) {
+            (TokKind::Punct, b'{') => depth += 1,
+            (TokKind::Punct, b'}') => {
+                depth -= 1;
+                guards.retain(|g| g.depth <= depth);
+            }
+            (TokKind::Punct, b';') => {
+                guards.retain(|g| g.bound || g.depth < depth);
+                pending_let = None;
+            }
+            (TokKind::Punct, b'(') => {
+                let callee = if i > 0 && t[i - 1].kind == TokKind::Ident {
+                    Some(t[i - 1].text.clone())
+                } else {
+                    None
+                };
+                paren_callees.push(callee);
+            }
+            (TokKind::Punct, b')') => {
+                last_closed = paren_callees.pop().flatten();
+            }
+            (TokKind::Ident, _) if tok.text == "let" => {
+                // `let [mut] name` followed by `=` or `:` arms the
+                // bound-guard classification for this statement
+                let mut j = i + 1;
+                if j < t.len() && t[j].is_ident("mut") {
+                    j += 1;
+                }
+                if j + 1 < t.len()
+                    && t[j].kind == TokKind::Ident
+                    && (t[j + 1].is_punct(b'=') || t[j + 1].is_punct(b':'))
+                {
+                    let deref = t[j + 1].is_punct(b'=')
+                        && j + 2 < t.len()
+                        && t[j + 2].is_punct(b'*');
+                    pending_let = Some((t[j].text.clone(), deref));
+                }
+            }
+            (TokKind::Ident, _) if tok.text == "drop" => {
+                // `drop(name)` releases the bound guard `name` early
+                if i + 3 < t.len()
+                    && t[i + 1].is_punct(b'(')
+                    && t[i + 2].kind == TokKind::Ident
+                    && t[i + 3].is_punct(b')')
+                {
+                    let name = &t[i + 2].text;
+                    guards.retain(|g| g.name.as_deref() != Some(name.as_str()));
+                }
+            }
+            (TokKind::Punct, b'.') if i + 3 < t.len() => {
+                // `.unwrap()` — classify before the acquisition check so
+                // the chain scan below can't skip past it
+                if unwrap_scope
+                    && t[i + 1].is_ident("unwrap")
+                    && t[i + 2].is_punct(b'(')
+                    && t[i + 3].is_punct(b')')
+                    && !lexed.in_test_span(t[i + 1].line)
+                {
+                    let on_poison_result = i > 0
+                        && t[i - 1].is_punct(b')')
+                        && last_closed
+                            .as_deref()
+                            .is_some_and(|c| POISON.contains(&c));
+                    if on_poison_result {
+                        out.poison_unwraps += 1;
+                    } else {
+                        out.findings.push(Finding {
+                            rule: "lock-discipline",
+                            file: relpath.to_string(),
+                            line: t[i + 1].line,
+                            message: "non-poison `.unwrap()` in a hot path — use \
+                                      `.expect(\"<invariant>\")` or handle the failure \
+                                      (a bare unwrap here aborts a worker mid-batch)"
+                                .to_string(),
+                        });
+                    }
+                }
+                // blocking acquisition: `.lock()` / `.write()` with
+                // empty parens
+                let kind = if t[i + 1].is_ident("lock") {
+                    "lock"
+                } else if t[i + 1].is_ident("write") {
+                    "write"
+                } else {
+                    ""
+                };
+                if !kind.is_empty() && t[i + 2].is_punct(b'(') && t[i + 3].is_punct(b')') {
+                    let line = t[i + 1].line;
+                    if let Some(outer) = guards.first() {
+                        let held = match &outer.name {
+                            Some(n) => format!("guard `{n}`"),
+                            None => "a temporary guard".to_string(),
+                        };
+                        out.findings.push(Finding {
+                            rule: "lock-discipline",
+                            file: relpath.to_string(),
+                            line,
+                            message: format!(
+                                "nested blocking acquisition: `.{kind}()` while {held} \
+                                 (line {}, `.{}()`) is still held — release the outer \
+                                 guard first or restructure to a single acquisition",
+                                outer.line, outer.kind
+                            ),
+                        });
+                    }
+                    // bound iff the statement is `let name = <chain
+                    // ending .unwrap()/.expect(…)>;`
+                    let mut last_method = kind.to_string();
+                    let mut j = i + 4;
+                    while j + 2 < t.len()
+                        && t[j].is_punct(b'.')
+                        && t[j + 1].kind == TokKind::Ident
+                        && t[j + 2].is_punct(b'(')
+                    {
+                        last_method = t[j + 1].text.clone();
+                        j = skip_paren_group(t, j + 2);
+                    }
+                    let bound = pending_let.as_ref().is_some_and(|(_, deref)| !deref)
+                        && (last_method == "unwrap" || last_method == "expect")
+                        && j < t.len()
+                        && t[j].is_punct(b';');
+                    guards.push(Guard {
+                        name: if bound {
+                            pending_let.take().map(|(n, _)| n)
+                        } else {
+                            None
+                        },
+                        line,
+                        depth,
+                        kind,
+                        bound,
+                    });
+                }
+            }
+            _ => {}
+        }
+        i += 1;
+    }
+}
+
+/// Index just past the paren group opening at `open` (which must be a
+/// `(` token).  Unbalanced input returns the end of the stream.
+fn skip_paren_group(t: &[Tok], open: usize) -> usize {
+    let mut depth = 0i32;
+    let mut j = open;
+    while j < t.len() {
+        if t[j].is_punct(b'(') {
+            depth += 1;
+        } else if t[j].is_punct(b')') {
+            depth -= 1;
+            if depth == 0 {
+                return j + 1;
+            }
+        }
+        j += 1;
+    }
+    j
+}
+
+#[cfg(test)]
+mod tests {
+    use super::super::lexer::lex;
+    use super::*;
+
+    fn findings(relpath: &str, src: &str) -> Vec<(String, u32)> {
+        run(relpath, &lex(src))
+            .findings
+            .iter()
+            .map(|f| (f.rule.to_string(), f.line))
+            .collect()
+    }
+
+    #[test]
+    fn bound_guard_then_second_lock_flags() {
+        let src = "fn f(&self) {\n    let st = self.placement.write().unwrap();\n    let m = self.stats.lock().unwrap();\n}\n";
+        let got = findings("rust/src/accel/x.rs", src);
+        assert_eq!(got, vec![("lock-discipline".to_string(), 3)]);
+    }
+
+    #[test]
+    fn sequential_temporaries_do_not_flag() {
+        let src = "fn f(&self) {\n    self.a.lock().unwrap().push(1);\n    self.b.lock().unwrap().push(2);\n}\n";
+        assert!(findings("rust/src/accel/x.rs", src).is_empty());
+    }
+
+    #[test]
+    fn drop_releases_the_bound_guard() {
+        let src = "fn f(&self) {\n    let st = self.a.lock().unwrap();\n    drop(st);\n    let q = self.b.lock().unwrap();\n}\n";
+        assert!(findings("rust/src/accel/x.rs", src).is_empty());
+    }
+
+    #[test]
+    fn deref_copy_guard_is_a_temporary() {
+        let src = "fn f(&self) -> (u64, u64) {\n    let x = *self.a.lock().unwrap();\n    let y = *self.b.lock().unwrap();\n    (x, y)\n}\n";
+        assert!(findings("rust/src/accel/x.rs", src).is_empty());
+    }
+
+    #[test]
+    fn block_exit_releases_guards() {
+        let src = "fn f(&self) {\n    {\n        let st = self.a.lock().unwrap();\n    }\n    let q = self.b.lock().unwrap();\n}\n";
+        assert!(findings("rust/src/accel/x.rs", src).is_empty());
+    }
+
+    #[test]
+    fn match_scrutinee_guard_lives_through_arms() {
+        let src = "fn f(&self) -> u32 {\n    let advance = match &*self.service.lock().unwrap() {\n        Some(v) => self.other.lock().unwrap().len() as u32,\n        None => 0,\n    };\n    advance\n}\n";
+        let got = findings("rust/src/server/x.rs", src);
+        assert_eq!(got, vec![("lock-discipline".to_string(), 3)]);
+    }
+
+    #[test]
+    fn try_lock_is_not_a_tracked_acquisition() {
+        let src = "fn f(&self) {\n    let Ok(g) = self.m.try_lock() else { return };\n    let st = self.a.lock().unwrap();\n}\n";
+        assert!(findings("rust/src/server/x.rs", src).is_empty());
+    }
+
+    #[test]
+    fn io_write_with_args_is_not_an_acquisition() {
+        let src = "fn f(&self, dev: &mut D) {\n    dev.write(addr, val);\n    let st = self.a.lock().unwrap();\n}\n";
+        assert!(findings("rust/src/accel/x.rs", src).is_empty());
+    }
+
+    #[test]
+    fn poison_unwrap_is_counted_not_flagged() {
+        let src = "fn f(&self) {\n    let st = self.a.lock().unwrap();\n    let r = self.b.read().unwrap();\n}\n";
+        // note: .read() is a shared acquisition, not tracked for nesting
+        let out = run("rust/src/server/x.rs", &lex(src));
+        assert!(out.findings.is_empty());
+        assert_eq!(out.poison_unwraps, 2);
+    }
+
+    #[test]
+    fn real_unwrap_in_hot_path_flags_but_tests_exempt() {
+        let src = "fn f(x: Option<u32>) -> u32 {\n    x.unwrap()\n}\n#[cfg(test)]\nmod tests {\n    fn t(x: Option<u32>) -> u32 {\n        x.unwrap()\n    }\n}\n";
+        let got = findings("rust/src/accel/x.rs", src);
+        assert_eq!(got, vec![("lock-discipline".to_string(), 2)]);
+    }
+
+    #[test]
+    fn unwrap_outside_hot_path_is_ignored() {
+        let src = "fn f(x: Option<u32>) -> u32 { x.unwrap() }\n";
+        assert!(findings("rust/src/bnn/x.rs", src).is_empty());
+    }
+
+    #[test]
+    fn multiline_poison_chain_is_poison() {
+        let src = "fn f(&self) {\n    let v = self\n        .stats\n        .lock()\n        .unwrap()\n        .total;\n}\n";
+        let out = run("rust/src/server/x.rs", &lex(src));
+        assert!(out.findings.is_empty());
+        assert_eq!(out.poison_unwraps, 1);
+    }
+
+    #[test]
+    fn clock_seam_fires_off_allowlist_only() {
+        let src = "fn f() { let t = Instant::now(); }\n";
+        assert_eq!(
+            findings("rust/src/accel/x.rs", src),
+            vec![("clock-seam".to_string(), 1)]
+        );
+        assert!(findings("rust/src/server/clock.rs", src).is_empty());
+        assert!(findings("rust/src/benchkit/mod.rs", src).is_empty());
+        // tests/benches take time however they like
+        assert!(findings("rust/tests/x.rs", src).is_empty());
+    }
+
+    #[test]
+    fn condvar_and_rng_and_markers_fire() {
+        let src = "fn f(&self) {\n    let g = self.cv.wait(g);\n    let h = RandomState::new();\n    todo!()\n}\n";
+        let got = findings("rust/src/server/x.rs", src);
+        let rules: Vec<&str> = got.iter().map(|(r, _)| r.as_str()).collect();
+        // sorted by line: wait (2), RandomState (3), todo! (4)
+        assert_eq!(
+            rules,
+            vec!["condvar-predicate", "seeded-rng", "no-panic-markers"]
+        );
+    }
+
+    #[test]
+    fn wait_timeout_while_is_fine() {
+        let src = "fn f(&self) {\n    let (g, _) = self.cv.wait_timeout_while(g, d, |s| s.idle).unwrap();\n}\n";
+        assert!(findings("rust/src/server/x.rs", src).is_empty());
+    }
+
+    #[test]
+    fn hash_containers_banned_in_src_only() {
+        let src = "use std::collections::HashMap;\n";
+        assert_eq!(
+            findings("rust/src/util/x.rs", src),
+            vec![("no-hash-iter".to_string(), 1)]
+        );
+        assert!(findings("rust/tests/x.rs", src).is_empty());
+    }
+}

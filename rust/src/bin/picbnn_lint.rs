@@ -1,0 +1,55 @@
+//! `picbnn-lint` — the repo's determinism/concurrency invariant checker.
+//!
+//! ```text
+//! cargo run --release --bin picbnn-lint            # human output, repo root
+//! cargo run --release --bin picbnn-lint -- --json  # machine output
+//! cargo run --release --bin picbnn-lint -- --root /path/to/checkout
+//! cargo run --release --bin picbnn-lint -- --file path.rs --as rust/src/server/x.rs
+//! ```
+//!
+//! `--file` lints a single file instead of the tree; `--as` supplies
+//! the repo-relative path used for rule scoping (CI points this at the
+//! firing fixtures to prove each rule still exits nonzero).
+//!
+//! Exit codes: `0` clean (suppressed findings allowed), `1` at least
+//! one unsuppressed finding, `2` I/O error.  The rule catalogue and
+//! pragma syntax live in DETERMINISM.md; the same scan runs as the
+//! `lint_clean` tier-1 test so `cargo test` fails on regressions even
+//! where CI doesn't invoke the binary.
+
+use picbnn::analysis;
+use picbnn::util::cli::Args;
+use std::path::Path;
+use std::process::ExitCode;
+
+fn main() -> ExitCode {
+    let args = Args::parse(&["json"]);
+    let root = args.get_or("root", ".").to_string();
+    let scanned = match args.get("file") {
+        Some(file) => {
+            let rel = args.get_or("as", file).to_string();
+            std::fs::read_to_string(file)
+                .map(|src| analysis::lint_source(&rel, &src))
+                .map_err(|e| format!("read {file}: {e}"))
+        }
+        None => analysis::lint_tree(Path::new(&root)),
+    };
+    match scanned {
+        Ok(report) => {
+            if args.flag("json") {
+                println!("{}", report.to_json().to_string());
+            } else {
+                print!("{}", report.render_human());
+            }
+            if report.clean() {
+                ExitCode::SUCCESS
+            } else {
+                ExitCode::from(1)
+            }
+        }
+        Err(e) => {
+            eprintln!("picbnn-lint: {e}");
+            ExitCode::from(2)
+        }
+    }
+}

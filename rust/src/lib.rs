@@ -21,6 +21,7 @@
 
 pub mod accel;
 pub mod analog;
+pub mod analysis;
 pub mod baseline;
 pub mod benchkit;
 pub mod bnn;

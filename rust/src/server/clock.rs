@@ -65,7 +65,20 @@ impl Clock {
     }
 
     /// Current time since the epoch.
+    ///
+    /// Debug builds assert that no [`NoClockReads`] scope is active on
+    /// the calling thread — the engine's maintenance turns (pacing
+    /// recalibration, scrub, re-planning) are contractually clock-free,
+    /// and a read sneaking into one would silently break the "one
+    /// timestamp per tick" replay guarantee.
     pub fn now(&self) -> Timestamp {
+        #[cfg(debug_assertions)]
+        debug_assert_eq!(
+            NoClockReads::depth(),
+            0,
+            "Clock::now() inside a NoClockReads scope — maintenance turns \
+             must reuse the tick's hoisted timestamp, not read the clock"
+        );
         match &self.inner {
             Inner::Wall(epoch) => epoch.elapsed(),
             Inner::Simulated(s) => {
@@ -120,6 +133,64 @@ impl Clock {
             Inner::Wall(_) => 0,
             Inner::Simulated(s) => s.reads.load(Ordering::Relaxed),
         }
+    }
+}
+
+/// Debug-build guard declaring "this scope reads no clock".
+///
+/// The engine wraps each maintenance turn (`run_maintenance`, including
+/// `recalibrate_pacing` and the scrub/replan controllers) in one of
+/// these; any [`Clock::now`] on the same thread inside the scope trips
+/// a `debug_assert`.  The check is a thread-local depth counter, so it
+/// is exact — concurrent workers reading the clock on *other* threads
+/// (which is fine) cannot trip it, unlike a global read-count delta,
+/// which would be racy under concurrent submitters.  Release builds
+/// compile it to nothing.
+///
+/// The type is deliberately `!Send` (it holds a raw-pointer marker):
+/// a scope must begin and end on the thread whose reads it bans.
+#[cfg(debug_assertions)]
+pub struct NoClockReads {
+    _not_send: std::marker::PhantomData<*const ()>,
+}
+
+#[cfg(debug_assertions)]
+thread_local! {
+    static NO_CLOCK_DEPTH: std::cell::Cell<u32> = const { std::cell::Cell::new(0) };
+}
+
+#[cfg(debug_assertions)]
+impl NoClockReads {
+    /// Enter a clock-free scope on this thread; the ban lifts when the
+    /// returned guard drops.  Scopes nest.
+    #[must_use = "the ban lasts only as long as the guard lives"]
+    pub fn begin() -> Self {
+        NO_CLOCK_DEPTH.with(|d| d.set(d.get() + 1));
+        NoClockReads {
+            _not_send: std::marker::PhantomData,
+        }
+    }
+
+    fn depth() -> u32 {
+        NO_CLOCK_DEPTH.with(|d| d.get())
+    }
+}
+
+#[cfg(debug_assertions)]
+impl Drop for NoClockReads {
+    fn drop(&mut self) {
+        NO_CLOCK_DEPTH.with(|d| d.set(d.get() - 1));
+    }
+}
+
+/// Release-build stand-in: constructing it is free and bans nothing.
+#[cfg(not(debug_assertions))]
+pub struct NoClockReads;
+
+#[cfg(not(debug_assertions))]
+impl NoClockReads {
+    pub fn begin() -> Self {
+        NoClockReads
     }
 }
 
@@ -187,5 +258,39 @@ mod tests {
     #[should_panic(expected = "wall clock")]
     fn advancing_a_wall_clock_panics() {
         Clock::wall().advance(Duration::from_secs(1));
+    }
+
+    #[cfg(debug_assertions)]
+    #[test]
+    #[should_panic(expected = "NoClockReads")]
+    fn no_clock_reads_scope_trips_on_now() {
+        let c = Clock::simulated();
+        let _ban = NoClockReads::begin();
+        let _ = c.now();
+    }
+
+    #[test]
+    fn no_clock_reads_lifts_on_drop_and_nests() {
+        let c = Clock::simulated();
+        {
+            let _outer = NoClockReads::begin();
+            let _inner = NoClockReads::begin();
+        }
+        let _ = c.now();
+        assert_eq!(c.reads(), 1);
+    }
+
+    #[cfg(debug_assertions)]
+    #[test]
+    fn no_clock_reads_is_thread_local() {
+        // the ban must not leak to sibling threads: workers reading the
+        // clock concurrently with a maintenance turn are legitimate
+        let c = Clock::simulated();
+        let _ban = NoClockReads::begin();
+        let c2 = c.clone();
+        std::thread::spawn(move || c2.now())
+            .join()
+            .expect("sibling thread reads freely");
+        assert_eq!(c.reads(), 1);
     }
 }

@@ -67,7 +67,7 @@ use crate::accel::{
 };
 use crate::bnn::model::MappedModel;
 use crate::cam::DegradedMode;
-use crate::server::clock::{Clock, Timestamp};
+use crate::server::clock::{Clock, NoClockReads, Timestamp};
 use crate::server::metrics::ServerMetrics;
 use crate::util::bitops::BitVec;
 
@@ -522,6 +522,10 @@ impl<'m> Engine<'m> {
             Ok(tasks) => tasks,
             Err(_) => return,
         };
+        // contract, debug-asserted: a maintenance turn reads no clock —
+        // the tick already hoisted its one readiness timestamp, and a
+        // stray read here would break simulated-time replay
+        let _clock_free = NoClockReads::begin();
         for task in tasks.iter_mut() {
             match task {
                 MaintenanceTask::Replan { lane, controller } => {
@@ -569,6 +573,9 @@ impl<'m> Engine<'m> {
     /// last report and swap it into the `DevicePaced` model (lanes that
     /// served nothing keep their pacing; host-paced engines are a no-op).
     fn recalibrate_pacing(&self) {
+        // clock-free like every maintenance turn (scopes nest, so this
+        // also holds when called under `run_maintenance`'s own guard)
+        let _clock_free = NoClockReads::begin();
         let mut service = self.service.lock().unwrap();
         let per_image = match &mut *service {
             ServiceModel::DevicePaced(per_image) => per_image,
@@ -938,6 +945,64 @@ mod tests {
             engine.clock().reads() - before,
             1 + 3,
             "one readiness read + one completion stamp per batch"
+        );
+    }
+
+    #[test]
+    fn maintenance_turns_read_no_clock_and_tick_reads_stay_pinned() {
+        // hardening satellite: with replan + recalibration + scrub all
+        // attached, a tick still reads the simulated clock exactly once
+        // plus one completion stamp per executed batch — the
+        // maintenance turn contributes zero reads.  Debug builds also
+        // assert this from the inside: `run_maintenance` (and
+        // `recalibrate_pacing` within it) runs under a `NoClockReads`
+        // scope, so any future clock read added to a controller panics
+        // here instead of silently skewing replay.
+        let model = tiny_model(64, 8, 3, 54);
+        let engine = Engine::single(
+            &model,
+            opts(),
+            BatchPolicy {
+                max_batch: 8,
+                max_wait: Duration::ZERO,
+            },
+            crate::accel::DEFAULT_POOL_MACROS,
+        )
+        .with_clock(Clock::simulated())
+        .with_service(ServiceModel::DevicePaced(vec![Duration::from_micros(50)]))
+        .with_replan(
+            0,
+            crate::accel::DEFAULT_POOL_MACROS,
+            ReplanConfig {
+                period: 1,
+                ..Default::default()
+            },
+        )
+        .with_recalibration(1)
+        .with_scrub(0, 977, ScrubConfig::default());
+
+        // empty tick: one readiness read, the maintenance turn none
+        let before = engine.clock().reads();
+        assert!(engine.poll().is_empty());
+        assert_eq!(
+            engine.clock().reads() - before,
+            1,
+            "empty tick with maintenance attached"
+        );
+
+        // two batches: one readiness read + two completion stamps, and
+        // the recalibration turn (which re-derives pacing from the
+        // served stats) still reads nothing
+        for img in images(2 * 8, 64) {
+            engine.submit(0, img).unwrap();
+        }
+        let before = engine.clock().reads();
+        let got = engine.poll();
+        assert_eq!(got.len(), 16);
+        assert_eq!(
+            engine.clock().reads() - before,
+            1 + 2,
+            "maintenance-heavy tick reads readiness + per-batch stamps only"
         );
     }
 

@@ -1,0 +1,78 @@
+//! Tier-1 gate: the real tree must be lint-clean.
+//!
+//! This is the same scan `cargo run --release --bin picbnn-lint`
+//! performs, run from `cargo test` so invariant regressions fail CI
+//! even in lanes that never invoke the binary.  Suppressed findings
+//! are allowed (each carries a justification pragma); unsuppressed
+//! ones are not.
+
+use picbnn::analysis;
+use std::path::Path;
+
+/// The repo root, robust to whatever cwd the test harness uses: walk up
+/// from the manifest dir until `Cargo.toml` + `rust/src` both exist.
+fn repo_root() -> std::path::PathBuf {
+    let start = std::env::var("CARGO_MANIFEST_DIR").unwrap_or_else(|_| ".".to_string());
+    let mut dir = Path::new(&start).to_path_buf();
+    loop {
+        if dir.join("Cargo.toml").is_file() && dir.join("rust/src").is_dir() {
+            return dir;
+        }
+        if !dir.pop() {
+            return Path::new(".").to_path_buf();
+        }
+    }
+}
+
+#[test]
+fn tree_is_lint_clean() {
+    let root = repo_root();
+    let report = analysis::lint_tree(&root).expect("lint walks the tree");
+    assert!(
+        report.files_scanned > 50,
+        "suspiciously few files scanned ({}) — lint_tree is looking at the wrong root: {}",
+        report.files_scanned,
+        root.display()
+    );
+    assert!(
+        report.clean(),
+        "unsuppressed lint findings in the tree:\n{}",
+        report.render_human()
+    );
+}
+
+#[test]
+fn suppressions_are_the_known_set() {
+    // every pragma in the tree is intentional and reviewed — pin the
+    // count so a drive-by allow shows up in review as a diff here too
+    let report = analysis::lint_tree(&repo_root()).expect("lint walks the tree");
+    let mut sites: Vec<String> = report
+        .suppressed
+        .iter()
+        .map(|s| format!("{}:{}", s.file, s.rule))
+        .collect();
+    sites.sort();
+    assert_eq!(
+        sites,
+        vec![
+            "rust/src/accel/macro_pool.rs:lock-discipline",
+            "rust/src/accel/macro_pool.rs:lock-discipline",
+        ],
+        "suppression set changed — update this pin alongside DETERMINISM.md"
+    );
+}
+
+#[test]
+fn json_output_parses_and_agrees() {
+    let report = analysis::lint_tree(&repo_root()).expect("lint walks the tree");
+    let json = picbnn::util::json::Json::parse(&report.to_json().to_string())
+        .expect("lint JSON round-trips");
+    assert_eq!(
+        json.get("clean"),
+        Some(&picbnn::util::json::Json::Bool(report.clean()))
+    );
+    assert_eq!(
+        json.get("files_scanned").and_then(|v| v.as_i64()),
+        Some(report.files_scanned as i64)
+    );
+}
