@@ -19,6 +19,14 @@
 //! `DegradedMode::Refusing` and the engine must shed new work with the
 //! typed `RejectReason::Degraded` — never serve silently wrong answers.
 //!
+//! Scenario C (recovery drill): one copy of a replicated hidden load is
+//! written off (quarantine + failover), the operator re-admits it, the
+//! first probation flakes on its final canary lap (re-quarantined, lap
+//! requirement doubled), and the second — escalated — probation passes.
+//! Measured: probation laps, re-quarantines, re-admissions, and the
+//! capacity recovered through the canary gate; the recovered pool must
+//! match a never-faulted twin bit-exactly.
+//!
 //! The fault seed comes from `PICBNN_FAULT_SEED` (default 0xD1CE) so CI
 //! can pin a fixed drill; results go to `BENCH_faults.json` (quick mode
 //! writes `BENCH_faults_quick.json` so a smoke run never replaces the
@@ -27,11 +35,14 @@
 
 use std::time::Duration;
 
-use picbnn::accel::{BatchPolicy, MacroPool, PipelineOptions, ScrubConfig};
+use picbnn::accel::{BatchPolicy, MacroPool, PipelineOptions, ScrubConfig, ScrubController};
 use picbnn::benchkit::{
     bench_artifact_path, emit_json, quick_mode, synth_bits, synth_model, BenchRecord, Table,
 };
-use picbnn::cam::{DegradedMode, FaultKind, FaultPlan, FaultSite, NoiseMode, DEFAULT_SPARE_ROWS};
+use picbnn::cam::{
+    DegradedMode, FaultKind, FaultPlan, FaultSite, NoiseMode, DEFAULT_PROBATION_LAPS,
+    DEFAULT_SPARE_ROWS,
+};
 use picbnn::server::{Clock, Engine, RejectReason};
 use picbnn::util::bitops::BitVec;
 use picbnn::util::rng::Rng;
@@ -194,6 +205,100 @@ fn main() {
     let shed = refusal.lane_metrics(0).shed;
     assert!(shed > 0, "the shed must surface in metrics");
 
+    // ---- scenario C: recovery drill (operator re-admission) ----
+    let rec_pool = MacroPool::with_capacity_for_workers(&model, opts, budget + 1, 2);
+    let rec_twin = MacroPool::with_capacity_for_workers(&model, opts, budget + 1, 2);
+    assert_eq!(
+        rec_pool.fault_sites()[0].replicas,
+        2,
+        "the surplus macro must buy a hidden replica"
+    );
+    let mut kill = FaultPlan::default();
+    for row in 0..=DEFAULT_SPARE_ROWS {
+        kill.push(
+            0,
+            FaultSite::Hidden {
+                layer: 0,
+                load: 0,
+                replica: Some(0),
+            },
+            FaultKind::DeadRow {
+                row,
+                always_fire: true,
+            },
+        );
+    }
+    rec_pool.inject_fault_plan(kill);
+    let mut rec_base = 0u64;
+    rec_pool.classify_batch_at(&images, rec_base);
+    rec_twin.classify_batch_at(&images, rec_base);
+    rec_base += per_batch as u64;
+    let mut rec_ctl = ScrubController::new(
+        seed ^ 0xCAFE,
+        ScrubConfig {
+            rows_per_turn: 1 << 20,
+            max_rebuilds: 0,
+            workers: 2,
+            ..Default::default()
+        },
+    );
+    let mut rec = rec_ctl.maintain(&rec_pool);
+    assert_eq!(rec.quarantines, 1, "the dying copy must be retired");
+    assert_eq!(rec_ctl.degraded_mode(), DegradedMode::Failover);
+    assert_eq!(
+        rec_pool.fault_sites()[0].replicas,
+        1,
+        "failover serves on the surviving copy"
+    );
+    for _ in 0..12 {
+        rec.add(&rec_ctl.maintain(&rec_pool)); // drain the re-plan
+    }
+    // first probation flakes on its final canary lap: a dead row lands
+    // on the probation side-array (replica indices past the live copies)
+    assert!(rec_pool.un_quarantine(0, 0), "re-admission must engage");
+    for _ in 0..DEFAULT_PROBATION_LAPS - 1 {
+        rec.add(&rec_ctl.maintain(&rec_pool));
+    }
+    let mut flake = FaultPlan::default();
+    flake.push(
+        rec_base,
+        FaultSite::Hidden {
+            layer: 0,
+            load: 0,
+            replica: Some(1),
+        },
+        FaultKind::DeadRow {
+            row: 0,
+            always_fire: false,
+        },
+    );
+    rec_pool.inject_fault_plan(flake);
+    rec_pool.classify_batch_at(&images, rec_base);
+    rec_twin.classify_batch_at(&images, rec_base);
+    rec_base += per_batch as u64;
+    rec.add(&rec_ctl.maintain(&rec_pool));
+    assert_eq!(rec.probation_failures, 1, "the flake must re-quarantine");
+    assert_eq!(rec.readmissions, 0, "no silent re-admission");
+    // the second probation (lap requirement doubled) passes
+    assert!(rec_pool.un_quarantine(0, 0));
+    for _ in 0..(DEFAULT_PROBATION_LAPS << 1) {
+        rec.add(&rec_ctl.maintain(&rec_pool));
+    }
+    assert_eq!(rec.readmissions, 1, "the canary gate must readmit");
+    let capacity_back = rec_pool.fault_sites()[0].replicas;
+    assert_eq!(capacity_back, 2, "re-admission must restore capacity");
+    assert_eq!(
+        rec_ctl.degraded_mode(),
+        DegradedMode::Nominal,
+        "re-admission is the one path out of Failover"
+    );
+    assert_eq!(
+        rec_pool.classify_batch_at(&images, rec_base),
+        rec_twin.classify_batch_at(&images, rec_base),
+        "recovered pool must match the twin bit-exactly"
+    );
+    let capacity_recovered = capacity_back - 1;
+
     let mut table = Table::new(
         "faults: escalating drill + refusal drill (seeded, replayable)",
         &["measure", "value"],
@@ -219,6 +324,22 @@ fn main() {
         rm.unrepairable.to_string(),
     ]);
     table.row(vec!["refusal: typed sheds".into(), shed.to_string()]);
+    table.row(vec![
+        "recovery: probation laps".into(),
+        rec.probation_laps.to_string(),
+    ]);
+    table.row(vec![
+        "recovery: re-quarantines".into(),
+        rec.probation_failures.to_string(),
+    ]);
+    table.row(vec![
+        "recovery: readmissions".into(),
+        rec.readmissions.to_string(),
+    ]);
+    table.row(vec![
+        "recovery: capacity recovered".into(),
+        capacity_recovered.to_string(),
+    ]);
     table.print();
 
     let records = vec![
@@ -236,6 +357,22 @@ fn main() {
         BenchRecord::new("faults drill [post-heal mismatches]", residual as f64, None),
         BenchRecord::new("faults refusal [unrepairable]", rm.unrepairable as f64, None),
         BenchRecord::new("faults refusal [typed sheds]", shed as f64, None),
+        BenchRecord::new(
+            "faults recovery [probation laps]",
+            rec.probation_laps as f64,
+            None,
+        ),
+        BenchRecord::new(
+            "faults recovery [re-quarantines]",
+            rec.probation_failures as f64,
+            None,
+        ),
+        BenchRecord::new("faults recovery [readmissions]", rec.readmissions as f64, None),
+        BenchRecord::new(
+            "faults recovery [capacity recovered]",
+            capacity_recovered as f64,
+            None,
+        ),
     ];
     let out_path = if quick {
         bench_artifact_path("BENCH_faults_quick.json")

@@ -20,10 +20,10 @@
 //!
 //! Results go to `BENCH_serving.json` (full mode; quick mode writes
 //! `BENCH_serving_quick.json` so a smoke run never replaces the
-//! committed baseline), and the steady-scenario goodput gates against
-//! the committed baseline with the same quick/backend-mismatch skip
-//! rules as the hotpath bench.  CI runs this under `PICBNN_BENCH_QUICK=1`
-//! including a forced-scalar lane.
+//! committed baseline), and the steady and diurnal goodput records gate
+//! against the committed baseline with the same quick/backend-mismatch
+//! skip rules as the hotpath bench.  CI runs this under
+//! `PICBNN_BENCH_QUICK=1` including a forced-scalar lane.
 
 use std::time::Duration;
 
@@ -42,7 +42,12 @@ use picbnn::util::rng::Rng;
 use picbnn::util::Timer;
 
 /// Scenario records gated against the committed baseline in full mode.
-const BASELINE_GATED: [&str; 1] = ["serving steady poisson [goodput inf/s]"];
+/// Both goodput records carry `Some(throughput)` (stored inverted as
+/// inf/s, so "higher value = slower" matches the gate's direction).
+const BASELINE_GATED: [&str; 2] = [
+    "serving steady poisson [goodput inf/s]",
+    "serving diurnal [goodput inf/s]",
+];
 
 /// Images cycled through per tenant (arrival's user id picks one).
 const IMAGE_POOL: usize = 32;

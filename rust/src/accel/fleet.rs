@@ -1,0 +1,240 @@
+//! Fleet-wide maintenance supervision: one shared budget, every tenant
+//! healthy.
+//!
+//! A [`super::MultiPool`] engine runs one scrub controller and one
+//! re-planning controller *per lane*, each sized as if it owned the
+//! maintenance gap alone.  That breaks down exactly when maintenance
+//! matters most: a fault-heavy tenant's scrub pass detects, repairs,
+//! rebuilds, and migrates every gap, and with per-lane constants the
+//! total maintenance work per gap scales with how unlucky the fleet is —
+//! while each healthy sibling still pays its own full scrub quantum on
+//! silicon that needed none of it.  The [`FleetMaintenance`] supervisor
+//! inverts the contract: the *fleet* owns one row budget per gap
+//! ([`FleetConfig::rows_per_gap`]) and meters it across lanes by deficit
+//! round-robin:
+//!
+//! 1. **Quantum.** Each gap credits every lane `rows_per_gap / n_lanes`
+//!    scrub rows (at least one).  Unspent credit banks up to
+//!    [`FleetConfig::carry_cap`] rows, so a lane whose turn was consumed
+//!    by a whole-turn action (a post-quarantine migration step) catches
+//!    its cursor up in later gaps instead of losing the work forever.
+//!
+//! 2. **Isolation.** A lane's detections, rebuilds, and migrations spend
+//!    only that lane's credit.  The fairness property this buys — and
+//!    the reason the supervisor exists — is that one fault-heavy tenant
+//!    cannot starve a sibling's scrub cursor: every lane's cursor
+//!    completes laps within a bounded gap of every other's
+//!    (property-tested in `tests/faults.rs` over random tenant mixes).
+//!
+//! 3. **Rotation.** The first-served lane rotates every gap, so quantum
+//!    remainders and turn order never systematically favor lane 0.
+//!
+//! 4. **Determinism.** Lane controllers get [`splitmix64`]-derived seeds
+//!    from one base seed, and the round-robin state is plain counters:
+//!    a fleet drill replays bit-exactly from (seed, fault plans, trace).
+//!
+//! The serving engine attaches one supervisor per [`super::MultiPool`]
+//! via `Engine::with_fleet_maintenance` and calls [`FleetMaintenance::maintain`]
+//! once per inter-batch gap, in place of per-lane scrub/replan tasks.
+
+use crate::util::rng::splitmix64;
+
+use super::macro_pool::MultiPool;
+use super::replan::{ReplanConfig, ReplanController};
+use super::scrub::{ScrubConfig, ScrubController, ScrubStats};
+
+/// Tuning for the shared maintenance budget (role of each knob in the
+/// module docs).
+#[derive(Clone, Copy, Debug)]
+pub struct FleetConfig {
+    /// Scrub-row budget per maintenance gap, shared across all lanes.
+    pub rows_per_gap: usize,
+    /// Most unspent credit a lane may bank across gaps [rows].
+    pub carry_cap: usize,
+    /// Per-lane scrub tuning.  `rows_per_turn` is superseded by the
+    /// round-robin quantum; the ladder knobs (drift tolerance, rebuild
+    /// strikes, re-plan workers) apply per lane unchanged.
+    pub scrub: ScrubConfig,
+    /// Attach a re-planning controller to every resident lane
+    /// (`None` = scrub-and-repair only).
+    pub replan: Option<ReplanConfig>,
+}
+
+impl Default for FleetConfig {
+    fn default() -> Self {
+        FleetConfig {
+            rows_per_gap: 8,
+            carry_cap: 32,
+            scrub: ScrubConfig::default(),
+            replan: None,
+        }
+    }
+}
+
+/// One tenant's maintenance machinery plus its deficit counter.
+struct FleetLane {
+    scrub: ScrubController,
+    replan: Option<ReplanController>,
+    /// Banked scrub credit [rows] (deficit round-robin state).
+    deficit: usize,
+}
+
+/// Deficit-round-robin maintenance supervisor for one [`MultiPool`]
+/// (module docs).  Owns every lane's scrub and re-plan controller.
+pub struct FleetMaintenance {
+    cfg: FleetConfig,
+    lanes: Vec<FleetLane>,
+    /// Lane served first this gap (rotates).
+    next: usize,
+}
+
+impl FleetMaintenance {
+    /// One scrub controller per lane (seeds derived from `seed` by lane
+    /// index, so drills replay bit-exactly), plus a re-planning
+    /// controller per resident lane when the config asks for one —
+    /// budgeted at the lane's live plan, matching `Engine::with_replan`.
+    pub fn new(pool: &MultiPool<'_>, seed: u64, cfg: FleetConfig) -> Self {
+        assert!(cfg.rows_per_gap >= 1, "the fleet budget must make progress");
+        let lanes = (0..pool.n_tenants())
+            .map(|t| {
+                let mut s = seed ^ (t as u64).wrapping_mul(0x9E37_79B9_7F4A_7C15);
+                let lane_seed = splitmix64(&mut s);
+                let tenant = pool.tenant(t);
+                let replan = cfg.replan.and_then(|rc| {
+                    tenant
+                        .plan()
+                        .map(|p| ReplanController::new(tenant, p.macros_used(), rc))
+                });
+                FleetLane {
+                    scrub: ScrubController::new(lane_seed, cfg.scrub),
+                    replan,
+                    deficit: 0,
+                }
+            })
+            .collect();
+        FleetMaintenance {
+            cfg,
+            lanes,
+            next: 0,
+        }
+    }
+
+    pub fn n_lanes(&self) -> usize {
+        self.lanes.len()
+    }
+
+    /// One shared maintenance gap: serve every lane once in rotating
+    /// order, each spending at most its banked credit on scrub rows
+    /// (whole-turn actions — a post-quarantine migration step — charge
+    /// one quantum), then give each lane's re-planning controller its
+    /// turn (at most one migration step per lane per gap, by the
+    /// controller's own contract).  Returns this gap's per-lane scrub
+    /// deltas for the engine's metrics.
+    pub fn maintain(&mut self, pool: &MultiPool<'_>) -> Vec<ScrubStats> {
+        let n = self.lanes.len();
+        let mut deltas = vec![ScrubStats::default(); n];
+        if n == 0 {
+            return deltas;
+        }
+        let quantum = (self.cfg.rows_per_gap / n).max(1);
+        let cap = self.cfg.carry_cap.max(quantum);
+        for i in 0..n {
+            let t = (self.next + i) % n;
+            let lane = &mut self.lanes[t];
+            lane.deficit = (lane.deficit + quantum).min(cap);
+            let d = lane.scrub.maintain_budgeted(pool.tenant(t), lane.deficit);
+            let spent = if d.rows_scrubbed > 0 {
+                d.rows_scrubbed as usize
+            } else {
+                // a whole-turn action (or an idle reload lane) consumed
+                // this lane's slot: charge the quantum so banked credit
+                // reflects cursor progress, not turn count
+                quantum
+            };
+            lane.deficit = lane.deficit.saturating_sub(spent);
+            deltas[t] = d;
+        }
+        for (t, lane) in self.lanes.iter_mut().enumerate() {
+            if let Some(rc) = lane.replan.as_mut() {
+                rc.maintain(pool.tenant(t));
+            }
+        }
+        self.next = (self.next + 1) % n;
+        deltas
+    }
+
+    /// Lane `t`'s scrub controller (mode, cumulative stats, reports).
+    pub fn lane_scrub(&self, t: usize) -> &ScrubController {
+        &self.lanes[t].scrub
+    }
+
+    /// Mutable access for draining a lane's fault reports.
+    pub fn lane_scrub_mut(&mut self, t: usize) -> &mut ScrubController {
+        &mut self.lanes[t].scrub
+    }
+
+    /// Lane `t`'s re-planning controller, when one is attached.
+    pub fn lane_replan(&self, t: usize) -> Option<&ReplanController> {
+        self.lanes[t].replan.as_ref()
+    }
+
+    /// Full scrub-cursor laps lane `t` has completed — the fairness
+    /// observable: under any tenant mix, `max_laps - min_laps` across
+    /// resident lanes stays bounded.
+    pub fn lane_laps(&self, t: usize) -> u64 {
+        self.lanes[t].scrub.laps_completed()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::accel::pipeline::PipelineOptions;
+    use crate::bnn::model::test_fixtures::tiny_model;
+    use crate::cam::NoiseMode;
+
+    fn nominal() -> PipelineOptions {
+        PipelineOptions {
+            noise: NoiseMode::Nominal,
+            ..Default::default()
+        }
+    }
+
+    #[test]
+    fn healthy_fleet_laps_every_lane() {
+        let a = tiny_model(64, 8, 3, 44);
+        let b = tiny_model(64, 8, 3, 45);
+        let models = [&a, &b];
+        let pool = MultiPool::new(&models, nominal(), 8);
+        let mut fleet = FleetMaintenance::new(&pool, 11, FleetConfig::default());
+        for _ in 0..4096 {
+            fleet.maintain(&pool);
+        }
+        for t in 0..pool.n_tenants() {
+            assert!(
+                fleet.lane_laps(t) >= 1,
+                "lane {t} never lapped: the shared budget starved it"
+            );
+            assert_eq!(fleet.lane_scrub(t).stats().faults_detected, 0);
+        }
+    }
+
+    #[test]
+    fn rotation_and_deficit_replay_bit_exactly() {
+        let a = tiny_model(64, 8, 3, 44);
+        let b = tiny_model(64, 8, 3, 45);
+        let models = [&a, &b];
+        let run = |seed| {
+            let pool = MultiPool::new(&models, nominal(), 8);
+            let mut fleet = FleetMaintenance::new(&pool, seed, FleetConfig::default());
+            let mut total = ScrubStats::default();
+            for _ in 0..512 {
+                for d in fleet.maintain(&pool) {
+                    total.add(&d);
+                }
+            }
+            (total, fleet.lane_laps(0), fleet.lane_laps(1))
+        };
+        assert_eq!(run(11), run(11));
+    }
+}

@@ -60,7 +60,10 @@ use std::sync::{Mutex, MutexGuard, RwLock};
 
 use crate::bnn::mapping::program_row;
 use crate::bnn::model::{MappedLayer, MappedModel};
-use crate::cam::faults::{DegradedMode, FaultEvent, FaultKind, FaultPlan, FaultSite, SiteGeometry};
+use crate::cam::faults::{
+    DegradedMode, FaultEvent, FaultKind, FaultPlan, FaultSite, HealthRegistry, HealthState,
+    SiteGeometry,
+};
 use crate::cam::{CamArray, CamConfig};
 use crate::sim::SimClock;
 use crate::util::bitops::BitVec;
@@ -71,7 +74,7 @@ use super::pipeline::{
     program_load_into, resolve_schedule, BatchScratch, CategoryCost, Load,
 };
 use super::pipeline::{Pipeline, PipelineOptions, RunStats};
-use super::planner::{self, MigrationPlan, PlacementPlan, TenantPlan, TenantSpec};
+use super::planner::{self, HealthScores, MigrationPlan, PlacementPlan, TenantPlan, TenantSpec};
 use super::scrub::{DetectedBy, FaultReport, RepairAction};
 use super::voltage::CalibratedPoint;
 
@@ -247,6 +250,20 @@ struct ResidentState {
     router: Mutex<SharedRouter>,
 }
 
+/// One replaced macro earning re-admission: an identically-seeded
+/// side-array that carries zero serving load while the scrub controller
+/// canary-laps it ([`MacroPool::probation_scrub`]).
+struct ProbationSlot {
+    layer: usize,
+    load: usize,
+    /// Health-registry key — the quarantine ordinal this macro re-enters
+    /// under (stable where live replica indices shift on removal).
+    site: FaultSite,
+    cam: CamArray,
+    /// Canary cursor within the current lap.
+    row: usize,
+}
+
 struct Resident {
     state: RwLock<ResidentState>,
     /// Host-device I/O cycles (shared 128-bit bus; same clock domain).
@@ -273,6 +290,13 @@ struct Resident {
     /// the batch path's one-load fast gate, so an empty plan costs one
     /// relaxed atomic read per batch and nothing else.
     next_fault_at: AtomicU64,
+    /// Fleet health supervisor: one ladder entry per physical macro
+    /// (state machine in `cam::faults`).  Leaf lock — never held while
+    /// taking another pool lock.
+    health_reg: Mutex<HealthRegistry>,
+    /// Replaced macros on probation: side-arrays serving nothing until
+    /// their canary laps complete ([`MacroPool::un_quarantine`]).
+    probation: Mutex<Vec<ProbationSlot>>,
 }
 
 /// Sharded multi-macro execution engine for one mapped model.
@@ -391,6 +415,7 @@ impl<'m> MacroPool<'m> {
             &Self::load_rows(&plans),
             &points,
             Some(traffic),
+            None,
             max_macros,
             workers,
         );
@@ -513,6 +538,8 @@ impl<'m> MacroPool<'m> {
                     traffic,
                     fault_plan: Mutex::new(Vec::new()),
                     next_fault_at: AtomicU64::new(u64::MAX),
+                    health_reg: Mutex::new(HealthRegistry::default()),
+                    probation: Mutex::new(Vec::new()),
                 }),
                 None,
                 hidden_points,
@@ -1014,7 +1041,7 @@ impl<'m> MacroPool<'m> {
         let mut queue = resident.fault_plan.lock().unwrap();
         while queue.first().is_some_and(|e| e.at_image <= stream_base) {
             let e = queue.remove(0);
-            Self::apply_fault(st, &e.site, &e.kind);
+            Self::apply_fault(resident, st, &e.site, &e.kind);
         }
         let first = queue.first().map_or(u64::MAX, |e| e.at_image);
         resident.next_fault_at.store(first, Ordering::Release);
@@ -1023,31 +1050,44 @@ impl<'m> MacroPool<'m> {
     /// Land one fault on the physical macro(s) its site names.  A site
     /// the current placement does not instantiate (a cold-spilled load,
     /// an out-of-range replica or slot) is void — silicon that was never
-    /// built cannot fail.  `replica: None` injects into every copy
+    /// built cannot fail.  `replica: None` injects into every live copy
     /// identically, preserving the rule that results never depend on
-    /// which replica served an image — under faults too.
-    fn apply_fault(st: &ResidentState, site: &FaultSite, kind: &FaultKind) {
+    /// which replica served an image — under faults too.  Replica
+    /// indices past the live copies address the load's probation
+    /// side-arrays in admission order, so drills can flake a macro
+    /// mid-probation.
+    fn apply_fault(resident: &Resident, st: &ResidentState, site: &FaultSite, kind: &FaultKind) {
         match *site {
             FaultSite::Hidden {
                 layer,
                 load,
                 replica,
             } => {
-                let Some(slots) = st
+                let live = st
                     .hidden_slots
                     .get(layer)
                     .and_then(|l| l.get(load))
-                    .and_then(Option::as_ref)
-                else {
-                    return;
-                };
+                    .and_then(Option::as_ref);
+                let n_live = live.map_or(0, |s| s.replicas.len());
                 match replica {
+                    Some(k) if k < n_live => {
+                        let slots = live.expect("k < n_live implies live slots");
+                        slots.replicas[k].lock().unwrap().inject_fault(kind);
+                    }
                     Some(k) => {
-                        if let Some(m) = slots.replicas.get(k) {
-                            m.lock().unwrap().inject_fault(kind);
+                        let mut probation = resident.probation.lock().unwrap();
+                        if let Some(p) = probation
+                            .iter_mut()
+                            .filter(|p| p.layer == layer && p.load == load)
+                            .nth(k - n_live)
+                        {
+                            p.cam.inject_fault(kind);
                         }
                     }
                     None => {
+                        let Some(slots) = live else {
+                            return;
+                        };
                         for m in &slots.replicas {
                             m.lock().unwrap().inject_fault(kind);
                         }
@@ -1168,7 +1208,8 @@ impl<'m> MacroPool<'m> {
         };
         let st = resident.state.read().unwrap();
         let out_idx = self.model.layers.len() - 1;
-        match *site {
+        let before = out.len();
+        let scrubbed = match *site {
             FaultSite::Hidden {
                 layer,
                 load,
@@ -1233,7 +1274,14 @@ impl<'m> MacroPool<'m> {
                 }
                 scrubbed
             }
+        };
+        if out.len() > before {
+            // any detection demotes the site to Suspect on the health
+            // ladder; clean full laps promote it back (scrub controller)
+            let now = self.stream_cursor.load(Ordering::Relaxed);
+            resident.health_reg.lock().unwrap().mark_suspect(*site, now);
         }
+        scrubbed
     }
 
     /// The per-macro scrub ladder (invariants in `cam::faults`): rails
@@ -1456,24 +1504,53 @@ impl<'m> MacroPool<'m> {
         let Some(resident) = &self.resident else {
             return usize::MAX;
         };
-        let mut st = resident.state.write().unwrap();
-        let Some(slot) = st.hidden_slots.get_mut(layer).and_then(|l| l.get_mut(load)) else {
-            return usize::MAX;
+        let left = {
+            let mut st = resident.state.write().unwrap();
+            let Some(slot) = st.hidden_slots.get_mut(layer).and_then(|l| l.get_mut(load)) else {
+                return usize::MAX;
+            };
+            let Some(slots) = slot.as_mut() else {
+                return usize::MAX;
+            };
+            if replica >= slots.replicas.len() {
+                return slots.replicas.len();
+            }
+            let removed = slots.replicas.remove(replica);
+            Self::retire_into_carry(resident, &removed.into_inner().unwrap(), false);
+            let left = slots.replicas.len();
+            if left == 0 {
+                *slot = None;
+            }
+            st.plan.hidden_replicas[layer][load] = left;
+            left
         };
-        let Some(slots) = slot.as_mut() else {
-            return usize::MAX;
-        };
-        if replica >= slots.replicas.len() {
-            return slots.replicas.len();
-        }
-        let removed = slots.replicas.remove(replica);
-        Self::retire_into_carry(resident, &removed.into_inner().unwrap(), false);
-        let left = slots.replicas.len();
-        if left == 0 {
-            *slot = None;
-        }
-        st.plan.hidden_replicas[layer][load] = left;
+        // record the removed macro on the health ladder under a stable
+        // quarantine ordinal (live replica indices shift on removal);
+        // `un_quarantine` re-admits the lowest ordinal first
+        let now = self.stream_cursor.load(Ordering::Relaxed);
+        let mut reg = resident.health_reg.lock().unwrap();
+        let ord = Self::quarantine_ordinal(&reg, layer, load);
+        reg.quarantine(
+            FaultSite::Hidden {
+                layer,
+                load,
+                replica: Some(ord),
+            },
+            now,
+        );
         left
+    }
+
+    /// Next free quarantine ordinal for a load: one past the entries
+    /// already on the ladder (ordinals are never reused, so back-off
+    /// counters survive re-quarantine of the same physical macro).
+    fn quarantine_ordinal(reg: &HealthRegistry, layer: usize, load: usize) -> usize {
+        reg.iter()
+            .filter(|(s, _)| {
+                matches!(**s, FaultSite::Hidden { layer: l, load: d, replica: Some(_) }
+                    if l == layer && d == load)
+            })
+            .count()
     }
 
     /// Reshape the physical state to `next` (already validated by the
@@ -1600,6 +1677,262 @@ impl<'m> MacroPool<'m> {
         st.plan = next;
         cost
     }
+
+    // --- fleet health: supervision ladder + canary-gated re-admission ---
+
+    /// Snapshot of the macro health ladder (operator / metrics view).
+    pub fn health_registry(&self) -> HealthRegistry {
+        self.resident
+            .as_ref()
+            .map_or_else(HealthRegistry::default, |r| {
+                r.health_reg.lock().unwrap().clone()
+            })
+    }
+
+    /// Macros currently written off and awaiting operator re-admission.
+    pub fn health_quarantined(&self) -> usize {
+        self.resident
+            .as_ref()
+            .map_or(0, |r| r.health_reg.lock().unwrap().quarantined())
+    }
+
+    /// Record one clean scrub lap over `site` (`Suspect` → `Healthy`).
+    pub fn health_lap_clean(&self, site: &FaultSite) {
+        if let Some(r) = &self.resident {
+            let now = self.stream_cursor.load(Ordering::Relaxed);
+            r.health_reg.lock().unwrap().mark_clean(*site, now);
+        }
+    }
+
+    /// Per-load health in planner shape (`hidden[layer][load]`), worst
+    /// state wins per load: the load-level ladder entry carries
+    /// `Healthy`/`Suspect`, quarantine ordinals carry
+    /// `Quarantined`/`Probation`/`Readmitted`.  A load with written-off
+    /// silicon stays penalized until the operator re-admits it and the
+    /// canary laps pass — which is exactly what steers re-plans toward
+    /// recovered capacity.  `quarantined_macros` shrinks the planner
+    /// budget by the held-out silicon.
+    pub fn health_scores(&self) -> HealthScores {
+        let hidden_plans = &self.plans[..self.plans.len() - 1];
+        let mut hidden: Vec<Vec<HealthState>> = hidden_plans
+            .iter()
+            .map(|p| vec![HealthState::Healthy; p.len()])
+            .collect();
+        let mut quarantined_macros = 0;
+        if let Some(r) = &self.resident {
+            // severity rank — the enum's declaration order is not one
+            let rank = |s: HealthState| match s {
+                HealthState::Healthy => 0,
+                HealthState::Readmitted => 1,
+                HealthState::Suspect => 2,
+                HealthState::Probation => 3,
+                HealthState::Quarantined => 4,
+            };
+            let reg = r.health_reg.lock().unwrap();
+            for (site, h) in reg.iter() {
+                if h.state == HealthState::Quarantined {
+                    quarantined_macros += 1;
+                }
+                let FaultSite::Hidden { layer, load, .. } = *site else {
+                    continue;
+                };
+                let Some(cell) = hidden.get_mut(layer).and_then(|l| l.get_mut(load)) else {
+                    continue;
+                };
+                if rank(h.state) > rank(*cell) {
+                    *cell = h.state;
+                }
+            }
+        }
+        HealthScores {
+            hidden,
+            quarantined_macros,
+        }
+    }
+
+    /// Operator re-admission of a written-off macro on hidden load
+    /// (`layer`, `load`): builds an identically-seeded side-array,
+    /// programs the load into it, and parks it on probation — zero
+    /// serving traffic until [`Self::probation_scrub`] credits the
+    /// required consecutive clean canary laps.  Re-admits the lowest
+    /// quarantined ordinal first.  Returns `false` when nothing on that
+    /// load is quarantined (or the pool runs in reload mode).
+    pub fn un_quarantine(&self, layer: usize, load: usize) -> bool {
+        let Some(resident) = &self.resident else {
+            return false;
+        };
+        if layer + 1 >= self.plans.len() || load >= self.plans[layer].len() {
+            return false;
+        }
+        let now = self.stream_cursor.load(Ordering::Relaxed);
+        let site = {
+            let mut reg = resident.health_reg.lock().unwrap();
+            let Some(site) = reg
+                .iter()
+                .find(|(s, h)| {
+                    h.state == HealthState::Quarantined
+                        && matches!(**s, FaultSite::Hidden { layer: l, load: d, replica: Some(_) }
+                            if l == layer && d == load)
+                })
+                .map(|(s, _)| *s)
+            else {
+                return false;
+            };
+            reg.un_quarantine(site, now);
+            site
+        };
+        // identical seeding: the probation macro is bit-identical to the
+        // replica a never-faulted pool would hold for this load
+        let lay = &self.model.layers[layer];
+        let cfg = CamConfig::fitting(lay.seg_width)
+            .unwrap_or_else(|| panic!("word width {} unsupported", lay.seg_width));
+        let mut cam = fresh_cam(&self.opts, cfg, self.hidden_seed_index(layer, load));
+        program_load_into(&mut cam, lay, &self.plans[layer][load]);
+        cam.set_voltages(self.hidden_points[layer].voltages);
+        resident.probation.lock().unwrap().push(ProbationSlot {
+            layer,
+            load,
+            site,
+            cam,
+            row: 0,
+        });
+        true
+    }
+
+    /// Canary-lap every probation macro: read-verify each row against
+    /// the golden mapping plus the fires / must-not-fire canary pair —
+    /// strictly, with no retry and no repair; probation silicon has to
+    /// prove itself, not be nursed.  Any anomaly fails the probation
+    /// (re-quarantined, lap requirement doubled).  A slot earns at most
+    /// one lap credit per call, so `required_laps` means that many
+    /// consecutive clean maintenance turns.  Completing the requirement
+    /// re-admits the macro as a live serving replica of its load
+    /// (bit-identical to a never-faulted copy, by identical seeding).
+    /// The canary patterns sit far outside the metastable band, so the
+    /// pass is deterministic in both noise modes.
+    pub fn probation_scrub(&self, rows_budget: usize, rng: &mut Rng) -> ProbationDelta {
+        let Some(resident) = &self.resident else {
+            return ProbationDelta::default();
+        };
+        let mut delta = ProbationDelta::default();
+        let mut budget = rows_budget;
+        let mut failed: Vec<FaultSite> = Vec::new();
+        let mut lap_done: Vec<FaultSite> = Vec::new();
+        {
+            let mut slots = resident.probation.lock().unwrap();
+            for slot in slots.iter_mut() {
+                let lay = &self.model.layers[slot.layer];
+                let ld = &self.plans[slot.layer][slot.load];
+                let rows = ld.neuron_hi - ld.neuron_lo;
+                let width = slot.cam.config().width();
+                let mut m = Vec::new();
+                let mut fires = Vec::new();
+                let mut fires_at = |cam: &mut CamArray, q: &BitVec, r: usize, rng: &mut Rng| {
+                    cam.search_into_rng(q, &mut m, &mut fires, rng);
+                    fires.get(r).copied().unwrap_or(false)
+                };
+                while budget > 0 {
+                    budget -= 1;
+                    delta.rows_checked += 1;
+                    let r = slot.row;
+                    let golden = fit_width(&program_row(lay, ld.seg, ld.neuron_lo + r), width);
+                    let stored_ok = slot
+                        .cam
+                        .read_row(r)
+                        .is_some_and(|s| s.words() == golden.words());
+                    let mut anti = golden.clone();
+                    for c in 0..width {
+                        anti.flip(c);
+                    }
+                    let ok = stored_ok
+                        && fires_at(&mut slot.cam, &golden, r, rng)
+                        && !fires_at(&mut slot.cam, &anti, r, rng);
+                    if !ok {
+                        failed.push(slot.site);
+                        break;
+                    }
+                    slot.row += 1;
+                    if slot.row >= rows {
+                        slot.row = 0;
+                        lap_done.push(slot.site);
+                        break; // one lap credit per maintenance turn
+                    }
+                }
+                if budget == 0 {
+                    break;
+                }
+            }
+            slots.retain(|s| !failed.contains(&s.site));
+        }
+        let now = self.stream_cursor.load(Ordering::Relaxed);
+        let mut readmit: Vec<FaultSite> = Vec::new();
+        {
+            let mut reg = resident.health_reg.lock().unwrap();
+            for site in &failed {
+                reg.probation_failed(*site, now);
+                delta.failures += 1;
+            }
+            for site in &lap_done {
+                delta.laps += 1;
+                if reg.canary_lap_passed(*site, now) {
+                    readmit.push(*site);
+                }
+            }
+        }
+        if !readmit.is_empty() {
+            let mut graduating = Vec::new();
+            {
+                let mut slots = resident.probation.lock().unwrap();
+                let mut i = 0;
+                while i < slots.len() {
+                    if readmit.contains(&slots[i].site) {
+                        graduating.push(slots.remove(i));
+                    } else {
+                        i += 1;
+                    }
+                }
+            }
+            for p in graduating {
+                self.attach_readmitted(resident, p);
+                delta.readmitted += 1;
+            }
+        }
+        delta
+    }
+
+    /// Attach a re-admitted probation macro to its load as a live
+    /// serving replica.  If the load had cold-spilled (last copy
+    /// quarantined), this converts it back to resident; the plan's
+    /// replica count and budget are updated in place so the next
+    /// re-plan diffs from reality.
+    fn attach_readmitted(&self, resident: &Resident, p: ProbationSlot) {
+        let mut st = resident.state.write().unwrap();
+        let slot = st.hidden_slots[p.layer][p.load].get_or_insert_with(|| LoadSlots {
+            replicas: Vec::new(),
+            next: AtomicUsize::new(0),
+        });
+        slot.replicas.push(Mutex::new(p.cam));
+        let n = slot.replicas.len();
+        st.plan.hidden_replicas[p.layer][p.load] = n;
+        let used = st.plan.macros_used();
+        if st.plan.budget < used {
+            st.plan.budget = used;
+        }
+    }
+}
+
+/// What one [`MacroPool::probation_scrub`] pass accomplished (merged
+/// into the scrub controller's stats).
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub struct ProbationDelta {
+    /// Canary rows checked across all probation macros.
+    pub rows_checked: u64,
+    /// Clean full laps credited.
+    pub laps: u64,
+    /// Macros that completed probation and rejoined serving.
+    pub readmitted: u64,
+    /// Probations failed (macro re-quarantined with doubled requirement).
+    pub failures: u64,
 }
 
 /// Multi-tenant pool: N models served from one macro budget.
@@ -1682,6 +2015,7 @@ impl<'m> MultiPool<'m> {
                     schedule_points: point_classes(&schedule),
                     traffic: hist(t),
                     share: resolved_shares[t],
+                    health: None,
                 }
             })
             .collect();
@@ -1741,6 +2075,14 @@ impl<'m> MultiPool<'m> {
     /// The tenant's backing single-model pool (plan, mode, diagnostics).
     pub fn tenant(&self, t: usize) -> &MacroPool<'m> {
         &self.tenants[t]
+    }
+
+    /// Operator re-admission of a quarantined macro in one tenant's
+    /// pool ([`MacroPool::un_quarantine`]): the macro goes on probation
+    /// there; the next re-partition sees it through that tenant's
+    /// health scores.
+    pub fn un_quarantine(&self, tenant: usize, layer: usize, load: usize) -> bool {
+        self.tenants[tenant].un_quarantine(layer, load)
     }
 
     /// The budget partition (`None` when the floors didn't fit and the
@@ -1874,6 +2216,9 @@ impl<'m> MultiPool<'m> {
                 schedule_points: p.schedule_points(),
                 traffic: hists[t].as_deref(),
                 share: self.shares[t],
+                // sitting tenants re-plan around their quarantined and
+                // probation silicon; recovered capacity pulls load back
+                health: Some(p.health_scores()),
             })
             .collect();
         if let Some((m, share)) = incoming {
@@ -1884,6 +2229,7 @@ impl<'m> MultiPool<'m> {
                 schedule_points: point_classes(&schedule),
                 traffic: None, // no history yet
                 share,
+                health: None, // fresh silicon
             });
         }
         match planner::plan_tenants(&specs, self.budget, self.workers) {

@@ -1,10 +1,11 @@
 //! L3 accelerator coordination: voltage calibration (Table I), the
 //! Algorithm-1 inference pipeline, the capacity-aware placement planner
 //! (single-model and multi-tenant), the multi-macro resident execution
-//! pools, request batching, scrub-and-repair self-healing, and accuracy
-//! metrics.
+//! pools, request batching, scrub-and-repair self-healing with
+//! fleet-wide health supervision, and accuracy metrics.
 
 pub mod batcher;
+pub mod fleet;
 pub mod macro_pool;
 pub mod metrics;
 pub mod parallel;
@@ -15,11 +16,16 @@ pub mod scrub;
 pub mod voltage;
 
 pub use batcher::{BatchPolicy, Batcher, Request};
-pub use macro_pool::{MacroPool, MigrationStats, MultiPool, PoolMode, DEFAULT_POOL_MACROS};
+pub use fleet::{FleetConfig, FleetMaintenance};
+pub use macro_pool::{
+    MacroPool, MigrationStats, MultiPool, PoolMode, ProbationDelta, DEFAULT_POOL_MACROS,
+};
 pub use metrics::{evaluate, Accuracy};
 pub use parallel::{classify_parallel, classify_parallel_with_budget};
 pub use pipeline::{CategoryCost, Pipeline, PipelineOptions, RunStats};
-pub use planner::{MigrationPlan, MigrationStep, PlacementPlan, TenantPlan, TenantSpec};
+pub use planner::{
+    HealthScores, MigrationPlan, MigrationStep, PlacementPlan, TenantPlan, TenantSpec,
+};
 pub use replan::{ReplanConfig, ReplanController};
 pub use scrub::{
     DetectedBy, FaultReport, RepairAction, ScrubConfig, ScrubController, ScrubStats,

@@ -60,6 +60,48 @@
 //! programming; spill plans additionally reprogram each spilled load (and
 //! re-land the output rows in the funnel once); the reload `Pipeline`
 //! pays `K` output retunes plus a full reprogram of every hidden load.
+//!
+//! **Health-aware planning** ([`HealthScores`]): the pool's fleet
+//! supervisor (`cam::faults::HealthRegistry`) feeds the planner a
+//! per-load health summary.  Quarantined macros are *held out of the
+//! budget* — a re-plan never places pins or replicas on written-off
+//! capacity — and penalized loads (Suspect) receive surplus replicas
+//! only after every healthy load is saturated, while loads with a copy
+//! on probation receive none at all: their capacity comes back through
+//! canary-gated re-admission, not by re-buying macros.  `None` (or a
+//! nominal score) plans exactly as before, bit for bit.
+
+use crate::cam::HealthState;
+
+/// Per-macro health summary the planner scores against, produced by
+/// `MacroPool::health_scores` from its `HealthRegistry`.
+#[derive(Clone, Debug, Default, PartialEq, Eq)]
+pub struct HealthScores {
+    /// Worst live-copy health per hidden (layer, load), shaped exactly
+    /// like `hidden_load_rows`.  Empty = every load nominal.
+    pub hidden: Vec<Vec<HealthState>>,
+    /// Physical macros currently written off (quarantined copies
+    /// awaiting canary-gated re-admission): held out of the usable
+    /// budget so a plan never re-buys them.
+    pub quarantined_macros: usize,
+}
+
+impl HealthScores {
+    /// Health of hidden load (`li`, `di`); out-of-shape = `Healthy`.
+    fn state(&self, li: usize, di: usize) -> HealthState {
+        self.hidden
+            .get(li)
+            .and_then(|layer| layer.get(di))
+            .copied()
+            .unwrap_or_default()
+    }
+
+    /// Whether the score changes nothing (every load healthy, nothing
+    /// quarantined) — callers may skip a re-plan on nominal health.
+    pub fn is_nominal(&self) -> bool {
+        self.quarantined_macros == 0 && self.hidden.iter().flatten().all(|h| !h.penalized())
+    }
+}
 
 /// How a macro budget is spent on one model: replicas per hidden load,
 /// pinned output operating points, and LRU-shared output slots.
@@ -107,19 +149,23 @@ pub fn plan(
     workers: usize,
 ) -> Option<PlacementPlan> {
     let points: Vec<usize> = (0..schedule_len).collect();
-    plan_traffic(hidden_load_rows, &points, None, budget, workers)
+    plan_traffic(hidden_load_rows, &points, None, None, budget, workers)
 }
 
 /// The traffic-aware planner core.  `schedule_points[k]` is the
 /// operating-point class of schedule position `k` (positions with equal
 /// class share one calibrated triple); `traffic[k]` is the measured (or
 /// assumed) access count of position `k` per batch — `None` means
-/// uniform.  Pinning is hottest-point-first; ties break toward the
-/// earliest schedule position so plans are deterministic.
+/// uniform.  `health` is the pool's per-macro health summary (`None` =
+/// nominal): quarantined macros shrink the usable budget and penalized
+/// loads are last in line for surplus replicas (module docs).  Pinning
+/// is hottest-point-first; ties break toward the earliest schedule
+/// position so plans are deterministic.
 pub fn plan_traffic(
     hidden_load_rows: &[Vec<usize>],
     schedule_points: &[usize],
     traffic: Option<&[u64]>,
+    health: Option<&HealthScores>,
     budget: usize,
     workers: usize,
 ) -> Option<PlacementPlan> {
@@ -131,6 +177,18 @@ pub fn plan_traffic(
     if let Some(t) = traffic {
         assert_eq!(t.len(), schedule_len, "one traffic count per position");
     }
+    if let Some(h) = health {
+        if !h.hidden.is_empty() {
+            let shape: Vec<usize> = hidden_load_rows.iter().map(Vec::len).collect();
+            let hshape: Vec<usize> = h.hidden.iter().map(Vec::len).collect();
+            assert_eq!(shape, hshape, "one health state per hidden load");
+        }
+    }
+    // quarantined macros are unusable capacity: held out of the budget,
+    // so the plan below never places pins or replicas on them and a
+    // drained budget degrades through cold-spill / `None` exactly like
+    // a genuinely smaller pool
+    let budget = budget.saturating_sub(health.map_or(0, |h| h.quarantined_macros));
     let hidden: usize = hidden_load_rows.iter().map(Vec::len).sum();
     let min_output = schedule_len.min(1);
     let spill = budget < hidden + min_output;
@@ -141,8 +199,10 @@ pub fn plan_traffic(
     let (mut hidden_replicas, resident_hidden) = if spill {
         // cold-spill: keep the hottest budget−1 loads resident (largest
         // row count = most expensive to reprogram), run the rest through
-        // the shared funnel slot per batch
-        let mut order: Vec<(usize, usize)> = load_order(hidden_load_rows);
+        // the shared funnel slot per batch.  Penalized loads sort after
+        // healthy ones, so a Suspect load spills preferentially — its
+        // traffic moves off the suspect macro and into the funnel.
+        let mut order: Vec<(usize, usize)> = load_order_health(hidden_load_rows, health);
         order.truncate(budget - 1);
         let mut replicas: Vec<Vec<usize>> = hidden_load_rows
             .iter()
@@ -216,19 +276,34 @@ pub fn plan_traffic(
     let cap = workers.max(1);
     let mut surplus = budget - resident_hidden - pinned - shared_slots;
     if !spill && surplus > 0 && hidden > 0 && cap > 1 {
-        // replicate hottest-first: largest loads hold their lock longest
-        let order = load_order(hidden_load_rows);
-        let mut cursor = 0usize;
-        let mut at_cap = 0usize;
-        while surplus > 0 && at_cap < order.len() {
-            let (li, di) = order[cursor % order.len()];
-            cursor += 1;
-            if hidden_replicas[li][di] < cap {
-                hidden_replicas[li][di] += 1;
-                surplus -= 1;
-                at_cap = 0;
-            } else {
-                at_cap += 1;
+        // replicate hottest-first: largest loads hold their lock longest.
+        // Health partitions the round-robin: healthy/readmitted loads
+        // saturate first, Suspect loads absorb only what is left, and
+        // loads with a copy quarantined or on probation receive no
+        // surplus at all — their capacity comes back through canary-
+        // gated re-admission, not by re-buying macros.
+        let mut good: Vec<(usize, usize)> = Vec::new();
+        let mut shaky: Vec<(usize, usize)> = Vec::new();
+        for (li, di) in load_order(hidden_load_rows) {
+            match health.map_or(HealthState::Healthy, |h| h.state(li, di)) {
+                HealthState::Healthy | HealthState::Readmitted => good.push((li, di)),
+                HealthState::Suspect => shaky.push((li, di)),
+                HealthState::Quarantined | HealthState::Probation => {}
+            }
+        }
+        for group in [good, shaky] {
+            let mut cursor = 0usize;
+            let mut at_cap = 0usize;
+            while surplus > 0 && at_cap < group.len() {
+                let (li, di) = group[cursor % group.len()];
+                cursor += 1;
+                if hidden_replicas[li][di] < cap {
+                    hidden_replicas[li][di] += 1;
+                    surplus -= 1;
+                    at_cap = 0;
+                } else {
+                    at_cap += 1;
+                }
             }
         }
     }
@@ -257,6 +332,20 @@ fn load_order(hidden_load_rows: &[Vec<usize>]) -> Vec<(usize, usize)> {
         .flat_map(|(li, layer)| (0..layer.len()).map(move |di| (li, di)))
         .collect();
     order.sort_by_key(|&(li, di)| std::cmp::Reverse(hidden_load_rows[li][di]));
+    order
+}
+
+/// [`load_order`] with penalized loads sunk to the back (stable, so the
+/// descending-row order survives within each health group).  With no
+/// health score this is exactly `load_order`.
+fn load_order_health(
+    hidden_load_rows: &[Vec<usize>],
+    health: Option<&HealthScores>,
+) -> Vec<(usize, usize)> {
+    let mut order = load_order(hidden_load_rows);
+    if let Some(h) = health {
+        order.sort_by_key(|&(li, di)| h.state(li, di).penalized());
+    }
     order
 }
 
@@ -856,6 +945,11 @@ pub struct TenantSpec<'t> {
     /// Relative batch-traffic share of this tenant (surplus allotment);
     /// non-positive shares are treated as equal weight.
     pub share: f64,
+    /// Per-macro health of this tenant's pool (`None` = nominal).  Its
+    /// quarantined count inflates the tenant's floor and cap so the
+    /// allocation covers the held-out macros, and the per-tenant plan
+    /// applies the same penalties as [`plan_traffic`].
+    pub health: Option<HealthScores>,
 }
 
 impl TenantSpec<'_> {
@@ -919,10 +1013,18 @@ impl TenantPlan {
 /// to the lowest tenant index), capped at each tenant's
 /// [`TenantSpec::max_useful_budget`].
 pub fn plan_tenants(specs: &[TenantSpec<'_>], budget: usize, workers: usize) -> Option<TenantPlan> {
-    let mins: Vec<usize> = specs.iter().map(TenantSpec::min_budget).collect();
+    // quarantined macros are dead weight inside a tenant's sub-budget:
+    // inflate its floor and cap by that count so the share it receives
+    // buys the same usable capacity a healthy tenant would get
+    let quarantined =
+        |s: &TenantSpec| s.health.as_ref().map_or(0, |h| h.quarantined_macros);
+    let mins: Vec<usize> = specs
+        .iter()
+        .map(|s| s.min_budget() + quarantined(s))
+        .collect();
     let maxs: Vec<usize> = specs
         .iter()
-        .map(|s| s.max_useful_budget(workers))
+        .map(|s| s.max_useful_budget(workers) + quarantined(s))
         .collect();
     let floor: usize = mins.iter().sum();
     if floor > budget {
@@ -965,6 +1067,7 @@ pub fn plan_tenants(specs: &[TenantSpec<'_>], budget: usize, workers: usize) -> 
                 &s.hidden_load_rows,
                 &s.schedule_points,
                 s.traffic,
+                s.health.as_ref(),
                 b,
                 workers,
             )
@@ -1116,7 +1219,7 @@ mod tests {
         let points = vec![0, 0, 0, 0, 0, 0, 0, 0, 1, 2, 3, 4];
         let rows = vec![vec![64]];
         // budget 4 → output budget 3 → pin 2 points + 1 funnel
-        let p = plan_traffic(&rows, &points, None, 4, 1).unwrap();
+        let p = plan_traffic(&rows, &points, None, None, 4, 1).unwrap();
         assert_eq!(p.pinned, 2);
         // the heavy point (weight 8) and the earliest unit point pin
         assert_eq!(p.pin_slot[0], Some(0), "heavy point pinned");
@@ -1133,7 +1236,7 @@ mod tests {
         // position 11 the hot one
         let mut traffic = vec![1u64; 12];
         traffic[11] = 100;
-        let p = plan_traffic(&rows, &points, Some(&traffic), 3, 1).unwrap();
+        let p = plan_traffic(&rows, &points, Some(&traffic), None, 3, 1).unwrap();
         assert_eq!(p.pinned, 1);
         assert_eq!(p.pin_slot[11], Some(0), "measured-hot point pinned first");
     }
@@ -1144,8 +1247,8 @@ mod tests {
         // yields an empty histogram — that must plan exactly like the
         // uniform default, never panic on a length mismatch
         let points = vec![0, 1, 2, 3];
-        let uniform = plan_traffic(&[vec![64]], &points, None, 3, 1).unwrap();
-        let empty = plan_traffic(&[vec![64]], &points, Some(&[]), 3, 1).unwrap();
+        let uniform = plan_traffic(&[vec![64]], &points, None, None, 3, 1).unwrap();
+        let empty = plan_traffic(&[vec![64]], &points, Some(&[]), None, 3, 1).unwrap();
         assert_eq!(uniform, empty);
     }
 
@@ -1154,7 +1257,7 @@ mod tests {
         // full pinning of 3 distinct points over 6 positions costs 3
         // macros, not 6
         let points = vec![0, 1, 0, 2, 1, 0];
-        let p = plan_traffic(&[vec![64]], &points, None, 1 + 3, 1).unwrap();
+        let p = plan_traffic(&[vec![64]], &points, None, None, 1 + 3, 1).unwrap();
         assert_eq!(p.pinned, 3);
         assert_eq!(p.shared_slots, 0);
         assert_eq!(p.pinned_positions(), 6);
@@ -1190,8 +1293,8 @@ mod tests {
         let points: Vec<usize> = (0..6).collect();
         let hot_lo = [9u64, 9, 9, 1, 1, 1];
         let hot_hi = [1u64, 1, 1, 9, 9, 9];
-        let old = plan_traffic(&rows, &points, Some(&hot_lo), 4, 1).unwrap();
-        let new = plan_traffic(&rows, &points, Some(&hot_hi), 4, 1).unwrap();
+        let old = plan_traffic(&rows, &points, Some(&hot_lo), None, 4, 1).unwrap();
+        let new = plan_traffic(&rows, &points, Some(&hot_hi), None, 4, 1).unwrap();
         let mp = old.diff(&new);
         assert_eq!(
             mp.steps,
@@ -1293,12 +1396,82 @@ mod tests {
         assert_eq!(up.target(&small), big);
     }
 
+    fn health(hidden: Vec<Vec<HealthState>>, quarantined: usize) -> HealthScores {
+        HealthScores {
+            hidden,
+            quarantined_macros: quarantined,
+        }
+    }
+
+    #[test]
+    fn quarantined_macros_are_held_out_of_the_budget() {
+        let rows = vec![vec![64, 64], vec![16]];
+        // 2 quarantined macros: a budget of 38 buys exactly what a
+        // healthy budget of 36 would — nothing lands on dead capacity
+        let h = health(Vec::new(), 2);
+        let p = plan_traffic(&rows, &(0..33).collect::<Vec<_>>(), None, Some(&h), 38, 4).unwrap();
+        let base = plan(&rows, 33, 36, 4).unwrap();
+        assert_eq!(p, base);
+        assert!(p.macros_used() <= 38 - 2);
+        // nominal health plans bit-identically to no health at all
+        let nominal = health(vec![vec![HealthState::Healthy; 2], vec![HealthState::Healthy]], 0);
+        assert!(nominal.is_nominal());
+        let p = plan_traffic(&rows, &(0..33).collect::<Vec<_>>(), None, Some(&nominal), 36, 4)
+            .unwrap();
+        assert_eq!(p, base);
+        // when the held-out capacity leaves less than the spill floor,
+        // the plan is infeasible — never silently placed on dead macros
+        let h = health(Vec::new(), 3);
+        assert!(plan_traffic(&rows, &(0..33).collect::<Vec<_>>(), None, Some(&h), 4, 1).is_none());
+    }
+
+    #[test]
+    fn health_penalty_steers_replicas_toward_healthy_loads() {
+        // two loads, two distinct points, 1 surplus macro, 2 workers:
+        // healthy planning replicates the hottest (64-row) load
+        let rows = vec![vec![64, 48]];
+        let points = vec![0, 1];
+        let base = plan_traffic(&rows, &points, None, None, 5, 2).unwrap();
+        assert_eq!(base.hidden_replicas, vec![vec![2, 1]]);
+        // with the hot load Suspect, the replica goes to the healthy one
+        let h = health(vec![vec![HealthState::Suspect, HealthState::Healthy]], 0);
+        let p = plan_traffic(&rows, &points, None, Some(&h), 5, 2).unwrap();
+        assert_eq!(p.hidden_replicas, vec![vec![1, 2]]);
+        // a load with a copy on probation takes no surplus at all, even
+        // with budget to burn: its capacity returns via re-admission
+        let h = health(vec![vec![HealthState::Probation, HealthState::Healthy]], 0);
+        let p = plan_traffic(&rows, &points, None, Some(&h), 10, 2).unwrap();
+        assert_eq!(p.hidden_replicas, vec![vec![1, 2]]);
+        // once every healthy load is worker-capped, a Suspect load may
+        // still absorb leftover surplus (penalized, not excluded)
+        let h = health(vec![vec![HealthState::Suspect, HealthState::Healthy]], 0);
+        let p = plan_traffic(&rows, &points, None, Some(&h), 6, 2).unwrap();
+        assert_eq!(p.hidden_replicas, vec![vec![2, 2]]);
+    }
+
+    #[test]
+    fn suspect_loads_spill_before_healthy_ones() {
+        // budget 3 keeps 2 of 4 loads resident; normally the two hottest
+        // (64, 48) stay.  Marking the hottest Suspect spills it instead.
+        let rows = vec![vec![64, 16], vec![48, 8]];
+        let h = health(
+            vec![
+                vec![HealthState::Suspect, HealthState::Healthy],
+                vec![HealthState::Healthy, HealthState::Healthy],
+            ],
+            0,
+        );
+        let p = plan_traffic(&rows, &[0, 1, 2, 3], None, Some(&h), 3, 1).unwrap();
+        assert_eq!(p.hidden_replicas, vec![vec![0, 1], vec![1, 0]]);
+    }
+
     fn spec(rows: Vec<Vec<usize>>, sched: usize, share: f64) -> TenantSpec<'static> {
         TenantSpec {
             hidden_load_rows: rows,
             schedule_points: (0..sched).collect(),
             traffic: None,
             share,
+            health: None,
         }
     }
 

@@ -178,10 +178,16 @@ impl ReplanController {
             .plan()
             .expect("controller pools stay resident")
             .repriced(Some(&hist));
+        // health-aware candidate: quarantined macros stay out of the
+        // budget and penalized loads out of the replica surplus, so a
+        // re-plan migrates load toward recovered capacity as macros are
+        // readmitted (the score goes nominal again)
+        let health = pool.health_scores();
         let cand = match planner::plan_traffic(
             &rows,
             &pool.schedule_points(),
             Some(&hist),
+            Some(&health),
             self.budget,
             self.cfg.workers,
         ) {

@@ -46,6 +46,16 @@
 //!    healthy pool is invisible to predictions.  Given the same seed,
 //!    fault plan, and workload trace, the reports, repair schedule, and
 //!    predictions replay bit-identically (property-tested).
+//!
+//! 5. **Re-admission.**  Recovery is operator-gated, never silent:
+//!    [`super::MacroPool::un_quarantine`] puts a replaced macro on
+//!    probation as an identically-seeded side-array carrying zero load,
+//!    and every maintenance turn canary-laps it
+//!    ([`super::MacroPool::probation_scrub`]).  Passing the required
+//!    consecutive clean laps re-admits it as a live replica — the only
+//!    transition that lifts [`DegradedMode::Failover`] back to
+//!    `Nominal` — while any canary failure re-quarantines it with the
+//!    lap requirement doubled (`cam::faults` health ladder).
 
 use crate::cam::faults::{DegradedMode, FaultSite};
 use crate::util::rng::Rng;
@@ -117,6 +127,12 @@ pub struct ScrubStats {
     pub quarantines: u64,
     /// Detections with no remaining repair path.
     pub unrepairable: u64,
+    /// Clean canary laps credited to probation macros.
+    pub probation_laps: u64,
+    /// Probation macros re-admitted into serving.
+    pub readmissions: u64,
+    /// Probations failed (macro re-quarantined, requirement doubled).
+    pub probation_failures: u64,
 }
 
 impl ScrubStats {
@@ -127,6 +143,9 @@ impl ScrubStats {
         self.rebuilds += other.rebuilds;
         self.quarantines += other.quarantines;
         self.unrepairable += other.unrepairable;
+        self.probation_laps += other.probation_laps;
+        self.readmissions += other.readmissions;
+        self.probation_failures += other.probation_failures;
     }
 }
 
@@ -176,9 +195,16 @@ pub struct ScrubController {
     stats: ScrubStats,
     /// Reports not yet drained by [`Self::take_reports`].
     reports: Vec<FaultReport>,
-    /// Sticky degradation rung (never improves on its own: a quarantined
-    /// replica stays gone until an operator intervenes).
+    /// Sticky degradation rung.  It never improves on its own while a
+    /// macro is written off; it lifts back to `Nominal` only when the
+    /// last quarantined macro completes operator-initiated probation
+    /// ([`MacroPool::un_quarantine`]) — never silently.
     mode: DegradedMode,
+    /// Full cursor laps over the site list (fairness accounting).
+    laps: u64,
+    /// A detection named the cursor site since the cursor entered it —
+    /// blocks the clean-lap health credit for that site.
+    cursor_dirty: bool,
 }
 
 impl ScrubController {
@@ -194,6 +220,8 @@ impl ScrubController {
             stats: ScrubStats::default(),
             reports: Vec::new(),
             mode: DegradedMode::Nominal,
+            laps: 0,
+            cursor_dirty: false,
         }
     }
 
@@ -203,6 +231,14 @@ impl ScrubController {
     /// *this turn* (the serving engine feeds it to `ServerMetrics`);
     /// cumulative counters accrue in [`Self::stats`].
     pub fn maintain(&mut self, pool: &MacroPool<'_>) -> ScrubStats {
+        self.maintain_budgeted(pool, self.cfg.rows_per_turn)
+    }
+
+    /// [`Self::maintain`] with an explicit row budget for this turn —
+    /// the seam the fleet supervisor meters shared maintenance through
+    /// (`super::fleet`): the configured `rows_per_turn` becomes a
+    /// per-lane quantum instead of a constant.
+    pub fn maintain_budgeted(&mut self, pool: &MacroPool<'_>, rows_budget: usize) -> ScrubStats {
         let mut delta = ScrubStats::default();
         // a migration moving capacity off a quarantined macro consumes
         // the whole turn, mirroring the re-planning controller: no gap
@@ -220,21 +256,30 @@ impl ScrubController {
             return delta; // reload pool: nothing resident to scrub
         }
         let before = self.reports.len();
-        let mut budget = self.cfg.rows_per_turn;
+        let mut budget = rows_budget;
         // `visited` bounds the walk to one lap even if every site is
         // void (e.g. the placement shrank under the cursor)
         let mut visited = 0;
         while budget > 0 && visited <= sites.len() {
             if self.site >= sites.len() {
                 self.site = 0;
+                self.laps += 1;
             }
             let g = &sites[self.site];
             if self.row >= g.rows {
+                // the cursor cleared the whole site: credit the health
+                // ladder (Suspect → Healthy) unless a detection landed
+                // somewhere in this traversal
+                if !self.cursor_dirty {
+                    pool.health_lap_clean(&g.site);
+                }
+                self.cursor_dirty = false;
                 self.site += 1;
                 self.row = 0;
                 visited += 1;
                 continue;
             }
+            let reports_before = self.reports.len();
             let want = budget.min(g.rows - self.row);
             let n = pool.scrub_rows(
                 &g.site,
@@ -244,8 +289,12 @@ impl ScrubController {
                 &mut self.rng,
                 &mut self.reports,
             );
+            if self.reports[reports_before..].iter().any(|r| r.site == g.site) {
+                self.cursor_dirty = true;
+            }
             if n == 0 {
                 // site went void since the snapshot (migration raced us)
+                self.cursor_dirty = false;
                 self.site += 1;
                 self.row = 0;
                 visited += 1;
@@ -281,9 +330,31 @@ impl ScrubController {
         for (site, copy) in rebuild {
             self.escalate(pool, site, copy, &mut delta);
         }
+        // canary-lap whatever is on probation (its own equal allotment —
+        // probation work must not starve the serving-copy scrub cursor)
+        let p = pool.probation_scrub(rows_budget, &mut self.rng);
+        delta.probation_laps += p.laps;
+        delta.readmissions += p.readmitted;
+        delta.probation_failures += p.failures;
+        if p.readmitted > 0
+            && self.mode == DegradedMode::Failover
+            && pool.health_quarantined() == 0
+        {
+            // the last written-off macro just earned its way back in:
+            // the only path out of Failover, and it runs through the
+            // operator plus the full canary gate
+            self.mode = DegradedMode::Nominal;
+        }
         pool.set_degraded_mode(self.mode);
         self.stats.add(&delta);
         delta
+    }
+
+    /// Full scrub-cursor laps completed (fairness accounting: the
+    /// property tests bound the lap gap between tenants sharing a
+    /// maintenance budget).
+    pub fn laps_completed(&self) -> u64 {
+        self.laps
     }
 
     /// Escalate one copy that in-place repair gave up on: rebuild while
@@ -356,14 +427,18 @@ impl ScrubController {
     /// Re-plan within the shrunken macro budget so the placement stops
     /// leaning on the quarantined copy; `PlacementPlan::diff` emits the
     /// steps off the dying macro and they apply one per later turn.
+    /// Health-aware: the target plan spills penalized loads first and
+    /// keeps surplus replicas off Suspect/Probation silicon.
     fn launch_replan(&mut self, pool: &MacroPool<'_>) {
         let Some(cur) = pool.plan() else {
             return;
         };
+        let health = pool.health_scores();
         let target = planner::plan_traffic(
             &pool.hidden_load_rows(),
             &pool.schedule_points(),
             None,
+            Some(&health),
             cur.macros_used(),
             self.cfg.workers,
         );

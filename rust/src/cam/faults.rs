@@ -65,6 +65,30 @@
 //! (`ScrubConfig::rows_per_turn`), round-robin over every resident site,
 //! so detection latency is bounded by `total_rows / rows_per_turn` gaps
 //! while the steady-state serving path never stalls on scrubbing.
+//!
+//! ## Health state machine (fleet supervision)
+//!
+//! On top of the per-event ladder, every physical macro carries a
+//! [`HealthState`] in a [`HealthRegistry`]:
+//!
+//! ```text
+//! Healthy ──fault detected──▶ Suspect ──clean scrub lap──▶ Healthy
+//!    Suspect ──spares exhausted──▶ Quarantined
+//!    Quarantined ──operator un_quarantine──▶ Probation
+//!    Probation ──N consecutive clean canary laps──▶ Readmitted
+//!    Probation ──any canary failure──▶ Quarantined (back-off: N doubles)
+//! ```
+//!
+//! Transitions are stamped in *image-stream time* (`since_image`), the
+//! same virtual clock fault plans use, so a whole
+//! quarantine → un-quarantine → re-admission drill replays bit-exactly
+//! from its seeds — the registry never reads a wall clock.  Re-admission
+//! is **never silent**: a replaced macro must pass
+//! [`SiteHealth::required_laps`] consecutive canary laps while carrying
+//! zero load, and each probation failure doubles the requirement (capped)
+//! before the next attempt.
+
+use std::collections::BTreeMap;
 
 use crate::util::rng::Rng;
 
@@ -114,7 +138,9 @@ pub enum FaultKind {
 
 /// Which physical array a fault lands on, in the pool's logical
 /// placement coordinates (stable across re-plans of the same shape).
-#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+/// `Ord` follows the derived variant/field order — a stable total order
+/// so [`HealthRegistry`] iteration is deterministic.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, PartialOrd, Ord)]
 pub enum FaultSite {
     /// A hidden-layer load.  `replica: None` hits every identically-seeded
     /// replica the same way (the determinism drills); `Some(k)` hits one
@@ -313,6 +339,196 @@ impl ArrayFaults {
     }
 }
 
+/// Consecutive clean canary laps a probation macro must pass before
+/// re-admission, on its first attempt.  Each probation failure doubles
+/// the requirement (capped by [`PROBATION_BACKOFF_CAP`]).
+pub const DEFAULT_PROBATION_LAPS: u32 = 3;
+
+/// Back-off exponent cap: `required_laps` never exceeds
+/// `DEFAULT_PROBATION_LAPS << PROBATION_BACKOFF_CAP`.
+pub const PROBATION_BACKOFF_CAP: u32 = 6;
+
+/// Macro health ladder (transition diagram in the module docs).  The
+/// derived `Ord` ranks states by how much the planner should trust the
+/// macro: `Healthy < Suspect < Quarantined < Probation < Readmitted`
+/// is *declaration* order, so comparisons are only meaningful through
+/// [`HealthState::load_bearing`] / [`HealthState::penalized`], not `<`.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq, PartialOrd, Ord)]
+pub enum HealthState {
+    /// No open findings; full planner weight.
+    #[default]
+    Healthy,
+    /// A fault was detected and repaired within spares; the macro keeps
+    /// serving but the planner avoids adding load until a clean lap.
+    Suspect,
+    /// Written off (spares exhausted / rebuild strikes spent).  Carries
+    /// no load; its physical macro is held out of the planner budget.
+    Quarantined,
+    /// Operator re-admitted the (replaced/repaired) macro; it is
+    /// canary-lapped while carrying zero load.
+    Probation,
+    /// Passed probation; load-bearing again (planner treats it as
+    /// healthy; a new fault sends it back to `Suspect`).
+    Readmitted,
+}
+
+impl HealthState {
+    /// May the planner place load here at all?
+    pub fn load_bearing(self) -> bool {
+        matches!(self, HealthState::Healthy | HealthState::Readmitted | HealthState::Suspect)
+    }
+
+    /// Should the planner prefer other macros when it has a choice?
+    pub fn penalized(self) -> bool {
+        matches!(self, HealthState::Suspect | HealthState::Probation | HealthState::Quarantined)
+    }
+}
+
+/// Health record of one physical macro.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct SiteHealth {
+    pub state: HealthState,
+    /// Image-stream index of the last transition (virtual time — never a
+    /// wall-clock read, so drills replay bit-exactly).
+    pub since_image: u64,
+    /// Consecutive clean canary laps accumulated this probation.
+    pub canary_laps: u32,
+    /// Laps required for re-admission this probation (doubles per prior
+    /// failure, capped).
+    pub required_laps: u32,
+    /// Lifetime probation failures (drives the back-off).
+    pub probation_failures: u32,
+    /// Lifetime completed re-admissions.
+    pub readmissions: u32,
+}
+
+impl Default for SiteHealth {
+    fn default() -> Self {
+        SiteHealth {
+            state: HealthState::Healthy,
+            since_image: 0,
+            canary_laps: 0,
+            required_laps: DEFAULT_PROBATION_LAPS,
+            probation_failures: 0,
+            readmissions: 0,
+        }
+    }
+}
+
+/// Fleet-wide health supervisor: one [`SiteHealth`] per physical macro,
+/// keyed by [`FaultSite`] in a `BTreeMap` (deterministic iteration —
+/// the `no-hash-iter` rule).  All transition methods take the current
+/// image-stream index; none reads a clock.
+#[derive(Clone, Debug, Default, PartialEq, Eq)]
+pub struct HealthRegistry {
+    sites: BTreeMap<FaultSite, SiteHealth>,
+}
+
+impl HealthRegistry {
+    /// Health of `site` (absent = never touched = `Healthy`).
+    pub fn get(&self, site: &FaultSite) -> SiteHealth {
+        self.sites.get(site).copied().unwrap_or_default()
+    }
+
+    pub fn state(&self, site: &FaultSite) -> HealthState {
+        self.get(site).state
+    }
+
+    /// Deterministic (sorted-by-site) iteration over every tracked site.
+    pub fn iter(&self) -> impl Iterator<Item = (&FaultSite, &SiteHealth)> {
+        self.sites.iter()
+    }
+
+    /// Sites currently in `Quarantined` (held out of the planner budget).
+    pub fn quarantined(&self) -> usize {
+        self.sites
+            .values()
+            .filter(|h| h.state == HealthState::Quarantined)
+            .count()
+    }
+
+    /// A fault was detected at `site`.  `Healthy`/`Readmitted` →
+    /// `Suspect` (stamped); an already-`Suspect` site keeps its original
+    /// stamp; `Quarantined`/`Probation` are owned by their own
+    /// transitions and are left alone.
+    pub fn mark_suspect(&mut self, site: FaultSite, at_image: u64) {
+        let h = self.sites.entry(site).or_default();
+        if matches!(h.state, HealthState::Healthy | HealthState::Readmitted) {
+            h.state = HealthState::Suspect;
+            h.since_image = at_image;
+        }
+    }
+
+    /// A full scrub lap over `site` found nothing: `Suspect` → `Healthy`.
+    pub fn mark_clean(&mut self, site: FaultSite, at_image: u64) {
+        let h = self.sites.entry(site).or_default();
+        if h.state == HealthState::Suspect {
+            h.state = HealthState::Healthy;
+            h.since_image = at_image;
+        }
+    }
+
+    /// Write the site off (any state → `Quarantined`).  A quarantine
+    /// while on probation is routed through [`Self::probation_failed`]
+    /// so the back-off is never skipped.
+    pub fn quarantine(&mut self, site: FaultSite, at_image: u64) {
+        if self.state(&site) == HealthState::Probation {
+            self.probation_failed(site, at_image);
+            return;
+        }
+        let h = self.sites.entry(site).or_default();
+        h.state = HealthState::Quarantined;
+        h.canary_laps = 0;
+        h.since_image = at_image;
+    }
+
+    /// Operator re-admission: `Quarantined` → `Probation` with the
+    /// escalated lap requirement.  Returns `false` (no-op) from any
+    /// other state — re-admission is explicit, never implied.
+    pub fn un_quarantine(&mut self, site: FaultSite, at_image: u64) -> bool {
+        let h = self.sites.entry(site).or_default();
+        if h.state != HealthState::Quarantined {
+            return false;
+        }
+        h.state = HealthState::Probation;
+        h.canary_laps = 0;
+        h.required_laps =
+            DEFAULT_PROBATION_LAPS << h.probation_failures.min(PROBATION_BACKOFF_CAP);
+        h.since_image = at_image;
+        true
+    }
+
+    /// One clean canary lap on a probation site.  Returns `true` when
+    /// this lap completed probation (`Probation` → `Readmitted`).
+    pub fn canary_lap_passed(&mut self, site: FaultSite, at_image: u64) -> bool {
+        let h = self.sites.entry(site).or_default();
+        if h.state != HealthState::Probation {
+            return false;
+        }
+        h.canary_laps += 1;
+        if h.canary_laps >= h.required_laps {
+            h.state = HealthState::Readmitted;
+            h.readmissions += 1;
+            h.since_image = at_image;
+            return true;
+        }
+        false
+    }
+
+    /// A canary failed during probation: back to `Quarantined`, with the
+    /// lap requirement doubled for the next attempt.
+    pub fn probation_failed(&mut self, site: FaultSite, at_image: u64) {
+        let h = self.sites.entry(site).or_default();
+        if h.state != HealthState::Probation {
+            return;
+        }
+        h.state = HealthState::Quarantined;
+        h.probation_failures += 1;
+        h.canary_laps = 0;
+        h.since_image = at_image;
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -382,5 +598,96 @@ mod tests {
         let p = FaultPlan::default();
         assert!(p.is_empty());
         assert_eq!(p.first_at(), u64::MAX);
+    }
+
+    fn hidden(load: usize) -> FaultSite {
+        FaultSite::Hidden {
+            layer: 0,
+            load,
+            replica: Some(0),
+        }
+    }
+
+    #[test]
+    fn health_ladder_walks_suspect_quarantine_probation_readmit() {
+        let mut reg = HealthRegistry::default();
+        let s = hidden(0);
+        assert_eq!(reg.state(&s), HealthState::Healthy);
+        reg.mark_suspect(s, 10);
+        assert_eq!(reg.state(&s), HealthState::Suspect);
+        assert_eq!(reg.get(&s).since_image, 10);
+        // repeated detections keep the original stamp
+        reg.mark_suspect(s, 20);
+        assert_eq!(reg.get(&s).since_image, 10);
+        reg.mark_clean(s, 30);
+        assert_eq!(reg.state(&s), HealthState::Healthy);
+        reg.quarantine(s, 40);
+        assert_eq!(reg.state(&s), HealthState::Quarantined);
+        assert_eq!(reg.quarantined(), 1);
+        // re-admission is explicit: canary laps outside probation are no-ops
+        assert!(!reg.canary_lap_passed(s, 41));
+        assert!(reg.un_quarantine(s, 50));
+        assert!(!reg.un_quarantine(s, 50), "already on probation");
+        assert_eq!(reg.state(&s), HealthState::Probation);
+        assert_eq!(reg.get(&s).required_laps, DEFAULT_PROBATION_LAPS);
+        assert_eq!(reg.quarantined(), 0);
+        for lap in 0..DEFAULT_PROBATION_LAPS {
+            let done = reg.canary_lap_passed(s, 60 + u64::from(lap));
+            assert_eq!(done, lap + 1 == DEFAULT_PROBATION_LAPS);
+        }
+        assert_eq!(reg.state(&s), HealthState::Readmitted);
+        assert_eq!(reg.get(&s).readmissions, 1);
+        // a new fault on a readmitted macro restarts at Suspect
+        reg.mark_suspect(s, 70);
+        assert_eq!(reg.state(&s), HealthState::Suspect);
+    }
+
+    #[test]
+    fn probation_failure_escalates_the_lap_requirement() {
+        let mut reg = HealthRegistry::default();
+        let s = hidden(1);
+        reg.quarantine(s, 0);
+        for failures in 0..3u32 {
+            assert!(reg.un_quarantine(s, 100 + u64::from(failures)));
+            let want = DEFAULT_PROBATION_LAPS << failures;
+            assert_eq!(reg.get(&s).required_laps, want, "back-off doubles");
+            // pass all but the last required lap, then fail
+            for _ in 0..want - 1 {
+                assert!(!reg.canary_lap_passed(s, 200));
+            }
+            reg.probation_failed(s, 300);
+            assert_eq!(reg.state(&s), HealthState::Quarantined);
+            assert_eq!(reg.get(&s).canary_laps, 0);
+        }
+        // a quarantine call during probation also counts as a failure
+        assert!(reg.un_quarantine(s, 400));
+        reg.quarantine(s, 401);
+        assert_eq!(reg.get(&s).probation_failures, 4);
+        // the exponent is capped
+        let mut capped = HealthRegistry::default();
+        let c = hidden(2);
+        capped.quarantine(c, 0);
+        for _ in 0..PROBATION_BACKOFF_CAP + 8 {
+            assert!(capped.un_quarantine(c, 1));
+            capped.probation_failed(c, 2);
+        }
+        assert!(capped.un_quarantine(c, 3));
+        assert_eq!(
+            capped.get(&c).required_laps,
+            DEFAULT_PROBATION_LAPS << PROBATION_BACKOFF_CAP
+        );
+    }
+
+    #[test]
+    fn registry_iteration_is_site_ordered() {
+        let mut reg = HealthRegistry::default();
+        reg.mark_suspect(FaultSite::Output { slot: Some(1) }, 1);
+        reg.mark_suspect(hidden(3), 2);
+        reg.mark_suspect(hidden(1), 3);
+        let order: Vec<FaultSite> = reg.iter().map(|(s, _)| *s).collect();
+        assert_eq!(
+            order,
+            vec![hidden(1), hidden(3), FaultSite::Output { slot: Some(1) }]
+        );
     }
 }

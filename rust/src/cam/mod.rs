@@ -10,7 +10,8 @@ pub mod faults;
 
 pub use array::{CamArray, NoiseMode};
 pub use faults::{
-    ArrayFaults, DegradedMode, FaultEvent, FaultKind, FaultPlan, FaultSite, RailId, SiteGeometry,
-    DEFAULT_SPARE_ROWS,
+    ArrayFaults, DegradedMode, FaultEvent, FaultKind, FaultPlan, FaultSite, HealthRegistry,
+    HealthState, RailId, SiteGeometry, SiteHealth, DEFAULT_PROBATION_LAPS, DEFAULT_SPARE_ROWS,
+    PROBATION_BACKOFF_CAP,
 };
 pub use config::{CamConfig, BANK_COLS, BANK_ROWS, CAPACITY_BITS, N_BANKS};

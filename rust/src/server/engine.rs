@@ -62,8 +62,8 @@ use std::sync::{Condvar, Mutex};
 use std::time::Duration;
 
 use crate::accel::{
-    BatchPolicy, Batcher, MacroPool, MultiPool, PipelineOptions, PoolMode, ReplanConfig,
-    ReplanController, Request, RunStats, ScrubConfig, ScrubController,
+    BatchPolicy, Batcher, FleetConfig, FleetMaintenance, MacroPool, MultiPool, PipelineOptions,
+    PoolMode, ReplanConfig, ReplanController, Request, RunStats, ScrubConfig, ScrubController,
 };
 use crate::bnn::model::MappedModel;
 use crate::cam::DegradedMode;
@@ -205,6 +205,11 @@ enum MaintenanceTask {
         lane: usize,
         controller: ScrubController,
     },
+    /// Fleet-wide maintenance for a multi-tenant engine: one shared
+    /// scrub-row budget metered across every lane by deficit round-robin
+    /// (plus an optional re-planning controller per lane), per
+    /// `accel::fleet` — supersedes per-lane `Scrub`/`Replan` tasks.
+    Fleet { supervisor: FleetMaintenance },
 }
 
 /// The unified serving core (module docs).  `Server` and `MultiServer`
@@ -354,6 +359,26 @@ impl<'m> Engine<'m> {
             lane,
             controller: ScrubController::new(seed, cfg),
         });
+        self
+    }
+
+    /// Register fleet-wide maintenance on a multi-tenant engine: one
+    /// shared scrub-row budget per inter-batch gap, metered across every
+    /// lane by deficit round-robin, plus an optional re-planning
+    /// controller per resident lane (see `accel::fleet`).  Use this in
+    /// place of per-lane [`Self::with_scrub`]/[`Self::with_replan`]
+    /// chains when tenants share a gap: a fault-heavy tenant spends only
+    /// its own credit and can no longer starve its siblings' scrub
+    /// cursors.  Panics on a single-tenant engine.
+    pub fn with_fleet_maintenance(self, seed: u64, cfg: FleetConfig) -> Self {
+        let supervisor = match &self.backend {
+            Backend::Single(_) => panic!("fleet maintenance supervises a multi-tenant engine"),
+            Backend::Multi(p) => FleetMaintenance::new(p, seed, cfg),
+        };
+        self.maintenance
+            .lock()
+            .unwrap()
+            .push(MaintenanceTask::Fleet { supervisor });
         self
     }
 
@@ -557,13 +582,19 @@ impl<'m> Engine<'m> {
                     };
                     let delta = controller.maintain(pool);
                     let mut st = self.lanes[*lane].state.lock().unwrap();
-                    st.metrics.scrubbed_rows += delta.rows_scrubbed;
-                    st.metrics.faults_detected += delta.faults_detected;
-                    st.metrics.faults_repaired += delta.repairs;
-                    st.metrics.replica_rebuilds += delta.rebuilds;
-                    st.metrics.replica_quarantines += delta.quarantines;
-                    st.metrics.unrepairable += delta.unrepairable;
+                    st.metrics.add_scrub(&delta);
                     st.metrics.degraded = controller.degraded_mode();
+                }
+                MaintenanceTask::Fleet { supervisor } => {
+                    let pool = match &self.backend {
+                        Backend::Single(_) => panic!("fleet task on a single-tenant engine"),
+                        Backend::Multi(p) => p,
+                    };
+                    for (lane, delta) in supervisor.maintain(pool).iter().enumerate() {
+                        let mut st = self.lanes[lane].state.lock().unwrap();
+                        st.metrics.add_scrub(delta);
+                        st.metrics.degraded = supervisor.lane_scrub(lane).degraded_mode();
+                    }
                 }
             }
         }

@@ -7,6 +7,7 @@
 //! serving bench sizes its reservoir generously but the default cap is
 //! already exact below 4096 samples.
 
+use crate::accel::ScrubStats;
 use crate::cam::DegradedMode;
 use crate::util::stats::Summary;
 
@@ -46,14 +47,38 @@ pub struct ServerMetrics {
     /// Faults past every recovery rung (the lane refuses rather than
     /// serve silently wrong answers).
     pub unrepairable: u64,
-    /// Health of the lane's pool as of the last scrub maintenance turn
-    /// (`Nominal` → `Failover` → `Refusing`, monotone per fault).
+    /// Clean canary laps credited to macros on probation (operator
+    /// re-admitted, not yet load-bearing).
+    pub probation_laps: u64,
+    /// Probation macros that passed their canary gate and rejoined
+    /// serving as live replicas.
+    pub readmissions: u64,
+    /// Probations that failed a canary and were re-quarantined (with the
+    /// lap requirement doubled — see `cam::faults`).
+    pub probation_failures: u64,
+    /// Health of the lane's pool as of the last scrub maintenance turn.
+    /// Degradation is monotone per fault (`Nominal` → `Failover` →
+    /// `Refusing`); the one path back to `Nominal` is a re-admission
+    /// that clears the last quarantined macro.
     pub degraded: DegradedMode,
     pub latency_ms: Summary,
     pub batch_sizes: Summary,
 }
 
 impl ServerMetrics {
+    /// Fold one scrub-maintenance turn's delta into the lane counters
+    /// (the engine calls this from its maintenance hook).
+    pub fn add_scrub(&mut self, delta: &ScrubStats) {
+        self.scrubbed_rows += delta.rows_scrubbed;
+        self.faults_detected += delta.faults_detected;
+        self.faults_repaired += delta.repairs;
+        self.replica_rebuilds += delta.rebuilds;
+        self.replica_quarantines += delta.quarantines;
+        self.unrepairable += delta.unrepairable;
+        self.probation_laps += delta.probation_laps;
+        self.readmissions += delta.readmissions;
+        self.probation_failures += delta.probation_failures;
+    }
     /// Median latency [ms].  `NaN` until a request has been served — an
     /// idle server has no latency sample, and `Summary::percentile`
     /// documents the `NaN` sentinel rather than panicking; report

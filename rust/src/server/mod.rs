@@ -38,8 +38,11 @@ pub use metrics::ServerMetrics;
 use std::sync::mpsc;
 use std::time::Duration;
 
-use crate::accel::{BatchPolicy, MacroPool, MultiPool, PipelineOptions, PoolMode, RunStats};
+use crate::accel::{
+    BatchPolicy, FleetConfig, MacroPool, MultiPool, PipelineOptions, PoolMode, RunStats,
+};
 use crate::bnn::model::MappedModel;
+use crate::cam::{DegradedMode, HealthRegistry};
 use crate::util::bitops::BitVec;
 
 /// Bounded ingress depth used by [`serve_workload`]'s producer seam.
@@ -133,6 +136,25 @@ impl<'m> Server<'m> {
     }
 }
 
+/// Operator-facing per-tenant health snapshot: the lane's degradation
+/// rung, the held-out macro count, probation progress, and the full
+/// per-site health ladder (`cam::faults`) — everything the
+/// quarantine → `un_quarantine` → probation workflow needs to watch.
+#[derive(Clone, Debug)]
+pub struct TenantHealth {
+    /// Degradation rung as of the last maintenance turn.
+    pub degraded: DegradedMode,
+    /// Macros quarantined and awaiting operator re-admission.
+    pub quarantined: usize,
+    /// Lifetime re-admissions completed on this lane.
+    pub readmissions: u64,
+    /// Lifetime probation failures on this lane (each doubled the lap
+    /// requirement for its macro's next attempt).
+    pub probation_failures: u64,
+    /// Per-site health ladder of the tenant's pool.
+    pub registry: HealthRegistry,
+}
+
 /// Multi-tenant facade over the same [`Engine`]: one `MultiPool` (one
 /// macro budget shared across N models), one batcher lane and one
 /// [`ServerMetrics`] per tenant.  Requests are tenant-tagged at
@@ -174,6 +196,16 @@ impl<'m> MultiServer<'m> {
         self.engine.n_lanes()
     }
 
+    /// Attach the shared-budget maintenance supervisor (builder style):
+    /// one scrub controller per tenant lane metered by deficit
+    /// round-robin, so a fault-heavy tenant cannot starve its siblings'
+    /// scrub cursors (see `accel::fleet` and
+    /// `Engine::with_fleet_maintenance`).
+    pub fn with_fleet_maintenance(mut self, seed: u64, cfg: FleetConfig) -> Self {
+        self.engine = self.engine.with_fleet_maintenance(seed, cfg);
+        self
+    }
+
     /// The backing multi-tenant pool (plans, modes, diagnostics).
     pub fn pool(&self) -> &MultiPool<'m> {
         self.engine.multi_pool()
@@ -205,6 +237,32 @@ impl<'m> MultiServer<'m> {
     /// Snapshot of one tenant's service metrics.
     pub fn metrics(&self, tenant: usize) -> ServerMetrics {
         self.engine.lane_metrics(tenant)
+    }
+
+    /// One tenant's health snapshot (degraded rung + macro ladder).
+    pub fn health(&self, tenant: usize) -> TenantHealth {
+        let m = self.engine.lane_metrics(tenant);
+        let pool = self.engine.multi_pool().tenant(tenant);
+        TenantHealth {
+            degraded: m.degraded,
+            quarantined: pool.health_quarantined(),
+            readmissions: m.readmissions,
+            probation_failures: m.probation_failures,
+            registry: pool.health_registry(),
+        }
+    }
+
+    /// Every tenant's health snapshot, lane order.
+    pub fn health_snapshot(&self) -> Vec<TenantHealth> {
+        (0..self.n_tenants()).map(|t| self.health(t)).collect()
+    }
+
+    /// Operator re-admission of a quarantined macro in `tenant`'s pool:
+    /// it goes on probation and earns its way back through canary laps
+    /// (see `MacroPool::un_quarantine`).  Returns `false` when nothing
+    /// on that load is quarantined.
+    pub fn un_quarantine(&self, tenant: usize, layer: usize, load: usize) -> bool {
+        self.engine.multi_pool().un_quarantine(tenant, layer, load)
     }
 
     /// Clear one tenant's latency/batch-size summaries (epoch boundary).

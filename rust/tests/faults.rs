@@ -19,22 +19,30 @@
 //!   **typed refusal**, spare exhaustion on one hidden replica ends in
 //!   **quarantine + bit-exact failover**;
 //! * the whole loop holds under **concurrent serving** on the engine's
-//!   maintenance seam.
+//!   maintenance seam;
+//! * operator **re-admission** is canary-gated: a re-admitted macro
+//!   carries zero traffic through probation, passes N consecutive clean
+//!   laps, and rejoins serving **bit-exactly** (identical seeding); a
+//!   flaky macro is re-quarantined with an **escalating lap requirement**
+//!   — never silently readmitted;
+//! * the **shared fleet maintenance budget** isolates tenants: a
+//!   fault-heavy lane cannot starve a sibling's scrub cursor.
 
 use std::sync::atomic::{AtomicBool, Ordering};
 use std::sync::Mutex;
 use std::time::Duration;
 
 use picbnn::accel::{
-    BatchPolicy, MacroPool, PipelineOptions, RepairAction, ScrubConfig, ScrubController,
-    ScrubStats,
+    BatchPolicy, FleetConfig, FleetMaintenance, MacroPool, MultiPool, PipelineOptions,
+    RepairAction, ScrubConfig, ScrubController, ScrubStats,
 };
 use picbnn::bnn::mapping::program_row;
 use picbnn::bnn::model::{MappedLayer, MappedModel};
 use picbnn::cam::{
-    DegradedMode, FaultKind, FaultPlan, FaultSite, NoiseMode, RailId, DEFAULT_SPARE_ROWS,
+    DegradedMode, FaultKind, FaultPlan, FaultSite, HealthState, NoiseMode, RailId,
+    DEFAULT_PROBATION_LAPS, DEFAULT_SPARE_ROWS,
 };
-use picbnn::server::{Clock, Engine};
+use picbnn::server::{Clock, Engine, MultiServer};
 use picbnn::testkit::{forall, prop_assert, Gen};
 use picbnn::util::bitops::{BitMatrix, BitVec};
 use picbnn::util::rng::Rng;
@@ -644,5 +652,444 @@ fn concurrent_serving_heals_under_scrub() {
     for (r, (votes, pred)) in got.iter().zip(&want) {
         assert_eq!(r.prediction, *pred, "healed engine diverged from twin");
         assert_eq!(&r.votes, votes);
+    }
+}
+
+#[test]
+fn readmission_after_canary_gate_is_bit_exact() {
+    // the re-admission tentpole: quarantine one copy of a replicated
+    // hidden load, drain the health-aware re-plan, then walk the
+    // operator workflow — un_quarantine → probation (zero traffic) →
+    // N consecutive clean canary laps → readmitted as a live replica.
+    // Identical seeding makes the readmitted macro bit-identical to the
+    // copy a never-faulted twin holds, in both noise modes, and the
+    // re-admission is the one path that lifts Failover back to Nominal.
+    let model = fixed_model(4519);
+    let images = rand_images(6, 64, 43);
+    for analog in [false, true] {
+        let opts = opts_for(analog);
+        let req = MacroPool::macros_required(&model, &opts);
+        let pool = MacroPool::with_capacity_for_workers(&model, opts, req + 1, 2);
+        let twin = MacroPool::with_capacity_for_workers(&model, opts, req + 1, 2);
+        assert_eq!(pool.fault_sites()[0].replicas, 2);
+        let mut plan = FaultPlan::default();
+        for row in 0..=DEFAULT_SPARE_ROWS {
+            plan.push(
+                0,
+                FaultSite::Hidden {
+                    layer: 0,
+                    load: 0,
+                    replica: Some(0),
+                },
+                FaultKind::DeadRow {
+                    row,
+                    always_fire: true,
+                },
+            );
+        }
+        pool.inject_fault_plan(plan);
+        let mut base = 0u64;
+        pool.classify_batch_at(&images, base);
+        twin.classify_batch_at(&images, base);
+        base += images.len() as u64;
+        let mut ctl = ScrubController::new(
+            19,
+            ScrubConfig {
+                max_rebuilds: 0,
+                ..full_pass(2)
+            },
+        );
+        let d = ctl.maintain(&pool);
+        assert_eq!(
+            d.quarantines, 1,
+            "analog={analog}: the dying copy must be retired"
+        );
+        assert_eq!(pool.health_quarantined(), 1);
+        assert_eq!(ctl.degraded_mode(), DegradedMode::Failover);
+        for _ in 0..12 {
+            ctl.maintain(&pool);
+        }
+        assert!(!ctl.migration_in_flight(), "the re-plan must converge");
+        // operator re-admission: exactly one macro is on the ladder
+        assert!(pool.un_quarantine(0, 0), "analog={analog}: re-admission");
+        assert!(!pool.un_quarantine(0, 0), "only one macro is written off");
+        // probation carries zero serving traffic: predictions stay
+        // bit-exact against the twin through every canary lap
+        let mut total = ScrubStats::default();
+        for _ in 0..DEFAULT_PROBATION_LAPS {
+            assert_eq!(
+                pool.classify_batch_at(&images, base),
+                twin.classify_batch_at(&images, base),
+                "analog={analog}: probation must not serve"
+            );
+            base += images.len() as u64;
+            total.add(&ctl.maintain(&pool));
+        }
+        assert_eq!(total.probation_laps, u64::from(DEFAULT_PROBATION_LAPS));
+        assert_eq!(
+            total.readmissions, 1,
+            "analog={analog}: the canary gate must open"
+        );
+        assert_eq!(total.probation_failures, 0);
+        assert_eq!(pool.health_quarantined(), 0);
+        // the only path out of Failover runs through the canary gate
+        assert_eq!(ctl.degraded_mode(), DegradedMode::Nominal);
+        assert_eq!(pool.degraded_mode(), DegradedMode::Nominal);
+        // capacity is genuinely back: the load holds two live replicas
+        assert_eq!(pool.fault_sites()[0].replicas, 2);
+        let h = pool.health_registry().get(&FaultSite::Hidden {
+            layer: 0,
+            load: 0,
+            replica: Some(0),
+        });
+        assert_eq!(h.state, HealthState::Readmitted);
+        assert_eq!(h.readmissions, 1);
+        // and the readmitted replica answers bit-exactly
+        assert_eq!(
+            pool.classify_batch_at(&images, base),
+            twin.classify_batch_at(&images, base),
+            "analog={analog}: readmitted replica diverged from the twin"
+        );
+    }
+}
+
+#[test]
+fn flaky_probation_macro_requarantines_with_escalating_backoff() {
+    // probation is a gate, not a formality: a flaky macro passes N-1
+    // canary laps and fails the last one — it must be re-quarantined
+    // (never silently readmitted) and its next probation must demand
+    // twice the laps.  The whole drill replays bit-identically.
+    let model = fixed_model(4519);
+    let images = rand_images(6, 64, 47);
+    let drill = |analog: bool, seed: u64| {
+        let opts = opts_for(analog);
+        let req = MacroPool::macros_required(&model, &opts);
+        let pool = MacroPool::with_capacity_for_workers(&model, opts, req + 1, 2);
+        let twin = MacroPool::with_capacity_for_workers(&model, opts, req + 1, 2);
+        let mut plan = FaultPlan::default();
+        for row in 0..=DEFAULT_SPARE_ROWS {
+            plan.push(
+                0,
+                FaultSite::Hidden {
+                    layer: 0,
+                    load: 0,
+                    replica: Some(0),
+                },
+                FaultKind::DeadRow {
+                    row,
+                    always_fire: true,
+                },
+            );
+        }
+        pool.inject_fault_plan(plan);
+        let mut base = 0u64;
+        pool.classify_batch_at(&images, base);
+        twin.classify_batch_at(&images, base);
+        base += images.len() as u64;
+        let mut ctl = ScrubController::new(
+            seed,
+            ScrubConfig {
+                max_rebuilds: 0,
+                ..full_pass(2)
+            },
+        );
+        let mut total = ctl.maintain(&pool);
+        assert_eq!(total.quarantines, 1);
+        for _ in 0..12 {
+            total.add(&ctl.maintain(&pool));
+        }
+        assert!(pool.un_quarantine(0, 0));
+        // N-1 clean canary laps: the gate stays closed ...
+        for _ in 0..DEFAULT_PROBATION_LAPS - 1 {
+            total.add(&ctl.maintain(&pool));
+        }
+        assert_eq!(total.probation_laps, u64::from(DEFAULT_PROBATION_LAPS - 1));
+        assert_eq!(total.readmissions, 0, "the gate must still be closed");
+        // ... then the macro flakes: a dead row lands on the probation
+        // side-array just before the final lap (replica indices past the
+        // live copies address probation macros in admission order, and
+        // the live replica is unharmed)
+        let mut flake = FaultPlan::default();
+        flake.push(
+            base,
+            FaultSite::Hidden {
+                layer: 0,
+                load: 0,
+                replica: Some(1),
+            },
+            FaultKind::DeadRow {
+                row: 0,
+                always_fire: false,
+            },
+        );
+        pool.inject_fault_plan(flake);
+        assert_eq!(
+            pool.classify_batch_at(&images, base),
+            twin.classify_batch_at(&images, base),
+            "a probation flake must never touch serving"
+        );
+        base += images.len() as u64;
+        total.add(&ctl.maintain(&pool));
+        assert_eq!(total.probation_failures, 1, "the flake must fail the canary");
+        assert_eq!(total.readmissions, 0, "no silent re-admission");
+        assert_eq!(pool.health_quarantined(), 1, "back on the quarantine ladder");
+        assert_eq!(ctl.degraded_mode(), DegradedMode::Failover);
+        let site = FaultSite::Hidden {
+            layer: 0,
+            load: 0,
+            replica: Some(0),
+        };
+        assert_eq!(pool.health_registry().get(&site).probation_failures, 1);
+        // second attempt (a fresh replacement macro): the lap
+        // requirement has doubled
+        assert!(pool.un_quarantine(0, 0));
+        let h = pool.health_registry().get(&site);
+        assert_eq!(h.state, HealthState::Probation);
+        assert_eq!(
+            h.required_laps,
+            DEFAULT_PROBATION_LAPS << 1,
+            "back-off must escalate"
+        );
+        for _ in 0..h.required_laps {
+            total.add(&ctl.maintain(&pool));
+        }
+        assert_eq!(total.readmissions, 1);
+        assert_eq!(pool.health_quarantined(), 0);
+        assert_eq!(ctl.degraded_mode(), DegradedMode::Nominal);
+        let got = pool.classify_batch_at(&images, base);
+        assert_eq!(
+            got,
+            twin.classify_batch_at(&images, base),
+            "recovered pool diverged from the twin"
+        );
+        (
+            got,
+            total.probation_laps,
+            total.probation_failures,
+            total.readmissions,
+        )
+    };
+    for analog in [false, true] {
+        assert_eq!(
+            drill(analog, 19),
+            drill(analog, 19),
+            "analog={analog}: the back-off drill must replay bit-exactly"
+        );
+    }
+}
+
+#[test]
+fn prop_fleet_budget_isolates_healthy_lanes() {
+    // the shared maintenance budget is metered by deficit round-robin,
+    // so a fault-heavy tenant cannot starve its siblings' scrub cursors.
+    // Two claims over random tenant mixes: (1) sibling lanes' lap and
+    // detection counters are bit-identical whether or not lane 0 is
+    // being bombed (isolation), and (2) every lane's cursor progress —
+    // the bombed one included — tracks its fair credit share to within
+    // one lap plus the carry bank (bounded gap).
+    forall(4, 4531, |g| {
+        let n_tenants = g.usize_in(2, 3);
+        let models: Vec<MappedModel> = (0..n_tenants).map(|_| gen_model(g)).collect();
+        let refs: Vec<&MappedModel> = models.iter().collect();
+        let opts = opts_for(false);
+        let budget = refs
+            .iter()
+            .map(|m| MacroPool::macros_required(m, &opts))
+            .sum::<usize>();
+        let images: Vec<BitVec> = (0..4)
+            .map(|_| BitVec::from_pm1(&g.pm1_vec(models[0].n_in())))
+            .collect();
+        let probe = MultiPool::new(&refs, opts, budget);
+        prop_assert(probe.plan().is_some(), "the budget must fit the floors")?;
+        let lane_rows: Vec<usize> = (0..n_tenants)
+            .map(|t| probe.tenant(t).fault_sites().iter().map(|s| s.rows).sum())
+            .collect();
+        let gaps = lane_rows.iter().max().unwrap() * 2;
+        let cfg = FleetConfig {
+            rows_per_gap: 2 * n_tenants,
+            carry_cap: 16,
+            scrub: ScrubConfig::default(),
+            replan: None,
+        };
+        let run = |faulty: bool| {
+            let pool = MultiPool::new(&refs, opts, budget);
+            if faulty {
+                // bomb lane 0 with dead rows within the spare budget:
+                // every one is detected and remapped, on lane 0's credit
+                let site = pool.tenant(0).fault_sites()[0];
+                let mut plan = FaultPlan::default();
+                for row in 0..DEFAULT_SPARE_ROWS.min(site.rows) {
+                    plan.push(
+                        0,
+                        site.site,
+                        FaultKind::DeadRow {
+                            row,
+                            always_fire: true,
+                        },
+                    );
+                }
+                pool.tenant(0).inject_fault_plan(plan);
+            }
+            pool.classify_batch_at(0, &images, 0);
+            let mut fleet = FleetMaintenance::new(&pool, 31, cfg);
+            for _ in 0..gaps {
+                fleet.maintain(&pool);
+            }
+            (0..n_tenants)
+                .map(|t| (fleet.lane_laps(t), fleet.lane_scrub(t).stats().faults_detected))
+                .collect::<Vec<_>>()
+        };
+        let clean = run(false);
+        let bombed = run(true);
+        prop_assert(bombed[0].1 > 0, "the bombed lane must see its faults")?;
+        for t in 1..n_tenants {
+            prop_assert(
+                clean[t] == bombed[t],
+                format!("lane {t}: a sibling's faults leaked into its maintenance"),
+            )?;
+            prop_assert(bombed[t].1 == 0, format!("lane {t} saw phantom faults"))?;
+        }
+        // bounded gap: a lane's cursor progress (laps x rows, give or
+        // take the lap in flight and the deferred wrap) stays within the
+        // carry bank of its fair credit share
+        let quantum = cfg.rows_per_gap / n_tenants;
+        for t in 0..n_tenants {
+            prop_assert(
+                (bombed[t].0 as usize + 2) * lane_rows[t] + cfg.carry_cap >= gaps * quantum,
+                format!(
+                    "lane {t}: {} laps of {} rows lag the fair share of {} gaps",
+                    bombed[t].0, lane_rows[t], gaps
+                ),
+            )?;
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn multi_tenant_drill_recovers_capacity_through_operator_readmission() {
+    // the fleet drill on the MultiServer facade (the CI chaos lane runs
+    // this under a pinned fault seed): a storm writes off tenant 0's
+    // only copy of a hidden load (cold spill + Failover) while tenant 1
+    // serves untouched under the shared maintenance budget; the operator
+    // re-admits the macro, the canary gate passes, and tenant 0 comes
+    // back Nominal with its capacity restored — bit-exact against a
+    // never-faulted twin.
+    let a = fixed_model(4519);
+    let b = fixed_model(4527);
+    let models = [&a, &b];
+    let opts = opts_for(false);
+    let req: usize = models
+        .iter()
+        .map(|m| MacroPool::macros_required(m, &opts))
+        .sum();
+    let policy = BatchPolicy {
+        max_batch: 8,
+        max_wait: Duration::ZERO,
+    };
+    let mut srv = MultiServer::new(&models, opts, policy, req).with_fleet_maintenance(
+        37,
+        FleetConfig {
+            rows_per_gap: 1 << 16,
+            carry_cap: 1 << 16,
+            scrub: ScrubConfig {
+                max_rebuilds: 0,
+                workers: 1,
+                ..ScrubConfig::default()
+            },
+            replan: None,
+        },
+    );
+    let images = rand_images(6, 64, 53);
+    // kill tenant 0's only copy of hidden load (0, 0) beyond the spares
+    let mut plan = FaultPlan::default();
+    for row in 0..=DEFAULT_SPARE_ROWS {
+        plan.push(
+            0,
+            FaultSite::Hidden {
+                layer: 0,
+                load: 0,
+                replica: Some(0),
+            },
+            FaultKind::DeadRow {
+                row,
+                always_fire: true,
+            },
+        );
+    }
+    srv.pool().tenant(0).inject_fault_plan(plan);
+    // epoch 1: both tenants serve; the storm lands on tenant 0
+    for img in &images {
+        srv.submit(0, img.clone());
+        srv.submit(1, img.clone());
+    }
+    let got = srv.poll(true);
+    assert_eq!(got.len(), 2 * images.len());
+    // idle gaps: detection → spare exhaustion → quarantine of the last
+    // copy (cold spill) → the health-aware re-plan drains
+    for _ in 0..24 {
+        assert!(srv.poll(false).is_empty());
+    }
+    let snap = srv.health_snapshot();
+    assert_eq!(snap.len(), 2);
+    assert_eq!(snap[0].degraded, DegradedMode::Failover);
+    assert_eq!(snap[0].quarantined, 1);
+    assert_eq!(snap[0].readmissions, 0);
+    assert_eq!(snap[1].degraded, DegradedMode::Nominal);
+    assert_eq!(snap[1].quarantined, 0);
+    let m0 = srv.metrics(0);
+    assert_eq!(m0.replica_quarantines, 1);
+    assert!(m0.faults_detected > 0);
+    assert_eq!(
+        srv.metrics(1).faults_detected,
+        0,
+        "tenant 1 must be untouched"
+    );
+    // operator workflow: re-admit, then let the shared budget canary-lap
+    assert!(srv.un_quarantine(0, 0, 0));
+    assert!(!srv.un_quarantine(0, 0, 0), "one macro is on the ladder");
+    for _ in 0..DEFAULT_PROBATION_LAPS + 2 {
+        assert!(srv.poll(false).is_empty());
+    }
+    let h0 = srv.health(0);
+    assert_eq!(h0.quarantined, 0);
+    assert_eq!(h0.readmissions, 1, "the canary gate must readmit");
+    assert_eq!(h0.probation_failures, 0);
+    assert_eq!(
+        h0.degraded,
+        DegradedMode::Nominal,
+        "re-admission must lift Failover"
+    );
+    let site = FaultSite::Hidden {
+        layer: 0,
+        load: 0,
+        replica: Some(0),
+    };
+    assert_eq!(h0.registry.get(&site).state, HealthState::Readmitted);
+    // capacity restored: the load is resident again with one live copy
+    assert_eq!(
+        srv.pool().tenant(0).plan().unwrap().hidden_replicas[0][0],
+        1
+    );
+    // epoch 2: bit-exact against never-faulted twins on the same
+    // noise-stream range for both tenants
+    for img in &images {
+        srv.submit(0, img.clone());
+        srv.submit(1, img.clone());
+    }
+    let mut got = srv.poll(true);
+    assert_eq!(got.len(), 2 * images.len());
+    got.sort_by_key(|r| (r.tenant, r.id));
+    let base = images.len() as u64;
+    for (t, model) in models.iter().enumerate() {
+        let twin =
+            MacroPool::with_capacity(model, opts, MacroPool::macros_required(model, &opts));
+        let want = twin.classify_batch_at(&images, base);
+        let lane: Vec<_> = got.iter().filter(|r| r.tenant == t).collect();
+        assert_eq!(lane.len(), want.len());
+        for (r, (votes, pred)) in lane.iter().zip(&want) {
+            assert_eq!(r.prediction, *pred, "tenant {t} diverged after recovery");
+            assert_eq!(&r.votes, votes);
+        }
     }
 }

@@ -631,7 +631,7 @@ fn prop_live_migration_is_bit_stable_in_both_noise_modes() {
             .collect();
         let rows = pool.hidden_load_rows();
         let points = pool.schedule_points();
-        let cand = match planner::plan_traffic(&rows, &points, Some(&hist), dst, 2) {
+        let cand = match planner::plan_traffic(&rows, &points, Some(&hist), None, dst, 2) {
             Some(p) => p,
             None => return Ok(()),
         };
